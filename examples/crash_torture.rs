@@ -1,0 +1,77 @@
+//! Crash-torture: hammer every persistent queue with random mid-operation
+//! crashes and verify durable linearizability (V1-V5, verify/checker.rs)
+//! across every cycle. This is the §5 failure framework exercised as an
+//! acceptance gate (experiment V1 in DESIGN.md).
+//!
+//! ```sh
+//! cargo run --release --example crash_torture -- [cycles] [seed]
+//! ```
+
+use std::sync::Arc;
+
+use persiq::harness::runner::{drain_all, run_workload, RunConfig};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::queues::{persistent_registry, QueueConfig, QueueCtx};
+use persiq::util::rng::Xoshiro256;
+use persiq::verify::{check, History};
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cycles: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(6);
+    let seed: u64 =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or_else(persiq::util::rng::entropy_seed);
+    println!("crash torture: {cycles} cycles per algorithm, seed={seed}");
+
+    let nthreads = 4;
+    let mut failures = 0;
+    for (name, ctor) in persistent_registry() {
+        let ctx = QueueCtx {
+            pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 23))),
+            nthreads,
+            cfg: QueueConfig::default(),
+        };
+        let q = ctor(&ctx);
+        let qc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
+        let mut rng = Xoshiro256::split(seed, 99);
+        let mut logs = Vec::new();
+        for cycle in 0..cycles {
+            ctx.pool.arm_crash_after(20_000 + rng.next_below(30_000));
+            let r = run_workload(
+                &ctx.pool,
+                &qc,
+                &RunConfig {
+                    nthreads,
+                    total_ops: 60_000,
+                    record: true,
+                    salt: cycle as u64 + 1,
+                    seed: seed ^ ((cycle as u64) << 13),
+                    ..Default::default()
+                },
+            );
+            logs.extend(r.logs);
+            ctx.pool.crash(&mut rng);
+            q.recover(&ctx.pool);
+        }
+        let drained = drain_all(&qc, 0);
+        let h = History::from_logs(logs, drained);
+        let rep = check(&h, 5);
+        println!(
+            "{} {name:<16} ops: enq={} deq={} empty={} drained={} | violations: {}",
+            if rep.ok() { "PASS" } else { "FAIL" },
+            rep.enq_completed,
+            rep.deq_values,
+            rep.deq_empties,
+            rep.drained,
+            rep.violations.len()
+        );
+        for v in &rep.violations {
+            println!("      {v:?}");
+            failures += 1;
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} durable-linearizability violations");
+    println!("\nall persistent queues pass durable-linearizability torture.");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: a persistent FIFO queue in ten lines — enqueue, crash,
+//! recover, and find everything still there.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::queues::perlcrq::PerLcrq;
+use persiq::queues::{ConcurrentQueue, PersistentQueue, QueueConfig};
+use persiq::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    // A simulated-NVM pool (see DESIGN.md §1 for the model).
+    let pool = Arc::new(PmemPool::new(PmemConfig::default()));
+
+    // The paper's PerLCRQ: one pwb+psync per operation, on low-contention
+    // locations.
+    let q = PerLcrq::new(&pool, /* threads */ 2, QueueConfig::default());
+
+    println!("enqueueing 1..=10 ...");
+    for v in 1..=10u64 {
+        q.enqueue(0, v)?;
+    }
+    println!("dequeued {:?} and {:?}", q.dequeue(1)?, q.dequeue(1)?);
+
+    // Full-system crash: volatile state is lost; only persisted (or
+    // nondeterministically evicted) lines survive.
+    println!("simulating a full-system crash ...");
+    let mut rng = Xoshiro256::seed_from(2024);
+    pool.crash(&mut rng);
+
+    // The paper's recovery function (Algorithm 3 lines 58-83 per ring +
+    // Algorithm 5 list walk).
+    q.recover(&pool);
+    println!("recovered; draining:");
+
+    let mut drained = Vec::new();
+    while let Some(v) = q.dequeue(0)? {
+        drained.push(v);
+    }
+    println!("  {drained:?}");
+    assert_eq!(drained, (3..=10).collect::<Vec<u64>>(), "items 3..=10 must survive");
+    println!("all completed operations survived the crash — durably linearizable.");
+    Ok(())
+}

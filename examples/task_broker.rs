@@ -1,0 +1,77 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the persistent task-broker
+//! service on PerLCRQ, run on a real workload with crash/recovery cycles,
+//! reporting throughput and latency through the AOT-compiled JAX/Pallas
+//! metrics pipeline executed via PJRT (build `artifacts/` first with
+//! `make artifacts`; falls back to pure Rust with a warning otherwise).
+//!
+//! ```sh
+//! cargo run --release --example task_broker -- [jobs-per-producer] [crash-cycles]
+//! ```
+
+use std::sync::Arc;
+
+use persiq::coordinator::{run_service, Broker, ServiceConfig};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::runtime::MetricsEngine;
+use persiq::util::report::fnum;
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let jobs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2_000);
+    let crash_cycles: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    let producers = 2;
+    let workers = 2;
+    let pool = Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 24)));
+    let broker = Arc::new(Broker::new(&pool, producers + workers, 1 << 18, 1 << 10));
+
+    println!(
+        "task broker: {producers} producers x {jobs} jobs, {workers} workers, \
+         {crash_cycles} crash/recovery cycles"
+    );
+    let rep = run_service(
+        &pool,
+        &broker,
+        &ServiceConfig {
+            producers,
+            workers,
+            jobs_per_producer: jobs,
+            crash_cycles,
+            crash_steps: 400_000,
+            seed: 7,
+        },
+    )?;
+
+    println!("\n== results ==");
+    println!("submitted : {}", rep.submitted);
+    println!("done      : {}", rep.done);
+    println!("pending   : {}", rep.pending_after);
+    println!("crashes   : {}", rep.crashes);
+    println!("wall time : {:.3}s", rep.wall_secs);
+    println!(
+        "throughput: {:.1}k jobs/s (wall)",
+        rep.done as f64 / rep.wall_secs / 1e3
+    );
+
+    // Analyze job latencies through the L1/L2 pipeline (PJRT).
+    let engine = MetricsEngine::auto();
+    let m = engine.metrics(&rep.latency_samples)?;
+    println!("\n== job latency (simulated ns, backend={}) ==", m.backend);
+    println!(
+        "count={} mean={} p50={} p95={} p99={} max={}",
+        m.count,
+        fnum(m.mean),
+        fnum(m.p50),
+        fnum(m.p95),
+        fnum(m.p99),
+        fnum(m.max)
+    );
+
+    // The e2e invariant: nothing lost, nothing double-completed.
+    anyhow::ensure!(rep.done == rep.submitted, "JOB LOSS: {rep:?}");
+    anyhow::ensure!(rep.pending_after == 0, "unfinished jobs: {rep:?}");
+    println!("\nOK: every durably submitted job completed exactly once across {} crashes.", rep.crashes);
+    Ok(())
+}

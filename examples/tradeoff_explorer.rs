@@ -1,0 +1,76 @@
+//! Interactive explorer for the paper's §5 persistence/recovery tradeoff
+//! (contribution 2): sweep PerIQ's endpoint-persist interval and print
+//! throughput vs recovery cost side by side.
+//!
+//! ```sh
+//! cargo run --release --example tradeoff_explorer -- [ops] [intervals...]
+//! # e.g.: cargo run --release --example tradeoff_explorer -- 60000 1 10 100 0
+//! ```
+
+use std::sync::Arc;
+
+use persiq::harness::failure::{mean_recovery_sim_ns, run_cycles, CycleConfig};
+use persiq::harness::runner::{run_workload, RunConfig};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::queues::{persistent_by_name, QueueConfig, QueueCtx};
+use persiq::util::report::{fnum, Csv};
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let ops: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(60_000);
+    let intervals: Vec<usize> = if args.len() > 1 {
+        args[1..].iter().filter_map(|s| s.parse().ok()).collect()
+    } else {
+        vec![1, 10, 100, 1000, 0]
+    };
+
+    println!("PerIQ persistence/recovery tradeoff (ops={ops}; 0 = never persist endpoints)\n");
+    let mut csv = Csv::new(vec!["interval", "throughput_mops", "recovery_us", "recovery_loads"]);
+    for &k in &intervals {
+        let qcfg =
+            QueueConfig { periq_tail_interval: k, iq_capacity: 1 << 20, ..Default::default() };
+        // Throughput leg.
+        let ctx = QueueCtx {
+            pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 23))),
+            nthreads: 8,
+            cfg: qcfg.clone(),
+        };
+        let q = persistent_by_name("periq").unwrap()(&ctx);
+        let qc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
+        let r = run_workload(
+            &ctx.pool,
+            &qc,
+            &RunConfig { nthreads: 8, total_ops: ops, ..Default::default() },
+        );
+        // Recovery leg (fresh pool; 3 cycles).
+        let ctx2 = QueueCtx {
+            pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 23))),
+            nthreads: 4,
+            cfg: qcfg,
+        };
+        let q2 = persistent_by_name("periq").unwrap()(&ctx2);
+        let res = run_cycles(
+            &ctx2.pool,
+            &q2,
+            &CycleConfig {
+                cycles: 3,
+                steps: 150_000,
+                run: RunConfig { nthreads: 4, total_ops: u64::MAX / 2, ..Default::default() },
+                seed: 3,
+            },
+        );
+        let loads: f64 =
+            res.iter().map(|c| c.recovery_loads as f64).sum::<f64>() / res.len() as f64;
+        csv.row(vec![
+            if k == 0 { "never".to_string() } else { k.to_string() },
+            fnum(r.sim_mops),
+            fnum(mean_recovery_sim_ns(&res) / 1e3),
+            fnum(loads),
+        ]);
+    }
+    print!("{}", csv.to_table());
+    println!("\nreading: small interval = cheap recovery but slower ops; 'never' = fastest ops, recovery scans the array (Figs 4-6).");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+"""AOT lowering: JAX (L2+L1) -> HLO *text* -> artifacts/ for the Rust
+runtime.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits StableHLO/protos with 64-bit instruction ids which
+the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts/metrics.hlo.txt
+
+Produces, next to ``--out``:
+  metrics.hlo.txt  — metrics(samples[64,128]) -> (stats[8], hist[64])
+  fit.hlo.txt      — fit_scaling(ns[16], tput[16]) -> [a, b, plateau]
+  manifest.txt     — shapes/targets, consumed by rust/src/runtime.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/metrics.hlo.txt")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    metrics_path = args.out
+    fit_path = os.path.join(out_dir, "fit.hlo.txt")
+    manifest_path = os.path.join(out_dir, "manifest.txt")
+
+    text = to_hlo_text(model.metrics, model.metrics_spec())
+    with open(metrics_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {metrics_path}")
+
+    text = to_hlo_text(model.fit_scaling, model.fit_spec())
+    with open(fit_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {fit_path}")
+
+    with open(manifest_path, "w") as f:
+        f.write(
+            "# persiq AOT artifact manifest (format v1)\n"
+            f"metrics.hlo.txt metrics in=f32[{model.ROWS},{model.COLS}] "
+            "out=(f32[8],f32[64])\n"
+            "fit.hlo.txt fit_scaling in=(f32[16],f32[16]) out=f32[3]\n"
+        )
+    print(f"wrote manifest to {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the L1 kernel — the CORE correctness signal.
+
+``histogram_moments_ref`` must match ``stats.histogram_moments`` in
+binning/clipping/padding semantics so pytest can assert ``allclose`` over
+randomized shapes and contents.
+"""
+
+import jax.numpy as jnp
+
+
+def histogram_moments_ref(x, nbins: int = 64):
+    """Reference histogram + moments (see stats.histogram_moments)."""
+    valid = x >= 0.0
+    xv = jnp.where(valid, x, 0.0)
+    count = jnp.sum(valid.astype(jnp.float32))
+    s = jnp.sum(xv)
+    sq = jnp.sum(xv * xv)
+    mn = jnp.min(jnp.where(valid, x, jnp.inf))
+    mx = jnp.max(jnp.where(valid, x, -jnp.inf))
+    bins = jnp.clip((x * nbins).astype(jnp.int32), 0, nbins - 1)
+    # Scatter-add via one-hot (matches the kernel's semantics exactly).
+    onehot = (bins[..., None] == jnp.arange(nbins, dtype=jnp.int32)).astype(jnp.float32)
+    hist = jnp.sum(jnp.where(valid[..., None], onehot, 0.0), axis=tuple(range(x.ndim)))
+    moments = jnp.stack(
+        [count, s, sq, mn, mx, jnp.float32(0), jnp.float32(0), jnp.float32(0)]
+    )
+    return hist, moments

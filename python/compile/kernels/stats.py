@@ -1,0 +1,106 @@
+"""L1 — Pallas kernel: tiled histogram + moments over latency samples.
+
+The evaluation pipeline's compute hot-spot (DESIGN.md §2): every figure of
+the paper's §5 is produced by aggregating per-operation latency samples into
+histograms, moments and quantiles. This kernel performs the single data
+pass: it streams sample tiles and accumulates
+
+* a ``NBINS``-bucket histogram of samples normalized to ``[0, 1)``,
+* ``count`` (valid samples), ``sum``, ``sum of squares``, ``min``, ``max``.
+
+Padding convention: invalid/padding entries are negative (callers use
+``-1.0``); they contribute to nothing.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel is a
+bandwidth-bound reduction — BlockSpec tiles of ``(TILE_ROWS, COLS) =
+(8, 128)`` f32 match the VPU lane layout, stream HBM→VMEM once, and keep
+the (NBINS + 8)-word accumulator resident in VMEM across grid steps
+(revisited output block). The MXU is unused (no matmuls); the roofline is
+the VPU compare/add rate. ``interpret=True`` is required for CPU-PJRT
+execution (real TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed kernel geometry (AOT artifacts export these shapes).
+NBINS = 64
+TILE_ROWS = 8
+COLS = 128
+
+
+def _kernel(x_ref, hist_ref, mom_ref, *, nbins: int):
+    """One grid step: accumulate a (TILE_ROWS, COLS) tile."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        mom_ref[...] = jnp.zeros_like(mom_ref)
+        # min identity = +inf, max identity = -inf (slots 3, 4).
+        mom_ref[3] = jnp.inf
+        mom_ref[4] = -jnp.inf
+
+    x = x_ref[...]
+    valid = x >= 0.0
+    xv = jnp.where(valid, x, 0.0)
+
+    # Moments.
+    mom_ref[0] += jnp.sum(valid.astype(jnp.float32))
+    mom_ref[1] += jnp.sum(xv)
+    mom_ref[2] += jnp.sum(xv * xv)
+    mom_ref[3] = jnp.minimum(mom_ref[3], jnp.min(jnp.where(valid, x, jnp.inf)))
+    mom_ref[4] = jnp.maximum(mom_ref[4], jnp.max(jnp.where(valid, x, -jnp.inf)))
+
+    # Histogram over [0, 1): bin = floor(x * nbins), clipped into range.
+    bins = jnp.clip((x * nbins).astype(jnp.int32), 0, nbins - 1)
+    # One-hot accumulate: (T, C, 1) == (nbins,) -> sum over tile dims.
+    onehot = (bins[..., None] == jnp.arange(nbins, dtype=jnp.int32)[None, None, :])
+    contrib = jnp.sum(
+        jnp.where(valid[..., None], onehot.astype(jnp.float32), 0.0), axis=(0, 1)
+    )
+    hist_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("nbins",))
+def histogram_moments(x: jax.Array, nbins: int = NBINS):
+    """Tiled histogram + moments of ``x`` (shape ``(rows, COLS)``, rows a
+    multiple of ``TILE_ROWS``; values in ``[0, 1)`` or negative padding).
+
+    Returns ``(hist[nbins] f32, moments[8] f32)`` with moments
+    ``[count, sum, sumsq, min, max, 0, 0, 0]``.
+    """
+    rows, cols = x.shape
+    if cols != COLS:
+        raise ValueError(f"cols must be {COLS}, got {cols}")
+    if rows % TILE_ROWS != 0:
+        raise ValueError(f"rows must be a multiple of {TILE_ROWS}, got {rows}")
+    grid = rows // TILE_ROWS
+    return pl.pallas_call(
+        functools.partial(_kernel, nbins=nbins),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((TILE_ROWS, COLS), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((nbins,), lambda i: (0,)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbins,), jnp.float32),
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(x)
+
+
+def vmem_footprint_bytes(nbins: int = NBINS) -> int:
+    """Estimated VMEM residency per grid step (DESIGN/EXPERIMENTS §Perf):
+    one input tile + both accumulators, f32."""
+    tile = TILE_ROWS * COLS * 4
+    accum = (nbins + 8) * 4
+    # One-hot intermediate is fused on TPU; worst-case materialization:
+    onehot = TILE_ROWS * COLS * nbins * 4
+    return tile + accum + onehot

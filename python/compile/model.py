@@ -1,0 +1,98 @@
+"""L2 — the JAX metrics pipeline (the paper's §5 evaluation analytics).
+
+``metrics(samples)`` turns a fixed-shape matrix of per-operation latency
+samples (simulated ns; negative = padding) into the statistics every figure
+reports:
+
+    stats = [count, mean, std, min, max, p50, p95, p99]
+    hist  = 64-bucket histogram over [min, max)
+
+The single data pass (histogram + moments) is the L1 Pallas kernel
+(`kernels.stats`); quantiles come from the histogram CDF; everything is one
+jitted function so AOT lowering produces a single fused HLO module that the
+Rust runtime executes via PJRT (python never runs at request/analysis time).
+
+``fit_scaling(ns, tputs)`` is the second, tiny pipeline: a closed-form
+least-squares fit of the saturating throughput model  t(n) = n / (a + b·n)
+(linearized as n/t = a + b·n), used to summarize scaling curves; exported in
+the same artifact bundle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import stats as kstats
+
+# AOT export geometry: 64x128 = 8192 samples per call.
+ROWS = 64
+COLS = kstats.COLS
+NBINS = kstats.NBINS
+
+
+def metrics(samples: jax.Array):
+    """Aggregate a (ROWS, COLS) f32 latency matrix; see module docstring."""
+    valid = samples >= 0.0
+    big = jnp.float32(3.4e38)
+    mn = jnp.min(jnp.where(valid, samples, big))
+    mx = jnp.max(jnp.where(valid, samples, -big))
+    # Guard degenerate ranges (all-equal or empty): width >= tiny.
+    width = jnp.maximum(mx - mn, jnp.float32(1e-6))
+    # Normalize to [0, 1); keep padding negative.
+    norm = jnp.where(valid, (samples - mn) / (width * (1.0 + 1e-6)), -1.0)
+
+    hist, mom = kstats.histogram_moments(norm, NBINS)
+
+    count = mom[0]
+    safe_count = jnp.maximum(count, 1.0)
+    mean_n = mom[1] / safe_count
+    var_n = jnp.maximum(mom[2] / safe_count - mean_n * mean_n, 0.0)
+    mean = mn + mean_n * width
+    std = jnp.sqrt(var_n) * width
+
+    # Quantiles from the histogram CDF (bucket upper edges).
+    cdf = jnp.cumsum(hist)
+    edges = mn + (jnp.arange(NBINS, dtype=jnp.float32) + 1.0) / NBINS * width
+
+    def quantile(p):
+        target = p * count
+        idx = jnp.searchsorted(cdf, target)
+        return edges[jnp.clip(idx, 0, NBINS - 1)]
+
+    p50, p95, p99 = quantile(0.50), quantile(0.95), quantile(0.99)
+    out_stats = jnp.stack([count, mean, std, mn, mx, p50, p95, p99])
+    return out_stats, hist
+
+
+def fit_scaling(ns: jax.Array, tputs: jax.Array):
+    """Fit t(n) = n / (a + b·n) by least squares on n/t = a + b·n.
+
+    Inputs are fixed-length (16) f32 vectors; entries with tput <= 0 are
+    masked out. Returns [a, b, plateau] where plateau = 1/b is the
+    saturation throughput.
+    """
+    valid = tputs > 0.0
+    w = valid.astype(jnp.float32)
+    y = jnp.where(valid, ns / jnp.maximum(tputs, 1e-9), 0.0)
+    n = jnp.maximum(jnp.sum(w), 1.0)
+    sx = jnp.sum(w * ns)
+    sy = jnp.sum(w * y)
+    sxx = jnp.sum(w * ns * ns)
+    sxy = jnp.sum(w * ns * y)
+    denom = n * sxx - sx * sx
+    b = jnp.where(jnp.abs(denom) > 1e-9, (n * sxy - sx * sy) / denom, 0.0)
+    a = (sy - b * sx) / n
+    plateau = jnp.where(jnp.abs(b) > 1e-12, 1.0 / b, 0.0)
+    return jnp.stack([a, b, plateau])
+
+
+def metrics_spec():
+    """Example-arg spec for AOT lowering of ``metrics``."""
+    return (jax.ShapeDtypeStruct((ROWS, COLS), jnp.float32),)
+
+
+def fit_spec():
+    """Example-arg spec for AOT lowering of ``fit_scaling``."""
+    return (
+        jax.ShapeDtypeStruct((16,), jnp.float32),
+        jax.ShapeDtypeStruct((16,), jnp.float32),
+    )

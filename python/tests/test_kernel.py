@@ -1,0 +1,109 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps tile counts, value distributions, padding patterns and
+bin counts; every case asserts allclose between the Pallas kernel
+(interpret=True) and the reference.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import histogram_moments_ref
+from compile.kernels.stats import (
+    COLS,
+    NBINS,
+    TILE_ROWS,
+    histogram_moments,
+    vmem_footprint_bytes,
+)
+
+
+def run_both(x, nbins=NBINS):
+    h1, m1 = histogram_moments(jnp.asarray(x), nbins)
+    h2, m2 = histogram_moments_ref(jnp.asarray(x), nbins)
+    return np.asarray(h1), np.asarray(m1), np.asarray(h2), np.asarray(m2)
+
+
+def assert_match(x, nbins=NBINS):
+    h1, m1, h2, m2 = run_both(x, nbins)
+    np.testing.assert_allclose(h1, h2, rtol=1e-6, atol=0)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-6)
+
+
+def test_basic_uniform():
+    x = np.random.default_rng(0).random((TILE_ROWS, COLS), dtype=np.float32)
+    assert_match(x)
+
+
+def test_multi_tile():
+    x = np.random.default_rng(1).random((8 * TILE_ROWS, COLS), dtype=np.float32)
+    assert_match(x)
+
+
+def test_all_padding():
+    x = np.full((TILE_ROWS, COLS), -1.0, dtype=np.float32)
+    h1, m1, _, _ = run_both(x)
+    assert m1[0] == 0.0
+    assert h1.sum() == 0.0
+
+
+def test_single_value_spikes_one_bin():
+    x = np.full((TILE_ROWS, COLS), 0.5, dtype=np.float32)
+    h1, m1, h2, m2 = run_both(x)
+    assert h1.sum() == TILE_ROWS * COLS
+    assert (h1 > 0).sum() == 1
+    np.testing.assert_allclose(h1, h2)
+
+
+def test_values_at_edges_clip():
+    # 0.0 lands in bin 0; >= 1.0 clips into the last bin.
+    x = np.zeros((TILE_ROWS, COLS), dtype=np.float32)
+    x[0, 0] = 1.0
+    x[0, 1] = 0.999999
+    h1, m1, h2, m2 = run_both(x)
+    np.testing.assert_allclose(h1, h2)
+    assert h1[0] == TILE_ROWS * COLS - 2
+    assert h1[NBINS - 1] == 2
+
+
+def test_histogram_total_equals_count():
+    rng = np.random.default_rng(3)
+    x = rng.random((2 * TILE_ROWS, COLS), dtype=np.float32)
+    x[rng.random(x.shape) < 0.3] = -1.0
+    h1, m1, _, _ = run_both(x)
+    assert h1.sum() == m1[0]
+
+
+def test_shape_validation():
+    with pytest.raises(ValueError):
+        histogram_moments(jnp.zeros((TILE_ROWS, COLS + 1), jnp.float32))
+    with pytest.raises(ValueError):
+        histogram_moments(jnp.zeros((TILE_ROWS + 1, COLS), jnp.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+    pad_frac=st.floats(min_value=0.0, max_value=0.9),
+    scale=st.sampled_from([1.0, 0.5, 0.01]),
+)
+def test_hypothesis_sweep(tiles, seed, pad_frac, scale):
+    rng = np.random.default_rng(seed)
+    x = (rng.random((tiles * TILE_ROWS, COLS)) * scale).astype(np.float32)
+    x[rng.random(x.shape) < pad_frac] = -1.0
+    assert_match(x)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nbins=st.sampled_from([8, 16, 64, 128]), seed=st.integers(0, 2**31))
+def test_hypothesis_bin_counts(nbins, seed):
+    x = np.random.default_rng(seed).random((TILE_ROWS, COLS), dtype=np.float32)
+    assert_match(x, nbins)
+
+
+def test_vmem_footprint_estimate_reasonable():
+    # Perf documentation helper: must fit comfortably in 16 MiB VMEM.
+    assert vmem_footprint_bytes() < 16 * 1024 * 1024

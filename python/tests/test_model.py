@@ -1,0 +1,94 @@
+"""L2 metrics pipeline vs numpy oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.model import COLS, ROWS, fit_scaling, metrics
+
+
+def pad_to_shape(samples: np.ndarray) -> np.ndarray:
+    out = np.full((ROWS, COLS), -1.0, dtype=np.float32)
+    flat = samples.astype(np.float32).ravel()[: ROWS * COLS]
+    out.ravel()[: flat.size] = flat
+    return out
+
+
+def np_stats(samples: np.ndarray):
+    return dict(
+        count=samples.size,
+        mean=samples.mean(),
+        std=samples.std(),
+        mn=samples.min(),
+        mx=samples.max(),
+        p50=np.percentile(samples, 50),
+        p95=np.percentile(samples, 95),
+        p99=np.percentile(samples, 99),
+    )
+
+
+def test_metrics_against_numpy():
+    rng = np.random.default_rng(0)
+    samples = (rng.random(5000) * 800 + 100).astype(np.float32)  # 100..900ns
+    s, hist = metrics(jnp.asarray(pad_to_shape(samples)))
+    s = np.asarray(s)
+    ref = np_stats(samples)
+    assert s[0] == ref["count"]
+    np.testing.assert_allclose(s[1], ref["mean"], rtol=1e-3)
+    np.testing.assert_allclose(s[2], ref["std"], rtol=1e-2)
+    np.testing.assert_allclose(s[3], ref["mn"], rtol=1e-5)
+    np.testing.assert_allclose(s[4], ref["mx"], rtol=1e-5)
+    # Histogram quantiles: within one bucket width of exact.
+    width = (ref["mx"] - ref["mn"]) / 64
+    for i, p in [(5, "p50"), (6, "p95"), (7, "p99")]:
+        assert abs(s[i] - ref[p]) <= width * 1.5, (p, s[i], ref[p])
+    assert np.asarray(hist).sum() == ref["count"]
+
+
+def test_metrics_degenerate_constant():
+    samples = np.full(100, 42.0, dtype=np.float32)
+    s, hist = metrics(jnp.asarray(pad_to_shape(samples)))
+    s = np.asarray(s)
+    assert s[0] == 100
+    np.testing.assert_allclose(s[1], 42.0, rtol=1e-5)
+    np.testing.assert_allclose(s[2], 0.0, atol=1e-3)
+
+
+def test_metrics_empty():
+    s, hist = metrics(jnp.full((ROWS, COLS), -1.0, dtype=jnp.float32))
+    assert np.asarray(s)[0] == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=10, max_value=ROWS * COLS),
+    seed=st.integers(0, 2**31),
+    lo=st.floats(min_value=0.0, max_value=1e4),
+    span=st.floats(min_value=1.0, max_value=1e6),
+)
+def test_hypothesis_mean_std(n, seed, lo, span):
+    rng = np.random.default_rng(seed)
+    samples = (rng.random(n) * span + lo).astype(np.float32)
+    s, _ = metrics(jnp.asarray(pad_to_shape(samples)))
+    s = np.asarray(s)
+    assert s[0] == n
+    np.testing.assert_allclose(s[1], samples.mean(), rtol=5e-3)
+    assert s[3] <= s[5] <= s[7] <= s[4] + 1e-3  # min <= p50 <= p99 <= max
+
+
+def test_fit_scaling_recovers_model():
+    # Ground truth t(n) = n / (a + b n) with a=2, b=0.05 -> plateau 20.
+    ns = np.arange(1, 17, dtype=np.float32)
+    t = ns / (2.0 + 0.05 * ns)
+    out = np.asarray(fit_scaling(jnp.asarray(ns), jnp.asarray(t)))
+    np.testing.assert_allclose(out[0], 2.0, rtol=1e-3)
+    np.testing.assert_allclose(out[1], 0.05, rtol=1e-3)
+    np.testing.assert_allclose(out[2], 20.0, rtol=1e-3)
+
+
+def test_fit_scaling_masks_invalid():
+    ns = np.arange(1, 17, dtype=np.float32)
+    t = ns / (1.0 + 0.1 * ns)
+    t[10:] = 0.0  # masked
+    out = np.asarray(fit_scaling(jnp.asarray(ns), jnp.asarray(t)))
+    np.testing.assert_allclose(out[1], 0.1, rtol=1e-3)

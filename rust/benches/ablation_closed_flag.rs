@@ -1,0 +1,33 @@
+//! Ablation A3 — the §4.2 closedFlag optimization: with a small ring
+//! (frequent closes), disabling the flag forces every CLOSED observer to
+//! re-persist Tail. Reports throughput and pwbs/op.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use persiq::harness::bench::{bench_ops, Suite};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::QueueConfig;
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new(
+        "ablation_closed_flag",
+        "A3: closedFlag on/off under frequent ring closes (R = 64)",
+    );
+    let ops = bench_ops();
+    for (series, disabled) in [("closedflag-on", false), ("closedflag-off", true)] {
+        for &n in &[8usize, 32] {
+            let qcfg = QueueConfig {
+                ring_size: 64,
+                starvation_limit: 64,
+                disable_closed_flag: disabled,
+                ..Default::default()
+            };
+            suite.measure_extra(series, n as f64, || {
+                common::tput_point_extra("perlcrq", n, ops, qcfg.clone(), 49)
+            });
+        }
+    }
+    suite.finish()
+}

@@ -1,0 +1,47 @@
+//! Ablation A4 — the Alg. 6 tradeoff surface: PerIQ endpoint-persist
+//! interval k ∈ {1, 10, 100, 1000, ∞} → throughput AND recovery time,
+//! the full persistence-cost/recovery-cost tradeoff the paper highlights
+//! as contribution (2).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use persiq::harness::bench::{bench_ops, Suite};
+use persiq::harness::failure::{mean_recovery_sim_ns, run_cycles, CycleConfig};
+use persiq::harness::runner::RunConfig;
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::{persistent_by_name, QueueConfig};
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new(
+        "ablation_persist_interval",
+        "A4: PerIQ persist interval k -> throughput + recovery time",
+    );
+    let ops = bench_ops();
+    for &k in &[1usize, 10, 100, 1000, 0] {
+        let x = if k == 0 { 1e6 } else { k as f64 }; // 0 = never ~ "infinity"
+        let qcfg =
+            QueueConfig { periq_tail_interval: k, iq_capacity: 1 << 20, ..Default::default() };
+        suite.measure_extra("periq", x, || {
+            let tput = common::tput_point("periq", 16, ops, qcfg.clone(), 50);
+            // Recovery cost at this interval (3 cycles).
+            let c = common::ctx_with(4, qcfg.clone());
+            let q = persistent_by_name("periq").unwrap()(&c);
+            let res = run_cycles(
+                &c.pool,
+                &q,
+                &CycleConfig {
+                    cycles: 3,
+                    steps: 200_000,
+                    run: RunConfig { nthreads: 4, total_ops: u64::MAX / 2, ..Default::default() },
+                    seed: 51,
+                },
+            );
+            (tput, vec![("recovery_us".to_string(), mean_recovery_sim_ns(&res) / 1e3)])
+        });
+    }
+    suite.finish()?;
+    println!("\n(the tradeoff: small k -> lower throughput, flat recovery; k=inf -> max throughput, recovery grows)");
+    Ok(())
+}

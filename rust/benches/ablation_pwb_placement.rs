@@ -1,0 +1,28 @@
+//! Ablation A2 — the persistence principles of [1] quantified: PerLCRQ's
+//! single low-contention pair vs durable-MSQ's eager persist-everything on
+//! hot endpoints vs PBQueue's batch-amortized persists. Reports both
+//! throughput and pwb/psync counts per operation.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use persiq::harness::bench::{bench_ops, Suite};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::QueueConfig;
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new(
+        "ablation_pwb_placement",
+        "A2: persistence-instruction placement (counts + cost) at 16/48 threads",
+    );
+    let ops = bench_ops();
+    for algo in ["perlcrq", "perlcrq-phead", "durable-msq", "pbqueue"] {
+        for &n in &[16usize, 48] {
+            suite.measure_extra(algo, n as f64, || {
+                common::tput_point_extra(algo, n, ops, QueueConfig::default(), 48)
+            });
+        }
+    }
+    suite.finish()
+}

@@ -1,0 +1,22 @@
+//! Ablation A1 — ring size R sweep for PerLCRQ: larger rings amortize
+//! node creation; too-small rings close constantly.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use persiq::harness::bench::{bench_ops, Suite};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::QueueConfig;
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new("ablation_ring_size", "A1: PerLCRQ throughput vs ring size R");
+    let ops = bench_ops();
+    for &r in &[64usize, 256, 1024, 4096] {
+        let qcfg = QueueConfig { ring_size: r, ..Default::default() };
+        suite.measure("perlcrq", r as f64, || {
+            common::tput_point("perlcrq", 16, ops, qcfg.clone(), 47)
+        });
+    }
+    suite.finish()
+}

@@ -1,0 +1,54 @@
+//! Shared bench scaffolding (each bench target includes this by `#[path]`).
+
+use std::sync::Arc;
+
+use persiq::config::Config;
+use persiq::harness::runner::{run_workload, RunConfig};
+use persiq::harness::Workload;
+use persiq::pmem::PmemPool;
+use persiq::queues::{by_name, QueueConfig, QueueCtx};
+
+/// Build a queue context with the given thread count + queue config.
+pub fn ctx_with(nthreads: usize, qcfg: QueueConfig) -> QueueCtx {
+    let mut cfg = Config::load_default();
+    cfg.queue = qcfg;
+    QueueCtx { pool: Arc::new(PmemPool::new(cfg.pmem.clone())), nthreads, cfg: cfg.queue }
+}
+
+/// One throughput point: run `algo` and return simulated Mops/s.
+pub fn tput_point(algo: &str, nthreads: usize, ops: u64, qcfg: QueueConfig, seed: u64) -> f64 {
+    let c = ctx_with(nthreads, qcfg);
+    let q = by_name(algo).unwrap_or_else(|| panic!("unknown algo {algo}"))(&c);
+    let r = run_workload(
+        &c.pool,
+        &q,
+        &RunConfig { nthreads, total_ops: ops, workload: Workload::Pairs, seed, ..Default::default() },
+    );
+    r.sim_mops
+}
+
+/// Throughput + persistence-instruction counts per op.
+pub fn tput_point_extra(
+    algo: &str,
+    nthreads: usize,
+    ops: u64,
+    qcfg: QueueConfig,
+    seed: u64,
+) -> (f64, Vec<(String, f64)>) {
+    let c = ctx_with(nthreads, qcfg);
+    let q = by_name(algo).unwrap_or_else(|| panic!("unknown algo {algo}"))(&c);
+    let r = run_workload(
+        &c.pool,
+        &q,
+        &RunConfig { nthreads, total_ops: ops, workload: Workload::Pairs, seed, ..Default::default() },
+    );
+    let t = c.pool.stats.total();
+    let per = |x: u64| x as f64 / r.ops_done.max(1) as f64;
+    (
+        r.sim_mops,
+        vec![
+            ("pwbs/op".to_string(), per(t.pwbs)),
+            ("psyncs/op".to_string(), per(t.psyncs)),
+        ],
+    )
+}

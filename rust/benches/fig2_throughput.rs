@@ -1,0 +1,58 @@
+//! Figure 2 — "Performance comparison of PerLCRQ with PBQueue and
+//! PWFQueue": simulated throughput vs thread count for PerLCRQ, its
+//! best competitors, and PerLCRQ-PHead (the persist-shared-Head variant
+//! whose collapse motivates §4.2 local persistence).
+//!
+//! Expected shape (paper): PerLCRQ ≥ 2× PBQueue everywhere; PerLCRQ-PHead
+//! falls below PBQueue/PWFQueue as threads grow.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use persiq::harness::bench::{bench_ops, thread_sweep, Suite};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::QueueConfig;
+use persiq::runtime::MetricsEngine;
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new(
+        "fig2_throughput",
+        "Fig 2: throughput vs threads (PerLCRQ vs PBQueue vs PWFQueue vs PerLCRQ-PHead)",
+    );
+    let ops = bench_ops();
+    for algo in ["perlcrq", "pbqueue", "pwfqueue", "perlcrq-phead"] {
+        for &n in &thread_sweep() {
+            suite.measure(algo, n as f64, || {
+                common::tput_point(algo, n, ops, QueueConfig::default(), 42)
+            });
+        }
+    }
+    suite.finish()?;
+
+    // Scaling-law fits through the AOT metrics pipeline (t(n)=n/(a+b·n)).
+    let engine = MetricsEngine::auto();
+    println!("\nscaling fits (backend={}):", engine.backend());
+    for algo in ["perlcrq", "pbqueue", "pwfqueue", "perlcrq-phead"] {
+        let pts: Vec<(f64, f64)> = thread_sweep()
+            .iter()
+            .filter_map(|&n| suite.mean_at(algo, n as f64).map(|y| (n as f64, y)))
+            .collect();
+        let (ns, ys): (Vec<f64>, Vec<f64>) = pts.into_iter().unzip();
+        let fit = engine.fit(&ns, &ys)?;
+        println!("  {algo:<16} plateau={:.2} Mops (a={:.3}, b={:.4})", fit.plateau, fit.a, fit.b);
+    }
+
+    // Shape assertions (the paper's headline claims).
+    let hi = *thread_sweep().last().unwrap() as f64;
+    let perlcrq = suite.mean_at("perlcrq", hi).unwrap();
+    let pbq = suite.mean_at("pbqueue", hi).unwrap();
+    let phead = suite.mean_at("perlcrq-phead", hi).unwrap();
+    println!("\nclaims @ {hi} threads:");
+    println!("  PerLCRQ/PBQueue = {:.2}x (paper: >= 2x)", perlcrq / pbq);
+    println!(
+        "  PerLCRQ-PHead ({phead:.2}) below PBQueue ({pbq:.2}): {}",
+        phead < pbq
+    );
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Figure 3 — "Cost of persisting Head and Tail in PerLCRQ": PerLCRQ vs
+//! PerLCRQ(no head) vs PerLCRQ(no tail), plus PerLCRQ-PHead for reference.
+//!
+//! Expected shape (paper): persisting Tail is nearly free (closedFlag
+//! works, closes are rare); the local-copy Head persist costs a little
+//! (PerLCRQ vs no-head gap); the shared-Head persist costs a lot.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use persiq::harness::bench::{bench_ops, thread_sweep, Suite};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::QueueConfig;
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new(
+        "fig3_head_tail",
+        "Fig 3: cost of persisting Head/Tail (PerLCRQ vs no-head vs no-tail vs PHead)",
+    );
+    let ops = bench_ops();
+    for algo in ["perlcrq", "perlcrq-nohead", "perlcrq-notail", "perlcrq-phead"] {
+        for &n in &thread_sweep() {
+            suite.measure_extra(algo, n as f64, || {
+                common::tput_point_extra(algo, n, ops, QueueConfig::default(), 43)
+            });
+        }
+    }
+    suite.finish()?;
+
+    let hi = *thread_sweep().last().unwrap() as f64;
+    let base = suite.mean_at("perlcrq", hi).unwrap();
+    let nohead = suite.mean_at("perlcrq-nohead", hi).unwrap();
+    let notail = suite.mean_at("perlcrq-notail", hi).unwrap();
+    println!("\nclaims @ {hi} threads:");
+    println!("  no-tail/base = {:.3} (paper: ~1.0 — Tail persist negligible)", notail / base);
+    println!("  no-head/base = {:.3} (paper: > 1 — local Head persist has a cost)", nohead / base);
+    Ok(())
+}

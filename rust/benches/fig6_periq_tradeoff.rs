@@ -1,0 +1,40 @@
+//! Figure 6 — "Throughput of PerIQ and PerIQ (no Tail)": the other half of
+//! the Figures 4-6 tradeoff — persisting the endpoints every operation
+//! costs normal-execution throughput.
+//!
+//! Expected shape (paper): pure PerIQ (no endpoint persists) clearly above
+//! the per-op persist variant at every thread count.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use persiq::harness::bench::{bench_ops, thread_sweep, Suite};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::QueueConfig;
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new(
+        "fig6_periq_tradeoff",
+        "Fig 6: PerIQ throughput — persist endpoints per op vs never",
+    );
+    let ops = bench_ops();
+    for (series, interval) in [("periq", 0usize), ("periq-ptail", 1usize)] {
+        for &n in &thread_sweep() {
+            let qcfg = QueueConfig {
+                periq_tail_interval: interval,
+                iq_capacity: (ops as usize * 2).next_power_of_two(),
+                ..Default::default()
+            };
+            suite.measure(series, n as f64, || {
+                common::tput_point("periq", n, ops, qcfg.clone(), 46)
+            });
+        }
+    }
+    suite.finish()?;
+    let hi = *thread_sweep().last().unwrap() as f64;
+    let pure = suite.mean_at("periq", hi).unwrap();
+    let ptail = suite.mean_at("periq-ptail", hi).unwrap();
+    println!("\nclaims @ {hi} threads: pure/persist-tail = {:.2}x (paper: > 1)", pure / ptail);
+    Ok(())
+}

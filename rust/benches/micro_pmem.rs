@@ -1,0 +1,52 @@
+//! M1 — pmem primitive cost microbenchmark: the substrate's simulated
+//! costs for each primitive on private vs global lines (calibration table
+//! quoted in EXPERIMENTS.md).
+
+use std::sync::Arc;
+
+use persiq::harness::bench::Suite;
+use persiq::pmem::{Hotness, PmemConfig, PmemPool};
+
+fn main() -> anyhow::Result<()> {
+    let mut suite = Suite::new("micro_pmem", "M1: pmem primitive simulated costs (ns/op)");
+    let pool = Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 16)));
+    pool.set_active_threads(16);
+    let cold = pool.alloc_lines(1);
+    let hot = pool.alloc_lines(1);
+    pool.set_hot(cold, 8, Hotness::Private);
+    pool.set_hot(hot, 8, Hotness::Global);
+    let iters = 50_000u64;
+    let mut point = |name: &str, f: &dyn Fn()| {
+        pool.reset_meter();
+        let t0 = pool.vtime(0);
+        for _ in 0..iters {
+            f();
+        }
+        let per = (pool.vtime(0) - t0) as f64 / iters as f64;
+        suite.measure(name, 1.0, || per);
+    };
+    point("load_private", &|| {
+        let _ = pool.load(0, cold);
+    });
+    point("load_global", &|| {
+        let _ = pool.load(0, hot);
+    });
+    point("fai_private", &|| {
+        let _ = pool.fai(0, cold);
+    });
+    point("fai_global", &|| {
+        let _ = pool.fai(0, hot);
+    });
+    point("cas2_private", &|| {
+        let _ = pool.cas2(0, cold, (0, 0), (0, 0));
+    });
+    point("pwb+psync_private", &|| {
+        pool.pwb(0, cold);
+        pool.psync(0);
+    });
+    point("pwb+psync_global", &|| {
+        pool.pwb(0, hot);
+        pool.psync(0);
+    });
+    suite.finish()
+}

@@ -1,0 +1,127 @@
+//! Central configuration: `persiq.toml` (TOML subset) + CLI overrides.
+//!
+//! Sections:
+//! ```toml
+//! [pmem]
+//! capacity_words = 4194304
+//! evict_prob = 0.25
+//! pending_flush_prob = 0.5
+//!
+//! [pmem.cost]
+//! pwb_ns = 60
+//! psync_ns = 100
+//! # ... every CostModel knob (see pmem/latency.rs)
+//!
+//! [queue]
+//! ring_size = 1024
+//! iq_capacity = 65536
+//! starvation_limit = 4096
+//!
+//! [bench]
+//! ops = 200000
+//! seed = 42
+//! ```
+
+use std::path::Path;
+
+use crate::pmem::{CostModel, PmemConfig};
+use crate::queues::QueueConfig;
+use crate::util::toml::Doc;
+
+/// Fully resolved configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub pmem: PmemConfig,
+    pub queue: QueueConfig,
+    pub bench_ops: u64,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            pmem: PmemConfig::default().with_capacity(1 << 22),
+            queue: QueueConfig::default(),
+            bench_ops: 200_000,
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file, falling back to defaults per key.
+    pub fn from_file(path: &Path) -> anyhow::Result<Config> {
+        let doc = crate::util::toml::parse_file(path)?;
+        Ok(Self::from_doc(&doc))
+    }
+
+    /// Load `persiq.toml` from the working directory if present.
+    pub fn load_default() -> Config {
+        let path = Path::new("persiq.toml");
+        if path.exists() {
+            match Self::from_file(path) {
+                Ok(c) => return c,
+                Err(e) => {
+                    crate::log_warn!("ignoring persiq.toml: {e:#}");
+                }
+            }
+        }
+        Config::default()
+    }
+
+    /// Build from a parsed document.
+    pub fn from_doc(doc: &Doc) -> Config {
+        let mut c = Config::default();
+        c.pmem.capacity_words =
+            doc.get_u64("pmem", "capacity_words", c.pmem.capacity_words as u64) as usize;
+        c.pmem.evict_prob = doc.get_f64("pmem", "evict_prob", c.pmem.evict_prob);
+        c.pmem.pending_flush_prob =
+            doc.get_f64("pmem", "pending_flush_prob", c.pmem.pending_flush_prob);
+        c.pmem.seed = doc.get_u64("pmem", "seed", c.pmem.seed);
+        let mut cost = CostModel::default();
+        cost.apply_toml(doc, "pmem.cost");
+        c.pmem.cost = cost;
+
+        c.queue.ring_size = doc.get_u64("queue", "ring_size", c.queue.ring_size as u64) as usize;
+        c.queue.iq_capacity =
+            doc.get_u64("queue", "iq_capacity", c.queue.iq_capacity as u64) as usize;
+        c.queue.starvation_limit =
+            doc.get_u64("queue", "starvation_limit", c.queue.starvation_limit as u64) as usize;
+        c.queue.periq_tail_interval = doc
+            .get_u64("queue", "periq_tail_interval", c.queue.periq_tail_interval as u64)
+            as usize;
+
+        c.bench_ops = doc.get_u64("bench", "ops", c.bench_ops);
+        c.seed = doc.get_u64("bench", "seed", c.seed);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert!(c.pmem.capacity_words >= 1 << 20);
+        assert!(c.queue.ring_size.is_power_of_two());
+    }
+
+    #[test]
+    fn doc_overrides() {
+        let doc = crate::util::toml::parse(
+            "[pmem]\ncapacity_words = 1024\n[pmem.cost]\npwb_ns = 999\n\
+             [queue]\nring_size = 64\n[bench]\nops = 7\nseed = 8\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.pmem.capacity_words, 1024);
+        assert_eq!(c.pmem.cost.pwb_ns, 999);
+        assert_eq!(c.queue.ring_size, 64);
+        assert_eq!(c.bench_ops, 7);
+        assert_eq!(c.seed, 8);
+        // Untouched keys keep defaults.
+        assert_eq!(c.pmem.cost.psync_ns, CostModel::default().psync_ns);
+    }
+}

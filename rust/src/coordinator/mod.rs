@@ -1,0 +1,21 @@
+//! The coordinator: a persistent **task-broker service** built on PerLCRQ —
+//! the end-to-end application of the framework (DESIGN.md S16).
+//!
+//! Producers submit jobs (payload bytes); the broker persists the payload
+//! in the NVM pool, enqueues a handle on a PerLCRQ work queue, and workers
+//! consume, process and durably mark jobs done. A full-system crash at any
+//! point loses no *submitted* job and double-executes none: the work queue
+//! is durably linearizable (the paper's contribution) and job state
+//! transitions are CAS-guarded and persisted.
+//!
+//! * [`broker`] — the data plane: job records, submit/take/complete,
+//!   recovery, audit.
+//! * [`service`] — the orchestration loop: producer/worker thread pools,
+//!   crash cycles, end-to-end statistics (the `examples/task_broker`
+//!   driver and `persiq serve` both run this).
+
+pub mod broker;
+pub mod service;
+
+pub use broker::{Broker, BrokerAudit, JobId, JobState};
+pub use service::{run_service, ServiceConfig, ServiceReport};

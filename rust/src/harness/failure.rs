@@ -1,0 +1,182 @@
+//! The §5 failure framework.
+//!
+//! > "The framework provides a shared variable called `recovery_steps`.
+//! > All threads monitor this variable and each operation periodically
+//! > lowers the value by 1 step. When it reaches 0, any thread running
+//! > will cease, effectively simulating a crash of all threads.
+//! > Afterwards, the recovery function is launched by some thread. [...]
+//! > The above procedure [...] is called a *cycle*. Each evaluation test
+//! > has 10 cycles and we measure only the third part of each cycle, which
+//! > corresponds to the recovery cost."
+//!
+//! Our `recovery_steps` counts **pmem primitives** rather than whole
+//! operations, so crashes land *inside* operations (in every window the
+//! §4 proofs reason about). The recovery cost is measured in wall-clock
+//! time, simulated time, and NVM reads (scan length).
+
+use std::sync::Arc;
+
+use crate::pmem::PmemPool;
+use crate::queues::PersistentQueue;
+use crate::util::rng::Xoshiro256;
+use crate::util::time::Stopwatch;
+
+use super::runner::{run_workload, RunConfig, RunResult};
+
+/// Crash-cycle configuration.
+#[derive(Clone, Debug)]
+pub struct CycleConfig {
+    /// Number of cycles (paper: 10).
+    pub cycles: usize,
+    /// pmem-primitive steps before the crash fires (per cycle); jittered
+    /// by ±25% per cycle.
+    pub steps: u64,
+    /// Workload config for the normal-execution part.
+    pub run: RunConfig,
+    /// RNG seed for crash nondeterminism.
+    pub seed: u64,
+}
+
+impl Default for CycleConfig {
+    fn default() -> Self {
+        Self { cycles: 10, steps: 50_000, run: RunConfig::default(), seed: 0xC4A5 }
+    }
+}
+
+/// Result of one cycle.
+#[derive(Clone, Debug, Default)]
+pub struct CycleResult {
+    /// Operations completed before the crash.
+    pub ops_before_crash: u64,
+    /// Recovery wall-clock seconds (the paper's measured quantity).
+    pub recovery_wall_secs: f64,
+    /// Recovery simulated ns (virtual clock of the recovering thread).
+    pub recovery_sim_ns: u64,
+    /// NVM words read during recovery (scan length).
+    pub recovery_loads: u64,
+    /// NVM words written during recovery.
+    pub recovery_stores: u64,
+    /// The run portion (normal execution) of the cycle.
+    pub run: RunResult,
+}
+
+/// Run `cfg.cycles` crash/recovery cycles. Per cycle: run the workload
+/// with the step countdown armed → threads cease mid-operation → commit
+/// the crash → run the recovery function, measured. Returns per-cycle
+/// results (callers average the recovery cost, as in Figures 4–5).
+pub fn run_cycles(
+    pool: &Arc<PmemPool>,
+    queue: &Arc<dyn PersistentQueue>,
+    cfg: &CycleConfig,
+) -> Vec<CycleResult> {
+    let mut rng = Xoshiro256::seed_from(cfg.seed);
+    let mut out = Vec::with_capacity(cfg.cycles);
+    let as_conc: Arc<dyn crate::queues::ConcurrentQueue> = Arc::clone(queue) as _;
+    for cycle in 0..cfg.cycles {
+        // --- Part 1: normal execution with the countdown armed ---
+        let jitter = cfg.steps / 4;
+        let steps = cfg.steps - jitter + rng.next_below(2 * jitter + 1);
+        pool.arm_crash_after(steps);
+        let mut run_cfg = cfg.run.clone();
+        run_cfg.salt = (cycle as u64 + 1) & 0xFFF; // unique values per cycle
+        run_cfg.seed = cfg.run.seed ^ (cycle as u64) << 32;
+        let run = run_workload(pool, &as_conc, &run_cfg);
+
+        // --- Part 2: the crash ---
+        pool.crash(&mut rng);
+
+        // --- Part 3: recovery (the measured part) ---
+        pool.reset_meter();
+        let before = pool.stats.total();
+        let sw = Stopwatch::start();
+        queue.recover(pool);
+        let wall = sw.elapsed_secs();
+        let after = pool.stats.total();
+        out.push(CycleResult {
+            ops_before_crash: run.ops_done,
+            recovery_wall_secs: wall,
+            recovery_sim_ns: pool.vtime(0),
+            recovery_loads: after.loads - before.loads,
+            recovery_stores: after.stores - before.stores,
+            run,
+        });
+    }
+    out
+}
+
+/// Average recovery wall seconds over cycles.
+pub fn mean_recovery_secs(results: &[CycleResult]) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(|c| c.recovery_wall_secs).sum::<f64>() / results.len() as f64
+}
+
+/// Average recovery simulated ns over cycles.
+pub fn mean_recovery_sim_ns(results: &[CycleResult]) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(|c| c.recovery_sim_ns as f64).sum::<f64>() / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::crash::install_quiet_crash_hook;
+    use crate::pmem::{CostModel, PmemConfig};
+    use crate::queues::{persistent_by_name, QueueConfig, QueueCtx};
+
+    fn ctx() -> QueueCtx {
+        QueueCtx {
+            pool: Arc::new(PmemPool::new(PmemConfig {
+                capacity_words: 1 << 22,
+                cost: CostModel::default(),
+                evict_prob: 0.25,
+                pending_flush_prob: 0.5,
+                seed: 17,
+            })),
+            nthreads: 4,
+            cfg: QueueConfig::default(),
+        }
+    }
+
+    #[test]
+    fn cycles_crash_and_recover() {
+        install_quiet_crash_hook();
+        let c = ctx();
+        let q = persistent_by_name("perlcrq").unwrap()(&c);
+        let cfg = CycleConfig {
+            cycles: 3,
+            steps: 20_000,
+            run: RunConfig { nthreads: 4, total_ops: 1_000_000, ..Default::default() },
+            seed: 5,
+        };
+        let res = run_cycles(&c.pool, &q, &cfg);
+        assert_eq!(res.len(), 3);
+        for r in &res {
+            assert!(r.run.crashed, "the countdown must interrupt the run");
+            assert!(r.recovery_loads > 0, "recovery must read NVM");
+        }
+        assert_eq!(c.pool.epoch(), 3);
+        // The queue is alive after the last recovery.
+        q.enqueue(0, 12345).unwrap();
+        assert!(q.dequeue(1).unwrap().is_some());
+    }
+
+    #[test]
+    fn recovery_metrics_nonzero_for_periq() {
+        install_quiet_crash_hook();
+        let c = ctx();
+        let q = persistent_by_name("periq").unwrap()(&c);
+        let cfg = CycleConfig {
+            cycles: 2,
+            steps: 10_000,
+            run: RunConfig { nthreads: 4, total_ops: 1_000_000, ..Default::default() },
+            seed: 6,
+        };
+        let res = run_cycles(&c.pool, &q, &cfg);
+        assert!(mean_recovery_secs(&res) >= 0.0);
+        assert!(mean_recovery_sim_ns(&res) > 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Benchmark & crash-test harness.
+//!
+//! * [`workload`] — the paper's §5 workloads: enqueue/dequeue pairs
+//!   (default, "avoids performing unsuccessful and thus cheap operations"),
+//!   50/50 random, and enqueue-/dequeue-heavy mixes.
+//! * [`runner`] — multi-thread execution with virtual-time metering:
+//!   simulated throughput = ops / max-thread-virtual-time (see pmem docs),
+//!   plus wall-clock numbers and per-op latency samples for the L2 metrics
+//!   pipeline.
+//! * [`failure`] — the §5 failure framework: `recovery_steps` countdown, a
+//!   *cycle* = normal run → crash when steps hit 0 → recovery; recovery
+//!   cost is measured over 10 cycles by default.
+//! * [`mod@bench`] — a small criterion-style measurement core (warmup +
+//!   repeated timed runs + mean/σ) used by all `cargo bench` targets.
+
+pub mod bench;
+pub mod failure;
+pub mod runner;
+pub mod workload;
+
+pub use failure::{run_cycles, CycleConfig, CycleResult};
+pub use runner::{run_workload, RunConfig, RunResult};
+pub use workload::Workload;

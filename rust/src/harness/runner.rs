@@ -1,0 +1,338 @@
+//! Multi-thread workload runner with virtual-time metering.
+//!
+//! Throughput reporting follows DESIGN.md §1: real OS threads provide real
+//! interleavings (correctness), while per-thread **virtual clocks** (see
+//! [`crate::pmem`]) provide the scaling signal the paper measures on its
+//! 96-thread testbed. Simulated throughput = `ops / max_vtime`; wall-clock
+//! throughput is also reported (meaningful only up to the physical core
+//! count of this machine).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::pmem::{run_guarded, PmemPool};
+use crate::queues::ConcurrentQueue;
+use crate::util::rng::Xoshiro256;
+use crate::util::time::Stopwatch;
+use crate::verify::{Event, EventKind, Recorder};
+
+use super::workload::{value_for, Workload};
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub nthreads: usize,
+    /// Total operations across all threads (each runs `total/n`).
+    pub total_ops: u64,
+    pub workload: Workload,
+    pub seed: u64,
+    /// Value salt (vary across crash cycles for global uniqueness).
+    pub salt: u64,
+    /// Record verify/ events (adds overhead; off for throughput runs).
+    pub record: bool,
+    /// Keep every `k`-th op's simulated latency as a sample (0 = none).
+    pub sample_every: u64,
+    /// Inject random yields to diversify interleavings on few cores.
+    pub yield_prob: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            nthreads: 4,
+            total_ops: 100_000,
+            workload: Workload::Pairs,
+            seed: 42,
+            salt: 0,
+            record: false,
+            sample_every: 0,
+            yield_prob: 0.0,
+        }
+    }
+}
+
+/// Result of one workload run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub ops_done: u64,
+    pub enqueues: u64,
+    pub dequeues: u64,
+    pub empties: u64,
+    /// Wall-clock seconds.
+    pub wall_secs: f64,
+    /// Simulated makespan: max over threads of virtual ns spent.
+    pub sim_ns: u64,
+    /// Crashed mid-run? (set when a crash was armed).
+    pub crashed: bool,
+    /// Per-thread event logs (when `record`).
+    pub logs: Vec<Vec<Event>>,
+    /// Simulated per-op latency samples in ns, per thread (when
+    /// `sample_every > 0`) — input to the L2 metrics pipeline.
+    pub latency_samples: Vec<Vec<f64>>,
+    /// Ops per simulated second.
+    pub sim_mops: f64,
+    /// Ops per wall second.
+    pub wall_mops: f64,
+}
+
+impl RunResult {
+    fn finalize(&mut self) {
+        self.sim_mops = if self.sim_ns > 0 {
+            self.ops_done as f64 / (self.sim_ns as f64 / 1e9) / 1e6
+        } else {
+            0.0
+        };
+        self.wall_mops = if self.wall_secs > 0.0 {
+            self.ops_done as f64 / self.wall_secs / 1e6
+        } else {
+            0.0
+        };
+    }
+}
+
+/// Run `cfg.workload` over `queue`. Resets the pool meter first so
+/// `sim_ns` reflects only this run. If a crash is armed on the pool the
+/// run may end early with `crashed = true` (the caller then drives
+/// crash/recovery — see [`super::failure`]).
+pub fn run_workload(
+    pool: &Arc<PmemPool>,
+    queue: &Arc<dyn ConcurrentQueue>,
+    cfg: &RunConfig,
+) -> RunResult {
+    pool.reset_meter();
+    pool.set_active_threads(cfg.nthreads);
+    let recorder = Recorder::new();
+    let ops_per_thread = (cfg.total_ops / cfg.nthreads as u64).max(1);
+    let done = Arc::new(AtomicU64::new(0));
+    let enq_ct = Arc::new(AtomicU64::new(0));
+    let deq_ct = Arc::new(AtomicU64::new(0));
+    let empty_ct = Arc::new(AtomicU64::new(0));
+    let crashed = Arc::new(AtomicU64::new(0));
+
+    let sw = Stopwatch::start();
+    let mut handles = Vec::new();
+    for tid in 0..cfg.nthreads {
+        let pool = Arc::clone(pool);
+        let queue = Arc::clone(queue);
+        let recorder = Arc::clone(&recorder);
+        let (done, enq_ct, deq_ct, empty_ct, crashed) = (
+            Arc::clone(&done),
+            Arc::clone(&enq_ct),
+            Arc::clone(&deq_ct),
+            Arc::clone(&empty_ct),
+            Arc::clone(&crashed),
+        );
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::split(cfg.seed, tid as u64);
+            let mut log: Vec<Event> = Vec::new();
+            let mut samples: Vec<f64> = Vec::new();
+            let mut counter: u64 = 0;
+            let mut my_done = 0u64;
+            let mut my_enq = 0u64;
+            let mut my_deq = 0u64;
+            let mut my_empty = 0u64;
+            let out = run_guarded(|| {
+                for k in 0..ops_per_thread {
+                    if cfg.yield_prob > 0.0 && rng.chance(cfg.yield_prob) {
+                        std::thread::yield_now();
+                    }
+                    let t0 = if cfg.sample_every > 0 { pool.vtime(tid) } else { 0 };
+                    if cfg.workload.is_enqueue(k, &mut rng) {
+                        let v = value_for(cfg.salt, tid, counter);
+                        counter += 1;
+                        if cfg.record {
+                            recorder.record(
+                                &mut log,
+                                tid,
+                                pool.epoch(),
+                                EventKind::EnqInvoke { value: v },
+                            );
+                        }
+                        queue.enqueue(tid, v).expect("enqueue failed: size the pool/capacity");
+                        if cfg.record {
+                            recorder.record(
+                                &mut log,
+                                tid,
+                                pool.epoch(),
+                                EventKind::EnqOk { value: v },
+                            );
+                        }
+                        my_enq += 1;
+                    } else {
+                        if cfg.record {
+                            recorder.record(&mut log, tid, pool.epoch(), EventKind::DeqInvoke);
+                        }
+                        match queue.dequeue(tid).expect("dequeue failed") {
+                            Some(v) => {
+                                if cfg.record {
+                                    recorder.record(
+                                        &mut log,
+                                        tid,
+                                        pool.epoch(),
+                                        EventKind::DeqOk { value: v },
+                                    );
+                                }
+                                my_deq += 1;
+                            }
+                            None => {
+                                if cfg.record {
+                                    recorder.record(
+                                        &mut log,
+                                        tid,
+                                        pool.epoch(),
+                                        EventKind::DeqEmpty,
+                                    );
+                                }
+                                my_empty += 1;
+                            }
+                        }
+                    }
+                    my_done += 1;
+                    if cfg.sample_every > 0 && k % cfg.sample_every == 0 {
+                        samples.push((pool.vtime(tid) - t0) as f64);
+                    }
+                }
+            });
+            if out.crashed() {
+                crashed.fetch_add(1, Ordering::Relaxed);
+            }
+            done.fetch_add(my_done, Ordering::Relaxed);
+            enq_ct.fetch_add(my_enq, Ordering::Relaxed);
+            deq_ct.fetch_add(my_deq, Ordering::Relaxed);
+            empty_ct.fetch_add(my_empty, Ordering::Relaxed);
+            (log, samples)
+        }));
+    }
+
+    let mut logs = Vec::new();
+    let mut latency_samples = Vec::new();
+    for h in handles {
+        let (log, samples) = h.join().expect("worker panicked (non-crash)");
+        logs.push(log);
+        latency_samples.push(samples);
+    }
+
+    let mut res = RunResult {
+        ops_done: done.load(Ordering::Relaxed),
+        enqueues: enq_ct.load(Ordering::Relaxed),
+        dequeues: deq_ct.load(Ordering::Relaxed),
+        empties: empty_ct.load(Ordering::Relaxed),
+        wall_secs: sw.elapsed_secs(),
+        sim_ns: pool.max_vtime(),
+        crashed: crashed.load(Ordering::Relaxed) > 0,
+        logs,
+        latency_samples,
+        ..Default::default()
+    };
+    res.finalize();
+    res
+}
+
+/// Exhaustively drain a queue (single-threaded), returning the values —
+/// the verifier's final-state probe.
+pub fn drain_all(queue: &Arc<dyn ConcurrentQueue>, tid: usize) -> Vec<u64> {
+    let mut out = Vec::new();
+    while let Ok(Some(v)) = queue.dequeue(tid) {
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+    use crate::queues::{by_name, QueueConfig, QueueCtx};
+    use crate::verify::{check, History};
+
+    fn ctx(cap: usize) -> QueueCtx {
+        QueueCtx {
+            pool: Arc::new(PmemPool::new(PmemConfig {
+                capacity_words: cap,
+                cost: CostModel::default(),
+                evict_prob: 0.0,
+                pending_flush_prob: 0.0,
+                seed: 7,
+            })),
+            nthreads: 4,
+            cfg: QueueConfig::default(),
+        }
+    }
+
+    #[test]
+    fn pairs_workload_runs_and_meters() {
+        let c = ctx(1 << 21);
+        let q = by_name("perlcrq").unwrap()(&c);
+        let cfg = RunConfig { nthreads: 4, total_ops: 8_000, ..Default::default() };
+        let r = run_workload(&c.pool, &q, &cfg);
+        assert_eq!(r.ops_done, 8_000);
+        assert!(r.sim_ns > 0, "virtual time must advance");
+        assert!(r.sim_mops > 0.0);
+        assert!(!r.crashed);
+        assert_eq!(r.enqueues, 4_000);
+        assert_eq!(r.dequeues + r.empties, 4_000);
+    }
+
+    #[test]
+    fn recorded_history_verifies() {
+        let c = ctx(1 << 21);
+        let q = by_name("perlcrq").unwrap()(&c);
+        let cfg = RunConfig {
+            nthreads: 4,
+            total_ops: 4_000,
+            record: true,
+            ..Default::default()
+        };
+        let r = run_workload(&c.pool, &q, &cfg);
+        let drain = drain_all(&q, 0);
+        let h = History::from_logs(r.logs, drain);
+        let rep = check(&h, 5);
+        assert!(rep.ok(), "verifier found: {:?}", rep.violations);
+        assert!(rep.enq_completed > 0);
+    }
+
+    #[test]
+    fn sampling_collects_latencies() {
+        let c = ctx(1 << 21);
+        let q = by_name("periq").unwrap()(&c);
+        let cfg = RunConfig {
+            nthreads: 2,
+            total_ops: 2_000,
+            sample_every: 10,
+            ..Default::default()
+        };
+        let r = run_workload(&c.pool, &q, &cfg);
+        let n: usize = r.latency_samples.iter().map(|s| s.len()).sum();
+        assert!(n >= 190, "expected ~200 samples, got {n}");
+        assert!(r.latency_samples.iter().flatten().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn sim_time_reflects_contention_costs() {
+        // Same ops, 1 vs 4 threads on the SAME algorithm: per-op simulated
+        // cost should rise with threads (FAI contention), so sim throughput
+        // does not scale linearly.
+        let c1 = ctx(1 << 21);
+        let q1 = by_name("perlcrq").unwrap()(&c1);
+        let r1 = run_workload(
+            &c1.pool,
+            &q1,
+            &RunConfig { nthreads: 1, total_ops: 4_000, ..Default::default() },
+        );
+        let c4 = ctx(1 << 21);
+        let q4 = by_name("perlcrq").unwrap()(&c4);
+        let r4 = run_workload(
+            &c4.pool,
+            &q4,
+            &RunConfig { nthreads: 4, total_ops: 4_000, ..Default::default() },
+        );
+        assert!(
+            r4.sim_mops < r1.sim_mops * 4.0,
+            "4 threads must not be 4x of 1 thread under contention \
+             (1t={:.2} 4t={:.2})",
+            r1.sim_mops,
+            r4.sim_mops
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Workload definitions (paper §5 methodology).
+
+use crate::util::rng::Xoshiro256;
+
+/// The operation mix each worker thread executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Alternating enqueue/dequeue pairs starting from an empty queue —
+    /// the paper's standard workload ("avoids performing unsuccessful and
+    /// thus cheap operations").
+    Pairs,
+    /// Uniform random 50% enqueue / 50% dequeue (paper: "did not
+    /// illustrate significantly different performance trends").
+    Random5050,
+    /// 80% enqueue / 20% dequeue (grows the queue; recovery-size benches).
+    EnqHeavy,
+    /// 20% enqueue / 80% dequeue.
+    DeqHeavy,
+    /// Enqueue-only (fills the queue to a target size).
+    EnqOnly,
+}
+
+impl Workload {
+    /// Parse from CLI/config name.
+    pub fn parse(s: &str) -> Option<Workload> {
+        Some(match s {
+            "pairs" => Workload::Pairs,
+            "random" | "random5050" | "50-50" => Workload::Random5050,
+            "enq-heavy" => Workload::EnqHeavy,
+            "deq-heavy" => Workload::DeqHeavy,
+            "enq-only" => Workload::EnqOnly,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Pairs => "pairs",
+            Workload::Random5050 => "random5050",
+            Workload::EnqHeavy => "enq-heavy",
+            Workload::DeqHeavy => "deq-heavy",
+            Workload::EnqOnly => "enq-only",
+        }
+    }
+
+    /// Decide whether the `k`-th operation of a thread is an enqueue.
+    #[inline]
+    pub fn is_enqueue(&self, k: u64, rng: &mut Xoshiro256) -> bool {
+        match self {
+            Workload::Pairs => k % 2 == 0,
+            Workload::Random5050 => rng.next_bool(),
+            Workload::EnqHeavy => rng.next_below(10) < 8,
+            Workload::DeqHeavy => rng.next_below(10) < 2,
+            Workload::EnqOnly => true,
+        }
+    }
+}
+
+/// Build the globally unique value for thread `tid`'s `k`-th enqueue.
+/// Layout: `salt (12 bits) | tid (10 bits) | counter (40 bits)` — always
+/// `< MAX_ITEM` and unique across crash cycles when `salt` differs.
+#[inline]
+pub fn value_for(salt: u64, tid: usize, counter: u64) -> u64 {
+    debug_assert!(salt < (1 << 12));
+    debug_assert!(tid < (1 << 10));
+    debug_assert!(counter < (1 << 40));
+    (salt << 50) | ((tid as u64) << 40) | counter
+}
+
+/// Decompose a value produced by [`value_for`].
+pub fn split_value(v: u64) -> (u64, usize, u64) {
+    ((v >> 50) & 0xFFF, ((v >> 40) & 0x3FF) as usize, v & ((1 << 40) - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queues::MAX_ITEM;
+
+    #[test]
+    fn parse_roundtrip() {
+        for w in [
+            Workload::Pairs,
+            Workload::Random5050,
+            Workload::EnqHeavy,
+            Workload::DeqHeavy,
+            Workload::EnqOnly,
+        ] {
+            assert_eq!(Workload::parse(w.name()), Some(w));
+        }
+        assert_eq!(Workload::parse("nope"), None);
+    }
+
+    #[test]
+    fn pairs_alternate() {
+        let mut rng = Xoshiro256::seed_from(1);
+        assert!(Workload::Pairs.is_enqueue(0, &mut rng));
+        assert!(!Workload::Pairs.is_enqueue(1, &mut rng));
+        assert!(Workload::Pairs.is_enqueue(2, &mut rng));
+    }
+
+    #[test]
+    fn mixes_are_biased() {
+        let mut rng = Xoshiro256::seed_from(2);
+        let count = |w: Workload, rng: &mut Xoshiro256| {
+            (0..1000).filter(|&k| w.is_enqueue(k, rng)).count()
+        };
+        let eh = count(Workload::EnqHeavy, &mut rng);
+        let dh = count(Workload::DeqHeavy, &mut rng);
+        assert!(eh > 700, "enq-heavy should be ~80% enqueues, got {eh}");
+        assert!(dh < 300, "deq-heavy should be ~20% enqueues, got {dh}");
+        assert_eq!(count(Workload::EnqOnly, &mut rng), 1000);
+    }
+
+    #[test]
+    fn values_unique_and_in_range() {
+        let a = value_for(1, 5, 100);
+        let b = value_for(1, 5, 101);
+        let c = value_for(1, 6, 100);
+        let d = value_for(2, 5, 100);
+        let all = [a, b, c, d];
+        let mut s = all.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 4);
+        for v in all {
+            assert!(v < MAX_ITEM);
+        }
+        assert_eq!(split_value(a), (1, 5, 100));
+    }
+}

@@ -1,0 +1,55 @@
+//! # persiq — Highly-Efficient Persistent FIFO Queues
+//!
+//! A reproduction framework for *"Highly-Efficient Persistent FIFO Queues"*
+//! (Fatourou, Giachoudis, Mallis — 2024): persistent (durably linearizable)
+//! concurrent FIFO queues built on Fetch&Increment to avoid contended hot
+//! spots, executing **one `pwb` + `psync` pair per operation** on
+//! low-contention memory locations.
+//!
+//! The crate provides:
+//!
+//! * [`pmem`] — a simulated NVM substrate implementing the *explicit epoch
+//!   persistency* model of the paper (§2): a persistent arena whose 64-byte
+//!   lines each have a *live* (cache) and a *shadow* (NVM) copy; `pwb`,
+//!   `pfence`, `psync` primitives with a calibrated latency/contention cost
+//!   model; full-system crash simulation with nondeterministic line eviction.
+//! * [`queues`] — the paper's algorithm family: IQ / PerIQ (Alg. 1, 6),
+//!   CRQ / PerCRQ (Alg. 3), LCRQ / PerLCRQ (Alg. 5), plus the baselines its
+//!   evaluation compares against: Michael–Scott queue, a durable MS queue,
+//!   and the combining-based PBQueue / PWFQueue.
+//! * [`verify`] — history recording and a durable-linearizability checker.
+//! * [`harness`] — workload generators, the multi-thread runner with
+//!   virtual-time metering, and the crash/recovery ("cycle") framework of §5.
+//! * [`runtime`] — a PJRT wrapper that loads the AOT-compiled JAX/Pallas
+//!   metrics pipeline (`artifacts/metrics.hlo.txt`) and runs it from Rust.
+//! * [`coordinator`] — a persistent task-broker service built on PerLCRQ:
+//!   the end-to-end example application.
+//! * [`util`] — self-contained infrastructure (PRNG, CLI, config, reporters)
+//!   since this build environment is offline.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! # // compile-only: rustdoc test binaries don't inherit the xla rpath
+//! # // (behaviour covered by unit/integration tests)
+//! use std::sync::Arc;
+//! use persiq::pmem::{PmemPool, PmemConfig};
+//! use persiq::queues::{perlcrq::PerLcrq, ConcurrentQueue};
+//!
+//! let pool = Arc::new(PmemPool::new(PmemConfig::default()));
+//! let q = PerLcrq::new(&pool, 4 /* threads */, Default::default());
+//! q.enqueue(0, 42).unwrap();
+//! assert_eq!(q.dequeue(0).unwrap(), Some(42));
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod pmem;
+pub mod queues;
+pub mod runtime;
+pub mod util;
+pub mod verify;
+
+/// Crate version string (from Cargo).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

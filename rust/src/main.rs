@@ -1,0 +1,373 @@
+//! `persiq` — CLI launcher.
+//!
+//! ```text
+//! persiq list                       # available algorithms
+//! persiq bench     --algo perlcrq --threads 1,2,4 --ops 200000
+//! persiq recover   --algo periq --cycles 10 --steps 50000
+//! persiq verify    --algo perlcrq --cycles 5
+//! persiq serve     --producers 2 --workers 2 --jobs 500 --crash-cycles 2
+//! persiq micro                      # pmem primitive costs
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use persiq::config::Config;
+use persiq::coordinator::{run_service, Broker, ServiceConfig};
+use persiq::harness::bench::Suite;
+use persiq::harness::failure::{mean_recovery_secs, mean_recovery_sim_ns};
+use persiq::harness::runner::{drain_all, run_workload};
+use persiq::harness::{run_cycles, CycleConfig, RunConfig, Workload};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::pmem::{CostModel, MeterMode, PmemPool};
+use persiq::queues::{by_name, persistent_by_name, registry, QueueCtx};
+use persiq::runtime::MetricsEngine;
+use persiq::util::cli::Command;
+use persiq::util::report::{fnum, Csv};
+use persiq::util::rng::entropy_seed;
+use persiq::verify::{check, History};
+use persiq::{log_info, log_warn};
+
+fn main() {
+    install_quiet_crash_hook();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "list" => cmd_list(),
+        "bench" => cmd_bench(rest),
+        "recover" => cmd_recover(rest),
+        "verify" => cmd_verify(rest),
+        "serve" => cmd_serve(rest),
+        "micro" => cmd_micro(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other:?}\n\n{}", usage_text()),
+    }
+}
+
+fn usage_text() -> String {
+    format!(
+        "persiq {} — persistent FIFO queues on simulated NVM\n\n\
+         SUBCOMMANDS:\n\
+         \x20 list      list queue algorithms\n\
+         \x20 bench     throughput benchmark (simulated + wall-clock)\n\
+         \x20 recover   crash/recovery cycles; recovery cost (paper §5)\n\
+         \x20 verify    randomized crash workloads + durable-linearizability checker\n\
+         \x20 serve     persistent task-broker service demo\n\
+         \x20 micro     pmem primitive cost microbenchmark\n\n\
+         Run `persiq <cmd> --help` for options.",
+        persiq::VERSION
+    )
+}
+
+fn print_usage() {
+    println!("{}", usage_text());
+}
+
+fn cmd_list() -> Result<()> {
+    println!("algorithms (queues::registry):");
+    for (name, _) in registry() {
+        let persistent = persistent_by_name(name).is_some();
+        println!("  {name:<16} {}", if persistent { "[persistent]" } else { "" });
+    }
+    Ok(())
+}
+
+fn queue_ctx(cfg: &Config, nthreads: usize) -> QueueCtx {
+    QueueCtx {
+        pool: Arc::new(PmemPool::new(cfg.pmem.clone())),
+        nthreads,
+        cfg: cfg.queue.clone(),
+    }
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let cmd = Command::new("bench", "throughput benchmark over simulated threads")
+        .opt_default("algo", "algorithm(s), comma-separated", "perlcrq")
+        .opt_default("threads", "thread counts, comma-separated", "1,2,4,8")
+        .opt("ops", "total operations per point")
+        .opt_default("workload", "pairs|random5050|enq-heavy|deq-heavy", "pairs")
+        .opt("seed", "RNG seed (default: entropy)")
+        .flag("latency", "also report latency percentiles via the metrics engine");
+    let a = cmd.parse(args)?;
+    let cfg = Config::load_default();
+    let algos = a.get_list::<String>("algo", &["perlcrq".into()])?;
+    let threads = a.get_list::<usize>("threads", &[1, 2, 4, 8])?;
+    let ops = a.get_parse::<u64>("ops", cfg.bench_ops)?;
+    let workload = Workload::parse(a.get("workload").unwrap_or("pairs"))
+        .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
+    let seed = a.get_parse::<u64>("seed", entropy_seed())?;
+    let want_latency = a.flag("latency");
+    log_info!("bench seed = {seed}");
+
+    let engine = if want_latency { Some(MetricsEngine::auto()) } else { None };
+    let mut csv = Csv::new(vec![
+        "algo", "threads", "sim_mops", "wall_mops", "pwbs_per_op", "psyncs_per_op", "p50_ns",
+        "p99_ns",
+    ]);
+    for algo in &algos {
+        let ctor = by_name(algo).ok_or_else(|| anyhow::anyhow!("unknown algo {algo}"))?;
+        for &n in &threads {
+            let ctx = queue_ctx(&cfg, n);
+            let q = ctor(&ctx);
+            let rc = RunConfig {
+                nthreads: n,
+                total_ops: ops,
+                workload,
+                seed,
+                sample_every: if want_latency { 16 } else { 0 },
+                ..Default::default()
+            };
+            let r = run_workload(&ctx.pool, &q, &rc);
+            let stats = ctx.pool.stats.total();
+            let (p50, p99) = if let Some(engine) = &engine {
+                let samples: Vec<f64> =
+                    r.latency_samples.iter().flatten().cloned().collect();
+                let m = engine.metrics(&samples)?;
+                (m.p50, m.p99)
+            } else {
+                (0.0, 0.0)
+            };
+            csv.row(vec![
+                algo.clone(),
+                n.to_string(),
+                fnum(r.sim_mops),
+                fnum(r.wall_mops),
+                format!("{:.2}", stats.pwbs as f64 / r.ops_done.max(1) as f64),
+                format!("{:.2}", stats.psyncs as f64 / r.ops_done.max(1) as f64),
+                fnum(p50),
+                fnum(p99),
+            ]);
+        }
+    }
+    print!("{}", csv.to_table());
+    csv.save(std::path::Path::new("results/cli_bench.csv"))?;
+    println!("[saved results/cli_bench.csv]");
+    Ok(())
+}
+
+fn cmd_recover(args: &[String]) -> Result<()> {
+    let cmd = Command::new("recover", "crash/recovery cycles (paper §5 framework)")
+        .opt_default("algo", "persistent algorithm", "periq")
+        .opt_default("cycles", "number of cycles", "10")
+        .opt_default("steps", "pmem steps before each crash", "50000")
+        .opt_default("threads", "worker threads", "4")
+        .opt("ops", "max ops per cycle")
+        .opt("seed", "RNG seed");
+    let a = cmd.parse(args)?;
+    let cfg = Config::load_default();
+    let algo = a.get("algo").unwrap_or("periq").to_string();
+    let ctor = persistent_by_name(&algo)
+        .ok_or_else(|| anyhow::anyhow!("{algo} is not a persistent algorithm"))?;
+    let nthreads = a.get_parse::<usize>("threads", 4)?;
+    let ctx = queue_ctx(&cfg, nthreads);
+    let q = ctor(&ctx);
+    let ccfg = CycleConfig {
+        cycles: a.get_parse("cycles", 10)?,
+        steps: a.get_parse("steps", 50_000)?,
+        run: RunConfig {
+            nthreads,
+            total_ops: a.get_parse("ops", 10_000_000)?,
+            seed: a.get_parse("seed", entropy_seed())?,
+            ..Default::default()
+        },
+        seed: a.get_parse("seed", entropy_seed())?,
+    };
+    let res = run_cycles(&ctx.pool, &q, &ccfg);
+    let mut csv =
+        Csv::new(vec!["cycle", "ops_before_crash", "recovery_us", "recovery_sim_us", "loads"]);
+    for (i, c) in res.iter().enumerate() {
+        csv.row(vec![
+            i.to_string(),
+            c.ops_before_crash.to_string(),
+            format!("{:.1}", c.recovery_wall_secs * 1e6),
+            format!("{:.1}", c.recovery_sim_ns as f64 / 1e3),
+            c.recovery_loads.to_string(),
+        ]);
+    }
+    print!("{}", csv.to_table());
+    println!(
+        "mean recovery: {:.1} µs wall, {:.1} µs simulated",
+        mean_recovery_secs(&res) * 1e6,
+        mean_recovery_sim_ns(&res) / 1e3
+    );
+    Ok(())
+}
+
+fn cmd_verify(args: &[String]) -> Result<()> {
+    let cmd = Command::new("verify", "durable-linearizability torture test")
+        .opt_default("algo", "persistent algorithm (or 'all')", "all")
+        .opt_default("cycles", "crash cycles per run", "4")
+        .opt_default("threads", "worker threads", "4")
+        .opt_default("ops", "ops per cycle attempt", "40000")
+        .opt_default("steps", "pmem steps before crash", "30000")
+        .opt("seed", "RNG seed");
+    let a = cmd.parse(args)?;
+    let cfg = Config::load_default();
+    let seed = a.get_parse::<u64>("seed", entropy_seed())?;
+    log_info!("verify seed = {seed}");
+    let algos: Vec<String> = if a.get("algo") == Some("all") {
+        persiq::queues::persistent_registry().iter().map(|(n, _)| n.to_string()).collect()
+    } else {
+        a.get_list::<String>("algo", &[])?
+    };
+    let nthreads = a.get_parse::<usize>("threads", 4)?;
+    let cycles = a.get_parse::<usize>("cycles", 4)?;
+    let ops = a.get_parse::<u64>("ops", 40_000)?;
+    let steps = a.get_parse::<u64>("steps", 30_000)?;
+    let mut failed = false;
+    for algo in &algos {
+        let ctor = persistent_by_name(algo)
+            .ok_or_else(|| anyhow::anyhow!("{algo} is not persistent"))?;
+        let ctx = queue_ctx(&cfg, nthreads);
+        let q = ctor(&ctx);
+        let as_conc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
+        let mut rng = persiq::util::rng::Xoshiro256::seed_from(seed);
+        let mut logs: Vec<Vec<persiq::verify::Event>> = Vec::new();
+        for cycle in 0..cycles {
+            ctx.pool.arm_crash_after(steps);
+            let rc = RunConfig {
+                nthreads,
+                total_ops: ops,
+                record: true,
+                salt: cycle as u64 + 1,
+                seed: seed ^ (cycle as u64) << 16,
+                ..Default::default()
+            };
+            let r = run_workload(&ctx.pool, &as_conc, &rc);
+            logs.extend(r.logs);
+            ctx.pool.crash(&mut rng);
+            q.recover(&ctx.pool);
+        }
+        let drained = drain_all(&as_conc, 0);
+        let history = History::from_logs(logs, drained);
+        let rep = check(&history, 10);
+        let status = if rep.ok() { "OK " } else { "FAIL" };
+        println!(
+            "{status} {algo:<16} enq={} deq={} empties={} drained={} violations={}",
+            rep.enq_completed,
+            rep.deq_values,
+            rep.deq_empties,
+            rep.drained,
+            rep.violations.len()
+        );
+        for v in &rep.violations {
+            log_warn!("  {algo}: {v:?}");
+            failed = true;
+        }
+    }
+    anyhow::ensure!(!failed, "durable-linearizability violations detected");
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "persistent task-broker service")
+        .opt_default("producers", "producer threads", "2")
+        .opt_default("workers", "worker threads", "2")
+        .opt_default("jobs", "jobs per producer per cycle", "500")
+        .opt_default("crash-cycles", "crash/recovery cycles (0 = none)", "0")
+        .opt_default("steps", "pmem steps before each crash", "50000")
+        .opt("seed", "RNG seed");
+    let a = cmd.parse(args)?;
+    let cfg = Config::load_default();
+    let producers = a.get_parse::<usize>("producers", 2)?;
+    let workers = a.get_parse::<usize>("workers", 2)?;
+    let scfg = ServiceConfig {
+        producers,
+        workers,
+        jobs_per_producer: a.get_parse("jobs", 500)?,
+        crash_cycles: a.get_parse("crash-cycles", 0)?,
+        crash_steps: a.get_parse("steps", 50_000)?,
+        seed: a.get_parse("seed", entropy_seed())?,
+    };
+    let pool = Arc::new(PmemPool::new(cfg.pmem.clone()));
+    let broker =
+        Arc::new(Broker::new(&pool, producers + workers, 1 << 16, cfg.queue.ring_size));
+    let rep = run_service(&pool, &broker, &scfg)?;
+    println!(
+        "broker: submitted={} done={} pending={} crashes={} wall={:.3}s",
+        rep.submitted, rep.done, rep.pending_after, rep.crashes, rep.wall_secs
+    );
+    let engine = MetricsEngine::auto();
+    if !rep.latency_samples.is_empty() {
+        let m = engine.metrics(&rep.latency_samples)?;
+        println!(
+            "job latency (simulated, backend={}): mean={} p50={} p95={} p99={} ns",
+            m.backend,
+            fnum(m.mean),
+            fnum(m.p50),
+            fnum(m.p95),
+            fnum(m.p99)
+        );
+    }
+    anyhow::ensure!(rep.done == rep.submitted, "job loss detected");
+    Ok(())
+}
+
+fn cmd_micro(args: &[String]) -> Result<()> {
+    let cmd = Command::new("micro", "pmem primitive cost microbenchmark")
+        .opt_default("iters", "iterations per primitive", "100000")
+        .flag("wallclock", "use wall-clock spin metering");
+    let a = cmd.parse(args)?;
+    let iters = a.get_parse::<u64>("iters", 100_000)?;
+    let mut cfg = Config::load_default();
+    if a.flag("wallclock") {
+        cfg.pmem.cost.meter = MeterMode::WallclockSpin;
+    }
+    let pool = Arc::new(PmemPool::new(cfg.pmem.clone()));
+    let mut suite = Suite::new("micro_pmem_cli", "pmem primitive simulated costs");
+    let cold = pool.alloc_lines(1);
+    let hot = pool.alloc_lines(1);
+    // Warm the hot line's accessor mask from 8 thread ids.
+    for t in 0..8 {
+        let _ = pool.fai(t, hot);
+    }
+    let run = |name: &str, suite: &mut Suite, f: &dyn Fn(u64)| {
+        let before = pool.vtime(0);
+        for i in 0..iters {
+            f(i);
+        }
+        let per_op = (pool.vtime(0) - before) as f64 / iters as f64;
+        suite.measure(name, 1.0, || per_op);
+    };
+    run("fai_uncontended", &mut suite, &|_| {
+        let _ = pool.fai(0, cold);
+    });
+    run("fai_hot", &mut suite, &|_| {
+        let _ = pool.fai(0, hot);
+    });
+    run("pwb_swsr+psync", &mut suite, &|_| {
+        pool.pwb(0, cold);
+        pool.psync(0);
+    });
+    run("pwb_hot+psync", &mut suite, &|_| {
+        pool.pwb(0, hot);
+        pool.psync(0);
+    });
+    suite.finish()?;
+    let c = &cfg.pmem.cost;
+    println!(
+        "model: atomic={}ns conflict={}ns/accessor pwb={}ns (+{}ns/accessor hot) psync={}ns",
+        c.atomic_ns, c.conflict_ns, c.pwb_ns, c.pwb_hot_ns, c.psync_ns
+    );
+    let _ = CostModel::default();
+    Ok(())
+}

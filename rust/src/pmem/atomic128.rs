@@ -1,0 +1,190 @@
+//! 128-bit compare-and-swap (`CAS2` in the paper, §2).
+//!
+//! CRQ/PerCRQ cells are 16-byte triplets `(safe bit, index, value)` packed
+//! into two adjacent 64-bit words; dequeue/enqueue transitions replace both
+//! words atomically (Algorithm 3, lines 14/34/38/41). x86-64 provides
+//! `lock cmpxchg16b`; Rust's `std` has no `AtomicU128`, so we emit the
+//! instruction with inline asm. `rbx` is reserved by LLVM, hence the
+//! save/exchange dance. On non-x86-64 targets a seqlock-striped fallback is
+//! compiled instead (correct, slower — documented in DESIGN.md §6).
+
+use std::sync::atomic::AtomicU64;
+
+/// Atomically compare-and-swap the 16-byte pair at `dst` (which MUST be
+/// 16-byte aligned and point at two consecutive `AtomicU64`s).
+///
+/// Returns `(observed_lo, observed_hi, success)`.
+///
+/// # Safety
+/// `dst` must be valid, 16-byte aligned, and only ever accessed through
+/// atomic operations (as the pool's `CacheLine` storage guarantees).
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn cas128(
+    dst: *const AtomicU64,
+    old_lo: u64,
+    old_hi: u64,
+    new_lo: u64,
+    new_hi: u64,
+) -> (u64, u64, bool) {
+    debug_assert_eq!(dst as usize % 16, 0, "cas128 target must be 16B aligned");
+    let mut out_lo = old_lo;
+    let mut out_hi = old_hi;
+    let ok: u8;
+    // Every operand is pinned to an explicit register: the generic `reg`
+    // class may hand out rbx, which we must borrow for cmpxchg16b's B
+    // operand (it cannot be named as an asm operand — LLVM reserves it —
+    // hence the xchg save/restore through rsi).
+    std::arch::asm!(
+        "xchg rbx, rsi",
+        "lock cmpxchg16b [rdi]",
+        "mov rbx, rsi",
+        "setz r8b",
+        in("rdi") dst,
+        inout("rsi") new_lo => _,
+        in("rcx") new_hi,
+        inout("rax") out_lo,
+        inout("rdx") out_hi,
+        out("r8b") ok,
+        options(nostack),
+    );
+    (out_lo, out_hi, ok != 0)
+}
+
+/// Atomically read the 16-byte pair at `dst` (via a cmpxchg16b with
+/// impossible-to-match... actually with whatever is read back: a failed
+/// `lock cmpxchg16b` writes the current value into rdx:rax, giving an
+/// atomic 128-bit load).
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn load128(dst: *const AtomicU64) -> (u64, u64) {
+    // cmpxchg16b with expected == desired == 0: if the slot IS zero it
+    // "succeeds" by writing zero (no visible change); otherwise it fails and
+    // returns the current contents. Either way we get an atomic snapshot.
+    let (lo, hi, _) = cas128(dst, 0, 0, 0, 0);
+    (lo, hi)
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+mod fallback {
+    //! Seqlock-striped fallback for non-x86-64 hosts.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    const STRIPES: usize = 64;
+    static LOCKS: [Mutex<()>; STRIPES] = [const { Mutex::new(()) }; STRIPES];
+
+    fn stripe(dst: *const AtomicU64) -> &'static Mutex<()> {
+        &LOCKS[(dst as usize >> 4) % STRIPES]
+    }
+
+    pub unsafe fn cas128(
+        dst: *const AtomicU64,
+        old_lo: u64,
+        old_hi: u64,
+        new_lo: u64,
+        new_hi: u64,
+    ) -> (u64, u64, bool) {
+        let _g = stripe(dst).lock().unwrap();
+        let lo = &*dst;
+        let hi = &*dst.add(1);
+        let cl = lo.load(Ordering::SeqCst);
+        let ch = hi.load(Ordering::SeqCst);
+        if cl == old_lo && ch == old_hi {
+            lo.store(new_lo, Ordering::SeqCst);
+            hi.store(new_hi, Ordering::SeqCst);
+            (cl, ch, true)
+        } else {
+            (cl, ch, false)
+        }
+    }
+
+    pub unsafe fn load128(dst: *const AtomicU64) -> (u64, u64) {
+        let _g = stripe(dst).lock().unwrap();
+        ((*dst).load(Ordering::SeqCst), (*dst.add(1)).load(Ordering::SeqCst))
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub use fallback::{cas128, load128};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[repr(align(16))]
+    struct Pair([AtomicU64; 2]);
+
+    #[test]
+    fn cas_success_and_failure() {
+        let p = Pair([AtomicU64::new(1), AtomicU64::new(2)]);
+        let d = p.0.as_ptr();
+        unsafe {
+            let (lo, hi, ok) = cas128(d, 1, 2, 10, 20);
+            assert!(ok);
+            assert_eq!((lo, hi), (1, 2));
+            assert_eq!(p.0[0].load(Ordering::SeqCst), 10);
+            assert_eq!(p.0[1].load(Ordering::SeqCst), 20);
+
+            // Mismatch: no change, observed values returned.
+            let (lo, hi, ok) = cas128(d, 1, 2, 99, 99);
+            assert!(!ok);
+            assert_eq!((lo, hi), (10, 20));
+            assert_eq!(p.0[0].load(Ordering::SeqCst), 10);
+        }
+    }
+
+    #[test]
+    fn cas_half_match_fails() {
+        let p = Pair([AtomicU64::new(5), AtomicU64::new(6)]);
+        unsafe {
+            // lo matches, hi doesn't.
+            let (_, _, ok) = cas128(p.0.as_ptr(), 5, 0, 1, 1);
+            assert!(!ok);
+            assert_eq!(p.0[0].load(Ordering::SeqCst), 5);
+            assert_eq!(p.0[1].load(Ordering::SeqCst), 6);
+        }
+    }
+
+    #[test]
+    fn atomic_load() {
+        let p = Pair([AtomicU64::new(0xAAAA), AtomicU64::new(0xBBBB)]);
+        unsafe {
+            assert_eq!(load128(p.0.as_ptr()), (0xAAAA, 0xBBBB));
+        }
+        let z = Pair([AtomicU64::new(0), AtomicU64::new(0)]);
+        unsafe {
+            assert_eq!(load128(z.0.as_ptr()), (0, 0));
+        }
+    }
+
+    #[test]
+    fn concurrent_cas_is_atomic() {
+        // Two threads CAS-increment both halves in lockstep; the pair must
+        // never tear (lo != hi would indicate a torn update).
+        use std::sync::Arc;
+        let p = Arc::new(Pair([AtomicU64::new(0), AtomicU64::new(0)]));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let p = Arc::clone(&p);
+            handles.push(std::thread::spawn(move || {
+                let d = p.0.as_ptr();
+                for _ in 0..10_000 {
+                    loop {
+                        let (lo, hi) = unsafe { load128(d) };
+                        assert_eq!(lo, hi, "torn pair observed");
+                        let (_, _, ok) = unsafe { cas128(d, lo, hi, lo + 1, hi + 1) };
+                        if ok {
+                            break;
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (lo, hi) = unsafe { load128(p.0.as_ptr()) };
+        assert_eq!(lo, 20_000);
+        assert_eq!(hi, 20_000);
+    }
+}

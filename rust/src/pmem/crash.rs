@@ -1,0 +1,126 @@
+//! Crash signalling: how simulated full-system failures interrupt worker
+//! threads *in the middle of an operation*.
+//!
+//! Every pmem primitive polls the pool's crash flag; once set, the primitive
+//! unwinds the calling thread with a [`CrashSignal`] panic payload. Worker
+//! loops run their workload inside [`run_guarded`], which converts that
+//! unwind into [`RunOutcome::Crashed`]. Because the check sits inside the
+//! primitives themselves, threads stop at *arbitrary points within* enqueue/
+//! dequeue — between a successful `CAS` and its `pwb`, between `TAS(Tail.cb)`
+//! and persisting the closed bit, etc. — exactly the windows the paper's
+//! durable-linearizability proofs reason about (§4, Scenarios 1–3).
+
+/// Panic payload identifying a simulated crash (not a real bug).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashSignal {
+    /// Thread that observed the crash flag.
+    pub tid: usize,
+}
+
+/// Result of running a guarded workload closure.
+#[derive(Debug)]
+pub enum RunOutcome<T> {
+    /// The closure finished normally.
+    Completed(T),
+    /// The closure was interrupted by a simulated crash.
+    Crashed { tid: usize },
+}
+
+impl<T> RunOutcome<T> {
+    pub fn crashed(&self) -> bool {
+        matches!(self, RunOutcome::Crashed { .. })
+    }
+
+    pub fn unwrap_completed(self) -> T {
+        match self {
+            RunOutcome::Completed(t) => t,
+            RunOutcome::Crashed { tid } => {
+                panic!("expected completion but thread {tid} crashed")
+            }
+        }
+    }
+}
+
+/// Run `f`, converting a [`CrashSignal`] unwind into
+/// [`RunOutcome::Crashed`]. Real panics (bugs) are resumed.
+///
+/// The closure is wrapped in `AssertUnwindSafe`: a simulated crash leaves
+/// the pool's live state arbitrary by design, and the subsequent
+/// [`super::PmemPool::crash`] call normalizes it (live := shadow), so the
+/// usual unwind-safety concern (observing broken invariants) does not apply.
+pub fn run_guarded<T>(f: impl FnOnce() -> T) -> RunOutcome<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(t) => RunOutcome::Completed(t),
+        Err(payload) => {
+            if let Some(sig) = payload.downcast_ref::<CrashSignal>() {
+                RunOutcome::Crashed { tid: sig.tid }
+            } else {
+                // Not a simulated crash: propagate the real panic.
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
+/// Install a panic hook that silences [`CrashSignal`] unwinds (they are
+/// expected control flow during crash cycles) while keeping default
+/// reporting for real panics. Call once from harness/bench entry points.
+pub fn install_quiet_crash_hook() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<CrashSignal>().is_some() {
+                return; // expected simulated crash — stay quiet
+            }
+            default(info);
+        }));
+    });
+}
+
+/// Unwind the current thread with a crash signal. Called by pool primitives.
+#[cold]
+#[inline(never)]
+pub(crate) fn raise_crash(tid: usize) -> ! {
+    std::panic::panic_any(CrashSignal { tid })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guarded_completion() {
+        let r = run_guarded(|| 42);
+        assert!(!r.crashed());
+        assert_eq!(r.unwrap_completed(), 42);
+    }
+
+    #[test]
+    fn guarded_crash() {
+        install_quiet_crash_hook();
+        let r = run_guarded(|| -> u32 { raise_crash(3) });
+        match r {
+            RunOutcome::Crashed { tid } => assert_eq!(tid, 3),
+            _ => panic!("expected crash"),
+        }
+    }
+
+    #[test]
+    fn real_panics_propagate() {
+        install_quiet_crash_hook();
+        let res = std::panic::catch_unwind(|| {
+            let _ = run_guarded(|| panic!("real bug"));
+        });
+        assert!(res.is_err(), "non-crash panics must not be swallowed");
+    }
+
+    #[test]
+    #[should_panic(expected = "crashed")]
+    fn unwrap_completed_panics_on_crash() {
+        install_quiet_crash_hook();
+        let r = run_guarded(|| -> u32 { raise_crash(1) });
+        let _ = r.unwrap_completed();
+    }
+}

@@ -1,0 +1,107 @@
+//! Arena addressing and cache-line geometry.
+
+/// Words per simulated cache line (64 bytes / 8-byte words).
+pub const WORDS_PER_LINE: usize = 8;
+
+/// A persistent-arena address: an index of a 64-bit word. All persistent
+/// data structures store **addresses, never Rust pointers**, mirroring
+/// PMDK's base-relative offsets — the arena image alone must be enough to
+/// recover (see DESIGN.md §1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PAddr(pub u32);
+
+/// Sentinel for "null persistent pointer". Word 0 of every pool is reserved
+/// so that address 0 is never a valid allocation.
+pub const PNULL: PAddr = PAddr(0);
+
+impl PAddr {
+    /// Word index.
+    #[inline]
+    pub fn word(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Line index containing this word.
+    #[inline]
+    pub fn line(self) -> usize {
+        self.0 as usize / WORDS_PER_LINE
+    }
+
+    /// Offset of this word within its line.
+    #[inline]
+    pub fn offset_in_line(self) -> usize {
+        self.0 as usize % WORDS_PER_LINE
+    }
+
+    /// Address `k` words after this one.
+    #[inline]
+    pub fn add(self, k: usize) -> PAddr {
+        PAddr(self.0 + k as u32)
+    }
+
+    /// Is this the null address?
+    #[inline]
+    pub fn is_null(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Raw u64 for storing a persistent pointer inside a persistent word.
+    #[inline]
+    pub fn to_u64(self) -> u64 {
+        self.0 as u64
+    }
+
+    /// Reconstruct from a persistent word value.
+    #[inline]
+    pub fn from_u64(v: u64) -> PAddr {
+        PAddr(v as u32)
+    }
+}
+
+/// A 64-byte-aligned group of 8 atomic words — the unit of `pwb` and of
+/// crash-time eviction. `#[repr(align(64))]` guarantees real cache-line
+/// alignment so that simulated-line contention is also real contention.
+#[repr(align(64))]
+pub struct CacheLine(pub [std::sync::atomic::AtomicU64; WORDS_PER_LINE]);
+
+impl CacheLine {
+    pub fn zeroed() -> Self {
+        CacheLine(std::array::from_fn(|_| std::sync::atomic::AtomicU64::new(0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_geometry() {
+        let a = PAddr(17);
+        assert_eq!(a.word(), 17);
+        assert_eq!(a.line(), 2);
+        assert_eq!(a.offset_in_line(), 1);
+        assert_eq!(a.add(7).word(), 24);
+        assert_eq!(a.add(7).line(), 3);
+    }
+
+    #[test]
+    fn null_sentinel() {
+        assert!(PNULL.is_null());
+        assert!(!PAddr(1).is_null());
+        assert_eq!(PAddr::from_u64(PNULL.to_u64()), PNULL);
+    }
+
+    #[test]
+    fn cache_line_alignment() {
+        assert_eq!(std::mem::size_of::<CacheLine>(), 64);
+        assert_eq!(std::mem::align_of::<CacheLine>(), 64);
+        let boxed = CacheLine::zeroed();
+        assert_eq!(&boxed as *const _ as usize % 64, 0);
+    }
+
+    #[test]
+    fn roundtrip_u64() {
+        let a = PAddr(12345);
+        assert_eq!(PAddr::from_u64(a.to_u64()), a);
+    }
+}

@@ -1,0 +1,95 @@
+//! Simulated persistent-memory (NVM) substrate.
+//!
+//! Implements the paper's *explicit epoch persistency* model (§2) on DRAM:
+//!
+//! * A [`PmemPool`] is an arena of 64-bit words grouped into 64-byte lines.
+//!   Every line has a **live** copy (what concurrent threads read/write — the
+//!   "cache/DRAM" view) and a **shadow** copy (the NVM view — what survives a
+//!   crash).
+//! * [`PmemPool::pwb`] *requests* a write-back of a line (asynchronous: the
+//!   flush is queued per-thread); [`PmemPool::pfence`] orders queued flushes;
+//!   [`PmemPool::psync`] blocks until the calling thread's queued flushes are
+//!   realized (live → shadow).
+//! * [`PmemPool::crash`] simulates a full-system crash failure: worker
+//!   threads unwind mid-operation (see [`crash`]), each still-pending or
+//!   dirty line is written back with a configurable probability (modelling
+//!   uncontrolled cache eviction — the paper's footnote 3), and then all
+//!   live state is reset from the shadow (volatile contents are lost).
+//!
+//! ## Virtual-time metering
+//!
+//! The testbed has one physical core, so wall-clock cannot reproduce the
+//! paper's scaling curves. Instead every primitive charges a calibrated cost
+//! (see [`latency::CostModel`]) to the calling thread's **virtual clock**,
+//! and every line carries a **stamp** — the virtual time of its last
+//! writer/flusher. RMWs and loads join (`max`) the line stamp into the
+//! caller's clock; RMWs, stores and flushes publish the caller's clock back
+//! to the stamp. This is a Lamport-clock construction: serialization on a
+//! contended line (e.g. `FAI(Head)`) shows up as a serial chain of stamps,
+//! so *simulated throughput = ops / max-thread-virtual-time* exhibits
+//! exactly the contention behaviour the paper measures (a `pwb` on a hot
+//! line inserts its latency into every contender's critical path; a `pwb`
+//! on a single-writer line costs only its owner).
+
+pub mod atomic128;
+pub mod crash;
+pub mod latency;
+pub mod layout;
+pub mod pool;
+pub mod stats;
+
+pub use crash::{run_guarded, CrashSignal, RunOutcome};
+pub use latency::{CostModel, MeterMode};
+pub use layout::{PAddr, WORDS_PER_LINE};
+pub use pool::{Hotness, PmemPool, MAX_THREADS};
+pub use stats::{OpCounters, PoolStats};
+
+/// Pool-wide configuration.
+#[derive(Clone, Debug)]
+pub struct PmemConfig {
+    /// Arena capacity in 64-bit words (live + shadow each this size).
+    pub capacity_words: usize,
+    /// Cost model for virtual-time metering.
+    pub cost: CostModel,
+    /// Probability that a *dirty, un-flushed* line is nonetheless written
+    /// back at crash time (uncontrolled cache eviction).
+    pub evict_prob: f64,
+    /// Probability that a line whose `pwb` was issued but not yet `psync`ed
+    /// is realized at crash time.
+    pub pending_flush_prob: f64,
+    /// RNG seed for crash nondeterminism (the harness typically re-seeds per
+    /// cycle).
+    pub seed: u64,
+}
+
+impl Default for PmemConfig {
+    fn default() -> Self {
+        Self {
+            capacity_words: 1 << 20, // 8 MiB live + 8 MiB shadow
+            cost: CostModel::default(),
+            evict_prob: 0.25,
+            pending_flush_prob: 0.5,
+            seed: 0x5EED_CAFE,
+        }
+    }
+}
+
+impl PmemConfig {
+    /// Convenience: set capacity (in words).
+    pub fn with_capacity(mut self, words: usize) -> Self {
+        self.capacity_words = words;
+        self
+    }
+
+    /// Convenience: set the cost model.
+    pub fn with_cost(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    /// Convenience: set the seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}

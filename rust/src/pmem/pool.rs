@@ -1,0 +1,1134 @@
+//! The persistent-memory pool: live/shadow word storage, bump allocation,
+//! atomic primitives with virtual-time metering, persistence instructions,
+//! and full-system crash simulation. See module docs in [`super`].
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+
+use crossbeam_utils::CachePadded;
+
+use super::atomic128;
+use super::crash::raise_crash;
+use super::latency::MeterMode;
+use super::layout::{CacheLine, PAddr, WORDS_PER_LINE};
+use super::stats::PoolStats;
+use super::PmemConfig;
+use crate::util::rng::Xoshiro256;
+use crate::util::time::spin_ns;
+
+/// Maximum number of worker threads a pool supports (per-thread slots are
+/// statically sized; the paper evaluates up to 96 threads).
+pub const MAX_THREADS: usize = 128;
+
+/// Declared contention level of a line.
+///
+/// On this single-core testbed, contention cannot be *observed* (OS
+/// scheduling quanta make every line look thread-private while its owner
+/// runs), so data structures declare it — which is exactly the paper's own
+/// analysis: `Head`/`Tail` are touched by **every** thread per operation
+/// (Global); a ring cell is touched by one enqueuer and one dequeuer
+/// (Pairwise, the paper's low-contention claim); `Head_i` local copies are
+/// single-writer single-reader (Private). The effective accessor count is
+/// `min(declared, active_threads)`, so a Global line is uncontended in a
+/// single-threaded run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hotness {
+    /// Single-writer single-reader (same thread or SWSR): no transfers.
+    Private = 0,
+    /// A small, rotating set of accessors (ring cells, announce slots).
+    Pairwise = 1,
+    /// Touched by all active threads (queue endpoints, combining locks).
+    Global = 2,
+}
+
+/// Per-thread pending-flush queue (`pwb` issued, `psync` not yet executed).
+///
+/// Invariant: slot `tid` is only accessed by the thread running as `tid`
+/// while workers are live, and by the single coordinator thread inside
+/// [`PmemPool::crash`] / [`PmemPool::reset_meter`] after all workers have
+/// stopped. This is the standard "exclusive logical owner" pattern.
+struct PendingSlot {
+    lines: UnsafeCell<Vec<u32>>,
+    /// Thread-local xorshift state for mask-decay decisions (not security
+    /// sensitive; just needs to be cheap).
+    decay_rng: UnsafeCell<u64>,
+    /// Recently read lines: (line, stamp at read). A load hitting an entry
+    /// with an unchanged stamp is a cache hit (local cost) — crucially this
+    /// makes spin-waits free until the watched line actually changes, as on
+    /// real hardware. RMW/pwb costs do NOT consult this (they use declared
+    /// hotness): an RMW on a shared line always transfers.
+    read_cache: UnsafeCell<[(u32, u64); READ_CACHE_WAYS]>,
+    read_cursor: UnsafeCell<usize>,
+}
+
+unsafe impl Sync for PendingSlot {}
+
+/// Per-thread recently-read-lines cache size.
+const READ_CACHE_WAYS: usize = 8;
+
+impl PendingSlot {
+    fn new(tid: usize) -> Self {
+        Self {
+            lines: UnsafeCell::new(Vec::with_capacity(16)),
+            decay_rng: UnsafeCell::new(0x9E37_79B9 ^ (tid as u64 + 1)),
+            read_cache: UnsafeCell::new([(u32::MAX, 0); READ_CACHE_WAYS]),
+            read_cursor: UnsafeCell::new(0),
+        }
+    }
+}
+
+/// The simulated-NVM pool. See [`super`] module docs.
+pub struct PmemPool {
+    /// Live (cache/DRAM view) storage, 64-byte aligned lines.
+    live: Box<[CacheLine]>,
+    /// Shadow (NVM view) storage — what survives a crash.
+    shadow: Box<[CacheLine]>,
+    /// Per-line virtual-time stamp of the last writer/flusher.
+    stamps: Box<[AtomicU64]>,
+    /// Per-line recent-accessor bitmask (tid mod 64) — statistics only.
+    masks: Box<[AtomicU64]>,
+    /// Per-line declared contention level (see [`Hotness`]); default
+    /// Pairwise.
+    hot: Box<[std::sync::atomic::AtomicU8]>,
+    /// Active worker thread count (set by the harness; bounds Global
+    /// contention).
+    active_threads: std::sync::atomic::AtomicU32,
+    /// Per-thread virtual clocks (simulated ns).
+    vclocks: Vec<CachePadded<AtomicU64>>,
+    /// Per-thread pending pwb queues.
+    pending: Vec<CachePadded<PendingSlot>>,
+    /// Operation counters.
+    pub stats: PoolStats,
+    /// Bump allocator cursor (word index; word 0 reserved as PNULL).
+    next_word: AtomicUsize,
+    /// Is the crash-step countdown armed?
+    stepping: AtomicBool,
+    /// Remaining primitive steps until crash (valid when `stepping`).
+    steps: AtomicI64,
+    /// Crash flag: once set, every primitive unwinds its caller.
+    crash_flag: AtomicBool,
+    /// Number of crashes so far (epoch counter; epoch k ends with crash k).
+    epoch: AtomicU64,
+    /// Global NVM write-bandwidth chain: every realized flush appends its
+    /// media cost here and joins the flusher — all threads' flushes share
+    /// the DIMMs (the effect that lets batch-flushing combining queues
+    /// save persistence bandwidth).
+    nvm_chain: AtomicU64,
+    cfg: PmemConfig,
+}
+
+impl PmemPool {
+    /// Create a pool with `cfg.capacity_words` words of persistent memory
+    /// (zero-initialized, zero shadow — i.e. freshly formatted NVM).
+    pub fn new(cfg: PmemConfig) -> Self {
+        let words = cfg.capacity_words.max(WORDS_PER_LINE * 2);
+        let n_lines = words.div_ceil(WORDS_PER_LINE);
+        let mk = |n: usize| -> Box<[CacheLine]> {
+            (0..n).map(|_| CacheLine::zeroed()).collect::<Vec<_>>().into_boxed_slice()
+        };
+        let mk_atoms =
+            |n: usize| -> Box<[AtomicU64]> { (0..n).map(|_| AtomicU64::new(0)).collect() };
+        Self {
+            live: mk(n_lines),
+            shadow: mk(n_lines),
+            stamps: mk_atoms(n_lines),
+            masks: mk_atoms(n_lines),
+            hot: (0..n_lines)
+                .map(|_| std::sync::atomic::AtomicU8::new(Hotness::Pairwise as u8))
+                .collect(),
+            active_threads: std::sync::atomic::AtomicU32::new(2),
+            vclocks: (0..MAX_THREADS).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            pending: (0..MAX_THREADS).map(|t| CachePadded::new(PendingSlot::new(t))).collect(),
+            stats: PoolStats::new(MAX_THREADS),
+            next_word: AtomicUsize::new(1), // word 0 = PNULL, reserved
+            stepping: AtomicBool::new(false),
+            steps: AtomicI64::new(i64::MAX),
+            crash_flag: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
+            nvm_chain: AtomicU64::new(0),
+            cfg,
+        }
+    }
+
+    /// The pool configuration.
+    pub fn config(&self) -> &PmemConfig {
+        &self.cfg
+    }
+
+    /// Current crash epoch (number of crashes so far).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------------------
+    // Allocation
+    // ------------------------------------------------------------------
+
+    /// Bump-allocate `n` words aligned to `align` words. Panics (hard error,
+    /// not a simulated crash) on exhaustion — size the pool via
+    /// `PmemConfig::capacity_words`.
+    pub fn alloc(&self, n: usize, align: usize) -> PAddr {
+        assert!(n > 0);
+        let align = align.max(1);
+        assert!(align.is_power_of_two(), "alignment must be a power of two");
+        loop {
+            let cur = self.next_word.load(Ordering::Relaxed);
+            let start = (cur + align - 1) & !(align - 1);
+            let end = start + n;
+            assert!(
+                end <= self.live.len() * WORDS_PER_LINE,
+                "pmem pool exhausted: need {} words past cursor {}, capacity {} — raise \
+                 PmemConfig::capacity_words",
+                n,
+                cur,
+                self.live.len() * WORDS_PER_LINE
+            );
+            if self
+                .next_word
+                .compare_exchange_weak(cur, end, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return PAddr(start as u32);
+            }
+        }
+    }
+
+    /// Allocate one word.
+    pub fn alloc_word(&self) -> PAddr {
+        self.alloc(1, 1)
+    }
+
+    /// Allocate a 16-byte-aligned pair (for `cas2` cells).
+    pub fn alloc_pair(&self) -> PAddr {
+        self.alloc(2, 2)
+    }
+
+    /// Allocate a whole number of fresh cache lines (line-aligned) — used
+    /// for variables that must not share a line with anything else (e.g.
+    /// `Head`, `Tail`, per-thread `Head_i` slots).
+    pub fn alloc_lines(&self, lines: usize) -> PAddr {
+        self.alloc(lines * WORDS_PER_LINE, WORDS_PER_LINE)
+    }
+
+    /// Words currently allocated.
+    pub fn used_words(&self) -> usize {
+        self.next_word.load(Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------------------
+    // Crash-step plumbing
+    // ------------------------------------------------------------------
+
+    /// Arm the crash countdown: after `steps` further pmem primitives
+    /// (across all threads), the crash flag is raised and every thread
+    /// unwinds at its next primitive. This implements the paper's
+    /// `recovery_steps` failure framework (§5) at primitive granularity.
+    pub fn arm_crash_after(&self, steps: u64) {
+        self.steps.store(steps.min(i64::MAX as u64) as i64, Ordering::SeqCst);
+        self.stepping.store(true, Ordering::SeqCst);
+    }
+
+    /// Raise the crash flag immediately.
+    pub fn crash_now(&self) {
+        self.crash_flag.store(true, Ordering::SeqCst);
+    }
+
+    /// Is the crash flag currently raised?
+    pub fn crash_pending(&self) -> bool {
+        self.crash_flag.load(Ordering::Relaxed)
+    }
+
+    /// The primitive-entry check: countdown + unwind once crashed.
+    #[inline]
+    fn step(&self, tid: usize) {
+        if self.stepping.load(Ordering::Relaxed) {
+            if self.steps.fetch_sub(1, Ordering::Relaxed) <= 1 {
+                self.crash_flag.store(true, Ordering::SeqCst);
+            }
+            if self.crash_flag.load(Ordering::Relaxed) {
+                raise_crash(tid);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Virtual-time metering internals
+    // ------------------------------------------------------------------
+
+    /// Read thread `tid`'s virtual clock (simulated ns).
+    #[inline]
+    pub fn vtime(&self, tid: usize) -> u64 {
+        self.vclocks[tid].load(Ordering::Relaxed)
+    }
+
+    /// Maximum virtual clock across threads — the simulated makespan.
+    pub fn max_vtime(&self) -> u64 {
+        self.vclocks.iter().map(|c| c.load(Ordering::Relaxed)).max().unwrap_or(0)
+    }
+
+    /// Zero all virtual clocks, line stamps, masks and counters (bench
+    /// phase boundary). Must not race with workers.
+    pub fn reset_meter(&self) {
+        for c in &self.vclocks {
+            c.store(0, Ordering::Relaxed);
+        }
+        for s in self.stamps.iter() {
+            s.store(0, Ordering::Relaxed);
+        }
+        for m in self.masks.iter() {
+            m.store(0, Ordering::Relaxed);
+        }
+        self.nvm_chain.store(0, Ordering::Relaxed);
+        self.stats.reset();
+    }
+
+    /// Join the line stamp into the caller's clock, add `cost`, and return
+    /// the caller's new clock value.
+    #[inline]
+    fn join_charge(&self, tid: usize, line: usize, cost: u64) -> u64 {
+        let own = self.vclocks[tid].load(Ordering::Relaxed);
+        let stamp = self.stamps[line].load(Ordering::Relaxed);
+        let t = own.max(stamp) + cost;
+        self.vclocks[tid].store(t, Ordering::Relaxed);
+        t
+    }
+
+    /// Declare the contention level of all lines covering `words` words
+    /// starting at `a`. Data structures call this at construction (see
+    /// [`Hotness`]).
+    pub fn set_hot(&self, a: PAddr, words: usize, h: Hotness) {
+        let first = a.line();
+        let last = a.add(words.saturating_sub(1)).line();
+        for line in first..=last {
+            self.hot[line].store(h as u8, Ordering::Relaxed);
+        }
+    }
+
+    /// Set the number of active worker threads (harness calls this before
+    /// a run; bounds the contention of Global lines).
+    pub fn set_active_threads(&self, n: usize) {
+        self.active_threads.store(n.max(1) as u32, Ordering::Relaxed);
+    }
+
+    /// Effective accessor count of a line: `min(declared, active_threads)`.
+    #[inline]
+    fn k_of(&self, line: usize) -> u32 {
+        let active = self.active_threads.load(Ordering::Relaxed);
+        match self.hot[line].load(Ordering::Relaxed) {
+            x if x == Hotness::Private as u8 => 1,
+            x if x == Hotness::Pairwise as u8 => 2.min(active),
+            _ => active,
+        }
+    }
+
+    /// Is a coherence transfer charged for accessing this line?
+    #[inline]
+    fn is_remote(&self, _tid: usize, line: usize) -> bool {
+        self.k_of(line) > 1
+    }
+
+    /// Update the caller's cache entry for `line` to `stamp` (after the
+    /// caller itself wrote/flushed it).
+    #[inline]
+    fn refresh_cache(&self, tid: usize, line: usize, stamp: u64) {
+        unsafe {
+            let cache = &mut *self.pending[tid].read_cache.get();
+            for e in cache.iter_mut() {
+                if e.0 == line as u32 {
+                    e.1 = stamp;
+                    return;
+                }
+            }
+            let cur = &mut *self.pending[tid].read_cursor.get();
+            cache[*cur] = (line as u32, stamp);
+            *cur = (*cur + 1) % READ_CACHE_WAYS;
+        }
+    }
+
+    /// Load/store remoteness: shared line AND not in the caller's cache
+    /// with an unchanged stamp (spinning on an unchanged line, or writing
+    /// a line you already own, is a cache hit).
+    #[inline]
+    fn load_remote(&self, tid: usize, line: usize) -> bool {
+        if self.k_of(line) == 1 {
+            return false;
+        }
+        let stamp = self.stamps[line].load(Ordering::Relaxed);
+        let slot = &self.pending[tid];
+        unsafe {
+            let cache = &mut *slot.read_cache.get();
+            for e in cache.iter_mut() {
+                if e.0 == line as u32 {
+                    let hit = e.1 == stamp;
+                    e.1 = stamp;
+                    return !hit;
+                }
+            }
+            let cur = &mut *slot.read_cursor.get();
+            cache[*cur] = (line as u32, stamp);
+            *cur = (*cur + 1) % READ_CACHE_WAYS;
+        }
+        true
+    }
+
+    /// Charge `cost` to the caller without touching any line.
+    #[inline]
+    fn charge(&self, tid: usize, cost: u64) -> u64 {
+        let t = self.vclocks[tid].load(Ordering::Relaxed) + cost;
+        self.vclocks[tid].store(t, Ordering::Relaxed);
+        t
+    }
+
+    /// Publish the caller's clock to the line stamp (release side of the
+    /// Lamport construction).
+    #[inline]
+    fn publish(&self, line: usize, t: u64) {
+        self.stamps[line].fetch_max(t, Ordering::Relaxed);
+    }
+
+    /// Update the line's accessor mask, returning the number of distinct
+    /// recent accessors including the caller. Occasionally decays the mask
+    /// so stale accessors age out. (Debug/inspection only — costs come
+    /// from declared hotness; see `k_of`.)
+    #[allow(dead_code)]
+    #[inline]
+    fn touch_mask(&self, tid: usize, line: usize) -> u32 {
+        let bit = 1u64 << (tid % 64);
+        let slot = &self.pending[tid];
+        // Cheap thread-local xorshift to decide decay (~1/64 of touches).
+        let decay = unsafe {
+            let s = &mut *slot.decay_rng.get();
+            *s ^= *s << 13;
+            *s ^= *s >> 7;
+            *s ^= *s << 17;
+            (*s & 63) == 0
+        };
+        if decay {
+            self.masks[line].store(bit, Ordering::Relaxed);
+            1
+        } else {
+            let prev = self.masks[line].fetch_or(bit, Ordering::Relaxed);
+            (prev | bit).count_ones()
+        }
+    }
+
+    /// Historical distinct-accessor estimate (statistics/debug only).
+    #[allow(dead_code)]
+    #[inline]
+    fn line_accessors(&self, line: usize) -> u32 {
+        self.masks[line].load(Ordering::Relaxed).count_ones().max(1)
+    }
+
+    // ------------------------------------------------------------------
+    // Word access helpers
+    // ------------------------------------------------------------------
+
+    #[inline]
+    fn word(&self, a: PAddr) -> &AtomicU64 {
+        &self.live[a.line()].0[a.offset_in_line()]
+    }
+
+    #[inline]
+    fn shadow_word(&self, a: PAddr) -> &AtomicU64 {
+        &self.shadow[a.line()].0[a.offset_in_line()]
+    }
+
+    // ------------------------------------------------------------------
+    // Primitives (paper §2): read/write, FAI, GET&SET, CAS, CAS2, TAS
+    // ------------------------------------------------------------------
+
+    /// Atomic 64-bit load.
+    #[inline]
+    pub fn load(&self, tid: usize, a: PAddr) -> u64 {
+        self.step(tid);
+        self.stats.of(tid).load();
+        let line = a.line();
+        let remote = self.load_remote(tid, line);
+        let v = self.word(a).load(Ordering::Acquire);
+        self.join_charge(tid, line, self.cfg.cost.load_cost(remote));
+        v
+    }
+
+    /// Atomic 64-bit store (release).
+    #[inline]
+    pub fn store(&self, tid: usize, a: PAddr, v: u64) {
+        self.step(tid);
+        self.stats.of(tid).store();
+        let line = a.line();
+        // A store to a line we still hold (unchanged stamp) is local; a
+        // line someone else touched needs an RFO transfer.
+        let remote = self.load_remote(tid, line);
+        if remote {
+            self.stats.of(tid).conflict(1);
+        }
+        self.word(a).store(v, Ordering::Release);
+        let t = self.join_charge(tid, line, self.cfg.cost.store_cost(remote));
+        self.publish(line, t);
+        self.refresh_cache(tid, line, self.stamps[line].load(Ordering::Relaxed));
+    }
+
+    /// Shared RMW bookkeeping: conflict counting, vclock chain.
+    /// `remote` must be sampled BEFORE the RMW executes (the RMW itself
+    /// advances the stamp).
+    ///
+    /// RMWs grow the line stamp by **their cost only** (`fetch_add`): the
+    /// stamp is the line's cumulative serialization ("handoff") time, so
+    /// concurrent RMWs on a hot spot queue behind one another — without
+    /// dragging each thread's whole local timeline into the chain. (A
+    /// max-join here would let one thread's scheduling quantum serialize
+    /// every reader's virtual time on this 1-core testbed — see DESIGN.md
+    /// §1.) Stores, by contrast, publish the writer's full clock: they are
+    /// the release edges spin-waiters synchronize on (combining handoffs).
+    #[inline]
+    fn rmw_meter(&self, tid: usize, line: usize, remote: bool) {
+        if remote {
+            self.stats.of(tid).conflict(1);
+        }
+        let cost = self.cfg.cost.rmw_cost(remote);
+        let chain = self.stamps[line].fetch_add(cost, Ordering::Relaxed) + cost;
+        let own = self.vclocks[tid].load(Ordering::Relaxed) + cost;
+        self.vclocks[tid].store(own.max(chain), Ordering::Relaxed);
+    }
+
+    /// FETCH&INCREMENT — returns the previous value (paper §2a).
+    #[inline]
+    pub fn fai(&self, tid: usize, a: PAddr) -> u64 {
+        self.fetch_add(tid, a, 1)
+    }
+
+    /// FETCH&ADD of `k`.
+    #[inline]
+    pub fn fetch_add(&self, tid: usize, a: PAddr, k: u64) -> u64 {
+        self.step(tid);
+        self.stats.of(tid).rmw();
+        let remote = self.is_remote(tid, a.line());
+        let v = self.word(a).fetch_add(k, Ordering::AcqRel);
+        self.rmw_meter(tid, a.line(), remote);
+        v
+    }
+
+    /// GET&SET — store `v`, return previous value (paper §2b).
+    #[inline]
+    pub fn swap(&self, tid: usize, a: PAddr, v: u64) -> u64 {
+        self.step(tid);
+        self.stats.of(tid).rmw();
+        let remote = self.is_remote(tid, a.line());
+        let old = self.word(a).swap(v, Ordering::AcqRel);
+        self.rmw_meter(tid, a.line(), remote);
+        old
+    }
+
+    /// Bitwise OR, returns previous value (used for TEST&SET on flag bits).
+    #[inline]
+    pub fn fetch_or(&self, tid: usize, a: PAddr, bits: u64) -> u64 {
+        self.step(tid);
+        self.stats.of(tid).rmw();
+        let remote = self.is_remote(tid, a.line());
+        let old = self.word(a).fetch_or(bits, Ordering::AcqRel);
+        self.rmw_meter(tid, a.line(), remote);
+        old
+    }
+
+    /// Bitwise AND, returns previous value (used for RESET on flag bits).
+    #[inline]
+    pub fn fetch_and(&self, tid: usize, a: PAddr, bits: u64) -> u64 {
+        self.step(tid);
+        self.stats.of(tid).rmw();
+        let remote = self.is_remote(tid, a.line());
+        let old = self.word(a).fetch_and(bits, Ordering::AcqRel);
+        self.rmw_meter(tid, a.line(), remote);
+        old
+    }
+
+    /// COMPARE&SWAP (paper §2c). Returns `true` on success.
+    #[inline]
+    pub fn cas(&self, tid: usize, a: PAddr, old: u64, new: u64) -> bool {
+        self.step(tid);
+        self.stats.of(tid).rmw();
+        let remote = self.is_remote(tid, a.line());
+        let ok = self
+            .word(a)
+            .compare_exchange(old, new, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok();
+        if !ok {
+            self.stats.of(tid).cas_failure();
+        }
+        // A failed CAS still acquired the line exclusively (RFO) — meter it
+        // the same way.
+        self.rmw_meter(tid, a.line(), remote);
+        ok
+    }
+
+    /// CAS2 — 128-bit compare-and-swap over the 16-byte-aligned pair at `a`
+    /// (paper §2: operates atomically on an array of two elements).
+    /// Returns `true` on success.
+    #[inline]
+    pub fn cas2(&self, tid: usize, a: PAddr, old: (u64, u64), new: (u64, u64)) -> bool {
+        debug_assert_eq!(a.word() % 2, 0, "cas2 target must be 16B aligned");
+        debug_assert!(a.offset_in_line() + 1 < WORDS_PER_LINE || a.offset_in_line() % 2 == 0);
+        self.step(tid);
+        self.stats.of(tid).rmw();
+        let remote = self.is_remote(tid, a.line());
+        let ptr = self.word(a) as *const AtomicU64;
+        let (_, _, ok) = unsafe { atomic128::cas128(ptr, old.0, old.1, new.0, new.1) };
+        if !ok {
+            self.stats.of(tid).cas_failure();
+        }
+        self.rmw_meter(tid, a.line(), remote);
+        ok
+    }
+
+    /// Atomic 128-bit load of the pair at `a` (16-byte aligned).
+    #[inline]
+    pub fn load_pair(&self, tid: usize, a: PAddr) -> (u64, u64) {
+        debug_assert_eq!(a.word() % 2, 0);
+        self.step(tid);
+        self.stats.of(tid).load();
+        let line = a.line();
+        let remote = self.load_remote(tid, line);
+        let ptr = self.word(a) as *const AtomicU64;
+        let v = unsafe { atomic128::load128(ptr) };
+        self.join_charge(tid, line, self.cfg.cost.load_cost(remote));
+        v
+    }
+
+    /// TEST&SET on bit `bit` of the word at `a`; returns the bit's previous
+    /// value (paper §2).
+    #[inline]
+    pub fn tas_bit(&self, tid: usize, a: PAddr, bit: u32) -> bool {
+        let old = self.fetch_or(tid, a, 1u64 << bit);
+        old & (1u64 << bit) != 0
+    }
+
+    /// RESET of bit `bit` at `a` (paper §2 companion to TEST&SET).
+    #[inline]
+    pub fn reset_bit(&self, tid: usize, a: PAddr, bit: u32) {
+        let _ = self.fetch_and(tid, a, !(1u64 << bit));
+    }
+
+    // ------------------------------------------------------------------
+    // Persistence instructions (paper §2)
+    // ------------------------------------------------------------------
+
+    /// `pwb` — asynchronously request a write-back of the line containing
+    /// `a`. The flush is *queued*; it is realized by the next `psync` (or,
+    /// nondeterministically, by crash-time eviction).
+    pub fn pwb(&self, tid: usize, a: PAddr) {
+        self.step(tid);
+        self.stats.of(tid).pwb();
+        let line = a.line();
+        let k = self.k_of(line);
+        let cost = self.cfg.cost.pwb_cost(k);
+        // The flush occupies the line: its cost joins the line's
+        // serialization chain, so subsequent accessors of a *hot* line
+        // queue behind this flush — the effect Figures 2–3 measure. (Same
+        // cost-only chain growth as RMWs; see rmw_meter.) Flushes also
+        // share the NVM media: every pwb appends to the global bandwidth
+        // chain and waits for it.
+        let chain = self.stamps[line].fetch_add(cost, Ordering::Relaxed) + cost;
+        let media = self.cfg.cost.nvm_flush_ns;
+        let nvm = self.nvm_chain.fetch_add(media, Ordering::Relaxed) + media;
+        let own = self.vclocks[tid].load(Ordering::Relaxed) + cost;
+        self.vclocks[tid].store(own.max(chain).max(nvm), Ordering::Relaxed);
+        if self.cfg.cost.meter == MeterMode::WallclockSpin {
+            spin_ns(cost);
+        }
+        // Queue for the next psync (dedupe: pending sets are tiny).
+        unsafe {
+            let q = &mut *self.pending[tid].lines.get();
+            let l32 = line as u32;
+            if !q.contains(&l32) {
+                q.push(l32);
+            }
+        }
+    }
+
+    /// `pfence` — order preceding `pwb`s before subsequent ones. Flush
+    /// queues are per-thread FIFO in this model, so this only charges time
+    /// (kept for API fidelity; counted separately).
+    pub fn pfence(&self, tid: usize) {
+        self.step(tid);
+        self.stats.of(tid).pfence();
+        self.charge(tid, self.cfg.cost.pfence_ns);
+        if self.cfg.cost.meter == MeterMode::WallclockSpin {
+            spin_ns(self.cfg.cost.pfence_ns);
+        }
+    }
+
+    /// `psync` — block until all of this thread's queued `pwb`s are
+    /// realized (live → shadow).
+    pub fn psync(&self, tid: usize) {
+        self.step(tid);
+        self.stats.of(tid).psync();
+        let drained = unsafe {
+            let q = &mut *self.pending[tid].lines.get();
+            for &line in q.iter() {
+                self.flush_line(line as usize);
+            }
+            let n = q.len();
+            q.clear();
+            n
+        };
+        let cost = self.cfg.cost.psync_cost(drained);
+        self.charge(tid, cost);
+        if self.cfg.cost.meter == MeterMode::WallclockSpin {
+            spin_ns(cost);
+        }
+    }
+
+    /// Copy one line live → shadow (the flush taking effect).
+    fn flush_line(&self, line: usize) {
+        for i in 0..WORDS_PER_LINE {
+            let v = self.live[line].0[i].load(Ordering::Acquire);
+            self.shadow[line].0[i].store(v, Ordering::Release);
+        }
+    }
+
+    /// Persist an address range synchronously (helper for recovery code and
+    /// structure initialization: pwb every line + one psync).
+    pub fn persist_range(&self, tid: usize, a: PAddr, words: usize) {
+        let first = a.line();
+        let last = a.add(words.saturating_sub(1).max(0)).line();
+        for line in first..=last {
+            self.pwb(tid, PAddr((line * WORDS_PER_LINE) as u32));
+        }
+        self.psync(tid);
+    }
+
+    // ------------------------------------------------------------------
+    // Crash + recovery support
+    // ------------------------------------------------------------------
+
+    /// Commit a simulated full-system crash. Call only after all worker
+    /// threads have unwound (the harness joins them first).
+    ///
+    /// 1. Each queued-but-unsynced `pwb` is realized with probability
+    ///    `pending_flush_prob` (flush issued, may or may not have landed).
+    /// 2. Each *dirty* line (live ≠ shadow) is written back with
+    ///    probability `evict_prob` (uncontrolled cache eviction — paper
+    ///    footnote 3).
+    /// 3. All live state is reset from the shadow: volatile contents lost.
+    /// 4. Pending queues, masks and stamps are cleared; the epoch counter
+    ///    is bumped; the crash flag and step countdown are disarmed.
+    pub fn crash(&self, rng: &mut Xoshiro256) {
+        // (1) Pending flushes race the failure.
+        for slot in self.pending.iter() {
+            unsafe {
+                let q = &mut *slot.lines.get();
+                for &line in q.iter() {
+                    if rng.chance(self.cfg.pending_flush_prob) {
+                        self.flush_line(line as usize);
+                    }
+                }
+                q.clear();
+            }
+        }
+        // (2) Background eviction of dirty lines.
+        let used_lines = self.used_words().div_ceil(WORDS_PER_LINE).min(self.live.len());
+        for line in 0..used_lines {
+            if self.cfg.evict_prob > 0.0 && self.line_dirty(line) {
+                if rng.chance(self.cfg.evict_prob) {
+                    self.flush_line(line);
+                }
+            }
+        }
+        // (3) Volatile state dies: live := shadow.
+        for line in 0..used_lines {
+            for i in 0..WORDS_PER_LINE {
+                let v = self.shadow[line].0[i].load(Ordering::Acquire);
+                self.live[line].0[i].store(v, Ordering::Release);
+            }
+        }
+        // (4) Reset metering + crash machinery.
+        for s in self.stamps.iter() {
+            s.store(0, Ordering::Relaxed);
+        }
+        for m in self.masks.iter() {
+            m.store(0, Ordering::Relaxed);
+        }
+        self.nvm_chain.store(0, Ordering::Relaxed);
+        self.stepping.store(false, Ordering::SeqCst);
+        self.steps.store(i64::MAX, Ordering::SeqCst);
+        self.crash_flag.store(false, Ordering::SeqCst);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Is the line containing any of the range dirty (live ≠ shadow)?
+    fn line_dirty(&self, line: usize) -> bool {
+        for i in 0..WORDS_PER_LINE {
+            if self.live[line].0[i].load(Ordering::Acquire)
+                != self.shadow[line].0[i].load(Ordering::Acquire)
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Test/verifier helper: read the *shadow* (NVM) value directly.
+    pub fn read_shadow(&self, a: PAddr) -> u64 {
+        self.shadow_word(a).load(Ordering::Acquire)
+    }
+
+    /// Test helper: is the word's live value unflushed?
+    pub fn is_dirty(&self, a: PAddr) -> bool {
+        self.word(a).load(Ordering::Acquire) != self.shadow_word(a).load(Ordering::Acquire)
+    }
+
+    /// Non-metered, non-crashing raw load — for assertions in tests and for
+    /// the verifier's post-mortem inspection. Never use on algorithm paths.
+    pub fn peek(&self, a: PAddr) -> u64 {
+        self.word(a).load(Ordering::Acquire)
+    }
+
+    /// Non-metered raw store — test setup only.
+    pub fn poke(&self, a: PAddr, v: u64) {
+        self.word(a).store(v, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::crash::{install_quiet_crash_hook, run_guarded};
+    use crate::pmem::latency::CostModel;
+
+    fn pool() -> PmemPool {
+        PmemPool::new(PmemConfig {
+            capacity_words: 1 << 12,
+            cost: CostModel::default(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 1,
+        })
+    }
+
+    #[test]
+    fn alloc_alignment_and_reservation() {
+        let p = pool();
+        let a = p.alloc_word();
+        assert!(!a.is_null(), "word 0 must be reserved");
+        let pair = p.alloc_pair();
+        assert_eq!(pair.word() % 2, 0);
+        let line = p.alloc_lines(1);
+        assert_eq!(line.word() % WORDS_PER_LINE, 0);
+        assert_eq!(line.offset_in_line(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn alloc_exhaustion_panics() {
+        let p = pool();
+        let _ = p.alloc(1 << 13, 1);
+    }
+
+    #[test]
+    fn store_load_roundtrip() {
+        let p = pool();
+        let a = p.alloc_word();
+        p.store(0, a, 0xDEAD);
+        assert_eq!(p.load(0, a), 0xDEAD);
+    }
+
+    #[test]
+    fn rmw_semantics() {
+        let p = pool();
+        let a = p.alloc_word();
+        assert_eq!(p.fai(0, a), 0);
+        assert_eq!(p.fai(0, a), 1);
+        assert_eq!(p.swap(0, a, 100), 2);
+        assert!(p.cas(0, a, 100, 200));
+        assert!(!p.cas(0, a, 100, 300));
+        assert_eq!(p.load(0, a), 200);
+        assert_eq!(p.fetch_add(0, a, 5), 200);
+        assert_eq!(p.load(0, a), 205);
+    }
+
+    #[test]
+    fn tas_and_reset() {
+        let p = pool();
+        let a = p.alloc_word();
+        assert!(!p.tas_bit(0, a, 63));
+        assert!(p.tas_bit(0, a, 63));
+        p.reset_bit(0, a, 63);
+        assert!(!p.tas_bit(0, a, 63));
+    }
+
+    #[test]
+    fn cas2_through_pool() {
+        let p = pool();
+        let a = p.alloc_pair();
+        p.store(0, a, 1);
+        p.store(0, a.add(1), 2);
+        assert!(p.cas2(0, a, (1, 2), (10, 20)));
+        assert_eq!(p.load_pair(0, a), (10, 20));
+        assert!(!p.cas2(0, a, (1, 2), (0, 0)));
+        assert_eq!(p.load_pair(0, a), (10, 20));
+    }
+
+    #[test]
+    fn unpersisted_write_lost_at_crash() {
+        let p = pool();
+        let a = p.alloc_word();
+        p.store(0, a, 42);
+        assert!(p.is_dirty(a));
+        let mut rng = Xoshiro256::seed_from(7);
+        p.crash(&mut rng);
+        assert_eq!(p.load(0, a), 0, "un-pwb'd write must be lost (evict_prob=0)");
+        assert_eq!(p.epoch(), 1);
+    }
+
+    #[test]
+    fn pwb_alone_is_not_durable_without_psync() {
+        // pending_flush_prob = 0: a queued-but-unsynced pwb never lands.
+        let p = pool();
+        let a = p.alloc_word();
+        p.store(0, a, 42);
+        p.pwb(0, a);
+        let mut rng = Xoshiro256::seed_from(7);
+        p.crash(&mut rng);
+        assert_eq!(p.load(0, a), 0, "pwb without psync must not guarantee durability");
+    }
+
+    #[test]
+    fn pwb_psync_is_durable() {
+        let p = pool();
+        let a = p.alloc_word();
+        p.store(0, a, 42);
+        p.pwb(0, a);
+        p.psync(0);
+        assert!(!p.is_dirty(a));
+        let mut rng = Xoshiro256::seed_from(7);
+        p.crash(&mut rng);
+        assert_eq!(p.load(0, a), 42);
+    }
+
+    #[test]
+    fn pending_flush_probability_one_always_lands() {
+        let p = PmemPool::new(PmemConfig {
+            capacity_words: 1 << 12,
+            cost: CostModel::zero(),
+            evict_prob: 0.0,
+            pending_flush_prob: 1.0,
+            seed: 1,
+        });
+        let a = p.alloc_word();
+        p.store(0, a, 7);
+        p.pwb(0, a);
+        let mut rng = Xoshiro256::seed_from(3);
+        p.crash(&mut rng);
+        assert_eq!(p.load(0, a), 7, "pending pwb with prob 1.0 must land at crash");
+    }
+
+    #[test]
+    fn eviction_probability_one_persists_dirty_lines() {
+        let p = PmemPool::new(PmemConfig {
+            capacity_words: 1 << 12,
+            cost: CostModel::zero(),
+            evict_prob: 1.0,
+            pending_flush_prob: 0.0,
+            seed: 1,
+        });
+        let a = p.alloc_word();
+        p.store(0, a, 9); // never pwb'd
+        let mut rng = Xoshiro256::seed_from(3);
+        p.crash(&mut rng);
+        assert_eq!(p.load(0, a), 9, "evict_prob=1.0 must write back dirty lines");
+    }
+
+    #[test]
+    fn flush_is_line_granular() {
+        let p = pool();
+        let base = p.alloc_lines(1);
+        p.store(0, base, 1);
+        p.store(0, base.add(7), 7); // same line, different word
+        p.pwb(0, base); // flushing any word flushes the whole line
+        p.psync(0);
+        assert_eq!(p.read_shadow(base), 1);
+        assert_eq!(p.read_shadow(base.add(7)), 7);
+    }
+
+    #[test]
+    fn crash_step_countdown_unwinds() {
+        install_quiet_crash_hook();
+        let p = pool();
+        let a = p.alloc_word();
+        p.arm_crash_after(5);
+        let out = run_guarded(|| {
+            for i in 0..100u64 {
+                p.store(0, a, i);
+            }
+        });
+        assert!(out.crashed(), "must crash before 100 stores");
+        // The pool unblocks after crash().
+        let mut rng = Xoshiro256::seed_from(1);
+        p.crash(&mut rng);
+        p.store(0, a, 1);
+        assert_eq!(p.load(0, a), 1);
+    }
+
+    #[test]
+    fn vclock_charges_costs() {
+        let p = pool();
+        let a = p.alloc_word();
+        p.set_hot(a, 1, crate::pmem::Hotness::Private);
+        let c = p.config().cost.clone();
+        assert_eq!(p.vtime(0), 0);
+        p.store(0, a, 1);
+        assert_eq!(p.vtime(0), c.store_ns);
+        let _ = p.load(0, a);
+        assert_eq!(p.vtime(0), c.store_ns + c.load_ns);
+        let _ = p.fai(0, a);
+        assert_eq!(p.vtime(0), c.store_ns + c.load_ns + c.rmw_cost(false));
+    }
+
+    #[test]
+    fn hotness_drives_costs() {
+        let p = pool();
+        p.set_active_threads(8);
+        let priv_ = p.alloc_lines(1);
+        let glob = p.alloc_lines(1);
+        p.set_hot(priv_, crate::pmem::WORDS_PER_LINE, crate::pmem::Hotness::Private);
+        p.set_hot(glob, crate::pmem::WORDS_PER_LINE, crate::pmem::Hotness::Global);
+        let c = p.config().cost.clone();
+        let _ = p.fai(0, priv_);
+        assert_eq!(p.vtime(0), c.rmw_cost(false));
+        let _ = p.fai(1, glob);
+        assert_eq!(p.vtime(1), c.rmw_cost(true));
+        // Global pwb pays the hot premium; private pwb does not.
+        let t1 = p.vtime(1);
+        p.pwb(1, glob);
+        assert!(p.vtime(1) - t1 >= c.pwb_cost(8));
+        let t0 = p.vtime(0);
+        p.pwb(0, priv_);
+        assert!(p.vtime(0) - t0 >= c.pwb_cost(1));
+        // With 1 active thread, Global is uncontended.
+        p.set_active_threads(1);
+        p.reset_meter();
+        let _ = p.fai(0, glob);
+        assert_eq!(p.vtime(0), c.rmw_cost(false));
+    }
+
+    #[test]
+    fn vclock_propagates_through_contended_line() {
+        // Thread 0 does expensive work then writes the line; thread 1's
+        // subsequent read must inherit thread 0's clock.
+        let p = pool();
+        let a = p.alloc_word();
+        for _ in 0..100 {
+            let _ = p.fai(0, a);
+        }
+        let t0 = p.vtime(0);
+        assert!(t0 > 0);
+        let _ = p.load(1, a);
+        assert!(
+            p.vtime(1) >= t0,
+            "reader clock {} must catch up to writer clock {}",
+            p.vtime(1),
+            t0
+        );
+    }
+
+    #[test]
+    fn pwb_on_hot_line_serializes_contenders() {
+        // A pwb on a line recently accessed by many threads charges the
+        // hot-line premium AND lands on the line stamp.
+        let p = pool();
+        let a = p.alloc_word();
+        for tid in 0..8 {
+            let _ = p.fai(tid, a);
+        }
+        let before = p.vtime(0);
+        p.pwb(0, a);
+        let cost = p.vtime(0) - before.max(p.vtime(7).min(p.vtime(0)));
+        // Cost must exceed the cold pwb cost (8 accessors recorded, modulo
+        // probabilistic decay which can only lower k to >= 1).
+        assert!(cost >= p.config().cost.pwb_ns);
+        // Another thread touching the line inherits the flush time.
+        let t_flush = p.vtime(0);
+        let _ = p.load(3, a);
+        assert!(p.vtime(3) >= t_flush);
+    }
+
+    #[test]
+    fn swsr_pwb_does_not_affect_other_threads() {
+        let p = pool();
+        let a = p.alloc_lines(1); // exclusive line
+        let b = p.alloc_lines(1);
+        p.set_hot(a, crate::pmem::WORDS_PER_LINE, crate::pmem::Hotness::Private);
+        p.set_hot(b, crate::pmem::WORDS_PER_LINE, crate::pmem::Hotness::Private);
+        p.store(0, a, 1);
+        p.pwb(0, a);
+        p.psync(0);
+        // Thread 1 working on an unrelated line is not delayed.
+        let _ = p.fai(1, b);
+        assert!(p.vtime(1) <= p.config().cost.rmw_cost(false));
+    }
+
+    #[test]
+    fn reset_meter_zeroes_everything() {
+        let p = pool();
+        let a = p.alloc_word();
+        let _ = p.fai(0, a);
+        p.pwb(0, a);
+        p.psync(0);
+        p.reset_meter();
+        assert_eq!(p.vtime(0), 0);
+        assert_eq!(p.max_vtime(), 0);
+        assert_eq!(p.stats.total().pwbs, 0);
+    }
+
+    #[test]
+    fn counters_track_ops() {
+        let p = pool();
+        let a = p.alloc_word();
+        let _ = p.load(2, a);
+        p.store(2, a, 1);
+        let _ = p.fai(2, a);
+        let _ = p.cas(2, a, 999, 0); // fails
+        p.pwb(2, a);
+        p.pfence(2);
+        p.psync(2);
+        let t = p.stats.total();
+        assert_eq!(t.loads, 1);
+        assert_eq!(t.stores, 1);
+        assert_eq!(t.rmws, 2);
+        assert_eq!(t.cas_failures, 1);
+        assert_eq!(t.pwbs, 1);
+        assert_eq!(t.pfences, 1);
+        assert_eq!(t.psyncs, 1);
+    }
+
+    #[test]
+    fn persist_range_covers_all_lines() {
+        let p = pool();
+        let a = p.alloc_lines(3);
+        let words = 3 * WORDS_PER_LINE;
+        for i in 0..words {
+            p.store(0, a.add(i), i as u64 + 1);
+        }
+        p.persist_range(0, a, words);
+        for i in 0..words {
+            assert_eq!(p.read_shadow(a.add(i)), i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn concurrent_fai_is_linearizable_count() {
+        let p = std::sync::Arc::new(pool());
+        let a = p.alloc_word();
+        let mut hs = Vec::new();
+        for tid in 0..4 {
+            let p = std::sync::Arc::clone(&p);
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    let _ = p.fai(tid, a);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(p.load(0, a), 4000);
+    }
+}

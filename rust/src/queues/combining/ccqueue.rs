@@ -1,0 +1,133 @@
+//! CC-Queue — the volatile combining queue of \[6\]: CC-Synch over a
+//! sequential ring, no persistence. Conventional-setting baseline.
+
+use std::sync::Arc;
+
+use super::ccsynch::{CcSynch, CombinerBackend};
+use super::seqring::SeqRing;
+use super::{OP_DEQ, OP_ENQ, RET_EMPTY};
+use crate::pmem::PmemPool;
+use crate::queues::{ConcurrentQueue, QueueError, MAX_ITEM};
+
+struct VolatileRing(SeqRing);
+
+impl CombinerBackend for VolatileRing {
+    fn apply(
+        &self,
+        pool: &PmemPool,
+        tid: usize,
+        op: u64,
+        arg: u64,
+        dirty: &mut Option<(u64, u64)>,
+    ) -> u64 {
+        self.0.apply(pool, tid, op, arg, dirty)
+    }
+
+    fn commit(&self, _pool: &PmemPool, _tid: usize, _dirty: Option<(u64, u64)>) {
+        // Volatile: no persistence.
+    }
+}
+
+pub struct CcQueue {
+    /// Keep-alive handle (operations go through `cc`'s pool).
+    _pool: Arc<PmemPool>,
+    cc: CcSynch,
+    ring: VolatileRing,
+}
+
+impl CcQueue {
+    pub fn new(pool: &Arc<PmemPool>, nthreads: usize) -> Self {
+        Self {
+            _pool: Arc::clone(pool),
+            cc: CcSynch::new(pool, nthreads),
+            ring: VolatileRing(SeqRing::alloc(pool, 1 << 16)),
+        }
+    }
+}
+
+impl ConcurrentQueue for CcQueue {
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        if item >= MAX_ITEM {
+            return Err(QueueError::ItemOutOfRange(item));
+        }
+        let _ = self.cc.run(tid, OP_ENQ, item, &self.ring);
+        Ok(())
+    }
+
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        let r = self.cc.run(tid, OP_DEQ, 0, &self.ring);
+        Ok(if r == RET_EMPTY { None } else { Some(r) })
+    }
+
+    fn name(&self) -> &'static str {
+        "ccqueue"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+
+    fn mk(n: usize) -> CcQueue {
+        let pool = Arc::new(PmemPool::new(
+            PmemConfig::default().with_capacity(1 << 18).with_cost(CostModel::zero()),
+        ));
+        CcQueue::new(&pool, n)
+    }
+
+    #[test]
+    fn fifo() {
+        let q = mk(2);
+        for v in 0..50u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        for v in 0..50u64 {
+            assert_eq!(q.dequeue(1).unwrap(), Some(v));
+        }
+        assert_eq!(q.dequeue(1).unwrap(), None);
+    }
+
+    #[test]
+    fn mpmc_no_loss() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let q = Arc::new(mk(8));
+        let total = 4 * 800u64;
+        let consumed = Arc::new(AtomicU64::new(0));
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut hs = Vec::new();
+        for pid in 0..4usize {
+            let q = Arc::clone(&q);
+            hs.push(std::thread::spawn(move || {
+                for i in 0..800u64 {
+                    q.enqueue(pid, pid as u64 * 10_000 + i).unwrap();
+                }
+            }));
+        }
+        for cid in 0..4usize {
+            let q = Arc::clone(&q);
+            let (consumed, seen) = (Arc::clone(&consumed), Arc::clone(&seen));
+            hs.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while consumed.load(Ordering::Relaxed) < total {
+                    match q.dequeue(4 + cid).unwrap() {
+                        Some(v) => {
+                            got.push(v);
+                            consumed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+                seen.lock().unwrap().extend(got);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let mut all = seen.lock().unwrap().clone();
+        assert_eq!(all.len() as u64, total);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, total);
+    }
+}

@@ -1,0 +1,252 @@
+//! CC-Synch combining protocol (Fatourou & Kallimanis, PPoPP'12 \[6\]).
+//!
+//! Threads swap a fresh node onto a shared combining list tail, publish
+//! their request in the node they received, and spin. The thread whose
+//! node reaches the list head becomes the **combiner**: it walks the list
+//! applying up to `H` requests to the backend, then hands the combiner
+//! role to the next waiter. For persistent backends the combiner applies
+//! the whole batch first, persists once ([`CombinerBackend::commit`]),
+//! and only then releases the batch's waiters — completed operations are
+//! therefore always durable.
+//!
+//! All node state lives in the pool so crash simulation wipes it like the
+//! DRAM it models, and so spin-waits propagate virtual time correctly.
+//!
+//! Node layout (one cache line):
+//! `[next][wait][completed][op][arg][ret][_,_]`.
+
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::pmem::{PAddr, PmemPool};
+
+/// Backend applied under combining.
+pub trait CombinerBackend: Send + Sync {
+    /// Apply one request; `dirty` accumulates batch flush state.
+    fn apply(
+        &self,
+        pool: &PmemPool,
+        tid: usize,
+        op: u64,
+        arg: u64,
+        dirty: &mut Option<(u64, u64)>,
+    ) -> u64;
+
+    /// Persistence point at the end of a batch (no-op for volatile).
+    fn commit(&self, pool: &PmemPool, tid: usize, dirty: Option<(u64, u64)>);
+}
+
+const F_NEXT: usize = 0;
+const F_WAIT: usize = 1;
+const F_DONE: usize = 2;
+const F_OP: usize = 3;
+const F_ARG: usize = 4;
+const F_RET: usize = 5;
+
+/// The combining lock/list.
+pub struct CcSynch {
+    pool: Arc<PmemPool>,
+    /// List tail word.
+    tail: PAddr,
+    /// Each thread's spare node (volatile handle; nodes live in the pool).
+    my_node: Vec<CachePadded<AtomicU64>>,
+    /// All nodes ever allocated (for recovery re-init).
+    nodes: Vec<PAddr>,
+    /// Combining bound: max requests served per combiner stint.
+    h_bound: usize,
+}
+
+impl CcSynch {
+    pub fn new(pool: &Arc<PmemPool>, nthreads: usize) -> Self {
+        let tail = pool.alloc_lines(1);
+        pool.set_hot(tail, 1, crate::pmem::Hotness::Global);
+        // One node per thread + one initial list node.
+        let mut nodes = Vec::with_capacity(nthreads + 1);
+        for _ in 0..=nthreads {
+            nodes.push(pool.alloc_lines(1));
+        }
+        let me = Self {
+            pool: Arc::clone(pool),
+            tail,
+            my_node: (0..nthreads).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            nodes,
+            h_bound: (3 * nthreads).max(8),
+        };
+        me.reset_volatile(nthreads);
+        me
+    }
+
+    /// (Re)initialize the combining list — construction and post-crash.
+    pub fn reset_volatile(&self, nthreads: usize) {
+        let p = &self.pool;
+        for &n in &self.nodes {
+            for f in 0..8 {
+                p.store(0, n.add(f), 0);
+            }
+        }
+        // nodes[nthreads] is the initial placeholder: wait = 0 so the first
+        // arriver combines immediately.
+        let init = self.nodes[nthreads];
+        p.store(0, self.tail, init.to_u64());
+        for t in 0..nthreads {
+            self.my_node[t].store(self.nodes[t].to_u64(), Ordering::Relaxed);
+        }
+    }
+
+    /// Execute `(op, arg)` through the combining protocol; returns the
+    /// response.
+    pub fn run(&self, tid: usize, op: u64, arg: u64, backend: &dyn CombinerBackend) -> u64 {
+        let p = &self.pool;
+        // My spare becomes the new tail placeholder.
+        let next_node = PAddr::from_u64(self.my_node[tid].load(Ordering::Relaxed));
+        p.store(tid, next_node.add(F_WAIT), 1);
+        p.store(tid, next_node.add(F_DONE), 0);
+        p.store(tid, next_node.add(F_NEXT), 0);
+        // Swap onto the list; `cur` is where my request goes.
+        let cur = PAddr::from_u64(p.swap(tid, self.tail, next_node.to_u64()));
+        p.store(tid, cur.add(F_OP), op);
+        p.store(tid, cur.add(F_ARG), arg);
+        p.store(tid, cur.add(F_NEXT), next_node.to_u64());
+        self.my_node[tid].store(cur.to_u64(), Ordering::Relaxed);
+        // Yield once before spinning: on few-core hosts this lets other
+        // requesters publish into the same combining stint, restoring the
+        // batch sizes a many-core machine gets naturally (scheduling hint
+        // only — no semantic effect).
+        std::thread::yield_now();
+        // Spin until served or promoted to combiner.
+        while p.load(tid, cur.add(F_WAIT)) == 1 {
+            std::hint::spin_loop();
+        }
+        if p.load(tid, cur.add(F_DONE)) == 1 {
+            return p.load(tid, cur.add(F_RET));
+        }
+        // --- Combiner ---
+        let mut dirty: Option<(u64, u64)> = None;
+        let mut batch: Vec<PAddr> = Vec::with_capacity(self.h_bound);
+        let mut tmp = cur;
+        let mut served = 0usize;
+        loop {
+            let next = p.load(tid, tmp.add(F_NEXT));
+            if next == 0 || served >= self.h_bound {
+                break;
+            }
+            let o = p.load(tid, tmp.add(F_OP));
+            let a = p.load(tid, tmp.add(F_ARG));
+            let ret = backend.apply(p, tid, o, a, &mut dirty);
+            p.store(tid, tmp.add(F_RET), ret);
+            batch.push(tmp);
+            served += 1;
+            tmp = PAddr::from_u64(next);
+        }
+        // Persist the whole batch BEFORE announcing any completion.
+        backend.commit(p, tid, dirty);
+        let mut my_ret = 0;
+        for &node in &batch {
+            if node == cur {
+                my_ret = p.load(tid, node.add(F_RET));
+                continue; // own node: no need to signal myself
+            }
+            p.store(tid, node.add(F_DONE), 1);
+            p.store(tid, node.add(F_WAIT), 0);
+        }
+        // Hand the combiner role to the next waiter (or release).
+        p.store(tid, tmp.add(F_WAIT), 0);
+        my_ret
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+    use std::sync::Mutex;
+
+    /// Trivial backend: counts applications, echoes arg+op.
+    struct Echo {
+        log: Mutex<Vec<(u64, u64)>>,
+        commits: AtomicU64,
+    }
+
+    impl CombinerBackend for Echo {
+        fn apply(
+            &self,
+            _pool: &PmemPool,
+            _tid: usize,
+            op: u64,
+            arg: u64,
+            _dirty: &mut Option<(u64, u64)>,
+        ) -> u64 {
+            self.log.lock().unwrap().push((op, arg));
+            op * 1000 + arg
+        }
+        fn commit(&self, _pool: &PmemPool, _tid: usize, _dirty: Option<(u64, u64)>) {
+            self.commits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn mk(n: usize) -> (Arc<PmemPool>, CcSynch) {
+        let pool = Arc::new(PmemPool::new(
+            PmemConfig::default().with_capacity(1 << 14).with_cost(CostModel::zero()),
+        ));
+        let cc = CcSynch::new(&pool, n);
+        (pool, cc)
+    }
+
+    #[test]
+    fn single_thread_applies_own_request() {
+        let (_p, cc) = mk(2);
+        let be = Echo { log: Mutex::new(Vec::new()), commits: AtomicU64::new(0) };
+        let r = cc.run(0, 7, 5, &be);
+        assert_eq!(r, 7005);
+        assert_eq!(be.log.lock().unwrap().len(), 1);
+        assert_eq!(be.commits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn sequential_requests_all_applied() {
+        let (_p, cc) = mk(2);
+        let be = Echo { log: Mutex::new(Vec::new()), commits: AtomicU64::new(0) };
+        for i in 0..10u64 {
+            assert_eq!(cc.run(i as usize % 2, 1, i, &be), 1000 + i);
+        }
+        assert_eq!(be.log.lock().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn concurrent_all_requests_served_exactly_once() {
+        let (_p, cc) = mk(8);
+        let cc = Arc::new(cc);
+        let be = Arc::new(Echo { log: Mutex::new(Vec::new()), commits: AtomicU64::new(0) });
+        let mut hs = Vec::new();
+        for tid in 0..8usize {
+            let cc = Arc::clone(&cc);
+            let be = Arc::clone(&be);
+            hs.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    let arg = tid as u64 * 1000 + i;
+                    assert_eq!(cc.run(tid, 1, arg, be.as_ref()), 1000 + arg);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let log = be.log.lock().unwrap();
+        assert_eq!(log.len(), 8 * 500, "every request applied exactly once");
+        // Batching actually happened (fewer commits than requests) OR the
+        // scheduler serialized everything (1 commit per request) — both
+        // valid; just sanity-check commits ≤ requests.
+        assert!(be.commits.load(Ordering::Relaxed) <= 8 * 500);
+    }
+
+    #[test]
+    fn reset_volatile_reusable() {
+        let (_p, cc) = mk(2);
+        let be = Echo { log: Mutex::new(Vec::new()), commits: AtomicU64::new(0) };
+        cc.run(0, 1, 1, &be);
+        cc.reset_volatile(2);
+        let r = cc.run(1, 2, 3, &be);
+        assert_eq!(r, 2003);
+    }
+}

@@ -1,0 +1,195 @@
+//! PBQueue — persistent blocking combining queue, re-implemented from \[9\]
+//! (the paper's best competitor; Fig. 2). CC-Synch combining over a
+//! sequential ring whose batches are made durable *before* results are
+//! announced: per batch, one psync for touched item lines + one for the
+//! packed commit word. Amortized over a full batch of `n` requests this is
+//! ≪ 1 psync/op — but every request still waits for the serial combiner,
+//! which is what caps its scalability against PerLCRQ.
+
+use std::sync::Arc;
+
+use super::ccsynch::{CcSynch, CombinerBackend};
+use super::seqring::SeqRing;
+use super::{OP_DEQ, OP_ENQ, RET_EMPTY};
+use crate::pmem::PmemPool;
+use crate::queues::{ConcurrentQueue, PersistentQueue, QueueError, MAX_ITEM};
+
+struct PersistentRing(SeqRing);
+
+impl CombinerBackend for PersistentRing {
+    fn apply(
+        &self,
+        pool: &PmemPool,
+        tid: usize,
+        op: u64,
+        arg: u64,
+        dirty: &mut Option<(u64, u64)>,
+    ) -> u64 {
+        self.0.apply(pool, tid, op, arg, dirty)
+    }
+
+    fn commit(&self, pool: &PmemPool, tid: usize, dirty: Option<(u64, u64)>) {
+        self.0.commit(pool, tid, dirty);
+    }
+}
+
+pub struct PbQueue {
+    /// Keep-alive handle (operations go through `cc`'s pool).
+    _pool: Arc<PmemPool>,
+    cc: CcSynch,
+    ring: PersistentRing,
+    nthreads: usize,
+}
+
+impl PbQueue {
+    pub fn new(pool: &Arc<PmemPool>, nthreads: usize) -> Self {
+        Self {
+            _pool: Arc::clone(pool),
+            cc: CcSynch::new(pool, nthreads),
+            ring: PersistentRing(SeqRing::alloc(pool, 1 << 16)),
+            nthreads,
+        }
+    }
+}
+
+impl ConcurrentQueue for PbQueue {
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        if item >= MAX_ITEM {
+            return Err(QueueError::ItemOutOfRange(item));
+        }
+        let _ = self.cc.run(tid, OP_ENQ, item, &self.ring);
+        Ok(())
+    }
+
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        let r = self.cc.run(tid, OP_DEQ, 0, &self.ring);
+        Ok(if r == RET_EMPTY { None } else { Some(r) })
+    }
+
+    fn name(&self) -> &'static str {
+        "pbqueue"
+    }
+}
+
+impl PersistentQueue for PbQueue {
+    fn recover(&self, pool: &PmemPool) {
+        // Combining list is DRAM: rebuild it; ring state comes from the
+        // last durable commit.
+        self.cc.reset_volatile(self.nthreads);
+        self.ring.0.recover(pool, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn mk(n: usize) -> (Arc<PmemPool>, PbQueue) {
+        let pool = Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: 1 << 18,
+            cost: CostModel::zero(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 33,
+        }));
+        let q = PbQueue::new(&pool, n);
+        (pool, q)
+    }
+
+    #[test]
+    fn fifo_and_empty() {
+        let (_p, q) = mk(2);
+        for v in 0..30u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        for v in 0..30u64 {
+            assert_eq!(q.dequeue(1).unwrap(), Some(v));
+        }
+        assert_eq!(q.dequeue(1).unwrap(), None);
+    }
+
+    #[test]
+    fn completed_ops_survive_crash() {
+        let (p, q) = mk(2);
+        for v in 0..20u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        for v in 0..8u64 {
+            assert_eq!(q.dequeue(1).unwrap(), Some(v));
+        }
+        let mut rng = Xoshiro256::seed_from(1);
+        p.crash(&mut rng);
+        q.recover(&p);
+        for v in 8..20u64 {
+            assert_eq!(q.dequeue(0).unwrap(), Some(v), "item {v} lost");
+        }
+        assert_eq!(q.dequeue(0).unwrap(), None);
+    }
+
+    #[test]
+    fn durability_is_batch_amortized() {
+        // Sequential use: every op is its own batch (2 psyncs per op — the
+        // blocking path). The win appears under concurrency; here we just
+        // check the sequential invariant.
+        let (p, q) = mk(1);
+        p.stats.reset();
+        q.enqueue(0, 5).unwrap();
+        let s = p.stats.total();
+        assert_eq!(s.psyncs, 2, "item-lines psync + commit psync");
+        p.stats.reset();
+        let _ = q.dequeue(0).unwrap();
+        let s = p.stats.total();
+        assert_eq!(s.psyncs, 1, "dequeue batch: commit psync only (no item writes)");
+    }
+
+    #[test]
+    fn crash_mid_everything_recovers_consistent() {
+        use crate::pmem::crash::{install_quiet_crash_hook, run_guarded};
+        install_quiet_crash_hook();
+        let pool = Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: 1 << 20,
+            cost: CostModel::zero(),
+            evict_prob: 0.3,
+            pending_flush_prob: 0.5,
+            seed: 44,
+        }));
+        let q = Arc::new(PbQueue::new(&pool, 4));
+        let mut rng = Xoshiro256::seed_from(7);
+        let mut returned = Vec::new();
+        for cycle in 0..4u64 {
+            pool.arm_crash_after(1_500 + rng.next_below(1_500));
+            let mut hs = Vec::new();
+            for tid in 0..4usize {
+                let q = Arc::clone(&q);
+                hs.push(std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    let _ = run_guarded(|| {
+                        for i in 0..50_000u64 {
+                            // Globally unique values across cycles/threads.
+                            q.enqueue(tid, cycle * 10_000_000 + tid as u64 * 1_000_000 + i)
+                                .unwrap();
+                            if let Some(v) = q.dequeue(tid).unwrap() {
+                                mine.push(v);
+                            }
+                        }
+                    });
+                    mine
+                }));
+            }
+            for h in hs {
+                returned.extend(h.join().unwrap());
+            }
+            pool.crash(&mut rng);
+            q.recover(&pool);
+        }
+        while let Some(v) = q.dequeue(0).unwrap() {
+            returned.push(v);
+        }
+        let n = returned.len();
+        returned.sort_unstable();
+        returned.dedup();
+        assert_eq!(returned.len(), n, "duplicate across crashes");
+    }
+}

@@ -1,0 +1,252 @@
+//! The sequential ring buffer applied by combiners, with crash-atomic
+//! batch commits.
+//!
+//! Layout:
+//! ```text
+//! base + 0  : commit word — packed (head:u32 | tail:u32), the durable
+//!             snapshot; own line
+//! base + 8  : working head (volatile-ish; rebuilt from commit at recovery)
+//! base + 16 : working tail
+//! base + 24…: item slots (cap words)
+//! ```
+//!
+//! Batch protocol (PBQueue/PWFQueue): the combiner applies operations to
+//! the working state, then [`SeqRing::commit`]s — flush touched item
+//! lines, psync, write + flush the packed commit word, psync. Because the
+//! commit word is a single 8-byte store on a single line, recovery always
+//! observes a *consistent prefix*: either the whole batch (commit landed)
+//! or none of it (ops not yet completed — their callers never returned).
+
+use super::{OP_DEQ, OP_ENQ, RET_EMPTY, RET_OK};
+use crate::pmem::{PAddr, PmemPool, WORDS_PER_LINE};
+
+pub struct SeqRing {
+    base: PAddr,
+    cap: usize,
+}
+
+#[inline]
+fn pack(head: u64, tail: u64) -> u64 {
+    debug_assert!(head <= u32::MAX as u64 && tail <= u32::MAX as u64);
+    (head << 32) | tail
+}
+
+#[inline]
+fn unpack(w: u64) -> (u64, u64) {
+    (w >> 32, w & 0xFFFF_FFFF)
+}
+
+impl SeqRing {
+    pub fn alloc(pool: &PmemPool, cap: usize) -> Self {
+        assert!(cap.is_power_of_two());
+        let words = 3 * WORDS_PER_LINE + cap;
+        let base = pool.alloc(words, WORDS_PER_LINE);
+        Self { base, cap }
+    }
+
+    fn commit_addr(&self) -> PAddr {
+        self.base
+    }
+    fn whead_addr(&self) -> PAddr {
+        self.base.add(WORDS_PER_LINE)
+    }
+    fn wtail_addr(&self) -> PAddr {
+        self.base.add(2 * WORDS_PER_LINE)
+    }
+    fn item_addr(&self, i: u64) -> PAddr {
+        self.base.add(3 * WORDS_PER_LINE + (i as usize & (self.cap - 1)))
+    }
+
+    /// Apply one operation to the working state (combiner context only).
+    /// Returns the response and, for enqueues, records the touched item
+    /// index range in `dirty` (min, max) for the commit flush.
+    pub fn apply(
+        &self,
+        pool: &PmemPool,
+        tid: usize,
+        op: u64,
+        arg: u64,
+        dirty: &mut Option<(u64, u64)>,
+    ) -> u64 {
+        match op {
+            OP_ENQ => {
+                let t = pool.load(tid, self.wtail_addr());
+                let h = pool.load(tid, self.whead_addr());
+                assert!(
+                    t - h < self.cap as u64,
+                    "seq ring overflow: size the combining ring capacity to the workload"
+                );
+                pool.store(tid, self.item_addr(t), arg + 1);
+                pool.store(tid, self.wtail_addr(), t + 1);
+                *dirty = Some(match *dirty {
+                    None => (t, t),
+                    Some((lo, hi)) => (lo.min(t), hi.max(t)),
+                });
+                RET_OK
+            }
+            OP_DEQ => {
+                let h = pool.load(tid, self.whead_addr());
+                let t = pool.load(tid, self.wtail_addr());
+                if h == t {
+                    RET_EMPTY
+                } else {
+                    let v = pool.load(tid, self.item_addr(h));
+                    pool.store(tid, self.whead_addr(), h + 1);
+                    v - 1
+                }
+            }
+            _ => unreachable!("unknown combining op {op}"),
+        }
+    }
+
+    /// Persist the batch: touched item lines, then the commit word.
+    pub fn commit(&self, pool: &PmemPool, tid: usize, dirty: Option<(u64, u64)>) {
+        if let Some((lo, hi)) = dirty {
+            // Flush each touched item line once (wraparound-aware; the
+            // range is ≤ one batch ≤ cap items).
+            let first_line = self.item_addr(lo).line();
+            let mut line = first_line;
+            loop {
+                pool.pwb(tid, PAddr((line * WORDS_PER_LINE) as u32));
+                let last = self.item_addr(hi).line();
+                if line == last {
+                    break;
+                }
+                // Step through wrapped lines.
+                line = if line
+                    == self.item_addr(self.cap as u64 - 1).line()
+                {
+                    self.item_addr(0).line()
+                } else {
+                    line + 1
+                };
+                if line == first_line {
+                    break; // full wrap guard
+                }
+            }
+            pool.psync(tid);
+        }
+        let h = pool.load(tid, self.whead_addr());
+        let t = pool.load(tid, self.wtail_addr());
+        pool.store(tid, self.commit_addr(), pack(h, t));
+        pool.pwb(tid, self.commit_addr());
+        pool.psync(tid);
+    }
+
+    /// Rebuild the working state from the last durable commit.
+    pub fn recover(&self, pool: &PmemPool, tid: usize) {
+        let (h, t) = unpack(pool.load(tid, self.commit_addr()));
+        pool.store(tid, self.whead_addr(), h);
+        pool.store(tid, self.wtail_addr(), t);
+        pool.pwb(tid, self.whead_addr());
+        pool.pwb(tid, self.wtail_addr());
+        pool.psync(tid);
+    }
+
+    /// (head, tail) of the working state.
+    pub fn endpoints(&self, pool: &PmemPool, tid: usize) -> (u64, u64) {
+        (pool.load(tid, self.whead_addr()), pool.load(tid, self.wtail_addr()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+    use crate::util::rng::Xoshiro256;
+    use std::sync::Arc;
+
+    fn mk(cap: usize) -> (Arc<PmemPool>, SeqRing) {
+        let pool = Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: 1 << 16,
+            cost: CostModel::zero(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 5,
+        }));
+        let r = SeqRing::alloc(&pool, cap);
+        (pool, r)
+    }
+
+    #[test]
+    fn fifo_sequential() {
+        let (p, r) = mk(64);
+        let mut dirty = None;
+        for v in 0..10u64 {
+            assert_eq!(r.apply(&p, 0, OP_ENQ, v, &mut dirty), RET_OK);
+        }
+        for v in 0..10u64 {
+            assert_eq!(r.apply(&p, 0, OP_DEQ, 0, &mut dirty), v);
+        }
+        assert_eq!(r.apply(&p, 0, OP_DEQ, 0, &mut dirty), RET_EMPTY);
+    }
+
+    #[test]
+    fn committed_batch_survives_crash() {
+        let (p, r) = mk(64);
+        let mut dirty = None;
+        for v in 0..5u64 {
+            r.apply(&p, 0, OP_ENQ, v, &mut dirty);
+        }
+        r.commit(&p, 0, dirty);
+        let mut rng = Xoshiro256::seed_from(1);
+        p.crash(&mut rng);
+        r.recover(&p, 0);
+        let mut d2 = None;
+        for v in 0..5u64 {
+            assert_eq!(r.apply(&p, 0, OP_DEQ, 0, &mut d2), v);
+        }
+        assert_eq!(r.apply(&p, 0, OP_DEQ, 0, &mut d2), RET_EMPTY);
+    }
+
+    #[test]
+    fn uncommitted_batch_rolls_back() {
+        let (p, r) = mk(64);
+        let mut dirty = None;
+        r.apply(&p, 0, OP_ENQ, 1, &mut dirty);
+        r.commit(&p, 0, dirty);
+        // Second batch applied but NOT committed.
+        let mut d2 = None;
+        r.apply(&p, 0, OP_ENQ, 2, &mut d2);
+        r.apply(&p, 0, OP_ENQ, 3, &mut d2);
+        let mut rng = Xoshiro256::seed_from(2);
+        p.crash(&mut rng);
+        r.recover(&p, 0);
+        let mut d3 = None;
+        assert_eq!(r.apply(&p, 0, OP_DEQ, 0, &mut d3), 1);
+        assert_eq!(
+            r.apply(&p, 0, OP_DEQ, 0, &mut d3),
+            RET_EMPTY,
+            "uncommitted enqueues must roll back"
+        );
+    }
+
+    #[test]
+    fn wraparound() {
+        let (p, r) = mk(8);
+        let mut rounds = 0u64;
+        for _ in 0..5 {
+            let mut d = None;
+            for v in 0..6u64 {
+                r.apply(&p, 0, OP_ENQ, rounds * 10 + v, &mut d);
+            }
+            r.commit(&p, 0, d);
+            let mut d = None;
+            for v in 0..6u64 {
+                assert_eq!(r.apply(&p, 0, OP_DEQ, 0, &mut d), rounds * 10 + v);
+            }
+            r.commit(&p, 0, d);
+            rounds += 1;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let (p, r) = mk(8);
+        let mut d = None;
+        for v in 0..9u64 {
+            r.apply(&p, 0, OP_ENQ, v, &mut d);
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! IQ — the infinite-array queue (paper §3, Algorithm 1 black lines).
+//!
+//! The queue is an (conceptually infinite) array `Q` initialized to `⊥`,
+//! plus two FAI objects `Head` and `Tail`. An enqueuer FAIs `Tail` to claim
+//! an index and `GET&SET`s its item into that cell; a dequeuer FAIs `Head`
+//! and `GET&SET`s `⊤` into the claimed cell, returning whatever was there.
+//! Each cell is touched by at most one enqueuer and one dequeuer.
+//!
+//! The "infinite" array is a finite arena region here (capacity is a
+//! config knob); running past it yields `CapacityExhausted`.
+//!
+//! ## Cell encoding
+//! `⊥ = 0` (fresh NVM), `⊤ = u64::MAX`, item `v` stored as `v + 1`.
+
+use std::sync::Arc;
+
+use super::{ConcurrentQueue, QueueConfig, QueueError, MAX_ITEM};
+use crate::pmem::{PAddr, PmemPool};
+
+/// `⊥` — unoccupied cell (the all-zeroes fresh-NVM state).
+pub const BOT: u64 = 0;
+/// `⊤` — consumed cell.
+pub const TOP: u64 = u64::MAX;
+
+/// Encode an item for storage.
+#[inline]
+pub fn enc(item: u64) -> u64 {
+    debug_assert!(item < MAX_ITEM);
+    item + 1
+}
+
+/// Decode a stored (non-sentinel) value.
+#[inline]
+pub fn dec(stored: u64) -> u64 {
+    debug_assert!(stored != BOT && stored != TOP);
+    stored - 1
+}
+
+/// Shared persistent layout of IQ/PerIQ (both algorithms use the same
+/// arena image; PerIQ adds persistence instructions and a recovery
+/// function).
+pub struct IqLayout {
+    /// `Tail` FAI object (own cache line).
+    pub tail: PAddr,
+    /// `Head` FAI object (own cache line).
+    pub head: PAddr,
+    /// Cell array base (one word per cell).
+    pub cells: PAddr,
+    /// Number of cells.
+    pub capacity: usize,
+}
+
+impl IqLayout {
+    /// Allocate the layout in `pool`.
+    pub fn alloc(pool: &PmemPool, capacity: usize) -> Self {
+        // Head and Tail each get a private line: they are distinct hot
+        // spots and must not false-share (the paper's algorithms assume
+        // this; so does the cost model).
+        let tail = pool.alloc_lines(1);
+        let head = pool.alloc_lines(1);
+        let cells = pool.alloc_lines(capacity.div_ceil(crate::pmem::WORDS_PER_LINE));
+        // Contention declarations (see pmem::Hotness): endpoints are
+        // touched by every thread; each cell by one enqueuer + one
+        // dequeuer (the paper's low-contention property).
+        pool.set_hot(tail, 1, crate::pmem::Hotness::Global);
+        pool.set_hot(head, 1, crate::pmem::Hotness::Global);
+        Self { tail, head, cells, capacity }
+    }
+
+    /// Address of cell `i`.
+    #[inline]
+    pub fn cell(&self, i: u64) -> PAddr {
+        debug_assert!((i as usize) < self.capacity);
+        self.cells.add(i as usize)
+    }
+}
+
+/// The volatile IQ (no persistence instructions).
+pub struct Iq {
+    pool: Arc<PmemPool>,
+    pub(crate) layout: IqLayout,
+}
+
+impl Iq {
+    pub fn new(pool: &Arc<PmemPool>, _nthreads: usize, cfg: QueueConfig) -> Self {
+        Self { pool: Arc::clone(pool), layout: IqLayout::alloc(pool, cfg.iq_capacity) }
+    }
+
+    /// Current head/tail (test observability).
+    pub fn indices(&self, tid: usize) -> (u64, u64) {
+        (self.pool.load(tid, self.layout.head), self.pool.load(tid, self.layout.tail))
+    }
+}
+
+impl ConcurrentQueue for Iq {
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        if item >= MAX_ITEM {
+            return Err(QueueError::ItemOutOfRange(item));
+        }
+        let p = &self.pool;
+        loop {
+            let t = p.fai(tid, self.layout.tail); // line 3
+            if t as usize >= self.layout.capacity {
+                return Err(QueueError::CapacityExhausted);
+            }
+            if p.swap(tid, self.layout.cell(t), enc(item)) == BOT {
+                return Ok(()); // line 4-6
+            }
+            // A dequeuer beat us to the cell (wrote ⊤): retry with a new
+            // index.
+        }
+    }
+
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        let p = &self.pool;
+        loop {
+            let h = p.fai(tid, self.layout.head); // line 9
+            if h as usize >= self.layout.capacity {
+                return Err(QueueError::CapacityExhausted);
+            }
+            let x = p.swap(tid, self.layout.cell(h), TOP); // line 10
+            if x != BOT {
+                debug_assert_ne!(x, TOP, "cell dequeued twice — FAI uniqueness violated");
+                return Ok(Some(dec(x))); // line 11-13
+            }
+            // line 14: EMPTY check — Tail ≤ h+1 means no enqueuer is ahead.
+            let t = p.load(tid, self.layout.tail);
+            if t <= h + 1 {
+                return Ok(None);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "iq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+
+    fn mk(capacity: usize) -> Iq {
+        let pool = Arc::new(PmemPool::new(
+            PmemConfig::default().with_capacity(1 << 18).with_cost(CostModel::zero()),
+        ));
+        let cfg = QueueConfig { iq_capacity: capacity, ..Default::default() };
+        Iq::new(&pool, 4, cfg)
+    }
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = mk(1024);
+        for v in 0..100u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        for v in 0..100u64 {
+            assert_eq!(q.dequeue(0).unwrap(), Some(v));
+        }
+        assert_eq!(q.dequeue(0).unwrap(), None);
+    }
+
+    #[test]
+    fn empty_on_fresh_queue() {
+        let q = mk(64);
+        assert_eq!(q.dequeue(0).unwrap(), None);
+        assert_eq!(q.dequeue(1).unwrap(), None);
+    }
+
+    #[test]
+    fn interleaved_enq_deq() {
+        let q = mk(4096);
+        for round in 0..50u64 {
+            q.enqueue(0, round * 2).unwrap();
+            q.enqueue(1, round * 2 + 1).unwrap();
+            assert_eq!(q.dequeue(2).unwrap(), Some(round * 2));
+            assert_eq!(q.dequeue(3).unwrap(), Some(round * 2 + 1));
+        }
+    }
+
+    #[test]
+    fn capacity_exhaustion() {
+        let q = mk(16);
+        for v in 0..16u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert_eq!(q.enqueue(0, 99), Err(QueueError::CapacityExhausted));
+    }
+
+    #[test]
+    fn item_out_of_range_rejected() {
+        let q = mk(16);
+        assert_eq!(q.enqueue(0, MAX_ITEM), Err(QueueError::ItemOutOfRange(MAX_ITEM)));
+    }
+
+    #[test]
+    fn empty_dequeues_burn_indices() {
+        // An EMPTY dequeue consumed a Head index; the matching enqueue index
+        // will be skipped by the enqueuer's retry loop (top swap).
+        let q = mk(1024);
+        assert_eq!(q.dequeue(0).unwrap(), None); // burns index 0 with ⊤
+        q.enqueue(1, 7).unwrap(); // lands at index 1 after a retry
+        assert_eq!(q.dequeue(0).unwrap(), Some(7));
+    }
+
+    #[test]
+    fn mpmc_stress_no_loss_no_dup() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let pool = Arc::new(PmemPool::new(
+            PmemConfig::default().with_capacity(1 << 21).with_cost(CostModel::zero()),
+        ));
+        let cfg = QueueConfig { iq_capacity: 1 << 18, ..Default::default() };
+        let q = Arc::new(Iq::new(&pool, 8, cfg));
+        let per_thread = 2000u64;
+        let nprod = 4usize;
+        let total = nprod as u64 * per_thread;
+        let consumed = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for pid in 0..nprod {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    q.enqueue(pid, (pid as u64) * per_thread + i).unwrap();
+                }
+            }));
+        }
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        for cid in 0..4usize {
+            let q = Arc::clone(&q);
+            let seen = Arc::clone(&seen);
+            let consumed = Arc::clone(&consumed);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while consumed.load(Ordering::Relaxed) < total {
+                    match q.dequeue(nprod + cid).unwrap() {
+                        Some(v) => {
+                            got.push(v);
+                            consumed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+                seen.lock().unwrap().extend(got);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all = seen.lock().unwrap().clone();
+        assert_eq!(all.len(), total as usize);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total as usize, "every item exactly once");
+    }
+}

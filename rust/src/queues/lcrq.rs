@@ -1,0 +1,380 @@
+//! LCRQ — a linked list of CRQ rings forming an unbounded FIFO queue
+//! (paper §3, Algorithm 5 black lines; Morrison–Afek PPoPP'13), plus the
+//! shared core [`LcrqCore`] that [`super::perlcrq`] reuses with the
+//! persistence instructions of §4.3 switched on.
+//!
+//! Structure: `First`/`Last` point into a Michael–Scott-style list of
+//! nodes, each holding one [`super::crq::Ring`]. When an enqueue on the
+//! last ring returns CLOSED, the enqueuer appends a fresh node (created
+//! with its item already at `Q\[0\]`, `Tail = 1`); when the first ring is
+//! EMPTY and has a successor, dequeuers advance `First`.
+//!
+//! ## Node layout (arena-relative)
+//!
+//! ```text
+//! node + 0   : next pointer (PAddr as u64; 0 = null)
+//! node + 1   : closedFlag word (§4.2 optimization; monotone)
+//! node + 8   : ring block (see crq.rs)
+//! ```
+
+use std::sync::Arc;
+
+use super::crq::{DeqResult, EnqResult, PersistCfg, Ring};
+use super::{ConcurrentQueue, HeadPersistMode, QueueConfig, QueueError, MAX_ITEM};
+use crate::pmem::{PAddr, PmemPool, WORDS_PER_LINE};
+
+/// The list-of-rings core shared by LCRQ (volatile, `persist = None`) and
+/// PerLCRQ (`persist = Some`).
+pub struct LcrqCore {
+    pub pool: Arc<PmemPool>,
+    /// `First` pointer word (own line).
+    pub first: PAddr,
+    /// `Last` pointer word (own line).
+    pub last: PAddr,
+    pub nthreads: usize,
+    pub ring_size: usize,
+    pub starvation_limit: usize,
+    pub persist: Option<PersistCfg>,
+}
+
+impl LcrqCore {
+    /// Words per node: header line + ring block.
+    pub fn node_words(&self) -> usize {
+        WORDS_PER_LINE + Ring::words(self.ring_size, self.nthreads)
+    }
+
+    fn next_addr(node: PAddr) -> PAddr {
+        node
+    }
+
+    fn closed_flag_addr(node: PAddr) -> PAddr {
+        node.add(1)
+    }
+
+    fn ring_of(&self, node: PAddr) -> Ring {
+        Ring::at(node.add(WORDS_PER_LINE), self.ring_size, self.nthreads)
+    }
+
+    pub fn new(
+        pool: &Arc<PmemPool>,
+        nthreads: usize,
+        cfg: &QueueConfig,
+        persist: Option<PersistCfg>,
+    ) -> Self {
+        let first = pool.alloc_lines(1);
+        let last = pool.alloc_lines(1);
+        pool.set_hot(first, 1, crate::pmem::Hotness::Global);
+        pool.set_hot(last, 1, crate::pmem::Hotness::Global);
+        let core = Self {
+            pool: Arc::clone(pool),
+            first,
+            last,
+            nthreads,
+            ring_size: cfg.ring_size,
+            starvation_limit: cfg.starvation_limit,
+            persist,
+        };
+        // Initial node: an empty ring (fresh zeroed allocation is a valid
+        // empty, durable ring — see crq.rs encoding).
+        let node = pool.alloc(core.node_words(), WORDS_PER_LINE);
+        pool.set_hot(node, 1, crate::pmem::Hotness::Global);
+        core.ring_of(node).declare_hotness(pool);
+        pool.store(0, first, node.to_u64());
+        pool.store(0, last, node.to_u64());
+        if core.persist.is_some() {
+            pool.pwb(0, first);
+            pool.pwb(0, last);
+            pool.psync(0);
+        }
+        core
+    }
+
+    /// Create a node seeded with `item` at `Q\[0\]`, `Tail = 1` (Alg. 5
+    /// lines 16-18). Returns its address; in persistent mode the node is
+    /// durable before this returns.
+    fn new_node(&self, tid: usize, item: u64) -> PAddr {
+        let p = &self.pool;
+        let node = p.alloc(self.node_words(), WORDS_PER_LINE);
+        p.set_hot(node, 1, crate::pmem::Hotness::Global); // next ptr + closedFlag
+        let ring = self.ring_of(node);
+        ring.declare_hotness(p);
+        // next = 0 and the whole fresh ring are already zero (and already
+        // durable: fresh arena lines have live == shadow == 0). Only the
+        // seeded item and Tail=1 need writing + persisting.
+        ring.write_cell(p, tid, 0, false, 0, item + 1);
+        p.store(tid, ring.tail_addr(), 1);
+        if self.persist.is_some() {
+            // Alg. 5 line 18: pwb(nd.next, nd.crq.Q[0], nd.crq.Tail);
+            // psync(). (The paper co-locates these in one line; our layout
+            // keeps Tail on its own line for contention isolation, so this
+            // costs 2 pwbs — next's line is untouched-zero and needs none.)
+            p.pwb(tid, ring.cell_addr(0));
+            p.pwb(tid, ring.tail_addr());
+            p.psync(tid);
+        }
+        node
+    }
+
+    /// Algorithm 5, Enqueue(x) (lines 16-31).
+    pub fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        if item >= MAX_ITEM {
+            return Err(QueueError::ItemOutOfRange(item));
+        }
+        let p = &self.pool;
+        let mut nd: Option<PAddr> = None; // created lazily on first CLOSED
+        loop {
+            let l = PAddr::from_u64(p.load(tid, self.last)); // line 20
+            let ring = self.ring_of(l); // line 21
+            let next = p.load(tid, Self::next_addr(l));
+            if next != 0 {
+                // line 22-25: Last is falling behind; help.
+                if self.persist.is_some() {
+                    // line 23: persist the next pointer before exposing it
+                    // through Last.
+                    p.pwb(tid, Self::next_addr(l));
+                    p.psync(tid);
+                }
+                let _ = p.cas(tid, self.last, l.to_u64(), next);
+                continue;
+            }
+            // line 26: try the current ring.
+            let per = self
+                .persist
+                .as_ref()
+                .map(|pc| (pc, Self::closed_flag_addr(l)));
+            if ring.enqueue(p, tid, item, self.starvation_limit, per) == EnqResult::Ok {
+                return Ok(()); // line 27
+            }
+            // CLOSED: append a fresh node containing the item.
+            let node = *nd.get_or_insert_with(|| self.new_node(tid, item));
+            if p.cas(tid, Self::next_addr(l), 0, node.to_u64()) {
+                // line 28 succeeded.
+                if self.persist.is_some() {
+                    // line 29: the append must be durable before we return.
+                    p.pwb(tid, Self::next_addr(l));
+                    p.psync(tid);
+                }
+                let _ = p.cas(tid, self.last, l.to_u64(), node.to_u64()); // line 30
+                return Ok(()); // line 31
+            }
+            // Another thread appended first: keep our node for the next
+            // attempt (the paper allocates per retry; reusing is safe — the
+            // node is private until the CAS publishes it).
+        }
+    }
+
+    /// Algorithm 5, Dequeue() (lines 6-15).
+    pub fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        let p = &self.pool;
+        loop {
+            let f = PAddr::from_u64(p.load(tid, self.first)); // line 8
+            let ring = self.ring_of(f); // line 9
+            match ring.dequeue(p, tid, self.persist.as_ref()) {
+                DeqResult::Item(v) => return Ok(Some(v)), // lines 11-12
+                DeqResult::Empty => {
+                    let next = p.load(tid, Self::next_addr(f));
+                    if next == 0 {
+                        return Ok(None); // lines 13-14
+                    }
+                    // line 15: advance First (no persistence — §4.3: First
+                    // never changes at recovery; post-crash dequeues
+                    // re-traverse).
+                    let _ = p.cas(tid, self.first, f.to_u64(), next);
+                }
+            }
+        }
+    }
+
+    /// Algorithm 5, PerLCRQRecovery (lines 32-40): walk the list from the
+    /// persisted `First`, recover every ring, and re-point `Last` at the
+    /// true end of the list.
+    pub fn recover(&self, pool: &PmemPool) {
+        let tid = 0;
+        let mut node = PAddr::from_u64(pool.load(tid, self.first));
+        debug_assert!(!node.is_null(), "First must survive (persisted at construction)");
+        loop {
+            let ring = self.ring_of(node);
+            super::percrq::recover_ring(pool, &ring);
+            let next = pool.load(tid, Self::next_addr(node));
+            if next == 0 {
+                break;
+            }
+            node = PAddr::from_u64(next);
+        }
+        pool.store(tid, self.last, node.to_u64());
+        // Persist the recovered endpoints (cheap; hardens double crashes).
+        pool.pwb(tid, self.first);
+        pool.pwb(tid, self.last);
+        pool.psync(tid);
+    }
+
+    /// Number of nodes currently in the list (test observability).
+    pub fn node_count(&self, tid: usize) -> usize {
+        let p = &self.pool;
+        let mut n = 0;
+        let mut node = PAddr::from_u64(p.load(tid, self.first));
+        while !node.is_null() {
+            n += 1;
+            node = PAddr::from_u64(p.load(tid, Self::next_addr(node)));
+        }
+        n
+    }
+}
+
+/// The volatile LCRQ (paper §3) — state-of-the-art conventional queue.
+pub struct Lcrq {
+    core: LcrqCore,
+}
+
+impl Lcrq {
+    pub fn new(pool: &Arc<PmemPool>, nthreads: usize, cfg: QueueConfig) -> Self {
+        Self { core: LcrqCore::new(pool, nthreads, &cfg, None) }
+    }
+
+    /// Node count (test observability).
+    pub fn node_count(&self, tid: usize) -> usize {
+        self.core.node_count(tid)
+    }
+}
+
+impl ConcurrentQueue for Lcrq {
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        self.core.enqueue(tid, item)
+    }
+
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        self.core.dequeue(tid)
+    }
+
+    fn name(&self) -> &'static str {
+        "lcrq"
+    }
+}
+
+// Re-export for perlcrq's use.
+pub(crate) use core_access::core_persist_cfg;
+
+mod core_access {
+    use super::*;
+
+    /// Build the persistence config for PerLCRQ from the queue config.
+    pub(crate) fn core_persist_cfg(cfg: &QueueConfig) -> PersistCfg {
+        PersistCfg {
+            head_mode: cfg.head_mode,
+            skip_tail_persist: cfg.skip_tail_persist,
+            disable_closed_flag: cfg.disable_closed_flag,
+        }
+    }
+}
+
+// Silence unused warning: HeadPersistMode referenced in docs.
+const _: fn() -> HeadPersistMode = || HeadPersistMode::Local;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+
+    fn mk(ring: usize) -> (Arc<PmemPool>, Lcrq) {
+        let pool = Arc::new(PmemPool::new(
+            PmemConfig::default().with_capacity(1 << 20).with_cost(CostModel::zero()),
+        ));
+        let cfg = QueueConfig { ring_size: ring, ..Default::default() };
+        let q = Lcrq::new(&pool, 8, cfg);
+        (pool, q)
+    }
+
+    #[test]
+    fn fifo_through_multiple_rings() {
+        let (_p, q) = mk(8);
+        // 100 items >> ring size: forces node appends.
+        for v in 0..100u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert!(q.node_count(0) >= 2, "should have spilled into new nodes");
+        for v in 0..100u64 {
+            assert_eq!(q.dequeue(1).unwrap(), Some(v));
+        }
+        assert_eq!(q.dequeue(1).unwrap(), None);
+    }
+
+    #[test]
+    fn empty_queue() {
+        let (_p, q) = mk(8);
+        assert_eq!(q.dequeue(0).unwrap(), None);
+        q.enqueue(0, 5).unwrap();
+        assert_eq!(q.dequeue(0).unwrap(), Some(5));
+        assert_eq!(q.dequeue(0).unwrap(), None);
+    }
+
+    #[test]
+    fn alternating_across_ring_boundary() {
+        let (_p, q) = mk(4);
+        for v in 0..50u64 {
+            q.enqueue(0, v).unwrap();
+            assert_eq!(q.dequeue(1).unwrap(), Some(v));
+        }
+        assert_eq!(q.dequeue(1).unwrap(), None);
+    }
+
+    #[test]
+    fn unbounded_growth_beyond_one_ring() {
+        let (_p, q) = mk(4);
+        for v in 0..64u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        // 64 items with R=4 → many nodes.
+        assert!(q.node_count(0) >= 8);
+        for v in 0..64u64 {
+            assert_eq!(q.dequeue(0).unwrap(), Some(v));
+        }
+    }
+
+    #[test]
+    fn mpmc_stress() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let (_p, q) = mk(64);
+        let q = Arc::new(q);
+        let total = 4 * 2000u64;
+        let consumed = Arc::new(AtomicU64::new(0));
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut hs = Vec::new();
+        for pid in 0..4usize {
+            let q = Arc::clone(&q);
+            hs.push(std::thread::spawn(move || {
+                for i in 0..2000u64 {
+                    q.enqueue(pid, pid as u64 * 10_000 + i).unwrap();
+                }
+            }));
+        }
+        for cid in 0..4usize {
+            let q = Arc::clone(&q);
+            let (consumed, seen) = (Arc::clone(&consumed), Arc::clone(&seen));
+            hs.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while consumed.load(Ordering::Relaxed) < total {
+                    match q.dequeue(4 + cid).unwrap() {
+                        Some(v) => {
+                            got.push(v);
+                            consumed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+                seen.lock().unwrap().extend(got);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let mut all = seen.lock().unwrap().clone();
+        assert_eq!(all.len() as u64, total);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, total, "duplicates detected");
+        // Per-producer FIFO: for each producer, consumed order must be
+        // increasing. (Checked via the global sorted/dedup above plus a
+        // per-producer monotonicity scan on one consumer's log is not
+        // possible here since logs merged; covered in verify/ tests.)
+    }
+}

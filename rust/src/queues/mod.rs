@@ -1,0 +1,239 @@
+//! The queue algorithm family.
+//!
+//! Conventional (volatile) algorithms from the literature the paper builds
+//! on, and the paper's persistent algorithms:
+//!
+//! | module | algorithm | paper source |
+//! |---|---|---|
+//! | [`iq`] | IQ — infinite-array queue | §3, Alg. 1 (black) |
+//! | [`periq`] | **PerIQ** (+ periodic-persist variant) | §4.1, Alg. 1 + Alg. 6 |
+//! | [`crq`] | CRQ — circular ring queue (tantrum) | §3, Alg. 3 (black) |
+//! | [`percrq`] | **PerCRQ** (+ local persistence) | §4.2, Alg. 3 |
+//! | [`lcrq`] | LCRQ — list of CRQs | §3, Alg. 5 (black) |
+//! | [`perlcrq`] | **PerLCRQ** (+ PHead/NoHead/NoTail ablations) | §4.3, Alg. 5 |
+//! | [`msq`] | Michael–Scott queue (volatile baseline) | \[19\] |
+//! | [`durable_msq`] | persist-everything durable MS queue | \[11\]-style baseline |
+//! | [`combining`] | CC-Synch combining; PBQueue, PWFQueue | \[6\], \[9\] |
+//!
+//! ## Value encoding
+//!
+//! Queues store `u64` *items* strictly less than [`MAX_ITEM`]. Internally a
+//! cell holds `item + 1` so that the all-zeroes state of freshly allocated
+//! (or recovered) NVM is a valid "unoccupied" (`⊥ = 0`) cell — this removes
+//! any need to initialize/persist fresh ring segments cell-by-cell and is a
+//! bijective re-encoding of the paper's `(s, idx, val)` triplets (see
+//! [`crq`] docs for the exact layout).
+
+pub mod combining;
+pub mod crq;
+pub mod durable_msq;
+pub mod iq;
+pub mod lcrq;
+pub mod msq;
+pub mod percrq;
+pub mod perlcrq;
+pub mod periq;
+
+use std::sync::Arc;
+
+use crate::pmem::PmemPool;
+
+/// Maximum enqueueable item value (exclusive). Items occupy 62 bits; the
+/// framework reserves the top bits for sentinels.
+pub const MAX_ITEM: u64 = 1 << 62;
+
+/// Errors surfaced by queue operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueueError {
+    /// The item value is out of the supported range (`>= MAX_ITEM`).
+    ItemOutOfRange(u64),
+    /// The backing structure is out of capacity (IQ's "infinite" array is a
+    /// finite arena in this simulator; size it to the workload).
+    CapacityExhausted,
+}
+
+impl std::fmt::Display for QueueError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueueError::ItemOutOfRange(v) => write!(f, "item {v} out of range (>= 2^62)"),
+            QueueError::CapacityExhausted => write!(f, "queue capacity exhausted"),
+        }
+    }
+}
+
+impl std::error::Error for QueueError {}
+
+/// A concurrent multi-producer multi-consumer FIFO queue.
+///
+/// `tid` identifies the calling thread (`< nthreads` passed at
+/// construction); the same `tid` must not be used by two live threads.
+pub trait ConcurrentQueue: Send + Sync {
+    /// Enqueue `item` (must be `< MAX_ITEM`).
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError>;
+
+    /// Dequeue the oldest item; `None` means EMPTY.
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError>;
+
+    /// Algorithm name (stable; used by the bench registry and reports).
+    fn name(&self) -> &'static str;
+}
+
+/// A durably linearizable queue: after [`crate::pmem::PmemPool::crash`],
+/// calling [`PersistentQueue::recover`] (single-threaded) restores a state
+/// reflecting every operation completed before the crash.
+pub trait PersistentQueue: ConcurrentQueue {
+    /// The recovery function (paper §4). Runs single-threaded after a
+    /// crash; also reinitializes any volatile bookkeeping this queue keeps
+    /// outside the pool.
+    fn recover(&self, pool: &PmemPool);
+}
+
+/// Construction-time knobs shared across algorithms.
+#[derive(Clone, Debug)]
+pub struct QueueConfig {
+    /// Ring size `R` for CRQ-family algorithms (cells per ring).
+    pub ring_size: usize,
+    /// Capacity (cells) for IQ-family "infinite" arrays.
+    pub iq_capacity: usize,
+    /// Enqueue attempts on one CRQ before declaring starvation and closing
+    /// it (LCRQ's anti-livelock tantrum trigger).
+    pub starvation_limit: usize,
+    /// PerIQ: persist `Tail` every `k` enqueues (Alg. 6 tradeoff knob).
+    /// `0` = never (pure PerIQ), `1` = every operation.
+    pub periq_tail_interval: usize,
+    /// PerCRQ/PerLCRQ head-persistence strategy (Fig. 2/3 ablations).
+    pub head_mode: HeadPersistMode,
+    /// Skip persisting `Tail` on close (Fig. 3 "PerLCRQ (no tail)").
+    pub skip_tail_persist: bool,
+    /// Disable the §4.2 closedFlag optimization (ablation A3): every
+    /// CLOSED return re-persists `Tail`.
+    pub disable_closed_flag: bool,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        Self {
+            ring_size: 1 << 10,
+            iq_capacity: 1 << 16,
+            starvation_limit: 4096,
+            periq_tail_interval: 0,
+            head_mode: HeadPersistMode::Local,
+            skip_tail_persist: false,
+            disable_closed_flag: false,
+        }
+    }
+}
+
+/// Where dequeues persist the head index (§4.2 "Local Persistence").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadPersistMode {
+    /// Paper's PerLCRQ: persist the per-thread local copy `Head_i`
+    /// (single-writer line — cheap).
+    Local,
+    /// PerLCRQ-PHead: persist the shared `Head` (hot line — expensive;
+    /// Fig. 2 shows this collapsing).
+    Shared,
+    /// PerLCRQ (no head): elide head pwbs entirely (Fig. 3 upper bound;
+    /// NOT durably linearizable — measurement-only).
+    None,
+}
+
+/// Everything needed to build a queue instance.
+pub struct QueueCtx {
+    pub pool: Arc<PmemPool>,
+    pub nthreads: usize,
+    pub cfg: QueueConfig,
+}
+
+/// Registry of all benchmarkable algorithms: name → constructor.
+/// Persistent algorithms additionally appear in [`persistent_registry`].
+pub fn registry() -> Vec<(&'static str, fn(&QueueCtx) -> Arc<dyn ConcurrentQueue>)> {
+    vec![
+        ("msq", |c| Arc::new(msq::MsQueue::new(&c.pool, c.nthreads))),
+        ("durable-msq", |c| Arc::new(durable_msq::DurableMsQueue::new(&c.pool, c.nthreads))),
+        ("iq", |c| Arc::new(iq::Iq::new(&c.pool, c.nthreads, c.cfg.clone()))),
+        ("periq", |c| Arc::new(periq::PerIq::new(&c.pool, c.nthreads, c.cfg.clone()))),
+        ("lcrq", |c| Arc::new(lcrq::Lcrq::new(&c.pool, c.nthreads, c.cfg.clone()))),
+        ("perlcrq", |c| Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, c.cfg.clone()))),
+        ("perlcrq-phead", |c| {
+            let mut cfg = c.cfg.clone();
+            cfg.head_mode = HeadPersistMode::Shared;
+            Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, cfg))
+        }),
+        ("perlcrq-nohead", |c| {
+            let mut cfg = c.cfg.clone();
+            cfg.head_mode = HeadPersistMode::None;
+            Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, cfg))
+        }),
+        ("perlcrq-notail", |c| {
+            let mut cfg = c.cfg.clone();
+            cfg.skip_tail_persist = true;
+            Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, cfg))
+        }),
+        ("pbqueue", |c| Arc::new(combining::pbqueue::PbQueue::new(&c.pool, c.nthreads))),
+        ("pwfqueue", |c| Arc::new(combining::pwfqueue::PwfQueue::new(&c.pool, c.nthreads))),
+        ("ccqueue", |c| Arc::new(combining::ccqueue::CcQueue::new(&c.pool, c.nthreads))),
+    ]
+}
+
+/// Persistent algorithms (those with a recovery function), for crash-cycle
+/// tests and recovery benches: name → constructor.
+pub fn persistent_registry() -> Vec<(&'static str, fn(&QueueCtx) -> Arc<dyn PersistentQueue>)> {
+    vec![
+        ("periq", |c| Arc::new(periq::PerIq::new(&c.pool, c.nthreads, c.cfg.clone()))),
+        ("perlcrq", |c| Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, c.cfg.clone()))),
+        ("perlcrq-phead", |c| {
+            let mut cfg = c.cfg.clone();
+            cfg.head_mode = HeadPersistMode::Shared;
+            Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, cfg))
+        }),
+        ("pbqueue", |c| Arc::new(combining::pbqueue::PbQueue::new(&c.pool, c.nthreads))),
+        ("pwfqueue", |c| Arc::new(combining::pwfqueue::PwfQueue::new(&c.pool, c.nthreads))),
+        ("durable-msq", |c| Arc::new(durable_msq::DurableMsQueue::new(&c.pool, c.nthreads))),
+    ]
+}
+
+/// Look up a constructor by name.
+pub fn by_name(name: &str) -> Option<fn(&QueueCtx) -> Arc<dyn ConcurrentQueue>> {
+    registry().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f)
+}
+
+/// Look up a persistent constructor by name.
+pub fn persistent_by_name(name: &str) -> Option<fn(&QueueCtx) -> Arc<dyn PersistentQueue>> {
+    persistent_registry().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn item_range_guard() {
+        assert!(MAX_ITEM < u64::MAX / 2);
+    }
+
+    #[test]
+    fn registry_names_unique() {
+        let names: Vec<&str> = registry().iter().map(|(n, _)| *n).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn persistent_registry_is_subset() {
+        let all: Vec<&str> = registry().iter().map(|(n, _)| *n).collect();
+        for (n, _) in persistent_registry() {
+            assert!(all.contains(&n), "{n} missing from main registry");
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("perlcrq").is_some());
+        assert!(by_name("nonexistent").is_none());
+        assert!(persistent_by_name("pbqueue").is_some());
+        assert!(persistent_by_name("msq").is_none(), "msq is not persistent");
+    }
+}

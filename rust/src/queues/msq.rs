@@ -1,0 +1,185 @@
+//! Michael–Scott lock-free queue \[19\] — the classic volatile baseline whose
+//! list skeleton LCRQ follows (paper §3). Included for conventional-setting
+//! comparisons and as the substrate for the persist-everything
+//! [`super::durable_msq`] baseline.
+//!
+//! Node layout in the arena: `[next][value]` (2 words).
+
+use std::sync::Arc;
+
+use super::{ConcurrentQueue, QueueError, MAX_ITEM};
+use crate::pmem::{PAddr, PmemPool};
+
+pub struct MsQueue {
+    pool: Arc<PmemPool>,
+    head: PAddr,
+    tail: PAddr,
+}
+
+impl MsQueue {
+    pub fn new(pool: &Arc<PmemPool>, _nthreads: usize) -> Self {
+        let head = pool.alloc_lines(1);
+        let tail = pool.alloc_lines(1);
+        pool.set_hot(head, 1, crate::pmem::Hotness::Global);
+        pool.set_hot(tail, 1, crate::pmem::Hotness::Global);
+        // Sentinel node.
+        let sentinel = pool.alloc(2, 2);
+        pool.store(0, head, sentinel.to_u64());
+        pool.store(0, tail, sentinel.to_u64());
+        Self { pool: Arc::clone(pool), head, tail }
+    }
+
+    fn next_of(node: PAddr) -> PAddr {
+        node
+    }
+
+    fn value_of(node: PAddr) -> PAddr {
+        node.add(1)
+    }
+
+    /// List length excluding the sentinel (test observability).
+    pub fn len(&self, tid: usize) -> usize {
+        let p = &self.pool;
+        let mut n = 0;
+        let mut node = PAddr::from_u64(p.load(tid, self.head));
+        loop {
+            let next = p.load(tid, Self::next_of(node));
+            if next == 0 {
+                return n;
+            }
+            n += 1;
+            node = PAddr::from_u64(next);
+        }
+    }
+}
+
+impl ConcurrentQueue for MsQueue {
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        if item >= MAX_ITEM {
+            return Err(QueueError::ItemOutOfRange(item));
+        }
+        let p = &self.pool;
+        let node = p.alloc(2, 2);
+        p.store(tid, Self::value_of(node), item);
+        // next is already 0 (fresh arena).
+        loop {
+            let l = PAddr::from_u64(p.load(tid, self.tail));
+            let next = p.load(tid, Self::next_of(l));
+            if l.to_u64() != p.load(tid, self.tail) {
+                continue;
+            }
+            if next == 0 {
+                if p.cas(tid, Self::next_of(l), 0, node.to_u64()) {
+                    let _ = p.cas(tid, self.tail, l.to_u64(), node.to_u64());
+                    return Ok(());
+                }
+            } else {
+                // Help advance the lagging tail.
+                let _ = p.cas(tid, self.tail, l.to_u64(), next);
+            }
+        }
+    }
+
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        let p = &self.pool;
+        loop {
+            let h = PAddr::from_u64(p.load(tid, self.head));
+            let t = p.load(tid, self.tail);
+            let next = p.load(tid, Self::next_of(h));
+            if h.to_u64() != p.load(tid, self.head) {
+                continue;
+            }
+            if h.to_u64() == t {
+                if next == 0 {
+                    return Ok(None);
+                }
+                let _ = p.cas(tid, self.tail, t, next);
+            } else {
+                let v = p.load(tid, Self::value_of(PAddr::from_u64(next)));
+                if p.cas(tid, self.head, h.to_u64(), next) {
+                    return Ok(Some(v));
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "msq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+
+    fn mk() -> MsQueue {
+        let pool = Arc::new(PmemPool::new(
+            PmemConfig::default().with_capacity(1 << 20).with_cost(CostModel::zero()),
+        ));
+        MsQueue::new(&pool, 8)
+    }
+
+    #[test]
+    fn fifo() {
+        let q = mk();
+        for v in 0..100u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert_eq!(q.len(0), 100);
+        for v in 0..100u64 {
+            assert_eq!(q.dequeue(1).unwrap(), Some(v));
+        }
+        assert_eq!(q.dequeue(1).unwrap(), None);
+        assert_eq!(q.len(0), 0);
+    }
+
+    #[test]
+    fn empty() {
+        let q = mk();
+        assert_eq!(q.dequeue(0).unwrap(), None);
+    }
+
+    #[test]
+    fn mpmc_stress() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let q = Arc::new(mk());
+        let total = 4 * 1500u64;
+        let consumed = Arc::new(AtomicU64::new(0));
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut hs = Vec::new();
+        for pid in 0..4usize {
+            let q = Arc::clone(&q);
+            hs.push(std::thread::spawn(move || {
+                for i in 0..1500u64 {
+                    q.enqueue(pid, pid as u64 * 10_000 + i).unwrap();
+                }
+            }));
+        }
+        for cid in 0..4usize {
+            let q = Arc::clone(&q);
+            let (consumed, seen) = (Arc::clone(&consumed), Arc::clone(&seen));
+            hs.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while consumed.load(Ordering::Relaxed) < total {
+                    match q.dequeue(4 + cid).unwrap() {
+                        Some(v) => {
+                            got.push(v);
+                            consumed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+                seen.lock().unwrap().extend(got);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let mut all = seen.lock().unwrap().clone();
+        assert_eq!(all.len() as u64, total);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, total);
+    }
+}

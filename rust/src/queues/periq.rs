@@ -1,0 +1,508 @@
+//! PerIQ — the persistent infinite-array queue (paper §4.1, Algorithm 1).
+//!
+//! PerIQ performs exactly **one `pwb` + `psync` pair per operation**, and
+//! always on the cell the operation wrote — a location touched by at most
+//! two threads — respecting both persistence principles of \[1\]: few
+//! persistence instructions, on low-contention variables.
+//!
+//! `Head` and `Tail` are *not* persisted (in the base variant); the
+//! recovery function reconstructs them by scanning `Q`:
+//!
+//! * `Tail` := first cell of the first streak of `n` consecutive `⊥` cells
+//!   (there are at most `n−1` holes between occupied cells, one per
+//!   in-flight enqueuer, so `n` consecutive `⊥`s prove no persisted item
+//!   lies beyond).
+//! * `Head` := one past the last `⊤` left of `Tail` (dequeuers persist the
+//!   `⊤` they swap in, so no persisted-consumed cell may sit at or after
+//!   `Head`).
+//!
+//! The Algorithm 6 variant additionally persists `Tail` every
+//! `periq_tail_interval` enqueues, trading normal-execution throughput for
+//! recovery time (Figures 4–6); recovery then scans only from the persisted
+//! `Tail` onward.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::iq::{dec, enc, IqLayout, BOT, TOP};
+use super::{ConcurrentQueue, PersistentQueue, QueueConfig, QueueError, MAX_ITEM};
+use crate::pmem::{PmemPool, WORDS_PER_LINE};
+use crossbeam_utils::CachePadded;
+
+/// The persistent IQ.
+pub struct PerIq {
+    pool: Arc<PmemPool>,
+    layout: IqLayout,
+    nthreads: usize,
+    /// Persist `Tail` every `k` enqueues (0 = never; Alg. 6 knob).
+    tail_interval: usize,
+    /// Per-thread volatile enqueue counters (`nOps_i` of Alg. 6).
+    nops: Vec<CachePadded<AtomicU64>>,
+}
+
+impl PerIq {
+    pub fn new(pool: &Arc<PmemPool>, nthreads: usize, cfg: QueueConfig) -> Self {
+        assert!(nthreads >= 1);
+        Self {
+            pool: Arc::clone(pool),
+            layout: IqLayout::alloc(pool, cfg.iq_capacity),
+            nthreads,
+            tail_interval: cfg.periq_tail_interval,
+            nops: (0..nthreads).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+        }
+    }
+
+    /// Current head/tail (test observability).
+    pub fn indices(&self, tid: usize) -> (u64, u64) {
+        (self.pool.load(tid, self.layout.head), self.pool.load(tid, self.layout.tail))
+    }
+
+    /// Number of live items (test observability; not linearizable).
+    pub fn approx_len(&self, tid: usize) -> u64 {
+        let (h, t) = self.indices(tid);
+        t.saturating_sub(h)
+    }
+
+    /// Algorithm 6: persist `Tail` and `Head` every `tail_interval`
+    /// operations of this thread. (Alg. 6 shows the enqueue side; we count
+    /// dequeues too so the recovery window bound `Head_live − H₀ ≤ n·k + n`
+    /// holds under dequeue-heavy phases as well.)
+    #[inline]
+    fn maybe_persist_endpoints(&self, tid: usize) {
+        if self.tail_interval == 0 {
+            return;
+        }
+        let n = self.nops[tid].fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.tail_interval as u64 == 0 {
+            let p = &self.pool;
+            p.pwb(tid, self.layout.tail);
+            p.pwb(tid, self.layout.head);
+            p.psync(tid);
+        }
+    }
+}
+
+impl ConcurrentQueue for PerIq {
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        if item >= MAX_ITEM {
+            return Err(QueueError::ItemOutOfRange(item));
+        }
+        let p = &self.pool;
+        loop {
+            let t = p.fai(tid, self.layout.tail); // line 3
+            if t as usize >= self.layout.capacity {
+                return Err(QueueError::CapacityExhausted);
+            }
+            let cell = self.layout.cell(t);
+            let old = p.swap(tid, cell, enc(item));
+            if old == BOT {
+                // line 5: the ONLY persistence pair of the operation.
+                p.pwb(tid, cell);
+                p.psync(tid);
+                self.maybe_persist_endpoints(tid);
+                return Ok(());
+            }
+            // Retry path: our blind swap displaced the dequeuer's (durable)
+            // ⊤ with an item we are about to re-enqueue elsewhere. Restore
+            // the ⊤ before retrying — otherwise a crash-time eviction of
+            // this line can persist the abandoned copy and recovery would
+            // resurrect the value at TWO indices (a duplicate). This
+            // corner is absent from the paper's Algorithm 1 (its proofs
+            // only reason about each operation's *final* iteration; CRQ is
+            // immune because its CAS2 never writes blindly) — see
+            // EXPERIMENTS.md §Deviations.
+            debug_assert_eq!(old, TOP);
+            p.store(tid, cell, TOP);
+        }
+    }
+
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        let p = &self.pool;
+        loop {
+            let h = p.fai(tid, self.layout.head); // line 9
+            if h as usize >= self.layout.capacity {
+                return Err(QueueError::CapacityExhausted);
+            }
+            let cell = self.layout.cell(h);
+            let x = p.swap(tid, cell, TOP); // line 10
+            if x != BOT {
+                debug_assert_ne!(x, TOP, "cell dequeued twice");
+                // line 12: persist the ⊤ we wrote — one pair per op.
+                p.pwb(tid, cell);
+                p.psync(tid);
+                self.maybe_persist_endpoints(tid);
+                return Ok(Some(dec(x)));
+            }
+            let t = p.load(tid, self.layout.tail); // line 14
+            if t <= h + 1 {
+                // line 15: persist the ⊤ marking this head position so the
+                // EMPTY response is durable.
+                p.pwb(tid, cell);
+                p.psync(tid);
+                self.maybe_persist_endpoints(tid);
+                return Ok(None);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        if self.tail_interval > 0 {
+            "periq-ptail"
+        } else {
+            "periq"
+        }
+    }
+}
+
+impl PersistentQueue for PerIq {
+    /// Algorithm 1, lines 17–26.
+    ///
+    /// Both scans are *bounded below* by whatever endpoint values reached
+    /// NVM (via the Alg. 6 periodic persists, or opportunistic eviction):
+    /// a persisted `Tail = T₀` witnesses that indices `< T₀` were claimed,
+    /// so the ⊥-streak scan may start there; a persisted `Head = H₀`
+    /// witnesses dequeues up to `H₀` (the paper's "deq is persisted if some
+    /// value of Head ≥ i has been written back"), so the ⊤ walk-back may
+    /// stop there. This is what makes the persist-endpoints variant's
+    /// recovery O(interval) instead of O(queue length) — the Figs. 4–6
+    /// tradeoff.
+    fn recover(&self, pool: &PmemPool) {
+        let tid = 0;
+        let cap = self.layout.capacity as u64;
+        let n = self.nthreads as u64;
+
+        // --- Recover Tail (lines 18-23) ---
+        let tail_start = pool.load(tid, self.layout.tail); // persisted (or 0)
+        let head_floor = pool.load(tid, self.layout.head); // persisted (or 0)
+        let mut scan = tail_start;
+        let mut count_bot: u64 = 0;
+        let mut tail;
+        while count_bot < n && scan < cap {
+            if pool.load(tid, self.layout.cell(scan)) == BOT {
+                count_bot += 1;
+            } else {
+                count_bot = 0;
+            }
+            scan += 1;
+        }
+        if count_bot >= n {
+            // First cell of the ⊥ streak.
+            tail = scan - n;
+        } else {
+            // Degenerate: array exhausted without a streak — everything up
+            // to `scan` is (or was) used.
+            tail = scan;
+        }
+        tail = tail.max(tail_start);
+
+        // --- Recover Head (lines 24-26) ---
+        // Head must land right after the LAST persisted ⊤ (so no ⊤ remains
+        // in [Head, Tail) and every persisted dequeue is linearized along
+        // with the in-flight "holes" below it — §4.1).
+        let mut head;
+        if self.tail_interval > 0 {
+            // Persist-endpoints variant: every thread flushes Head at
+            // least every `k` of its ops, so no dequeue index can exceed
+            // H₀ + n·k + n. A bounded FORWARD scan over that window finds
+            // the last ⊤ in O(n·k) — independent of queue size (the flat
+            // curve of Fig. 5).
+            let window = self.nthreads as u64 * self.tail_interval as u64 + n;
+            let limit = tail.min(head_floor.saturating_add(window)).min(cap);
+            head = head_floor;
+            let mut i = head_floor;
+            while i < limit {
+                if pool.load(tid, self.layout.cell(i)) == TOP {
+                    head = i + 1;
+                }
+                i += 1;
+            }
+        } else {
+            // Pure PerIQ: walk left from Tail until the first ⊤ (or the
+            // floor) — O(queue length), the growing curve of Fig. 5.
+            head = tail;
+            while head > head_floor {
+                if pool.load(tid, self.layout.cell(head - 1)) == TOP {
+                    break;
+                }
+                head -= 1;
+            }
+        }
+        head = head.max(head_floor);
+
+        pool.store(tid, self.layout.tail, tail);
+        pool.store(tid, self.layout.head, head);
+        // Make the recovered endpoints durable so a repeated crash during
+        // the next epoch cannot observe pre-recovery endpoint values.
+        pool.pwb(tid, self.layout.tail);
+        pool.pwb(tid, self.layout.head);
+        pool.psync(tid);
+
+        // Volatile bookkeeping dies with the crash.
+        for c in &self.nops {
+            c.store(0, Ordering::Relaxed);
+        }
+        let _ = WORDS_PER_LINE; // (layout granularity documented above)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn mk(nthreads: usize, tail_interval: usize) -> (Arc<PmemPool>, PerIq) {
+        let pool = Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: 1 << 18,
+            cost: CostModel::zero(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 42,
+        }));
+        let cfg = QueueConfig {
+            iq_capacity: 1 << 12,
+            periq_tail_interval: tail_interval,
+            ..Default::default()
+        };
+        let q = PerIq::new(&pool, nthreads, cfg);
+        (pool, q)
+    }
+
+    #[test]
+    fn fifo_and_empty() {
+        let (_p, q) = mk(2, 0);
+        for v in 0..64u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        for v in 0..64u64 {
+            assert_eq!(q.dequeue(1).unwrap(), Some(v));
+        }
+        assert_eq!(q.dequeue(1).unwrap(), None);
+    }
+
+    #[test]
+    fn ops_persist_exactly_one_pair() {
+        let (p, q) = mk(1, 0);
+        p.stats.reset();
+        q.enqueue(0, 5).unwrap();
+        let s = p.stats.total();
+        assert_eq!(s.pwbs, 1, "enqueue must issue exactly one pwb");
+        assert_eq!(s.psyncs, 1, "enqueue must issue exactly one psync");
+        p.stats.reset();
+        let _ = q.dequeue(0).unwrap();
+        let s = p.stats.total();
+        assert_eq!(s.pwbs, 1, "dequeue must issue exactly one pwb");
+        assert_eq!(s.psyncs, 1);
+    }
+
+    #[test]
+    fn completed_ops_survive_crash() {
+        let (p, q) = mk(2, 0);
+        for v in 10..20u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        // Consume a prefix.
+        for v in 10..13u64 {
+            assert_eq!(q.dequeue(1).unwrap(), Some(v));
+        }
+        let mut rng = Xoshiro256::seed_from(1);
+        p.crash(&mut rng);
+        q.recover(&p);
+        // Remaining items must come out in order.
+        for v in 13..20u64 {
+            assert_eq!(q.dequeue(0).unwrap(), Some(v), "item {v} lost across crash");
+        }
+        assert_eq!(q.dequeue(0).unwrap(), None);
+    }
+
+    #[test]
+    fn recovery_on_empty_queue() {
+        let (p, q) = mk(2, 0);
+        let mut rng = Xoshiro256::seed_from(2);
+        p.crash(&mut rng);
+        q.recover(&p);
+        assert_eq!(q.dequeue(0).unwrap(), None);
+        q.enqueue(0, 3).unwrap();
+        assert_eq!(q.dequeue(1).unwrap(), Some(3));
+    }
+
+    #[test]
+    fn recovery_after_total_drain() {
+        let (p, q) = mk(2, 0);
+        for v in 0..32u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        for _ in 0..32 {
+            assert!(q.dequeue(1).unwrap().is_some());
+        }
+        let mut rng = Xoshiro256::seed_from(3);
+        p.crash(&mut rng);
+        q.recover(&p);
+        assert_eq!(q.dequeue(0).unwrap(), None, "drained queue must recover empty");
+        // And stays usable.
+        q.enqueue(0, 77).unwrap();
+        assert_eq!(q.dequeue(1).unwrap(), Some(77));
+    }
+
+    #[test]
+    fn recovered_tail_skips_holes_up_to_n() {
+        // Simulate in-flight enqueuers' holes: indices 8..16 were claimed
+        // by enqueuers that crashed before persisting anything (a full
+        // cache line of holes — pwb granularity is the line, so holes
+        // inside a persisted line would be flushed along with it). With
+        // n = 9 threads, an 8-hole streak must NOT stop the tail scan; the
+        // persisted item at index 16 must be found.
+        let (p, q) = mk(9, 0);
+        for v in 0..8u64 {
+            q.enqueue(0, 100 + v).unwrap(); // idx 0-7 (line 0), persisted
+        }
+        for _ in 8..16u64 {
+            let _ = p.fai(0, q.layout.tail); // claim idx 8..15, write nothing
+        }
+        q.enqueue(0, 200).unwrap(); // idx 16 (line 2), persisted
+        let mut rng = Xoshiro256::seed_from(4);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let (h, t) = q.indices(0);
+        assert_eq!(h, 0);
+        assert_eq!(t, 17, "tail must be past the persisted item at idx 16");
+        for v in 0..8u64 {
+            assert_eq!(q.dequeue(0).unwrap(), Some(100 + v));
+        }
+        // Holes 8..15 are skipped by the dequeue retry loop.
+        assert_eq!(q.dequeue(0).unwrap(), Some(200));
+        assert_eq!(q.dequeue(0).unwrap(), None);
+    }
+
+    #[test]
+    fn tail_interval_persists_endpoints() {
+        let (p, q) = mk(1, 4);
+        p.stats.reset();
+        for v in 0..8u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        let s = p.stats.total();
+        // 8 cell pwbs + 2 endpoint flushes × 2 lines = 12.
+        assert_eq!(s.pwbs, 12);
+        assert_eq!(q.name(), "periq-ptail");
+        // Crash: persisted tail makes recovery start late.
+        let mut rng = Xoshiro256::seed_from(5);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let (h, t) = q.indices(0);
+        assert_eq!(t, 8);
+        assert_eq!(h, 0);
+    }
+
+    #[test]
+    fn recovery_scan_cost_scales_with_queue_size() {
+        // The paper's Figs 4-5 tradeoff: pure PerIQ recovery scans the used
+        // prefix; the persist-tail variant scans O(n).
+        let (p0, q0) = mk(1, 0);
+        let (p1, q1) = mk(1, 1);
+        for v in 0..1000u64 {
+            q0.enqueue(0, v).unwrap();
+            q1.enqueue(0, v).unwrap();
+        }
+        let mut rng = Xoshiro256::seed_from(6);
+        p0.crash(&mut rng);
+        p1.crash(&mut rng);
+        p0.reset_meter();
+        p1.reset_meter();
+        q0.recover(&p0);
+        q1.recover(&p1);
+        let scan0 = p0.stats.total().loads;
+        let scan1 = p1.stats.total().loads;
+        assert!(
+            scan0 > scan1 * 10,
+            "pure PerIQ recovery ({scan0} loads) must scan far more than \
+             persist-tail recovery ({scan1} loads)"
+        );
+    }
+
+    #[test]
+    fn abandoned_retry_cell_cannot_resurrect_value() {
+        // Regression: an enqueue that retries past a ⊤-burned cell must
+        // not leave its item there in the cache view — with eviction, that
+        // copy would persist and recovery would duplicate the value.
+        let pool = Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: 1 << 18,
+            cost: CostModel::zero(),
+            evict_prob: 1.0, // every dirty line persists at crash
+            pending_flush_prob: 1.0,
+            seed: 42,
+        }));
+        let cfg = QueueConfig { iq_capacity: 1 << 12, ..Default::default() };
+        let q = PerIq::new(&pool, 2, cfg);
+        // Burn index 0 with an EMPTY dequeue (⊤ persisted by its pwb).
+        assert_eq!(q.dequeue(1).unwrap(), None);
+        // The enqueue gets t=0, hits the ⊤, retries and lands at t=1.
+        q.enqueue(0, 777).unwrap();
+        let mut rng = Xoshiro256::seed_from(7);
+        pool.crash(&mut rng);
+        q.recover(&pool);
+        let mut drained = Vec::new();
+        while let Some(v) = q.dequeue(0).unwrap() {
+            drained.push(v);
+        }
+        assert_eq!(drained, vec![777], "value must appear exactly once, got {drained:?}");
+    }
+
+    #[test]
+    fn concurrent_crash_cycle_no_dup_no_invented() {
+        use crate::pmem::crash::{install_quiet_crash_hook, run_guarded};
+        install_quiet_crash_hook();
+        let pool = Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: 1 << 20,
+            cost: CostModel::zero(),
+            evict_prob: 0.3,
+            pending_flush_prob: 0.5,
+            seed: 9,
+        }));
+        let cfg = QueueConfig { iq_capacity: 1 << 14, ..Default::default() };
+        let q = Arc::new(PerIq::new(&pool, 4, cfg));
+        pool.arm_crash_after(5_000);
+        let mut handles = Vec::new();
+        for tid in 0..4usize {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                let _ = run_guarded(|| {
+                    for i in 0..100_000u64 {
+                        let v = tid as u64 * 1_000_000 + i;
+                        if q.enqueue(tid, v).is_err() {
+                            break;
+                        }
+                        if let Ok(Some(x)) = q.dequeue(tid) {
+                            got.push(x);
+                        }
+                    }
+                });
+                got
+            }));
+        }
+        let mut pre_crash: Vec<u64> = Vec::new();
+        for h in handles {
+            pre_crash.extend(h.join().unwrap());
+        }
+        let mut rng = Xoshiro256::seed_from(10);
+        pool.crash(&mut rng);
+        q.recover(&pool);
+        // Drain everything left.
+        let mut post: Vec<u64> = Vec::new();
+        while let Some(v) = q.dequeue(0).unwrap() {
+            post.push(v);
+        }
+        // No duplicates between pre-crash returns and post-crash drains.
+        let mut all = pre_crash.clone();
+        all.extend(&post);
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate item across crash boundary");
+        // No invented values.
+        for v in &all {
+            assert!(v % 1_000_000 < 100_000, "invented value {v}");
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! Interchange contract (see python/compile/aot.py and
+//! /opt/xla-example/README.md): artifacts are HLO **text**;
+//! `HloModuleProto::from_text_file` reparses and reassigns instruction ids,
+//! sidestepping the 64-bit-id protos that xla_extension 0.5.1 rejects.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Shapes the artifacts were exported with (must match python/compile).
+pub const METRICS_ROWS: usize = 64;
+pub const METRICS_COLS: usize = 128;
+pub const METRICS_SAMPLES: usize = METRICS_ROWS * METRICS_COLS;
+pub const NBINS: usize = 64;
+pub const FIT_POINTS: usize = 16;
+
+/// Compiled artifact bundle on a PJRT CPU client.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    metrics_exe: xla::PjRtLoadedExecutable,
+    fit_exe: xla::PjRtLoadedExecutable,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load and compile `metrics.hlo.txt` + `fit.hlo.txt` from `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+        };
+        Ok(Engine {
+            metrics_exe: compile("metrics.hlo.txt")?,
+            fit_exe: compile("fit.hlo.txt")?,
+            client,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Artifact directory this engine was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Run the metrics pipeline on up to [`METRICS_SAMPLES`] samples
+    /// (extra samples are deterministically stride-downsampled; fewer are
+    /// padded with the `-1` sentinel).
+    ///
+    /// Returns `(stats\[8\], hist[NBINS])` with stats
+    /// `[count, mean, std, min, max, p50, p95, p99]`.
+    pub fn metrics(&self, samples: &[f64]) -> Result<([f64; 8], Vec<f64>)> {
+        let mut buf = vec![-1.0f32; METRICS_SAMPLES];
+        if samples.len() <= METRICS_SAMPLES {
+            for (i, &s) in samples.iter().enumerate() {
+                buf[i] = s as f32;
+            }
+        } else {
+            // Deterministic stride sampling keeps the distribution shape.
+            let stride = samples.len() as f64 / METRICS_SAMPLES as f64;
+            for i in 0..METRICS_SAMPLES {
+                buf[i] = samples[(i as f64 * stride) as usize] as f32;
+            }
+        }
+        let lit = xla::Literal::vec1(&buf)
+            .reshape(&[METRICS_ROWS as i64, METRICS_COLS as i64])?;
+        let result = self.metrics_exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        let (stats_l, hist_l) = result.to_tuple2()?;
+        let stats_v = stats_l.to_vec::<f32>()?;
+        let hist_v = hist_l.to_vec::<f32>()?;
+        anyhow::ensure!(stats_v.len() == 8, "bad stats arity {}", stats_v.len());
+        anyhow::ensure!(hist_v.len() == NBINS, "bad hist arity {}", hist_v.len());
+        let mut stats = [0.0f64; 8];
+        for (o, v) in stats.iter_mut().zip(&stats_v) {
+            *o = *v as f64;
+        }
+        Ok((stats, hist_v.into_iter().map(|v| v as f64).collect()))
+    }
+
+    /// Fit the saturating-throughput model `t(n) = n/(a + b·n)` over up to
+    /// [`FIT_POINTS`] `(threads, throughput)` points. Returns
+    /// `[a, b, plateau]`.
+    pub fn fit(&self, ns: &[f64], tputs: &[f64]) -> Result<[f64; 3]> {
+        anyhow::ensure!(ns.len() == tputs.len(), "fit arity mismatch");
+        anyhow::ensure!(ns.len() <= FIT_POINTS, "at most {FIT_POINTS} fit points");
+        let mut nbuf = vec![0.0f32; FIT_POINTS];
+        let mut tbuf = vec![0.0f32; FIT_POINTS]; // tput <= 0 is masked out
+        for i in 0..ns.len() {
+            nbuf[i] = ns[i] as f32;
+            tbuf[i] = tputs[i] as f32;
+        }
+        let ln = xla::Literal::vec1(&nbuf);
+        let lt = xla::Literal::vec1(&tbuf);
+        let result =
+            self.fit_exe.execute::<xla::Literal>(&[ln, lt])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?.to_vec::<f32>()?;
+        anyhow::ensure!(out.len() == 3, "bad fit arity {}", out.len());
+        Ok([out[0] as f64, out[1] as f64, out[2] as f64])
+    }
+}
+
+/// Locate the artifacts directory: `$PERSIQ_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace root (walking up from cwd).
+pub fn default_artifact_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("PERSIQ_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("metrics.hlo.txt").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("metrics.hlo.txt").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Pure-Rust metrics fallback, mirroring the L2 pipeline's semantics
+//! (including its histogram-CDF quantiles) so the PJRT artifact can be
+//! cross-checked bit-for-bit-ish in integration tests, and the CLI keeps
+//! working without artifacts.
+
+use super::engine::NBINS;
+
+/// Compute `(stats\[8\], hist[NBINS])` exactly like `model.metrics` does:
+/// normalize to `[min, max)`, 64-bucket histogram, moments, CDF quantiles.
+pub fn metrics(samples: &[f64]) -> ([f64; 8], Vec<f64>) {
+    let valid: Vec<f64> = samples.iter().cloned().filter(|&x| x >= 0.0).collect();
+    let count = valid.len() as f64;
+    if valid.is_empty() {
+        return ([0.0; 8], vec![0.0; NBINS]);
+    }
+    let mn = valid.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mx = valid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let width = (mx - mn).max(1e-6);
+    let mut hist = vec![0.0f64; NBINS];
+    let mut sum = 0.0;
+    let mut sumsq = 0.0;
+    for &x in &valid {
+        let n = (x - mn) / (width * (1.0 + 1e-6));
+        let b = ((n * NBINS as f64) as usize).min(NBINS - 1);
+        hist[b] += 1.0;
+        sum += n;
+        sumsq += n * n;
+    }
+    let mean_n = sum / count;
+    let var_n = (sumsq / count - mean_n * mean_n).max(0.0);
+    let mean = mn + mean_n * width;
+    let std = var_n.sqrt() * width;
+    // Quantiles from the histogram CDF, matching model.metrics.
+    let quantile = |p: f64| -> f64 {
+        let target = p * count;
+        let mut cum = 0.0;
+        for (i, h) in hist.iter().enumerate() {
+            cum += h;
+            if cum >= target {
+                return mn + (i as f64 + 1.0) / NBINS as f64 * width;
+            }
+        }
+        mx
+    };
+    (
+        [count, mean, std, mn, mx, quantile(0.50), quantile(0.95), quantile(0.99)],
+        hist,
+    )
+}
+
+/// Closed-form least-squares of `t(n) = n/(a + b·n)` (linearized), exactly
+/// like `model.fit_scaling`. Entries with `tput <= 0` are masked.
+pub fn fit(ns: &[f64], tputs: &[f64]) -> [f64; 3] {
+    assert_eq!(ns.len(), tputs.len());
+    let (mut n, mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for (&x, &t) in ns.iter().zip(tputs) {
+        if t <= 0.0 {
+            continue;
+        }
+        let y = x / t;
+        n += 1.0;
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+    }
+    if n < 1.0 {
+        return [0.0; 3];
+    }
+    let denom = n * sxx - sx * sx;
+    let b = if denom.abs() > 1e-9 { (n * sxy - sx * sy) / denom } else { 0.0 };
+    let a = (sy - b * sx) / n;
+    let plateau = if b.abs() > 1e-12 { 1.0 / b } else { 0.0 };
+    [a, b, plateau]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_data() {
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let (s, hist) = metrics(&samples);
+        assert_eq!(s[0], 1000.0);
+        assert!((s[1] - 500.5).abs() < 0.5);
+        assert!((s[3] - 1.0).abs() < 1e-9);
+        assert!((s[4] - 1000.0).abs() < 1e-9);
+        // p50 within one bucket (~15.6) of 500.
+        assert!((s[5] - 500.0).abs() < 20.0, "p50={}", s[5]);
+        assert!((s[6] - 950.0).abs() < 20.0, "p95={}", s[6]);
+        assert_eq!(hist.iter().sum::<f64>(), 1000.0);
+    }
+
+    #[test]
+    fn empty_and_padding() {
+        let (s, hist) = metrics(&[-1.0, -1.0]);
+        assert_eq!(s[0], 0.0);
+        assert_eq!(hist.iter().sum::<f64>(), 0.0);
+        let (s, _) = metrics(&[5.0, -1.0, 7.0]);
+        assert_eq!(s[0], 2.0);
+        assert!((s[1] - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_data() {
+        let (s, _) = metrics(&[42.0; 64]);
+        assert_eq!(s[0], 64.0);
+        assert!((s[1] - 42.0).abs() < 1e-6);
+        assert!(s[2].abs() < 1e-6);
+    }
+
+    #[test]
+    fn fit_recovers_parameters() {
+        let ns: Vec<f64> = (1..=16).map(|i| i as f64).collect();
+        let t: Vec<f64> = ns.iter().map(|&n| n / (2.0 + 0.05 * n)).collect();
+        let [a, b, plateau] = fit(&ns, &t);
+        assert!((a - 2.0).abs() < 1e-6);
+        assert!((b - 0.05).abs() < 1e-9);
+        assert!((plateau - 20.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fit_masks_zero_tput() {
+        let ns: Vec<f64> = (1..=16).map(|i| i as f64).collect();
+        let mut t: Vec<f64> = ns.iter().map(|&n| n / (1.0 + 0.1 * n)).collect();
+        for v in t.iter_mut().skip(10) {
+            *v = 0.0;
+        }
+        let [_, b, _] = fit(&ns, &t);
+        assert!((b - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,147 @@
+//! The metrics facade: PJRT artifact execution with pure-Rust fallback.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::engine::{default_artifact_dir, Engine};
+use super::fallback;
+
+/// Aggregated statistics for one latency-sample set.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsOut {
+    pub count: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub hist: Vec<f64>,
+    /// "pjrt" or "fallback" — recorded in reports for transparency.
+    pub backend: &'static str,
+}
+
+impl MetricsOut {
+    fn from_raw(stats: [f64; 8], hist: Vec<f64>, backend: &'static str) -> Self {
+        Self {
+            count: stats[0],
+            mean: stats[1],
+            std: stats[2],
+            min: stats[3],
+            max: stats[4],
+            p50: stats[5],
+            p95: stats[6],
+            p99: stats[7],
+            hist,
+            backend,
+        }
+    }
+}
+
+/// Scaling-model fit result (`t(n) = n / (a + b·n)`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalingFit {
+    pub a: f64,
+    pub b: f64,
+    /// Saturation throughput `1/b`.
+    pub plateau: f64,
+}
+
+/// The engine: PJRT-compiled artifacts when available, fallback otherwise.
+pub enum MetricsEngine {
+    Pjrt(Engine),
+    Fallback,
+}
+
+impl MetricsEngine {
+    /// Load from the default artifact location; fall back (with a warning)
+    /// when artifacts are missing or fail to compile.
+    pub fn auto() -> MetricsEngine {
+        match default_artifact_dir() {
+            Some(dir) => match Engine::load(&dir) {
+                Ok(e) => {
+                    crate::log_info!(
+                        "metrics engine: PJRT artifacts from {}",
+                        dir.display()
+                    );
+                    MetricsEngine::Pjrt(e)
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "metrics engine: artifact load failed ({e:#}); using Rust fallback"
+                    );
+                    MetricsEngine::Fallback
+                }
+            },
+            None => {
+                crate::log_warn!(
+                    "metrics engine: no artifacts found (run `make artifacts`); using \
+                     Rust fallback"
+                );
+                MetricsEngine::Fallback
+            }
+        }
+    }
+
+    /// Load from an explicit directory (errors instead of falling back).
+    pub fn from_dir(dir: &Path) -> Result<MetricsEngine> {
+        Ok(MetricsEngine::Pjrt(Engine::load(dir)?))
+    }
+
+    pub fn backend(&self) -> &'static str {
+        match self {
+            MetricsEngine::Pjrt(_) => "pjrt",
+            MetricsEngine::Fallback => "fallback",
+        }
+    }
+
+    /// Aggregate latency samples (negative entries are padding).
+    pub fn metrics(&self, samples: &[f64]) -> Result<MetricsOut> {
+        match self {
+            MetricsEngine::Pjrt(e) => {
+                let (stats, hist) = e.metrics(samples)?;
+                Ok(MetricsOut::from_raw(stats, hist, "pjrt"))
+            }
+            MetricsEngine::Fallback => {
+                let (stats, hist) = fallback::metrics(samples);
+                Ok(MetricsOut::from_raw(stats, hist, "fallback"))
+            }
+        }
+    }
+
+    /// Fit the saturating scaling model to `(threads, throughput)` points.
+    pub fn fit(&self, ns: &[f64], tputs: &[f64]) -> Result<ScalingFit> {
+        let [a, b, plateau] = match self {
+            MetricsEngine::Pjrt(e) => e.fit(ns, tputs)?,
+            MetricsEngine::Fallback => fallback::fit(ns, tputs),
+        };
+        Ok(ScalingFit { a, b, plateau })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_metrics_roundtrip() {
+        let eng = MetricsEngine::Fallback;
+        let samples: Vec<f64> = (0..100).map(|i| 100.0 + i as f64).collect();
+        let m = eng.metrics(&samples).unwrap();
+        assert_eq!(m.count, 100.0);
+        assert_eq!(m.backend, "fallback");
+        assert!(m.min >= 100.0 && m.max <= 199.0 + 1e-9);
+        assert!(m.p50 > m.min && m.p99 <= m.max + 3.0);
+    }
+
+    #[test]
+    fn fallback_fit() {
+        let eng = MetricsEngine::Fallback;
+        let ns: Vec<f64> = (1..=8).map(|i| i as f64).collect();
+        let t: Vec<f64> = ns.iter().map(|&n| n / (1.0 + 0.2 * n)).collect();
+        let f = eng.fit(&ns, &t).unwrap();
+        assert!((f.plateau - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas metrics pipeline
+//! (HLO text artifacts produced by `python/compile/aot.py`) and executes
+//! it from Rust. Python never runs at analysis time; the `persiq` binary
+//! is self-contained once `make artifacts` has been run.
+//!
+//! * [`engine`] — PJRT client wrapper: text → `HloModuleProto` → compile →
+//!   execute (pattern from /opt/xla-example/load_hlo).
+//! * [`fallback`] — a pure-Rust implementation of the same statistics,
+//!   used (a) to cross-check the artifact numerics in tests, and (b) to
+//!   keep the CLI functional when artifacts are absent (with a warning).
+//! * [`metrics`] — the user-facing facade choosing PJRT or fallback.
+
+pub mod engine;
+pub mod fallback;
+pub mod metrics;
+
+pub use metrics::{MetricsEngine, MetricsOut, ScalingFit};

@@ -1,0 +1,101 @@
+//! Thread placement. The paper pins threads round-robin across NUMA nodes
+//! (§5). On this single-core testbed pinning is a no-op, but the API and the
+//! NUMA-style round-robin *placement order* are kept so thread ids map to
+//! simulated sockets deterministically (the virtual-time model can charge
+//! cross-socket penalties based on it).
+
+/// Logical placement of a worker thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    /// Simulated socket (NUMA node) index.
+    pub socket: usize,
+    /// Simulated core within the socket.
+    pub core: usize,
+}
+
+/// Compute the paper's round-robin-across-sockets placement for `tid` out of
+/// `sockets` simulated sockets with `cores_per_socket` cores each
+/// (hyperthreads fold onto the same core once all cores are used).
+pub fn place(tid: usize, sockets: usize, cores_per_socket: usize) -> Placement {
+    let sockets = sockets.max(1);
+    let cps = cores_per_socket.max(1);
+    let socket = tid % sockets;
+    let round = tid / sockets;
+    Placement { socket, core: round % cps }
+}
+
+/// Try to pin the calling thread to `cpu` (Linux). Returns false if the
+/// syscall fails or there is only one CPU — callers treat pinning as
+/// best-effort.
+pub fn pin_to_cpu(cpu: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let ncpu = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
+        if ncpu <= 1 {
+            return false;
+        }
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(cpu % ncpu as usize, &mut set);
+        libc::pthread_setaffinity_np(
+            libc::pthread_self(),
+            std::mem::size_of::<libc::cpu_set_t>(),
+            &set,
+        ) == 0
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+        false
+    }
+}
+
+/// Number of online CPUs.
+pub fn num_cpus() -> usize {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let n = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
+        if n < 1 {
+            1
+        } else {
+            n as usize
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_across_sockets() {
+        // 2 sockets, 24 cores each — the paper's topology.
+        let p: Vec<Placement> = (0..6).map(|t| place(t, 2, 24)).collect();
+        assert_eq!(p[0], Placement { socket: 0, core: 0 });
+        assert_eq!(p[1], Placement { socket: 1, core: 0 });
+        assert_eq!(p[2], Placement { socket: 0, core: 1 });
+        assert_eq!(p[3], Placement { socket: 1, core: 1 });
+        assert_eq!(p[4], Placement { socket: 0, core: 2 });
+        assert_eq!(p[5], Placement { socket: 1, core: 2 });
+    }
+
+    #[test]
+    fn hyperthread_folding() {
+        // 1 socket, 2 cores: tids 0,1 on cores 0,1; tids 2,3 fold back.
+        assert_eq!(place(2, 1, 2).core, 0);
+        assert_eq!(place(3, 1, 2).core, 1);
+    }
+
+    #[test]
+    fn degenerate_topology() {
+        assert_eq!(place(5, 0, 0), Placement { socket: 0, core: 0 });
+    }
+
+    #[test]
+    fn num_cpus_positive() {
+        assert!(num_cpus() >= 1);
+    }
+}

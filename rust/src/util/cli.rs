@@ -1,0 +1,235 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. Produces `--help` text from registered option metadata.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option (for help text + validation).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed argument bag for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Option value as string (explicit or `None`).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Was the bare flag present?
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.values.contains_key(key)
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Typed getter with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: {s:?}")),
+        }
+    }
+
+    /// Comma-separated list getter, e.g. `--threads 1,2,4,8`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> anyhow::Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|_| anyhow::anyhow!("invalid element in --{key}: {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Insert (used by the parser and by tests).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+}
+
+/// Command definition: name, about text, options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self, prog: &str) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} {}\n  {}\n\nOPTIONS:", prog, self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(out, "  --{}{}\n        {}{}", o.name, val, o.help, def);
+        }
+        out
+    }
+
+    /// Parse `argv` (after the subcommand name). Unknown `--opts` error out.
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.set(o.name, d);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                if key == "help" {
+                    anyhow::bail!("{}", self.help_text("persiq"));
+                }
+                let spec = self
+                    .spec(key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.help_text("persiq")))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} requires a value"))?
+                        }
+                    };
+                    args.set(key, &v);
+                } else {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{key} does not take a value");
+                    }
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("bench", "run a benchmark")
+            .opt_default("ops", "total operations", "1000")
+            .opt("threads", "thread list")
+            .flag("verbose", "chatty output")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_parse::<u64>("ops", 0).unwrap(), 1000);
+        let a = cmd().parse(&sv(&["--ops", "5"])).unwrap();
+        assert_eq!(a.get_parse::<u64>("ops", 0).unwrap(), 5);
+        let a = cmd().parse(&sv(&["--ops=7"])).unwrap();
+        assert_eq!(a.get_parse::<u64>("ops", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = cmd().parse(&sv(&["--verbose", "pos1", "pos2"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = cmd().parse(&sv(&["--threads", "1,2, 4,8"])).unwrap();
+        assert_eq!(a.get_list::<usize>("threads", &[]).unwrap(), vec![1, 2, 4, 8]);
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_list::<usize>("threads", &[3]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&sv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&sv(&["--threads"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&sv(&["--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = cmd().help_text("persiq");
+        assert!(h.contains("--ops"));
+        assert!(h.contains("default: 1000"));
+    }
+}

@@ -1,0 +1,84 @@
+//! Tiny leveled logger writing to stderr. Controlled by `PERSIQ_LOG`
+//! (error|warn|info|debug|trace) or programmatically via [`set_level`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info default
+static INIT: std::sync::Once = std::sync::Once::new();
+
+fn init_from_env() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("PERSIQ_LOG") {
+            let lvl = match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "info" => Level::Info,
+                "debug" => Level::Debug,
+                "trace" => Level::Trace,
+                _ => Level::Info,
+            };
+            LEVEL.store(lvl as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Set the global log level.
+pub fn set_level(lvl: Level) {
+    init_from_env();
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// Is `lvl` currently enabled?
+pub fn enabled(lvl: Level) -> bool {
+    init_from_env();
+    (lvl as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a log record (used by the macros).
+pub fn log(lvl: Level, args: std::fmt::Arguments) {
+    if enabled(lvl) {
+        let tag = match lvl {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[persiq {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained infrastructure utilities.
+//!
+//! This build image is offline: `clap`, `serde`, `rand`, `criterion`,
+//! `proptest` are unavailable, so the framework ships minimal, tested
+//! replacements: a splittable PRNG ([`rng`]), a CLI argument parser
+//! ([`cli`]), a TOML-subset config reader ([`toml`]), CSV/JSON report
+//! writers ([`report`]), a leveled logger ([`logging`]), and timing helpers
+//! ([`time`]).
+
+pub mod affinity;
+pub mod cli;
+pub mod logging;
+pub mod report;
+pub mod rng;
+pub mod time;
+pub mod toml;

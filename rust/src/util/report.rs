@@ -1,0 +1,254 @@
+//! Result reporters: CSV writer, tiny JSON writer, and aligned ASCII tables
+//! (the bench harness prints the same rows the paper's figures plot, and
+//! persists them as CSV under `results/`).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple column-ordered CSV writer.
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn escape(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                r.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent dirs.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())?;
+        Ok(())
+    }
+
+    /// Render as an aligned ASCII table for terminal output.
+    pub fn to_table(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len().saturating_sub(1));
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(r, &widths));
+        }
+        out
+    }
+}
+
+/// Format a float with engineering-style precision for table cells.
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1e6 {
+        format!("{:.3}M", x / 1e6)
+    } else if x.abs() >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else if x.abs() >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Minimal JSON value builder (objects/arrays/scalars) for machine-readable
+/// result dumps. We only ever *write* JSON, never parse it.
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Self {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn push(self, key: &str, val: Json) -> Self {
+        match self {
+            Json::Obj(mut kv) => {
+                kv.push((key.to_string(), val));
+                Json::Obj(kv)
+            }
+            other => other,
+        }
+    }
+
+    fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    pub fn render(&self) -> String {
+        match self {
+            Json::Null => "null".to_string(),
+            Json::Bool(b) => b.to_string(),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // Integral values print without the trailing ".0".
+                    if x.fract() == 0.0 && x.abs() < 9e15 {
+                        format!("{}", *x as i64)
+                    } else {
+                        format!("{x}")
+                    }
+                } else {
+                    "null".to_string()
+                }
+            }
+            Json::Str(s) => format!("\"{}\"", Self::escape(s)),
+            Json::Arr(xs) => {
+                let inner: Vec<String> = xs.iter().map(|x| x.render()).collect();
+                format!("[{}]", inner.join(","))
+            }
+            Json::Obj(kv) => {
+                let inner: Vec<String> = kv
+                    .iter()
+                    .map(|(k, v)| format!("\"{}\":{}", Self::escape(k), v.render()))
+                    .collect();
+                format!("{{{}}}", inner.join(","))
+            }
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut c = Csv::new(vec!["threads", "algo", "mops"]);
+        c.row(vec!["1", "perlcrq", "5.2"]);
+        c.row(vec!["2", "pb,queue", "3.1"]);
+        let s = c.to_string();
+        assert!(s.starts_with("threads,algo,mops\n"));
+        assert!(s.contains("\"pb,queue\""), "comma cells must be quoted");
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_arity_mismatch_panics() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut c = Csv::new(vec!["x", "longer"]);
+        c.row(vec!["1234", "y"]);
+        let t = c.to_table();
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("longer"));
+    }
+
+    #[test]
+    fn json_rendering() {
+        let j = Json::obj()
+            .push("name", Json::Str("per\"lcrq".into()))
+            .push("ops", Json::Num(1000.0))
+            .push("ratio", Json::Num(2.5))
+            .push("ok", Json::Bool(true))
+            .push("xs", Json::Arr(vec![Json::Num(1.0), Json::Null]));
+        let s = j.render();
+        assert_eq!(
+            s,
+            "{\"name\":\"per\\\"lcrq\",\"ops\":1000,\"ratio\":2.5,\"ok\":true,\"xs\":[1,null]}"
+        );
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(5_200_000.0), "5.200M");
+        assert_eq!(fnum(1500.0), "1.5k");
+        assert_eq!(fnum(2.5), "2.50");
+        assert_eq!(fnum(0.1234), "0.1234");
+    }
+
+    #[test]
+    fn csv_save_and_read_back() {
+        let dir = std::env::temp_dir().join("persiq_test_report");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(vec!["a"]);
+        c.row(vec!["1"]);
+        c.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a\n1\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,118 @@
+//! Timing helpers: monotonic stopwatch, simple duration stats, and a
+//! calibrated busy-wait used by the pmem latency model to charge simulated
+//! persistence costs in *wall-clock* mode (virtual-clock mode never spins).
+
+use std::time::{Duration, Instant};
+
+/// Monotonic stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn elapsed_ns(&self) -> u64 {
+        self.elapsed().as_nanos() as u64
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Summary statistics over a set of f64 samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute [`Stats`] (population std) over `xs`.
+pub fn stats(xs: &[f64]) -> Stats {
+    if xs.is_empty() {
+        return Stats::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Stats { n, mean, std: var.sqrt(), min, max }
+}
+
+/// Percentile (nearest-rank) over a *sorted* slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Busy-wait for approximately `ns` nanoseconds (no syscall, no yield).
+/// Used to make simulated persistence instructions consume real CPU the way
+/// a blocking `psync` does on Optane, so wall-clock comparisons between
+/// algorithms remain meaningful on this testbed.
+#[inline]
+pub fn spin_ns(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let start = Instant::now();
+    while (start.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = stats(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&v, 50.0), 50.0);
+        assert_eq!(percentile_sorted(&v, 95.0), 95.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 100.0);
+        assert_eq!(percentile_sorted(&v, 1.0), 1.0);
+    }
+
+    #[test]
+    fn spin_roughly_waits() {
+        let sw = Stopwatch::start();
+        spin_ns(100_000); // 100µs
+        assert!(sw.elapsed_ns() >= 100_000);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_ns();
+        let b = sw.elapsed_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,264 @@
+//! TOML-subset parser for config files (serde/toml unavailable offline).
+//!
+//! Supported: `[section]` headers, `key = value` with values of types
+//! integer, float, bool, string (`"..."`), and flat arrays (`[1, 2, 3]`).
+//! Comments (`# ...`) and blank lines are ignored. This covers everything
+//! `persiq.toml` needs; anything fancier errors out loudly.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar/array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key -> Value`; keys before any `[section]` live
+/// under the empty section `""`.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    /// Look up `section.key` (use `""` for the root section).
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        self.entries.get(&full)
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get(section, key).and_then(Value::as_u64).unwrap_or(default)
+    }
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+    pub fn get_str<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// All `(key, value)` pairs in a section.
+    pub fn section(&self, section: &str) -> Vec<(&str, &Value)> {
+        let prefix = format!("{section}.");
+        self.entries
+            .iter()
+            .filter_map(|(k, v)| k.strip_prefix(&prefix).map(|rest| (rest, v)))
+            .collect()
+    }
+}
+
+fn parse_scalar(tok: &str, line_no: usize) -> anyhow::Result<Value> {
+    let t = tok.trim();
+    if t.starts_with('"') {
+        let inner = t
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .ok_or_else(|| anyhow::anyhow!("line {line_no}: unterminated string {t:?}"))?;
+        // Minimal escapes.
+        let un = inner.replace("\\\"", "\"").replace("\\\\", "\\").replace("\\n", "\n");
+        return Ok(Value::Str(un));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = t.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("line {line_no}: cannot parse value {t:?}")
+}
+
+/// Parse a TOML-subset document from text.
+pub fn parse(text: &str) -> anyhow::Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        // Strip comments outside strings (simple heuristic: split at '#' not
+        // inside quotes).
+        let mut in_str = false;
+        let mut cut = raw.len();
+        for (i, c) in raw.char_indices() {
+            match c {
+                '"' => in_str = !in_str,
+                '#' if !in_str => {
+                    cut = i;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let line = raw[..cut].trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix('[') {
+            let name = h
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {line_no}: malformed section header"))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {line_no}: expected key = value"))?;
+        let key = k.trim();
+        if key.is_empty() {
+            anyhow::bail!("line {line_no}: empty key");
+        }
+        let vt = v.trim();
+        let value = if vt.starts_with('[') {
+            let inner = vt
+                .strip_prefix('[')
+                .and_then(|s| s.strip_suffix(']'))
+                .ok_or_else(|| anyhow::anyhow!("line {line_no}: unterminated array"))?;
+            let items: anyhow::Result<Vec<Value>> = inner
+                .split(',')
+                .map(|p| p.trim())
+                .filter(|p| !p.is_empty())
+                .map(|p| parse_scalar(p, line_no))
+                .collect();
+            Value::Array(items?)
+        } else {
+            parse_scalar(vt, line_no)?
+        };
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(full, value);
+    }
+    Ok(doc)
+}
+
+/// Parse a config file from disk.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Doc> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# root settings
+seed = 42
+name = "perlcrq"   # trailing comment
+
+[pmem]
+pwb_ns = 60.5
+evict_prob = 0.25
+enabled = true
+threads = [1, 2, 4, 8]
+big = 1_000_000
+"#;
+
+    #[test]
+    fn parses_all_types() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(d.get_u64("", "seed", 0), 42);
+        assert_eq!(d.get_str("", "name", ""), "perlcrq");
+        assert_eq!(d.get_f64("pmem", "pwb_ns", 0.0), 60.5);
+        assert_eq!(d.get_f64("pmem", "evict_prob", 0.0), 0.25);
+        assert!(d.get_bool("pmem", "enabled", false));
+        assert_eq!(d.get_u64("pmem", "big", 0), 1_000_000);
+        let arr = d.get("pmem", "threads").unwrap().as_array().unwrap();
+        let v: Vec<i64> = arr.iter().map(|x| x.as_i64().unwrap()).collect();
+        assert_eq!(v, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(d.get_u64("pmem", "missing", 7), 7);
+        assert_eq!(d.get_str("nope", "x", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn section_listing() {
+        let d = parse(SAMPLE).unwrap();
+        let keys: Vec<&str> = d.section("pmem").into_iter().map(|(k, _)| k).collect();
+        assert!(keys.contains(&"pwb_ns"));
+        assert!(keys.contains(&"threads"));
+    }
+
+    #[test]
+    fn string_with_hash_inside() {
+        let d = parse("s = \"a#b\"").unwrap();
+        assert_eq!(d.get_str("", "s", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("key").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("k = @nope").is_err());
+        assert!(parse("k = [1, 2").is_err());
+    }
+
+    #[test]
+    fn negative_and_float_ints() {
+        let d = parse("a = -5\nb = -2.5").unwrap();
+        assert_eq!(d.get("", "a").unwrap().as_i64(), Some(-5));
+        assert_eq!(d.get_f64("", "b", 0.0), -2.5);
+    }
+}

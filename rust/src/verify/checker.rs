@@ -1,0 +1,522 @@
+//! The durable-linearizability checker (see [`super`] for the axioms).
+
+use std::collections::HashMap;
+
+use super::history::{EventKind, History};
+
+/// A detected violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// Value dequeued more than once (or drained after being dequeued).
+    Duplicate { value: u64 },
+    /// Value dequeued/drained without any invoked enqueue.
+    Invented { value: u64 },
+    /// Completed enqueue's value neither dequeued nor drained, beyond the
+    /// budget of in-flight dequeues that may have legitimately consumed it
+    /// (an uncompleted dequeue linearized at a crash — paper §4, Scenario
+    /// 2 — absorbs at most one value).
+    Lost { value: u64 },
+    /// Real-time FIFO inversion between two dequeued values.
+    FifoInversion { first: u64, second: u64 },
+    /// EMPTY returned while some value was provably present throughout.
+    BogusEmpty { witness: u64, empty_seq: u64 },
+    /// The same value was enqueued twice (workload bug, not queue bug).
+    ValueReused { value: u64 },
+}
+
+/// Check outcome.
+#[derive(Clone, Debug, Default)]
+pub struct CheckReport {
+    pub violations: Vec<Violation>,
+    pub enq_invoked: usize,
+    pub enq_completed: usize,
+    pub deq_values: usize,
+    pub deq_empties: usize,
+    pub drained: usize,
+    /// Dequeues invoked but never responded (crashed mid-operation); each
+    /// may absorb one otherwise-"lost" value.
+    pub pending_deqs: usize,
+    /// Values that vanished within the pending-dequeue budget (not
+    /// violations, but reported for transparency).
+    pub absorbed_losses: usize,
+}
+
+impl CheckReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+#[derive(Default, Clone, Copy)]
+struct OpSpan {
+    invoke: u64,
+    response: Option<u64>,
+}
+
+/// Run all checks over a history. `max_report` caps reported violations.
+pub fn check(h: &History, max_report: usize) -> CheckReport {
+    let mut report = CheckReport::default();
+    let push = |vs: &mut Vec<Violation>, v: Violation| {
+        if vs.len() < max_report {
+            vs.push(v);
+        }
+    };
+
+    // --- Index the history ---
+    let mut enq: HashMap<u64, OpSpan> = HashMap::new();
+    // Pending (per-thread) open spans to match responses to invokes.
+    let mut open_enq: HashMap<usize, (u64, u64)> = HashMap::new(); // tid -> (value, seq)
+    let mut open_deq: HashMap<usize, u64> = HashMap::new(); // tid -> invoke seq
+    let mut deq: HashMap<u64, OpSpan> = HashMap::new(); // value -> span
+    let mut empties: Vec<OpSpan> = Vec::new();
+
+    for e in &h.events {
+        match e.kind {
+            EventKind::EnqInvoke { value } => {
+                if enq.contains_key(&value) {
+                    push(&mut report.violations, Violation::ValueReused { value });
+                }
+                enq.insert(value, OpSpan { invoke: e.seq, response: None });
+                open_enq.insert(e.tid, (value, e.seq));
+                report.enq_invoked += 1;
+            }
+            EventKind::EnqOk { value } => {
+                if let Some(span) = enq.get_mut(&value) {
+                    span.response = Some(e.seq);
+                }
+                open_enq.remove(&e.tid);
+                report.enq_completed += 1;
+            }
+            EventKind::DeqInvoke => {
+                // A dequeue left open (crashed) stays in `open_deq` and is
+                // counted below; a thread's new invoke replaces its old
+                // one only if that one responded, so count leftovers per
+                // (tid, invoke): track crashed dequeues explicitly.
+                if let Some(prev) = open_deq.insert(e.tid, e.seq) {
+                    let _ = prev;
+                    report.pending_deqs += 1; // previous invoke never responded
+                }
+            }
+            EventKind::DeqOk { value } => {
+                let invoke = open_deq.remove(&e.tid).unwrap_or(e.seq);
+                if deq.contains_key(&value) {
+                    push(&mut report.violations, Violation::Duplicate { value });
+                } else {
+                    deq.insert(value, OpSpan { invoke, response: Some(e.seq) });
+                }
+                if !enq.contains_key(&value) {
+                    push(&mut report.violations, Violation::Invented { value });
+                }
+                report.deq_values += 1;
+            }
+            EventKind::DeqEmpty => {
+                let invoke = open_deq.remove(&e.tid).unwrap_or(e.seq);
+                empties.push(OpSpan { invoke, response: Some(e.seq) });
+                report.deq_empties += 1;
+            }
+        }
+    }
+    report.drained = h.final_drain.len();
+    // Dequeues still open at the end of the history also count as pending.
+    report.pending_deqs += open_deq.len();
+
+    // --- V1/V5 for the final drain ---
+    let mut drained: HashMap<u64, ()> = HashMap::new();
+    for &v in &h.final_drain {
+        if deq.contains_key(&v) || drained.contains_key(&v) {
+            push(&mut report.violations, Violation::Duplicate { value: v });
+        }
+        if !enq.contains_key(&v) {
+            push(&mut report.violations, Violation::Invented { value: v });
+        }
+        drained.insert(v, ());
+    }
+
+    // --- V2: no loss (modulo the in-flight-dequeue budget) ---
+    // A dequeue that crashed mid-operation may have been linearized (its
+    // following persisted dequeue or an eviction witnessed it — §4,
+    // Scenarios 2/3), consuming exactly one value without ever returning.
+    // So up to `pending_deqs` completed-enqueue values may legitimately
+    // vanish; anything beyond that is a real loss.
+    {
+        let mut lost: Vec<u64> = enq
+            .iter()
+            .filter(|(v, span)| {
+                span.response.is_some() && !deq.contains_key(v) && !drained.contains_key(v)
+            })
+            .map(|(&v, _)| v)
+            .collect();
+        lost.sort_unstable();
+        let budget = report.pending_deqs.min(lost.len());
+        report.absorbed_losses = budget;
+        for &v in lost.iter().skip(budget) {
+            push(&mut report.violations, Violation::Lost { value: v });
+        }
+    }
+
+    // --- V3: FIFO real-time order, O(n log n) ---
+    // For dequeued pairs: violation iff ∃ a, b with
+    //   E_resp(a) < E_inv(b)  AND  D_resp(b) < D_inv(a).
+    // Sweep ops in increasing E_resp; maintain prefix-max of D_inv; for
+    // each b compare against the prefix of enqueues completed before
+    // E_inv(b).
+    {
+        // (E_resp, D_inv, value) for values dequeued AND enqueue-completed.
+        let mut by_eresp: Vec<(u64, u64, u64)> = Vec::new();
+        for (&v, es) in &enq {
+            if let (Some(eresp), Some(ds)) = (es.response, deq.get(&v)) {
+                by_eresp.push((eresp, ds.invoke, v));
+            }
+        }
+        by_eresp.sort_unstable();
+        // prefix_max_dinv[i] = max D_inv over by_eresp[..=i], with the
+        // owning value for reporting.
+        let mut prefix: Vec<(u64, u64)> = Vec::with_capacity(by_eresp.len());
+        let mut cur = (0u64, 0u64);
+        for &(_, dinv, v) in &by_eresp {
+            if dinv >= cur.0 {
+                cur = (dinv, v);
+            }
+            prefix.push(cur);
+        }
+        // For each b: find enqueues with E_resp < E_inv(b).
+        for (&vb, eb) in &enq {
+            let (Some(db), true) = (deq.get(&vb), eb.response.is_some()) else {
+                continue;
+            };
+            let Some(dresp_b) = db.response else { continue };
+            // Binary search on by_eresp for E_resp < E_inv(b).
+            let idx = by_eresp.partition_point(|&(eresp, _, _)| eresp < eb.invoke);
+            if idx == 0 {
+                continue;
+            }
+            let (max_dinv, va) = prefix[idx - 1];
+            if max_dinv > dresp_b && va != vb {
+                push(
+                    &mut report.violations,
+                    Violation::FifoInversion { first: va, second: vb },
+                );
+            }
+        }
+    }
+
+    // --- V4: EMPTY soundness ---
+    // Violation iff some value v: E_resp(v) < EMPTY.invoke and v's dequeue
+    // was invoked only after EMPTY.response (or never — and not drained
+    // either... a drained value was still in the queue, which also
+    // justifies the violation only if it was enqueued before; drained
+    // values count as "never dequeued during the run").
+    {
+        // Values with completed enqueues, sorted by E_resp, carrying their
+        // dequeue-invoke seq. A value never dequeued during the run can
+        // witness only if it reached the final drain (provably present
+        // throughout); otherwise it may have been consumed by a crashed,
+        // linearized dequeue (the V2 absorbed-loss budget) and cannot
+        // witness an EMPTY.
+        let mut vals: Vec<(u64, u64, u64)> = Vec::new(); // (E_resp, D_inv, v)
+        for (&v, es) in &enq {
+            if let Some(eresp) = es.response {
+                match deq.get(&v) {
+                    Some(d) => vals.push((eresp, d.invoke, v)),
+                    None if drained.contains_key(&v) => vals.push((eresp, u64::MAX, v)),
+                    None => {} // possibly absorbed at a crash — not a witness
+                }
+            }
+        }
+        vals.sort_unstable();
+        // Prefix max of D_inv (a value whose dequeue started LATEST — the
+        // strongest witness candidate).
+        let mut prefix: Vec<(u64, u64)> = Vec::with_capacity(vals.len());
+        let mut cur = (0u64, 0u64);
+        for &(_, dinv, v) in &vals {
+            if dinv >= cur.0 {
+                cur = (dinv, v);
+            }
+            prefix.push(cur);
+        }
+        for emp in &empties {
+            let Some(eresp) = emp.response else { continue };
+            let idx = vals.partition_point(|&(er, _, _)| er < emp.invoke);
+            if idx == 0 {
+                continue;
+            }
+            let (max_dinv, witness) = prefix[idx - 1];
+            if max_dinv > eresp {
+                push(
+                    &mut report.violations,
+                    Violation::BogusEmpty { witness, empty_seq: emp.invoke },
+                );
+            }
+        }
+    }
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::history::{Event, EventKind as K};
+
+    fn ev(seq: u64, tid: usize, kind: K) -> Event {
+        Event { seq, tid, epoch: 0, kind }
+    }
+
+    fn hist(events: Vec<Event>, drain: Vec<u64>) -> History {
+        History { events, final_drain: drain }
+    }
+
+    #[test]
+    fn clean_history_passes() {
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 1 }),
+                ev(1, 0, K::EnqOk { value: 1 }),
+                ev(2, 0, K::EnqInvoke { value: 2 }),
+                ev(3, 0, K::EnqOk { value: 2 }),
+                ev(4, 1, K::DeqInvoke),
+                ev(5, 1, K::DeqOk { value: 1 }),
+                ev(6, 1, K::DeqInvoke),
+                ev(7, 1, K::DeqOk { value: 2 }),
+                ev(8, 1, K::DeqInvoke),
+                ev(9, 1, K::DeqEmpty),
+            ],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.enq_completed, 2);
+        assert_eq!(r.deq_values, 2);
+        assert_eq!(r.deq_empties, 1);
+    }
+
+    #[test]
+    fn detects_duplicate() {
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 7 }),
+                ev(1, 0, K::EnqOk { value: 7 }),
+                ev(2, 1, K::DeqInvoke),
+                ev(3, 1, K::DeqOk { value: 7 }),
+                ev(4, 2, K::DeqInvoke),
+                ev(5, 2, K::DeqOk { value: 7 }),
+            ],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert!(r.violations.contains(&Violation::Duplicate { value: 7 }));
+    }
+
+    #[test]
+    fn detects_invented() {
+        let h = hist(
+            vec![ev(0, 0, K::DeqInvoke), ev(1, 0, K::DeqOk { value: 99 })],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert!(r.violations.contains(&Violation::Invented { value: 99 }));
+    }
+
+    #[test]
+    fn detects_loss() {
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 5 }),
+                ev(1, 0, K::EnqOk { value: 5 }),
+            ],
+            vec![], // not drained either
+        );
+        let r = check(&h, 10);
+        assert!(r.violations.contains(&Violation::Lost { value: 5 }));
+    }
+
+    #[test]
+    fn crashed_dequeue_absorbs_one_loss() {
+        // An in-flight dequeue (no response) may have consumed the value —
+        // legal per §4 Scenario 2 — so no violation...
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 5 }),
+                ev(1, 0, K::EnqOk { value: 5 }),
+                ev(2, 1, K::DeqInvoke), // crashed mid-dequeue
+            ],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.pending_deqs, 1);
+        assert_eq!(r.absorbed_losses, 1);
+        // ...but it absorbs at most ONE value.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 5 }),
+                ev(1, 0, K::EnqOk { value: 5 }),
+                ev(2, 0, K::EnqInvoke { value: 6 }),
+                ev(3, 0, K::EnqOk { value: 6 }),
+                ev(4, 1, K::DeqInvoke),
+            ],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert!(matches!(r.violations[0], Violation::Lost { .. }));
+    }
+
+    #[test]
+    fn drained_value_is_not_lost() {
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 5 }),
+                ev(1, 0, K::EnqOk { value: 5 }),
+            ],
+            vec![5],
+        );
+        let r = check(&h, 10);
+        assert!(r.ok(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn uncompleted_enqueue_may_vanish() {
+        // Enqueue invoked but not completed: value disappearing is fine.
+        let h = hist(vec![ev(0, 0, K::EnqInvoke { value: 5 })], vec![]);
+        assert!(check(&h, 10).ok());
+    }
+
+    #[test]
+    fn uncompleted_enqueue_may_linearize() {
+        // Crashed mid-enqueue but the value shows up post-crash: fine (§4.1).
+        let h = hist(vec![ev(0, 0, K::EnqInvoke { value: 5 })], vec![5]);
+        assert!(check(&h, 10).ok());
+    }
+
+    #[test]
+    fn detects_fifo_inversion() {
+        // enq(1) completes before enq(2) is invoked, but deq(2) completes
+        // before deq(1) is invoked.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 1 }),
+                ev(1, 0, K::EnqOk { value: 1 }),
+                ev(2, 0, K::EnqInvoke { value: 2 }),
+                ev(3, 0, K::EnqOk { value: 2 }),
+                ev(4, 1, K::DeqInvoke),
+                ev(5, 1, K::DeqOk { value: 2 }),
+                ev(6, 1, K::DeqInvoke),
+                ev(7, 1, K::DeqOk { value: 1 }),
+            ],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert!(
+            r.violations.iter().any(|v| matches!(v, Violation::FifoInversion { .. })),
+            "{:?}",
+            r.violations
+        );
+    }
+
+    #[test]
+    fn overlapping_enqueues_may_reorder() {
+        // enq(1) and enq(2) overlap: either dequeue order is legal.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 1 }),
+                ev(1, 1, K::EnqInvoke { value: 2 }),
+                ev(2, 1, K::EnqOk { value: 2 }),
+                ev(3, 0, K::EnqOk { value: 1 }),
+                ev(4, 2, K::DeqInvoke),
+                ev(5, 2, K::DeqOk { value: 2 }),
+                ev(6, 2, K::DeqInvoke),
+                ev(7, 2, K::DeqOk { value: 1 }),
+            ],
+            vec![],
+        );
+        assert!(check(&h, 10).ok());
+    }
+
+    #[test]
+    fn overlapping_dequeues_may_reorder() {
+        // Sequential enqueues but OVERLAPPING dequeues: no inversion.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 1 }),
+                ev(1, 0, K::EnqOk { value: 1 }),
+                ev(2, 0, K::EnqInvoke { value: 2 }),
+                ev(3, 0, K::EnqOk { value: 2 }),
+                ev(4, 1, K::DeqInvoke),
+                ev(5, 2, K::DeqInvoke),
+                ev(6, 2, K::DeqOk { value: 2 }),
+                ev(7, 1, K::DeqOk { value: 1 }),
+            ],
+            vec![],
+        );
+        assert!(check(&h, 10).ok());
+    }
+
+    #[test]
+    fn detects_bogus_empty() {
+        // enq(9) completed before the EMPTY started; its dequeue began
+        // only after the EMPTY returned.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 9 }),
+                ev(1, 0, K::EnqOk { value: 9 }),
+                ev(2, 1, K::DeqInvoke),
+                ev(3, 1, K::DeqEmpty),
+                ev(4, 1, K::DeqInvoke),
+                ev(5, 1, K::DeqOk { value: 9 }),
+            ],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert!(
+            r.violations.iter().any(|v| matches!(v, Violation::BogusEmpty { witness: 9, .. })),
+            "{:?}",
+            r.violations
+        );
+    }
+
+    #[test]
+    fn empty_overlapping_enqueue_is_fine() {
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 9 }),
+                ev(1, 1, K::DeqInvoke),
+                ev(2, 1, K::DeqEmpty),
+                ev(3, 0, K::EnqOk { value: 9 }),
+            ],
+            vec![9],
+        );
+        assert!(check(&h, 10).ok());
+    }
+
+    #[test]
+    fn empty_with_undequeued_prior_value_flagged_via_drain() {
+        // Value 9 enqueued-completed before EMPTY, never dequeued (only
+        // drained at the end): the EMPTY was bogus.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 9 }),
+                ev(1, 0, K::EnqOk { value: 9 }),
+                ev(2, 1, K::DeqInvoke),
+                ev(3, 1, K::DeqEmpty),
+            ],
+            vec![9],
+        );
+        let r = check(&h, 10);
+        assert!(r.violations.iter().any(|v| matches!(v, Violation::BogusEmpty { .. })));
+    }
+
+    #[test]
+    fn value_reuse_flagged() {
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 3 }),
+                ev(1, 0, K::EnqOk { value: 3 }),
+                ev(2, 0, K::EnqInvoke { value: 3 }),
+            ],
+            vec![3],
+        );
+        let r = check(&h, 10);
+        assert!(r.violations.contains(&Violation::ValueReused { value: 3 }));
+    }
+}

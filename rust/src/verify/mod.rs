@@ -1,0 +1,31 @@
+//! Durable-linearizability verification (paper §2 definitions).
+//!
+//! The harness records per-operation invoke/response events with a global
+//! sequence counter and the crash epoch; [`checker`] then validates the
+//! queue axioms across crash boundaries:
+//!
+//! * **V1 — no duplication / at-most-once**: every dequeued value was
+//!   enqueued, and no value is dequeued twice (even across epochs).
+//! * **V2 — no loss (durability)**: every *completed* enqueue's value is
+//!   eventually dequeued or still present at the final drain.
+//! * **V3 — FIFO real-time order**: if `enq(a)` completed strictly before
+//!   `enq(b)` was invoked and both values are dequeued, then `deq(b)` must
+//!   not complete strictly before `deq(a)` is invoked.
+//! * **V4 — EMPTY soundness**: a dequeue returning EMPTY is invalid if some
+//!   value was enqueued-completed before it started and remained undequeued
+//!   until after it returned.
+//! * **V5 — no invention**: every observed value traces to an *invoked*
+//!   enqueue (uncompleted enqueues may legitimately linearize — §4.1).
+//!
+//! V1–V3, V5 are exact; V4 is a sound interval check (no false positives).
+//!
+//! [`proptest`] is a minimal property-testing harness (the `proptest`
+//! crate is unavailable offline) used to drive randomized crash workloads
+//! through every persistent queue.
+
+pub mod checker;
+pub mod history;
+pub mod proptest;
+
+pub use checker::{check, CheckReport, Violation};
+pub use history::{Event, EventKind, History, Recorder};

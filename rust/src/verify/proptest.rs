@@ -1,0 +1,112 @@
+//! Minimal property-testing harness (the `proptest` crate is unavailable
+//! offline). Runs a property over many seeded random cases and reports the
+//! first failing seed so the case can be replayed exactly. Shrinking is
+//! intentionally out of scope — failures carry their generating seed, and
+//! generators are expected to produce small cases by construction.
+
+use crate::util::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: u32,
+    /// Base seed; case `i` uses stream `i`.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 32, seed: 0x5EED_0BAD_F00D }
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cfg.cases` random cases. Each case gets an independent
+/// RNG derived from `(cfg.seed, case_index)`. Panics with the failing seed
+/// and message on the first violation.
+pub fn forall(cfg: PropConfig, mut prop: impl FnMut(&mut Xoshiro256, u32) -> PropResult) {
+    for case in 0..cfg.cases {
+        let mut rng = Xoshiro256::split(cfg.seed, case as u64);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property failed at case {case} (replay with seed={:#x}, stream={case}): {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Xoshiro256;
+
+    /// A vector of length in `[min_len, max_len]` with elements from `f`.
+    pub fn vec_of<T>(
+        rng: &mut Xoshiro256,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Xoshiro256) -> T,
+    ) -> Vec<T> {
+        let len = rng.range_inclusive(min_len as u64, max_len as u64) as usize;
+        (0..len).map(|_| f(rng)).collect()
+    }
+
+    /// Weighted boolean.
+    pub fn weighted(rng: &mut Xoshiro256, p_true: f64) -> bool {
+        rng.chance(p_true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(PropConfig { cases: 10, seed: 1 }, |_rng, _case| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_panics_with_seed() {
+        forall(PropConfig { cases: 10, seed: 1 }, |rng, _case| {
+            if rng.next_below(4) == 0 {
+                Err("boom".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        forall(PropConfig { cases: 5, seed: 9 }, |rng, _| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        forall(PropConfig { cases: 5, seed: 9 }, |rng, _| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn gen_vec_bounds() {
+        let mut rng = Xoshiro256::seed_from(3);
+        for _ in 0..50 {
+            let v = gen::vec_of(&mut rng, 2, 7, |r| r.next_below(10));
+            assert!(v.len() >= 2 && v.len() <= 7);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! End-to-end broker integration: the coordinator service across crash
+//! cycles with full audits.
+
+use std::sync::Arc;
+
+use persiq::coordinator::{run_service, Broker, JobState, ServiceConfig};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::pmem::{PmemConfig, PmemPool};
+
+fn mk(cap_words: usize) -> (Arc<PmemPool>, Arc<Broker>) {
+    let pool = Arc::new(PmemPool::new(PmemConfig {
+        capacity_words: cap_words,
+        evict_prob: 0.25,
+        pending_flush_prob: 0.5,
+        seed: 77,
+        ..Default::default()
+    }));
+    let broker = Arc::new(Broker::new(&pool, 8, 1 << 16, 1 << 10));
+    (pool, broker)
+}
+
+#[test]
+fn service_end_to_end_no_crash() {
+    let (pool, broker) = mk(1 << 22);
+    let rep = run_service(
+        &pool,
+        &broker,
+        &ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 400,
+            crash_cycles: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.submitted, 800);
+    assert_eq!(rep.done, 800);
+    assert_eq!(rep.pending_after, 0);
+}
+
+#[test]
+fn service_with_crashes_exactly_once() {
+    install_quiet_crash_hook();
+    let (pool, broker) = mk(1 << 23);
+    let rep = run_service(
+        &pool,
+        &broker,
+        &ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 400,
+            crash_cycles: 3,
+            crash_steps: 40_000,
+            seed: 3,
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.crashes, 3);
+    assert_eq!(rep.done, rep.submitted, "{rep:?}");
+    assert_eq!(rep.pending_after, 0);
+}
+
+#[test]
+fn payload_integrity_across_crash() {
+    install_quiet_crash_hook();
+    let (pool, broker) = mk(1 << 22);
+    let payloads: Vec<Vec<u8>> =
+        (0..50u8).map(|i| format!("payload-{i:03}-{}", "x".repeat(i as usize % 20)).into_bytes()).collect();
+    let mut ids = Vec::new();
+    for p in &payloads {
+        ids.push(broker.submit(0, p).unwrap());
+    }
+    let mut rng = persiq::util::rng::Xoshiro256::seed_from(5);
+    pool.crash(&mut rng);
+    broker.recover();
+    for (i, expect) in payloads.iter().enumerate() {
+        let (jid, got) = broker.take(1).unwrap().expect("job missing");
+        assert_eq!(&got, expect, "payload {i} corrupted");
+        assert!(broker.complete(1, jid).unwrap());
+        assert_eq!(broker.state(0, ids[i]), JobState::Done);
+    }
+    assert!(broker.take(1).unwrap().is_none());
+}

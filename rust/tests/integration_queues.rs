@@ -1,0 +1,108 @@
+//! Cross-module integration: every registry algorithm through the full
+//! harness (multi-thread pairs + random workloads), with history recording
+//! and linearizability verification end to end.
+
+use std::sync::Arc;
+
+use persiq::harness::runner::{drain_all, run_workload, RunConfig};
+use persiq::harness::Workload;
+use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::queues::{registry, QueueConfig, QueueCtx};
+use persiq::verify::{check, History};
+
+fn ctx(nthreads: usize) -> QueueCtx {
+    QueueCtx {
+        pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 22).with_seed(7))),
+        nthreads,
+        cfg: QueueConfig::default(),
+    }
+}
+
+#[test]
+fn every_algorithm_passes_verified_pairs_workload() {
+    for (name, ctor) in registry() {
+        let c = ctx(4);
+        let q = ctor(&c);
+        let r = run_workload(
+            &c.pool,
+            &q,
+            &RunConfig { nthreads: 4, total_ops: 20_000, record: true, ..Default::default() },
+        );
+        assert_eq!(r.ops_done, 20_000, "{name}");
+        let drained = drain_all(&q, 0);
+        let h = History::from_logs(r.logs, drained);
+        let rep = check(&h, 5);
+        assert!(rep.ok(), "{name}: {:?}", rep.violations);
+        assert_eq!(rep.enq_completed, 10_000, "{name}");
+    }
+}
+
+#[test]
+fn every_algorithm_passes_random_workload() {
+    for (name, ctor) in registry() {
+        let c = ctx(4);
+        let q = ctor(&c);
+        let r = run_workload(
+            &c.pool,
+            &q,
+            &RunConfig {
+                nthreads: 4,
+                total_ops: 16_000,
+                workload: Workload::Random5050,
+                record: true,
+                seed: 99,
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.ops_done, 16_000, "{name}");
+        let drained = drain_all(&q, 0);
+        let h = History::from_logs(r.logs, drained);
+        let rep = check(&h, 5);
+        assert!(rep.ok(), "{name}: {:?}", rep.violations);
+    }
+}
+
+#[test]
+fn virtual_time_orders_algorithms_as_the_paper_claims() {
+    // Fig 2's headline at moderate simulated parallelism: PerLCRQ beats
+    // PBQueue by >= 2x; PerLCRQ-PHead falls below plain PerLCRQ.
+    let point = |algo: &str| {
+        let c = ctx(16);
+        let q = persiq::queues::by_name(algo).unwrap()(&c);
+        run_workload(
+            &c.pool,
+            &q,
+            &RunConfig { nthreads: 16, total_ops: 30_000, ..Default::default() },
+        )
+        .sim_mops
+    };
+    let perlcrq = point("perlcrq");
+    let pbq = point("pbqueue");
+    let phead = point("perlcrq-phead");
+    assert!(
+        perlcrq > 2.0 * pbq,
+        "PerLCRQ ({perlcrq:.2}) must be >= 2x PBQueue ({pbq:.2})"
+    );
+    assert!(
+        phead < perlcrq / 2.0,
+        "PHead ({phead:.2}) must collapse vs PerLCRQ ({perlcrq:.2})"
+    );
+}
+
+#[test]
+fn persistence_instruction_counts_match_paper() {
+    // PerLCRQ: exactly one pwb + one psync per op in steady state.
+    let c = ctx(2);
+    let q = persiq::queues::by_name("perlcrq").unwrap()(&c);
+    let r = run_workload(
+        &c.pool,
+        &q,
+        &RunConfig { nthreads: 2, total_ops: 10_000, ..Default::default() },
+    );
+    let t = c.pool.stats.total();
+    let pwbs_per_op = t.pwbs as f64 / r.ops_done as f64;
+    assert!(
+        (pwbs_per_op - 1.0).abs() < 0.05,
+        "PerLCRQ must do ~1 pwb/op, got {pwbs_per_op:.3}"
+    );
+}

@@ -1,0 +1,94 @@
+//! PJRT runtime integration: the AOT-compiled JAX/Pallas metrics artifact
+//! must load, execute, and agree with the pure-Rust fallback (the L1/L2
+//! correctness signal crossing the language boundary).
+//!
+//! Skips gracefully (with a loud message) when `artifacts/` has not been
+//! built — run `make artifacts` first.
+
+use persiq::runtime::engine::{default_artifact_dir, Engine, METRICS_SAMPLES};
+use persiq::runtime::{fallback, MetricsEngine};
+
+fn engine() -> Option<Engine> {
+    let dir = default_artifact_dir()?;
+    Some(Engine::load(&dir).expect("artifact load failed"))
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => {
+                eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn pjrt_metrics_match_fallback() {
+    let e = need_artifacts!();
+    let samples: Vec<f64> = (0..5000).map(|i| 100.0 + (i % 997) as f64).collect();
+    let (stats, hist) = e.metrics(&samples).unwrap();
+    let (fstats, fhist) = fallback::metrics(&samples);
+    assert_eq!(stats[0], fstats[0], "count");
+    for (i, name) in
+        [(1, "mean"), (2, "std"), (3, "min"), (4, "max"), (5, "p50"), (6, "p95"), (7, "p99")]
+    {
+        let (a, b) = (stats[i], fstats[i]);
+        let tol = (b.abs() * 1e-3).max(1e-2);
+        assert!((a - b).abs() <= tol, "{name}: pjrt={a} fallback={b}");
+    }
+    assert_eq!(hist.len(), fhist.len());
+    let (sa, sb): (f64, f64) = (hist.iter().sum(), fhist.iter().sum());
+    assert_eq!(sa, sb, "histogram mass");
+}
+
+#[test]
+fn pjrt_fit_matches_fallback() {
+    let e = need_artifacts!();
+    let ns: Vec<f64> = (1..=12).map(|i| i as f64).collect();
+    let t: Vec<f64> = ns.iter().map(|&n| n / (1.5 + 0.08 * n)).collect();
+    let got = e.fit(&ns, &t).unwrap();
+    let want = fallback::fit(&ns, &t);
+    for i in 0..3 {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-2 * want[i].abs().max(1.0),
+            "fit[{i}]: pjrt={} fallback={}",
+            got[i],
+            want[i]
+        );
+    }
+    assert!((got[2] - 12.5).abs() < 0.1, "plateau should be 1/0.08");
+}
+
+#[test]
+fn pjrt_handles_downsampling() {
+    let e = need_artifacts!();
+    // More samples than the artifact's fixed shape: deterministic stride
+    // downsample must keep distribution shape.
+    let samples: Vec<f64> = (0..3 * METRICS_SAMPLES).map(|i| (i % 1000) as f64).collect();
+    let (stats, _) = e.metrics(&samples).unwrap();
+    assert_eq!(stats[0] as usize, METRICS_SAMPLES);
+    assert!((stats[1] - 499.5).abs() < 25.0, "mean ~499.5, got {}", stats[1]);
+}
+
+#[test]
+fn pjrt_empty_and_tiny_inputs() {
+    let e = need_artifacts!();
+    let (stats, hist) = e.metrics(&[]).unwrap();
+    assert_eq!(stats[0], 0.0);
+    assert_eq!(hist.iter().sum::<f64>(), 0.0);
+    let (stats, _) = e.metrics(&[42.0]).unwrap();
+    assert_eq!(stats[0], 1.0);
+    assert!((stats[1] - 42.0).abs() < 1e-3);
+}
+
+#[test]
+fn auto_engine_reports_backend() {
+    let eng = MetricsEngine::auto();
+    // Either backend must produce sane numbers.
+    let m = eng.metrics(&[1.0, 2.0, 3.0]).unwrap();
+    assert_eq!(m.count, 3.0);
+    assert!(m.backend == "pjrt" || m.backend == "fallback");
+}

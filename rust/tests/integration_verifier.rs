@@ -1,0 +1,183 @@
+//! The verifier must actually catch broken queues: inject defects through
+//! a wrapper and assert detection (meta-testing the checker).
+
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use persiq::harness::runner::{drain_all, run_workload, RunConfig};
+use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::queues::{by_name, ConcurrentQueue, QueueConfig, QueueCtx, QueueError};
+use persiq::verify::{check, History, Violation};
+
+/// A queue wrapper that duplicates every Nth dequeued value.
+struct DupInjector {
+    inner: Arc<dyn ConcurrentQueue>,
+    stash: Mutex<Option<u64>>,
+    period: u64,
+    count: Mutex<u64>,
+}
+
+impl ConcurrentQueue for DupInjector {
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        self.inner.enqueue(tid, item)
+    }
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        if let Some(v) = self.stash.lock().unwrap().take() {
+            return Ok(Some(v)); // duplicate!
+        }
+        let r = self.inner.dequeue(tid)?;
+        if let Some(v) = r {
+            let mut c = self.count.lock().unwrap();
+            *c += 1;
+            if *c % self.period == 0 {
+                *self.stash.lock().unwrap() = Some(v);
+            }
+        }
+        Ok(r)
+    }
+    fn name(&self) -> &'static str {
+        "dup-injector"
+    }
+}
+
+/// A queue wrapper that silently drops every Nth enqueue.
+struct LossInjector {
+    inner: Arc<dyn ConcurrentQueue>,
+    period: u64,
+    count: Mutex<u64>,
+}
+
+impl ConcurrentQueue for LossInjector {
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        let mut c = self.count.lock().unwrap();
+        *c += 1;
+        if *c % self.period == 0 {
+            return Ok(()); // pretend success, drop the item
+        }
+        drop(c);
+        self.inner.enqueue(tid, item)
+    }
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        self.inner.dequeue(tid)
+    }
+    fn name(&self) -> &'static str {
+        "loss-injector"
+    }
+}
+
+/// A "queue" that reorders: it's a LIFO stack (violates FIFO).
+struct LifoQueue {
+    stack: Mutex<Vec<u64>>,
+}
+
+impl ConcurrentQueue for LifoQueue {
+    fn enqueue(&self, _tid: usize, item: u64) -> Result<(), QueueError> {
+        self.stack.lock().unwrap().push(item);
+        Ok(())
+    }
+    fn dequeue(&self, _tid: usize) -> Result<Option<u64>, QueueError> {
+        Ok(self.stack.lock().unwrap().pop())
+    }
+    fn name(&self) -> &'static str {
+        "lifo"
+    }
+}
+
+fn ctx() -> QueueCtx {
+    QueueCtx {
+        pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 21))),
+        nthreads: 2,
+        cfg: QueueConfig::default(),
+    }
+}
+
+fn run_and_check(q: Arc<dyn ConcurrentQueue>, pool: &Arc<PmemPool>) -> Vec<Violation> {
+    let r = run_workload(
+        pool,
+        &q,
+        &RunConfig { nthreads: 2, total_ops: 4_000, record: true, ..Default::default() },
+    );
+    let drained = drain_all(&q, 0);
+    let h = History::from_logs(r.logs, drained);
+    check(&h, 20).violations
+}
+
+#[test]
+fn detects_injected_duplicates() {
+    let c = ctx();
+    let inner = by_name("perlcrq").unwrap()(&c);
+    let q: Arc<dyn ConcurrentQueue> = Arc::new(DupInjector {
+        inner,
+        stash: Mutex::new(None),
+        period: 50,
+        count: Mutex::new(0),
+    });
+    let v = run_and_check(q, &c.pool);
+    assert!(
+        v.iter().any(|x| matches!(x, Violation::Duplicate { .. })),
+        "checker must flag duplicates, got {v:?}"
+    );
+}
+
+#[test]
+fn detects_injected_loss() {
+    let c = ctx();
+    let inner = by_name("perlcrq").unwrap()(&c);
+    let q: Arc<dyn ConcurrentQueue> =
+        Arc::new(LossInjector { inner, period: 100, count: Mutex::new(0) });
+    let v = run_and_check(q, &c.pool);
+    assert!(
+        v.iter().any(|x| matches!(x, Violation::Lost { .. })),
+        "checker must flag losses, got {v:?}"
+    );
+}
+
+#[test]
+fn detects_lifo_order_violation() {
+    // Two phases (fill, then drain) so strictly-ordered enqueue pairs get
+    // dequeued in reversed order. Seq stamps are process-global, so logs
+    // from both runs merge into one totally ordered history.
+    use persiq::harness::Workload;
+    let c = ctx();
+    let q: Arc<dyn ConcurrentQueue> = Arc::new(LifoQueue { stack: Mutex::new(Vec::new()) });
+    let r1 = run_workload(
+        &c.pool,
+        &q,
+        &RunConfig {
+            nthreads: 1,
+            total_ops: 100,
+            workload: Workload::EnqOnly,
+            record: true,
+            ..Default::default()
+        },
+    );
+    let r2 = run_workload(
+        &c.pool,
+        &q,
+        &RunConfig {
+            nthreads: 1,
+            total_ops: 100,
+            workload: Workload::DeqHeavy,
+            record: true,
+            salt: 2,
+            ..Default::default()
+        },
+    );
+    let mut logs = r1.logs;
+    logs.extend(r2.logs);
+    let drained = drain_all(&q, 0);
+    let h = History::from_logs(logs, drained);
+    let v = check(&h, 20).violations;
+    assert!(
+        v.iter().any(|x| matches!(x, Violation::FifoInversion { .. })),
+        "checker must flag FIFO inversions on a LIFO, got {v:?}"
+    );
+}
+
+#[test]
+fn clean_queue_has_no_violations() {
+    let c = ctx();
+    let q = by_name("perlcrq").unwrap()(&c);
+    let v = run_and_check(q, &c.pool);
+    assert!(v.is_empty(), "{v:?}");
+}
