@@ -14,7 +14,7 @@ use persiq::pmem::crash::install_quiet_crash_hook;
 use persiq::pmem::{PmemConfig, PmemPool};
 use persiq::queues::{persistent_registry, QueueConfig, QueueCtx};
 use persiq::util::rng::Xoshiro256;
-use persiq::verify::{check, History};
+use persiq::verify::{check_relaxed, relaxation_for, History};
 
 fn main() -> anyhow::Result<()> {
     install_quiet_crash_hook();
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         }
         let drained = drain_all(&qc, 0);
         let h = History::from_logs(logs, drained);
-        let rep = check(&h, 5);
+        let rep = check_relaxed(&h, relaxation_for(name, nthreads, &ctx.cfg));
         println!(
             "{} {name:<16} ops: enq={} deq={} empty={} drained={} | violations: {}",
             if rep.ok() { "PASS" } else { "FAIL" },

@@ -1,0 +1,70 @@
+//! Figure 7 (beyond the paper) — contention scaling of the sharded +
+//! batched queue layer: simulated throughput over shards × threads ×
+//! batch size for `sharded-perlcrq`, against the single PerLCRQ baseline.
+//!
+//! Expected shape: at high thread counts, throughput grows with the shard
+//! count (the Head/Tail FAI serialization chains split K ways) and with
+//! the batch size (psyncs amortize to 1/B per enqueue); at 1 thread the
+//! variants converge (no contention to shed) and sharding overhead shows
+//! up as a small constant cost.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use persiq::harness::bench::{bench_ops, Suite};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::QueueConfig;
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new(
+        "fig7_sharding",
+        "Fig 7: sharded+batched scaling (shards x threads x batch)",
+    );
+    let ops = bench_ops();
+    let threads: Vec<usize> = std::env::var("PERSIQ_THREADS")
+        .ok()
+        .map(|s| s.split(',').filter_map(|p| p.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]);
+
+    // Baseline: the unsharded PerLCRQ.
+    for &n in &threads {
+        suite.measure_extra("perlcrq", n as f64, || {
+            common::tput_point_extra("perlcrq", n, ops, QueueConfig::default(), 42)
+        });
+    }
+
+    // Shard sweep (per-op persistence).
+    for shards in [1usize, 2, 4, 8] {
+        let series = format!("sharded-s{shards}");
+        for &n in &threads {
+            let cfg = QueueConfig { shards, batch: 1, ..Default::default() };
+            suite.measure_extra(&series, n as f64, || {
+                common::tput_point_extra("sharded-perlcrq", n, ops, cfg.clone(), 42)
+            });
+        }
+    }
+
+    // Batch sweep at 8 shards (group-commit amortization).
+    for batch in [2usize, 4, 8] {
+        let series = format!("sharded-s8-b{batch}");
+        for &n in &threads {
+            let cfg = QueueConfig { shards: 8, batch, ..Default::default() };
+            suite.measure_extra(&series, n as f64, || {
+                common::tput_point_extra("sharded-perlcrq", n, ops, cfg.clone(), 42)
+            });
+        }
+    }
+
+    suite.finish()?;
+
+    // Shape assertions (the subsystem's headline claims).
+    let hi = *threads.last().unwrap() as f64;
+    let s1 = suite.mean_at("sharded-s1", hi).unwrap();
+    let s8 = suite.mean_at("sharded-s8", hi).unwrap();
+    let b8 = suite.mean_at("sharded-s8-b8", hi).unwrap();
+    println!("\nclaims @ {hi} threads:");
+    println!("  8 shards / 1 shard  = {:.2}x (expect > 1)", s8 / s1);
+    println!("  batch 8 / batch 1   = {:.2}x at 8 shards (expect > 1)", b8 / s8);
+    Ok(())
+}

@@ -16,6 +16,8 @@
 //! ring_size = 1024
 //! iq_capacity = 65536
 //! starvation_limit = 4096
+//! shards = 4          # sharded-perlcrq stripe count
+//! batch = 1           # sharded-perlcrq group-commit size (1 = per-op)
 //!
 //! [bench]
 //! ops = 200000
@@ -90,6 +92,8 @@ impl Config {
         c.queue.periq_tail_interval = doc
             .get_u64("queue", "periq_tail_interval", c.queue.periq_tail_interval as u64)
             as usize;
+        c.queue.shards = doc.get_u64("queue", "shards", c.queue.shards as u64) as usize;
+        c.queue.batch = doc.get_u64("queue", "batch", c.queue.batch as u64) as usize;
 
         c.bench_ops = doc.get_u64("bench", "ops", c.bench_ops);
         c.seed = doc.get_u64("bench", "seed", c.seed);

@@ -12,7 +12,8 @@ use anyhow::Result;
 
 use crate::pmem::{PAddr, PmemPool, WORDS_PER_LINE};
 use crate::queues::perlcrq::PerLcrq;
-use crate::queues::{ConcurrentQueue, PersistentQueue, QueueConfig};
+use crate::queues::sharded::ShardedQueue;
+use crate::queues::{ConcurrentQueue, PersistentQueue, QueueConfig, QueueError};
 
 /// Max payload bytes per job (6 words inline).
 pub const MAX_PAYLOAD: usize = 48;
@@ -32,10 +33,12 @@ pub enum JobState {
     Done,
 }
 
-/// The persistent broker.
+/// The persistent broker. The work queue is any [`PersistentQueue`] —
+/// PerLCRQ by default ([`Broker::new`]) or the sharded/batched layer
+/// ([`Broker::new_sharded`]) for contention-heavy deployments.
 pub struct Broker {
     pool: Arc<PmemPool>,
-    queue: PerLcrq,
+    queue: Arc<dyn PersistentQueue>,
     /// All records ever allocated (audit; order = submission order per
     /// thread). Volatile — rebuilt by audits via the submission log below.
     submit_log: SubmitLog,
@@ -98,11 +101,29 @@ impl Broker {
     pub fn new(pool: &Arc<PmemPool>, nthreads: usize, max_jobs: usize, ring: usize) -> Broker {
         let cfg = QueueConfig { ring_size: ring, ..Default::default() };
         Broker {
-            queue: PerLcrq::new(pool, nthreads, cfg),
+            queue: Arc::new(PerLcrq::new(pool, nthreads, cfg)),
             submit_log: SubmitLog::alloc(pool, nthreads, max_jobs),
             pool: Arc::clone(pool),
             nthreads,
         }
+    }
+
+    /// Create a broker running on the sharded (optionally batched) work
+    /// queue — `cfg.shards` / `cfg.batch` select the striping and
+    /// group-commit parameters. Fails with [`QueueError::BadConfig`] on an
+    /// invalid configuration.
+    pub fn new_sharded(
+        pool: &Arc<PmemPool>,
+        nthreads: usize,
+        max_jobs: usize,
+        cfg: QueueConfig,
+    ) -> Result<Broker, QueueError> {
+        Ok(Broker {
+            queue: Arc::new(ShardedQueue::new_perlcrq(pool, nthreads, cfg)?),
+            submit_log: SubmitLog::alloc(pool, nthreads, max_jobs),
+            pool: Arc::clone(pool),
+            nthreads,
+        })
     }
 
     /// Submit a job: durably write the record, log it, enqueue its handle.
@@ -179,10 +200,52 @@ impl Broker {
         }
     }
 
-    /// Post-crash recovery: recover the work queue; job records need no
-    /// repair (states are monotone and persisted at every transition).
+    /// Post-crash recovery. Job records need no repair (states are
+    /// monotone and persisted at every transition), but the *queue ↔ log*
+    /// relation does: a crash inside `submit` — after the durable log
+    /// append but before the handle enqueue persisted — or inside a
+    /// batched work queue's unflushed batch can leave a PENDING job with
+    /// no queued handle, stranding it forever. Recovery therefore
+    /// reconciles exactly (single-threaded): recover the queue, drain the
+    /// recovered handles, re-enqueue the live ones in order, and re-insert
+    /// every logged PENDING job whose handle was missing.
     pub fn recover(&self) {
         self.queue.recover(&self.pool);
+        let tid = 0;
+        let mut queued: Vec<u64> = Vec::new();
+        while let Ok(Some(h)) = self.queue.dequeue(tid) {
+            queued.push(h);
+        }
+        let present: std::collections::HashSet<u64> = queued.iter().copied().collect();
+        let mut seen = std::collections::HashSet::new();
+        for &h in &queued {
+            // Drop duplicate handles (earlier at-least-once redeliveries)
+            // and handles of already-completed jobs (re-delivered by the
+            // recovered queue because the consuming dequeue's persistence
+            // raced the crash); take() would skip the latter anyway.
+            if seen.insert(h)
+                && self.state(tid, JobId(PAddr::from_u64(h))) == JobState::Pending
+            {
+                let _ = self.queue.enqueue(tid, h);
+            }
+        }
+        for t in 0..self.nthreads {
+            for job in self.submit_log.entries(&self.pool, t) {
+                if self.state(tid, job) == JobState::Pending
+                    && !present.contains(&job.0.to_u64())
+                {
+                    let _ = self.queue.enqueue(tid, job.0.to_u64());
+                }
+            }
+        }
+        // Flush batched re-enqueues (no-op for per-op queues).
+        self.queue.quiesce();
+    }
+
+    /// Flush any thread-buffered queue state (batched handle enqueues).
+    /// Quiescent contexts only — see [`PersistentQueue::quiesce`].
+    pub fn quiesce(&self) {
+        self.queue.quiesce();
     }
 
     /// Audit all jobs found in the persistent submission logs.
@@ -202,8 +265,8 @@ impl Broker {
     }
 
     /// The underlying queue (observability).
-    pub fn queue(&self) -> &PerLcrq {
-        &self.queue
+    pub fn queue(&self) -> &dyn PersistentQueue {
+        self.queue.as_ref()
     }
 }
 

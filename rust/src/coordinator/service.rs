@@ -140,7 +140,10 @@ pub fn run_service(
         }
     }
 
-    // Final drain: finish whatever survived the last crash.
+    // Final drain: finish whatever survived the last crash. Flush any
+    // thread-buffered handle enqueues first (batched work queues) so no
+    // submitted job stays invisible.
+    broker.quiesce();
     while let Some((jid, _)) = broker.take(0)? {
         if broker.complete(0, jid)? {
             processed.fetch_add(1, Ordering::Relaxed);

@@ -16,8 +16,14 @@
 //! * [`queues`] — the paper's algorithm family: IQ / PerIQ (Alg. 1, 6),
 //!   CRQ / PerCRQ (Alg. 3), LCRQ / PerLCRQ (Alg. 5), plus the baselines its
 //!   evaluation compares against: Michael–Scott queue, a durable MS queue,
-//!   and the combining-based PBQueue / PWFQueue.
-//! * [`verify`] — history recording and a durable-linearizability checker.
+//!   and the combining-based PBQueue / PWFQueue. Beyond the paper,
+//!   [`queues::sharded`] stripes operations over K inner PerLCRQs
+//!   (relaxed-FIFO, contention ÷ K) and adds a group-commit batching mode
+//!   that amortizes `psync`s to 1/B per enqueue, with batch-log-based
+//!   crash reconciliation.
+//! * [`verify`] — history recording and a durable-linearizability checker,
+//!   including the k-relaxed FIFO mode ([`verify::check_relaxed`]) that
+//!   machine-verifies sharded histories up to bounded shard skew.
 //! * [`harness`] — workload generators, the multi-thread runner with
 //!   virtual-time metering, and the crash/recovery ("cycle") framework of §5.
 //! * [`runtime`] — a PJRT wrapper that loads the AOT-compiled JAX/Pallas

@@ -3,11 +3,18 @@
 //! ```text
 //! persiq list                       # available algorithms
 //! persiq bench     --algo perlcrq --threads 1,2,4 --ops 200000
+//! persiq bench     --algo sharded-perlcrq --shards 8 --batch 8 --threads 8
 //! persiq recover   --algo periq --cycles 10 --steps 50000
 //! persiq verify    --algo perlcrq --cycles 5
+//! persiq verify    --algo sharded-perlcrq --shards 4 --cycles 10
 //! persiq serve     --producers 2 --workers 2 --jobs 500 --crash-cycles 2
+//! persiq serve     --shards 4 --batch 4 --crash-cycles 2
 //! persiq micro                      # pmem primitive costs
 //! ```
+//!
+//! The algorithm lists, validation and `--algo all` expansion all derive
+//! from `queues::registry()` / `queues::persistent_registry()` — a newly
+//! registered queue shows up everywhere automatically.
 
 use std::sync::Arc;
 
@@ -21,12 +28,14 @@ use persiq::harness::runner::{drain_all, run_workload};
 use persiq::harness::{run_cycles, CycleConfig, RunConfig, Workload};
 use persiq::pmem::crash::install_quiet_crash_hook;
 use persiq::pmem::{CostModel, MeterMode, PmemPool};
-use persiq::queues::{by_name, persistent_by_name, registry, QueueCtx};
+use persiq::queues::{
+    by_name, persistent_by_name, persistent_names, registry, registry_names, QueueCtx,
+};
 use persiq::runtime::MetricsEngine;
-use persiq::util::cli::Command;
+use persiq::util::cli::{Args, Command};
 use persiq::util::report::{fnum, Csv};
 use persiq::util::rng::entropy_seed;
-use persiq::verify::{check, History};
+use persiq::verify::{check_with, relaxation_for, CheckOptions, History};
 use persiq::{log_info, log_warn};
 
 fn main() {
@@ -99,17 +108,52 @@ fn queue_ctx(cfg: &Config, nthreads: usize) -> QueueCtx {
     }
 }
 
+/// Resolve an `--algo` spec ("all" or a comma-separated list) against the
+/// registry — the single source of truth for names, so listings, error
+/// messages and `all` expansion never drift from `queues::registry()`.
+fn resolve_algos(spec: &str, persistent_only: bool) -> Result<Vec<String>> {
+    let known = if persistent_only { persistent_names() } else { registry_names() };
+    if spec == "all" {
+        return Ok(known.iter().map(|s| s.to_string()).collect());
+    }
+    let mut out = Vec::new();
+    for a in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        anyhow::ensure!(
+            known.iter().any(|k| *k == a),
+            "unknown{} algorithm {a:?}; available: {}",
+            if persistent_only { " persistent" } else { "" },
+            known.join(", ")
+        );
+        out.push(a.to_string());
+    }
+    anyhow::ensure!(!out.is_empty(), "no algorithm given; available: {}", known.join(", "));
+    Ok(out)
+}
+
+/// Apply the shared `--shards` / `--batch` overrides to the queue config
+/// and validate it (surfacing `BadConfig` as a CLI error instead of a
+/// construction panic).
+fn apply_queue_overrides(cfg: &mut Config, a: &Args) -> Result<()> {
+    cfg.queue.shards = a.get_parse("shards", cfg.queue.shards)?;
+    cfg.queue.batch = a.get_parse("batch", cfg.queue.batch)?;
+    cfg.queue.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(())
+}
+
 fn cmd_bench(args: &[String]) -> Result<()> {
     let cmd = Command::new("bench", "throughput benchmark over simulated threads")
-        .opt_default("algo", "algorithm(s), comma-separated", "perlcrq")
+        .opt_default("algo", "algorithm(s), comma-separated, or 'all' (see `persiq list`)", "perlcrq")
         .opt_default("threads", "thread counts, comma-separated", "1,2,4,8")
         .opt("ops", "total operations per point")
         .opt_default("workload", "pairs|random5050|enq-heavy|deq-heavy", "pairs")
         .opt("seed", "RNG seed (default: entropy)")
+        .opt("shards", "shard count for sharded algorithms")
+        .opt("batch", "enqueue batch size for sharded algorithms (1 = per-op persistence)")
         .flag("latency", "also report latency percentiles via the metrics engine");
     let a = cmd.parse(args)?;
-    let cfg = Config::load_default();
-    let algos = a.get_list::<String>("algo", &["perlcrq".into()])?;
+    let mut cfg = Config::load_default();
+    apply_queue_overrides(&mut cfg, &a)?;
+    let algos = resolve_algos(a.get("algo").unwrap_or("perlcrq"), false)?;
     let threads = a.get_list::<usize>("threads", &[1, 2, 4, 8])?;
     let ops = a.get_parse::<u64>("ops", cfg.bench_ops)?;
     let workload = Workload::parse(a.get("workload").unwrap_or("pairs"))
@@ -166,69 +210,76 @@ fn cmd_bench(args: &[String]) -> Result<()> {
 
 fn cmd_recover(args: &[String]) -> Result<()> {
     let cmd = Command::new("recover", "crash/recovery cycles (paper §5 framework)")
-        .opt_default("algo", "persistent algorithm", "periq")
+        .opt_default("algo", "persistent algorithm (see `persiq list`)", "periq")
         .opt_default("cycles", "number of cycles", "10")
         .opt_default("steps", "pmem steps before each crash", "50000")
         .opt_default("threads", "worker threads", "4")
         .opt("ops", "max ops per cycle")
+        .opt("shards", "shard count for sharded algorithms")
+        .opt("batch", "enqueue batch size for sharded algorithms")
         .opt("seed", "RNG seed");
     let a = cmd.parse(args)?;
-    let cfg = Config::load_default();
-    let algo = a.get("algo").unwrap_or("periq").to_string();
-    let ctor = persistent_by_name(&algo)
-        .ok_or_else(|| anyhow::anyhow!("{algo} is not a persistent algorithm"))?;
+    let mut cfg = Config::load_default();
+    apply_queue_overrides(&mut cfg, &a)?;
+    let algos = resolve_algos(a.get("algo").unwrap_or("periq"), true)?;
     let nthreads = a.get_parse::<usize>("threads", 4)?;
-    let ctx = queue_ctx(&cfg, nthreads);
-    let q = ctor(&ctx);
-    let ccfg = CycleConfig {
-        cycles: a.get_parse("cycles", 10)?,
-        steps: a.get_parse("steps", 50_000)?,
-        run: RunConfig {
-            nthreads,
-            total_ops: a.get_parse("ops", 10_000_000)?,
+    for algo in &algos {
+        let ctor = persistent_by_name(algo)
+            .ok_or_else(|| anyhow::anyhow!("{algo} is not a persistent algorithm"))?;
+        let ctx = queue_ctx(&cfg, nthreads);
+        let q = ctor(&ctx);
+        let ccfg = CycleConfig {
+            cycles: a.get_parse("cycles", 10)?,
+            steps: a.get_parse("steps", 50_000)?,
+            run: RunConfig {
+                nthreads,
+                total_ops: a.get_parse("ops", 10_000_000)?,
+                seed: a.get_parse("seed", entropy_seed())?,
+                ..Default::default()
+            },
             seed: a.get_parse("seed", entropy_seed())?,
-            ..Default::default()
-        },
-        seed: a.get_parse("seed", entropy_seed())?,
-    };
-    let res = run_cycles(&ctx.pool, &q, &ccfg);
-    let mut csv =
-        Csv::new(vec!["cycle", "ops_before_crash", "recovery_us", "recovery_sim_us", "loads"]);
-    for (i, c) in res.iter().enumerate() {
-        csv.row(vec![
-            i.to_string(),
-            c.ops_before_crash.to_string(),
-            format!("{:.1}", c.recovery_wall_secs * 1e6),
-            format!("{:.1}", c.recovery_sim_ns as f64 / 1e3),
-            c.recovery_loads.to_string(),
+        };
+        let res = run_cycles(&ctx.pool, &q, &ccfg);
+        let mut csv = Csv::new(vec![
+            "cycle", "ops_before_crash", "recovery_us", "recovery_sim_us", "loads",
         ]);
+        for (i, c) in res.iter().enumerate() {
+            csv.row(vec![
+                i.to_string(),
+                c.ops_before_crash.to_string(),
+                format!("{:.1}", c.recovery_wall_secs * 1e6),
+                format!("{:.1}", c.recovery_sim_ns as f64 / 1e3),
+                c.recovery_loads.to_string(),
+            ]);
+        }
+        println!("[{algo}]");
+        print!("{}", csv.to_table());
+        println!(
+            "mean recovery: {:.1} µs wall, {:.1} µs simulated",
+            mean_recovery_secs(&res) * 1e6,
+            mean_recovery_sim_ns(&res) / 1e3
+        );
     }
-    print!("{}", csv.to_table());
-    println!(
-        "mean recovery: {:.1} µs wall, {:.1} µs simulated",
-        mean_recovery_secs(&res) * 1e6,
-        mean_recovery_sim_ns(&res) / 1e3
-    );
     Ok(())
 }
 
 fn cmd_verify(args: &[String]) -> Result<()> {
     let cmd = Command::new("verify", "durable-linearizability torture test")
-        .opt_default("algo", "persistent algorithm (or 'all')", "all")
+        .opt_default("algo", "persistent algorithm(s) or 'all' (see `persiq list`)", "all")
         .opt_default("cycles", "crash cycles per run", "4")
         .opt_default("threads", "worker threads", "4")
         .opt_default("ops", "ops per cycle attempt", "40000")
         .opt_default("steps", "pmem steps before crash", "30000")
+        .opt("shards", "shard count for sharded algorithms")
+        .opt("batch", "enqueue batch size for sharded algorithms")
+        .opt("relax", "allowed FIFO overtakes per dequeue (default: auto per algorithm)")
         .opt("seed", "RNG seed");
     let a = cmd.parse(args)?;
-    let cfg = Config::load_default();
+    let mut cfg = Config::load_default();
+    apply_queue_overrides(&mut cfg, &a)?;
     let seed = a.get_parse::<u64>("seed", entropy_seed())?;
     log_info!("verify seed = {seed}");
-    let algos: Vec<String> = if a.get("algo") == Some("all") {
-        persiq::queues::persistent_registry().iter().map(|(n, _)| n.to_string()).collect()
-    } else {
-        a.get_list::<String>("algo", &[])?
-    };
+    let algos = resolve_algos(a.get("algo").unwrap_or("all"), true)?;
     let nthreads = a.get_parse::<usize>("threads", 4)?;
     let cycles = a.get_parse::<usize>("cycles", 4)?;
     let ops = a.get_parse::<u64>("ops", 40_000)?;
@@ -259,15 +310,35 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         }
         let drained = drain_all(&as_conc, 0);
         let history = History::from_logs(logs, drained);
-        let rep = check(&history, 10);
+        // Sharded algorithms are k-relaxed FIFO (bounded shard skew plus
+        // batch-reconciliation displacement); everything else is strict.
+        let sharded = algo.starts_with("sharded");
+        let batch = if sharded { cfg.queue.batch } else { 1 };
+        let auto_relax = relaxation_for(algo, nthreads, &cfg.queue);
+        let opts = CheckOptions {
+            max_report: 10,
+            relaxation: a.get_parse("relax", auto_relax)?,
+            trailing_loss_per_thread: batch.saturating_sub(1),
+            // Every cycle above ended in pool.crash().
+            crashed_epochs: cycles as u64,
+            // Buffered durability: an EMPTY may race another thread's
+            // unflushed batch — the interval check is unsound there.
+            check_empty: batch <= 1,
+        };
+        let rep = check_with(&history, &opts);
         let status = if rep.ok() { "OK " } else { "FAIL" };
         println!(
-            "{status} {algo:<16} enq={} deq={} empties={} drained={} violations={}",
+            "{status} {algo:<16} enq={} deq={} empties={} drained={} violations={} \
+             max_overtakes={} (relax={}) absorbed: crash={} trailing={}",
             rep.enq_completed,
             rep.deq_values,
             rep.deq_empties,
             rep.drained,
-            rep.violations.len()
+            rep.violations.len(),
+            rep.max_overtakes,
+            opts.relaxation,
+            rep.absorbed_losses,
+            rep.absorbed_trailing,
         );
         for v in &rep.violations {
             log_warn!("  {algo}: {v:?}");
@@ -285,9 +356,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt_default("jobs", "jobs per producer per cycle", "500")
         .opt_default("crash-cycles", "crash/recovery cycles (0 = none)", "0")
         .opt_default("steps", "pmem steps before each crash", "50000")
+        .opt_default("queue", "work queue kind: perlcrq|sharded", "perlcrq")
+        .opt("shards", "shard count for the sharded work queue (implies --queue sharded)")
+        .opt("batch", "enqueue batch size for the sharded work queue (implies --queue sharded)")
         .opt("seed", "RNG seed");
     let a = cmd.parse(args)?;
-    let cfg = Config::load_default();
+    let mut cfg = Config::load_default();
+    // The broker's queue kind is an explicit choice (config-file [queue]
+    // shards/batch only parameterize it); --shards/--batch imply sharded.
+    let sharded_broker = match a.get("queue").unwrap_or("perlcrq") {
+        "sharded" => true,
+        "perlcrq" => a.get("shards").is_some() || a.get("batch").is_some(),
+        other => anyhow::bail!("unknown --queue {other:?} (perlcrq|sharded)"),
+    };
+    apply_queue_overrides(&mut cfg, &a)?;
     let producers = a.get_parse::<usize>("producers", 2)?;
     let workers = a.get_parse::<usize>("workers", 2)?;
     let scfg = ServiceConfig {
@@ -299,8 +381,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         seed: a.get_parse("seed", entropy_seed())?,
     };
     let pool = Arc::new(PmemPool::new(cfg.pmem.clone()));
-    let broker =
-        Arc::new(Broker::new(&pool, producers + workers, 1 << 16, cfg.queue.ring_size));
+    let broker = if sharded_broker {
+        log_info!(
+            "broker work queue: sharded-perlcrq (shards={}, batch={})",
+            cfg.queue.shards,
+            cfg.queue.batch
+        );
+        Arc::new(
+            Broker::new_sharded(&pool, producers + workers, 1 << 16, cfg.queue.clone())
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        )
+    } else {
+        Arc::new(Broker::new(&pool, producers + workers, 1 << 16, cfg.queue.ring_size))
+    };
     let rep = run_service(&pool, &broker, &scfg)?;
     println!(
         "broker: submitted={} done={} pending={} crashes={} wall={:.3}s",

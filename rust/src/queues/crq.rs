@@ -67,6 +67,16 @@ pub enum EnqResult {
     Closed,
 }
 
+/// Result of a ring enqueue that reports the landing index (used by the
+/// sharded queue's batch log so recovery can reconcile in-flight batches
+/// by position).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnqAt {
+    /// Enqueued at ring index `idx` (`idx % R` is the cell).
+    Ok(u64),
+    Closed,
+}
+
 /// Result of a ring dequeue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DeqResult {
@@ -82,6 +92,12 @@ pub struct PersistCfg {
     /// Disable the closedFlag optimization (ablation: persist Tail on
     /// every CLOSED return).
     pub disable_closed_flag: bool,
+    /// Batched-persistence mode (queues::sharded): the successful-enqueue
+    /// site still issues its cell `pwb` but skips the `psync`; the outer
+    /// batching layer issues one `psync` per batch, amortizing the drain
+    /// cost. Dequeue-side persistence (`persist_head`) is unaffected —
+    /// dequeues must be durable before returning an item.
+    pub defer_enqueue_sync: bool,
 }
 
 // NOTE on the `closedFlag` optimization of §4.2: once some thread has
@@ -184,6 +200,21 @@ impl Ring {
         starvation_limit: usize,
         persist: Option<(&PersistCfg, PAddr)>,
     ) -> EnqResult {
+        match self.enqueue_at(pool, tid, item, starvation_limit, persist) {
+            EnqAt::Ok(_) => EnqResult::Ok,
+            EnqAt::Closed => EnqResult::Closed,
+        }
+    }
+
+    /// [`Ring::enqueue`] that also reports the landing index on success.
+    pub fn enqueue_at(
+        &self,
+        pool: &PmemPool,
+        tid: usize,
+        item: u64,
+        starvation_limit: usize,
+        persist: Option<(&PersistCfg, PAddr)>,
+    ) -> EnqAt {
         let r = self.r();
         let mut attempts = 0usize;
         loop {
@@ -197,7 +228,7 @@ impl Ring {
                 if let Some((pc, flag)) = persist {
                     self.persist_closed(pool, tid, pc, flag);
                 }
-                return EnqResult::Closed;
+                return EnqAt::Closed;
             }
             let u = t % r;
             let cell = self.cell_addr(u);
@@ -211,12 +242,15 @@ impl Ring {
                     let new_flags = pack_flags(false, t / r); // (1, t, x)
                     if pool.cas2(tid, cell, (flags, BOT), (new_flags, enc(item))) {
                         // line 15 (PerCRQ): the operation's only
-                        // persistence pair.
-                        if persist.is_some() {
+                        // persistence pair (psync deferred to the batching
+                        // layer in defer_enqueue_sync mode).
+                        if let Some((pc, _)) = persist {
                             pool.pwb(tid, cell);
-                            pool.psync(tid);
+                            if !pc.defer_enqueue_sync {
+                                pool.psync(tid);
+                            }
                         }
-                        return EnqResult::Ok;
+                        return EnqAt::Ok(t);
                     }
                 }
             }
@@ -229,7 +263,7 @@ impl Ring {
                     // line 20: persist the closed Tail.
                     self.persist_closed(pool, tid, pc, flag);
                 }
-                return EnqResult::Closed;
+                return EnqAt::Closed;
             }
         }
     }

@@ -83,6 +83,7 @@ pub struct Iq {
 
 impl Iq {
     pub fn new(pool: &Arc<PmemPool>, _nthreads: usize, cfg: QueueConfig) -> Self {
+        cfg.validate().expect("invalid QueueConfig");
         Self { pool: Arc::clone(pool), layout: IqLayout::alloc(pool, cfg.iq_capacity) }
     }
 

@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use super::crq::{DeqResult, EnqResult, PersistCfg, Ring};
+use super::crq::{DeqResult, EnqAt, PersistCfg, Ring};
 use super::{ConcurrentQueue, HeadPersistMode, QueueConfig, QueueError, MAX_ITEM};
 use crate::pmem::{PAddr, PmemPool, WORDS_PER_LINE};
 
@@ -51,7 +51,9 @@ impl LcrqCore {
         node.add(1)
     }
 
-    fn ring_of(&self, node: PAddr) -> Ring {
+    /// The ring embedded in `node` (also used by the sharded layer's batch
+    /// reconciliation, which stores node addresses in its persistent log).
+    pub fn ring_of(&self, node: PAddr) -> Ring {
         Ring::at(node.add(WORDS_PER_LINE), self.ring_size, self.nthreads)
     }
 
@@ -61,6 +63,7 @@ impl LcrqCore {
         cfg: &QueueConfig,
         persist: Option<PersistCfg>,
     ) -> Self {
+        cfg.validate().expect("invalid QueueConfig");
         let first = pool.alloc_lines(1);
         let last = pool.alloc_lines(1);
         pool.set_hot(first, 1, crate::pmem::Hotness::Global);
@@ -117,6 +120,15 @@ impl LcrqCore {
 
     /// Algorithm 5, Enqueue(x) (lines 16-31).
     pub fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        self.enqueue_at(tid, item).map(|_| ())
+    }
+
+    /// [`LcrqCore::enqueue`] that also reports where the item landed:
+    /// `(node address, ring index)`. The sharded layer's batch log records
+    /// this position so post-crash reconciliation can decide, per logged
+    /// item, whether it is still present, already durably consumed, or
+    /// lost and in need of re-insertion.
+    pub fn enqueue_at(&self, tid: usize, item: u64) -> Result<(PAddr, u64), QueueError> {
         if item >= MAX_ITEM {
             return Err(QueueError::ItemOutOfRange(item));
         }
@@ -142,8 +154,9 @@ impl LcrqCore {
                 .persist
                 .as_ref()
                 .map(|pc| (pc, Self::closed_flag_addr(l)));
-            if ring.enqueue(p, tid, item, self.starvation_limit, per) == EnqResult::Ok {
-                return Ok(()); // line 27
+            if let EnqAt::Ok(idx) = ring.enqueue_at(p, tid, item, self.starvation_limit, per)
+            {
+                return Ok((l, idx)); // line 27
             }
             // CLOSED: append a fresh node containing the item.
             let node = *nd.get_or_insert_with(|| self.new_node(tid, item));
@@ -155,7 +168,7 @@ impl LcrqCore {
                     p.psync(tid);
                 }
                 let _ = p.cas(tid, self.last, l.to_u64(), node.to_u64()); // line 30
-                return Ok(()); // line 31
+                return Ok((node, 0)); // line 31 — seeded at Q[0]
             }
             // Another thread appended first: keep our node for the next
             // attempt (the paper allocates per retry; reusing is safe — the
@@ -263,6 +276,7 @@ mod core_access {
             head_mode: cfg.head_mode,
             skip_tail_persist: cfg.skip_tail_persist,
             disable_closed_flag: cfg.disable_closed_flag,
+            defer_enqueue_sync: cfg.defer_enqueue_sync,
         }
     }
 }

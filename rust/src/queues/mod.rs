@@ -14,6 +14,7 @@
 //! | [`msq`] | Michael–Scott queue (volatile baseline) | \[19\] |
 //! | [`durable_msq`] | persist-everything durable MS queue | \[11\]-style baseline |
 //! | [`combining`] | CC-Synch combining; PBQueue, PWFQueue | \[6\], \[9\] |
+//! | [`sharded`] | **ShardedQueue** — K-way striped PerLCRQs + batched persistence | beyond the paper (BlockFIFO / Second-Amendment directions) |
 //!
 //! ## Value encoding
 //!
@@ -33,6 +34,7 @@ pub mod msq;
 pub mod percrq;
 pub mod perlcrq;
 pub mod periq;
+pub mod sharded;
 
 use std::sync::Arc;
 
@@ -50,6 +52,13 @@ pub enum QueueError {
     /// The backing structure is out of capacity (IQ's "infinite" array is a
     /// finite arena in this simulator; size it to the workload).
     CapacityExhausted,
+    /// The [`QueueConfig`] is invalid for the requested construction (e.g.
+    /// zero shards, zero batch size, non-power-of-two ring). Returned by
+    /// [`QueueConfig::validate`] and by constructors that take a `Result`
+    /// path (notably [`sharded::ShardedQueue`]); infallible constructors
+    /// panic with the same message if handed a config that was never
+    /// validated.
+    BadConfig(&'static str),
 }
 
 impl std::fmt::Display for QueueError {
@@ -57,6 +66,7 @@ impl std::fmt::Display for QueueError {
         match self {
             QueueError::ItemOutOfRange(v) => write!(f, "item {v} out of range (>= 2^62)"),
             QueueError::CapacityExhausted => write!(f, "queue capacity exhausted"),
+            QueueError::BadConfig(msg) => write!(f, "invalid queue config: {msg}"),
         }
     }
 }
@@ -86,6 +96,12 @@ pub trait PersistentQueue: ConcurrentQueue {
     /// crash; also reinitializes any volatile bookkeeping this queue keeps
     /// outside the pool.
     fn recover(&self, pool: &PmemPool);
+
+    /// Flush any thread-buffered state (e.g. the sharded queue's
+    /// group-commit batches) to NVM. Default: no-op — per-operation
+    /// persistent queues have nothing buffered. **Quiescent contexts
+    /// only** (all workers stopped).
+    fn quiesce(&self) {}
 }
 
 /// Construction-time knobs shared across algorithms.
@@ -108,7 +124,27 @@ pub struct QueueConfig {
     /// Disable the §4.2 closedFlag optimization (ablation A3): every
     /// CLOSED return re-persists `Tail`.
     pub disable_closed_flag: bool,
+    /// Number of inner queues a [`sharded::ShardedQueue`] stripes over
+    /// (ignored by non-sharded algorithms). Must be in `1..=MAX_SHARDS`.
+    pub shards: usize,
+    /// Enqueue batch size for the sharded queue's amortized-persistence
+    /// mode: `1` = persist every operation (plain sharding); `B > 1` =
+    /// group-commit every `B` enqueues with a single `psync` (see
+    /// [`sharded`] docs). Must be in `1..=MAX_BATCH`.
+    pub batch: usize,
+    /// Internal (set by [`sharded::ShardedQueue`] in batched mode): issue
+    /// the enqueue cell `pwb` but *defer* its `psync` to the caller, who
+    /// must issue one `psync` per batch. Leaving this on without an outer
+    /// syncing layer forfeits per-operation durability — never enable it
+    /// directly.
+    pub defer_enqueue_sync: bool,
 }
+
+/// Upper bound on [`QueueConfig::shards`].
+pub const MAX_SHARDS: usize = 64;
+/// Upper bound on [`QueueConfig::batch`] (keeps the per-thread batch log a
+/// handful of cache lines).
+pub const MAX_BATCH: usize = 32;
 
 impl Default for QueueConfig {
     fn default() -> Self {
@@ -120,7 +156,32 @@ impl Default for QueueConfig {
             head_mode: HeadPersistMode::Local,
             skip_tail_persist: false,
             disable_closed_flag: false,
+            shards: 4,
+            batch: 1,
+            defer_enqueue_sync: false,
         }
+    }
+}
+
+impl QueueConfig {
+    /// Validate the configuration. Every queue constructor calls this (and
+    /// panics on `Err` — the uniform construction contract); fallible
+    /// entry points such as the CLI and [`sharded::ShardedQueue::new_perlcrq`]
+    /// surface the [`QueueError::BadConfig`] instead.
+    pub fn validate(&self) -> Result<(), QueueError> {
+        if self.ring_size < 2 || !self.ring_size.is_power_of_two() {
+            return Err(QueueError::BadConfig("ring_size must be a power of two >= 2"));
+        }
+        if self.iq_capacity == 0 {
+            return Err(QueueError::BadConfig("iq_capacity must be nonzero"));
+        }
+        if self.shards == 0 || self.shards > MAX_SHARDS {
+            return Err(QueueError::BadConfig("shards must be in 1..=64"));
+        }
+        if self.batch == 0 || self.batch > MAX_BATCH {
+            return Err(QueueError::BadConfig("batch must be in 1..=32"));
+        }
+        Ok(())
     }
 }
 
@@ -173,7 +234,24 @@ pub fn registry() -> Vec<(&'static str, fn(&QueueCtx) -> Arc<dyn ConcurrentQueue
         ("pbqueue", |c| Arc::new(combining::pbqueue::PbQueue::new(&c.pool, c.nthreads))),
         ("pwfqueue", |c| Arc::new(combining::pwfqueue::PwfQueue::new(&c.pool, c.nthreads))),
         ("ccqueue", |c| Arc::new(combining::ccqueue::CcQueue::new(&c.pool, c.nthreads))),
+        ("sharded-perlcrq", |c| {
+            Arc::new(
+                sharded::ShardedQueue::new_perlcrq(&c.pool, c.nthreads, c.cfg.clone())
+                    .expect("invalid sharded config (call QueueConfig::validate first)"),
+            )
+        }),
     ]
+}
+
+/// All algorithm names, in registry order (the single source of truth the
+/// CLI derives its listings, validation and `all` expansion from).
+pub fn registry_names() -> Vec<&'static str> {
+    registry().iter().map(|(n, _)| *n).collect()
+}
+
+/// Names of the persistent algorithms, in registry order.
+pub fn persistent_names() -> Vec<&'static str> {
+    persistent_registry().iter().map(|(n, _)| *n).collect()
 }
 
 /// Persistent algorithms (those with a recovery function), for crash-cycle
@@ -190,6 +268,12 @@ pub fn persistent_registry() -> Vec<(&'static str, fn(&QueueCtx) -> Arc<dyn Pers
         ("pbqueue", |c| Arc::new(combining::pbqueue::PbQueue::new(&c.pool, c.nthreads))),
         ("pwfqueue", |c| Arc::new(combining::pwfqueue::PwfQueue::new(&c.pool, c.nthreads))),
         ("durable-msq", |c| Arc::new(durable_msq::DurableMsQueue::new(&c.pool, c.nthreads))),
+        ("sharded-perlcrq", |c| {
+            Arc::new(
+                sharded::ShardedQueue::new_perlcrq(&c.pool, c.nthreads, c.cfg.clone())
+                    .expect("invalid sharded config (call QueueConfig::validate first)"),
+            )
+        }),
     ]
 }
 
@@ -235,5 +319,29 @@ mod tests {
         assert!(by_name("nonexistent").is_none());
         assert!(persistent_by_name("pbqueue").is_some());
         assert!(persistent_by_name("msq").is_none(), "msq is not persistent");
+        assert!(by_name("sharded-perlcrq").is_some());
+        assert!(persistent_by_name("sharded-perlcrq").is_some());
+    }
+
+    #[test]
+    fn name_helpers_match_registries() {
+        assert_eq!(registry_names().len(), registry().len());
+        assert_eq!(persistent_names().len(), persistent_registry().len());
+        assert!(registry_names().contains(&"sharded-perlcrq"));
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(QueueConfig::default().validate().is_ok());
+        let bad = QueueConfig { shards: 0, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { batch: 0, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { batch: MAX_BATCH + 1, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { ring_size: 100, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { iq_capacity: 0, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
     }
 }

@@ -133,6 +133,7 @@ pub struct PerCrq {
 
 impl PerCrq {
     pub fn new(pool: &Arc<PmemPool>, nthreads: usize, cfg: QueueConfig) -> Self {
+        cfg.validate().expect("invalid QueueConfig");
         Self {
             pool: Arc::clone(pool),
             ring: Ring::alloc(pool, cfg.ring_size, nthreads),
@@ -141,6 +142,7 @@ impl PerCrq {
                 head_mode: cfg.head_mode,
                 skip_tail_persist: cfg.skip_tail_persist,
                 disable_closed_flag: cfg.disable_closed_flag,
+                defer_enqueue_sync: cfg.defer_enqueue_sync,
             },
             starvation_limit: cfg.starvation_limit,
         }

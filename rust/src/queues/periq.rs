@@ -43,6 +43,7 @@ pub struct PerIq {
 impl PerIq {
     pub fn new(pool: &Arc<PmemPool>, nthreads: usize, cfg: QueueConfig) -> Self {
         assert!(nthreads >= 1);
+        cfg.validate().expect("invalid QueueConfig");
         Self {
             pool: Arc::clone(pool),
             layout: IqLayout::alloc(pool, cfg.iq_capacity),

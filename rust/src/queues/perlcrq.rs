@@ -47,6 +47,12 @@ impl PerLcrq {
     pub fn node_count(&self, tid: usize) -> usize {
         self.core.node_count(tid)
     }
+
+    /// The list-of-rings core (used by [`super::sharded`] for traced
+    /// enqueues and batch-log reconciliation).
+    pub(crate) fn core(&self) -> &LcrqCore {
+        &self.core
+    }
 }
 
 impl ConcurrentQueue for PerLcrq {

@@ -1,0 +1,208 @@
+//! Per-thread persistent batch logs for the sharded queue's amortized
+//! ("group-commit") persistence mode — the Second-Amendment-style batching
+//! idea adapted to this framework's explicit epoch persistency model.
+//!
+//! ## Layout
+//!
+//! Each thread owns a line-aligned, single-writer (`Hotness::Private`) log:
+//!
+//! ```text
+//! line 0, word 0     : header = (seq << 8) | count      (0 = empty/retired)
+//! line 1 + i/2,
+//!   words 4·(i%2)..  : entry i = [item+1][shard<<32|node][ring idx][seq]
+//! ```
+//!
+//! Entries are 4 words so an entry never straddles a cache line (lines are
+//! the unit of crash-time atomicity in [`crate::pmem`]); each entry carries
+//! the batch sequence number so a torn log — header line and entry lines
+//! realized independently at a crash — is detected per entry instead of
+//! misread: an entry whose `seq` disagrees with the header's is stale and
+//! skipped during reconciliation.
+//!
+//! ## Protocol (see [`super`] for the full correctness argument)
+//!
+//! * `record(i, …)` — plain stores while the batch fills (cheap: private
+//!   line, no flush).
+//! * `seal(count, seq)` — write the header and `pwb` the touched lines; the
+//!   caller then issues **one `psync`** that realizes the log *and* all the
+//!   batch's deferred cell flushes together.
+//! * `clear()` — recovery retires a reconciled log durably (header := 0) so
+//!   a later crash cannot replay it.
+
+use crate::pmem::{Hotness, PAddr, PmemPool, WORDS_PER_LINE};
+
+use super::EnqPos;
+
+/// Words per log entry (item, shard|node, ring index, batch seq).
+const ENTRY_WORDS: usize = 4;
+/// Entries per cache line (entries must not straddle lines).
+const ENTRIES_PER_LINE: usize = WORDS_PER_LINE / ENTRY_WORDS;
+
+/// A decoded log entry.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct LogEntry {
+    /// `item + 1` (0 = slot never written).
+    pub enc_item: u64,
+    pub shard: usize,
+    pub node: PAddr,
+    pub idx: u64,
+    pub seq: u64,
+}
+
+/// One thread's persistent batch log.
+pub(crate) struct BatchLog {
+    base: PAddr,
+    capacity: usize,
+}
+
+impl BatchLog {
+    fn lines(capacity: usize) -> usize {
+        1 + capacity.div_ceil(ENTRIES_PER_LINE)
+    }
+
+    /// Allocate a log holding up to `capacity` entries (`capacity` ≤
+    /// [`crate::queues::MAX_BATCH`], enforced upstream by
+    /// `QueueConfig::validate`).
+    pub fn alloc(pool: &PmemPool, capacity: usize) -> Self {
+        let lines = Self::lines(capacity);
+        let base = pool.alloc_lines(lines);
+        pool.set_hot(base, lines * WORDS_PER_LINE, Hotness::Private);
+        Self { base, capacity }
+    }
+
+    fn entry_addr(&self, i: usize) -> PAddr {
+        debug_assert!(i < self.capacity);
+        self.base
+            .add(WORDS_PER_LINE * (1 + i / ENTRIES_PER_LINE) + ENTRY_WORDS * (i % ENTRIES_PER_LINE))
+    }
+
+    /// Record entry `i` of the filling batch (plain stores, no flush).
+    pub fn record(
+        &self,
+        pool: &PmemPool,
+        tid: usize,
+        i: usize,
+        item: u64,
+        shard: usize,
+        pos: &EnqPos,
+        seq: u64,
+    ) {
+        let a = self.entry_addr(i);
+        pool.store(tid, a, item + 1);
+        pool.store(tid, a.add(1), ((shard as u64) << 32) | pos.node.to_u64());
+        pool.store(tid, a.add(2), pos.idx);
+        pool.store(tid, a.add(3), seq);
+    }
+
+    /// Seal the batch: publish the header and request write-back of every
+    /// touched line. The caller issues the single `psync` that makes the
+    /// log and the batch's deferred cell flushes durable together.
+    pub fn seal(&self, pool: &PmemPool, tid: usize, count: usize, seq: u64) {
+        debug_assert!(count <= self.capacity && count < 256);
+        pool.store(tid, self.base, (seq << 8) | count as u64);
+        pool.pwb(tid, self.base);
+        for line in 0..count.div_ceil(ENTRIES_PER_LINE) {
+            pool.pwb(tid, self.base.add(WORDS_PER_LINE * (1 + line)));
+        }
+    }
+
+    /// Read the durable header: `(count, seq)`.
+    pub fn header(&self, pool: &PmemPool, tid: usize) -> (usize, u64) {
+        let h = pool.load(tid, self.base);
+        ((h & 0xFF) as usize, h >> 8)
+    }
+
+    /// Decode entry `i`.
+    pub fn entry(&self, pool: &PmemPool, tid: usize, i: usize) -> LogEntry {
+        let a = self.entry_addr(i);
+        let w1 = pool.load(tid, a.add(1));
+        LogEntry {
+            enc_item: pool.load(tid, a),
+            shard: (w1 >> 32) as usize,
+            node: PAddr::from_u64(w1 & 0xFFFF_FFFF),
+            idx: pool.load(tid, a.add(2)),
+            seq: pool.load(tid, a.add(3)),
+        }
+    }
+
+    /// Retire the log (recovery): header := 0, write-back requested; the
+    /// caller psyncs.
+    pub fn clear(&self, pool: &PmemPool, tid: usize) {
+        pool.store(tid, self.base, 0);
+        pool.pwb(tid, self.base);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+
+    fn pool() -> PmemPool {
+        PmemPool::new(PmemConfig {
+            capacity_words: 1 << 14,
+            cost: CostModel::zero(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 1,
+        })
+    }
+
+    #[test]
+    fn entries_never_straddle_lines() {
+        let p = pool();
+        let log = BatchLog::alloc(&p, 32);
+        for i in 0..32 {
+            let a = log.entry_addr(i);
+            assert_eq!(
+                a.line(),
+                a.add(ENTRY_WORDS - 1).line(),
+                "entry {i} straddles a cache line"
+            );
+        }
+    }
+
+    #[test]
+    fn record_seal_roundtrip_survives_crash() {
+        let p = pool();
+        let log = BatchLog::alloc(&p, 8);
+        for i in 0..5usize {
+            let pos = EnqPos { node: PAddr(64), idx: 10 + i as u64 };
+            log.record(&p, 0, i, 100 + i as u64, i % 3, &pos, 7);
+        }
+        log.seal(&p, 0, 5, 7);
+        p.psync(0);
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(2);
+        p.crash(&mut rng);
+        let (count, seq) = log.header(&p, 0);
+        assert_eq!((count, seq), (5, 7));
+        for i in 0..5usize {
+            let e = log.entry(&p, 0, i);
+            assert_eq!(e.enc_item, 101 + i as u64);
+            assert_eq!(e.shard, i % 3);
+            assert_eq!(e.node, PAddr(64));
+            assert_eq!(e.idx, 10 + i as u64);
+            assert_eq!(e.seq, 7);
+        }
+    }
+
+    #[test]
+    fn unsealed_batch_is_lost_sealed_clear_is_durable() {
+        let p = pool();
+        let log = BatchLog::alloc(&p, 4);
+        let pos = EnqPos { node: PAddr(8), idx: 0 };
+        log.record(&p, 0, 0, 42, 0, &pos, 1);
+        // No seal/psync: the header must read empty after a crash.
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(3);
+        p.crash(&mut rng);
+        assert_eq!(log.header(&p, 0).0, 0);
+        // Seal + psync, then durable clear.
+        log.record(&p, 0, 0, 42, 0, &pos, 2);
+        log.seal(&p, 0, 1, 2);
+        p.psync(0);
+        log.clear(&p, 0);
+        p.psync(0);
+        p.crash(&mut rng);
+        assert_eq!(log.header(&p, 0).0, 0, "cleared log must stay cleared");
+    }
+}

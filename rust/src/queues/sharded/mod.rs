@@ -1,0 +1,656 @@
+//! `ShardedQueue` — a K-way striped, optionally batch-persisted FIFO layer
+//! over the paper's persistent queues (PerLCRQ by default).
+//!
+//! The paper's core insight is that persistence cost is governed by *where*
+//! the `pwb`+`psync` pair lands: low-contention locations scale, hot spots
+//! do not. A single PerLCRQ still funnels every thread through one
+//! `Head`/`Tail` FAI pair. This subsystem takes the next step the related
+//! work points at (BlockFIFO/MultiFIFO's relaxed sharded designs, and the
+//! *Durable Queues: The Second Amendment* batching idea):
+//!
+//! * **Sharding** — operations stripe across `K = QueueConfig::shards`
+//!   inner persistent queues via a per-thread round-robin ticket, dividing
+//!   the FAI serialization chains (and the hot `Tail` flush traffic) by
+//!   `K`. FIFO becomes *relaxed*: a dequeue may overtake items that sit in
+//!   sibling shards, bounded by the shard skew. Histories are checked with
+//!   [`crate::verify::check_relaxed`], which accepts at most `k`
+//!   out-of-order dequeues per operation.
+//! * **Batching** — with `QueueConfig::batch = B > 1`, enqueues run in
+//!   group-commit mode: each op issues its cell `pwb` but *defers* the
+//!   `psync` ([`crate::queues::crq::PersistCfg::defer_enqueue_sync`]); every
+//!   `B`-th enqueue seals the thread's persistent [`batch`] log and issues
+//!   **one `psync`** that realizes the whole batch (log lines + all
+//!   deferred cell flushes) in a single drain. Amortized persistence:
+//!   `1/B` psyncs per enqueue. Dequeues keep their per-op pair — an item
+//!   must be durably consumed before it is returned.
+//!
+//! ## Durability contract under batching
+//!
+//! A batched enqueue is durably linearized **at the flush**, not at its
+//! return ("buffered durable linearizability" — the same contract as group
+//! commit in databases). A crash can therefore lose at most the last
+//! `B − 1` *unflushed* enqueues of each thread; the checker accounts for
+//! exactly that window via `CheckOptions::trailing_loss_per_thread`.
+//!
+//! ## Crash recovery and batch reconciliation
+//!
+//! [`ShardedQueue::recover`] re-runs each shard's recovery, then reconciles
+//! in-flight batches from the per-thread logs. For every entry of a sealed
+//! log (`item`, shard, node, ring index, seq) it decides:
+//!
+//! * ring `Head > idx` → **settled**: the position was durably consumed or
+//!   passed. Crucially, a dequeue only *returns* an item after its
+//!   `persist_head` pair completes, so `Head ≤ idx` proves the item was
+//!   never handed to any caller — re-inserting it cannot duplicate.
+//! * cell at `idx` still holds `item` → **present**: nothing to do.
+//! * otherwise → **missing**: the cell flush never landed; the item is
+//!   re-enqueued (it lands at the tail — a bounded relaxation the relaxed
+//!   checker absorbs).
+//!
+//! Logs are retired durably after reconciliation so a later crash cannot
+//! replay them; batch sequence numbers stored in every entry detect torn
+//! logs (header and entry lines realized independently at a crash).
+
+pub mod batch;
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+use crossbeam_utils::CachePadded;
+
+use super::perlcrq::PerLcrq;
+use super::{ConcurrentQueue, PersistentQueue, QueueConfig, QueueError};
+use crate::pmem::{PAddr, PmemPool};
+
+use self::batch::BatchLog;
+
+/// Where a traced enqueue landed: the LCRQ node and the ring index within
+/// it. Stable across crashes (node addresses are arena offsets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EnqPos {
+    pub node: PAddr,
+    pub idx: u64,
+}
+
+/// Reconciliation verdict for a logged batch entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Probe {
+    /// The position was durably consumed or passed — do not re-insert.
+    Settled,
+    /// The item is still durably present at its logged position.
+    Present,
+    /// The item is gone and provably was never returned to a caller:
+    /// re-insertion is safe.
+    Missing,
+}
+
+/// An inner queue the sharded layer can stripe over: a persistent queue
+/// that can additionally report *where* an enqueue landed and answer
+/// recovery probes about logged positions.
+pub trait Shardable: PersistentQueue {
+    /// Enqueue and report the landing position.
+    fn enqueue_traced(&self, tid: usize, item: u64) -> Result<EnqPos, QueueError>;
+
+    /// Post-crash, post-recovery: classify a logged `(pos, item)` pair.
+    /// Single-threaded (recovery context).
+    fn probe(&self, tid: usize, pos: &EnqPos, item: u64) -> Probe;
+
+    /// Cheap, non-linearizable emptiness hint used by the dequeue scan to
+    /// skip shards that currently look empty. Must never report `false`
+    /// while an item whose enqueue completed before the call started is
+    /// still in the queue (reads of live state satisfy this). Defaults to
+    /// "always probe".
+    fn maybe_nonempty(&self, _tid: usize) -> bool {
+        true
+    }
+}
+
+impl Shardable for PerLcrq {
+    fn enqueue_traced(&self, tid: usize, item: u64) -> Result<EnqPos, QueueError> {
+        let (node, idx) = self.core().enqueue_at(tid, item)?;
+        Ok(EnqPos { node, idx })
+    }
+
+    fn probe(&self, tid: usize, pos: &EnqPos, item: u64) -> Probe {
+        let core = self.core();
+        let pool = &core.pool;
+        let ring = core.ring_of(pos.node);
+        let (head, _tail) = ring.endpoints(pool, tid);
+        if head > pos.idx {
+            // A dequeue returns only after its persist_head pair, so a
+            // durable Head past idx means the position is accounted for.
+            return Probe::Settled;
+        }
+        let u = pos.idx % ring.ring_size as u64;
+        let (_uns, idx, val) = ring.read_cell(pool, tid, u);
+        if idx == pos.idx && val == item + 1 {
+            Probe::Present
+        } else {
+            Probe::Missing
+        }
+    }
+
+    fn maybe_nonempty(&self, tid: usize) -> bool {
+        let core = self.core();
+        let pool = &core.pool;
+        let first = PAddr::from_u64(pool.load(tid, core.first));
+        if first.is_null() {
+            return true; // defensive: always probe
+        }
+        let (head, tail) = core.ring_of(first).endpoints(pool, tid);
+        // Items in the first ring, or a successor node (next ptr at node+0).
+        tail > head || pool.load(tid, first) != 0
+    }
+}
+
+/// Per-thread volatile dispatch state. Slot `tid` is touched only by the
+/// thread running as `tid` while workers are live, and by the single
+/// coordinator thread (recovery, `flush_all`) after all workers have
+/// stopped — the same exclusive-logical-owner pattern as the pool's
+/// pending-flush slots.
+#[derive(Default)]
+struct SlotState {
+    /// Round-robin enqueue ticket.
+    ticket: u64,
+    /// Dequeue scan start.
+    cursor: usize,
+    /// Entries recorded in the filling batch.
+    pending: usize,
+    /// Current batch sequence number (starts at 1; 0 is "never sealed").
+    seq: u64,
+}
+
+struct Slot(UnsafeCell<SlotState>);
+
+unsafe impl Sync for Slot {}
+
+/// The sharded (and optionally batched) persistent queue. See module docs.
+pub struct ShardedQueue<Q: Shardable = PerLcrq> {
+    pool: Arc<PmemPool>,
+    shards: Vec<Q>,
+    nshards: usize,
+    batch: usize,
+    nthreads: usize,
+    slots: Vec<CachePadded<Slot>>,
+    /// Per-thread persistent batch logs (empty when `batch == 1`).
+    logs: Vec<BatchLog>,
+    name: &'static str,
+}
+
+impl ShardedQueue<PerLcrq> {
+    /// The default construction: `cfg.shards` PerLCRQ shards, batched when
+    /// `cfg.batch > 1`. Fails with [`QueueError::BadConfig`] on zero
+    /// shards/batch (and the other `QueueConfig::validate` rules) instead
+    /// of panicking.
+    pub fn new_perlcrq(
+        pool: &Arc<PmemPool>,
+        nthreads: usize,
+        cfg: QueueConfig,
+    ) -> Result<Self, QueueError> {
+        cfg.validate()?;
+        let mut shard_cfg = cfg.clone();
+        // Batched mode defers the enqueue-cell psync to the flush; plain
+        // sharding keeps the paper's per-op pair.
+        shard_cfg.defer_enqueue_sync = cfg.batch > 1;
+        let shards: Vec<PerLcrq> = (0..cfg.shards)
+            .map(|_| PerLcrq::new(pool, nthreads, shard_cfg.clone()))
+            .collect();
+        Self::from_shards(pool, nthreads, &cfg, shards, "sharded-perlcrq")
+    }
+}
+
+impl<Q: Shardable> ShardedQueue<Q> {
+    /// Generic construction over caller-built shards. The shards must
+    /// already be configured consistently with `cfg` (in particular,
+    /// `defer_enqueue_sync` iff `cfg.batch > 1`).
+    pub fn from_shards(
+        pool: &Arc<PmemPool>,
+        nthreads: usize,
+        cfg: &QueueConfig,
+        shards: Vec<Q>,
+        name: &'static str,
+    ) -> Result<Self, QueueError> {
+        cfg.validate()?;
+        if shards.is_empty() {
+            return Err(QueueError::BadConfig("at least one shard is required"));
+        }
+        let nshards = shards.len();
+        let logs = if cfg.batch > 1 {
+            (0..nthreads).map(|_| BatchLog::alloc(pool, cfg.batch)).collect()
+        } else {
+            Vec::new()
+        };
+        Ok(Self {
+            pool: Arc::clone(pool),
+            shards,
+            nshards,
+            batch: cfg.batch,
+            nthreads,
+            slots: (0..nthreads)
+                .map(|_| {
+                    CachePadded::new(Slot(UnsafeCell::new(SlotState {
+                        seq: 1,
+                        ..Default::default()
+                    })))
+                })
+                .collect(),
+            logs,
+            name,
+        })
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.nshards
+    }
+
+    /// Configured batch size (1 = per-op persistence).
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    fn slot(&self, tid: usize) -> &mut SlotState {
+        // SAFETY: exclusive-logical-owner — see SlotState docs.
+        unsafe { &mut *self.slots[tid].0.get() }
+    }
+
+    fn enqueue_impl(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        let slot = self.slot(tid);
+        let shard = (slot.ticket % self.nshards as u64) as usize;
+        slot.ticket += 1;
+        if self.batch <= 1 {
+            return self.shards[shard].enqueue(tid, item);
+        }
+        let pos = self.shards[shard].enqueue_traced(tid, item)?;
+        let i = slot.pending;
+        self.logs[tid].record(&self.pool, tid, i, item, shard, &pos, slot.seq);
+        slot.pending = i + 1;
+        if slot.pending >= self.batch {
+            self.flush(tid);
+        }
+        Ok(())
+    }
+
+    /// Flush thread `tid`'s filling batch: seal the log and issue the
+    /// batch's single `psync` (draining the log lines and every deferred
+    /// cell `pwb` at once). No-op when nothing is pending or batching is
+    /// off.
+    pub fn flush(&self, tid: usize) {
+        if self.batch <= 1 {
+            return;
+        }
+        let slot = self.slot(tid);
+        if slot.pending == 0 {
+            return;
+        }
+        self.logs[tid].seal(&self.pool, tid, slot.pending, slot.seq);
+        self.pool.psync(tid);
+        slot.pending = 0;
+        slot.seq += 1;
+    }
+
+    /// Flush every thread's pending batch. **Quiescent contexts only**
+    /// (all workers stopped): the caller acts as each thread in turn, the
+    /// same contract as [`PmemPool::crash`]. Used before a final drain.
+    pub fn flush_all(&self) {
+        for t in 0..self.nthreads {
+            self.flush(t);
+        }
+    }
+
+    fn dequeue_impl(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        let slot = self.slot(tid);
+        let start = slot.cursor;
+        for i in 0..self.nshards {
+            let s = (start + i) % self.nshards;
+            if !self.shards[s].maybe_nonempty(tid) {
+                continue;
+            }
+            if let Some(v) = self.shards[s].dequeue(tid)? {
+                slot.cursor = (s + 1) % self.nshards;
+                return Ok(Some(v));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Post-recovery batch reconciliation (single-threaded). See module
+    /// docs for the soundness argument.
+    fn reconcile(&self, pool: &PmemPool) {
+        let tid = 0;
+        for t in 0..self.nthreads {
+            let (count, seq) = self.logs[t].header(pool, tid);
+            if count == 0 || seq == 0 {
+                continue;
+            }
+            for i in 0..count.min(self.batch) {
+                let e = self.logs[t].entry(pool, tid, i);
+                if e.seq != seq || e.enc_item == 0 || e.shard >= self.nshards {
+                    continue; // torn or garbage entry — stale seq, skip
+                }
+                let item = e.enc_item - 1;
+                let pos = EnqPos { node: e.node, idx: e.idx };
+                if self.shards[e.shard].probe(tid, &pos, item) == Probe::Missing {
+                    // Never returned to any caller (Head ≤ idx) and not in
+                    // NVM: re-insert. Lands at the tail; the relaxed-FIFO
+                    // checker absorbs the displacement.
+                    let _ = self.shards[e.shard].enqueue(tid, item);
+                }
+            }
+            self.logs[t].clear(pool, tid);
+        }
+        // One drain realizes the log retirements and any deferred cell
+        // pwbs from re-insertions.
+        pool.psync(tid);
+    }
+}
+
+impl<Q: Shardable> ConcurrentQueue for ShardedQueue<Q> {
+    fn enqueue(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        self.enqueue_impl(tid, item)
+    }
+
+    fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        self.dequeue_impl(tid)
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
+    fn quiesce(&self) {
+        self.flush_all();
+    }
+
+    fn recover(&self, pool: &PmemPool) {
+        for s in &self.shards {
+            s.recover(pool);
+        }
+        if self.batch > 1 {
+            self.reconcile(pool);
+        }
+        // Reset volatile dispatch state; bump seq so fresh batches can
+        // never collide with stale (already reconciled) log entries.
+        for t in 0..self.nthreads {
+            let slot = self.slot(t);
+            slot.ticket = 0;
+            slot.cursor = 0;
+            slot.pending = 0;
+            slot.seq += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn mk(shards: usize, batch: usize) -> (Arc<PmemPool>, ShardedQueue) {
+        mk_probs(shards, batch, 0.0, 0.0)
+    }
+
+    fn mk_probs(
+        shards: usize,
+        batch: usize,
+        evict: f64,
+        pending: f64,
+    ) -> (Arc<PmemPool>, ShardedQueue) {
+        let pool = Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: 1 << 22,
+            cost: CostModel::zero(),
+            evict_prob: evict,
+            pending_flush_prob: pending,
+            seed: 21,
+        }));
+        let cfg = QueueConfig { shards, batch, ring_size: 64, ..Default::default() };
+        let q = ShardedQueue::new_perlcrq(&pool, 8, cfg).unwrap();
+        (pool, q)
+    }
+
+    fn drain(q: &ShardedQueue, tid: usize) -> Vec<u64> {
+        let mut out = Vec::new();
+        while let Some(v) = q.dequeue(tid).unwrap() {
+            out.push(v);
+        }
+        out
+    }
+
+    #[test]
+    fn bad_configs_rejected_not_panicking() {
+        let pool = Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: 1 << 16,
+            cost: CostModel::zero(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 1,
+        }));
+        for cfg in [
+            QueueConfig { shards: 0, ..Default::default() },
+            QueueConfig { batch: 0, ..Default::default() },
+            QueueConfig { batch: crate::queues::MAX_BATCH + 1, ..Default::default() },
+        ] {
+            assert!(matches!(
+                ShardedQueue::new_perlcrq(&pool, 4, cfg),
+                Err(QueueError::BadConfig(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn lockstep_round_robin_is_fifo() {
+        // Single thread, enqueue and dequeue cursors advance in lockstep:
+        // the relaxed queue degenerates to exact FIFO.
+        let (_p, q) = mk(4, 1);
+        for v in 0..32u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert_eq!(drain(&q, 0), (0..32).collect::<Vec<u64>>());
+        assert_eq!(q.dequeue(0).unwrap(), None);
+    }
+
+    #[test]
+    fn all_items_survive_unbatched_crash() {
+        let (p, q) = mk(4, 1);
+        for v in 0..60u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..25 {
+            got.push(q.dequeue(1).unwrap().expect("item"));
+        }
+        let mut rng = Xoshiro256::seed_from(5);
+        p.crash(&mut rng);
+        q.recover(&p);
+        got.extend(drain(&q, 0));
+        let n = got.len();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), n, "duplicates across crash");
+        assert_eq!(got, (0..60).collect::<Vec<u64>>(), "items lost across crash");
+    }
+
+    #[test]
+    fn batch_amortizes_psyncs() {
+        let (p, q) = mk(2, 8);
+        p.stats.reset();
+        for v in 0..7u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert_eq!(p.stats.total().psyncs, 0, "no psync before the batch fills");
+        q.enqueue(0, 7).unwrap(); // 8th op seals + syncs
+        let s = p.stats.total();
+        assert_eq!(s.psyncs, 1, "exactly one psync per batch of 8");
+        assert!(s.pwbs >= 8, "each op still issues its cell pwb");
+        // Unbatched comparison: one psync per op.
+        let (p1, q1) = mk(2, 1);
+        p1.stats.reset();
+        for v in 0..8u64 {
+            q1.enqueue(0, v).unwrap();
+        }
+        assert_eq!(p1.stats.total().psyncs, 8);
+    }
+
+    #[test]
+    fn flushed_batch_survives_crash() {
+        let (p, q) = mk(2, 4);
+        for v in 0..8u64 {
+            q.enqueue(0, v).unwrap(); // two full batches, both flushed
+        }
+        let mut rng = Xoshiro256::seed_from(6);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let mut got = drain(&q, 0);
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn unflushed_tail_may_vanish_without_corruption() {
+        // 3 enqueues into a batch of 8, never flushed, nothing persisted
+        // (evict/pending = 0): the items are lost — the buffered-durability
+        // contract — but the queue recovers clean and functional.
+        let (p, q) = mk(2, 8);
+        for v in 0..3u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        let mut rng = Xoshiro256::seed_from(7);
+        p.crash(&mut rng);
+        q.recover(&p);
+        assert_eq!(drain(&q, 0), Vec::<u64>::new());
+        q.enqueue(0, 99).unwrap();
+        q.flush(0);
+        assert_eq!(q.dequeue(1).unwrap(), Some(99));
+    }
+
+    #[test]
+    fn explicit_flush_makes_partial_batch_durable() {
+        let (p, q) = mk(2, 8);
+        for v in 0..3u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        q.flush_all();
+        let mut rng = Xoshiro256::seed_from(8);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let mut got = drain(&q, 0);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn reconciliation_reinserts_lost_cells_from_sealed_log() {
+        // Seal a batch durably, then wipe the items' cells in NVM
+        // (simulating cell flushes that never landed while the log line
+        // did): recovery must re-insert every item from the log.
+        let (p, q) = mk(1, 4);
+        for v in 10..14u64 {
+            q.enqueue(0, v).unwrap(); // fills + flushes one batch
+        }
+        let core = q.shards[0].core();
+        let first = PAddr::from_u64(p.peek(core.first));
+        let ring = core.ring_of(first);
+        for u in 0..4u64 {
+            ring.write_cell(&p, 0, u, false, u, 0 /* BOT */);
+        }
+        p.persist_range(0, ring.cell_addr(0), 8);
+        // Undo the durable retire so the log still claims the batch: the
+        // simplest way is to crash BEFORE recovery ran — the log header was
+        // sealed by the flush and is only cleared during recover().
+        let mut rng = Xoshiro256::seed_from(9);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let mut got = drain(&q, 0);
+        got.sort_unstable();
+        assert_eq!(got, vec![10, 11, 12, 13], "log reconciliation must re-insert");
+    }
+
+    #[test]
+    fn reconciliation_never_duplicates_consumed_items() {
+        // Flush a batch, consume part of it (durable head persists), crash
+        // with the log still sealed: reconciliation must re-insert nothing.
+        let (p, q) = mk(1, 4);
+        for v in 0..4u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert_eq!(q.dequeue(1).unwrap(), Some(0));
+        assert_eq!(q.dequeue(1).unwrap(), Some(1));
+        let mut rng = Xoshiro256::seed_from(10);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let got = drain(&q, 0);
+        assert_eq!(got, vec![2, 3], "consumed items must not reappear: {got:?}");
+    }
+
+    #[test]
+    fn double_crash_after_reconciliation_is_stable() {
+        let (p, q) = mk(2, 4);
+        for v in 0..8u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        let mut rng = Xoshiro256::seed_from(11);
+        p.crash(&mut rng);
+        q.recover(&p);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let mut got = drain(&q, 0);
+        let n = got.len();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), n, "double crash produced duplicates");
+        assert_eq!(got, (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn randomized_crash_cycles_no_duplicates() {
+        use crate::pmem::crash::{install_quiet_crash_hook, run_guarded};
+        install_quiet_crash_hook();
+        let pool = Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: 1 << 23,
+            cost: CostModel::zero(),
+            evict_prob: 0.3,
+            pending_flush_prob: 0.5,
+            seed: 12,
+        }));
+        let cfg = QueueConfig { shards: 4, batch: 4, ring_size: 64, ..Default::default() };
+        let q = Arc::new(ShardedQueue::new_perlcrq(&pool, 4, cfg).unwrap());
+        let mut rng = Xoshiro256::seed_from(13);
+        let mut returned: Vec<u64> = Vec::new();
+        for cycle in 0..5u64 {
+            pool.arm_crash_after(2_000 + rng.next_below(2_000));
+            let mut hs = Vec::new();
+            for tid in 0..4usize {
+                let q = Arc::clone(&q);
+                let base = cycle * 4_000_000 + tid as u64 * 1_000_000;
+                hs.push(std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    let _ = run_guarded(|| {
+                        for i in 0..100_000u64 {
+                            q.enqueue(tid, base + i).unwrap();
+                            if let Some(v) = q.dequeue(tid).unwrap() {
+                                mine.push(v);
+                            }
+                        }
+                    });
+                    mine
+                }));
+            }
+            for h in hs {
+                returned.extend(h.join().unwrap());
+            }
+            pool.crash(&mut rng);
+            q.recover(&pool);
+        }
+        while let Some(v) = q.dequeue(0).unwrap() {
+            returned.push(v);
+        }
+        let n = returned.len();
+        returned.sort_unstable();
+        returned.dedup();
+        assert_eq!(returned.len(), n, "duplicate item observed across crash cycles");
+    }
+}

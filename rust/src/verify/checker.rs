@@ -1,4 +1,28 @@
-//! The durable-linearizability checker (see [`super`] for the axioms).
+//! The durable-linearizability checker (see [`super`] for the axioms),
+//! including the **relaxed-FIFO** mode used by `queues::sharded`.
+//!
+//! ## Relaxation semantics
+//!
+//! A sharded queue distributes items over K inner FIFOs, so a dequeue may
+//! legitimately *overtake* items sitting in sibling shards. We follow the
+//! k-relaxed out-of-order definition from the relaxed-queue literature: a
+//! dequeued value `b` violates k-relaxed FIFO iff **more than k** values
+//! `a` exist with `enq(a)` completed strictly before `enq(b)` was invoked
+//! and `deq(b)` completed strictly before `deq(a)` was invoked (i.e. `b`
+//! jumped over more than `k` strictly-older items). `k = 0` is exactly the
+//! strict real-time FIFO check (V3). The count is computed exactly in
+//! `O(n log n)` with a Fenwick tree over dequeue-invocation ranks.
+//!
+//! ## Trailing-loss allowance (batched durability)
+//!
+//! Under the sharded queue's group-commit batching, an enqueue is durably
+//! linearized at its batch *flush*, not at its return; a crash may lose up
+//! to `B − 1` unflushed trailing enqueues per thread. With
+//! [`CheckOptions::trailing_loss_per_thread`] `= B − 1`, a completed
+//! enqueue's value may vanish without violation **only** if it is among
+//! the last `B − 1` completed enqueues of its `(thread, epoch)` group —
+//! exactly the window a crash can erase. Everything else still counts as
+//! a loss.
 
 use std::collections::HashMap;
 
@@ -14,14 +38,75 @@ pub enum Violation {
     /// Completed enqueue's value neither dequeued nor drained, beyond the
     /// budget of in-flight dequeues that may have legitimately consumed it
     /// (an uncompleted dequeue linearized at a crash — paper §4, Scenario
-    /// 2 — absorbs at most one value).
+    /// 2 — absorbs at most one value) and beyond the batched trailing-loss
+    /// allowance.
     Lost { value: u64 },
-    /// Real-time FIFO inversion between two dequeued values.
+    /// Real-time FIFO inversion between two dequeued values (`second`
+    /// overtook more than the allowed number of strictly-older values;
+    /// `first` is the strongest witness).
     FifoInversion { first: u64, second: u64 },
     /// EMPTY returned while some value was provably present throughout.
     BogusEmpty { witness: u64, empty_seq: u64 },
     /// The same value was enqueued twice (workload bug, not queue bug).
     ValueReused { value: u64 },
+}
+
+/// Checker knobs. [`check`] and [`check_relaxed`] are thin wrappers over
+/// [`check_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct CheckOptions {
+    /// Cap on reported violations.
+    pub max_report: usize,
+    /// Allowed out-of-order overtakes per dequeue (`0` = strict FIFO).
+    pub relaxation: usize,
+    /// Completed enqueues per `(thread, epoch)` that may vanish at a crash
+    /// (batched durability window; `B − 1` for batch size `B`).
+    pub trailing_loss_per_thread: usize,
+    /// How many leading epochs ended in a crash: the trailing-loss
+    /// allowance only excuses losses in epochs `< crashed_epochs` — an
+    /// epoch that ended cleanly (flushed/quiesced) has no crash to lose
+    /// its tail to, and a vanished value there is a real loss. Harnesses
+    /// that crash every cycle pass their cycle count.
+    pub crashed_epochs: u64,
+    /// Run the EMPTY-soundness check (V4). Disable for batched histories:
+    /// with buffered durability an EMPTY may legitimately overlap another
+    /// thread's not-yet-flushed enqueues.
+    pub check_empty: bool,
+}
+
+impl Default for CheckOptions {
+    fn default() -> Self {
+        Self {
+            max_report: 10,
+            relaxation: 0,
+            trailing_loss_per_thread: 0,
+            crashed_epochs: 0,
+            check_empty: true,
+        }
+    }
+}
+
+/// Conservative overtake bound for a sharded queue's histories: covers
+/// steady-state shard skew plus crash-reconciliation displacement. One
+/// definition shared by the CLI, tests and examples so it cannot drift.
+pub fn shard_relaxation(nthreads: usize, shards: usize, batch: usize) -> usize {
+    nthreads * shards.max(1) * batch.max(1) * 4 + 64
+}
+
+/// The relaxation policy for a registry algorithm: sharded algorithms are
+/// k-relaxed FIFO (bounded shard skew), everything else is checked
+/// strictly (`k = 0` is the exact check). The single definition the CLI,
+/// tests and examples all share.
+pub fn relaxation_for(
+    algo_name: &str,
+    nthreads: usize,
+    cfg: &crate::queues::QueueConfig,
+) -> usize {
+    if algo_name.starts_with("sharded") {
+        shard_relaxation(nthreads, cfg.shards, cfg.batch)
+    } else {
+        0
+    }
 }
 
 /// Check outcome.
@@ -39,6 +124,11 @@ pub struct CheckReport {
     /// Values that vanished within the pending-dequeue budget (not
     /// violations, but reported for transparency).
     pub absorbed_losses: usize,
+    /// Values that vanished within the batched trailing-loss allowance.
+    pub absorbed_trailing: usize,
+    /// Largest observed overtake count across dequeues (how relaxed the
+    /// history actually was; useful for calibrating `relaxation`).
+    pub max_overtakes: usize,
 }
 
 impl CheckReport {
@@ -53,9 +143,52 @@ struct OpSpan {
     response: Option<u64>,
 }
 
-/// Run all checks over a history. `max_report` caps reported violations.
+/// Fenwick (binary indexed) tree for exact overtake counting.
+struct Bit {
+    t: Vec<usize>,
+}
+
+impl Bit {
+    fn new(n: usize) -> Self {
+        Self { t: vec![0; n + 1] }
+    }
+
+    /// Add 1 at 1-based position `i`.
+    fn add(&mut self, mut i: usize) {
+        while i < self.t.len() {
+            self.t[i] += 1;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of positions `1..=i`.
+    fn prefix(&self, mut i: usize) -> usize {
+        let mut s = 0;
+        while i > 0 {
+            s += self.t[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+}
+
+/// Strict check over a history (`k = 0`, no trailing allowance).
+/// `max_report` caps reported violations.
 pub fn check(h: &History, max_report: usize) -> CheckReport {
+    check_with(h, &CheckOptions { max_report, ..Default::default() })
+}
+
+/// Relaxed-FIFO check: accept up to `k` out-of-order overtakes per dequeue
+/// (for sharded queues, `k` bounds the shard skew). All other axioms stay
+/// exact.
+pub fn check_relaxed(h: &History, k: usize) -> CheckReport {
+    check_with(h, &CheckOptions { relaxation: k, ..Default::default() })
+}
+
+/// Run all checks over a history with explicit options.
+pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
     let mut report = CheckReport::default();
+    let max_report = opts.max_report;
     let push = |vs: &mut Vec<Violation>, v: Violation| {
         if vs.len() < max_report {
             vs.push(v);
@@ -64,6 +197,8 @@ pub fn check(h: &History, max_report: usize) -> CheckReport {
 
     // --- Index the history ---
     let mut enq: HashMap<u64, OpSpan> = HashMap::new();
+    // value -> (tid, epoch) of its completed enqueue (trailing-loss groups).
+    let mut enq_meta: HashMap<u64, (usize, u64)> = HashMap::new();
     // Pending (per-thread) open spans to match responses to invokes.
     let mut open_enq: HashMap<usize, (u64, u64)> = HashMap::new(); // tid -> (value, seq)
     let mut open_deq: HashMap<usize, u64> = HashMap::new(); // tid -> invoke seq
@@ -84,6 +219,7 @@ pub fn check(h: &History, max_report: usize) -> CheckReport {
                 if let Some(span) = enq.get_mut(&value) {
                     span.response = Some(e.seq);
                 }
+                enq_meta.insert(value, (e.tid, e.epoch));
                 open_enq.remove(&e.tid);
                 report.enq_completed += 1;
             }
@@ -132,12 +268,14 @@ pub fn check(h: &History, max_report: usize) -> CheckReport {
         drained.insert(v, ());
     }
 
-    // --- V2: no loss (modulo the in-flight-dequeue budget) ---
+    // --- V2: no loss (modulo trailing-batch + in-flight-dequeue budgets) ---
     // A dequeue that crashed mid-operation may have been linearized (its
     // following persisted dequeue or an eviction witnessed it — §4,
     // Scenarios 2/3), consuming exactly one value without ever returning.
     // So up to `pending_deqs` completed-enqueue values may legitimately
-    // vanish; anything beyond that is a real loss.
+    // vanish; additionally, under batched durability, the last
+    // `trailing_loss_per_thread` completed enqueues of each (tid, epoch)
+    // group may vanish at that epoch's crash. Anything beyond is a loss.
     {
         let mut lost: Vec<u64> = enq
             .iter()
@@ -147,6 +285,37 @@ pub fn check(h: &History, max_report: usize) -> CheckReport {
             .map(|(&v, _)| v)
             .collect();
         lost.sort_unstable();
+
+        if opts.trailing_loss_per_thread > 0 && !lost.is_empty() {
+            // Per (tid, epoch): the E_resp seqs of all completed enqueues,
+            // to identify each group's trailing window.
+            let mut groups: HashMap<(usize, u64), Vec<u64>> = HashMap::new();
+            for (v, span) in &enq {
+                if let (Some(eresp), Some(&meta)) = (span.response, enq_meta.get(v)) {
+                    groups.entry(meta).or_default().push(eresp);
+                }
+            }
+            for seqs in groups.values_mut() {
+                seqs.sort_unstable();
+            }
+            lost.retain(|v| {
+                let excusable = enq_meta.get(v).is_some_and(|meta| {
+                    if meta.1 >= opts.crashed_epochs {
+                        return false; // epoch ended cleanly: nothing to lose to
+                    }
+                    let seqs = &groups[meta];
+                    let eresp = enq[v].response.expect("lost values have completed enqueues");
+                    let rank = seqs.partition_point(|&s| s < eresp);
+                    // Among the last `trailing` of its group?
+                    seqs.len() - rank <= opts.trailing_loss_per_thread
+                });
+                if excusable {
+                    report.absorbed_trailing += 1;
+                }
+                !excusable
+            });
+        }
+
         let budget = report.pending_deqs.min(lost.len());
         report.absorbed_losses = budget;
         for &v in lost.iter().skip(budget) {
@@ -154,47 +323,55 @@ pub fn check(h: &History, max_report: usize) -> CheckReport {
         }
     }
 
-    // --- V3: FIFO real-time order, O(n log n) ---
-    // For dequeued pairs: violation iff ∃ a, b with
-    //   E_resp(a) < E_inv(b)  AND  D_resp(b) < D_inv(a).
-    // Sweep ops in increasing E_resp; maintain prefix-max of D_inv; for
-    // each b compare against the prefix of enqueues completed before
-    // E_inv(b).
+    // --- V3: (k-relaxed) FIFO real-time order, O(n log n) ---
+    // For each dequeued b, count values a with
+    //   E_resp(a) < E_inv(b)  AND  D_inv(a) > D_resp(b)
+    // — the strictly-older items b jumped over. Strict FIFO (k = 0)
+    // flags any such a; k-relaxed flags counts > k. The sweep inserts
+    // candidates in E_resp order into a Fenwick tree keyed by D_inv rank
+    // while visiting b's in E_inv order.
     {
-        // (E_resp, D_inv, value) for values dequeued AND enqueue-completed.
-        let mut by_eresp: Vec<(u64, u64, u64)> = Vec::new();
+        // Values with completed enqueue AND completed dequeue.
+        let mut a_side: Vec<(u64, u64, u64)> = Vec::new(); // (E_resp, D_inv, v)
+        let mut b_side: Vec<(u64, u64, u64)> = Vec::new(); // (E_inv, D_resp, v)
         for (&v, es) in &enq {
-            if let (Some(eresp), Some(ds)) = (es.response, deq.get(&v)) {
-                by_eresp.push((eresp, ds.invoke, v));
-            }
+            let (Some(eresp), Some(ds)) = (es.response, deq.get(&v)) else { continue };
+            let Some(dresp) = ds.response else { continue };
+            a_side.push((eresp, ds.invoke, v));
+            b_side.push((es.invoke, dresp, v));
         }
-        by_eresp.sort_unstable();
-        // prefix_max_dinv[i] = max D_inv over by_eresp[..=i], with the
-        // owning value for reporting.
-        let mut prefix: Vec<(u64, u64)> = Vec::with_capacity(by_eresp.len());
-        let mut cur = (0u64, 0u64);
-        for &(_, dinv, v) in &by_eresp {
-            if dinv >= cur.0 {
-                cur = (dinv, v);
+        a_side.sort_unstable();
+        b_side.sort_unstable();
+        // Coordinate-compress D_inv values for the Fenwick tree.
+        let mut dinvs: Vec<u64> = a_side.iter().map(|&(_, dinv, _)| dinv).collect();
+        dinvs.sort_unstable();
+        let mut bit = Bit::new(dinvs.len());
+        let mut inserted = 0usize;
+        let mut j = 0usize;
+        // Running max of inserted D_inv (strongest witness) for reporting.
+        let mut max_dinv: (u64, u64) = (0, 0); // (dinv, value)
+        for &(einv_b, dresp_b, vb) in &b_side {
+            while j < a_side.len() && a_side[j].0 < einv_b {
+                let (_, dinv, va) = a_side[j];
+                let rank = dinvs.partition_point(|&d| d < dinv) + 1;
+                bit.add(rank);
+                inserted += 1;
+                if dinv >= max_dinv.0 {
+                    max_dinv = (dinv, va);
+                }
+                j += 1;
             }
-            prefix.push(cur);
-        }
-        // For each b: find enqueues with E_resp < E_inv(b).
-        for (&vb, eb) in &enq {
-            let (Some(db), true) = (deq.get(&vb), eb.response.is_some()) else {
-                continue;
-            };
-            let Some(dresp_b) = db.response else { continue };
-            // Binary search on by_eresp for E_resp < E_inv(b).
-            let idx = by_eresp.partition_point(|&(eresp, _, _)| eresp < eb.invoke);
-            if idx == 0 {
+            if inserted == 0 {
                 continue;
             }
-            let (max_dinv, va) = prefix[idx - 1];
-            if max_dinv > dresp_b && va != vb {
+            // Inserted entries with D_inv <= D_resp(b) did not overtake.
+            let le = bit.prefix(dinvs.partition_point(|&d| d <= dresp_b));
+            let overtakes = inserted - le;
+            report.max_overtakes = report.max_overtakes.max(overtakes);
+            if overtakes > opts.relaxation {
                 push(
                     &mut report.violations,
-                    Violation::FifoInversion { first: va, second: vb },
+                    Violation::FifoInversion { first: max_dinv.1, second: vb },
                 );
             }
         }
@@ -206,7 +383,7 @@ pub fn check(h: &History, max_report: usize) -> CheckReport {
     // either... a drained value was still in the queue, which also
     // justifies the violation only if it was enqueued before; drained
     // values count as "never dequeued during the run").
-    {
+    if opts.check_empty {
         // Values with completed enqueues, sorted by E_resp, carrying their
         // dequeue-invoke seq. A value never dequeued during the run can
         // witness only if it reached the final drain (provably present
@@ -412,6 +589,122 @@ mod tests {
             "{:?}",
             r.violations
         );
+        assert_eq!(r.max_overtakes, 1);
+    }
+
+    #[test]
+    fn relaxation_tolerates_bounded_overtakes() {
+        // Same single-overtake history as above: k = 1 must accept it,
+        // k = 0 must reject it.
+        let events = vec![
+            ev(0, 0, K::EnqInvoke { value: 1 }),
+            ev(1, 0, K::EnqOk { value: 1 }),
+            ev(2, 0, K::EnqInvoke { value: 2 }),
+            ev(3, 0, K::EnqOk { value: 2 }),
+            ev(4, 1, K::DeqInvoke),
+            ev(5, 1, K::DeqOk { value: 2 }),
+            ev(6, 1, K::DeqInvoke),
+            ev(7, 1, K::DeqOk { value: 1 }),
+        ];
+        let h = hist(events, vec![]);
+        assert!(!check_relaxed(&h, 0).ok());
+        let r = check_relaxed(&h, 1);
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.max_overtakes, 1);
+    }
+
+    #[test]
+    fn relaxation_bound_is_tight() {
+        // Value 4 overtakes 1, 2, 3 (three strictly-older values): k = 2
+        // rejects, k = 3 accepts.
+        let mut events = Vec::new();
+        let mut seq = 0u64;
+        for v in 1..=4u64 {
+            events.push(ev(seq, 0, K::EnqInvoke { value: v }));
+            seq += 1;
+            events.push(ev(seq, 0, K::EnqOk { value: v }));
+            seq += 1;
+        }
+        // Dequeue 4 first, then 1, 2, 3.
+        for v in [4u64, 1, 2, 3] {
+            events.push(ev(seq, 1, K::DeqInvoke));
+            seq += 1;
+            events.push(ev(seq, 1, K::DeqOk { value: v }));
+            seq += 1;
+        }
+        let h = hist(events, vec![]);
+        let r = check_relaxed(&h, 2);
+        assert!(!r.ok(), "3 overtakes must exceed k=2");
+        assert_eq!(r.max_overtakes, 3);
+        assert!(check_relaxed(&h, 3).ok());
+    }
+
+    #[test]
+    fn trailing_loss_allowance_absorbs_batched_tail() {
+        // Thread 0 completed enqueues 1, 2, 3; the last two vanished at the
+        // crash (batch B = 3 → allowance 2). Value 1 was dequeued.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 1 }),
+                ev(1, 0, K::EnqOk { value: 1 }),
+                ev(2, 0, K::EnqInvoke { value: 2 }),
+                ev(3, 0, K::EnqOk { value: 2 }),
+                ev(4, 0, K::EnqInvoke { value: 3 }),
+                ev(5, 0, K::EnqOk { value: 3 }),
+                ev(6, 1, K::DeqInvoke),
+                ev(7, 1, K::DeqOk { value: 1 }),
+            ],
+            vec![],
+        );
+        let strict = check(&h, 10);
+        assert_eq!(strict.violations.len(), 2, "{:?}", strict.violations);
+        let r = check_with(
+            &h,
+            &CheckOptions {
+                trailing_loss_per_thread: 2,
+                crashed_epochs: 1,
+                ..Default::default()
+            },
+        );
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.absorbed_trailing, 2);
+        // Same history, but epoch 0 never ended in a crash: the losses are
+        // real again.
+        let clean = check_with(
+            &h,
+            &CheckOptions { trailing_loss_per_thread: 2, ..Default::default() },
+        );
+        assert_eq!(clean.violations.len(), 2, "{:?}", clean.violations);
+    }
+
+    #[test]
+    fn trailing_allowance_does_not_excuse_middle_losses() {
+        // Value 1 (NOT in the trailing window — 2 and 3 completed after it
+        // and survived) vanishes: still a loss even with an allowance.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 1 }),
+                ev(1, 0, K::EnqOk { value: 1 }),
+                ev(2, 0, K::EnqInvoke { value: 2 }),
+                ev(3, 0, K::EnqOk { value: 2 }),
+                ev(4, 0, K::EnqInvoke { value: 3 }),
+                ev(5, 0, K::EnqOk { value: 3 }),
+            ],
+            vec![2, 3],
+        );
+        let r = check_with(
+            &h,
+            &CheckOptions {
+                trailing_loss_per_thread: 2,
+                crashed_epochs: 1,
+                ..Default::default()
+            },
+        );
+        assert!(
+            r.violations.contains(&Violation::Lost { value: 1 }),
+            "middle loss must not be excused: {:?}",
+            r.violations
+        );
     }
 
     #[test]
@@ -473,6 +766,9 @@ mod tests {
             "{:?}",
             r.violations
         );
+        // Buffered mode (check_empty = false) skips V4.
+        let r = check_with(&h, &CheckOptions { check_empty: false, ..Default::default() });
+        assert!(r.ok(), "{:?}", r.violations);
     }
 
     #[test]

@@ -19,6 +19,16 @@
 //!
 //! V1–V3, V5 are exact; V4 is a sound interval check (no false positives).
 //!
+//! ## Relaxed mode (sharded queues)
+//!
+//! [`check_relaxed`]`(h, k)` replaces V3's strict real-time FIFO with a
+//! k-relaxed variant: a dequeue may overtake up to `k` strictly-older
+//! values (the bounded skew a `queues::sharded::ShardedQueue` introduces)
+//! before it counts as an inversion. All other axioms stay exact.
+//! [`check_with`] additionally exposes the batched-durability knobs
+//! (trailing-loss allowance, EMPTY-check gating) — see
+//! [`checker::CheckOptions`].
+//!
 //! [`proptest`] is a minimal property-testing harness (the `proptest`
 //! crate is unavailable offline) used to drive randomized crash workloads
 //! through every persistent queue.
@@ -27,5 +37,8 @@ pub mod checker;
 pub mod history;
 pub mod proptest;
 
-pub use checker::{check, CheckReport, Violation};
+pub use checker::{
+    check, check_relaxed, check_with, relaxation_for, shard_relaxation, CheckOptions,
+    CheckReport, Violation,
+};
 pub use history::{Event, EventKind, History, Recorder};

@@ -9,7 +9,7 @@ use persiq::pmem::crash::install_quiet_crash_hook;
 use persiq::pmem::{PmemConfig, PmemPool};
 use persiq::queues::{persistent_registry, QueueConfig, QueueCtx};
 use persiq::util::rng::Xoshiro256;
-use persiq::verify::{check, History};
+use persiq::verify::{check_relaxed, relaxation_for, History};
 
 fn ctx() -> QueueCtx {
     QueueCtx {
@@ -80,7 +80,7 @@ fn verified_crash_cycles_for_all_persistent_queues() {
         }
         let drained = drain_all(&qc, 0);
         let h = History::from_logs(logs, drained);
-        let rep = check(&h, 5);
+        let rep = check_relaxed(&h, relaxation_for(name, 4, &c.cfg));
         assert!(rep.ok(), "{name}: {:?}", rep.violations);
     }
 }

@@ -1,0 +1,188 @@
+//! End-to-end coverage of the sharded + batched queue layer: relaxed-FIFO
+//! durable-linearizability across crash cycles, contention scaling of the
+//! shard sweep, psync amortization under batching, and the broker riding
+//! on the sharded work queue.
+
+use std::sync::Arc;
+
+use persiq::coordinator::{run_service, Broker, ServiceConfig};
+use persiq::harness::runner::{drain_all, run_workload, RunConfig};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::pmem::{CostModel, PmemConfig, PmemPool};
+use persiq::queues::{persistent_by_name, ConcurrentQueue, QueueConfig, QueueCtx};
+use persiq::util::rng::Xoshiro256;
+use persiq::verify::{check_with, shard_relaxation, CheckOptions, History};
+
+fn sharded_ctx(nthreads: usize, shards: usize, batch: usize, cap: usize) -> QueueCtx {
+    QueueCtx {
+        pool: Arc::new(PmemPool::new(PmemConfig {
+            capacity_words: cap,
+            cost: CostModel::default(),
+            evict_prob: 0.25,
+            pending_flush_prob: 0.5,
+            seed: 23,
+        })),
+        nthreads,
+        cfg: QueueConfig { shards, batch, ring_size: 256, ..Default::default() },
+    }
+}
+
+/// Drive `sharded-perlcrq` through recorded crash cycles and check the
+/// history with the given options. Mirrors `persiq verify`.
+fn verify_sharded(shards: usize, batch: usize, cycles: usize, seed: u64) {
+    install_quiet_crash_hook();
+    let nthreads = 4;
+    let ctx = sharded_ctx(nthreads, shards, batch, 1 << 23);
+    let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
+    let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
+    let mut rng = Xoshiro256::seed_from(seed);
+    let mut logs = Vec::new();
+    for cycle in 0..cycles {
+        ctx.pool.arm_crash_after(20_000);
+        let rc = RunConfig {
+            nthreads,
+            total_ops: 30_000,
+            record: true,
+            salt: cycle as u64 + 1,
+            seed: seed ^ (cycle as u64) << 16,
+            ..Default::default()
+        };
+        let r = run_workload(&ctx.pool, &as_conc, &rc);
+        logs.extend(r.logs);
+        ctx.pool.crash(&mut rng);
+        q.recover(&ctx.pool);
+    }
+    let drained = drain_all(&as_conc, 0);
+    let history = History::from_logs(logs, drained);
+    let opts = CheckOptions {
+        max_report: 10,
+        relaxation: shard_relaxation(nthreads, shards, batch),
+        trailing_loss_per_thread: batch.saturating_sub(1),
+        crashed_epochs: cycles as u64,
+        check_empty: batch <= 1,
+    };
+    let rep = check_with(&history, &opts);
+    assert!(
+        rep.ok(),
+        "shards={shards} batch={batch}: violations {:?} (max_overtakes={})",
+        rep.violations,
+        rep.max_overtakes
+    );
+    assert!(rep.enq_completed > 0 && rep.deq_values > 0);
+}
+
+#[test]
+fn sharded_relaxed_durable_linearizability_10_cycles() {
+    verify_sharded(4, 1, 10, 0xA11CE);
+}
+
+#[test]
+fn sharded_single_shard_10_cycles() {
+    verify_sharded(1, 1, 10, 0xB0B);
+}
+
+#[test]
+fn batched_relaxed_durable_linearizability_10_cycles() {
+    verify_sharded(4, 4, 10, 0xCAFE);
+}
+
+#[test]
+fn batched_max_batch_cycles() {
+    verify_sharded(2, 8, 6, 0xD00D);
+}
+
+fn sim_mops(shards: usize, batch: usize, nthreads: usize, ops: u64) -> f64 {
+    let ctx = sharded_ctx(nthreads, shards, batch, 1 << 23);
+    let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
+    let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
+    let rc = RunConfig { nthreads, total_ops: ops, seed: 7, ..Default::default() };
+    run_workload(&ctx.pool, &as_conc, &rc).sim_mops
+}
+
+#[test]
+fn eight_shards_outscale_one_shard_at_eight_threads() {
+    let s1 = sim_mops(1, 1, 8, 40_000);
+    let s8 = sim_mops(8, 1, 8, 40_000);
+    assert!(
+        s8 > s1 * 1.2,
+        "8 shards ({s8:.2} Mops) must beat 1 shard ({s1:.2} Mops) at 8 threads"
+    );
+}
+
+#[test]
+fn batching_amortizes_psyncs_per_op() {
+    let ctx = sharded_ctx(4, 4, 8, 1 << 22);
+    let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
+    let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
+    let rc = RunConfig { nthreads: 4, total_ops: 20_000, seed: 11, ..Default::default() };
+    let r = run_workload(&ctx.pool, &as_conc, &rc);
+    let stats = ctx.pool.stats.total();
+    let psyncs_per_op = stats.psyncs as f64 / r.ops_done.max(1) as f64;
+    // Half the ops are dequeues (one psync each); enqueues contribute
+    // ~1/8 psync each. Expect well under the per-op regime's ~1.0.
+    assert!(
+        psyncs_per_op < 0.75,
+        "batch=8 should amortize enqueue psyncs (got {psyncs_per_op:.2}/op)"
+    );
+}
+
+#[test]
+fn broker_on_sharded_queue_exactly_once_across_crashes() {
+    install_quiet_crash_hook();
+    let pool = Arc::new(PmemPool::new(PmemConfig {
+        capacity_words: 1 << 23,
+        evict_prob: 0.25,
+        pending_flush_prob: 0.5,
+        seed: 31,
+        ..Default::default()
+    }));
+    let qcfg = QueueConfig { shards: 4, batch: 4, ring_size: 256, ..Default::default() };
+    let broker = Arc::new(Broker::new_sharded(&pool, 4, 1 << 16, qcfg).unwrap());
+    let rep = run_service(
+        &pool,
+        &broker,
+        &ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 300,
+            crash_cycles: 3,
+            crash_steps: 30_000,
+            seed: 5,
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.crashes, 3);
+    assert_eq!(
+        rep.done, rep.submitted,
+        "every submitted job must complete exactly once on the sharded broker: {rep:?}"
+    );
+    assert_eq!(rep.pending_after, 0);
+}
+
+#[test]
+fn broker_on_sharded_queue_clean_run() {
+    let pool = Arc::new(PmemPool::new(PmemConfig {
+        capacity_words: 1 << 22,
+        cost: CostModel::zero(),
+        evict_prob: 0.0,
+        pending_flush_prob: 0.0,
+        seed: 37,
+    }));
+    let qcfg = QueueConfig { shards: 2, batch: 4, ring_size: 256, ..Default::default() };
+    let broker = Arc::new(Broker::new_sharded(&pool, 4, 1 << 16, qcfg).unwrap());
+    let rep = run_service(
+        &pool,
+        &broker,
+        &ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 200,
+            crash_cycles: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.submitted, 400);
+    assert_eq!(rep.done, 400, "{rep:?}");
+    assert_eq!(rep.pending_after, 0);
+}

@@ -12,7 +12,7 @@ use persiq::pmem::{PmemConfig, PmemPool};
 use persiq::queues::{persistent_registry, QueueConfig, QueueCtx};
 use persiq::util::rng::Xoshiro256;
 use persiq::verify::proptest::{forall, PropConfig};
-use persiq::verify::{check, History};
+use persiq::verify::{check_relaxed, relaxation_for, History};
 
 #[test]
 fn prop_durable_linearizability_under_random_crashes() {
@@ -59,7 +59,7 @@ fn prop_durable_linearizability_under_random_crashes() {
             }
             let drained = drain_all(&qc, 0);
             let h = History::from_logs(logs, drained);
-            let rep = check(&h, 5);
+            let rep = check_relaxed(&h, relaxation_for(name, nthreads, &ctx.cfg));
             if !rep.ok() {
                 return Err(format!("{name}: {:?}", rep.violations));
             }
