@@ -45,11 +45,23 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // Batch sweep at 8 shards (group-commit amortization).
+    // Enqueue-batch sweep at 8 shards (group-commit amortization).
     for batch in [2usize, 4, 8] {
         let series = format!("sharded-s8-b{batch}");
         for &n in &threads {
             let cfg = QueueConfig { shards: 8, batch, ..Default::default() };
+            suite.measure_extra(&series, n as f64, || {
+                common::tput_point_extra("sharded-perlcrq", n, ops, cfg.clone(), 42)
+            });
+        }
+    }
+
+    // Both-endpoints batch sweep at 8 shards (consumer-side group commit
+    // closes the dequeue asymmetry: psyncs amortize to ~1/K per op).
+    for k in [2usize, 4, 8] {
+        let series = format!("sharded-s8-b{k}-d{k}");
+        for &n in &threads {
+            let cfg = QueueConfig { shards: 8, batch: k, batch_deq: k, ..Default::default() };
             suite.measure_extra(&series, n as f64, || {
                 common::tput_point_extra("sharded-perlcrq", n, ops, cfg.clone(), 42)
             });
@@ -63,8 +75,28 @@ fn main() -> anyhow::Result<()> {
     let s1 = suite.mean_at("sharded-s1", hi).unwrap();
     let s8 = suite.mean_at("sharded-s8", hi).unwrap();
     let b8 = suite.mean_at("sharded-s8-b8", hi).unwrap();
+    let bd8 = suite.mean_at("sharded-s8-b8-d8", hi).unwrap();
     println!("\nclaims @ {hi} threads:");
-    println!("  8 shards / 1 shard  = {:.2}x (expect > 1)", s8 / s1);
-    println!("  batch 8 / batch 1   = {:.2}x at 8 shards (expect > 1)", b8 / s8);
+    println!("  8 shards / 1 shard    = {:.2}x (expect > 1)", s8 / s1);
+    println!("  batch 8 / batch 1     = {:.2}x at 8 shards (expect > 1)", b8 / s8);
+    println!("  +deq batch 8 / batch 8 = {:.2}x at 8 shards (expect >= 1)", bd8 / b8);
+    // Persistence-cost claim: with both endpoints batched at K, the pairs
+    // workload must land under 2/K psyncs per operation.
+    for k in [2usize, 4, 8] {
+        let series = format!("sharded-s8-b{k}-d{k}");
+        let psyncs = suite
+            .measurements
+            .iter()
+            .filter(|m| m.series == series)
+            .flat_map(|m| m.extra.iter())
+            .filter(|(name, _)| name == "psyncs/op")
+            .map(|&(_, v)| v)
+            .fold(f64::NAN, f64::max);
+        let bound = 2.0 / k as f64;
+        println!(
+            "  psyncs/op @ K={k} (both endpoints): max {psyncs:.3} (expect < {bound:.3}): {}",
+            psyncs < bound
+        );
+    }
     Ok(())
 }

@@ -17,7 +17,8 @@
 //! iq_capacity = 65536
 //! starvation_limit = 4096
 //! shards = 4          # sharded-perlcrq stripe count
-//! batch = 1           # sharded-perlcrq group-commit size (1 = per-op)
+//! batch = 1           # sharded-perlcrq enqueue group-commit size (1 = per-op)
+//! batch_deq = 1       # sharded-perlcrq dequeue group-commit size (1 = per-op)
 //!
 //! [bench]
 //! ops = 200000
@@ -94,6 +95,8 @@ impl Config {
             as usize;
         c.queue.shards = doc.get_u64("queue", "shards", c.queue.shards as u64) as usize;
         c.queue.batch = doc.get_u64("queue", "batch", c.queue.batch as u64) as usize;
+        c.queue.batch_deq =
+            doc.get_u64("queue", "batch_deq", c.queue.batch_deq as u64) as usize;
 
         c.bench_ops = doc.get_u64("bench", "ops", c.bench_ops);
         c.seed = doc.get_u64("bench", "seed", c.seed);

@@ -56,7 +56,12 @@ struct SubmitLog {
 impl SubmitLog {
     fn alloc(pool: &PmemPool, nthreads: usize, cap: usize) -> Self {
         let base: Vec<PAddr> = (0..nthreads)
-            .map(|_| pool.alloc((cap + WORDS_PER_LINE).next_multiple_of(WORDS_PER_LINE), WORDS_PER_LINE))
+            .map(|_| {
+                pool.alloc(
+                    (cap + WORDS_PER_LINE).next_multiple_of(WORDS_PER_LINE),
+                    WORDS_PER_LINE,
+                )
+            })
             .collect();
         // Each log is written by exactly one thread (SWSR).
         for &b in &base {
@@ -109,9 +114,17 @@ impl Broker {
     }
 
     /// Create a broker running on the sharded (optionally batched) work
-    /// queue — `cfg.shards` / `cfg.batch` select the striping and
-    /// group-commit parameters. Fails with [`QueueError::BadConfig`] on an
-    /// invalid configuration.
+    /// queue — `cfg.shards` / `cfg.batch` / `cfg.batch_deq` select the
+    /// striping and group-commit parameters. With `batch_deq > 1` the
+    /// **ack path rides the work queue's dequeue log**: every handle a
+    /// worker takes is recorded in a per-thread persistent dequeue log
+    /// and group-committed once per `batch_deq` takes, so
+    /// [`Broker::recover`]'s queue↔SubmitLog reconciliation stays exact —
+    /// a durably-logged take is never redelivered (its position is
+    /// retired at recovery), an unlogged take is redelivered and filtered
+    /// by the DONE-state check in [`Broker::take`], and a logged take
+    /// whose job never completed is re-enqueued from the SubmitLog.
+    /// Fails with [`QueueError::BadConfig`] on an invalid configuration.
     pub fn new_sharded(
         pool: &Arc<PmemPool>,
         nthreads: usize,
@@ -204,11 +217,14 @@ impl Broker {
     /// monotone and persisted at every transition), but the *queue ↔ log*
     /// relation does: a crash inside `submit` — after the durable log
     /// append but before the handle enqueue persisted — or inside a
-    /// batched work queue's unflushed batch can leave a PENDING job with
-    /// no queued handle, stranding it forever. Recovery therefore
-    /// reconciles exactly (single-threaded): recover the queue, drain the
-    /// recovered handles, re-enqueue the live ones in order, and re-insert
-    /// every logged PENDING job whose handle was missing.
+    /// batched work queue's unflushed enqueue batch can leave a PENDING
+    /// job with no queued handle, stranding it forever; symmetrically, a
+    /// batched-dequeue work queue whose take was durably logged retires
+    /// the handle at queue recovery even when the job never completed.
+    /// Recovery therefore reconciles exactly (single-threaded): recover
+    /// the queue (which replays its own batch logs), drain the recovered
+    /// handles, re-enqueue the live ones in order, and re-insert every
+    /// logged PENDING job whose handle was missing.
     pub fn recover(&self) {
         self.queue.recover(&self.pool);
         let tid = 0;
@@ -246,6 +262,21 @@ impl Broker {
     /// Quiescent contexts only — see [`PersistentQueue::quiesce`].
     pub fn quiesce(&self) {
         self.queue.quiesce();
+    }
+
+    /// A producer/worker thread is about to operate as `tid`: reclaim any
+    /// queue state a dead predecessor stranded in the slot (see
+    /// [`PersistentQueue::attach`] — on a sharded work queue this flushes
+    /// orphaned group-commit batches and reseeds the shard ticket).
+    pub fn attach_worker(&self, tid: usize) {
+        self.queue.attach(tid);
+    }
+
+    /// The thread operating as `tid` is exiting normally: flush its
+    /// buffered work-queue batches so nothing it produced or consumed
+    /// stays volatile. Safe to call from the worker itself.
+    pub fn detach_worker(&self, tid: usize) {
+        self.queue.detach(tid);
     }
 
     /// Audit all jobs found in the persistent submission logs.

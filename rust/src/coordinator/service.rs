@@ -81,11 +81,15 @@ pub fn run_service(
             let jobs = cfg.jobs_per_producer;
             handles.push(std::thread::spawn(move || {
                 let _ = run_guarded(|| {
+                    broker.attach_worker(ptid);
                     for i in 0..jobs {
                         let payload =
                             format!("job:c{cycle}:p{ptid}:{i}").into_bytes();
                         broker.submit(ptid, &payload[..payload.len().min(48)]).unwrap();
                     }
+                    // Normal exit: flush buffered handle enqueues. (A
+                    // crash unwinds past this; recovery reconciles.)
+                    broker.detach_worker(ptid);
                 });
             }));
         }
@@ -100,6 +104,7 @@ pub fn run_service(
             handles.push(std::thread::spawn(move || {
                 let mut my_samples = Vec::new();
                 let _ = run_guarded(|| {
+                    broker.attach_worker(wtid);
                     let mut idle = 0u32;
                     // Drain until the queue stays empty (producers done)
                     // or the epoch target is safely exceeded.
@@ -126,6 +131,10 @@ pub fn run_service(
                             }
                         }
                     }
+                    // Normal exit: flush this worker's buffered dequeue
+                    // log. (A crash unwinds past this; recovery
+                    // reconciles.)
+                    broker.detach_worker(wtid);
                 });
                 samples.lock().unwrap().extend(my_samples);
             }));

@@ -18,12 +18,19 @@
 //!   evaluation compares against: Michael–Scott queue, a durable MS queue,
 //!   and the combining-based PBQueue / PWFQueue. Beyond the paper,
 //!   [`queues::sharded`] stripes operations over K inner PerLCRQs
-//!   (relaxed-FIFO, contention ÷ K) and adds a group-commit batching mode
-//!   that amortizes `psync`s to 1/B per enqueue, with batch-log-based
-//!   crash reconciliation.
+//!   (relaxed-FIFO, contention ÷ K) and adds group-commit batching on
+//!   **both endpoints**: enqueue batches amortize `psync`s to 1/B per
+//!   enqueue, and consumer-side dequeue batches
+//!   (`QueueConfig::batch_deq`, `PersistCfg::defer_dequeue_sync`)
+//!   amortize the `Head_i` drain to 1/K per dequeue, each side with
+//!   batch-log-based crash reconciliation (psyncs/op: per-op 1+1,
+//!   enq-batched 1/B+1, both-batched 1/B+1/K).
 //! * [`verify`] — history recording and a durable-linearizability checker,
 //!   including the k-relaxed FIFO mode ([`verify::check_relaxed`]) that
-//!   machine-verifies sharded histories up to bounded shard skew.
+//!   machine-verifies sharded histories up to bounded shard skew, plus
+//!   crash-gated allowances for buffered durability: trailing losses
+//!   (unflushed enqueue batches) and trailing redeliveries (unflushed
+//!   dequeue batches), each bounded per `(thread, epoch)`.
 //! * [`harness`] — workload generators, the multi-thread runner with
 //!   virtual-time metering, and the crash/recovery ("cycle") framework of §5.
 //! * [`runtime`] — a PJRT wrapper that loads the AOT-compiled JAX/Pallas

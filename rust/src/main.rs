@@ -3,7 +3,7 @@
 //! ```text
 //! persiq list                       # available algorithms
 //! persiq bench     --algo perlcrq --threads 1,2,4 --ops 200000
-//! persiq bench     --algo sharded-perlcrq --shards 8 --batch 8 --threads 8
+//! persiq bench     --algo sharded-perlcrq --shards 8 --batch 8 --batch-deq 8 --threads 8
 //! persiq recover   --algo periq --cycles 10 --steps 50000
 //! persiq verify    --algo perlcrq --cycles 5
 //! persiq verify    --algo sharded-perlcrq --shards 4 --cycles 10
@@ -130,25 +130,31 @@ fn resolve_algos(spec: &str, persistent_only: bool) -> Result<Vec<String>> {
     Ok(out)
 }
 
-/// Apply the shared `--shards` / `--batch` overrides to the queue config
-/// and validate it (surfacing `BadConfig` as a CLI error instead of a
-/// construction panic).
+/// Apply the shared `--shards` / `--batch` / `--batch-deq` overrides to
+/// the queue config and validate it (surfacing `BadConfig` as a CLI error
+/// instead of a construction panic).
 fn apply_queue_overrides(cfg: &mut Config, a: &Args) -> Result<()> {
     cfg.queue.shards = a.get_parse("shards", cfg.queue.shards)?;
     cfg.queue.batch = a.get_parse("batch", cfg.queue.batch)?;
+    cfg.queue.batch_deq = a.get_parse("batch-deq", cfg.queue.batch_deq)?;
     cfg.queue.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
     Ok(())
 }
 
 fn cmd_bench(args: &[String]) -> Result<()> {
     let cmd = Command::new("bench", "throughput benchmark over simulated threads")
-        .opt_default("algo", "algorithm(s), comma-separated, or 'all' (see `persiq list`)", "perlcrq")
+        .opt_default(
+            "algo",
+            "algorithm(s), comma-separated, or 'all' (see `persiq list`)",
+            "perlcrq",
+        )
         .opt_default("threads", "thread counts, comma-separated", "1,2,4,8")
         .opt("ops", "total operations per point")
         .opt_default("workload", "pairs|random5050|enq-heavy|deq-heavy", "pairs")
         .opt("seed", "RNG seed (default: entropy)")
         .opt("shards", "shard count for sharded algorithms")
         .opt("batch", "enqueue batch size for sharded algorithms (1 = per-op persistence)")
+        .opt("batch-deq", "dequeue batch size for sharded algorithms (1 = per-op persistence)")
         .flag("latency", "also report latency percentiles via the metrics engine");
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
@@ -217,6 +223,7 @@ fn cmd_recover(args: &[String]) -> Result<()> {
         .opt("ops", "max ops per cycle")
         .opt("shards", "shard count for sharded algorithms")
         .opt("batch", "enqueue batch size for sharded algorithms")
+        .opt("batch-deq", "dequeue batch size for sharded algorithms")
         .opt("seed", "RNG seed");
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
@@ -272,6 +279,7 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         .opt_default("steps", "pmem steps before crash", "30000")
         .opt("shards", "shard count for sharded algorithms")
         .opt("batch", "enqueue batch size for sharded algorithms")
+        .opt("batch-deq", "dequeue batch size for sharded algorithms")
         .opt("relax", "allowed FIFO overtakes per dequeue (default: auto per algorithm)")
         .opt("seed", "RNG seed");
     let a = cmd.parse(args)?;
@@ -314,11 +322,15 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         // batch-reconciliation displacement); everything else is strict.
         let sharded = algo.starts_with("sharded");
         let batch = if sharded { cfg.queue.batch } else { 1 };
+        let batch_deq = if sharded { cfg.queue.batch_deq } else { 1 };
         let auto_relax = relaxation_for(algo, nthreads, &cfg.queue);
         let opts = CheckOptions {
             max_report: 10,
             relaxation: a.get_parse("relax", auto_relax)?,
             trailing_loss_per_thread: batch.saturating_sub(1),
+            // Consumer-side group commit: the last K−1 unflushed dequeues
+            // of a crashed epoch may legitimately redeliver.
+            trailing_redelivery_per_thread: batch_deq.saturating_sub(1),
             // Every cycle above ended in pool.crash().
             crashed_epochs: cycles as u64,
             // Buffered durability: an EMPTY may race another thread's
@@ -329,7 +341,7 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         let status = if rep.ok() { "OK " } else { "FAIL" };
         println!(
             "{status} {algo:<16} enq={} deq={} empties={} drained={} violations={} \
-             max_overtakes={} (relax={}) absorbed: crash={} trailing={}",
+             max_overtakes={} (relax={}) absorbed: crash={} trailing={} redelivered={}",
             rep.enq_completed,
             rep.deq_values,
             rep.deq_empties,
@@ -339,6 +351,7 @@ fn cmd_verify(args: &[String]) -> Result<()> {
             opts.relaxation,
             rep.absorbed_losses,
             rep.absorbed_trailing,
+            rep.absorbed_redelivered,
         );
         for v in &rep.violations {
             log_warn!("  {algo}: {v:?}");
@@ -359,6 +372,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt_default("queue", "work queue kind: perlcrq|sharded", "perlcrq")
         .opt("shards", "shard count for the sharded work queue (implies --queue sharded)")
         .opt("batch", "enqueue batch size for the sharded work queue (implies --queue sharded)")
+        .opt("batch-deq", "dequeue batch size for the sharded work queue (implies --queue sharded)")
         .opt("seed", "RNG seed");
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
@@ -366,7 +380,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // shards/batch only parameterize it); --shards/--batch imply sharded.
     let sharded_broker = match a.get("queue").unwrap_or("perlcrq") {
         "sharded" => true,
-        "perlcrq" => a.get("shards").is_some() || a.get("batch").is_some(),
+        "perlcrq" => {
+            a.get("shards").is_some() || a.get("batch").is_some() || a.get("batch-deq").is_some()
+        }
         other => anyhow::bail!("unknown --queue {other:?} (perlcrq|sharded)"),
     };
     apply_queue_overrides(&mut cfg, &a)?;
@@ -383,9 +399,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let pool = Arc::new(PmemPool::new(cfg.pmem.clone()));
     let broker = if sharded_broker {
         log_info!(
-            "broker work queue: sharded-perlcrq (shards={}, batch={})",
+            "broker work queue: sharded-perlcrq (shards={}, batch={}, batch-deq={})",
             cfg.queue.shards,
-            cfg.queue.batch
+            cfg.queue.batch,
+            cfg.queue.batch_deq
         );
         Arc::new(
             Broker::new_sharded(&pool, producers + workers, 1 << 16, cfg.queue.clone())

@@ -84,6 +84,16 @@ pub enum DeqResult {
     Empty,
 }
 
+/// Result of a ring dequeue that also reports the claimed ring index (used
+/// by the sharded queue's consumer-side dequeue log so recovery can
+/// reconcile returned-but-unpersisted consumption by position).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeqAt {
+    /// Dequeued `val` from ring index `idx` (`idx % R` is the cell).
+    Item { val: u64, idx: u64 },
+    Empty,
+}
+
 /// Persistence strategy injected into ring operations (PerCRQ sites).
 #[derive(Clone, Debug)]
 pub struct PersistCfg {
@@ -95,9 +105,15 @@ pub struct PersistCfg {
     /// Batched-persistence mode (queues::sharded): the successful-enqueue
     /// site still issues its cell `pwb` but skips the `psync`; the outer
     /// batching layer issues one `psync` per batch, amortizing the drain
-    /// cost. Dequeue-side persistence (`persist_head`) is unaffected —
-    /// dequeues must be durable before returning an item.
+    /// cost.
     pub defer_enqueue_sync: bool,
+    /// Consumer-side group commit (queues::sharded): `persist_head` still
+    /// issues its `Head_i` `pwb` but skips the `psync`; the outer layer
+    /// issues one `psync` per K dequeues (sealing its dequeue log in the
+    /// same drain). A crash may then redeliver the last K−1 returned
+    /// items of each thread — buffered durability on the consumer side.
+    /// Never enable without an outer syncing layer.
+    pub defer_dequeue_sync: bool,
 }
 
 // NOTE on the `closedFlag` optimization of §4.2: once some thread has
@@ -295,6 +311,19 @@ impl Ring {
         tid: usize,
         persist: Option<&PersistCfg>,
     ) -> DeqResult {
+        match self.dequeue_at(pool, tid, persist) {
+            DeqAt::Item { val, .. } => DeqResult::Item(val),
+            DeqAt::Empty => DeqResult::Empty,
+        }
+    }
+
+    /// [`Ring::dequeue`] that also reports the claimed index on success.
+    pub fn dequeue_at(
+        &self,
+        pool: &PmemPool,
+        tid: usize,
+        persist: Option<&PersistCfg>,
+    ) -> DeqAt {
         let r = self.r();
         loop {
             // line 25: FAI on Head.
@@ -324,7 +353,7 @@ impl Ring {
                             if let Some(pc) = persist {
                                 self.persist_head(pool, tid, pc);
                             }
-                            return DeqResult::Item(dec(val));
+                            return DeqAt::Item { val: dec(val), idx: h };
                         }
                     } else {
                         // line 38: unsafe transition (s,i,v)→(0,i,v).
@@ -348,24 +377,27 @@ impl Ring {
                     self.persist_head(pool, tid, pc);
                 }
                 self.fix_state(pool, tid); // line 46
-                return DeqResult::Empty;
+                return DeqAt::Empty;
             }
         }
     }
 
     /// PerCRQ head persistence (§4.2 Local Persistence): flush the local
-    /// SWSR copy instead of the contended shared `Head`.
+    /// SWSR copy instead of the contended shared `Head`. In
+    /// `defer_dequeue_sync` mode the `pwb` is issued but its `psync` is
+    /// left to the outer batching layer (one drain per K dequeues).
     fn persist_head(&self, pool: &PmemPool, tid: usize, pc: &PersistCfg) {
         match pc.head_mode {
             HeadPersistMode::Local => {
                 pool.pwb(tid, self.head_i_addr(tid));
-                pool.psync(tid);
             }
             HeadPersistMode::Shared => {
                 pool.pwb(tid, self.head_addr());
-                pool.psync(tid);
             }
-            HeadPersistMode::None => {}
+            HeadPersistMode::None => return,
+        }
+        if !pc.defer_dequeue_sync {
+            pool.psync(tid);
         }
     }
 

@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use super::crq::{DeqResult, EnqAt, PersistCfg, Ring};
+use super::crq::{DeqAt, EnqAt, PersistCfg, Ring};
 use super::{ConcurrentQueue, HeadPersistMode, QueueConfig, QueueError, MAX_ITEM};
 use crate::pmem::{PAddr, PmemPool, WORDS_PER_LINE};
 
@@ -178,16 +178,25 @@ impl LcrqCore {
 
     /// Algorithm 5, Dequeue() (lines 6-15).
     pub fn dequeue(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        Ok(self.dequeue_at(tid).map(|(v, _, _)| v))
+    }
+
+    /// [`LcrqCore::dequeue`] that also reports where the item came from:
+    /// `(value, node address, ring index)`. The sharded layer's dequeue
+    /// log records this position so post-crash reconciliation can decide,
+    /// per logged consumption, whether the recovered queue would otherwise
+    /// redeliver an already-returned item.
+    pub fn dequeue_at(&self, tid: usize) -> Option<(u64, PAddr, u64)> {
         let p = &self.pool;
         loop {
             let f = PAddr::from_u64(p.load(tid, self.first)); // line 8
             let ring = self.ring_of(f); // line 9
-            match ring.dequeue(p, tid, self.persist.as_ref()) {
-                DeqResult::Item(v) => return Ok(Some(v)), // lines 11-12
-                DeqResult::Empty => {
+            match ring.dequeue_at(p, tid, self.persist.as_ref()) {
+                DeqAt::Item { val, idx } => return Some((val, f, idx)), // lines 11-12
+                DeqAt::Empty => {
                     let next = p.load(tid, Self::next_addr(f));
                     if next == 0 {
-                        return Ok(None); // lines 13-14
+                        return None; // lines 13-14
                     }
                     // line 15: advance First (no persistence — §4.3: First
                     // never changes at recovery; post-crash dequeues
@@ -277,6 +286,7 @@ mod core_access {
             skip_tail_persist: cfg.skip_tail_persist,
             disable_closed_flag: cfg.disable_closed_flag,
             defer_enqueue_sync: cfg.defer_enqueue_sync,
+            defer_dequeue_sync: cfg.defer_dequeue_sync,
         }
     }
 }

@@ -102,6 +102,19 @@ pub trait PersistentQueue: ConcurrentQueue {
     /// persistent queues have nothing buffered. **Quiescent contexts
     /// only** (all workers stopped).
     fn quiesce(&self) {}
+
+    /// A worker thread is about to start operating as `tid`: reclaim any
+    /// per-thread state a dead predecessor left in the slot (e.g. flush
+    /// its stranded group-commit batches) and re-randomize per-thread
+    /// dispatch state so slot reuse does not skew load. Default: no-op —
+    /// per-operation queues keep no per-thread state. The usual `tid`
+    /// exclusivity contract applies.
+    fn attach(&self, _tid: usize) {}
+
+    /// The worker running as `tid` is done (normal exit): flush its
+    /// thread-buffered state. Safe to call from the worker itself, unlike
+    /// [`PersistentQueue::quiesce`]. Default: no-op.
+    fn detach(&self, _tid: usize) {}
 }
 
 /// Construction-time knobs shared across algorithms.
@@ -132,12 +145,22 @@ pub struct QueueConfig {
     /// group-commit every `B` enqueues with a single `psync` (see
     /// [`sharded`] docs). Must be in `1..=MAX_BATCH`.
     pub batch: usize,
+    /// Dequeue batch size for the sharded queue's consumer-side group
+    /// commit: `1` = persist `Head_i` every dequeue (the paper's per-op
+    /// pair); `K > 1` = defer each dequeue's `psync` and drain once per
+    /// `K` dequeues, sealing a per-thread persistent dequeue log in the
+    /// same drain (see [`sharded`] docs). Must be in `1..=MAX_BATCH`.
+    pub batch_deq: usize,
     /// Internal (set by [`sharded::ShardedQueue`] in batched mode): issue
     /// the enqueue cell `pwb` but *defer* its `psync` to the caller, who
     /// must issue one `psync` per batch. Leaving this on without an outer
     /// syncing layer forfeits per-operation durability — never enable it
     /// directly.
     pub defer_enqueue_sync: bool,
+    /// Internal (set by [`sharded::ShardedQueue`] when `batch_deq > 1`):
+    /// issue the dequeue-side `Head_i` `pwb` but defer its `psync` to the
+    /// outer group-commit layer. Never enable directly.
+    pub defer_dequeue_sync: bool,
 }
 
 /// Upper bound on [`QueueConfig::shards`].
@@ -158,7 +181,9 @@ impl Default for QueueConfig {
             disable_closed_flag: false,
             shards: 4,
             batch: 1,
+            batch_deq: 1,
             defer_enqueue_sync: false,
+            defer_dequeue_sync: false,
         }
     }
 }
@@ -180,6 +205,9 @@ impl QueueConfig {
         }
         if self.batch == 0 || self.batch > MAX_BATCH {
             return Err(QueueError::BadConfig("batch must be in 1..=32"));
+        }
+        if self.batch_deq == 0 || self.batch_deq > MAX_BATCH {
+            return Err(QueueError::BadConfig("batch-deq must be in 1..=32"));
         }
         Ok(())
     }
@@ -338,6 +366,10 @@ mod tests {
         let bad = QueueConfig { batch: 0, ..Default::default() };
         assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
         let bad = QueueConfig { batch: MAX_BATCH + 1, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { batch_deq: 0, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { batch_deq: MAX_BATCH + 1, ..Default::default() };
         assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
         let bad = QueueConfig { ring_size: 100, ..Default::default() };
         assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));

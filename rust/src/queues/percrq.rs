@@ -143,6 +143,7 @@ impl PerCrq {
                 skip_tail_persist: cfg.skip_tail_persist,
                 disable_closed_flag: cfg.disable_closed_flag,
                 defer_enqueue_sync: cfg.defer_enqueue_sync,
+                defer_dequeue_sync: cfg.defer_dequeue_sync,
             },
             starvation_limit: cfg.starvation_limit,
         }

@@ -15,14 +15,24 @@
 //!   sibling shards, bounded by the shard skew. Histories are checked with
 //!   [`crate::verify::check_relaxed`], which accepts at most `k`
 //!   out-of-order dequeues per operation.
-//! * **Batching** — with `QueueConfig::batch = B > 1`, enqueues run in
-//!   group-commit mode: each op issues its cell `pwb` but *defers* the
-//!   `psync` ([`crate::queues::crq::PersistCfg::defer_enqueue_sync`]); every
+//! * **Batching (producer side)** — with `QueueConfig::batch = B > 1`,
+//!   enqueues run in group-commit mode: each op issues its cell `pwb` but
+//!   *defers* the `psync`
+//!   ([`crate::queues::crq::PersistCfg::defer_enqueue_sync`]); every
 //!   `B`-th enqueue seals the thread's persistent [`batch`] log and issues
 //!   **one `psync`** that realizes the whole batch (log lines + all
 //!   deferred cell flushes) in a single drain. Amortized persistence:
-//!   `1/B` psyncs per enqueue. Dequeues keep their per-op pair — an item
-//!   must be durably consumed before it is returned.
+//!   `1/B` psyncs per enqueue.
+//! * **Batching (consumer side)** — with `QueueConfig::batch_deq = K > 1`,
+//!   dequeues run in the symmetric group-commit mode: each successful
+//!   dequeue issues its `Head_i` `pwb` but defers the `psync`
+//!   ([`crate::queues::crq::PersistCfg::defer_dequeue_sync`]) and records
+//!   the consumed position in a per-thread persistent *dequeue log*; every
+//!   `K`-th dequeue seals the log and issues **one `psync`** realizing the
+//!   log lines and every deferred `Head_i` flush together. Amortized:
+//!   `1/K` psyncs per dequeue — closing the asymmetry the Second-Amendment
+//!   line of work points at (relaxing per-dequeue persistence is where the
+//!   remaining cost lives).
 //!
 //! ## Durability contract under batching
 //!
@@ -32,24 +42,73 @@
 //! `B − 1` *unflushed* enqueues of each thread; the checker accounts for
 //! exactly that window via `CheckOptions::trailing_loss_per_thread`.
 //!
+//! Symmetrically, a batched dequeue's *consumption* is durable at its
+//! flush: a crash may **redeliver** at most the last `K − 1` returned but
+//! unflushed items of each thread (their durable `Head_i` is stale, so the
+//! recovered queue still holds them). The checker accounts for exactly
+//! that window via `CheckOptions::trailing_redelivery_per_thread`.
+//!
+//! ## Persistence cost (psyncs per operation)
+//!
+//! | configuration | enqueue | dequeue |
+//! |---|---|---|
+//! | per-op (`batch = batch_deq = 1`) | 1 | 1 |
+//! | enqueue-batched (`batch = B`) | 1/B | 1 |
+//! | both-batched (`batch = B`, `batch_deq = K`) | 1/B | 1/K |
+//!
 //! ## Crash recovery and batch reconciliation
 //!
-//! [`ShardedQueue::recover`] re-runs each shard's recovery, then reconciles
-//! in-flight batches from the per-thread logs. For every entry of a sealed
-//! log (`item`, shard, node, ring index, seq) it decides:
+//! [`ShardedQueue::recover`] re-runs each shard's recovery, then
+//! reconciles in-flight batches from the per-thread logs — the dequeue
+//! side first, then the enqueue side, because the enqueue verdicts depend
+//! on which consumptions are known-durable:
 //!
-//! * ring `Head > idx` → **settled**: the position was durably consumed or
-//!   passed. Crucially, a dequeue only *returns* an item after its
-//!   `persist_head` pair completes, so `Head ≤ idx` proves the item was
-//!   never handed to any caller — re-inserting it cannot duplicate.
+//! **Dequeue logs.** Shard recovery restores each ring's `Head` from the
+//! durable `Head_i` copies, which the batch flush realizes together with
+//! the log seal; a sealed dequeue-log entry therefore normally finds its
+//! position already settled (`Head > idx`). The log is load-bearing in
+//! one window: a crash *during* the flush's `psync` realizes each queued
+//! line independently, so the sealed log can land while some `Head_i`
+//! flush does not. For every valid entry whose item is still durably
+//! present at its logged position, recovery re-executes the consumption
+//! (clears the cell durably) — the item was returned to a caller
+//! pre-crash and must **not** be redelivered. Positions never logged
+//! belong to items that may or may not have been returned; they survive
+//! (never-returned items must not be lost; returned-but-unlogged ones are
+//! the bounded redelivery window above).
+//!
+//! **Enqueue logs.** For every entry of a sealed log (`item`, shard,
+//! node, ring index, seq):
+//!
+//! * the position appears in a valid **dequeue-log** entry → the item was
+//!   returned; never re-insert (without this check, re-executing the
+//!   logged consumption above would make the cell look "missing" below
+//!   and re-insert a delivered item).
+//! * ring `Head > idx` → **settled**: the position was durably consumed
+//!   or passed — do not re-insert.
 //! * cell at `idx` still holds `item` → **present**: nothing to do.
-//! * otherwise → **missing**: the cell flush never landed; the item is
-//!   re-enqueued (it lands at the tail — a bounded relaxation the relaxed
-//!   checker absorbs).
+//! * otherwise → **missing**: the cell flush never landed and no durable
+//!   record says the item was returned; it is re-enqueued (it lands at
+//!   the tail — a bounded relaxation the relaxed checker absorbs).
 //!
 //! Logs are retired durably after reconciliation so a later crash cannot
 //! replay them; batch sequence numbers stored in every entry detect torn
 //! logs (header and entry lines realized independently at a crash).
+//!
+//! ## Worker threads and slot reuse
+//!
+//! Per-thread state (round-robin ticket, filling batches) is keyed by
+//! `tid`. A worker that dies mid-batch (panic, simulated crash) strands
+//! its filling batches; a replacement thread reusing the `tid` would also
+//! restart the round-robin ticket at the same phase, skewing shard
+//! pressure. [`ShardedQueue::attach_worker`] hands out a RAII
+//! [`WorkerSlot`] that (a) flushes anything a dead predecessor left
+//! behind, (b) reseeds the ticket from a global counter so reused slots
+//! stay spread across shards, and (c) flushes both logs on drop. The same
+//! behavior is reachable through `dyn PersistentQueue` via the
+//! [`crate::queues::PersistentQueue::attach`] /
+//! [`crate::queues::PersistentQueue::detach`] hooks — the broker service
+//! calls them around every producer/worker thread's lifetime.
 
 pub mod batch;
 
@@ -91,9 +150,21 @@ pub trait Shardable: PersistentQueue {
     /// Enqueue and report the landing position.
     fn enqueue_traced(&self, tid: usize, item: u64) -> Result<EnqPos, QueueError>;
 
+    /// Dequeue and report the position the item came from (for the
+    /// consumer-side dequeue log).
+    fn dequeue_traced(&self, tid: usize) -> Result<Option<(u64, EnqPos)>, QueueError>;
+
     /// Post-crash, post-recovery: classify a logged `(pos, item)` pair.
     /// Single-threaded (recovery context).
     fn probe(&self, tid: usize, pos: &EnqPos, item: u64) -> Probe;
+
+    /// Post-crash, post-recovery: re-execute a logged consumption. If the
+    /// item is still durably present at `pos` (the recovered queue would
+    /// redeliver it even though it was returned pre-crash), clear the cell
+    /// exactly as its dequeue transition did and request write-back; the
+    /// caller issues the final `psync`. Returns whether a cell was
+    /// cleared. Single-threaded (recovery context).
+    fn retire(&self, tid: usize, pos: &EnqPos, item: u64) -> bool;
 
     /// Cheap, non-linearizable emptiness hint used by the dequeue scan to
     /// skip shards that currently look empty. Must never report `false`
@@ -109,6 +180,38 @@ impl Shardable for PerLcrq {
     fn enqueue_traced(&self, tid: usize, item: u64) -> Result<EnqPos, QueueError> {
         let (node, idx) = self.core().enqueue_at(tid, item)?;
         Ok(EnqPos { node, idx })
+    }
+
+    fn dequeue_traced(&self, tid: usize) -> Result<Option<(u64, EnqPos)>, QueueError> {
+        Ok(self
+            .core()
+            .dequeue_at(tid)
+            .map(|(v, node, idx)| (v, EnqPos { node, idx })))
+    }
+
+    fn retire(&self, tid: usize, pos: &EnqPos, item: u64) -> bool {
+        let core = self.core();
+        let pool = &core.pool;
+        let ring = core.ring_of(pos.node);
+        let (head, _tail) = ring.endpoints(pool, tid);
+        if head > pos.idx {
+            return false; // already settled by the recovered Head
+        }
+        let r = ring.ring_size as u64;
+        let u = pos.idx % r;
+        let (uns, idx, val) = ring.read_cell(pool, tid, u);
+        if idx != pos.idx || val != item + 1 {
+            return false; // cell moved on / item not there — nothing to do
+        }
+        // The dequeue transition the pre-crash consumer already performed:
+        // (s, idx, v) → (s, idx + R, ⊥), preserving the safe/unsafe bit
+        // exactly as the live transition does (ring recovery has already
+        // cleared unsafe flags, so `uns` is false here in practice — kept
+        // for fidelity). Request write-back so a repeat crash cannot
+        // resurrect the value; the caller psyncs once.
+        ring.write_cell(pool, tid, u, uns, pos.idx + r, crate::queues::crq::BOT);
+        pool.pwb(tid, ring.cell_addr(u));
+        true
     }
 
     fn probe(&self, tid: usize, pos: &EnqPos, item: u64) -> Probe {
@@ -154,10 +257,15 @@ struct SlotState {
     ticket: u64,
     /// Dequeue scan start.
     cursor: usize,
-    /// Entries recorded in the filling batch.
+    /// Entries recorded in the filling enqueue batch.
     pending: usize,
-    /// Current batch sequence number (starts at 1; 0 is "never sealed").
+    /// Current enqueue-batch sequence number (starts at 1; 0 = never
+    /// sealed).
     seq: u64,
+    /// Entries recorded in the filling dequeue batch.
+    deq_pending: usize,
+    /// Current dequeue-batch sequence number (starts at 1).
+    deq_seq: u64,
 }
 
 struct Slot(UnsafeCell<SlotState>);
@@ -170,10 +278,16 @@ pub struct ShardedQueue<Q: Shardable = PerLcrq> {
     shards: Vec<Q>,
     nshards: usize,
     batch: usize,
+    batch_deq: usize,
     nthreads: usize,
     slots: Vec<CachePadded<Slot>>,
-    /// Per-thread persistent batch logs (empty when `batch == 1`).
+    /// Per-thread persistent enqueue batch logs (empty when `batch == 1`).
     logs: Vec<BatchLog>,
+    /// Per-thread persistent dequeue logs (empty when `batch_deq == 1`).
+    deq_logs: Vec<BatchLog>,
+    /// Monotone seed for [`ShardedQueue::attach_worker`] ticket reseeding,
+    /// so reused thread slots keep spreading across shards.
+    ticket_seed: std::sync::atomic::AtomicU64,
     name: &'static str,
 }
 
@@ -189,9 +303,10 @@ impl ShardedQueue<PerLcrq> {
     ) -> Result<Self, QueueError> {
         cfg.validate()?;
         let mut shard_cfg = cfg.clone();
-        // Batched mode defers the enqueue-cell psync to the flush; plain
-        // sharding keeps the paper's per-op pair.
+        // Batched modes defer the per-op psync to the flush; plain
+        // sharding keeps the paper's per-op pair on both sides.
         shard_cfg.defer_enqueue_sync = cfg.batch > 1;
+        shard_cfg.defer_dequeue_sync = cfg.batch_deq > 1;
         let shards: Vec<PerLcrq> = (0..cfg.shards)
             .map(|_| PerLcrq::new(pool, nthreads, shard_cfg.clone()))
             .collect();
@@ -202,7 +317,8 @@ impl ShardedQueue<PerLcrq> {
 impl<Q: Shardable> ShardedQueue<Q> {
     /// Generic construction over caller-built shards. The shards must
     /// already be configured consistently with `cfg` (in particular,
-    /// `defer_enqueue_sync` iff `cfg.batch > 1`).
+    /// `defer_enqueue_sync` iff `cfg.batch > 1` and `defer_dequeue_sync`
+    /// iff `cfg.batch_deq > 1`).
     pub fn from_shards(
         pool: &Arc<PmemPool>,
         nthreads: usize,
@@ -220,21 +336,30 @@ impl<Q: Shardable> ShardedQueue<Q> {
         } else {
             Vec::new()
         };
+        let deq_logs = if cfg.batch_deq > 1 {
+            (0..nthreads).map(|_| BatchLog::alloc(pool, cfg.batch_deq)).collect()
+        } else {
+            Vec::new()
+        };
         Ok(Self {
             pool: Arc::clone(pool),
             shards,
             nshards,
             batch: cfg.batch,
+            batch_deq: cfg.batch_deq,
             nthreads,
             slots: (0..nthreads)
                 .map(|_| {
                     CachePadded::new(Slot(UnsafeCell::new(SlotState {
                         seq: 1,
+                        deq_seq: 1,
                         ..Default::default()
                     })))
                 })
                 .collect(),
             logs,
+            deq_logs,
+            ticket_seed: std::sync::atomic::AtomicU64::new(nthreads as u64),
             name,
         })
     }
@@ -244,9 +369,26 @@ impl<Q: Shardable> ShardedQueue<Q> {
         self.nshards
     }
 
-    /// Configured batch size (1 = per-op persistence).
+    /// Configured enqueue batch size (1 = per-op persistence).
     pub fn batch_size(&self) -> usize {
         self.batch
+    }
+
+    /// Configured dequeue batch size (1 = per-op persistence).
+    pub fn batch_deq_size(&self) -> usize {
+        self.batch_deq
+    }
+
+    /// Claim thread slot `tid` for a worker: flushes any batches a dead
+    /// predecessor stranded in the slot and reseeds the round-robin
+    /// ticket from a global counter (so a replacement worker does not
+    /// restart at shard 0 and skew pressure). The returned guard flushes
+    /// both logs when dropped — including on unwind, so a panicking
+    /// worker cannot strand its filling batches. The usual `tid`
+    /// exclusivity contract applies: one live owner per slot.
+    pub fn attach_worker(&self, tid: usize) -> WorkerSlot<'_, Q> {
+        PersistentQueue::attach(self, tid);
+        WorkerSlot { q: self, tid }
     }
 
     #[allow(clippy::mut_from_ref)]
@@ -272,22 +414,28 @@ impl<Q: Shardable> ShardedQueue<Q> {
         Ok(())
     }
 
-    /// Flush thread `tid`'s filling batch: seal the log and issue the
-    /// batch's single `psync` (draining the log lines and every deferred
-    /// cell `pwb` at once). No-op when nothing is pending or batching is
-    /// off.
+    /// Flush thread `tid`'s filling batches (enqueue and dequeue sides):
+    /// seal whichever logs have pending entries and issue **one** `psync`
+    /// that drains the log lines plus every deferred cell / `Head_i`
+    /// `pwb`. No-op when nothing is pending or batching is off.
     pub fn flush(&self, tid: usize) {
-        if self.batch <= 1 {
-            return;
-        }
         let slot = self.slot(tid);
-        if slot.pending == 0 {
-            return;
+        let mut sealed = false;
+        if self.batch > 1 && slot.pending > 0 {
+            self.logs[tid].seal(&self.pool, tid, slot.pending, slot.seq);
+            slot.pending = 0;
+            slot.seq += 1;
+            sealed = true;
         }
-        self.logs[tid].seal(&self.pool, tid, slot.pending, slot.seq);
-        self.pool.psync(tid);
-        slot.pending = 0;
-        slot.seq += 1;
+        if self.batch_deq > 1 && slot.deq_pending > 0 {
+            self.deq_logs[tid].seal(&self.pool, tid, slot.deq_pending, slot.deq_seq);
+            slot.deq_pending = 0;
+            slot.deq_seq += 1;
+            sealed = true;
+        }
+        if sealed {
+            self.pool.psync(tid);
+        }
     }
 
     /// Flush every thread's pending batch. **Quiescent contexts only**
@@ -307,8 +455,19 @@ impl<Q: Shardable> ShardedQueue<Q> {
             if !self.shards[s].maybe_nonempty(tid) {
                 continue;
             }
-            if let Some(v) = self.shards[s].dequeue(tid)? {
+            if self.batch_deq <= 1 {
+                if let Some(v) = self.shards[s].dequeue(tid)? {
+                    slot.cursor = (s + 1) % self.nshards;
+                    return Ok(Some(v));
+                }
+            } else if let Some((v, pos)) = self.shards[s].dequeue_traced(tid)? {
                 slot.cursor = (s + 1) % self.nshards;
+                let i = slot.deq_pending;
+                self.deq_logs[tid].record(&self.pool, tid, i, v, s, &pos, slot.deq_seq);
+                slot.deq_pending = i + 1;
+                if slot.deq_pending >= self.batch_deq {
+                    self.flush(tid);
+                }
                 return Ok(Some(v));
             }
         }
@@ -316,10 +475,41 @@ impl<Q: Shardable> ShardedQueue<Q> {
     }
 
     /// Post-recovery batch reconciliation (single-threaded). See module
-    /// docs for the soundness argument.
+    /// docs for the soundness argument. Order matters: the dequeue logs
+    /// are replayed first and feed the "was returned" set the enqueue-log
+    /// verdicts depend on.
     fn reconcile(&self, pool: &PmemPool) {
         let tid = 0;
-        for t in 0..self.nthreads {
+
+        // --- Dequeue logs: suppress redelivery of logged consumptions ---
+        // Key: (shard, node, ring idx, item) — a ring position is consumed
+        // by exactly one dequeue, so the tuple is unique per epoch.
+        let mut consumed: std::collections::HashSet<(usize, u64, u64, u64)> =
+            std::collections::HashSet::new();
+        if self.batch_deq > 1 {
+            for t in 0..self.nthreads {
+                let (count, seq) = self.deq_logs[t].header(pool, tid);
+                if count == 0 || seq == 0 {
+                    continue;
+                }
+                for i in 0..count.min(self.batch_deq) {
+                    let e = self.deq_logs[t].entry(pool, tid, i);
+                    if e.seq != seq || e.enc_item == 0 || e.shard >= self.nshards {
+                        continue; // torn or garbage entry — stale seq, skip
+                    }
+                    let item = e.enc_item - 1;
+                    let pos = EnqPos { node: e.node, idx: e.idx };
+                    consumed.insert((e.shard, e.node.to_u64(), e.idx, item));
+                    // Returned pre-crash but still durably present: clear
+                    // the cell so the recovered queue cannot redeliver it.
+                    let _ = self.shards[e.shard].retire(tid, &pos, item);
+                }
+                self.deq_logs[t].clear(pool, tid);
+            }
+        }
+
+        // --- Enqueue logs: re-insert provably-never-returned items ---
+        for t in 0..self.nthreads.min(self.logs.len()) {
             let (count, seq) = self.logs[t].header(pool, tid);
             if count == 0 || seq == 0 {
                 continue;
@@ -330,18 +520,22 @@ impl<Q: Shardable> ShardedQueue<Q> {
                     continue; // torn or garbage entry — stale seq, skip
                 }
                 let item = e.enc_item - 1;
+                if consumed.contains(&(e.shard, e.node.to_u64(), e.idx, item)) {
+                    continue; // durably recorded as returned — never re-insert
+                }
                 let pos = EnqPos { node: e.node, idx: e.idx };
                 if self.shards[e.shard].probe(tid, &pos, item) == Probe::Missing {
-                    // Never returned to any caller (Head ≤ idx) and not in
-                    // NVM: re-insert. Lands at the tail; the relaxed-FIFO
-                    // checker absorbs the displacement.
+                    // Never returned to any caller (Head ≤ idx, no dequeue
+                    // log entry) and not in NVM: re-insert. Lands at the
+                    // tail; the relaxed-FIFO checker absorbs the
+                    // displacement.
                     let _ = self.shards[e.shard].enqueue(tid, item);
                 }
             }
             self.logs[t].clear(pool, tid);
         }
-        // One drain realizes the log retirements and any deferred cell
-        // pwbs from re-insertions.
+        // One drain realizes the log retirements, the retired cells, and
+        // any deferred cell pwbs from re-insertions.
         pool.psync(tid);
     }
 }
@@ -365,14 +559,31 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
         self.flush_all();
     }
 
+    fn attach(&self, tid: usize) {
+        // Flush whatever a dead predecessor stranded in the slot, then
+        // reseed the round-robin ticket from the global counter so a
+        // replacement worker does not restart at the same phase and skew
+        // shard pressure.
+        self.flush(tid);
+        let slot = self.slot(tid);
+        slot.ticket = self
+            .ticket_seed
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        slot.cursor = (slot.ticket % self.nshards as u64) as usize;
+    }
+
+    fn detach(&self, tid: usize) {
+        self.flush(tid);
+    }
+
     fn recover(&self, pool: &PmemPool) {
         for s in &self.shards {
             s.recover(pool);
         }
-        if self.batch > 1 {
+        if self.batch > 1 || self.batch_deq > 1 {
             self.reconcile(pool);
         }
-        // Reset volatile dispatch state; bump seq so fresh batches can
+        // Reset volatile dispatch state; bump seqs so fresh batches can
         // never collide with stale (already reconciled) log entries.
         for t in 0..self.nthreads {
             let slot = self.slot(t);
@@ -380,7 +591,34 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
             slot.cursor = 0;
             slot.pending = 0;
             slot.seq += 1;
+            slot.deq_pending = 0;
+            slot.deq_seq += 1;
         }
+    }
+}
+
+/// RAII claim on a [`ShardedQueue`] thread slot — see
+/// [`ShardedQueue::attach_worker`]. Flushes the slot's filling batches on
+/// drop (including unwind), so a dying worker cannot strand them.
+pub struct WorkerSlot<'q, Q: Shardable> {
+    q: &'q ShardedQueue<Q>,
+    tid: usize,
+}
+
+impl<Q: Shardable> WorkerSlot<'_, Q> {
+    /// The claimed thread id.
+    pub fn tid(&self) -> usize {
+        self.tid
+    }
+}
+
+impl<Q: Shardable> Drop for WorkerSlot<'_, Q> {
+    fn drop(&mut self) {
+        // Best-effort: if the pool is mid-crash the flush itself unwinds
+        // with a CrashSignal; swallow it — recovery reconciles the logs.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.q.flush(self.tid);
+        }));
     }
 }
 
@@ -391,12 +629,17 @@ mod tests {
     use crate::util::rng::Xoshiro256;
 
     fn mk(shards: usize, batch: usize) -> (Arc<PmemPool>, ShardedQueue) {
-        mk_probs(shards, batch, 0.0, 0.0)
+        mk_full(shards, batch, 1, 0.0, 0.0)
     }
 
-    fn mk_probs(
+    fn mk_deq(shards: usize, batch_deq: usize) -> (Arc<PmemPool>, ShardedQueue) {
+        mk_full(shards, 1, batch_deq, 0.0, 0.0)
+    }
+
+    fn mk_full(
         shards: usize,
         batch: usize,
+        batch_deq: usize,
         evict: f64,
         pending: f64,
     ) -> (Arc<PmemPool>, ShardedQueue) {
@@ -407,7 +650,8 @@ mod tests {
             pending_flush_prob: pending,
             seed: 21,
         }));
-        let cfg = QueueConfig { shards, batch, ring_size: 64, ..Default::default() };
+        let cfg =
+            QueueConfig { shards, batch, batch_deq, ring_size: 64, ..Default::default() };
         let q = ShardedQueue::new_perlcrq(&pool, 8, cfg).unwrap();
         (pool, q)
     }
@@ -603,6 +847,121 @@ mod tests {
         got.dedup();
         assert_eq!(got.len(), n, "double crash produced duplicates");
         assert_eq!(got, (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn deq_batch_amortizes_psyncs() {
+        let (p, q) = mk_deq(2, 4);
+        for v in 0..8u64 {
+            q.enqueue(0, v).unwrap(); // per-op persistence (batch = 1)
+        }
+        p.stats.reset();
+        for _ in 0..3 {
+            assert!(q.dequeue(0).unwrap().is_some());
+        }
+        assert_eq!(p.stats.total().psyncs, 0, "no psync before the dequeue batch fills");
+        assert!(q.dequeue(0).unwrap().is_some()); // 4th seals + syncs
+        let s = p.stats.total();
+        assert_eq!(s.psyncs, 1, "exactly one psync per dequeue batch of 4");
+        assert!(s.pwbs >= 4, "each dequeue still issues its Head_i pwb");
+        // Per-op comparison.
+        let (p1, q1) = mk_deq(2, 1);
+        for v in 0..4u64 {
+            q1.enqueue(0, v).unwrap();
+        }
+        p1.stats.reset();
+        for _ in 0..4 {
+            assert!(q1.dequeue(0).unwrap().is_some());
+        }
+        assert_eq!(p1.stats.total().psyncs, 4);
+    }
+
+    #[test]
+    fn flushed_dequeues_settle_across_crash() {
+        // batch_deq = 2: two dequeues flush together; after a crash the
+        // recovered queue must NOT redeliver them (Head_i rode the flush).
+        let (p, q) = mk_deq(1, 2);
+        for v in 0..4u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert_eq!(q.dequeue(1).unwrap(), Some(0));
+        assert_eq!(q.dequeue(1).unwrap(), Some(1)); // seals + syncs
+        let mut rng = Xoshiro256::seed_from(31);
+        p.crash(&mut rng);
+        q.recover(&p);
+        assert_eq!(drain(&q, 0), vec![2, 3], "flushed consumption must be durable");
+    }
+
+    #[test]
+    fn unflushed_dequeues_redeliver_but_never_lose() {
+        // One dequeue inside an unflushed batch of 4: the crash rolls the
+        // durable Head back, so the item is redelivered (the bounded
+        // consumer-side window) — but nothing is ever lost.
+        let (p, q) = mk_deq(1, 4);
+        for v in 0..4u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert_eq!(q.dequeue(1).unwrap(), Some(0)); // unflushed consumption
+        let mut rng = Xoshiro256::seed_from(32);
+        p.crash(&mut rng);
+        q.recover(&p);
+        assert_eq!(
+            drain(&q, 0),
+            vec![0, 1, 2, 3],
+            "unflushed consumption may redeliver; enqueued items must survive"
+        );
+    }
+
+    #[test]
+    fn retire_clears_logged_consumption_exactly_once() {
+        // Directly exercise the recovery primitive behind the dequeue log:
+        // a logged position still durably occupied is cleared once.
+        let (p, q) = mk(1, 1);
+        for v in 0..3u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        let core = q.shards[0].core();
+        let first = PAddr::from_u64(p.peek(core.first));
+        let pos = EnqPos { node: first, idx: 0 };
+        assert!(q.shards[0].retire(0, &pos, 0), "occupied position must clear");
+        p.psync(0);
+        assert!(!q.shards[0].retire(0, &pos, 0), "second retire is a no-op");
+        assert_eq!(drain(&q, 0), vec![1, 2], "retired item must not be delivered");
+    }
+
+    #[test]
+    fn worker_slot_flushes_on_panic_and_reseeds_ticket() {
+        let (p, q) = mk_full(2, 4, 4, 0.0, 0.0);
+        let q = Arc::new(q);
+        // A worker that panics mid-batch: the WorkerSlot drop must flush
+        // its partial enqueue batch so the items are durable.
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let slot = q2.attach_worker(3);
+            q2.enqueue(slot.tid(), 100).unwrap();
+            q2.enqueue(slot.tid(), 101).unwrap();
+            std::panic::panic_any("worker died");
+        });
+        assert!(h.join().is_err());
+        let mut rng = Xoshiro256::seed_from(33);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let mut got = drain(&q, 0);
+        got.sort_unstable();
+        assert_eq!(got, vec![100, 101], "panicked worker's batch must have been flushed");
+        // A replacement worker on the same tid gets a fresh ticket phase:
+        // the global seed is monotone, so successive attachments observe
+        // strictly increasing tickets (never a restart at 0), and the
+        // dequeue cursor follows the ticket.
+        let s1 = q.attach_worker(3);
+        assert_eq!(s1.tid(), 3);
+        let t1 = q.slot(3).ticket;
+        drop(s1);
+        let s2 = q.attach_worker(3);
+        let t2 = q.slot(3).ticket;
+        assert!(t2 > t1, "re-attachment must advance the ticket seed ({t1} -> {t2})");
+        assert_eq!(q.slot(3).cursor, (t2 % q.shard_count() as u64) as usize);
+        drop(s2);
     }
 
     #[test]

@@ -1,13 +1,21 @@
 //! PJRT execution of the AOT artifacts.
 //!
-//! Interchange contract (see python/compile/aot.py and
-//! /opt/xla-example/README.md): artifacts are HLO **text**;
-//! `HloModuleProto::from_text_file` reparses and reassigns instruction ids,
-//! sidestepping the 64-bit-id protos that xla_extension 0.5.1 rejects.
+//! Interchange contract (see python/compile/aot.py): artifacts are HLO
+//! **text**; `HloModuleProto::from_text_file` reparses and reassigns
+//! instruction ids, sidestepping the 64-bit-id protos that xla_extension
+//! 0.5.1 rejects.
+//!
+//! The `xla` crate is not available in this offline build, so the real
+//! engine is gated behind the off-by-default `pjrt` cargo feature (enable
+//! it only in an environment that vendors/patches in an `xla` crate). The
+//! default build compiles an API-identical stub whose [`Engine::load`]
+//! always fails, which routes every caller through the pure-Rust
+//! [`super::fallback`] with a warning — the CLI, benches and tests all
+//! keep working.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 /// Shapes the artifacts were exported with (must match python/compile).
 pub const METRICS_ROWS: usize = 64;
@@ -16,7 +24,29 @@ pub const METRICS_SAMPLES: usize = METRICS_ROWS * METRICS_COLS;
 pub const NBINS: usize = 64;
 pub const FIT_POINTS: usize = 16;
 
+/// Locate the artifacts directory: `$PERSIQ_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace root (walking up from cwd).
+pub fn default_artifact_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("PERSIQ_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("metrics.hlo.txt").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("metrics.hlo.txt").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
 /// Compiled artifact bundle on a PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -25,9 +55,11 @@ pub struct Engine {
     dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load and compile `metrics.hlo.txt` + `fit.hlo.txt` from `dir`.
     pub fn load(dir: &Path) -> Result<Engine> {
+        use anyhow::Context;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
             let path = dir.join(name);
@@ -108,23 +140,38 @@ impl Engine {
     }
 }
 
-/// Locate the artifacts directory: `$PERSIQ_ARTIFACTS`, else `artifacts/`
-/// relative to the workspace root (walking up from cwd).
-pub fn default_artifact_dir() -> Option<PathBuf> {
-    if let Ok(p) = std::env::var("PERSIQ_ARTIFACTS") {
-        let p = PathBuf::from(p);
-        if p.join("metrics.hlo.txt").exists() {
-            return Some(p);
-        }
+/// Stub engine compiled when the `pjrt` feature (and thus the `xla` crate)
+/// is absent: loading always fails, so [`super::MetricsEngine::auto`]
+/// falls back to the pure-Rust implementation with a warning.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always fails in this build: PJRT support is feature-gated off.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        anyhow::bail!(
+            "PJRT engine not compiled in (offline build without the `xla` crate; \
+             artifacts at {}); rebuild with --features pjrt in an environment \
+             providing it",
+            dir.display()
+        )
     }
-    let mut cur = std::env::current_dir().ok()?;
-    loop {
-        let cand = cur.join("artifacts");
-        if cand.join("metrics.hlo.txt").exists() {
-            return Some(cand);
-        }
-        if !cur.pop() {
-            return None;
-        }
+
+    /// Artifact directory this engine was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Unreachable in practice: [`Engine::load`] never succeeds here.
+    pub fn metrics(&self, _samples: &[f64]) -> Result<([f64; 8], Vec<f64>)> {
+        anyhow::bail!("PJRT engine not compiled in")
+    }
+
+    /// Unreachable in practice: [`Engine::load`] never succeeds here.
+    pub fn fit(&self, _ns: &[f64], _tputs: &[f64]) -> Result<[f64; 3]> {
+        anyhow::bail!("PJRT engine not compiled in")
     }
 }

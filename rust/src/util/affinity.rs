@@ -3,6 +3,11 @@
 //! NUMA-style round-robin *placement order* are kept so thread ids map to
 //! simulated sockets deterministically (the virtual-time model can charge
 //! cross-socket penalties based on it).
+//!
+//! This build is offline and dependency-minimal (no `libc`), so
+//! [`pin_to_cpu`] is a best-effort stub: callers must treat pinning as
+//! advisory, which they already do — placement determinism comes from
+//! [`place`], not from OS affinity.
 
 /// Logical placement of a worker thread.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,46 +29,17 @@ pub fn place(tid: usize, sockets: usize, cores_per_socket: usize) -> Placement {
     Placement { socket, core: round % cps }
 }
 
-/// Try to pin the calling thread to `cpu` (Linux). Returns false if the
-/// syscall fails or there is only one CPU — callers treat pinning as
-/// best-effort.
+/// Best-effort thread pinning. Real affinity syscalls need `libc`, which
+/// this offline build deliberately does not depend on; returns `false`
+/// ("not pinned") so callers fall through to unpinned execution.
 pub fn pin_to_cpu(cpu: usize) -> bool {
-    #[cfg(target_os = "linux")]
-    unsafe {
-        let ncpu = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
-        if ncpu <= 1 {
-            return false;
-        }
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_SET(cpu % ncpu as usize, &mut set);
-        libc::pthread_setaffinity_np(
-            libc::pthread_self(),
-            std::mem::size_of::<libc::cpu_set_t>(),
-            &set,
-        ) == 0
-    }
-    #[cfg(not(target_os = "linux"))]
-    {
-        let _ = cpu;
-        false
-    }
+    let _ = cpu;
+    false
 }
 
-/// Number of online CPUs.
+/// Number of online CPUs (via the standard library; 1 when unknown).
 pub fn num_cpus() -> usize {
-    #[cfg(target_os = "linux")]
-    unsafe {
-        let n = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
-        if n < 1 {
-            1
-        } else {
-            n as usize
-        }
-    }
-    #[cfg(not(target_os = "linux"))]
-    {
-        1
-    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 #[cfg(test)]
@@ -97,5 +73,10 @@ mod tests {
     #[test]
     fn num_cpus_positive() {
         assert!(num_cpus() >= 1);
+    }
+
+    #[test]
+    fn pin_is_advisory() {
+        assert!(!pin_to_cpu(0), "stub must report not-pinned");
     }
 }

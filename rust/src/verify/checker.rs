@@ -13,7 +13,7 @@
 //! strict real-time FIFO check (V3). The count is computed exactly in
 //! `O(n log n)` with a Fenwick tree over dequeue-invocation ranks.
 //!
-//! ## Trailing-loss allowance (batched durability)
+//! ## Trailing-loss allowance (batched enqueue durability)
 //!
 //! Under the sharded queue's group-commit batching, an enqueue is durably
 //! linearized at its batch *flush*, not at its return; a crash may lose up
@@ -23,6 +23,20 @@
 //! the last `B − 1` completed enqueues of its `(thread, epoch)` group —
 //! exactly the window a crash can erase. Everything else still counts as
 //! a loss.
+//!
+//! ## Trailing-redelivery allowance (batched dequeue durability)
+//!
+//! The symmetric consumer-side window: with `batch_deq = K`, a dequeue's
+//! *consumption* is durable at its batch flush, so a crash may roll the
+//! durable `Head` back over up to `K − 1` returned-but-unflushed items per
+//! thread — those items are **redelivered** after recovery. With
+//! [`CheckOptions::trailing_redelivery_per_thread`] `= K − 1`, a value
+//! dequeued twice (or dequeued then found in the final drain) is excused
+//! **only** if its first dequeue (a) happened in an epoch that ended in a
+//! crash, (b) was among the last `K − 1` completed dequeues of its
+//! `(thread, epoch)` group, and (c) the second delivery happened in a
+//! strictly later epoch. Everything else is still a duplication
+//! violation.
 
 use std::collections::HashMap;
 
@@ -62,11 +76,17 @@ pub struct CheckOptions {
     /// Completed enqueues per `(thread, epoch)` that may vanish at a crash
     /// (batched durability window; `B − 1` for batch size `B`).
     pub trailing_loss_per_thread: usize,
-    /// How many leading epochs ended in a crash: the trailing-loss
-    /// allowance only excuses losses in epochs `< crashed_epochs` — an
-    /// epoch that ended cleanly (flushed/quiesced) has no crash to lose
-    /// its tail to, and a vanished value there is a real loss. Harnesses
-    /// that crash every cycle pass their cycle count.
+    /// Completed dequeues per `(thread, epoch)` whose value may be
+    /// *redelivered* after that epoch's crash (consumer-side batching
+    /// window; `K − 1` for dequeue batch size `K`). `0` = any duplicate
+    /// delivery is a violation.
+    pub trailing_redelivery_per_thread: usize,
+    /// How many leading epochs ended in a crash: the trailing-loss and
+    /// trailing-redelivery allowances only excuse anomalies in epochs
+    /// `< crashed_epochs` — an epoch that ended cleanly (flushed/quiesced)
+    /// has no crash to lose its tail to, and a vanished or redelivered
+    /// value there is a real violation. Harnesses that crash every cycle
+    /// pass their cycle count.
     pub crashed_epochs: u64,
     /// Run the EMPTY-soundness check (V4). Disable for batched histories:
     /// with buffered durability an EMPTY may legitimately overlap another
@@ -80,6 +100,7 @@ impl Default for CheckOptions {
             max_report: 10,
             relaxation: 0,
             trailing_loss_per_thread: 0,
+            trailing_redelivery_per_thread: 0,
             crashed_epochs: 0,
             check_empty: true,
         }
@@ -103,7 +124,7 @@ pub fn relaxation_for(
     cfg: &crate::queues::QueueConfig,
 ) -> usize {
     if algo_name.starts_with("sharded") {
-        shard_relaxation(nthreads, cfg.shards, cfg.batch)
+        shard_relaxation(nthreads, cfg.shards, cfg.batch.max(cfg.batch_deq))
     } else {
         0
     }
@@ -126,6 +147,10 @@ pub struct CheckReport {
     pub absorbed_losses: usize,
     /// Values that vanished within the batched trailing-loss allowance.
     pub absorbed_trailing: usize,
+    /// Duplicate deliveries excused by the consumer-side
+    /// trailing-redelivery allowance (returned-but-unpersisted dequeues
+    /// whose value came back after the crash).
+    pub absorbed_redelivered: usize,
     /// Largest observed overtake count across dequeues (how relaxed the
     /// history actually was; useful for calibrating `relaxation`).
     pub max_overtakes: usize,
@@ -203,6 +228,14 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
     let mut open_enq: HashMap<usize, (u64, u64)> = HashMap::new(); // tid -> (value, seq)
     let mut open_deq: HashMap<usize, u64> = HashMap::new(); // tid -> invoke seq
     let mut deq: HashMap<u64, OpSpan> = HashMap::new(); // value -> span
+    // value -> (tid, epoch, response seq) of its FIRST dequeue
+    // (trailing-redelivery groups).
+    let mut deq_meta: HashMap<u64, (usize, u64, u64)> = HashMap::new();
+    // (tid, epoch) -> response seqs of all completed dequeues.
+    let mut deq_groups: HashMap<(usize, u64), Vec<u64>> = HashMap::new();
+    // Repeat deliveries: (value, tid, epoch, response seq), in history
+    // order; judged after indexing against the redelivery allowance.
+    let mut dup_candidates: Vec<(u64, usize, u64, u64)> = Vec::new();
     let mut empties: Vec<OpSpan> = Vec::new();
 
     for e in &h.events {
@@ -235,10 +268,18 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
             }
             EventKind::DeqOk { value } => {
                 let invoke = open_deq.remove(&e.tid).unwrap_or(e.seq);
+                if opts.trailing_redelivery_per_thread > 0 {
+                    // Only the redelivery allowance reads these groups;
+                    // strict checks skip the bookkeeping.
+                    deq_groups.entry((e.tid, e.epoch)).or_default().push(e.seq);
+                }
                 if deq.contains_key(&value) {
-                    push(&mut report.violations, Violation::Duplicate { value });
+                    // Judged after indexing: may fall inside the
+                    // consumer-side trailing-redelivery window.
+                    dup_candidates.push((value, e.tid, e.epoch, e.seq));
                 } else {
                     deq.insert(value, OpSpan { invoke, response: Some(e.seq) });
+                    deq_meta.insert(value, (e.tid, e.epoch, e.seq));
                 }
                 if !enq.contains_key(&value) {
                     push(&mut report.violations, Violation::Invented { value });
@@ -259,13 +300,54 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
     // --- V1/V5 for the final drain ---
     let mut drained: HashMap<u64, ()> = HashMap::new();
     for &v in &h.final_drain {
-        if deq.contains_key(&v) || drained.contains_key(&v) {
+        if deq.contains_key(&v) {
+            // Dequeued during the run AND surfaced by the post-recovery
+            // drain: a redelivery — judge against the allowance below
+            // (the drain runs after every crash, hence epoch = MAX).
+            dup_candidates.push((v, usize::MAX, u64::MAX, u64::MAX));
+        } else if drained.contains_key(&v) {
+            // The same value twice within one single-threaded drain can
+            // never be a batching artifact — always a real duplication.
             push(&mut report.violations, Violation::Duplicate { value: v });
         }
         if !enq.contains_key(&v) {
             push(&mut report.violations, Violation::Invented { value: v });
         }
         drained.insert(v, ());
+    }
+
+    // --- V1 (batched dequeues): judge repeat deliveries against the
+    // consumer-side trailing-redelivery allowance. Each delivery is
+    // judged against the PREVIOUS excused delivery of the same value
+    // (chained), so a genuine same-epoch duplicate cannot hide behind an
+    // earlier legitimate crash redelivery ---
+    if !dup_candidates.is_empty() {
+        for seqs in deq_groups.values_mut() {
+            seqs.sort_unstable();
+        }
+        // Previous-delivery record per value: (tid, epoch, response seq).
+        // Candidates arrive in history order (event loop, then drain).
+        let mut prev: HashMap<u64, (usize, u64, u64)> = deq_meta;
+        for (v, tid, epoch, dresp) in dup_candidates {
+            let excusable = opts.trailing_redelivery_per_thread > 0
+                && prev.get(&v).is_some_and(|&(ptid, pepoch, pdresp)| {
+                    // The previous delivery must sit in the unflushed tail
+                    // of a crashed epoch, and this one must come after
+                    // that crash.
+                    if pepoch >= opts.crashed_epochs || epoch <= pepoch {
+                        return false;
+                    }
+                    let seqs = &deq_groups[&(ptid, pepoch)];
+                    let rank = seqs.partition_point(|&s| s < pdresp);
+                    seqs.len() - rank <= opts.trailing_redelivery_per_thread
+                });
+            if excusable {
+                report.absorbed_redelivered += 1;
+                prev.insert(v, (tid, epoch, dresp));
+            } else {
+                push(&mut report.violations, Violation::Duplicate { value: v });
+            }
+        }
     }
 
     // --- V2: no loss (modulo trailing-batch + in-flight-dequeue budgets) ---
@@ -279,7 +361,7 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
     {
         let mut lost: Vec<u64> = enq
             .iter()
-            .filter(|(v, span)| {
+            .filter(|&(v, span)| {
                 span.response.is_some() && !deq.contains_key(v) && !drained.contains_key(v)
             })
             .map(|(&v, _)| v)
@@ -705,6 +787,134 @@ mod tests {
             "middle loss must not be excused: {:?}",
             r.violations
         );
+    }
+
+    #[test]
+    fn redelivery_allowance_absorbs_unflushed_dequeues() {
+        // Thread 1 dequeued values 1 and 2 in epoch 0 (which crashed); the
+        // consumer batch (K = 3 → allowance 2) was never flushed, so both
+        // values came back in epoch 1.
+        fn eve(seq: u64, tid: usize, epoch: u64, kind: K) -> Event {
+            Event { seq, tid, epoch, kind }
+        }
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 1 }),
+                ev(1, 0, K::EnqOk { value: 1 }),
+                ev(2, 0, K::EnqInvoke { value: 2 }),
+                ev(3, 0, K::EnqOk { value: 2 }),
+                ev(4, 1, K::DeqInvoke),
+                ev(5, 1, K::DeqOk { value: 1 }),
+                ev(6, 1, K::DeqInvoke),
+                ev(7, 1, K::DeqOk { value: 2 }),
+                eve(8, 2, 1, K::DeqInvoke),
+                eve(9, 2, 1, K::DeqOk { value: 1 }),
+            ],
+            vec![2], // value 2 redelivered into the final drain
+        );
+        // Strict mode: both redeliveries are duplications.
+        let strict = check(&h, 10);
+        assert_eq!(strict.violations.len(), 2, "{:?}", strict.violations);
+        // With the allowance and a crashed epoch 0: both are absorbed.
+        let r = check_with(
+            &h,
+            &CheckOptions {
+                trailing_redelivery_per_thread: 2,
+                crashed_epochs: 1,
+                ..Default::default()
+            },
+        );
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.absorbed_redelivered, 2);
+        // Same history but epoch 0 never crashed: real duplications again.
+        let clean = check_with(
+            &h,
+            &CheckOptions { trailing_redelivery_per_thread: 2, ..Default::default() },
+        );
+        assert_eq!(clean.violations.len(), 2, "{:?}", clean.violations);
+    }
+
+    #[test]
+    fn redelivery_allowance_does_not_excuse_early_dequeues() {
+        // Value 1's dequeue is NOT in the trailing window (values 2 and 3
+        // were dequeued after it by the same thread in the same epoch, and
+        // the allowance is only 2): its reappearance is a real duplicate.
+        let mut events = vec![];
+        let mut seq = 0u64;
+        for v in 1..=3u64 {
+            events.push(ev(seq, 0, K::EnqInvoke { value: v }));
+            seq += 1;
+            events.push(ev(seq, 0, K::EnqOk { value: v }));
+            seq += 1;
+        }
+        for v in 1..=3u64 {
+            events.push(ev(seq, 1, K::DeqInvoke));
+            seq += 1;
+            events.push(ev(seq, 1, K::DeqOk { value: v }));
+            seq += 1;
+        }
+        let h = hist(events, vec![1]);
+        let r = check_with(
+            &h,
+            &CheckOptions {
+                trailing_redelivery_per_thread: 2,
+                crashed_epochs: 1,
+                ..Default::default()
+            },
+        );
+        assert!(
+            r.violations.contains(&Violation::Duplicate { value: 1 }),
+            "early dequeue's redelivery must not be excused: {:?}",
+            r.violations
+        );
+    }
+
+    #[test]
+    fn same_epoch_duplicate_never_excused() {
+        // A duplicate delivery within one epoch cannot be a crash
+        // redelivery — the allowance must not apply.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 7 }),
+                ev(1, 0, K::EnqOk { value: 7 }),
+                ev(2, 1, K::DeqInvoke),
+                ev(3, 1, K::DeqOk { value: 7 }),
+                ev(4, 2, K::DeqInvoke),
+                ev(5, 2, K::DeqOk { value: 7 }),
+            ],
+            vec![],
+        );
+        let r = check_with(
+            &h,
+            &CheckOptions {
+                trailing_redelivery_per_thread: 8,
+                crashed_epochs: 5,
+                ..Default::default()
+            },
+        );
+        assert!(r.violations.contains(&Violation::Duplicate { value: 7 }), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn drain_internal_duplicate_never_excused() {
+        // The same value twice in the single-threaded final drain is a
+        // structural duplication regardless of any allowance.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 9 }),
+                ev(1, 0, K::EnqOk { value: 9 }),
+            ],
+            vec![9, 9],
+        );
+        let r = check_with(
+            &h,
+            &CheckOptions {
+                trailing_redelivery_per_thread: 8,
+                crashed_epochs: 5,
+                ..Default::default()
+            },
+        );
+        assert!(r.violations.contains(&Violation::Duplicate { value: 9 }), "{:?}", r.violations);
     }
 
     #[test]

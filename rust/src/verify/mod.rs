@@ -25,8 +25,11 @@
 //! k-relaxed variant: a dequeue may overtake up to `k` strictly-older
 //! values (the bounded skew a `queues::sharded::ShardedQueue` introduces)
 //! before it counts as an inversion. All other axioms stay exact.
-//! [`check_with`] additionally exposes the batched-durability knobs
-//! (trailing-loss allowance, EMPTY-check gating) — see
+//! [`check_with`] additionally exposes the batched-durability knobs, all
+//! gated on epochs that actually crashed: the trailing-loss allowance
+//! (V2, unflushed enqueue batches), the trailing-redelivery allowance
+//! (V1, unflushed dequeue batches — returned-but-unpersisted consumption
+//! may come back after a crash), and EMPTY-check gating — see
 //! [`checker::CheckOptions`].
 //!
 //! [`proptest`] is a minimal property-testing harness (the `proptest`

@@ -13,7 +13,13 @@ use persiq::queues::{persistent_by_name, ConcurrentQueue, QueueConfig, QueueCtx}
 use persiq::util::rng::Xoshiro256;
 use persiq::verify::{check_with, shard_relaxation, CheckOptions, History};
 
-fn sharded_ctx(nthreads: usize, shards: usize, batch: usize, cap: usize) -> QueueCtx {
+fn sharded_ctx(
+    nthreads: usize,
+    shards: usize,
+    batch: usize,
+    batch_deq: usize,
+    cap: usize,
+) -> QueueCtx {
     QueueCtx {
         pool: Arc::new(PmemPool::new(PmemConfig {
             capacity_words: cap,
@@ -23,16 +29,16 @@ fn sharded_ctx(nthreads: usize, shards: usize, batch: usize, cap: usize) -> Queu
             seed: 23,
         })),
         nthreads,
-        cfg: QueueConfig { shards, batch, ring_size: 256, ..Default::default() },
+        cfg: QueueConfig { shards, batch, batch_deq, ring_size: 256, ..Default::default() },
     }
 }
 
 /// Drive `sharded-perlcrq` through recorded crash cycles and check the
 /// history with the given options. Mirrors `persiq verify`.
-fn verify_sharded(shards: usize, batch: usize, cycles: usize, seed: u64) {
+fn verify_sharded(shards: usize, batch: usize, batch_deq: usize, cycles: usize, seed: u64) {
     install_quiet_crash_hook();
     let nthreads = 4;
-    let ctx = sharded_ctx(nthreads, shards, batch, 1 << 23);
+    let ctx = sharded_ctx(nthreads, shards, batch, batch_deq, 1 << 23);
     let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
     let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
     let mut rng = Xoshiro256::seed_from(seed);
@@ -56,15 +62,17 @@ fn verify_sharded(shards: usize, batch: usize, cycles: usize, seed: u64) {
     let history = History::from_logs(logs, drained);
     let opts = CheckOptions {
         max_report: 10,
-        relaxation: shard_relaxation(nthreads, shards, batch),
+        relaxation: shard_relaxation(nthreads, shards, batch.max(batch_deq)),
         trailing_loss_per_thread: batch.saturating_sub(1),
+        trailing_redelivery_per_thread: batch_deq.saturating_sub(1),
         crashed_epochs: cycles as u64,
         check_empty: batch <= 1,
     };
     let rep = check_with(&history, &opts);
     assert!(
         rep.ok(),
-        "shards={shards} batch={batch}: violations {:?} (max_overtakes={})",
+        "shards={shards} batch={batch} batch_deq={batch_deq}: violations {:?} \
+         (max_overtakes={})",
         rep.violations,
         rep.max_overtakes
     );
@@ -73,26 +81,41 @@ fn verify_sharded(shards: usize, batch: usize, cycles: usize, seed: u64) {
 
 #[test]
 fn sharded_relaxed_durable_linearizability_10_cycles() {
-    verify_sharded(4, 1, 10, 0xA11CE);
+    verify_sharded(4, 1, 1, 10, 0xA11CE);
 }
 
 #[test]
 fn sharded_single_shard_10_cycles() {
-    verify_sharded(1, 1, 10, 0xB0B);
+    verify_sharded(1, 1, 1, 10, 0xB0B);
 }
 
 #[test]
 fn batched_relaxed_durable_linearizability_10_cycles() {
-    verify_sharded(4, 4, 10, 0xCAFE);
+    verify_sharded(4, 4, 1, 10, 0xCAFE);
 }
 
 #[test]
 fn batched_max_batch_cycles() {
-    verify_sharded(2, 8, 6, 0xD00D);
+    verify_sharded(2, 8, 1, 6, 0xD00D);
+}
+
+#[test]
+fn batched_dequeues_durable_linearizability_10_cycles() {
+    verify_sharded(4, 1, 4, 10, 0xDE0);
+}
+
+#[test]
+fn both_sides_batched_cycles() {
+    verify_sharded(4, 4, 4, 10, 0xB07);
+}
+
+#[test]
+fn both_sides_max_batch_cycles() {
+    verify_sharded(2, 8, 8, 6, 0xFEED);
 }
 
 fn sim_mops(shards: usize, batch: usize, nthreads: usize, ops: u64) -> f64 {
-    let ctx = sharded_ctx(nthreads, shards, batch, 1 << 23);
+    let ctx = sharded_ctx(nthreads, shards, batch, 1, 1 << 23);
     let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
     let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
     let rc = RunConfig { nthreads, total_ops: ops, seed: 7, ..Default::default() };
@@ -111,7 +134,7 @@ fn eight_shards_outscale_one_shard_at_eight_threads() {
 
 #[test]
 fn batching_amortizes_psyncs_per_op() {
-    let ctx = sharded_ctx(4, 4, 8, 1 << 22);
+    let ctx = sharded_ctx(4, 4, 8, 1, 1 << 22);
     let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
     let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
     let rc = RunConfig { nthreads: 4, total_ops: 20_000, seed: 11, ..Default::default() };
@@ -124,6 +147,66 @@ fn batching_amortizes_psyncs_per_op() {
         psyncs_per_op < 0.75,
         "batch=8 should amortize enqueue psyncs (got {psyncs_per_op:.2}/op)"
     );
+}
+
+#[test]
+fn both_sides_batching_amortizes_psyncs_per_op() {
+    // batch = batch_deq = 8: both endpoints group-commit, so the pairs
+    // workload should land well under the per-op regime's ~1 psync/op —
+    // target < 2/K on the combined stream (enqueues AND dequeues each
+    // contribute ~1/K).
+    let k = 8usize;
+    let ctx = sharded_ctx(4, 4, k, k, 1 << 22);
+    let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
+    let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
+    let rc = RunConfig { nthreads: 4, total_ops: 20_000, seed: 11, ..Default::default() };
+    let r = run_workload(&ctx.pool, &as_conc, &rc);
+    let stats = ctx.pool.stats.total();
+    let psyncs_per_op = stats.psyncs as f64 / r.ops_done.max(1) as f64;
+    assert!(
+        psyncs_per_op < 2.0 / k as f64,
+        "batch=batch_deq={k} should amortize both endpoints \
+         (got {psyncs_per_op:.3}/op, want < {:.3})",
+        2.0 / k as f64
+    );
+}
+
+#[test]
+fn broker_on_batched_dequeue_work_queue_exactly_once_across_crashes() {
+    // The broker's ack path rides the dequeue log: handles consumed from
+    // the work queue are logged and group-committed, and recover()'s
+    // queue↔SubmitLog reconciliation stays exact — every job completes
+    // exactly once even when the consuming dequeues crash mid-batch.
+    install_quiet_crash_hook();
+    let pool = Arc::new(PmemPool::new(PmemConfig {
+        capacity_words: 1 << 23,
+        evict_prob: 0.25,
+        pending_flush_prob: 0.5,
+        seed: 41,
+        ..Default::default()
+    }));
+    let qcfg =
+        QueueConfig { shards: 4, batch: 4, batch_deq: 4, ring_size: 256, ..Default::default() };
+    let broker = Arc::new(Broker::new_sharded(&pool, 4, 1 << 16, qcfg).unwrap());
+    let rep = run_service(
+        &pool,
+        &broker,
+        &ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 300,
+            crash_cycles: 3,
+            crash_steps: 30_000,
+            seed: 6,
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.crashes, 3);
+    assert_eq!(
+        rep.done, rep.submitted,
+        "every submitted job must complete exactly once on the batched-dequeue broker: {rep:?}"
+    );
+    assert_eq!(rep.pending_after, 0);
 }
 
 #[test]

@@ -34,6 +34,7 @@ fn service_crash_cycles_reconcile_for_both_queue_kinds() {
             let qcfg = QueueConfig {
                 shards: 1 + rng.next_below(4) as usize,
                 batch: *rng.choose(&[1usize, 2, 4]),
+                batch_deq: *rng.choose(&[1usize, 2, 4]),
                 ring_size: 256,
                 ..Default::default()
             };

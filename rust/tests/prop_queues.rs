@@ -12,7 +12,9 @@ use persiq::pmem::{PmemConfig, PmemPool};
 use persiq::queues::{persistent_registry, QueueConfig, QueueCtx};
 use persiq::util::rng::Xoshiro256;
 use persiq::verify::proptest::{forall, PropConfig};
-use persiq::verify::{check_relaxed, relaxation_for, History};
+use persiq::verify::{
+    check, check_relaxed, check_with, relaxation_for, CheckOptions, History,
+};
 
 #[test]
 fn prop_durable_linearizability_under_random_crashes() {
@@ -63,6 +65,91 @@ fn prop_durable_linearizability_under_random_crashes() {
             if !rep.ok() {
                 return Err(format!("{name}: {:?}", rep.violations));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crash_during_dequeue_batch_reconciles_exactly() {
+    // Consumer-side group commit: kill workers mid-batch (the crash lands
+    // at arbitrary pmem primitives, including inside a flush's psync) and
+    // assert the verifier accepts exactly the reconciled history — no
+    // enqueued value lost, no duplicate delivery beyond the K−1 per-thread
+    // trailing-redelivery window of each crashed epoch, and the absorbed
+    // redeliveries stay within the hard bound the contract promises.
+    install_quiet_crash_hook();
+    forall(PropConfig { cases: 8, seed: 0xDEC0DE }, |rng, _case| {
+        let nthreads = 2 + rng.next_below(3) as usize; // 2..4
+        let shards = 1 + rng.next_below(4) as usize; // 1..4
+        let batch = *rng.choose(&[1usize, 2, 4, 8]);
+        let batch_deq = *rng.choose(&[2usize, 4, 8]); // always batched deqs
+        let cycles = 1 + rng.next_below(3); // 1..3
+        let ctx = QueueCtx {
+            pool: Arc::new(PmemPool::new(PmemConfig {
+                capacity_words: 1 << 23,
+                evict_prob: rng.next_f64() * 0.5,
+                pending_flush_prob: rng.next_f64(),
+                seed: rng.next_u64(),
+                ..Default::default()
+            })),
+            nthreads,
+            cfg: QueueConfig {
+                shards,
+                batch,
+                batch_deq,
+                ring_size: 128,
+                ..Default::default()
+            },
+        };
+        let q = persiq::queues::persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
+        let qc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
+        let mut crash_rng = Xoshiro256::seed_from(rng.next_u64());
+        let mut logs = Vec::new();
+        for cycle in 0..cycles {
+            ctx.pool.arm_crash_after(4_000 + rng.next_below(20_000));
+            let r = run_workload(
+                &ctx.pool,
+                &qc,
+                &RunConfig {
+                    nthreads,
+                    total_ops: 30_000,
+                    workload: Workload::Pairs,
+                    record: true,
+                    salt: cycle + 1,
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                },
+            );
+            logs.extend(r.logs);
+            ctx.pool.crash(&mut crash_rng);
+            q.recover(&ctx.pool);
+        }
+        let drained = drain_all(&qc, 0);
+        let h = History::from_logs(logs, drained);
+        let opts = CheckOptions {
+            max_report: 10,
+            relaxation: relaxation_for("sharded-perlcrq", nthreads, &ctx.cfg),
+            trailing_loss_per_thread: batch - 1,
+            trailing_redelivery_per_thread: batch_deq - 1,
+            crashed_epochs: cycles,
+            check_empty: batch <= 1,
+        };
+        let rep = check_with(&h, &opts);
+        if !rep.ok() {
+            return Err(format!(
+                "shards={shards} batch={batch} batch_deq={batch_deq}: {:?} \
+                 (max_overtakes={})",
+                rep.violations, rep.max_overtakes
+            ));
+        }
+        // Exactness: the allowance is a hard per-thread-per-epoch bound.
+        let cap = (batch_deq - 1) * nthreads * cycles as usize;
+        if rep.absorbed_redelivered > cap {
+            return Err(format!(
+                "absorbed {} redeliveries, contract caps at {cap}",
+                rep.absorbed_redelivered
+            ));
         }
         Ok(())
     });
