@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use persiq::harness::runner::{drain_all, run_workload, RunConfig};
 use persiq::pmem::crash::install_quiet_crash_hook;
-use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::pmem::{PmemConfig, Topology};
 use persiq::queues::{persistent_registry, QueueConfig, QueueCtx};
 use persiq::util::rng::Xoshiro256;
 use persiq::verify::{check_relaxed, relaxation_for, History};
@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     let mut failures = 0;
     for (name, ctor) in persistent_registry() {
         let ctx = QueueCtx {
-            pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 23))),
+            topo: Topology::single(PmemConfig::default().with_capacity(1 << 23)),
             nthreads,
             cfg: QueueConfig::default(),
         };
@@ -37,9 +37,9 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Xoshiro256::split(seed, 99);
         let mut logs = Vec::new();
         for cycle in 0..cycles {
-            ctx.pool.arm_crash_after(20_000 + rng.next_below(30_000));
+            ctx.topo.arm_crash_after(20_000 + rng.next_below(30_000));
             let r = run_workload(
-                &ctx.pool,
+                &ctx.topo,
                 &qc,
                 &RunConfig {
                     nthreads,
@@ -51,8 +51,8 @@ fn main() -> anyhow::Result<()> {
                 },
             );
             logs.extend(r.logs);
-            ctx.pool.crash(&mut rng);
-            q.recover(&ctx.pool);
+            ctx.topo.crash(&mut rng);
+            q.recover(ctx.pool());
         }
         let drained = drain_all(&qc, 0);
         let h = History::from_logs(logs, drained);

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use persiq::coordinator::{run_service, Broker, ServiceConfig};
 use persiq::pmem::crash::install_quiet_crash_hook;
-use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::pmem::{PmemConfig, Topology};
 use persiq::runtime::MetricsEngine;
 use persiq::util::report::fnum;
 
@@ -24,15 +24,15 @@ fn main() -> anyhow::Result<()> {
 
     let producers = 2;
     let workers = 2;
-    let pool = Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 24)));
-    let broker = Arc::new(Broker::new(&pool, producers + workers, 1 << 18, 1 << 10));
+    let topo = Topology::single(PmemConfig::default().with_capacity(1 << 24));
+    let broker = Arc::new(Broker::new_on(&topo, producers + workers, 1 << 18, 1 << 10));
 
     println!(
         "task broker: {producers} producers x {jobs} jobs, {workers} workers, \
          {crash_cycles} crash/recovery cycles"
     );
     let rep = run_service(
-        &pool,
+        &topo,
         &broker,
         &ServiceConfig {
             producers,

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use persiq::harness::failure::{mean_recovery_sim_ns, run_cycles, CycleConfig};
 use persiq::harness::runner::{run_workload, RunConfig};
 use persiq::pmem::crash::install_quiet_crash_hook;
-use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::pmem::PmemConfig;
 use persiq::queues::{persistent_by_name, QueueConfig, QueueCtx};
 use persiq::util::report::{fnum, Csv};
 
@@ -32,27 +32,27 @@ fn main() -> anyhow::Result<()> {
         let qcfg =
             QueueConfig { periq_tail_interval: k, iq_capacity: 1 << 20, ..Default::default() };
         // Throughput leg.
-        let ctx = QueueCtx {
-            pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 23))),
-            nthreads: 8,
-            cfg: qcfg.clone(),
-        };
+        let ctx = QueueCtx::single(
+            PmemConfig::default().with_capacity(1 << 23),
+            8,
+            qcfg.clone(),
+        );
         let q = persistent_by_name("periq").unwrap()(&ctx);
         let qc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
         let r = run_workload(
-            &ctx.pool,
+            &ctx.topo,
             &qc,
             &RunConfig { nthreads: 8, total_ops: ops, ..Default::default() },
         );
         // Recovery leg (fresh pool; 3 cycles).
-        let ctx2 = QueueCtx {
-            pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 23))),
-            nthreads: 4,
-            cfg: qcfg,
-        };
+        let ctx2 = QueueCtx::single(
+            PmemConfig::default().with_capacity(1 << 23),
+            4,
+            qcfg,
+        );
         let q2 = persistent_by_name("periq").unwrap()(&ctx2);
         let res = run_cycles(
-            &ctx2.pool,
+            &ctx2.topo,
             &q2,
             &CycleConfig {
                 cycles: 3,

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
             let c = common::ctx_with(4, qcfg.clone());
             let q = persistent_by_name("periq").unwrap()(&c);
             let res = run_cycles(
-                &c.pool,
+                &c.topo,
                 &q,
                 &CycleConfig {
                     cycles: 3,

@@ -1,18 +1,22 @@
 //! Shared bench scaffolding (each bench target includes this by `#[path]`).
 
-use std::sync::Arc;
-
 use persiq::config::Config;
 use persiq::harness::runner::{run_workload, RunConfig};
 use persiq::harness::Workload;
-use persiq::pmem::PmemPool;
+use persiq::pmem::Topology;
 use persiq::queues::{by_name, QueueConfig, QueueCtx};
 
-/// Build a queue context with the given thread count + queue config.
+/// Build a queue context with the given thread count + queue config
+/// (single-pool topology).
 pub fn ctx_with(nthreads: usize, qcfg: QueueConfig) -> QueueCtx {
+    ctx_with_pools(nthreads, qcfg, 1)
+}
+
+/// Build a queue context over an `npools`-socket topology.
+pub fn ctx_with_pools(nthreads: usize, qcfg: QueueConfig, npools: usize) -> QueueCtx {
     let mut cfg = Config::load_default();
     cfg.queue = qcfg;
-    QueueCtx { pool: Arc::new(PmemPool::new(cfg.pmem.clone())), nthreads, cfg: cfg.queue }
+    QueueCtx { topo: Topology::new(cfg.pmem.clone(), npools), nthreads, cfg: cfg.queue }
 }
 
 /// One throughput point: run `algo` and return simulated Mops/s.
@@ -20,7 +24,7 @@ pub fn tput_point(algo: &str, nthreads: usize, ops: u64, qcfg: QueueConfig, seed
     let c = ctx_with(nthreads, qcfg);
     let q = by_name(algo).unwrap_or_else(|| panic!("unknown algo {algo}"))(&c);
     let r = run_workload(
-        &c.pool,
+        &c.topo,
         &q,
         &RunConfig { nthreads, total_ops: ops, workload: Workload::Pairs, seed, ..Default::default() },
     );
@@ -38,11 +42,11 @@ pub fn tput_point_extra(
     let c = ctx_with(nthreads, qcfg);
     let q = by_name(algo).unwrap_or_else(|| panic!("unknown algo {algo}"))(&c);
     let r = run_workload(
-        &c.pool,
+        &c.topo,
         &q,
         &RunConfig { nthreads, total_ops: ops, workload: Workload::Pairs, seed, ..Default::default() },
     );
-    let t = c.pool.stats.total();
+    let t = c.topo.stats_total();
     let per = |x: u64| x as f64 / r.ops_done.max(1) as f64;
     (
         r.sim_mops,

@@ -8,8 +8,6 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use std::sync::Arc;
-
 use persiq::harness::bench::Suite;
 use persiq::harness::failure::{mean_recovery_sim_ns, run_cycles, CycleConfig};
 use persiq::harness::runner::RunConfig;
@@ -32,7 +30,7 @@ fn main() -> anyhow::Result<()> {
                     ..Default::default()
                 };
                 let c = common::ctx_with(4, qcfg.clone());
-                c.pool.set_active_threads(4);
+                c.topo.set_active_threads(4);
                 // (ctor reads periq_tail_interval from the ctx config)
                 let q = persistent_by_name("periq").unwrap()(&c);
                 // Crash *after* roughly `ops` operations: the step budget
@@ -43,7 +41,7 @@ fn main() -> anyhow::Result<()> {
                     run: RunConfig { nthreads: 4, total_ops: u64::MAX / 2, ..Default::default() },
                     seed: 44,
                 };
-                let res = run_cycles(&c.pool, &q, &ccfg);
+                let res = run_cycles(&c.topo, &q, &ccfg);
                 mean_recovery_sim_ns(&res) / 1e3 // µs simulated
             });
         }

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
                     std::sync::Arc::clone(&q) as _;
                 // Fill to the target size.
                 let r = run_workload(
-                    &c.pool,
+                    &c.topo,
                     &qc,
                     &RunConfig {
                         nthreads: 4,
@@ -47,10 +47,10 @@ fn main() -> anyhow::Result<()> {
                 );
                 assert_eq!(r.ops_done, size);
                 let mut rng = Xoshiro256::seed_from(45);
-                c.pool.crash(&mut rng);
-                c.pool.reset_meter();
-                q.recover(&c.pool);
-                c.pool.vtime(0) as f64 / 1e3 // µs simulated
+                c.topo.crash(&mut rng);
+                c.topo.reset_meter();
+                q.recover(c.pool());
+                c.topo.vtime(0) as f64 / 1e3 // µs simulated
             });
         }
     }

@@ -8,25 +8,21 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use std::sync::Arc;
-
 use persiq::harness::bench::{bench_ops, Suite};
 use persiq::harness::runner::{run_workload, RunConfig};
 use persiq::pmem::crash::install_quiet_crash_hook;
-use persiq::pmem::{CostModel, PmemConfig, PmemPool};
+use persiq::pmem::{CostModel, PmemConfig};
 use persiq::queues::{by_name, QueueConfig, QueueCtx};
 
 fn point(algo: &str, cost: &CostModel, ops: u64) -> f64 {
-    let ctx = QueueCtx {
-        pool: Arc::new(PmemPool::new(
-            PmemConfig::default().with_capacity(1 << 22).with_cost(cost.clone()),
-        )),
-        nthreads: 48,
-        cfg: QueueConfig::default(),
-    };
+    let ctx = QueueCtx::single(
+        PmemConfig::default().with_capacity(1 << 22).with_cost(cost.clone()),
+        48,
+        QueueConfig::default(),
+    );
     let q = by_name(algo).unwrap()(&ctx);
     run_workload(
-        &ctx.pool,
+        &ctx.topo,
         &q,
         &RunConfig { nthreads: 48, total_ops: ops, seed: 52, ..Default::default() },
     )

@@ -20,6 +20,10 @@
 //! batch = 1           # sharded-perlcrq enqueue group-commit size (1 = per-op)
 //! batch_deq = 1       # sharded-perlcrq dequeue group-commit size (1 = per-op)
 //!
+//! [topology]
+//! pools = 1                  # NVM pools (sockets), each with its own bandwidth chain
+//! placement = "interleave"   # interleave | colocate | pinned:<p0,p1,...>
+//!
 //! [bench]
 //! ops = 200000
 //! seed = 42
@@ -27,7 +31,7 @@
 
 use std::path::Path;
 
-use crate::pmem::{CostModel, PmemConfig};
+use crate::pmem::{CostModel, PlacementPolicy, PmemConfig, Topology, MAX_POOLS};
 use crate::queues::QueueConfig;
 use crate::util::toml::Doc;
 
@@ -36,6 +40,9 @@ use crate::util::toml::Doc;
 pub struct Config {
     pub pmem: PmemConfig,
     pub queue: QueueConfig,
+    /// NVM pools (sockets) in the topology; each gets its own
+    /// `pmem.capacity_words`-sized arena and bandwidth chain.
+    pub pools: usize,
     pub bench_ops: u64,
     pub seed: u64,
 }
@@ -45,6 +52,7 @@ impl Default for Config {
         Self {
             pmem: PmemConfig::default().with_capacity(1 << 22),
             queue: QueueConfig::default(),
+            pools: 1,
             bench_ops: 200_000,
             seed: 42,
         }
@@ -98,9 +106,37 @@ impl Config {
         c.queue.batch_deq =
             doc.get_u64("queue", "batch_deq", c.queue.batch_deq as u64) as usize;
 
+        let pools = doc.get_u64("topology", "pools", c.pools as u64) as usize;
+        if pools < 1 || pools > MAX_POOLS {
+            // Config-file parsing is lenient throughout (bad keys fall
+            // back with a warning, like placement below) — the CLI layer
+            // re-validates with a hard error.
+            crate::log_warn!(
+                "ignoring [topology] pools = {pools} (must be in 1..={MAX_POOLS})"
+            );
+        } else {
+            c.pools = pools;
+        }
+        let placement = doc.get_str("topology", "placement", "");
+        if !placement.is_empty() {
+            match PlacementPolicy::parse(placement) {
+                Ok(p) => c.queue.placement = p,
+                Err(e) => crate::log_warn!("ignoring [topology] placement: {e}"),
+            }
+        }
+
         c.bench_ops = doc.get_u64("bench", "ops", c.bench_ops);
         c.seed = doc.get_u64("bench", "seed", c.seed);
         c
+    }
+
+    /// Build the NVM topology this configuration describes (`pools`
+    /// pools of `pmem` each, homes assigned round-robin). `from_doc`
+    /// rejects out-of-range counts at parse time and the CLI re-validates
+    /// with a hard error; the clamp here only guards programmatic
+    /// `Config` construction with a bad literal.
+    pub fn build_topology(&self) -> Topology {
+        Topology::new(self.pmem.clone(), self.pools.clamp(1, MAX_POOLS))
     }
 }
 
@@ -130,5 +166,42 @@ mod tests {
         assert_eq!(c.seed, 8);
         // Untouched keys keep defaults.
         assert_eq!(c.pmem.cost.psync_ns, CostModel::default().psync_ns);
+        assert_eq!(c.pools, 1);
+        assert_eq!(c.queue.placement, crate::pmem::PlacementPolicy::Interleave);
+    }
+
+    #[test]
+    fn topology_section_overrides() {
+        let doc = crate::util::toml::parse(
+            "[topology]\npools = 2\nplacement = \"colocate\"\n\
+             [pmem.cost]\nremote_pwb_ns = 240\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.pools, 2);
+        assert_eq!(c.queue.placement, crate::pmem::PlacementPolicy::Colocate);
+        assert_eq!(c.pmem.cost.remote_pwb_ns, 240);
+        let topo = c.build_topology();
+        assert_eq!(topo.len(), 2);
+        assert_eq!(topo.home_of(1), 1);
+        // Pinned parses too.
+        let doc =
+            crate::util::toml::parse("[topology]\npools = 2\nplacement = \"pinned:1,0\"\n")
+                .unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(
+            c.queue.placement,
+            crate::pmem::PlacementPolicy::Pinned(vec![1, 0])
+        );
+        // A bad placement string is ignored with a warning, not fatal.
+        let doc = crate::util::toml::parse("[topology]\nplacement = \"nearest\"\n").unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.queue.placement, crate::pmem::PlacementPolicy::Interleave);
+        // An out-of-range pool count is likewise rejected leniently at
+        // parse time (the CLI layer hard-errors instead).
+        let doc = crate::util::toml::parse("[topology]\npools = 99\n").unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.pools, 1, "out-of-range [topology] pools must fall back");
+        assert_eq!(c.build_topology().len(), 1);
     }
 }

@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::pmem::{run_guarded, PmemPool};
+use crate::pmem::{run_guarded, Topology};
 use crate::util::rng::Xoshiro256;
 use crate::util::time::Stopwatch;
 
@@ -58,7 +58,7 @@ pub struct ServiceReport {
 /// the last cycle workers drain everything left. The final audit must show
 /// every submitted job done exactly once.
 pub fn run_service(
-    pool: &Arc<PmemPool>,
+    topo: &Topology,
     broker: &Arc<Broker>,
     cfg: &ServiceConfig,
 ) -> Result<ServiceReport> {
@@ -72,7 +72,7 @@ pub fn run_service(
     for cycle in 0..cycles {
         let crashing = cfg.crash_cycles > 0;
         if crashing {
-            pool.arm_crash_after(cfg.crash_steps);
+            topo.arm_crash_after(cfg.crash_steps);
         }
         let mut handles = Vec::new();
         // Producers: tids [0, producers).
@@ -97,7 +97,7 @@ pub fn run_service(
         let total_target = cfg.producers * cfg.jobs_per_producer;
         for w in 0..cfg.workers {
             let broker = Arc::clone(broker);
-            let pool = Arc::clone(pool);
+            let topo = topo.clone();
             let processed = Arc::clone(&processed);
             let samples = Arc::clone(&samples);
             let wtid = cfg.producers + w;
@@ -109,7 +109,7 @@ pub fn run_service(
                     // Drain until the queue stays empty (producers done)
                     // or the epoch target is safely exceeded.
                     while idle < 2_000 {
-                        let t0 = pool.vtime(wtid);
+                        let t0 = topo.vtime(wtid);
                         match broker.take(wtid).unwrap() {
                             Some((jid, _payload)) => {
                                 idle = 0;
@@ -117,7 +117,7 @@ pub fn run_service(
                                 // the work product.
                                 if broker.complete(wtid, jid).unwrap() {
                                     processed.fetch_add(1, Ordering::Relaxed);
-                                    my_samples.push((pool.vtime(wtid) - t0) as f64);
+                                    my_samples.push((topo.vtime(wtid) - t0) as f64);
                                 }
                             }
                             None => {
@@ -143,7 +143,7 @@ pub fn run_service(
             h.join().expect("service thread panicked");
         }
         if crashing {
-            pool.crash(&mut rng);
+            topo.crash(&mut rng);
             broker.recover();
             crashes += 1;
         }
@@ -178,21 +178,21 @@ mod tests {
     use crate::pmem::crash::install_quiet_crash_hook;
     use crate::pmem::{CostModel, PmemConfig};
 
-    fn mk(cap: usize) -> (Arc<PmemPool>, Arc<Broker>) {
-        let pool = Arc::new(PmemPool::new(PmemConfig {
+    fn mk(cap: usize) -> (Topology, Arc<Broker>) {
+        let topo = Topology::single(PmemConfig {
             capacity_words: cap,
             cost: CostModel::zero(),
             evict_prob: 0.25,
             pending_flush_prob: 0.5,
             seed: 9,
-        }));
-        let broker = Arc::new(Broker::new(&pool, 8, 1 << 16, 1 << 10));
-        (pool, broker)
+        });
+        let broker = Arc::new(Broker::new_on(&topo, 8, 1 << 16, 1 << 10));
+        (topo, broker)
     }
 
     #[test]
     fn clean_run_processes_everything() {
-        let (pool, broker) = mk(1 << 22);
+        let (topo, broker) = mk(1 << 22);
         let cfg = ServiceConfig {
             producers: 2,
             workers: 2,
@@ -200,7 +200,7 @@ mod tests {
             crash_cycles: 0,
             ..Default::default()
         };
-        let rep = run_service(&pool, &broker, &cfg).unwrap();
+        let rep = run_service(&topo, &broker, &cfg).unwrap();
         assert_eq!(rep.submitted, 400);
         assert_eq!(rep.done, 400);
         assert_eq!(rep.pending_after, 0);
@@ -210,7 +210,7 @@ mod tests {
     #[test]
     fn crash_cycles_lose_nothing_complete_once() {
         install_quiet_crash_hook();
-        let (pool, broker) = mk(1 << 23);
+        let (topo, broker) = mk(1 << 23);
         let cfg = ServiceConfig {
             producers: 2,
             workers: 2,
@@ -219,7 +219,7 @@ mod tests {
             crash_steps: 30_000,
             seed: 1,
         };
-        let rep = run_service(&pool, &broker, &cfg).unwrap();
+        let rep = run_service(&topo, &broker, &cfg).unwrap();
         assert_eq!(rep.crashes, 3);
         assert_eq!(
             rep.done, rep.submitted,

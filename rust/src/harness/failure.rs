@@ -16,7 +16,7 @@
 
 use std::sync::Arc;
 
-use crate::pmem::PmemPool;
+use crate::pmem::Topology;
 use crate::queues::PersistentQueue;
 use crate::util::rng::Xoshiro256;
 use crate::util::time::Stopwatch;
@@ -65,7 +65,7 @@ pub struct CycleResult {
 /// the crash → run the recovery function, measured. Returns per-cycle
 /// results (callers average the recovery cost, as in Figures 4–5).
 pub fn run_cycles(
-    pool: &Arc<PmemPool>,
+    topo: &Topology,
     queue: &Arc<dyn PersistentQueue>,
     cfg: &CycleConfig,
 ) -> Vec<CycleResult> {
@@ -76,26 +76,26 @@ pub fn run_cycles(
         // --- Part 1: normal execution with the countdown armed ---
         let jitter = cfg.steps / 4;
         let steps = cfg.steps - jitter + rng.next_below(2 * jitter + 1);
-        pool.arm_crash_after(steps);
+        topo.arm_crash_after(steps);
         let mut run_cfg = cfg.run.clone();
         run_cfg.salt = (cycle as u64 + 1) & 0xFFF; // unique values per cycle
         run_cfg.seed = cfg.run.seed ^ (cycle as u64) << 32;
-        let run = run_workload(pool, &as_conc, &run_cfg);
+        let run = run_workload(topo, &as_conc, &run_cfg);
 
-        // --- Part 2: the crash ---
-        pool.crash(&mut rng);
+        // --- Part 2: the crash (one cut across every pool) ---
+        topo.crash(&mut rng);
 
         // --- Part 3: recovery (the measured part) ---
-        pool.reset_meter();
-        let before = pool.stats.total();
+        topo.reset_meter();
+        let before = topo.stats_total();
         let sw = Stopwatch::start();
-        queue.recover(pool);
+        queue.recover(topo.primary());
         let wall = sw.elapsed_secs();
-        let after = pool.stats.total();
+        let after = topo.stats_total();
         out.push(CycleResult {
             ops_before_crash: run.ops_done,
             recovery_wall_secs: wall,
-            recovery_sim_ns: pool.vtime(0),
+            recovery_sim_ns: topo.vtime(0),
             recovery_loads: after.loads - before.loads,
             recovery_stores: after.stores - before.stores,
             run,
@@ -128,17 +128,17 @@ mod tests {
     use crate::queues::{persistent_by_name, QueueConfig, QueueCtx};
 
     fn ctx() -> QueueCtx {
-        QueueCtx {
-            pool: Arc::new(PmemPool::new(PmemConfig {
+        QueueCtx::single(
+            PmemConfig {
                 capacity_words: 1 << 22,
                 cost: CostModel::default(),
                 evict_prob: 0.25,
                 pending_flush_prob: 0.5,
                 seed: 17,
-            })),
-            nthreads: 4,
-            cfg: QueueConfig::default(),
-        }
+            },
+            4,
+            QueueConfig::default(),
+        )
     }
 
     #[test]
@@ -152,13 +152,13 @@ mod tests {
             run: RunConfig { nthreads: 4, total_ops: 1_000_000, ..Default::default() },
             seed: 5,
         };
-        let res = run_cycles(&c.pool, &q, &cfg);
+        let res = run_cycles(&c.topo, &q, &cfg);
         assert_eq!(res.len(), 3);
         for r in &res {
             assert!(r.run.crashed, "the countdown must interrupt the run");
             assert!(r.recovery_loads > 0, "recovery must read NVM");
         }
-        assert_eq!(c.pool.epoch(), 3);
+        assert_eq!(c.topo.epoch(), 3);
         // The queue is alive after the last recovery.
         q.enqueue(0, 12345).unwrap();
         assert!(q.dequeue(1).unwrap().is_some());
@@ -175,7 +175,7 @@ mod tests {
             run: RunConfig { nthreads: 4, total_ops: 1_000_000, ..Default::default() },
             seed: 6,
         };
-        let res = run_cycles(&c.pool, &q, &cfg);
+        let res = run_cycles(&c.topo, &q, &cfg);
         assert!(mean_recovery_secs(&res) >= 0.0);
         assert!(mean_recovery_sim_ns(&res) > 0.0);
     }

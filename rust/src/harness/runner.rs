@@ -10,7 +10,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::pmem::{run_guarded, PmemPool};
+use crate::pmem::{run_guarded, Topology};
 use crate::queues::ConcurrentQueue;
 use crate::util::rng::Xoshiro256;
 use crate::util::time::Stopwatch;
@@ -90,17 +90,17 @@ impl RunResult {
     }
 }
 
-/// Run `cfg.workload` over `queue`. Resets the pool meter first so
-/// `sim_ns` reflects only this run. If a crash is armed on the pool the
-/// run may end early with `crashed = true` (the caller then drives
+/// Run `cfg.workload` over `queue`. Resets the topology meter first so
+/// `sim_ns` reflects only this run. If a crash is armed on the topology
+/// the run may end early with `crashed = true` (the caller then drives
 /// crash/recovery — see [`super::failure`]).
 pub fn run_workload(
-    pool: &Arc<PmemPool>,
+    topo: &Topology,
     queue: &Arc<dyn ConcurrentQueue>,
     cfg: &RunConfig,
 ) -> RunResult {
-    pool.reset_meter();
-    pool.set_active_threads(cfg.nthreads);
+    topo.reset_meter();
+    topo.set_active_threads(cfg.nthreads);
     let recorder = Recorder::new();
     let ops_per_thread = (cfg.total_ops / cfg.nthreads as u64).max(1);
     let done = Arc::new(AtomicU64::new(0));
@@ -112,7 +112,7 @@ pub fn run_workload(
     let sw = Stopwatch::start();
     let mut handles = Vec::new();
     for tid in 0..cfg.nthreads {
-        let pool = Arc::clone(pool);
+        let topo = topo.clone();
         let queue = Arc::clone(queue);
         let recorder = Arc::clone(&recorder);
         let (done, enq_ct, deq_ct, empty_ct, crashed) = (
@@ -137,7 +137,7 @@ pub fn run_workload(
                     if cfg.yield_prob > 0.0 && rng.chance(cfg.yield_prob) {
                         std::thread::yield_now();
                     }
-                    let t0 = if cfg.sample_every > 0 { pool.vtime(tid) } else { 0 };
+                    let t0 = if cfg.sample_every > 0 { topo.vtime(tid) } else { 0 };
                     if cfg.workload.is_enqueue(k, &mut rng) {
                         let v = value_for(cfg.salt, tid, counter);
                         counter += 1;
@@ -145,7 +145,7 @@ pub fn run_workload(
                             recorder.record(
                                 &mut log,
                                 tid,
-                                pool.epoch(),
+                                topo.epoch(),
                                 EventKind::EnqInvoke { value: v },
                             );
                         }
@@ -154,14 +154,14 @@ pub fn run_workload(
                             recorder.record(
                                 &mut log,
                                 tid,
-                                pool.epoch(),
+                                topo.epoch(),
                                 EventKind::EnqOk { value: v },
                             );
                         }
                         my_enq += 1;
                     } else {
                         if cfg.record {
-                            recorder.record(&mut log, tid, pool.epoch(), EventKind::DeqInvoke);
+                            recorder.record(&mut log, tid, topo.epoch(), EventKind::DeqInvoke);
                         }
                         match queue.dequeue(tid).expect("dequeue failed") {
                             Some(v) => {
@@ -169,7 +169,7 @@ pub fn run_workload(
                                     recorder.record(
                                         &mut log,
                                         tid,
-                                        pool.epoch(),
+                                        topo.epoch(),
                                         EventKind::DeqOk { value: v },
                                     );
                                 }
@@ -180,7 +180,7 @@ pub fn run_workload(
                                     recorder.record(
                                         &mut log,
                                         tid,
-                                        pool.epoch(),
+                                        topo.epoch(),
                                         EventKind::DeqEmpty,
                                     );
                                 }
@@ -190,7 +190,7 @@ pub fn run_workload(
                     }
                     my_done += 1;
                     if cfg.sample_every > 0 && k % cfg.sample_every == 0 {
-                        samples.push((pool.vtime(tid) - t0) as f64);
+                        samples.push((topo.vtime(tid) - t0) as f64);
                     }
                 }
             });
@@ -219,7 +219,7 @@ pub fn run_workload(
         dequeues: deq_ct.load(Ordering::Relaxed),
         empties: empty_ct.load(Ordering::Relaxed),
         wall_secs: sw.elapsed_secs(),
-        sim_ns: pool.max_vtime(),
+        sim_ns: topo.max_vtime(),
         crashed: crashed.load(Ordering::Relaxed) > 0,
         logs,
         latency_samples,
@@ -247,17 +247,17 @@ mod tests {
     use crate::verify::{check, History};
 
     fn ctx(cap: usize) -> QueueCtx {
-        QueueCtx {
-            pool: Arc::new(PmemPool::new(PmemConfig {
+        QueueCtx::single(
+            PmemConfig {
                 capacity_words: cap,
                 cost: CostModel::default(),
                 evict_prob: 0.0,
                 pending_flush_prob: 0.0,
                 seed: 7,
-            })),
-            nthreads: 4,
-            cfg: QueueConfig::default(),
-        }
+            },
+            4,
+            QueueConfig::default(),
+        )
     }
 
     #[test]
@@ -265,7 +265,7 @@ mod tests {
         let c = ctx(1 << 21);
         let q = by_name("perlcrq").unwrap()(&c);
         let cfg = RunConfig { nthreads: 4, total_ops: 8_000, ..Default::default() };
-        let r = run_workload(&c.pool, &q, &cfg);
+        let r = run_workload(&c.topo, &q, &cfg);
         assert_eq!(r.ops_done, 8_000);
         assert!(r.sim_ns > 0, "virtual time must advance");
         assert!(r.sim_mops > 0.0);
@@ -284,7 +284,7 @@ mod tests {
             record: true,
             ..Default::default()
         };
-        let r = run_workload(&c.pool, &q, &cfg);
+        let r = run_workload(&c.topo, &q, &cfg);
         let drain = drain_all(&q, 0);
         let h = History::from_logs(r.logs, drain);
         let rep = check(&h, 5);
@@ -302,7 +302,7 @@ mod tests {
             sample_every: 10,
             ..Default::default()
         };
-        let r = run_workload(&c.pool, &q, &cfg);
+        let r = run_workload(&c.topo, &q, &cfg);
         let n: usize = r.latency_samples.iter().map(|s| s.len()).sum();
         assert!(n >= 190, "expected ~200 samples, got {n}");
         assert!(r.latency_samples.iter().flatten().all(|&x| x >= 0.0));
@@ -316,14 +316,14 @@ mod tests {
         let c1 = ctx(1 << 21);
         let q1 = by_name("perlcrq").unwrap()(&c1);
         let r1 = run_workload(
-            &c1.pool,
+            &c1.topo,
             &q1,
             &RunConfig { nthreads: 1, total_ops: 4_000, ..Default::default() },
         );
         let c4 = ctx(1 << 21);
         let q4 = by_name("perlcrq").unwrap()(&c4);
         let r4 = run_workload(
-            &c4.pool,
+            &c4.topo,
             &q4,
             &RunConfig { nthreads: 4, total_ops: 4_000, ..Default::default() },
         );

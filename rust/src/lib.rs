@@ -13,6 +13,11 @@
 //!   lines each have a *live* (cache) and a *shadow* (NVM) copy; `pwb`,
 //!   `pfence`, `psync` primitives with a calibrated latency/contention cost
 //!   model; full-system crash simulation with nondeterministic line eviction.
+//!   [`pmem::Topology`] groups several pools into a multi-socket NVM
+//!   topology: per-socket bandwidth chains, round-robin thread homes,
+//!   cross-socket `pwb`/RMW penalties, and a coordinated machine-wide
+//!   crash cut — with pool-qualified [`pmem::GAddr`] addressing and
+//!   shard-placement policies (`interleave` | `colocate` | `pinned`).
 //! * [`queues`] — the paper's algorithm family: IQ / PerIQ (Alg. 1, 6),
 //!   CRQ / PerCRQ (Alg. 3), LCRQ / PerLCRQ (Alg. 5), plus the baselines its
 //!   evaluation compares against: Michael–Scott queue, a durable MS queue,

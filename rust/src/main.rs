@@ -9,6 +9,9 @@
 //! persiq verify    --algo sharded-perlcrq --shards 4 --cycles 10
 //! persiq serve     --producers 2 --workers 2 --jobs 500 --crash-cycles 2
 //! persiq serve     --shards 4 --batch 4 --crash-cycles 2
+//! persiq bench     --algo sharded-perlcrq --pools 2 --placement colocate --shards 4
+//! persiq verify    --algo sharded-perlcrq --pools 2 --relax auto --cycles 5
+//! persiq audit     --pools 2 --placement colocate --batch 4 --batch-deq 4
 //! persiq micro                      # pmem primitive costs
 //! ```
 //!
@@ -27,7 +30,7 @@ use persiq::harness::failure::{mean_recovery_secs, mean_recovery_sim_ns};
 use persiq::harness::runner::{drain_all, run_workload};
 use persiq::harness::{run_cycles, CycleConfig, RunConfig, Workload};
 use persiq::pmem::crash::install_quiet_crash_hook;
-use persiq::pmem::{CostModel, MeterMode, PmemPool};
+use persiq::pmem::{CostModel, MeterMode, PlacementPolicy, PmemPool, MAX_POOLS};
 use persiq::queues::{
     by_name, persistent_by_name, persistent_names, registry, registry_names, QueueCtx,
 };
@@ -35,7 +38,9 @@ use persiq::runtime::MetricsEngine;
 use persiq::util::cli::{Args, Command};
 use persiq::util::report::{fnum, Csv};
 use persiq::util::rng::entropy_seed;
-use persiq::verify::{check_with, relaxation_for, CheckOptions, History};
+use persiq::verify::{
+    calibrate_relaxation, check_with, overtake_stats, relaxation_for, CheckOptions, History,
+};
 use persiq::{log_info, log_warn};
 
 fn main() {
@@ -63,6 +68,7 @@ fn run(args: &[String]) -> Result<()> {
         "recover" => cmd_recover(rest),
         "verify" => cmd_verify(rest),
         "serve" => cmd_serve(rest),
+        "audit" => cmd_audit(rest),
         "micro" => cmd_micro(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -81,6 +87,7 @@ fn usage_text() -> String {
          \x20 recover   crash/recovery cycles; recovery cost (paper §5)\n\
          \x20 verify    randomized crash workloads + durable-linearizability checker\n\
          \x20 serve     persistent task-broker service demo\n\
+         \x20 audit     broker SubmitLog <-> queue reconciliation dump\n\
          \x20 micro     pmem primitive cost microbenchmark\n\n\
          Run `persiq <cmd> --help` for options.",
         persiq::VERSION
@@ -101,11 +108,7 @@ fn cmd_list() -> Result<()> {
 }
 
 fn queue_ctx(cfg: &Config, nthreads: usize) -> QueueCtx {
-    QueueCtx {
-        pool: Arc::new(PmemPool::new(cfg.pmem.clone())),
-        nthreads,
-        cfg: cfg.queue.clone(),
-    }
+    QueueCtx { topo: cfg.build_topology(), nthreads, cfg: cfg.queue.clone() }
 }
 
 /// Resolve an `--algo` spec ("all" or a comma-separated list) against the
@@ -130,15 +133,34 @@ fn resolve_algos(spec: &str, persistent_only: bool) -> Result<Vec<String>> {
     Ok(out)
 }
 
-/// Apply the shared `--shards` / `--batch` / `--batch-deq` overrides to
-/// the queue config and validate it (surfacing `BadConfig` as a CLI error
-/// instead of a construction panic).
+/// Apply the shared `--shards` / `--batch` / `--batch-deq` / `--pools` /
+/// `--placement` overrides to the config and validate it (surfacing
+/// `BadConfig` as a CLI error instead of a construction panic).
 fn apply_queue_overrides(cfg: &mut Config, a: &Args) -> Result<()> {
     cfg.queue.shards = a.get_parse("shards", cfg.queue.shards)?;
     cfg.queue.batch = a.get_parse("batch", cfg.queue.batch)?;
     cfg.queue.batch_deq = a.get_parse("batch-deq", cfg.queue.batch_deq)?;
+    cfg.pools = a.get_parse("pools", cfg.pools)?;
+    anyhow::ensure!(
+        cfg.pools >= 1 && cfg.pools <= MAX_POOLS,
+        "pool count must be in 1..={MAX_POOLS} (--pools / [topology] pools)"
+    );
+    if let Some(p) = a.get("placement") {
+        cfg.queue.placement = PlacementPolicy::parse(p).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let PlacementPolicy::Pinned(list) = &cfg.queue.placement {
+        if let Some(&bad) = list.iter().find(|&&p| p >= cfg.pools) {
+            anyhow::bail!("pinned placement names pool {bad} but --pools is {}", cfg.pools);
+        }
+    }
     cfg.queue.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
     Ok(())
+}
+
+/// The shared topology options, appended to every workload subcommand.
+fn with_topology_opts(cmd: Command) -> Command {
+    cmd.opt("pools", "NVM pools (sockets), each with its own bandwidth chain (default 1)")
+        .opt("placement", "shard placement: interleave | colocate | pinned:<p0,p1,...>")
 }
 
 fn cmd_bench(args: &[String]) -> Result<()> {
@@ -156,6 +178,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         .opt("batch", "enqueue batch size for sharded algorithms (1 = per-op persistence)")
         .opt("batch-deq", "dequeue batch size for sharded algorithms (1 = per-op persistence)")
         .flag("latency", "also report latency percentiles via the metrics engine");
+    let cmd = with_topology_opts(cmd);
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
     apply_queue_overrides(&mut cfg, &a)?;
@@ -170,8 +193,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
 
     let engine = if want_latency { Some(MetricsEngine::auto()) } else { None };
     let mut csv = Csv::new(vec![
-        "algo", "threads", "sim_mops", "wall_mops", "pwbs_per_op", "psyncs_per_op", "p50_ns",
-        "p99_ns",
+        "algo", "threads", "sim_mops", "wall_mops", "pwbs_per_op", "psyncs_per_op",
+        "remote_per_op", "p50_ns", "p99_ns",
     ]);
     for algo in &algos {
         let ctor = by_name(algo).ok_or_else(|| anyhow::anyhow!("unknown algo {algo}"))?;
@@ -186,8 +209,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                 sample_every: if want_latency { 16 } else { 0 },
                 ..Default::default()
             };
-            let r = run_workload(&ctx.pool, &q, &rc);
-            let stats = ctx.pool.stats.total();
+            let r = run_workload(&ctx.topo, &q, &rc);
+            let stats = ctx.topo.stats_total();
             let (p50, p99) = if let Some(engine) = &engine {
                 let samples: Vec<f64> =
                     r.latency_samples.iter().flatten().cloned().collect();
@@ -203,6 +226,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                 fnum(r.wall_mops),
                 format!("{:.2}", stats.pwbs as f64 / r.ops_done.max(1) as f64),
                 format!("{:.2}", stats.psyncs as f64 / r.ops_done.max(1) as f64),
+                format!("{:.2}", stats.remote_ops as f64 / r.ops_done.max(1) as f64),
                 fnum(p50),
                 fnum(p99),
             ]);
@@ -225,6 +249,7 @@ fn cmd_recover(args: &[String]) -> Result<()> {
         .opt("batch", "enqueue batch size for sharded algorithms")
         .opt("batch-deq", "dequeue batch size for sharded algorithms")
         .opt("seed", "RNG seed");
+    let cmd = with_topology_opts(cmd);
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
     apply_queue_overrides(&mut cfg, &a)?;
@@ -246,7 +271,7 @@ fn cmd_recover(args: &[String]) -> Result<()> {
             },
             seed: a.get_parse("seed", entropy_seed())?,
         };
-        let res = run_cycles(&ctx.pool, &q, &ccfg);
+        let res = run_cycles(&ctx.topo, &q, &ccfg);
         let mut csv = Csv::new(vec![
             "cycle", "ops_before_crash", "recovery_us", "recovery_sim_us", "loads",
         ]);
@@ -280,8 +305,14 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         .opt("shards", "shard count for sharded algorithms")
         .opt("batch", "enqueue batch size for sharded algorithms")
         .opt("batch-deq", "dequeue batch size for sharded algorithms")
-        .opt("relax", "allowed FIFO overtakes per dequeue (default: auto per algorithm)")
+        .opt(
+            "relax",
+            "allowed FIFO overtakes per dequeue: a number, or 'auto' to calibrate the \
+             bound from the observed overtake distribution (default: static formula per \
+             algorithm)",
+        )
         .opt("seed", "RNG seed");
+    let cmd = with_topology_opts(cmd);
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
     apply_queue_overrides(&mut cfg, &a)?;
@@ -302,7 +333,7 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         let mut rng = persiq::util::rng::Xoshiro256::seed_from(seed);
         let mut logs: Vec<Vec<persiq::verify::Event>> = Vec::new();
         for cycle in 0..cycles {
-            ctx.pool.arm_crash_after(steps);
+            ctx.topo.arm_crash_after(steps);
             let rc = RunConfig {
                 nthreads,
                 total_ops: ops,
@@ -311,10 +342,10 @@ fn cmd_verify(args: &[String]) -> Result<()> {
                 seed: seed ^ (cycle as u64) << 16,
                 ..Default::default()
             };
-            let r = run_workload(&ctx.pool, &as_conc, &rc);
+            let r = run_workload(&ctx.topo, &as_conc, &rc);
             logs.extend(r.logs);
-            ctx.pool.crash(&mut rng);
-            q.recover(&ctx.pool);
+            ctx.topo.crash(&mut rng);
+            q.recover(ctx.pool());
         }
         let drained = drain_all(&as_conc, 0);
         let history = History::from_logs(logs, drained);
@@ -323,25 +354,68 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         let sharded = algo.starts_with("sharded");
         let batch = if sharded { cfg.queue.batch } else { 1 };
         let batch_deq = if sharded { cfg.queue.batch_deq } else { 1 };
-        let auto_relax = relaxation_for(algo, nthreads, &cfg.queue);
-        let opts = CheckOptions {
+        let static_relax = relaxation_for(algo, nthreads, &cfg.queue);
+        // Auto-calibration only applies to relaxed (sharded) algorithms:
+        // strict queues are checked at k = 0, and raising their bound to
+        // an observed-plus-headroom value would weaken the check.
+        let relax_auto = a.get("relax") == Some("auto") && sharded;
+        if a.get("relax") == Some("auto") && !sharded {
+            log_info!("{algo}: strict FIFO algorithm — --relax auto keeps k = 0");
+        }
+        let mut opts = CheckOptions {
             max_report: 10,
-            relaxation: a.get_parse("relax", auto_relax)?,
+            // "auto" keeps the static bound here (strict algorithms stay
+            // at k = 0; sharded ones are recalibrated below).
+            relaxation: if a.get("relax") == Some("auto") {
+                static_relax
+            } else {
+                a.get_parse("relax", static_relax)?
+            },
             trailing_loss_per_thread: batch.saturating_sub(1),
             // Consumer-side group commit: the last K−1 unflushed dequeues
             // of a crashed epoch may legitimately redeliver.
             trailing_redelivery_per_thread: batch_deq.saturating_sub(1),
-            // Every cycle above ended in pool.crash().
+            // Every cycle above ended in a topology-wide crash.
             crashed_epochs: cycles as u64,
             // Buffered durability: an EMPTY may race another thread's
             // unflushed batch — the interval check is unsound there.
             check_empty: batch <= 1,
+            collect_overtakes: false,
         };
+        let mut auto_note = String::new();
+        if relax_auto {
+            // Pass 1: measure the overtake distribution with the FIFO
+            // bound disabled, derive the calibrated k, then run the real
+            // check against it (all other axioms stay exact in both
+            // passes).
+            let probe = check_with(
+                &history,
+                &CheckOptions {
+                    relaxation: usize::MAX,
+                    collect_overtakes: true,
+                    max_report: 0,
+                    ..opts
+                },
+            );
+            let stats = overtake_stats(&probe.overtake_counts);
+            let k = calibrate_relaxation(&probe.overtake_counts);
+            auto_note = format!(
+                " [auto: k={k} from {} dequeues (p50={} p99={} max={}); static bound={}]",
+                stats.checked, stats.p50, stats.p99, stats.max, static_relax
+            );
+            if k > static_relax {
+                log_warn!(
+                    "{algo}: calibrated relaxation {k} exceeds the static bound \
+                     {static_relax} — the static formula is no longer conservative"
+                );
+            }
+            opts.relaxation = k;
+        }
         let rep = check_with(&history, &opts);
         let status = if rep.ok() { "OK " } else { "FAIL" };
         println!(
             "{status} {algo:<16} enq={} deq={} empties={} drained={} violations={} \
-             max_overtakes={} (relax={}) absorbed: crash={} trailing={} redelivered={}",
+             max_overtakes={} (relax={}) absorbed: crash={} trailing={} redelivered={}{}",
             rep.enq_completed,
             rep.deq_values,
             rep.deq_empties,
@@ -352,6 +426,7 @@ fn cmd_verify(args: &[String]) -> Result<()> {
             rep.absorbed_losses,
             rep.absorbed_trailing,
             rep.absorbed_redelivered,
+            auto_note,
         );
         for v in &rep.violations {
             log_warn!("  {algo}: {v:?}");
@@ -374,14 +449,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("batch", "enqueue batch size for the sharded work queue (implies --queue sharded)")
         .opt("batch-deq", "dequeue batch size for the sharded work queue (implies --queue sharded)")
         .opt("seed", "RNG seed");
+    let cmd = with_topology_opts(cmd);
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
     // The broker's queue kind is an explicit choice (config-file [queue]
-    // shards/batch only parameterize it); --shards/--batch imply sharded.
+    // shards/batch only parameterize it); --shards/--batch/--pools/
+    // --placement imply sharded (only the sharded queue spreads over a
+    // topology's pools).
     let sharded_broker = match a.get("queue").unwrap_or("perlcrq") {
         "sharded" => true,
         "perlcrq" => {
-            a.get("shards").is_some() || a.get("batch").is_some() || a.get("batch-deq").is_some()
+            a.get("shards").is_some()
+                || a.get("batch").is_some()
+                || a.get("batch-deq").is_some()
+                || a.get("pools").is_some()
+                || a.get("placement").is_some()
         }
         other => anyhow::bail!("unknown --queue {other:?} (perlcrq|sharded)"),
     };
@@ -396,22 +478,25 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         crash_steps: a.get_parse("steps", 50_000)?,
         seed: a.get_parse("seed", entropy_seed())?,
     };
-    let pool = Arc::new(PmemPool::new(cfg.pmem.clone()));
+    let topo = cfg.build_topology();
     let broker = if sharded_broker {
         log_info!(
-            "broker work queue: sharded-perlcrq (shards={}, batch={}, batch-deq={})",
+            "broker work queue: sharded-perlcrq (shards={}, batch={}, batch-deq={}, \
+             pools={}, placement={})",
             cfg.queue.shards,
             cfg.queue.batch,
-            cfg.queue.batch_deq
+            cfg.queue.batch_deq,
+            topo.len(),
+            cfg.queue.placement
         );
         Arc::new(
-            Broker::new_sharded(&pool, producers + workers, 1 << 16, cfg.queue.clone())
+            Broker::new_sharded(&topo, producers + workers, 1 << 16, cfg.queue.clone())
                 .map_err(|e| anyhow::anyhow!("{e}"))?,
         )
     } else {
-        Arc::new(Broker::new(&pool, producers + workers, 1 << 16, cfg.queue.ring_size))
+        Arc::new(Broker::new_on(&topo, producers + workers, 1 << 16, cfg.queue.ring_size))
     };
-    let rep = run_service(&pool, &broker, &scfg)?;
+    let rep = run_service(&topo, &broker, &scfg)?;
     println!(
         "broker: submitted={} done={} pending={} crashes={} wall={:.3}s",
         rep.submitted, rep.done, rep.pending_after, rep.crashes, rep.wall_secs
@@ -429,6 +514,111 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         );
     }
     anyhow::ensure!(rep.done == rep.submitted, "job loss detected");
+    Ok(())
+}
+
+fn cmd_audit(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "audit",
+        "broker SubmitLog <-> work-queue reconciliation dump (per-state counts + mismatches)",
+    )
+    .opt_default("producers", "producer threads", "2")
+    .opt_default("jobs", "jobs per producer", "200")
+    .opt_default("consume", "fraction of submitted jobs to take+complete first", "0.5")
+    .opt_default("crash", "crash + recover before auditing (0 = audit the live state)", "1")
+    .opt_default("queue", "work queue kind: perlcrq|sharded", "sharded")
+    .opt("shards", "shard count for the sharded work queue")
+    .opt("batch", "enqueue batch size for the sharded work queue")
+    .opt("batch-deq", "dequeue batch size for the sharded work queue")
+    .opt("seed", "RNG seed");
+    let cmd = with_topology_opts(cmd);
+    let a = cmd.parse(args)?;
+    let mut cfg = Config::load_default();
+    apply_queue_overrides(&mut cfg, &a)?;
+    let producers = a.get_parse::<usize>("producers", 2)?;
+    let jobs = a.get_parse::<usize>("jobs", 200)?;
+    let consume = a.get_parse::<f64>("consume", 0.5)?.clamp(0.0, 1.0);
+    let do_crash = a.get_parse::<u64>("crash", 1)? > 0;
+    let seed = a.get_parse::<u64>("seed", entropy_seed())?;
+    let nthreads = producers + 1; // + one consumer slot
+
+    let topo = cfg.build_topology();
+    let broker = match a.get("queue").unwrap_or("sharded") {
+        "sharded" => Arc::new(
+            Broker::new_sharded(&topo, nthreads, 1 << 16, cfg.queue.clone())
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        ),
+        "perlcrq" => Arc::new(Broker::new_on(&topo, nthreads, 1 << 16, cfg.queue.ring_size)),
+        other => anyhow::bail!("unknown --queue {other:?} (perlcrq|sharded)"),
+    };
+
+    // Deterministic single-threaded scenario: submit from every producer
+    // slot (leaving any batched handle enqueues unflushed — exactly the
+    // window recovery must reconcile), consume a fraction, then
+    // optionally crash + recover.
+    for p in 0..producers {
+        broker.attach_worker(p);
+        for i in 0..jobs {
+            let payload = format!("audit:p{p}:{i}").into_bytes();
+            broker.submit(p, &payload[..payload.len().min(48)])?;
+        }
+    }
+    let target = ((producers * jobs) as f64 * consume) as usize;
+    let consumer = producers;
+    broker.attach_worker(consumer);
+    let mut consumed = 0usize;
+    while consumed < target {
+        let Some((jid, _)) = broker.take(consumer)? else { break };
+        if broker.complete(consumer, jid)? {
+            consumed += 1;
+        }
+    }
+    if do_crash {
+        let mut rng = persiq::util::rng::Xoshiro256::seed_from(seed);
+        topo.crash(&mut rng);
+        broker.recover();
+    } else {
+        broker.quiesce();
+    }
+
+    let rep = broker.reconcile_report(0);
+    println!(
+        "audit ({}; pools={}, placement={}, {}):",
+        a.get("queue").unwrap_or("sharded"),
+        topo.len(),
+        cfg.queue.placement,
+        if do_crash { "post-crash, post-recovery" } else { "live" }
+    );
+    println!(
+        "  submit logs : submitted={} done={} pending={} unwritten={}",
+        rep.audit.submitted, rep.audit.done, rep.audit.pending, rep.audit.unwritten
+    );
+    let per_pool: Vec<String> = rep
+        .per_pool_submitted
+        .iter()
+        .enumerate()
+        .map(|(i, n)| format!("pool{i}={n}"))
+        .collect();
+    println!("  per-pool    : {}", per_pool.join(" "));
+    println!(
+        "  work queue  : handles={} pending={} done={} unwritten={} duplicates={}",
+        rep.queued, rep.queued_pending, rep.queued_done, rep.queued_unwritten,
+        rep.queued_duplicates
+    );
+    println!(
+        "  mismatches  : {} (stranded-pending={} queued-done={} queued-unwritten={} \
+         queued-duplicates={})",
+        rep.mismatches(),
+        rep.stranded_pending,
+        rep.queued_done,
+        rep.queued_unwritten,
+        rep.queued_duplicates
+    );
+    anyhow::ensure!(
+        rep.mismatches() == 0,
+        "SubmitLog <-> queue reconciliation mismatch detected"
+    );
+    println!("  reconciliation invariants hold");
     Ok(())
 }
 

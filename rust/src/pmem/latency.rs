@@ -72,6 +72,18 @@ pub struct CostModel {
     pub psync_ns: u64,
     /// Additional `psync` cost per pending (queued) line being drained.
     pub psync_per_line_ns: u64,
+    /// Cross-socket `pwb` penalty: extra cost when the flushing thread's
+    /// home socket (see [`crate::pmem::Topology`]) differs from the socket
+    /// owning the flushed line's pool. On real multi-DIMM machines a
+    /// remote `clwb` crosses the interconnect and lands on the *remote*
+    /// socket's NVM controller; published Optane numbers put the penalty
+    /// at 1–4× the local flush. Only ever charged by multi-pool
+    /// topologies: a single pool homes every thread on socket 0.
+    pub remote_pwb_ns: u64,
+    /// Cross-socket RMW penalty: extra cost for an atomic on a line whose
+    /// pool lives on a different socket than the calling thread's home
+    /// (directory indirection + interconnect hop).
+    pub remote_rmw_ns: u64,
     /// Metering mode.
     pub meter: MeterMode,
 }
@@ -91,6 +103,8 @@ impl Default for CostModel {
             pfence_ns: 10,
             psync_ns: 250,
             psync_per_line_ns: 20,
+            remote_pwb_ns: 120,
+            remote_rmw_ns: 60,
             meter: MeterMode::Virtual,
         }
     }
@@ -112,6 +126,8 @@ impl CostModel {
             pfence_ns: 0,
             psync_ns: 0,
             psync_per_line_ns: 0,
+            remote_pwb_ns: 0,
+            remote_rmw_ns: 0,
             meter: MeterMode::Virtual,
         }
     }
@@ -163,6 +179,8 @@ impl CostModel {
         self.psync_ns = doc.get_u64(section, "psync_ns", self.psync_ns);
         self.psync_per_line_ns =
             doc.get_u64(section, "psync_per_line_ns", self.psync_per_line_ns);
+        self.remote_pwb_ns = doc.get_u64(section, "remote_pwb_ns", self.remote_pwb_ns);
+        self.remote_rmw_ns = doc.get_u64(section, "remote_rmw_ns", self.remote_rmw_ns);
     }
 }
 
@@ -205,6 +223,21 @@ mod tests {
         assert_eq!(c.rmw_cost(true), 0);
         assert_eq!(c.pwb_cost(10), 0);
         assert_eq!(c.psync_cost(10), 0);
+    }
+
+    #[test]
+    fn cross_socket_knobs_exist_and_override() {
+        let c = CostModel::default();
+        assert!(c.remote_pwb_ns >= 2 * c.pwb_ns, "default remote pwb should be >= 2x local");
+        assert_eq!(CostModel::zero().remote_pwb_ns, 0);
+        assert_eq!(CostModel::zero().remote_rmw_ns, 0);
+        let doc =
+            crate::util::toml::parse("[pmem.cost]\nremote_pwb_ns = 333\nremote_rmw_ns = 44\n")
+                .unwrap();
+        let mut c = CostModel::default();
+        c.apply_toml(&doc, "pmem.cost");
+        assert_eq!(c.remote_pwb_ns, 333);
+        assert_eq!(c.remote_rmw_ns, 44);
     }
 
     #[test]

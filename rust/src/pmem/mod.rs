@@ -16,6 +16,22 @@
 //!   uncontrolled cache eviction — the paper's footnote 3), and then all
 //!   live state is reset from the shadow (volatile contents are lost).
 //!
+//! ## Multi-pool topology
+//!
+//! A [`Topology`] groups several independent pools ("sockets"): each has
+//! its own arena, per-socket NVM bandwidth chain, stats and crash-time
+//! nondeterminism, while the per-thread virtual clocks and the crash cut
+//! are shared machine-wide. Every thread id has a **home socket**
+//! (round-robin, the paper's §5 pinning order); `pwb`s and RMWs issued
+//! against a pool on a different socket charge the cost model's
+//! cross-socket penalties ([`CostModel::remote_pwb_ns`] /
+//! [`CostModel::remote_rmw_ns`]). [`Topology::single`] is the degenerate
+//! one-pool case and charges exactly the pre-topology costs; multi-pool
+//! structures address memory through pool-qualified [`GAddr`]s.
+//!
+//! [`CostModel::remote_pwb_ns`]: latency::CostModel::remote_pwb_ns
+//! [`CostModel::remote_rmw_ns`]: latency::CostModel::remote_rmw_ns
+//!
 //! ## Virtual-time metering
 //!
 //! The testbed has one physical core, so wall-clock cannot reproduce the
@@ -37,12 +53,14 @@ pub mod latency;
 pub mod layout;
 pub mod pool;
 pub mod stats;
+pub mod topology;
 
 pub use crash::{run_guarded, CrashSignal, RunOutcome};
 pub use latency::{CostModel, MeterMode};
 pub use layout::{PAddr, WORDS_PER_LINE};
 pub use pool::{Hotness, PmemPool, MAX_THREADS};
 pub use stats::{OpCounters, PoolStats};
+pub use topology::{GAddr, PlacementPolicy, Topology, MAX_POOLS};
 
 /// Pool-wide configuration.
 #[derive(Clone, Debug)]

@@ -4,6 +4,7 @@
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crossbeam_utils::CachePadded;
 
@@ -77,6 +78,93 @@ impl PendingSlot {
     }
 }
 
+/// State shared by every pool of one [`crate::pmem::Topology`] — and owned
+/// exclusively by a standalone pool (the degenerate single-socket case).
+///
+/// * **Virtual clocks** are per *thread*, not per pool: a thread splitting
+///   its work across sockets still lives on one timeline (two per-pool
+///   clocks would let cross-socket work run "for free" in parallel).
+/// * **Crash machinery** is one cut for the whole machine: the step
+///   countdown decrements on every primitive of every pool, and the crash
+///   flag unwinds threads wherever they are — so a multi-pool crash
+///   snapshots all pools at a single point, exactly like a real
+///   full-system power failure.
+/// * **Thread homes** map each tid to its home socket (assigned by
+///   [`crate::util::affinity::place`] round-robin); pools whose socket
+///   differs from the caller's home charge the cross-socket cost-model
+///   penalties.
+pub(crate) struct SharedState {
+    vclocks: Vec<CachePadded<AtomicU64>>,
+    homes: Vec<std::sync::atomic::AtomicU32>,
+    stepping: AtomicBool,
+    steps: AtomicI64,
+    crash_flag: AtomicBool,
+    epoch: AtomicU64,
+}
+
+impl SharedState {
+    pub(crate) fn new() -> Self {
+        Self {
+            vclocks: (0..MAX_THREADS).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            homes: (0..MAX_THREADS).map(|_| std::sync::atomic::AtomicU32::new(0)).collect(),
+            stepping: AtomicBool::new(false),
+            steps: AtomicI64::new(i64::MAX),
+            crash_flag: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    /// Thread `tid`'s home socket.
+    #[inline]
+    pub(crate) fn home_of(&self, tid: usize) -> usize {
+        self.homes[tid].load(Ordering::Relaxed) as usize
+    }
+
+    /// Assign thread `tid`'s home socket (topology construction;
+    /// quiescent).
+    pub(crate) fn set_home(&self, tid: usize, socket: usize) {
+        self.homes[tid].store(socket as u32, Ordering::Relaxed);
+    }
+
+    /// Disarm the countdown, clear the crash flag and bump the epoch —
+    /// the coordinated tail of a crash, executed **once** per cut (not
+    /// once per pool).
+    pub(crate) fn finish_crash(&self) {
+        self.stepping.store(false, Ordering::SeqCst);
+        self.steps.store(i64::MAX, Ordering::SeqCst);
+        self.crash_flag.store(false, Ordering::SeqCst);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(crate) fn arm_crash_after(&self, steps: u64) {
+        self.steps.store(steps.min(i64::MAX as u64) as i64, Ordering::SeqCst);
+        self.stepping.store(true, Ordering::SeqCst);
+    }
+
+    pub(crate) fn crash_now(&self) {
+        self.crash_flag.store(true, Ordering::SeqCst);
+    }
+
+    pub(crate) fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub(crate) fn vtime(&self, tid: usize) -> u64 {
+        self.vclocks[tid].load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn max_vtime(&self) -> u64 {
+        self.vclocks.iter().map(|c| c.load(Ordering::Relaxed)).max().unwrap_or(0)
+    }
+
+    pub(crate) fn reset_vclocks(&self) {
+        for c in &self.vclocks {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
 /// The simulated-NVM pool. See [`super`] module docs.
 pub struct PmemPool {
     /// Live (cache/DRAM view) storage, 64-byte aligned lines.
@@ -93,34 +181,38 @@ pub struct PmemPool {
     /// Active worker thread count (set by the harness; bounds Global
     /// contention).
     active_threads: std::sync::atomic::AtomicU32,
-    /// Per-thread virtual clocks (simulated ns).
-    vclocks: Vec<CachePadded<AtomicU64>>,
     /// Per-thread pending pwb queues.
     pending: Vec<CachePadded<PendingSlot>>,
     /// Operation counters.
     pub stats: PoolStats,
     /// Bump allocator cursor (word index; word 0 reserved as PNULL).
     next_word: AtomicUsize,
-    /// Is the crash-step countdown armed?
-    stepping: AtomicBool,
-    /// Remaining primitive steps until crash (valid when `stepping`).
-    steps: AtomicI64,
-    /// Crash flag: once set, every primitive unwinds its caller.
-    crash_flag: AtomicBool,
-    /// Number of crashes so far (epoch counter; epoch k ends with crash k).
-    epoch: AtomicU64,
-    /// Global NVM write-bandwidth chain: every realized flush appends its
-    /// media cost here and joins the flusher — all threads' flushes share
-    /// the DIMMs (the effect that lets batch-flushing combining queues
-    /// save persistence bandwidth).
+    /// Per-pool NVM write-bandwidth chain: every realized flush appends its
+    /// media cost here and joins the flusher — all threads' flushes on
+    /// *this* pool share its DIMMs (the effect that lets batch-flushing
+    /// combining queues save persistence bandwidth). Independent per pool:
+    /// a multi-pool topology has one bandwidth chain per socket.
     nvm_chain: AtomicU64,
+    /// Virtual clocks + crash cut + thread homes, shared across a
+    /// topology's pools (see [`SharedState`]).
+    shared: Arc<SharedState>,
+    /// This pool's socket index within its topology (0 standalone).
+    socket: usize,
     cfg: PmemConfig,
 }
 
 impl PmemPool {
-    /// Create a pool with `cfg.capacity_words` words of persistent memory
-    /// (zero-initialized, zero shadow — i.e. freshly formatted NVM).
+    /// Create a standalone pool with `cfg.capacity_words` words of
+    /// persistent memory (zero-initialized, zero shadow — i.e. freshly
+    /// formatted NVM). Standalone = its own [`SharedState`] on socket 0,
+    /// the degenerate single-socket topology.
     pub fn new(cfg: PmemConfig) -> Self {
+        Self::with_shared(cfg, 0, Arc::new(SharedState::new()))
+    }
+
+    /// Create a pool on `socket` sharing a topology's clocks/crash cut
+    /// (see [`crate::pmem::Topology`]).
+    pub(crate) fn with_shared(cfg: PmemConfig, socket: usize, shared: Arc<SharedState>) -> Self {
         let words = cfg.capacity_words.max(WORDS_PER_LINE * 2);
         let n_lines = words.div_ceil(WORDS_PER_LINE);
         let mk = |n: usize| -> Box<[CacheLine]> {
@@ -137,15 +229,12 @@ impl PmemPool {
                 .map(|_| std::sync::atomic::AtomicU8::new(Hotness::Pairwise as u8))
                 .collect(),
             active_threads: std::sync::atomic::AtomicU32::new(2),
-            vclocks: (0..MAX_THREADS).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
             pending: (0..MAX_THREADS).map(|t| CachePadded::new(PendingSlot::new(t))).collect(),
             stats: PoolStats::new(MAX_THREADS),
             next_word: AtomicUsize::new(1), // word 0 = PNULL, reserved
-            stepping: AtomicBool::new(false),
-            steps: AtomicI64::new(i64::MAX),
-            crash_flag: AtomicBool::new(false),
-            epoch: AtomicU64::new(0),
             nvm_chain: AtomicU64::new(0),
+            shared,
+            socket,
             cfg,
         }
     }
@@ -155,9 +244,19 @@ impl PmemPool {
         &self.cfg
     }
 
-    /// Current crash epoch (number of crashes so far).
+    /// The socket (topology pool index) this pool lives on.
+    pub fn socket(&self) -> usize {
+        self.socket
+    }
+
+    /// The clock/crash state shared with this pool's topology siblings.
+    pub(crate) fn shared(&self) -> &Arc<SharedState> {
+        &self.shared
+    }
+
+    /// Current crash epoch (number of crashes so far — topology-wide).
     pub fn epoch(&self) -> u64 {
-        self.epoch.load(Ordering::Relaxed)
+        self.shared.epoch()
     }
 
     // ------------------------------------------------------------------
@@ -220,32 +319,34 @@ impl PmemPool {
     // ------------------------------------------------------------------
 
     /// Arm the crash countdown: after `steps` further pmem primitives
-    /// (across all threads), the crash flag is raised and every thread
-    /// unwinds at its next primitive. This implements the paper's
-    /// `recovery_steps` failure framework (§5) at primitive granularity.
+    /// (across all threads — and across every pool sharing this pool's
+    /// topology), the crash flag is raised and every thread unwinds at its
+    /// next primitive. This implements the paper's `recovery_steps`
+    /// failure framework (§5) at primitive granularity; on a multi-pool
+    /// topology the cut lands at one machine-wide point.
     pub fn arm_crash_after(&self, steps: u64) {
-        self.steps.store(steps.min(i64::MAX as u64) as i64, Ordering::SeqCst);
-        self.stepping.store(true, Ordering::SeqCst);
+        self.shared.arm_crash_after(steps);
     }
 
-    /// Raise the crash flag immediately.
+    /// Raise the crash flag immediately (topology-wide).
     pub fn crash_now(&self) {
-        self.crash_flag.store(true, Ordering::SeqCst);
+        self.shared.crash_now();
     }
 
     /// Is the crash flag currently raised?
     pub fn crash_pending(&self) -> bool {
-        self.crash_flag.load(Ordering::Relaxed)
+        self.shared.crash_flag.load(Ordering::Relaxed)
     }
 
     /// The primitive-entry check: countdown + unwind once crashed.
     #[inline]
     fn step(&self, tid: usize) {
-        if self.stepping.load(Ordering::Relaxed) {
-            if self.steps.fetch_sub(1, Ordering::Relaxed) <= 1 {
-                self.crash_flag.store(true, Ordering::SeqCst);
+        let sh = &*self.shared;
+        if sh.stepping.load(Ordering::Relaxed) {
+            if sh.steps.fetch_sub(1, Ordering::Relaxed) <= 1 {
+                sh.crash_flag.store(true, Ordering::SeqCst);
             }
-            if self.crash_flag.load(Ordering::Relaxed) {
+            if sh.crash_flag.load(Ordering::Relaxed) {
                 raise_crash(tid);
             }
         }
@@ -255,23 +356,23 @@ impl PmemPool {
     // Virtual-time metering internals
     // ------------------------------------------------------------------
 
-    /// Read thread `tid`'s virtual clock (simulated ns).
+    /// Read thread `tid`'s virtual clock (simulated ns; topology-wide).
     #[inline]
     pub fn vtime(&self, tid: usize) -> u64 {
-        self.vclocks[tid].load(Ordering::Relaxed)
+        self.shared.vtime(tid)
     }
 
     /// Maximum virtual clock across threads — the simulated makespan.
     pub fn max_vtime(&self) -> u64 {
-        self.vclocks.iter().map(|c| c.load(Ordering::Relaxed)).max().unwrap_or(0)
+        self.shared.max_vtime()
     }
 
     /// Zero all virtual clocks, line stamps, masks and counters (bench
-    /// phase boundary). Must not race with workers.
+    /// phase boundary). Must not race with workers. Clock reset is
+    /// topology-wide (idempotent: a topology resetting every pool clears
+    /// the shared clocks more than once, harmlessly).
     pub fn reset_meter(&self) {
-        for c in &self.vclocks {
-            c.store(0, Ordering::Relaxed);
-        }
+        self.shared.reset_vclocks();
         for s in self.stamps.iter() {
             s.store(0, Ordering::Relaxed);
         }
@@ -286,11 +387,21 @@ impl PmemPool {
     /// the caller's new clock value.
     #[inline]
     fn join_charge(&self, tid: usize, line: usize, cost: u64) -> u64 {
-        let own = self.vclocks[tid].load(Ordering::Relaxed);
+        let own = self.shared.vclocks[tid].load(Ordering::Relaxed);
         let stamp = self.stamps[line].load(Ordering::Relaxed);
         let t = own.max(stamp) + cost;
-        self.vclocks[tid].store(t, Ordering::Relaxed);
+        self.shared.vclocks[tid].store(t, Ordering::Relaxed);
         t
+    }
+
+    /// Is the calling thread homed on a different socket than this pool?
+    /// Cross-socket primitives pay the interconnect penalties
+    /// (`CostModel::remote_pwb_ns` / `remote_rmw_ns`). Always false for a
+    /// standalone pool (socket 0, all homes 0) — the degenerate case
+    /// charges exactly the pre-topology costs.
+    #[inline]
+    fn cross_socket(&self, tid: usize) -> bool {
+        self.shared.home_of(tid) != self.socket
     }
 
     /// Declare the contention level of all lines covering `words` words
@@ -374,8 +485,8 @@ impl PmemPool {
     /// Charge `cost` to the caller without touching any line.
     #[inline]
     fn charge(&self, tid: usize, cost: u64) -> u64 {
-        let t = self.vclocks[tid].load(Ordering::Relaxed) + cost;
-        self.vclocks[tid].store(t, Ordering::Relaxed);
+        let t = self.shared.vclocks[tid].load(Ordering::Relaxed) + cost;
+        self.shared.vclocks[tid].store(t, Ordering::Relaxed);
         t
     }
 
@@ -484,10 +595,18 @@ impl PmemPool {
         if remote {
             self.stats.of(tid).conflict(1);
         }
-        let cost = self.cfg.cost.rmw_cost(remote);
+        let mut cost = self.cfg.cost.rmw_cost(remote);
+        // Cross-socket atomic: directory indirection + interconnect hop
+        // (multi-pool topologies only — see `cross_socket`). The penalty
+        // joins the line's serialization chain like the base cost: a
+        // remote RMW occupies the line for longer.
+        if self.cross_socket(tid) {
+            cost += self.cfg.cost.remote_rmw_ns;
+            self.stats.of(tid).remote_op();
+        }
         let chain = self.stamps[line].fetch_add(cost, Ordering::Relaxed) + cost;
-        let own = self.vclocks[tid].load(Ordering::Relaxed) + cost;
-        self.vclocks[tid].store(own.max(chain), Ordering::Relaxed);
+        let own = self.shared.vclocks[tid].load(Ordering::Relaxed) + cost;
+        self.shared.vclocks[tid].store(own.max(chain), Ordering::Relaxed);
     }
 
     /// FETCH&INCREMENT — returns the previous value (paper §2a).
@@ -618,18 +737,27 @@ impl PmemPool {
         self.stats.of(tid).pwb();
         let line = a.line();
         let k = self.k_of(line);
-        let cost = self.cfg.cost.pwb_cost(k);
+        let mut cost = self.cfg.cost.pwb_cost(k);
+        // Cross-socket flush: the write-back crosses the interconnect to
+        // the remote socket's NVM controller (multi-pool topologies only).
+        // The penalty rides the line chain like the base flush cost — a
+        // remote flush of a hot line delays its contenders for longer,
+        // which is exactly the effect `benches/fig8_topology` measures.
+        if self.cross_socket(tid) {
+            cost += self.cfg.cost.remote_pwb_ns;
+            self.stats.of(tid).remote_op();
+        }
         // The flush occupies the line: its cost joins the line's
         // serialization chain, so subsequent accessors of a *hot* line
         // queue behind this flush — the effect Figures 2–3 measure. (Same
         // cost-only chain growth as RMWs; see rmw_meter.) Flushes also
-        // share the NVM media: every pwb appends to the global bandwidth
-        // chain and waits for it.
+        // share this pool's NVM media: every pwb appends to the per-pool
+        // bandwidth chain and waits for it.
         let chain = self.stamps[line].fetch_add(cost, Ordering::Relaxed) + cost;
         let media = self.cfg.cost.nvm_flush_ns;
         let nvm = self.nvm_chain.fetch_add(media, Ordering::Relaxed) + media;
-        let own = self.vclocks[tid].load(Ordering::Relaxed) + cost;
-        self.vclocks[tid].store(own.max(chain).max(nvm), Ordering::Relaxed);
+        let own = self.shared.vclocks[tid].load(Ordering::Relaxed) + cost;
+        self.shared.vclocks[tid].store(own.max(chain).max(nvm), Ordering::Relaxed);
         if self.cfg.cost.meter == MeterMode::WallclockSpin {
             spin_ns(cost);
         }
@@ -710,7 +838,19 @@ impl PmemPool {
     /// 3. All live state is reset from the shadow: volatile contents lost.
     /// 4. Pending queues, masks and stamps are cleared; the epoch counter
     ///    is bumped; the crash flag and step countdown are disarmed.
+    ///
+    /// Multi-pool topologies must NOT call this per pool (it would bump
+    /// the shared epoch once per pool): use [`crate::pmem::Topology::crash`],
+    /// which runs [`PmemPool::crash_storage`] on every pool and finishes
+    /// the shared cut once.
     pub fn crash(&self, rng: &mut Xoshiro256) {
+        self.crash_storage(rng);
+        self.shared.finish_crash();
+    }
+
+    /// The storage half of a crash (steps 1–3 above plus per-pool meter
+    /// reset), without touching the shared crash machinery.
+    pub(crate) fn crash_storage(&self, rng: &mut Xoshiro256) {
         // (1) Pending flushes race the failure.
         for slot in self.pending.iter() {
             unsafe {
@@ -739,7 +879,8 @@ impl PmemPool {
                 self.live[line].0[i].store(v, Ordering::Release);
             }
         }
-        // (4) Reset metering + crash machinery.
+        // (4) Reset this pool's metering state (the shared crash
+        // machinery is finished by the caller — once per cut).
         for s in self.stamps.iter() {
             s.store(0, Ordering::Relaxed);
         }
@@ -747,10 +888,6 @@ impl PmemPool {
             m.store(0, Ordering::Relaxed);
         }
         self.nvm_chain.store(0, Ordering::Relaxed);
-        self.stepping.store(false, Ordering::SeqCst);
-        self.steps.store(i64::MAX, Ordering::SeqCst);
-        self.crash_flag.store(false, Ordering::SeqCst);
-        self.epoch.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Is the line containing any of the range dirty (live ≠ shadow)?
@@ -1111,6 +1248,51 @@ mod tests {
         for i in 0..words {
             assert_eq!(p.read_shadow(a.add(i)), i as u64 + 1);
         }
+    }
+
+    #[test]
+    fn cross_socket_penalties_charged_only_for_remote_homes() {
+        // A pool on socket 1 sharing state with homes defaulting to
+        // socket 0: thread 0 is remote, a thread re-homed to socket 1 is
+        // local and pays exactly the old costs.
+        let shared = Arc::new(SharedState::new());
+        let p1 = PmemPool::with_shared(
+            PmemConfig {
+                capacity_words: 1 << 12,
+                cost: CostModel::default(),
+                evict_prob: 0.0,
+                pending_flush_prob: 0.0,
+                seed: 1,
+            },
+            1,
+            Arc::clone(&shared),
+        );
+        let a = p1.alloc_word();
+        p1.set_hot(a, 1, Hotness::Private);
+        let c = p1.config().cost.clone();
+        let _ = p1.fai(0, a);
+        assert_eq!(p1.vtime(0), c.rmw_cost(false) + c.remote_rmw_ns);
+        let before = p1.vtime(0);
+        p1.pwb(0, a);
+        assert_eq!(p1.vtime(0) - before, c.pwb_cost(1) + c.remote_pwb_ns);
+        assert_eq!(p1.stats.total().remote_ops, 2);
+        // Thread 2 homed on this pool's socket: no penalty.
+        shared.set_home(2, 1);
+        p1.reset_meter();
+        let _ = p1.fai(2, a);
+        assert_eq!(p1.vtime(2), c.rmw_cost(false));
+        assert_eq!(p1.stats.total().remote_ops, 0, "meter reset + local access");
+    }
+
+    #[test]
+    fn standalone_pool_never_pays_cross_socket() {
+        let p = pool(); // socket 0, homes all 0
+        let a = p.alloc_word();
+        for t in 0..8 {
+            let _ = p.fai(t, a);
+            p.pwb(t, a);
+        }
+        assert_eq!(p.stats.total().remote_ops, 0);
     }
 
     #[test]

@@ -16,6 +16,10 @@ pub struct OpCounters {
     pub pfences: AtomicU64,
     pub psyncs: AtomicU64,
     pub conflicts: AtomicU64,
+    /// Cross-socket accesses: pwbs/RMWs issued by a thread whose home
+    /// socket differs from the target pool's socket (multi-pool
+    /// topologies only — always 0 on a single pool).
+    pub remote_ops: AtomicU64,
 }
 
 // Counters are single-writer (one thread per slot): plain load+store
@@ -61,6 +65,10 @@ impl OpCounters {
         let v = self.conflicts.load(Ordering::Relaxed);
         self.conflicts.store(v + n, Ordering::Relaxed);
     }
+    #[inline]
+    pub fn remote_op(&self) {
+        bump!(self.remote_ops);
+    }
 
     fn snapshot(&self) -> CounterSnapshot {
         CounterSnapshot {
@@ -72,6 +80,7 @@ impl OpCounters {
             pfences: self.pfences.load(Ordering::Relaxed),
             psyncs: self.psyncs.load(Ordering::Relaxed),
             conflicts: self.conflicts.load(Ordering::Relaxed),
+            remote_ops: self.remote_ops.load(Ordering::Relaxed),
         }
     }
 
@@ -85,6 +94,7 @@ impl OpCounters {
             &self.pfences,
             &self.psyncs,
             &self.conflicts,
+            &self.remote_ops,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -102,6 +112,7 @@ pub struct CounterSnapshot {
     pub pfences: u64,
     pub psyncs: u64,
     pub conflicts: u64,
+    pub remote_ops: u64,
 }
 
 impl CounterSnapshot {
@@ -114,6 +125,7 @@ impl CounterSnapshot {
         self.pfences += o.pfences;
         self.psyncs += o.psyncs;
         self.conflicts += o.conflicts;
+        self.remote_ops += o.remote_ops;
     }
 
     /// Total persistence instructions (pwb + pfence + psync).

@@ -1,0 +1,621 @@
+//! Multi-pool NVM topology: an ordered set of independent [`PmemPool`]s
+//! ("sockets"), each with its own arena, NVM bandwidth chain, stats and
+//! crash-time nondeterminism — sharing one set of per-thread virtual
+//! clocks and one crash cut.
+//!
+//! The paper's core claim is that moving persistence instructions onto
+//! low-contention variables lets different threads' `pwb`/`psync`
+//! latencies overlap. On real multi-DIMM / multi-socket machines that
+//! overlap is bounded by *per-socket* NVM bandwidth, and a `pwb` that
+//! crosses the socket interconnect pays a hefty premium. A single
+//! [`PmemPool`] cannot express either effect; a [`Topology`] can:
+//!
+//! * each pool owns an independent `nvm_chain` (per-socket DIMM
+//!   bandwidth) and its own line stamps/stats;
+//! * every thread has a **home socket** (assigned round-robin by
+//!   [`crate::util::affinity::place`], the paper's §5 pinning order);
+//!   primitives on a pool whose socket differs from the caller's home
+//!   charge [`CostModel::remote_pwb_ns`] / [`CostModel::remote_rmw_ns`]
+//!   (see [`crate::pmem::latency`]);
+//! * the step countdown, crash flag, epoch counter and virtual clocks
+//!   are shared, so [`Topology::crash`] snapshots **all** pools at one
+//!   machine-wide cut — exactly like a real power failure.
+//!
+//! [`Topology::single`] is the degenerate one-pool case: socket 0, every
+//! thread homed on it, no penalty ever charged — byte- and
+//! cost-identical to the pre-topology single-pool substrate, which is
+//! the refactor's compatibility bar.
+//!
+//! [`CostModel::remote_pwb_ns`]: crate::pmem::CostModel::remote_pwb_ns
+//! [`CostModel::remote_rmw_ns`]: crate::pmem::CostModel::remote_rmw_ns
+
+use std::sync::Arc;
+
+use super::pool::SharedState;
+use super::stats::CounterSnapshot;
+use super::{Hotness, PAddr, PmemConfig, PmemPool};
+use crate::util::affinity::place;
+use crate::util::rng::Xoshiro256;
+
+/// Upper bound on pools per topology (the pool index must fit the
+/// [`GAddr`] packing and the sharded queue's pool bitmasks).
+pub const MAX_POOLS: usize = 16;
+
+/// A pool-qualified persistent address: `{pool, PAddr}`. The packed
+/// `u64` form (`pool` in bits 32.., word index below) is what persistent
+/// structures store when a handle may point into any pool — pool 0
+/// packs to exactly the bare `PAddr` value, so single-pool images stay
+/// readable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GAddr {
+    /// Pool (socket) index within the topology.
+    pub pool: u32,
+    /// Word address within that pool's arena.
+    pub addr: PAddr,
+}
+
+impl GAddr {
+    /// Qualify a bare address with its pool.
+    #[inline]
+    pub fn new(pool: usize, addr: PAddr) -> GAddr {
+        GAddr { pool: pool as u32, addr }
+    }
+
+    /// Address `k` words later in the same pool.
+    #[inline]
+    pub fn add(self, k: usize) -> GAddr {
+        GAddr { pool: self.pool, addr: self.addr.add(k) }
+    }
+
+    /// Is this the null address (of any pool)?
+    #[inline]
+    pub fn is_null(self) -> bool {
+        self.addr.is_null()
+    }
+
+    /// Pack for storage in a persistent word: pool in bits 32..48, word
+    /// index in bits 0..32. Far below [`crate::queues::MAX_ITEM`], so a
+    /// packed handle is always a valid queue item.
+    #[inline]
+    pub fn to_u64(self) -> u64 {
+        ((self.pool as u64) << 32) | self.addr.to_u64()
+    }
+
+    /// Unpack from a persistent word value. The pool field is masked to
+    /// the documented 16-bit packing; bits 48.. must be zero (a value
+    /// with them set was never produced by [`GAddr::to_u64`] — debug
+    /// builds assert, so an encoding bug surfaces at the decode site
+    /// instead of as an opaque pool-index panic later).
+    #[inline]
+    pub fn from_u64(v: u64) -> GAddr {
+        debug_assert_eq!(v >> 48, 0, "GAddr::from_u64: bits 48.. set in {v:#x}");
+        GAddr { pool: ((v >> 32) & 0xFFFF) as u32, addr: PAddr(v as u32) }
+    }
+}
+
+/// How a sharded structure maps its shards (and their batch logs) onto a
+/// topology's pools. Parsed from `--placement` / `[topology] placement`.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Shards stripe round-robin across pools and every thread's
+    /// round-robin ticket cycles over **all** shards: traffic interleaves
+    /// across sockets (the classic striped layout — maximum bandwidth
+    /// spread, constant cross-socket `pwb` traffic).
+    #[default]
+    Interleave,
+    /// Shards stripe round-robin across pools, but each thread's
+    /// enqueue ticket cycles only over the shards of its **home** socket
+    /// (falling back to all shards when its home pool holds none), and
+    /// its dequeue scan probes home shards first. Traffic stays
+    /// socket-local; cross-socket `pwb`s happen only when stealing work
+    /// from sibling sockets.
+    Colocate,
+    /// Explicit shard→pool map: shard `s` lives on `pools[s % len]`.
+    /// Dispatch behaves like [`PlacementPolicy::Colocate`] (home shards
+    /// preferred).
+    Pinned(Vec<usize>),
+}
+
+impl PlacementPolicy {
+    /// Parse `interleave` | `colocate` | `pinned:<p0,p1,...>`.
+    pub fn parse(s: &str) -> Result<PlacementPolicy, String> {
+        let t = s.trim();
+        match t {
+            "interleave" => return Ok(PlacementPolicy::Interleave),
+            "colocate" => return Ok(PlacementPolicy::Colocate),
+            _ => {}
+        }
+        if let Some(list) = t.strip_prefix("pinned:") {
+            let pools: Result<Vec<usize>, _> = list
+                .split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(str::parse::<usize>)
+                .collect();
+            let pools = pools.map_err(|_| format!("bad pinned pool list {list:?}"))?;
+            if pools.is_empty() {
+                return Err("pinned placement needs at least one pool id".to_string());
+            }
+            if let Some(&p) = pools.iter().find(|&&p| p >= MAX_POOLS) {
+                return Err(format!("pinned pool id {p} exceeds MAX_POOLS ({MAX_POOLS})"));
+            }
+            return Ok(PlacementPolicy::Pinned(pools));
+        }
+        Err(format!(
+            "unknown placement {t:?} (expected interleave | colocate | pinned:<p0,p1,...>)"
+        ))
+    }
+
+    /// The pool shard `s` lives on, for a topology of `npools` pools.
+    /// Pinned ids are returned verbatim — constructors reject maps that
+    /// name a pool outside the topology.
+    pub fn pool_of(&self, shard: usize, npools: usize) -> usize {
+        match self {
+            PlacementPolicy::Interleave | PlacementPolicy::Colocate => {
+                shard % npools.max(1)
+            }
+            PlacementPolicy::Pinned(list) => list[shard % list.len()],
+        }
+    }
+
+    /// Do threads prefer their home socket's shards?
+    pub fn prefers_home(&self) -> bool {
+        !matches!(self, PlacementPolicy::Interleave)
+    }
+}
+
+impl std::str::FromStr for PlacementPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        PlacementPolicy::parse(s)
+    }
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlacementPolicy::Interleave => write!(f, "interleave"),
+            PlacementPolicy::Colocate => write!(f, "colocate"),
+            PlacementPolicy::Pinned(list) => {
+                write!(f, "pinned:")?;
+                for (i, p) in list.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{p}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// An ordered set of independent NVM pools sharing one clock/crash
+/// domain. Cheap to clone (pools are `Arc`-shared). See module docs.
+#[derive(Clone)]
+pub struct Topology {
+    pools: Vec<Arc<PmemPool>>,
+    shared: Arc<SharedState>,
+}
+
+impl Topology {
+    /// Build `npools` pools, each with `cfg.capacity_words` of its own
+    /// arena (per-socket DIMMs, not a split arena), and home every
+    /// thread id round-robin across the sockets (the paper's §5 pinning
+    /// order via [`crate::util::affinity::place`]).
+    ///
+    /// Panics if `npools` is 0 or exceeds [`MAX_POOLS`] — topology sizes
+    /// come from validated config/CLI paths.
+    pub fn new(cfg: PmemConfig, npools: usize) -> Topology {
+        assert!(
+            npools >= 1 && npools <= MAX_POOLS,
+            "pool count must be in 1..={MAX_POOLS}, got {npools}"
+        );
+        let shared = Arc::new(SharedState::new());
+        let pools: Vec<Arc<PmemPool>> = (0..npools)
+            .map(|socket| {
+                let mut pcfg = cfg.clone();
+                // Independent crash nondeterminism per socket.
+                pcfg.seed = cfg.seed.wrapping_add(socket as u64);
+                Arc::new(PmemPool::with_shared(pcfg, socket, Arc::clone(&shared)))
+            })
+            .collect();
+        for tid in 0..super::MAX_THREADS {
+            shared.set_home(tid, place(tid, npools, 1).socket);
+        }
+        Topology { pools, shared }
+    }
+
+    /// The degenerate single-pool topology — cost- and layout-identical
+    /// to a bare [`PmemPool`].
+    pub fn single(cfg: PmemConfig) -> Topology {
+        Topology::new(cfg, 1)
+    }
+
+    /// Wrap an existing standalone pool (shares its clock/crash state).
+    /// Used by compatibility constructors that still accept a bare pool.
+    pub fn from_pool(pool: &Arc<PmemPool>) -> Topology {
+        Topology { pools: vec![Arc::clone(pool)], shared: Arc::clone(pool.shared()) }
+    }
+
+    /// Number of pools (sockets).
+    pub fn len(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Is this the degenerate single-pool case?
+    pub fn is_empty(&self) -> bool {
+        false // a topology always has >= 1 pool; method exists for clippy's len-without-is-empty
+    }
+
+    /// All pools, in socket order.
+    pub fn pools(&self) -> &[Arc<PmemPool>] {
+        &self.pools
+    }
+
+    /// Pool `i`.
+    pub fn pool(&self, i: usize) -> &Arc<PmemPool> {
+        &self.pools[i]
+    }
+
+    /// Pool 0 — where single-pool algorithms and topology-wide control
+    /// state live.
+    pub fn primary(&self) -> &Arc<PmemPool> {
+        &self.pools[0]
+    }
+
+    /// Thread `tid`'s home socket (raw assignment — compare against
+    /// [`PmemPool::socket`] for penalty semantics).
+    pub fn home_of(&self, tid: usize) -> usize {
+        self.shared.home_of(tid)
+    }
+
+    /// Thread `tid`'s home pool *index within this topology* (the raw
+    /// home clamped into range — differs from `home_of` only for
+    /// [`Topology::from_pool`] wrappers around part of a larger
+    /// topology).
+    pub fn home_pool(&self, tid: usize) -> usize {
+        self.shared.home_of(tid) % self.pools.len()
+    }
+
+    // ------------------------------------------------------------------
+    // Coordinated control plane
+    // ------------------------------------------------------------------
+
+    /// Set the active worker count on every pool (bounds Global-line
+    /// contention — see [`PmemPool::set_active_threads`]).
+    pub fn set_active_threads(&self, n: usize) {
+        for p in &self.pools {
+            p.set_active_threads(n);
+        }
+    }
+
+    /// Zero all clocks, stamps, masks and counters on every pool (bench
+    /// phase boundary; quiescent).
+    pub fn reset_meter(&self) {
+        for p in &self.pools {
+            p.reset_meter();
+        }
+    }
+
+    /// Arm the machine-wide crash countdown (primitives on *any* pool
+    /// decrement it).
+    pub fn arm_crash_after(&self, steps: u64) {
+        self.shared.arm_crash_after(steps);
+    }
+
+    /// Raise the crash flag immediately.
+    pub fn crash_now(&self) {
+        self.shared.crash_now();
+    }
+
+    /// Commit a coordinated full-system crash: every pool's pending
+    /// flushes race the failure and its volatile state dies, all at one
+    /// cut; the shared epoch advances **once**. Call only after all
+    /// worker threads have unwound (same contract as
+    /// [`PmemPool::crash`]).
+    pub fn crash(&self, rng: &mut Xoshiro256) {
+        for p in &self.pools {
+            p.crash_storage(rng);
+        }
+        self.shared.finish_crash();
+    }
+
+    /// Topology-wide crash epoch.
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch()
+    }
+
+    /// Thread `tid`'s virtual clock (one timeline across all pools).
+    pub fn vtime(&self, tid: usize) -> u64 {
+        self.shared.vtime(tid)
+    }
+
+    /// Simulated makespan: max virtual clock across threads.
+    pub fn max_vtime(&self) -> u64 {
+        self.shared.max_vtime()
+    }
+
+    /// Operation counters merged across all pools.
+    pub fn stats_total(&self) -> CounterSnapshot {
+        let mut t = CounterSnapshot::default();
+        for p in &self.pools {
+            t.add(&p.stats.total());
+        }
+        t
+    }
+
+    /// Per-pool operation counters, in socket order.
+    pub fn stats_per_pool(&self) -> Vec<CounterSnapshot> {
+        self.pools.iter().map(|p| p.stats.total()).collect()
+    }
+
+    /// Drain the calling thread's pending `pwb`s on **every** pool (one
+    /// `psync` per pool that quiesce/recovery paths use when buffered
+    /// work may span sockets).
+    pub fn psync_all(&self, tid: usize) {
+        for p in &self.pools {
+            p.psync(tid);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Pool-qualified accessors (GAddr)
+    // ------------------------------------------------------------------
+
+    /// Bump-allocate `n` words aligned to `align` on pool `pool`.
+    pub fn alloc_on(&self, pool: usize, n: usize, align: usize) -> GAddr {
+        GAddr::new(pool, self.pools[pool].alloc(n, align))
+    }
+
+    /// Allocate whole cache lines on pool `pool`.
+    pub fn alloc_lines_on(&self, pool: usize, lines: usize) -> GAddr {
+        GAddr::new(pool, self.pools[pool].alloc_lines(lines))
+    }
+
+    /// Atomic load through a pool-qualified address.
+    #[inline]
+    pub fn load(&self, tid: usize, g: GAddr) -> u64 {
+        self.pools[g.pool as usize].load(tid, g.addr)
+    }
+
+    /// Atomic store through a pool-qualified address.
+    #[inline]
+    pub fn store(&self, tid: usize, g: GAddr, v: u64) {
+        self.pools[g.pool as usize].store(tid, g.addr, v);
+    }
+
+    /// CAS through a pool-qualified address.
+    #[inline]
+    pub fn cas(&self, tid: usize, g: GAddr, old: u64, new: u64) -> bool {
+        self.pools[g.pool as usize].cas(tid, g.addr, old, new)
+    }
+
+    /// `pwb` through a pool-qualified address (the matching `psync` goes
+    /// to the same pool: [`Topology::psync_pool`]).
+    #[inline]
+    pub fn pwb(&self, tid: usize, g: GAddr) {
+        self.pools[g.pool as usize].pwb(tid, g.addr);
+    }
+
+    /// `psync` on one pool.
+    #[inline]
+    pub fn psync_pool(&self, tid: usize, pool: usize) {
+        self.pools[pool].psync(tid);
+    }
+
+    /// Declare contention of a pool-qualified range.
+    pub fn set_hot(&self, g: GAddr, words: usize, h: Hotness) {
+        self.pools[g.pool as usize].set_hot(g.addr, words, h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::crash::{install_quiet_crash_hook, run_guarded};
+    use crate::pmem::CostModel;
+
+    fn cfg() -> PmemConfig {
+        PmemConfig {
+            capacity_words: 1 << 12,
+            cost: CostModel::default(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn gaddr_packing_roundtrip_and_pool0_compat() {
+        let g = GAddr::new(3, PAddr(12345));
+        assert_eq!(GAddr::from_u64(g.to_u64()), g);
+        assert_eq!(g.add(7).addr.word(), 12352);
+        assert_eq!(g.add(7).pool, 3);
+        // Pool 0 packs to the bare PAddr value (single-pool image compat).
+        let g0 = GAddr::new(0, PAddr(99));
+        assert_eq!(g0.to_u64(), 99);
+        assert!(GAddr::new(1, PAddr(0)).is_null());
+    }
+
+    #[test]
+    fn homes_round_robin_across_sockets() {
+        let t = Topology::new(cfg(), 4);
+        assert_eq!(t.len(), 4);
+        for tid in 0..16 {
+            assert_eq!(t.home_of(tid), tid % 4);
+            assert_eq!(t.home_pool(tid), tid % 4);
+        }
+        let s = Topology::single(cfg());
+        for tid in 0..16 {
+            assert_eq!(s.home_of(tid), 0);
+        }
+    }
+
+    #[test]
+    fn placement_parsing() {
+        assert_eq!(PlacementPolicy::parse("interleave"), Ok(PlacementPolicy::Interleave));
+        assert_eq!(PlacementPolicy::parse("colocate"), Ok(PlacementPolicy::Colocate));
+        assert_eq!(
+            PlacementPolicy::parse("pinned:0,1,1"),
+            Ok(PlacementPolicy::Pinned(vec![0, 1, 1]))
+        );
+        assert_eq!(
+            PlacementPolicy::parse(" pinned:2 "),
+            Ok(PlacementPolicy::Pinned(vec![2]))
+        );
+        assert!(PlacementPolicy::parse("pinned:").is_err());
+        assert!(PlacementPolicy::parse("pinned:a,b").is_err());
+        assert!(PlacementPolicy::parse("pinned:9999").is_err());
+        assert!(PlacementPolicy::parse("nearest").is_err());
+        // FromStr + Display roundtrip.
+        let p: PlacementPolicy = "pinned:0,1".parse().unwrap();
+        assert_eq!(p.to_string(), "pinned:0,1");
+        assert_eq!("colocate".parse::<PlacementPolicy>().unwrap().to_string(), "colocate");
+    }
+
+    #[test]
+    fn placement_pool_mapping() {
+        let i = PlacementPolicy::Interleave;
+        let c = PlacementPolicy::Colocate;
+        for s in 0..8 {
+            assert_eq!(i.pool_of(s, 2), s % 2);
+            assert_eq!(c.pool_of(s, 2), s % 2);
+        }
+        let p = PlacementPolicy::Pinned(vec![1, 0]);
+        assert_eq!(p.pool_of(0, 2), 1);
+        assert_eq!(p.pool_of(1, 2), 0);
+        assert_eq!(p.pool_of(2, 2), 1);
+        assert!(!i.prefers_home());
+        assert!(c.prefers_home());
+        assert!(p.prefers_home());
+    }
+
+    #[test]
+    fn pools_are_independent_arenas() {
+        let t = Topology::new(cfg(), 2);
+        let a0 = t.alloc_lines_on(0, 1);
+        let a1 = t.alloc_lines_on(1, 1);
+        t.store(0, a0, 7);
+        t.store(1, a1, 9);
+        assert_eq!(t.load(0, a0), 7);
+        assert_eq!(t.load(0, a1), 9);
+        // Same word index, different pools — no aliasing.
+        assert_eq!(a0.addr, a1.addr);
+        assert_ne!(a0, a1);
+    }
+
+    #[test]
+    fn coordinated_crash_is_one_cut() {
+        let t = Topology::new(cfg(), 2);
+        let a0 = t.alloc_lines_on(0, 1);
+        let a1 = t.alloc_lines_on(1, 1);
+        // Durable on pool 0; volatile on pool 1.
+        t.store(0, a0, 1);
+        t.pwb(0, a0);
+        t.psync_pool(0, 0);
+        t.store(0, a1, 2);
+        let mut rng = Xoshiro256::seed_from(3);
+        t.crash(&mut rng);
+        assert_eq!(t.epoch(), 1, "one crash = one epoch bump, not one per pool");
+        assert_eq!(t.load(0, a0), 1, "flushed line survives");
+        assert_eq!(t.load(0, a1), 0, "volatile line on the sibling pool dies at the same cut");
+    }
+
+    #[test]
+    fn countdown_spans_pools_and_unwinds_everywhere() {
+        install_quiet_crash_hook();
+        let t = Topology::new(cfg(), 2);
+        let a0 = t.alloc_lines_on(0, 1);
+        let a1 = t.alloc_lines_on(1, 1);
+        t.arm_crash_after(10);
+        let out = run_guarded(|| {
+            for i in 0..100u64 {
+                // Alternate pools: the shared countdown must fire even
+                // though neither pool sees 10 primitives on its own.
+                t.store(0, a0, i);
+                t.store(0, a1, i);
+            }
+        });
+        assert!(out.crashed(), "shared countdown must fire across pools");
+        let mut rng = Xoshiro256::seed_from(4);
+        t.crash(&mut rng);
+        t.store(0, a0, 1);
+        assert_eq!(t.load(0, a0), 1, "topology usable after the cut");
+    }
+
+    #[test]
+    fn clocks_are_one_timeline_across_pools() {
+        let t = Topology::new(cfg(), 2);
+        let a0 = t.alloc_lines_on(0, 1);
+        let a1 = t.alloc_lines_on(1, 1);
+        t.pool(0).set_hot(a0.addr, 1, Hotness::Private);
+        t.pool(1).set_hot(a1.addr, 1, Hotness::Private);
+        // Thread 0 (home socket 0): local store then remote store — the
+        // clock accumulates across pools instead of running two parallel
+        // timelines.
+        t.store(0, a0, 1);
+        let t_after_local = t.vtime(0);
+        assert!(t_after_local > 0);
+        t.store(0, a1, 1);
+        assert!(t.vtime(0) > t_after_local, "cross-pool work extends the same timeline");
+        assert_eq!(t.max_vtime(), t.vtime(0));
+        t.reset_meter();
+        assert_eq!(t.max_vtime(), 0);
+    }
+
+    #[test]
+    fn merged_stats_cover_all_pools() {
+        let t = Topology::new(cfg(), 3);
+        for pool in 0..3 {
+            let a = t.alloc_lines_on(pool, 1);
+            t.store(0, a, 1);
+            t.pwb(0, a);
+            t.psync_pool(0, pool);
+        }
+        let total = t.stats_total();
+        assert_eq!(total.stores, 3);
+        assert_eq!(total.pwbs, 3);
+        assert_eq!(total.psyncs, 3);
+        let per = t.stats_per_pool();
+        assert_eq!(per.len(), 3);
+        assert!(per.iter().all(|s| s.pwbs == 1));
+    }
+
+    #[test]
+    fn remote_penalty_keyed_on_home_socket() {
+        let t = Topology::new(cfg(), 2);
+        let c = t.primary().config().cost.clone();
+        // Thread 0 homes on socket 0, thread 1 on socket 1.
+        let a1 = t.alloc_lines_on(1, 1);
+        t.pool(1).set_hot(a1.addr, 1, Hotness::Private);
+        t.pwb(0, a1); // cross-socket
+        t.pwb(1, a1); // home
+        let s = t.stats_total();
+        assert_eq!(s.remote_ops, 1, "only the foreign thread's pwb is remote");
+        assert!(t.vtime(0) >= c.pwb_cost(1) + c.remote_pwb_ns);
+    }
+
+    #[test]
+    fn from_pool_shares_clock_domain() {
+        let t = Topology::new(cfg(), 2);
+        let wrapped = Topology::from_pool(t.primary());
+        assert_eq!(wrapped.len(), 1);
+        t.arm_crash_after(1);
+        // The wrapper sees the same armed cut.
+        install_quiet_crash_hook();
+        let a = wrapped.alloc_lines_on(0, 1);
+        let out = run_guarded(|| {
+            wrapped.store(0, a, 1);
+            wrapped.store(0, a, 2);
+        });
+        assert!(out.crashed());
+        let mut rng = Xoshiro256::seed_from(9);
+        t.crash(&mut rng);
+        assert_eq!(wrapped.epoch(), t.epoch());
+        // home_pool clamps a raw home into the wrapper's range.
+        assert_eq!(wrapped.home_of(1), 1, "raw home survives");
+        assert_eq!(wrapped.home_pool(1), 0, "clamped into the single-pool wrapper");
+    }
+}

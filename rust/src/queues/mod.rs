@@ -38,7 +38,7 @@ pub mod sharded;
 
 use std::sync::Arc;
 
-use crate::pmem::PmemPool;
+use crate::pmem::{PlacementPolicy, PmemPool, Topology};
 
 /// Maximum enqueueable item value (exclusive). Items occupy 62 bits; the
 /// framework reserves the top bits for sentinels.
@@ -95,6 +95,12 @@ pub trait PersistentQueue: ConcurrentQueue {
     /// The recovery function (paper §4). Runs single-threaded after a
     /// crash; also reinitializes any volatile bookkeeping this queue keeps
     /// outside the pool.
+    ///
+    /// Contract: `pool` must be the pool the queue was constructed on
+    /// (for a multi-pool queue, its topology's primary). Implementations
+    /// over several pools may recover from their construction-time
+    /// topology and ignore the argument — callers must not use this
+    /// parameter to retarget recovery at a different pool.
     fn recover(&self, pool: &PmemPool);
 
     /// Flush any thread-buffered state (e.g. the sharded queue's
@@ -161,6 +167,12 @@ pub struct QueueConfig {
     /// issue the dequeue-side `Head_i` `pwb` but defer its `psync` to the
     /// outer group-commit layer. Never enable directly.
     pub defer_dequeue_sync: bool,
+    /// How a [`sharded::ShardedQueue`] maps shards (and their batch
+    /// logs) onto the topology's pools, and whether threads prefer their
+    /// home socket's shards (see [`crate::pmem::PlacementPolicy`]).
+    /// Ignored by non-sharded algorithms and degenerate on a single-pool
+    /// topology (all policies coincide there).
+    pub placement: PlacementPolicy,
 }
 
 /// Upper bound on [`QueueConfig::shards`].
@@ -184,6 +196,7 @@ impl Default for QueueConfig {
             batch_deq: 1,
             defer_enqueue_sync: false,
             defer_dequeue_sync: false,
+            placement: PlacementPolicy::Interleave,
         }
     }
 }
@@ -209,6 +222,13 @@ impl QueueConfig {
         if self.batch_deq == 0 || self.batch_deq > MAX_BATCH {
             return Err(QueueError::BadConfig("batch-deq must be in 1..=32"));
         }
+        if let PlacementPolicy::Pinned(list) = &self.placement {
+            if list.is_empty() {
+                return Err(QueueError::BadConfig(
+                    "pinned placement needs at least one pool id",
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -227,44 +247,60 @@ pub enum HeadPersistMode {
     None,
 }
 
-/// Everything needed to build a queue instance.
+/// Everything needed to build a queue instance. Queues address memory
+/// through the [`Topology`]: single-pool algorithms build on
+/// [`QueueCtx::pool`] (the primary), the sharded layer places shards
+/// across all pools per [`QueueConfig::placement`].
 pub struct QueueCtx {
-    pub pool: Arc<PmemPool>,
+    pub topo: Topology,
     pub nthreads: usize,
     pub cfg: QueueConfig,
+}
+
+impl QueueCtx {
+    /// Build a single-pool context (the degenerate topology) — the
+    /// common case for tests and single-socket benches.
+    pub fn single(pmem: crate::pmem::PmemConfig, nthreads: usize, cfg: QueueConfig) -> QueueCtx {
+        QueueCtx { topo: Topology::single(pmem), nthreads, cfg }
+    }
+
+    /// The primary pool — where single-pool algorithms live.
+    pub fn pool(&self) -> &Arc<PmemPool> {
+        self.topo.primary()
+    }
 }
 
 /// Registry of all benchmarkable algorithms: name → constructor.
 /// Persistent algorithms additionally appear in [`persistent_registry`].
 pub fn registry() -> Vec<(&'static str, fn(&QueueCtx) -> Arc<dyn ConcurrentQueue>)> {
     vec![
-        ("msq", |c| Arc::new(msq::MsQueue::new(&c.pool, c.nthreads))),
-        ("durable-msq", |c| Arc::new(durable_msq::DurableMsQueue::new(&c.pool, c.nthreads))),
-        ("iq", |c| Arc::new(iq::Iq::new(&c.pool, c.nthreads, c.cfg.clone()))),
-        ("periq", |c| Arc::new(periq::PerIq::new(&c.pool, c.nthreads, c.cfg.clone()))),
-        ("lcrq", |c| Arc::new(lcrq::Lcrq::new(&c.pool, c.nthreads, c.cfg.clone()))),
-        ("perlcrq", |c| Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, c.cfg.clone()))),
+        ("msq", |c| Arc::new(msq::MsQueue::new(c.pool(), c.nthreads))),
+        ("durable-msq", |c| Arc::new(durable_msq::DurableMsQueue::new(c.pool(), c.nthreads))),
+        ("iq", |c| Arc::new(iq::Iq::new(c.pool(), c.nthreads, c.cfg.clone()))),
+        ("periq", |c| Arc::new(periq::PerIq::new(c.pool(), c.nthreads, c.cfg.clone()))),
+        ("lcrq", |c| Arc::new(lcrq::Lcrq::new(c.pool(), c.nthreads, c.cfg.clone()))),
+        ("perlcrq", |c| Arc::new(perlcrq::PerLcrq::new(c.pool(), c.nthreads, c.cfg.clone()))),
         ("perlcrq-phead", |c| {
             let mut cfg = c.cfg.clone();
             cfg.head_mode = HeadPersistMode::Shared;
-            Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, cfg))
+            Arc::new(perlcrq::PerLcrq::new(c.pool(), c.nthreads, cfg))
         }),
         ("perlcrq-nohead", |c| {
             let mut cfg = c.cfg.clone();
             cfg.head_mode = HeadPersistMode::None;
-            Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, cfg))
+            Arc::new(perlcrq::PerLcrq::new(c.pool(), c.nthreads, cfg))
         }),
         ("perlcrq-notail", |c| {
             let mut cfg = c.cfg.clone();
             cfg.skip_tail_persist = true;
-            Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, cfg))
+            Arc::new(perlcrq::PerLcrq::new(c.pool(), c.nthreads, cfg))
         }),
-        ("pbqueue", |c| Arc::new(combining::pbqueue::PbQueue::new(&c.pool, c.nthreads))),
-        ("pwfqueue", |c| Arc::new(combining::pwfqueue::PwfQueue::new(&c.pool, c.nthreads))),
-        ("ccqueue", |c| Arc::new(combining::ccqueue::CcQueue::new(&c.pool, c.nthreads))),
+        ("pbqueue", |c| Arc::new(combining::pbqueue::PbQueue::new(c.pool(), c.nthreads))),
+        ("pwfqueue", |c| Arc::new(combining::pwfqueue::PwfQueue::new(c.pool(), c.nthreads))),
+        ("ccqueue", |c| Arc::new(combining::ccqueue::CcQueue::new(c.pool(), c.nthreads))),
         ("sharded-perlcrq", |c| {
             Arc::new(
-                sharded::ShardedQueue::new_perlcrq(&c.pool, c.nthreads, c.cfg.clone())
+                sharded::ShardedQueue::new_perlcrq(&c.topo, c.nthreads, c.cfg.clone())
                     .expect("invalid sharded config (call QueueConfig::validate first)"),
             )
         }),
@@ -286,19 +322,19 @@ pub fn persistent_names() -> Vec<&'static str> {
 /// tests and recovery benches: name → constructor.
 pub fn persistent_registry() -> Vec<(&'static str, fn(&QueueCtx) -> Arc<dyn PersistentQueue>)> {
     vec![
-        ("periq", |c| Arc::new(periq::PerIq::new(&c.pool, c.nthreads, c.cfg.clone()))),
-        ("perlcrq", |c| Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, c.cfg.clone()))),
+        ("periq", |c| Arc::new(periq::PerIq::new(c.pool(), c.nthreads, c.cfg.clone()))),
+        ("perlcrq", |c| Arc::new(perlcrq::PerLcrq::new(c.pool(), c.nthreads, c.cfg.clone()))),
         ("perlcrq-phead", |c| {
             let mut cfg = c.cfg.clone();
             cfg.head_mode = HeadPersistMode::Shared;
-            Arc::new(perlcrq::PerLcrq::new(&c.pool, c.nthreads, cfg))
+            Arc::new(perlcrq::PerLcrq::new(c.pool(), c.nthreads, cfg))
         }),
-        ("pbqueue", |c| Arc::new(combining::pbqueue::PbQueue::new(&c.pool, c.nthreads))),
-        ("pwfqueue", |c| Arc::new(combining::pwfqueue::PwfQueue::new(&c.pool, c.nthreads))),
-        ("durable-msq", |c| Arc::new(durable_msq::DurableMsQueue::new(&c.pool, c.nthreads))),
+        ("pbqueue", |c| Arc::new(combining::pbqueue::PbQueue::new(c.pool(), c.nthreads))),
+        ("pwfqueue", |c| Arc::new(combining::pwfqueue::PwfQueue::new(c.pool(), c.nthreads))),
+        ("durable-msq", |c| Arc::new(durable_msq::DurableMsQueue::new(c.pool(), c.nthreads))),
         ("sharded-perlcrq", |c| {
             Arc::new(
-                sharded::ShardedQueue::new_perlcrq(&c.pool, c.nthreads, c.cfg.clone())
+                sharded::ShardedQueue::new_perlcrq(&c.topo, c.nthreads, c.cfg.clone())
                     .expect("invalid sharded config (call QueueConfig::validate first)"),
             )
         }),
@@ -375,5 +411,13 @@ mod tests {
         assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
         let bad = QueueConfig { iq_capacity: 0, ..Default::default() };
         assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad =
+            QueueConfig { placement: PlacementPolicy::Pinned(vec![]), ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let ok = QueueConfig {
+            placement: PlacementPolicy::Pinned(vec![0, 1]),
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
     }
 }

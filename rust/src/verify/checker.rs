@@ -92,6 +92,11 @@ pub struct CheckOptions {
     /// with buffered durability an EMPTY may legitimately overlap another
     /// thread's not-yet-flushed enqueues.
     pub check_empty: bool,
+    /// Record every dequeue's overtake count into
+    /// [`CheckReport::overtake_counts`] (one entry per checked dequeue) —
+    /// the input to [`calibrate_relaxation`]. Off by default: the
+    /// distribution costs memory proportional to the history.
+    pub collect_overtakes: bool,
 }
 
 impl Default for CheckOptions {
@@ -103,6 +108,7 @@ impl Default for CheckOptions {
             trailing_redelivery_per_thread: 0,
             crashed_epochs: 0,
             check_empty: true,
+            collect_overtakes: false,
         }
     }
 }
@@ -130,6 +136,58 @@ pub fn relaxation_for(
     }
 }
 
+/// Summary of an observed overtake distribution (reported by
+/// `persiq verify --relax auto`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OvertakeStats {
+    pub checked: usize,
+    pub p50: usize,
+    pub p99: usize,
+    pub max: usize,
+}
+
+/// Summarize a collected overtake distribution
+/// ([`CheckReport::overtake_counts`]).
+pub fn overtake_stats(counts: &[usize]) -> OvertakeStats {
+    if counts.is_empty() {
+        return OvertakeStats::default();
+    }
+    let mut sorted = counts.to_vec();
+    sorted.sort_unstable();
+    let q = |p: f64| -> usize {
+        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    };
+    OvertakeStats {
+        checked: sorted.len(),
+        p50: q(0.50),
+        p99: q(0.99),
+        max: *sorted.last().unwrap(),
+    }
+}
+
+/// Derive a relaxation bound `k` from an **observed** overtake
+/// distribution, instead of the conservative static
+/// [`relaxation_for`] formula: the bound is the observed maximum plus
+/// headroom (25%, at least 8) for the tail the sample missed. A fully
+/// ordered sample (max = 0) calibrates to `0` — the strict bound is the
+/// honest reading, and padding it would *weaken* the check for
+/// strict-FIFO algorithms. A history re-checked against its own
+/// calibrated bound passes by construction — the value of `--relax auto`
+/// is the *reported* bound (how relaxed the configuration actually runs,
+/// typically orders of magnitude below the static formula) and the
+/// regression signal when a future run exceeds a previously calibrated
+/// bound. Only meaningful for relaxed (sharded) algorithms; `persiq
+/// verify` keeps strict queues at `k = 0` regardless.
+pub fn calibrate_relaxation(counts: &[usize]) -> usize {
+    let max = counts.iter().copied().max().unwrap_or(0);
+    if max == 0 {
+        0
+    } else {
+        max + (max / 4).max(8)
+    }
+}
+
 /// Check outcome.
 #[derive(Clone, Debug, Default)]
 pub struct CheckReport {
@@ -154,6 +212,10 @@ pub struct CheckReport {
     /// Largest observed overtake count across dequeues (how relaxed the
     /// history actually was; useful for calibrating `relaxation`).
     pub max_overtakes: usize,
+    /// Per-dequeue overtake counts (only when
+    /// [`CheckOptions::collect_overtakes`]; one entry per dequeue the V3
+    /// sweep checked). Feed to [`calibrate_relaxation`].
+    pub overtake_counts: Vec<usize>,
 }
 
 impl CheckReport {
@@ -450,6 +512,9 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
             let le = bit.prefix(dinvs.partition_point(|&d| d <= dresp_b));
             let overtakes = inserted - le;
             report.max_overtakes = report.max_overtakes.max(overtakes);
+            if opts.collect_overtakes {
+                report.overtake_counts.push(overtakes);
+            }
             if overtakes > opts.relaxation {
                 push(
                     &mut report.violations,
@@ -693,6 +758,56 @@ mod tests {
         let r = check_relaxed(&h, 1);
         assert!(r.ok(), "{:?}", r.violations);
         assert_eq!(r.max_overtakes, 1);
+    }
+
+    #[test]
+    fn overtake_distribution_collection_and_calibration() {
+        // Value 4 overtakes 1, 2, 3; the rest are in order.
+        let mut events = Vec::new();
+        let mut seq = 0u64;
+        for v in 1..=4u64 {
+            events.push(ev(seq, 0, K::EnqInvoke { value: v }));
+            seq += 1;
+            events.push(ev(seq, 0, K::EnqOk { value: v }));
+            seq += 1;
+        }
+        for v in [4u64, 1, 2, 3] {
+            events.push(ev(seq, 1, K::DeqInvoke));
+            seq += 1;
+            events.push(ev(seq, 1, K::DeqOk { value: v }));
+            seq += 1;
+        }
+        let h = hist(events, vec![]);
+        let r = check_with(
+            &h,
+            &CheckOptions {
+                relaxation: usize::MAX,
+                collect_overtakes: true,
+                ..Default::default()
+            },
+        );
+        assert!(r.ok(), "{:?}", r.violations);
+        assert!(!r.overtake_counts.is_empty());
+        assert_eq!(*r.overtake_counts.iter().max().unwrap(), 3);
+        let stats = overtake_stats(&r.overtake_counts);
+        assert_eq!(stats.max, 3);
+        assert!(stats.p50 <= stats.p99 && stats.p99 <= stats.max);
+        let k = calibrate_relaxation(&r.overtake_counts);
+        assert!(k >= 3, "calibrated bound must cover the observed max");
+        // The history passes its own calibrated bound.
+        assert!(check_relaxed(&h, k).ok());
+        // Collection off by default: no distribution is stored.
+        let r0 = check_relaxed(&h, 3);
+        assert!(r0.overtake_counts.is_empty());
+    }
+
+    #[test]
+    fn calibration_headroom() {
+        assert_eq!(calibrate_relaxation(&[]), 0, "no overtakes observed: strict bound");
+        assert_eq!(calibrate_relaxation(&[0, 0, 0]), 0, "fully ordered: strict bound");
+        assert_eq!(calibrate_relaxation(&[10]), 18, "10 + max(10/4, 8)");
+        assert_eq!(calibrate_relaxation(&[100]), 125, "100 + 25%");
+        assert_eq!(overtake_stats(&[]), OvertakeStats::default());
     }
 
     #[test]

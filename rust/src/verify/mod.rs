@@ -41,7 +41,7 @@ pub mod history;
 pub mod proptest;
 
 pub use checker::{
-    check, check_relaxed, check_with, relaxation_for, shard_relaxation, CheckOptions,
-    CheckReport, Violation,
+    calibrate_relaxation, check, check_relaxed, check_with, overtake_stats, relaxation_for,
+    shard_relaxation, CheckOptions, CheckReport, OvertakeStats, Violation,
 };
 pub use history::{Event, EventKind, History, Recorder};

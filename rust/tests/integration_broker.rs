@@ -5,25 +5,32 @@ use std::sync::Arc;
 
 use persiq::coordinator::{run_service, Broker, JobState, ServiceConfig};
 use persiq::pmem::crash::install_quiet_crash_hook;
-use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::pmem::{PmemConfig, Topology};
 
-fn mk(cap_words: usize) -> (Arc<PmemPool>, Arc<Broker>) {
-    let pool = Arc::new(PmemPool::new(PmemConfig {
-        capacity_words: cap_words,
-        evict_prob: 0.25,
-        pending_flush_prob: 0.5,
-        seed: 77,
-        ..Default::default()
-    }));
-    let broker = Arc::new(Broker::new(&pool, 8, 1 << 16, 1 << 10));
-    (pool, broker)
+fn mk(cap_words: usize) -> (Topology, Arc<Broker>) {
+    mk_topo(cap_words, 1)
+}
+
+fn mk_topo(cap_words: usize, pools: usize) -> (Topology, Arc<Broker>) {
+    let topo = Topology::new(
+        PmemConfig {
+            capacity_words: cap_words,
+            evict_prob: 0.25,
+            pending_flush_prob: 0.5,
+            seed: 77,
+            ..Default::default()
+        },
+        pools,
+    );
+    let broker = Arc::new(Broker::new_on(&topo, 8, 1 << 16, 1 << 10));
+    (topo, broker)
 }
 
 #[test]
 fn service_end_to_end_no_crash() {
-    let (pool, broker) = mk(1 << 22);
+    let (topo, broker) = mk(1 << 22);
     let rep = run_service(
-        &pool,
+        &topo,
         &broker,
         &ServiceConfig {
             producers: 2,
@@ -42,9 +49,9 @@ fn service_end_to_end_no_crash() {
 #[test]
 fn service_with_crashes_exactly_once() {
     install_quiet_crash_hook();
-    let (pool, broker) = mk(1 << 23);
+    let (topo, broker) = mk(1 << 23);
     let rep = run_service(
-        &pool,
+        &topo,
         &broker,
         &ServiceConfig {
             producers: 2,
@@ -64,7 +71,7 @@ fn service_with_crashes_exactly_once() {
 #[test]
 fn payload_integrity_across_crash() {
     install_quiet_crash_hook();
-    let (pool, broker) = mk(1 << 22);
+    let (topo, broker) = mk(1 << 22);
     let payloads: Vec<Vec<u8>> =
         (0..50u8).map(|i| format!("payload-{i:03}-{}", "x".repeat(i as usize % 20)).into_bytes()).collect();
     let mut ids = Vec::new();
@@ -72,7 +79,7 @@ fn payload_integrity_across_crash() {
         ids.push(broker.submit(0, p).unwrap());
     }
     let mut rng = persiq::util::rng::Xoshiro256::seed_from(5);
-    pool.crash(&mut rng);
+    topo.crash(&mut rng);
     broker.recover();
     for (i, expect) in payloads.iter().enumerate() {
         let (jid, got) = broker.take(1).unwrap().expect("job missing");
@@ -81,4 +88,34 @@ fn payload_integrity_across_crash() {
         assert_eq!(broker.state(0, ids[i]), JobState::Done);
     }
     assert!(broker.take(1).unwrap().is_none());
+}
+
+#[test]
+fn payload_integrity_across_crash_on_two_pools() {
+    // Records submitted from both home sockets survive a coordinated
+    // crash with their payloads intact; audits walk both pools' logs.
+    install_quiet_crash_hook();
+    let (topo, broker) = mk_topo(1 << 22, 2);
+    let mut expected = Vec::new();
+    for i in 0..40u8 {
+        let tid = (i % 2) as usize; // alternate home pools
+        let payload = format!("pool{}-job-{i:03}", tid).into_bytes();
+        broker.submit(tid, &payload).unwrap();
+        expected.push(payload);
+    }
+    let mut rng = persiq::util::rng::Xoshiro256::seed_from(6);
+    topo.crash(&mut rng);
+    broker.recover();
+    let mut got = Vec::new();
+    while let Some((jid, payload)) = broker.take(2).unwrap() {
+        assert!(broker.complete(2, jid).unwrap());
+        got.push(payload);
+    }
+    got.sort_unstable();
+    expected.sort_unstable();
+    assert_eq!(got, expected, "payloads must survive the coordinated 2-pool crash");
+    let audit = broker.audit(0);
+    assert_eq!(audit.submitted, 40);
+    assert_eq!(audit.done, 40);
+    assert_eq!(broker.reconcile_report(0).mismatches(), 0);
 }

@@ -6,16 +6,16 @@ use std::sync::Arc;
 
 use persiq::harness::runner::{drain_all, run_workload, RunConfig};
 use persiq::harness::Workload;
-use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::pmem::{PmemConfig, PmemPool, Topology};
 use persiq::queues::{registry, QueueConfig, QueueCtx};
 use persiq::verify::{check_relaxed, relaxation_for, History};
 
 fn ctx(nthreads: usize) -> QueueCtx {
-    QueueCtx {
-        pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 22).with_seed(7))),
+    QueueCtx::single(
+        PmemConfig::default().with_capacity(1 << 22).with_seed(7),
         nthreads,
-        cfg: QueueConfig::default(),
-    }
+        QueueConfig::default(),
+    )
 }
 
 #[test]
@@ -24,7 +24,7 @@ fn every_algorithm_passes_verified_pairs_workload() {
         let c = ctx(4);
         let q = ctor(&c);
         let r = run_workload(
-            &c.pool,
+            &c.topo,
             &q,
             &RunConfig { nthreads: 4, total_ops: 20_000, record: true, ..Default::default() },
         );
@@ -43,7 +43,7 @@ fn every_algorithm_passes_random_workload() {
         let c = ctx(4);
         let q = ctor(&c);
         let r = run_workload(
-            &c.pool,
+            &c.topo,
             &q,
             &RunConfig {
                 nthreads: 4,
@@ -73,7 +73,7 @@ fn virtual_time_orders_algorithms_as_the_paper_claims() {
         let c = ctx(16);
         let q = persiq::queues::by_name(algo).unwrap()(&c);
         run_workload(
-            &c.pool,
+            &c.topo,
             &q,
             &RunConfig { nthreads: 16, total_ops: 30_000, ..Default::default() },
         )
@@ -98,14 +98,77 @@ fn persistence_instruction_counts_match_paper() {
     let c = ctx(2);
     let q = persiq::queues::by_name("perlcrq").unwrap()(&c);
     let r = run_workload(
-        &c.pool,
+        &c.topo,
         &q,
         &RunConfig { nthreads: 2, total_ops: 10_000, ..Default::default() },
     );
-    let t = c.pool.stats.total();
+    let t = c.topo.stats_total();
     let pwbs_per_op = t.pwbs as f64 / r.ops_done as f64;
     assert!(
         (pwbs_per_op - 1.0).abs() < 0.05,
         "PerLCRQ must do ~1 pwb/op, got {pwbs_per_op:.3}"
     );
+}
+
+#[test]
+fn single_pool_topology_matches_bare_pool_costs_and_history() {
+    // The refactor's compatibility bar: an algorithm built on
+    // Topology::single's primary pool must produce the same delivery
+    // order AND the same virtual time as one built on a bare PmemPool
+    // with the identical config.
+    let pcfg = || PmemConfig::default().with_capacity(1 << 22).with_seed(7);
+    let run = |pool: &Arc<PmemPool>| -> (Vec<u64>, u64) {
+        let q = persiq::queues::perlcrq::PerLcrq::new(pool, 2, QueueConfig::default());
+        pool.set_active_threads(2);
+        for v in 0..256u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        let mut out = Vec::new();
+        while let Some(v) = q.dequeue(1).unwrap() {
+            out.push(v);
+        }
+        (out, pool.max_vtime())
+    };
+    let bare = Arc::new(PmemPool::new(pcfg()));
+    let topo = Topology::single(pcfg());
+    let (h_bare, t_bare) = run(&bare);
+    let (h_topo, t_topo) = run(topo.primary());
+    assert_eq!(h_bare, h_topo, "degenerate topology must not change the history");
+    assert_eq!(t_bare, t_topo, "degenerate topology must charge identical costs");
+}
+
+#[test]
+fn sharded_runs_identically_on_every_placement_at_one_pool() {
+    // All three placement policies collapse to the same dispatch on a
+    // single pool: a deterministic single-threaded run through the full
+    // harness yields the exact same delivery order.
+    use persiq::pmem::PlacementPolicy;
+    let histories: Vec<Vec<u64>> = ["interleave", "colocate", "pinned:0"]
+        .iter()
+        .map(|p| {
+            let mut cfg = QueueConfig { shards: 4, batch: 4, ..Default::default() };
+            cfg.placement = PlacementPolicy::parse(p).unwrap();
+            let c = QueueCtx::single(
+                PmemConfig::default().with_capacity(1 << 22).with_seed(7),
+                1,
+                cfg,
+            );
+            let q = persiq::queues::by_name("sharded-perlcrq").unwrap()(&c);
+            let r = run_workload(
+                &c.topo,
+                &q,
+                &RunConfig {
+                    nthreads: 1,
+                    total_ops: 8_000,
+                    workload: Workload::EnqOnly,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(r.ops_done, 8_000, "{p}");
+            drain_all(&q, 0)
+        })
+        .collect();
+    assert_eq!(histories[0].len(), 8_000);
+    assert_eq!(histories[0], histories[1], "colocate must degenerate to interleave");
+    assert_eq!(histories[0], histories[2], "pinned:0 must degenerate to interleave");
 }

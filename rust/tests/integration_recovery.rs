@@ -6,23 +6,23 @@ use std::sync::Arc;
 use persiq::harness::failure::{run_cycles, CycleConfig};
 use persiq::harness::runner::{drain_all, run_workload, RunConfig};
 use persiq::pmem::crash::install_quiet_crash_hook;
-use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::pmem::PmemConfig;
 use persiq::queues::{persistent_registry, QueueConfig, QueueCtx};
 use persiq::util::rng::Xoshiro256;
 use persiq::verify::{check_relaxed, relaxation_for, History};
 
 fn ctx() -> QueueCtx {
-    QueueCtx {
-        pool: Arc::new(PmemPool::new(PmemConfig {
+    QueueCtx::single(
+        PmemConfig {
             capacity_words: 1 << 23,
             evict_prob: 0.25,
             pending_flush_prob: 0.5,
             seed: 31,
             ..Default::default()
-        })),
-        nthreads: 4,
-        cfg: QueueConfig::default(),
-    }
+        },
+        4,
+        QueueConfig::default(),
+    )
 }
 
 #[test]
@@ -32,7 +32,7 @@ fn all_persistent_queues_survive_cycles() {
         let c = ctx();
         let q = ctor(&c);
         let res = run_cycles(
-            &c.pool,
+            &c.topo,
             &q,
             &CycleConfig {
                 cycles: 3,
@@ -61,9 +61,9 @@ fn verified_crash_cycles_for_all_persistent_queues() {
         let mut rng = Xoshiro256::seed_from(17);
         let mut logs = Vec::new();
         for cycle in 0..3 {
-            c.pool.arm_crash_after(20_000);
+            c.topo.arm_crash_after(20_000);
             let r = run_workload(
-                &c.pool,
+                &c.topo,
                 &qc,
                 &RunConfig {
                     nthreads: 4,
@@ -75,8 +75,8 @@ fn verified_crash_cycles_for_all_persistent_queues() {
                 },
             );
             logs.extend(r.logs);
-            c.pool.crash(&mut rng);
-            q.recover(&c.pool);
+            c.topo.crash(&mut rng);
+            q.recover(c.pool());
         }
         let drained = drain_all(&qc, 0);
         let h = History::from_logs(logs, drained);
@@ -95,10 +95,10 @@ fn double_crash_without_ops_is_stable() {
             q.enqueue(0, v).unwrap();
         }
         let mut rng = Xoshiro256::seed_from(23);
-        c.pool.crash(&mut rng);
-        q.recover(&c.pool);
-        c.pool.crash(&mut rng);
-        q.recover(&c.pool);
+        c.topo.crash(&mut rng);
+        q.recover(c.pool());
+        c.topo.crash(&mut rng);
+        q.recover(c.pool());
         let mut out = Vec::new();
         while let Some(v) = q.dequeue(1).unwrap() {
             out.push(v);
@@ -115,20 +115,20 @@ fn recovery_cost_scales_with_scan_for_pure_periq() {
         // evict_prob = 0: random eviction can persist the endpoints and
         // legitimately shortcut pure-PerIQ recovery, which is exactly the
         // variance this growth assertion must not depend on.
-        let c = QueueCtx {
-            pool: Arc::new(PmemPool::new(PmemConfig {
+        let c = QueueCtx::single(
+            PmemConfig {
                 capacity_words: 1 << 23,
                 evict_prob: 0.0,
                 pending_flush_prob: 0.0,
                 seed: 3,
                 ..Default::default()
-            })),
-            nthreads: 4,
-            cfg: QueueConfig { iq_capacity: 1 << 19, ..Default::default() },
-        };
+            },
+            4,
+            QueueConfig { iq_capacity: 1 << 19, ..Default::default() },
+        );
         let q = persiq::queues::persistent_by_name("periq").unwrap()(&c);
         let res = run_cycles(
-            &c.pool,
+            &c.topo,
             &q,
             &CycleConfig {
                 cycles: 2,

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use persiq::coordinator::{run_service, Broker, ServiceConfig};
 use persiq::harness::runner::{drain_all, run_workload, RunConfig};
 use persiq::pmem::crash::install_quiet_crash_hook;
-use persiq::pmem::{CostModel, PmemConfig, PmemPool};
+use persiq::pmem::{CostModel, PlacementPolicy, PmemConfig, Topology};
 use persiq::queues::{persistent_by_name, ConcurrentQueue, QueueConfig, QueueCtx};
 use persiq::util::rng::Xoshiro256;
 use persiq::verify::{check_with, shard_relaxation, CheckOptions, History};
@@ -20,31 +20,67 @@ fn sharded_ctx(
     batch_deq: usize,
     cap: usize,
 ) -> QueueCtx {
+    sharded_ctx_topo(nthreads, shards, batch, batch_deq, cap, 1, PlacementPolicy::Interleave)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sharded_ctx_topo(
+    nthreads: usize,
+    shards: usize,
+    batch: usize,
+    batch_deq: usize,
+    cap: usize,
+    pools: usize,
+    placement: PlacementPolicy,
+) -> QueueCtx {
     QueueCtx {
-        pool: Arc::new(PmemPool::new(PmemConfig {
-            capacity_words: cap,
-            cost: CostModel::default(),
-            evict_prob: 0.25,
-            pending_flush_prob: 0.5,
-            seed: 23,
-        })),
+        topo: Topology::new(
+            PmemConfig {
+                capacity_words: cap,
+                cost: CostModel::default(),
+                evict_prob: 0.25,
+                pending_flush_prob: 0.5,
+                seed: 23,
+            },
+            pools,
+        ),
         nthreads,
-        cfg: QueueConfig { shards, batch, batch_deq, ring_size: 256, ..Default::default() },
+        cfg: QueueConfig {
+            shards,
+            batch,
+            batch_deq,
+            ring_size: 256,
+            placement,
+            ..Default::default()
+        },
     }
 }
 
 /// Drive `sharded-perlcrq` through recorded crash cycles and check the
 /// history with the given options. Mirrors `persiq verify`.
 fn verify_sharded(shards: usize, batch: usize, batch_deq: usize, cycles: usize, seed: u64) {
+    verify_sharded_topo(shards, batch, batch_deq, cycles, seed, 1, PlacementPolicy::Interleave);
+}
+
+fn verify_sharded_topo(
+    shards: usize,
+    batch: usize,
+    batch_deq: usize,
+    cycles: usize,
+    seed: u64,
+    pools: usize,
+    placement: PlacementPolicy,
+) {
     install_quiet_crash_hook();
     let nthreads = 4;
-    let ctx = sharded_ctx(nthreads, shards, batch, batch_deq, 1 << 23);
+    let ctx =
+        sharded_ctx_topo(nthreads, shards, batch, batch_deq, 1 << 23, pools, placement.clone());
     let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
     let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
     let mut rng = Xoshiro256::seed_from(seed);
     let mut logs = Vec::new();
     for cycle in 0..cycles {
-        ctx.pool.arm_crash_after(20_000);
+        ctx.topo.arm_crash_after(20_000);
         let rc = RunConfig {
             nthreads,
             total_ops: 30_000,
@@ -53,10 +89,10 @@ fn verify_sharded(shards: usize, batch: usize, batch_deq: usize, cycles: usize, 
             seed: seed ^ (cycle as u64) << 16,
             ..Default::default()
         };
-        let r = run_workload(&ctx.pool, &as_conc, &rc);
+        let r = run_workload(&ctx.topo, &as_conc, &rc);
         logs.extend(r.logs);
-        ctx.pool.crash(&mut rng);
-        q.recover(&ctx.pool);
+        ctx.topo.crash(&mut rng);
+        q.recover(ctx.pool());
     }
     let drained = drain_all(&as_conc, 0);
     let history = History::from_logs(logs, drained);
@@ -67,12 +103,13 @@ fn verify_sharded(shards: usize, batch: usize, batch_deq: usize, cycles: usize, 
         trailing_redelivery_per_thread: batch_deq.saturating_sub(1),
         crashed_epochs: cycles as u64,
         check_empty: batch <= 1,
+        ..Default::default()
     };
     let rep = check_with(&history, &opts);
     assert!(
         rep.ok(),
-        "shards={shards} batch={batch} batch_deq={batch_deq}: violations {:?} \
-         (max_overtakes={})",
+        "shards={shards} batch={batch} batch_deq={batch_deq} pools={pools} \
+         placement={placement}: violations {:?} (max_overtakes={})",
         rep.violations,
         rep.max_overtakes
     );
@@ -114,12 +151,38 @@ fn both_sides_max_batch_cycles() {
     verify_sharded(2, 8, 8, 6, 0xFEED);
 }
 
+#[test]
+fn two_pool_interleave_batched_cycles() {
+    // Batches span both pools: every flush issues one psync per touched
+    // pool and crashes land between them (the torn cross-pool flush
+    // window) — the relaxed checker must still accept the history.
+    verify_sharded_topo(4, 4, 4, 10, 0x2B001, 2, PlacementPolicy::Interleave);
+}
+
+#[test]
+fn two_pool_colocate_batched_cycles() {
+    verify_sharded_topo(4, 4, 4, 10, 0x2B002, 2, PlacementPolicy::Colocate);
+}
+
+#[test]
+fn two_pool_pinned_batched_cycles() {
+    // Everything pinned onto pool 1 while logs stay on each thread's home
+    // pool: enqueue cells and batch logs durably commit on different
+    // pools for the socket-0 threads.
+    verify_sharded_topo(4, 4, 4, 8, 0x2B003, 2, PlacementPolicy::Pinned(vec![1]));
+}
+
+#[test]
+fn four_pool_colocate_unbatched_cycles() {
+    verify_sharded_topo(8, 1, 1, 6, 0x2B004, 4, PlacementPolicy::Colocate);
+}
+
 fn sim_mops(shards: usize, batch: usize, nthreads: usize, ops: u64) -> f64 {
     let ctx = sharded_ctx(nthreads, shards, batch, 1, 1 << 23);
     let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
     let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
     let rc = RunConfig { nthreads, total_ops: ops, seed: 7, ..Default::default() };
-    run_workload(&ctx.pool, &as_conc, &rc).sim_mops
+    run_workload(&ctx.topo, &as_conc, &rc).sim_mops
 }
 
 #[test]
@@ -138,8 +201,8 @@ fn batching_amortizes_psyncs_per_op() {
     let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
     let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
     let rc = RunConfig { nthreads: 4, total_ops: 20_000, seed: 11, ..Default::default() };
-    let r = run_workload(&ctx.pool, &as_conc, &rc);
-    let stats = ctx.pool.stats.total();
+    let r = run_workload(&ctx.topo, &as_conc, &rc);
+    let stats = ctx.topo.stats_total();
     let psyncs_per_op = stats.psyncs as f64 / r.ops_done.max(1) as f64;
     // Half the ops are dequeues (one psync each); enqueues contribute
     // ~1/8 psync each. Expect well under the per-op regime's ~1.0.
@@ -160,8 +223,8 @@ fn both_sides_batching_amortizes_psyncs_per_op() {
     let q = persistent_by_name("sharded-perlcrq").unwrap()(&ctx);
     let as_conc: Arc<dyn ConcurrentQueue> = Arc::clone(&q) as _;
     let rc = RunConfig { nthreads: 4, total_ops: 20_000, seed: 11, ..Default::default() };
-    let r = run_workload(&ctx.pool, &as_conc, &rc);
-    let stats = ctx.pool.stats.total();
+    let r = run_workload(&ctx.topo, &as_conc, &rc);
+    let stats = ctx.topo.stats_total();
     let psyncs_per_op = stats.psyncs as f64 / r.ops_done.max(1) as f64;
     assert!(
         psyncs_per_op < 2.0 / k as f64,
@@ -178,18 +241,18 @@ fn broker_on_batched_dequeue_work_queue_exactly_once_across_crashes() {
     // queue↔SubmitLog reconciliation stays exact — every job completes
     // exactly once even when the consuming dequeues crash mid-batch.
     install_quiet_crash_hook();
-    let pool = Arc::new(PmemPool::new(PmemConfig {
+    let topo = Topology::single(PmemConfig {
         capacity_words: 1 << 23,
         evict_prob: 0.25,
         pending_flush_prob: 0.5,
         seed: 41,
         ..Default::default()
-    }));
+    });
     let qcfg =
         QueueConfig { shards: 4, batch: 4, batch_deq: 4, ring_size: 256, ..Default::default() };
-    let broker = Arc::new(Broker::new_sharded(&pool, 4, 1 << 16, qcfg).unwrap());
+    let broker = Arc::new(Broker::new_sharded(&topo, 4, 1 << 16, qcfg).unwrap());
     let rep = run_service(
-        &pool,
+        &topo,
         &broker,
         &ServiceConfig {
             producers: 2,
@@ -212,17 +275,17 @@ fn broker_on_batched_dequeue_work_queue_exactly_once_across_crashes() {
 #[test]
 fn broker_on_sharded_queue_exactly_once_across_crashes() {
     install_quiet_crash_hook();
-    let pool = Arc::new(PmemPool::new(PmemConfig {
+    let topo = Topology::single(PmemConfig {
         capacity_words: 1 << 23,
         evict_prob: 0.25,
         pending_flush_prob: 0.5,
         seed: 31,
         ..Default::default()
-    }));
+    });
     let qcfg = QueueConfig { shards: 4, batch: 4, ring_size: 256, ..Default::default() };
-    let broker = Arc::new(Broker::new_sharded(&pool, 4, 1 << 16, qcfg).unwrap());
+    let broker = Arc::new(Broker::new_sharded(&topo, 4, 1 << 16, qcfg).unwrap());
     let rep = run_service(
-        &pool,
+        &topo,
         &broker,
         &ServiceConfig {
             producers: 2,
@@ -244,17 +307,17 @@ fn broker_on_sharded_queue_exactly_once_across_crashes() {
 
 #[test]
 fn broker_on_sharded_queue_clean_run() {
-    let pool = Arc::new(PmemPool::new(PmemConfig {
+    let topo = Topology::single(PmemConfig {
         capacity_words: 1 << 22,
         cost: CostModel::zero(),
         evict_prob: 0.0,
         pending_flush_prob: 0.0,
         seed: 37,
-    }));
+    });
     let qcfg = QueueConfig { shards: 2, batch: 4, ring_size: 256, ..Default::default() };
-    let broker = Arc::new(Broker::new_sharded(&pool, 4, 1 << 16, qcfg).unwrap());
+    let broker = Arc::new(Broker::new_sharded(&topo, 4, 1 << 16, qcfg).unwrap());
     let rep = run_service(
-        &pool,
+        &topo,
         &broker,
         &ServiceConfig {
             producers: 2,
@@ -268,4 +331,51 @@ fn broker_on_sharded_queue_clean_run() {
     assert_eq!(rep.submitted, 400);
     assert_eq!(rep.done, 400, "{rep:?}");
     assert_eq!(rep.pending_after, 0);
+}
+
+#[test]
+fn broker_on_two_pool_colocated_queue_exactly_once_across_crashes() {
+    // The full stack on a 2-socket topology: sharded work queue with
+    // colocated placement, job records + submit logs on per-thread home
+    // pools, coordinated crashes, reconciliation walking both pools.
+    install_quiet_crash_hook();
+    let topo = Topology::new(
+        PmemConfig {
+            capacity_words: 1 << 23,
+            evict_prob: 0.25,
+            pending_flush_prob: 0.5,
+            seed: 43,
+            ..Default::default()
+        },
+        2,
+    );
+    let qcfg = QueueConfig {
+        shards: 4,
+        batch: 4,
+        batch_deq: 4,
+        ring_size: 256,
+        placement: PlacementPolicy::Colocate,
+        ..Default::default()
+    };
+    let broker = Arc::new(Broker::new_sharded(&topo, 4, 1 << 16, qcfg).unwrap());
+    let rep = run_service(
+        &topo,
+        &broker,
+        &ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 300,
+            crash_cycles: 3,
+            crash_steps: 30_000,
+            seed: 7,
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.crashes, 3);
+    assert_eq!(
+        rep.done, rep.submitted,
+        "every submitted job must complete exactly once on the 2-pool broker: {rep:?}"
+    );
+    assert_eq!(rep.pending_after, 0);
+    assert_eq!(broker.reconcile_report(0).mismatches(), 0);
 }

@@ -5,7 +5,7 @@ use std::sync::Arc;
 use std::sync::Mutex;
 
 use persiq::harness::runner::{drain_all, run_workload, RunConfig};
-use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::pmem::{PmemConfig, Topology};
 use persiq::queues::{by_name, ConcurrentQueue, QueueConfig, QueueCtx, QueueError};
 use persiq::verify::{check, History, Violation};
 
@@ -84,16 +84,16 @@ impl ConcurrentQueue for LifoQueue {
 }
 
 fn ctx() -> QueueCtx {
-    QueueCtx {
-        pool: Arc::new(PmemPool::new(PmemConfig::default().with_capacity(1 << 21))),
-        nthreads: 2,
-        cfg: QueueConfig::default(),
-    }
+    QueueCtx::single(
+        PmemConfig::default().with_capacity(1 << 21),
+        2,
+        QueueConfig::default(),
+    )
 }
 
-fn run_and_check(q: Arc<dyn ConcurrentQueue>, pool: &Arc<PmemPool>) -> Vec<Violation> {
+fn run_and_check(q: Arc<dyn ConcurrentQueue>, topo: &Topology) -> Vec<Violation> {
     let r = run_workload(
-        pool,
+        topo,
         &q,
         &RunConfig { nthreads: 2, total_ops: 4_000, record: true, ..Default::default() },
     );
@@ -112,7 +112,7 @@ fn detects_injected_duplicates() {
         period: 50,
         count: Mutex::new(0),
     });
-    let v = run_and_check(q, &c.pool);
+    let v = run_and_check(q, &c.topo);
     assert!(
         v.iter().any(|x| matches!(x, Violation::Duplicate { .. })),
         "checker must flag duplicates, got {v:?}"
@@ -125,7 +125,7 @@ fn detects_injected_loss() {
     let inner = by_name("perlcrq").unwrap()(&c);
     let q: Arc<dyn ConcurrentQueue> =
         Arc::new(LossInjector { inner, period: 100, count: Mutex::new(0) });
-    let v = run_and_check(q, &c.pool);
+    let v = run_and_check(q, &c.topo);
     assert!(
         v.iter().any(|x| matches!(x, Violation::Lost { .. })),
         "checker must flag losses, got {v:?}"
@@ -141,7 +141,7 @@ fn detects_lifo_order_violation() {
     let c = ctx();
     let q: Arc<dyn ConcurrentQueue> = Arc::new(LifoQueue { stack: Mutex::new(Vec::new()) });
     let r1 = run_workload(
-        &c.pool,
+        &c.topo,
         &q,
         &RunConfig {
             nthreads: 1,
@@ -152,7 +152,7 @@ fn detects_lifo_order_violation() {
         },
     );
     let r2 = run_workload(
-        &c.pool,
+        &c.topo,
         &q,
         &RunConfig {
             nthreads: 1,
@@ -178,6 +178,6 @@ fn detects_lifo_order_violation() {
 fn clean_queue_has_no_violations() {
     let c = ctx();
     let q = by_name("perlcrq").unwrap()(&c);
-    let v = run_and_check(q, &c.pool);
+    let v = run_and_check(q, &c.topo);
     assert!(v.is_empty(), "{v:?}");
 }

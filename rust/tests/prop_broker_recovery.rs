@@ -7,38 +7,58 @@ use std::sync::Arc;
 
 use persiq::coordinator::{run_service, Broker, JobState, ServiceConfig};
 use persiq::pmem::crash::{install_quiet_crash_hook, run_guarded};
-use persiq::pmem::{PmemConfig, PmemPool};
+use persiq::pmem::{PlacementPolicy, PmemConfig, Topology};
 use persiq::queues::QueueConfig;
 use persiq::util::rng::Xoshiro256;
 use persiq::verify::proptest::{forall, PropConfig};
 
-fn mk_pool(rng: &mut Xoshiro256, cap: usize) -> Arc<PmemPool> {
-    Arc::new(PmemPool::new(PmemConfig {
-        capacity_words: cap,
-        evict_prob: rng.next_f64() * 0.5,
-        pending_flush_prob: rng.next_f64(),
-        seed: rng.next_u64(),
-        ..Default::default()
-    }))
+fn mk_topo(rng: &mut Xoshiro256, cap: usize, pools: usize) -> Topology {
+    Topology::new(
+        PmemConfig {
+            capacity_words: cap,
+            evict_prob: rng.next_f64() * 0.5,
+            pending_flush_prob: rng.next_f64(),
+            seed: rng.next_u64(),
+            ..Default::default()
+        },
+        pools,
+    )
 }
 
 #[test]
 fn service_crash_cycles_reconcile_for_both_queue_kinds() {
     install_quiet_crash_hook();
     forall(PropConfig { cases: 8, seed: 0x10B5 }, |rng, case| {
-        let pool = mk_pool(rng, 1 << 23);
         let nthreads = 4;
-        let broker = if case % 2 == 0 {
-            Arc::new(Broker::new(&pool, nthreads, 1 << 16, 256))
+        let (topo, broker) = if case % 2 == 0 {
+            let topo = mk_topo(rng, 1 << 23, 1);
+            let b = Arc::new(Broker::new_on(&topo, nthreads, 1 << 16, 256));
+            (topo, b)
         } else {
+            // Sharded work queue, randomly on a 1- or 2-pool topology
+            // with a random placement policy.
+            let pools = *rng.choose(&[1usize, 2]);
+            let topo = mk_topo(rng, 1 << 23, pools);
+            let placement = if pools == 1 {
+                PlacementPolicy::Interleave
+            } else {
+                rng.choose(&[
+                    PlacementPolicy::Interleave,
+                    PlacementPolicy::Colocate,
+                    PlacementPolicy::Pinned(vec![0, 1]),
+                ])
+                .clone()
+            };
             let qcfg = QueueConfig {
                 shards: 1 + rng.next_below(4) as usize,
                 batch: *rng.choose(&[1usize, 2, 4]),
                 batch_deq: *rng.choose(&[1usize, 2, 4]),
                 ring_size: 256,
+                placement,
                 ..Default::default()
             };
-            Arc::new(Broker::new_sharded(&pool, nthreads, 1 << 16, qcfg).unwrap())
+            let b = Arc::new(Broker::new_sharded(&topo, nthreads, 1 << 16, qcfg).unwrap());
+            (topo, b)
         };
         let cfg = ServiceConfig {
             producers: 2,
@@ -48,7 +68,7 @@ fn service_crash_cycles_reconcile_for_both_queue_kinds() {
             crash_steps: 10_000 + rng.next_below(30_000),
             seed: rng.next_u64(),
         };
-        let rep = run_service(&pool, &broker, &cfg).map_err(|e| e.to_string())?;
+        let rep = run_service(&topo, &broker, &cfg).map_err(|e| e.to_string())?;
         if rep.done != rep.submitted {
             return Err(format!(
                 "case {case}: submitted={} done={} pending={} — job lost or stuck",
@@ -58,6 +78,10 @@ fn service_crash_cycles_reconcile_for_both_queue_kinds() {
         if rep.pending_after != 0 {
             return Err(format!("case {case}: {} jobs left pending", rep.pending_after));
         }
+        let rec = broker.reconcile_report(0);
+        if rec.mismatches() != 0 {
+            return Err(format!("case {case}: reconciliation mismatches {rec:?}"));
+        }
         Ok(())
     });
 }
@@ -66,13 +90,16 @@ fn service_crash_cycles_reconcile_for_both_queue_kinds() {
 fn forced_crash_mid_submission_never_loses_or_doubles() {
     install_quiet_crash_hook();
     forall(PropConfig { cases: 10, seed: 0xB40C }, |rng, case| {
-        let pool = mk_pool(rng, 1 << 22);
-        let broker = Arc::new(Broker::new(&pool, 2, 1 << 14, 128));
+        // Alternate single- and two-pool topologies: the submit path is
+        // socket-local either way, and the crash window sits between the
+        // home pool's log append and the queue enqueue.
+        let topo = mk_topo(rng, 1 << 22, 1 + (case % 2) as usize);
+        let broker = Arc::new(Broker::new_on(&topo, 2, 1 << 14, 128));
         let mut crash_rng = Xoshiro256::seed_from(rng.next_u64());
 
         // Submit under an armed crash countdown: the crash lands inside
         // submit()'s record-write / log-append / enqueue window.
-        pool.arm_crash_after(500 + rng.next_below(4_000));
+        topo.arm_crash_after(500 + rng.next_below(4_000));
         let target = 200usize;
         let b = Arc::clone(&broker);
         let out = run_guarded(move || {
@@ -81,7 +108,7 @@ fn forced_crash_mid_submission_never_loses_or_doubles() {
             }
         });
         let crashed = out.crashed();
-        pool.crash(&mut crash_rng);
+        topo.crash(&mut crash_rng);
         broker.recover();
 
         // Audit invariant: every durably logged job is PENDING, DONE or

@@ -25,25 +25,25 @@ fn prop_durable_linearizability_under_random_crashes() {
         let workload = *rng.choose(&[Workload::Pairs, Workload::Random5050]);
         let cycles = 1 + rng.next_below(3); // 1..3
         for (name, ctor) in persistent_registry() {
-            let ctx = QueueCtx {
-                pool: Arc::new(PmemPool::new(PmemConfig {
+            let ctx = QueueCtx::single(
+                PmemConfig {
                     capacity_words: 1 << 23,
                     evict_prob: rng.next_f64() * 0.5,
                     pending_flush_prob: rng.next_f64(),
                     seed: rng.next_u64(),
                     ..Default::default()
-                })),
+                },
                 nthreads,
-                cfg: QueueConfig { ring_size: ring, ..Default::default() },
-            };
+                QueueConfig { ring_size: ring, ..Default::default() },
+            );
             let q = ctor(&ctx);
             let qc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
             let mut crash_rng = Xoshiro256::seed_from(rng.next_u64());
             let mut logs = Vec::new();
             for cycle in 0..cycles {
-                ctx.pool.arm_crash_after(5_000 + rng.next_below(25_000));
+                ctx.topo.arm_crash_after(5_000 + rng.next_below(25_000));
                 let r = run_workload(
-                    &ctx.pool,
+                    &ctx.topo,
                     &qc,
                     &RunConfig {
                         nthreads,
@@ -56,8 +56,8 @@ fn prop_durable_linearizability_under_random_crashes() {
                     },
                 );
                 logs.extend(r.logs);
-                ctx.pool.crash(&mut crash_rng);
-                q.recover(&ctx.pool);
+                ctx.topo.crash(&mut crash_rng);
+                q.recover(ctx.pool());
             }
             let drained = drain_all(&qc, 0);
             let h = History::from_logs(logs, drained);
@@ -85,20 +85,39 @@ fn prop_crash_during_dequeue_batch_reconciles_exactly() {
         let batch = *rng.choose(&[1usize, 2, 4, 8]);
         let batch_deq = *rng.choose(&[2usize, 4, 8]); // always batched deqs
         let cycles = 1 + rng.next_below(3); // 1..3
+        // Half the cases run on a 2-pool topology with a random placement
+        // policy: the crash can land between the flush's per-pool psyncs
+        // (one pool's drain realized, the sibling's lost) — exactly the
+        // cross-pool window reconciliation must close.
+        let pools = *rng.choose(&[1usize, 2, 2]);
+        let placement = if pools == 1 {
+            persiq::pmem::PlacementPolicy::Interleave
+        } else {
+            rng.choose(&[
+                persiq::pmem::PlacementPolicy::Interleave,
+                persiq::pmem::PlacementPolicy::Colocate,
+                persiq::pmem::PlacementPolicy::Pinned(vec![1, 0]),
+            ])
+            .clone()
+        };
         let ctx = QueueCtx {
-            pool: Arc::new(PmemPool::new(PmemConfig {
-                capacity_words: 1 << 23,
-                evict_prob: rng.next_f64() * 0.5,
-                pending_flush_prob: rng.next_f64(),
-                seed: rng.next_u64(),
-                ..Default::default()
-            })),
+            topo: persiq::pmem::Topology::new(
+                PmemConfig {
+                    capacity_words: 1 << 23,
+                    evict_prob: rng.next_f64() * 0.5,
+                    pending_flush_prob: rng.next_f64(),
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                },
+                pools,
+            ),
             nthreads,
             cfg: QueueConfig {
                 shards,
                 batch,
                 batch_deq,
                 ring_size: 128,
+                placement,
                 ..Default::default()
             },
         };
@@ -107,9 +126,9 @@ fn prop_crash_during_dequeue_batch_reconciles_exactly() {
         let mut crash_rng = Xoshiro256::seed_from(rng.next_u64());
         let mut logs = Vec::new();
         for cycle in 0..cycles {
-            ctx.pool.arm_crash_after(4_000 + rng.next_below(20_000));
+            ctx.topo.arm_crash_after(4_000 + rng.next_below(20_000));
             let r = run_workload(
-                &ctx.pool,
+                &ctx.topo,
                 &qc,
                 &RunConfig {
                     nthreads,
@@ -122,8 +141,8 @@ fn prop_crash_during_dequeue_batch_reconciles_exactly() {
                 },
             );
             logs.extend(r.logs);
-            ctx.pool.crash(&mut crash_rng);
-            q.recover(&ctx.pool);
+            ctx.topo.crash(&mut crash_rng);
+            q.recover(ctx.pool());
         }
         let drained = drain_all(&qc, 0);
         let h = History::from_logs(logs, drained);
@@ -134,6 +153,7 @@ fn prop_crash_during_dequeue_batch_reconciles_exactly() {
             trailing_redelivery_per_thread: batch_deq - 1,
             crashed_epochs: cycles,
             check_empty: batch <= 1,
+            ..Default::default()
         };
         let rep = check_with(&h, &opts);
         if !rep.ok() {
@@ -236,13 +256,11 @@ fn prop_recovery_is_idempotent() {
     install_quiet_crash_hook();
     forall(PropConfig { cases: 8, seed: 0xABCD }, |rng, _case| {
         for (name, ctor) in persistent_registry() {
-            let ctx = QueueCtx {
-                pool: Arc::new(PmemPool::new(
-                    PmemConfig::default().with_capacity(1 << 22).with_seed(rng.next_u64()),
-                )),
-                nthreads: 2,
-                cfg: QueueConfig { ring_size: 64, ..Default::default() },
-            };
+            let ctx = QueueCtx::single(
+                PmemConfig::default().with_capacity(1 << 22).with_seed(rng.next_u64()),
+                2,
+                QueueConfig { ring_size: 64, ..Default::default() },
+            );
             let q = ctor(&ctx);
             let items = rng.range_inclusive(1, 200);
             for v in 0..items {
@@ -250,10 +268,10 @@ fn prop_recovery_is_idempotent() {
             }
             let mut crash_rng = Xoshiro256::seed_from(rng.next_u64());
             // Crash + recover twice, interleaved with nothing: state stable.
-            ctx.pool.crash(&mut crash_rng);
-            q.recover(&ctx.pool);
-            ctx.pool.crash(&mut crash_rng);
-            q.recover(&ctx.pool);
+            ctx.topo.crash(&mut crash_rng);
+            q.recover(ctx.pool());
+            ctx.topo.crash(&mut crash_rng);
+            q.recover(ctx.pool());
             let mut out = Vec::new();
             while let Some(v) = q.dequeue(1).unwrap() {
                 out.push(v);
@@ -367,26 +385,26 @@ fn prop_periq_recovery_invariants() {
     // original values; (J3) repeated recovery is stable.
     install_quiet_crash_hook();
     forall(PropConfig { cases: 16, seed: 0x1D0 }, |rng, _case| {
-        let ctx = QueueCtx {
-            pool: Arc::new(PmemPool::new(PmemConfig {
+        let ctx = QueueCtx::single(
+            PmemConfig {
                 capacity_words: 1 << 20,
                 evict_prob: rng.next_f64() * 0.5,
                 pending_flush_prob: rng.next_f64(),
                 seed: rng.next_u64(),
                 ..Default::default()
-            })),
-            nthreads: 3,
-            cfg: QueueConfig {
+            },
+            3,
+            QueueConfig {
                 iq_capacity: 1 << 14,
                 periq_tail_interval: *rng.choose(&[0usize, 1, 16]),
                 ..Default::default()
             },
-        };
+        );
         let q = persiq::queues::persistent_by_name("periq").unwrap()(&ctx);
         let qc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
-        ctx.pool.arm_crash_after(rng.range_inclusive(500, 20_000));
+        ctx.topo.arm_crash_after(rng.range_inclusive(500, 20_000));
         let r = run_workload(
-            &ctx.pool,
+            &ctx.topo,
             &qc,
             &RunConfig {
                 nthreads: 3,
@@ -398,11 +416,11 @@ fn prop_periq_recovery_invariants() {
             },
         );
         let mut crash_rng = Xoshiro256::seed_from(rng.next_u64());
-        ctx.pool.crash(&mut crash_rng);
-        q.recover(&ctx.pool);
+        ctx.topo.crash(&mut crash_rng);
+        q.recover(ctx.pool());
         // (J3) recover twice is a no-op on the drain result.
-        ctx.pool.crash(&mut crash_rng);
-        q.recover(&ctx.pool);
+        ctx.topo.crash(&mut crash_rng);
+        q.recover(ctx.pool());
         let drained = drain_all(&qc, 0);
         let mut sorted = drained.clone();
         sorted.sort_unstable();
