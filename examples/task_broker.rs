@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             crash_cycles,
             crash_steps: 400_000,
             seed: 7,
+            ..Default::default()
         },
     )?;
 

@@ -1,0 +1,148 @@
+//! Figure 9 (beyond the paper) — what asynchronous completion buys:
+//! sync-blocking vs sync-batched vs async-overlap throughput over the
+//! batch size, on the same sharded queue.
+//!
+//! The three series model three durability contracts a service can offer:
+//!
+//! * **sync-blocking** — the caller needs each operation durable before
+//!   it proceeds (ack-after-persist). With the sync API that forces
+//!   per-op persistence (`batch = 1`): one psync per op, flat over B.
+//! * **sync-batched** — group commit (`batch = batch_deq = B`), but the
+//!   caller's *return* races durability: cheap, yet a crash can lose the
+//!   unflushed window after callers already moved on.
+//! * **async** — the completion layer: callers hold futures that resolve
+//!   at the flush, getting sync-blocking's contract at sync-batched's
+//!   psync cost by overlapping the wait across the in-flight window.
+//!
+//! Headline claims (checked below): at B ≥ 8 the async path beats
+//! sync-blocking by ≥ 1.2× simulated throughput, and its psyncs/op is no
+//! worse than the sync batched path (1/B enq + 1/K deq).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use persiq::harness::bench::{bench_ops, Suite};
+use persiq::harness::{run_async_workload, AsyncRunConfig};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::asyncq::AsyncCfg;
+use persiq::queues::sharded::ShardedQueue;
+use persiq::queues::QueueConfig;
+
+const THREADS: usize = 4;
+const SHARDS: usize = 8;
+
+fn async_point(batch: usize, ops: u64) -> (f64, Vec<(String, f64)>) {
+    let qcfg = QueueConfig { shards: SHARDS, batch, batch_deq: batch, ..Default::default() };
+    // Producers + an equal flusher pool: the queue-operating parallelism
+    // matches the sync series' thread count.
+    let acfg = AsyncCfg { flush_us: 5_000, depth: batch.max(2), flushers: THREADS };
+    let ctx = common::ctx_with(THREADS + acfg.flushers, qcfg.clone());
+    let q = Arc::new(
+        ShardedQueue::new_perlcrq(&ctx.topo, THREADS + acfg.flushers, qcfg)
+            .expect("valid bench config"),
+    );
+    let rc = AsyncRunConfig {
+        producers: THREADS,
+        total_ops: ops,
+        window: (2 * batch).max(4),
+        acfg,
+        ..Default::default()
+    };
+    let r = run_async_workload(&ctx.topo, &q, &rc);
+    assert!(!r.crashed, "no crash armed in fig9");
+    let t = ctx.topo.stats_total();
+    let per = |x: u64| x as f64 / r.ops_done.max(1) as f64;
+    (
+        r.sim_mops,
+        vec![
+            ("pwbs/op".to_string(), per(t.pwbs)),
+            ("psyncs/op".to_string(), per(t.psyncs)),
+        ],
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new(
+        "fig9_async",
+        "Fig 9: sync-blocking vs async-overlap (throughput x batch size)",
+    );
+    let ops = bench_ops();
+    let batches = [1usize, 2, 4, 8, 16, 32];
+
+    // Per-op durability: what a caller that must ack-after-persist pays
+    // without the async layer. Independent of B — measure ONCE, then
+    // replicate the measurement at every x so the flat series plots
+    // alongside the sweeps (same de-duplication as fig8's baseline).
+    suite.measure_extra("sync-blocking", batches[0] as f64, || {
+        let cfg = QueueConfig { shards: SHARDS, batch: 1, batch_deq: 1, ..Default::default() };
+        common::tput_point_extra("sharded-perlcrq", THREADS, ops, cfg, 42)
+    });
+    let baseline = suite.measurements.last().expect("just measured").clone();
+    for &b in &batches[1..] {
+        let mut m = baseline.clone();
+        m.x = b as f64;
+        suite.measurements.push(m);
+    }
+
+    for &b in &batches {
+        // Group commit with buffered (return-races-durability) semantics.
+        suite.measure_extra("sync-batched", b as f64, || {
+            let cfg = QueueConfig {
+                shards: SHARDS,
+                batch: b,
+                batch_deq: b,
+                ..Default::default()
+            };
+            common::tput_point_extra("sharded-perlcrq", THREADS, ops, cfg, 42)
+        });
+        // Durability-gated futures over the same group commit.
+        suite.measure_extra("async", b as f64, || async_point(b, ops));
+    }
+
+    suite.finish()?;
+
+    // --- Claim checks -------------------------------------------------
+    let psyncs_at = |series: &str, x: f64| -> f64 {
+        suite
+            .measurements
+            .iter()
+            .filter(|m| m.series == series && (m.x - x).abs() < 1e-9)
+            .flat_map(|m| m.extra.iter())
+            .filter(|(name, _)| name == "psyncs/op")
+            .map(|&(_, v)| v)
+            .fold(f64::NAN, f64::max)
+    };
+    println!("\nclaims:");
+    let mut all_ok = true;
+    for &b in &batches {
+        if b < 8 {
+            continue;
+        }
+        let x = b as f64;
+        let blocking = suite.mean_at("sync-blocking", x).unwrap();
+        let asy = suite.mean_at("async", x).unwrap();
+        let speedup = asy / blocking;
+        let ok = speedup >= 1.2;
+        all_ok &= ok;
+        println!(
+            "  B={b}: async/sync-blocking = {speedup:.2}x (expect >= 1.2): {ok}"
+        );
+        // Async must not pay more persistence than the sync batched path
+        // it rides (1/B enq + 1/K deq); small slack for the attach/
+        // detach + final-drain psyncs.
+        let ps_async = psyncs_at("async", x);
+        let ps_batched = psyncs_at("sync-batched", x);
+        let ok = ps_async <= ps_batched * 1.10 + 0.01;
+        all_ok &= ok;
+        println!(
+            "  B={b}: psyncs/op async = {ps_async:.3} vs sync-batched {ps_batched:.3} \
+             (expect async <= batched + slack): {ok}"
+        );
+    }
+    println!("fig9 claims {}", if all_ok { "OK" } else { "FAILED" });
+    anyhow::ensure!(all_ok, "fig9 async claims failed");
+    Ok(())
+}

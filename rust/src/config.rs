@@ -24,6 +24,14 @@
 //! pools = 1                  # NVM pools (sockets), each with its own bandwidth chain
 //! placement = "interleave"   # interleave | colocate | pinned:<p0,p1,...>
 //!
+//! [async]
+//! flush_us = 50      # completion-layer deadline flush (µs)
+//! depth = 32         # per-flusher in-flight window (depth flush trigger)
+//! flushers = 1       # combiner worker threads
+//!
+//! [broker]
+//! lease_ms = 0       # per-job lease on in-flight jobs (0 = off)
+//!
 //! [bench]
 //! ops = 200000
 //! seed = 42
@@ -32,6 +40,7 @@
 use std::path::Path;
 
 use crate::pmem::{CostModel, PlacementPolicy, PmemConfig, Topology, MAX_POOLS};
+use crate::queues::asyncq::AsyncCfg;
 use crate::queues::QueueConfig;
 use crate::util::toml::Doc;
 
@@ -43,6 +52,10 @@ pub struct Config {
     /// NVM pools (sockets) in the topology; each gets its own
     /// `pmem.capacity_words`-sized arena and bandwidth chain.
     pub pools: usize,
+    /// Async completion layer knobs (`--async` CLI paths).
+    pub asyncq: AsyncCfg,
+    /// Broker per-job lease in ms (0 = disabled).
+    pub lease_ms: u64,
     pub bench_ops: u64,
     pub seed: u64,
 }
@@ -53,6 +66,8 @@ impl Default for Config {
             pmem: PmemConfig::default().with_capacity(1 << 22),
             queue: QueueConfig::default(),
             pools: 1,
+            asyncq: AsyncCfg::default(),
+            lease_ms: 0,
             bench_ops: 200_000,
             seed: 42,
         }
@@ -124,6 +139,18 @@ impl Config {
                 Err(e) => crate::log_warn!("ignoring [topology] placement: {e}"),
             }
         }
+
+        c.asyncq.flush_us = doc.get_u64("async", "flush_us", c.asyncq.flush_us);
+        c.asyncq.depth = doc.get_u64("async", "depth", c.asyncq.depth as u64) as usize;
+        c.asyncq.flushers =
+            doc.get_u64("async", "flushers", c.asyncq.flushers as u64) as usize;
+        if let Err(e) = c.asyncq.validate() {
+            // Lenient like the rest of the file parser; the CLI layer
+            // re-validates with a hard error.
+            crate::log_warn!("ignoring [async] section: {e}");
+            c.asyncq = AsyncCfg::default();
+        }
+        c.lease_ms = doc.get_u64("broker", "lease_ms", c.lease_ms);
 
         c.bench_ops = doc.get_u64("bench", "ops", c.bench_ops);
         c.seed = doc.get_u64("bench", "seed", c.seed);
@@ -203,5 +230,26 @@ mod tests {
         let c = Config::from_doc(&doc);
         assert_eq!(c.pools, 1, "out-of-range [topology] pools must fall back");
         assert_eq!(c.build_topology().len(), 1);
+    }
+
+    #[test]
+    fn async_and_broker_sections_override() {
+        let doc = crate::util::toml::parse(
+            "[async]\nflush_us = 120\ndepth = 64\nflushers = 2\n[broker]\nlease_ms = 250\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.asyncq.flush_us, 120);
+        assert_eq!(c.asyncq.depth, 64);
+        assert_eq!(c.asyncq.flushers, 2);
+        assert_eq!(c.lease_ms, 250);
+        // An invalid [async] section falls back leniently.
+        let doc = crate::util::toml::parse("[async]\ndepth = 0\n").unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.asyncq.depth, AsyncCfg::default().depth);
+        // Untouched keys keep defaults.
+        let c = Config::from_doc(&crate::util::toml::parse("").unwrap());
+        assert_eq!(c.asyncq.flush_us, AsyncCfg::default().flush_us);
+        assert_eq!(c.lease_ms, 0);
     }
 }

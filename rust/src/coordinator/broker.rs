@@ -18,11 +18,15 @@
 //! home pool) against the recovered work queue, whichever pools its
 //! shards live on.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::pmem::{GAddr, PmemPool, Topology, WORDS_PER_LINE};
+use crate::queues::asyncq::{AsyncCfg, AsyncQueue, DeqFuture, EnqFuture, ExecFuture};
 use crate::queues::perlcrq::PerLcrq;
 use crate::queues::sharded::ShardedQueue;
 use crate::queues::{ConcurrentQueue, PersistentQueue, QueueConfig, QueueError};
@@ -52,10 +56,23 @@ pub enum JobState {
 pub struct Broker {
     topo: Topology,
     queue: Arc<dyn PersistentQueue>,
+    /// Typed handle on the sharded work queue (when built with
+    /// [`Broker::new_sharded`]) — the async completion layer needs the
+    /// concrete type for its batch-log plumbing.
+    sharded: Option<Arc<ShardedQueue<PerLcrq>>>,
     /// Persistent per-thread submission logs (each on its thread's home
     /// pool) so audits and recovery reconciliation survive crashes.
     submit_log: SubmitLog,
     nthreads: usize,
+    /// Per-job lease on in-flight (taken-but-not-completed) jobs, in
+    /// milliseconds; 0 disables leasing. Volatile by design: leases guard
+    /// against *worker death without a crash* — a full crash already
+    /// redelivers via recovery, so nothing here needs to persist.
+    lease_ms: AtomicU64,
+    /// Outstanding leases: handle → when the job was taken. Behind an
+    /// `Arc` so the async ack closure (which may outlive the borrow) can
+    /// clear the lease at execution time.
+    leases: Arc<Mutex<HashMap<u64, Instant>>>,
 }
 
 /// Persistent per-thread submission logs: each thread `t` owns a
@@ -170,9 +187,12 @@ impl Broker {
         let cfg = QueueConfig { ring_size: ring, ..Default::default() };
         Broker {
             queue: Arc::new(PerLcrq::new(topo.primary(), nthreads, cfg)),
+            sharded: None,
             submit_log: SubmitLog::alloc(topo, nthreads, max_jobs),
             topo: topo.clone(),
             nthreads,
+            lease_ms: AtomicU64::new(0),
+            leases: Arc::new(Mutex::new(HashMap::new())),
         }
     }
 
@@ -195,18 +215,23 @@ impl Broker {
         max_jobs: usize,
         cfg: QueueConfig,
     ) -> Result<Broker, QueueError> {
+        let sharded = Arc::new(ShardedQueue::new_perlcrq(topo, nthreads, cfg)?);
         Ok(Broker {
-            queue: Arc::new(ShardedQueue::new_perlcrq(topo, nthreads, cfg)?),
+            queue: Arc::clone(&sharded) as Arc<dyn PersistentQueue>,
+            sharded: Some(sharded),
             submit_log: SubmitLog::alloc(topo, nthreads, max_jobs),
             topo: topo.clone(),
             nthreads,
+            lease_ms: AtomicU64::new(0),
+            leases: Arc::new(Mutex::new(HashMap::new())),
         })
     }
 
-    /// Submit a job: durably write the record (on the submitter's home
-    /// pool), log it, enqueue its handle. On return the job is guaranteed
-    /// to survive any crash.
-    pub fn submit(&self, tid: usize, payload: &[u8]) -> Result<JobId> {
+    /// Durably write a job record + submission-log entry (the synchronous
+    /// prefix of both submit paths). On return the *record* survives any
+    /// crash; whether its queue handle does depends on the enqueue path
+    /// that follows.
+    fn write_record(&self, tid: usize, payload: &[u8]) -> Result<JobId> {
         anyhow::ensure!(payload.len() <= MAX_PAYLOAD, "payload too large");
         let t = &self.topo;
         let rec = t.alloc_lines_on(t.home_pool(tid), 1);
@@ -221,8 +246,54 @@ impl Broker {
         t.pwb(tid, rec);
         t.psync_pool(tid, rec.pool as usize);
         self.submit_log.append(t, tid, JobId(rec));
-        self.queue.enqueue(tid, rec.to_u64())?;
         Ok(JobId(rec))
+    }
+
+    /// Submit a job: durably write the record (on the submitter's home
+    /// pool), log it, enqueue its handle. On return the job is guaranteed
+    /// to survive any crash.
+    pub fn submit(&self, tid: usize, payload: &[u8]) -> Result<JobId> {
+        let job = self.write_record(tid, payload)?;
+        self.queue.enqueue(tid, job.0.to_u64())?;
+        Ok(job)
+    }
+
+    /// Async submit: the record + submission log are written durably on
+    /// the caller's tid (as in [`Broker::submit`]), but the handle
+    /// enqueue rides the async layer's combiner — the returned future
+    /// resolves only once the handle is durably queued (its batch flush
+    /// retired). Until then a crash leaves the job in the
+    /// stranded-PENDING window that [`Broker::recover`] re-enqueues from
+    /// the submission log, so an unresolved future never means a lost
+    /// job — only an unacknowledged one.
+    pub fn submit_async(
+        &self,
+        tid: usize,
+        payload: &[u8],
+        aq: &AsyncQueue<PerLcrq>,
+    ) -> Result<(JobId, EnqFuture)> {
+        let job = self.write_record(tid, payload)?;
+        Ok((job, aq.enqueue_async(job.0.to_u64())))
+    }
+
+    /// Decode a job record's payload.
+    fn read_payload(&self, tid: usize, rec: GAddr) -> Vec<u8> {
+        let t = &self.topo;
+        let len = t.load(tid, rec.add(1)) as usize;
+        let mut payload = vec![0u8; len.min(MAX_PAYLOAD)];
+        for (i, chunk) in payload.chunks_mut(8).enumerate() {
+            let w = t.load(tid, rec.add(2 + i)).to_le_bytes();
+            chunk.copy_from_slice(&w[..chunk.len()]);
+        }
+        payload
+    }
+
+    /// Start a lease for a just-delivered handle (no-op when leasing is
+    /// off).
+    fn note_taken(&self, handle: u64) {
+        if self.lease_ms.load(Ordering::Relaxed) > 0 {
+            self.leases.lock().unwrap().insert(handle, Instant::now());
+        }
     }
 
     /// Take the next job (its payload), or `None` when the queue is empty.
@@ -234,26 +305,44 @@ impl Broker {
             let Some(handle) = self.queue.dequeue(tid)? else {
                 return Ok(None);
             };
-            let rec = GAddr::from_u64(handle);
-            let t = &self.topo;
-            match t.load(tid, rec.add(0)) {
-                ST_PENDING => {
-                    let len = t.load(tid, rec.add(1)) as usize;
-                    let mut payload = vec![0u8; len.min(MAX_PAYLOAD)];
-                    for (i, chunk) in payload.chunks_mut(8).enumerate() {
-                        let w = t.load(tid, rec.add(2 + i)).to_le_bytes();
-                        chunk.copy_from_slice(&w[..chunk.len()]);
-                    }
-                    return Ok(Some((JobId(rec), payload)));
-                }
-                // DONE: completed in a previous epoch but re-delivered by a
-                // recovered queue (the dequeue that removed it never
-                // persisted) — skip.
-                ST_DONE => continue,
-                // Unwritten record: handle enqueued but record lost — can
-                // only happen for submissions that never returned; skip.
-                _ => continue,
+            if let Some(hit) = self.resolve_take(tid, handle) {
+                return Ok(Some(hit));
             }
+            // DONE or unwritten record — skip and keep dequeuing.
+        }
+    }
+
+    /// Async take: dequeue a handle through the combiner. The future
+    /// resolves with `Some(handle)` only once the consumption is durably
+    /// logged (it will not be redelivered after a crash); pass the handle
+    /// to [`Broker::resolve_take`] to filter stale deliveries and decode
+    /// the payload — a `None` from `resolve_take` means "redelivered
+    /// already-done job, take again".
+    ///
+    /// **Lease caveat:** the lease starts inside `resolve_take`, not at
+    /// future resolution, so a worker that dies *between* awaiting this
+    /// future and calling `resolve_take` leaves the job durably consumed,
+    /// unleased, and PENDING — only a crash-recovery pass will requeue
+    /// it. Call `resolve_take` immediately after the await (as
+    /// `run_service_async` does); closing the window for real means
+    /// leasing at completion inside the combiner (ROADMAP follow-on).
+    pub fn take_async(&self, aq: &AsyncQueue<PerLcrq>) -> DeqFuture {
+        aq.dequeue_async()
+    }
+
+    /// Classify a dequeued handle: `Some((job, payload))` for a live
+    /// PENDING job (starting its lease, when enabled), `None` for a
+    /// handle whose record is DONE (completed in a previous epoch but
+    /// re-delivered by a recovered queue) or unwritten (submission never
+    /// returned) — skip those.
+    pub fn resolve_take(&self, tid: usize, handle: u64) -> Option<(JobId, Vec<u8>)> {
+        let rec = GAddr::from_u64(handle);
+        match self.topo.load(tid, rec.add(0)) {
+            ST_PENDING => {
+                self.note_taken(handle);
+                Some((JobId(rec), self.read_payload(tid, rec)))
+            }
+            _ => None,
         }
     }
 
@@ -266,7 +355,128 @@ impl Broker {
             t.pwb(tid, job.0);
             t.psync_pool(tid, job.0.pool as usize);
         }
+        if self.lease_ms.load(Ordering::Relaxed) > 0 {
+            self.leases.lock().unwrap().remove(&job.0.to_u64());
+        }
         Ok(won)
+    }
+
+    /// Async ack: the DONE transition executes on the combiner's thread
+    /// slot and its `psync` rides the next group flush — acks amortize to
+    /// the same 1/K drain as the dequeue log instead of paying a private
+    /// psync each. The future resolves `1` once the DONE mark is durable,
+    /// `0` if the CAS lost (someone else completed it). Until resolution
+    /// a crash may roll the ack back: the job is then PENDING again and
+    /// recovery redelivers it — the same at-least-once contract as a
+    /// crash between [`Broker::take`] and [`Broker::complete`].
+    pub fn ack_async(&self, job: JobId, aq: &AsyncQueue<PerLcrq>) -> ExecFuture {
+        let rec = job.0;
+        // The lease is dropped INSIDE the combiner closure, i.e. only
+        // once the ack actually executes: if the layer is sealed before
+        // the op runs (future fails Closed/Crashed), the lease survives
+        // and `reap_expired` can still redeliver — dropping it eagerly
+        // here would strand a durably-taken, never-acked job until the
+        // next crash recovery.
+        let leases = if self.lease_ms.load(Ordering::Relaxed) > 0 {
+            Some(Arc::clone(&self.leases))
+        } else {
+            None
+        };
+        aq.exec_async(move |topo, tid| {
+            let won = topo.cas(tid, rec.add(0), ST_PENDING, ST_DONE);
+            if let Some(leases) = &leases {
+                // Executed (won or lost the CAS): the job is no longer
+                // "in flight with a silent worker".
+                leases.lock().unwrap().remove(&rec.to_u64());
+            }
+            if won {
+                topo.pwb(tid, rec);
+                (1, 1u64 << rec.pool)
+            } else {
+                (0, 0)
+            }
+        })
+    }
+
+    /// Build the async completion layer over this broker's work queue.
+    /// Requires a sharded broker ([`Broker::new_sharded`]); spawn the
+    /// flusher with [`AsyncQueue::spawn_flusher`] on thread slots disjoint
+    /// from the producers'/workers'.
+    pub fn async_layer(&self, cfg: AsyncCfg) -> Result<AsyncQueue<PerLcrq>, QueueError> {
+        let Some(sharded) = &self.sharded else {
+            return Err(QueueError::BadConfig(
+                "async broker paths need the sharded work queue (--queue sharded)",
+            ));
+        };
+        AsyncQueue::new(Arc::clone(sharded), cfg)
+    }
+
+    /// Enable (or disable, with 0) per-job leases: a job taken but
+    /// neither completed nor acked within `ms` milliseconds is considered
+    /// abandoned — its worker died *without* a crash — and
+    /// [`Broker::reap_expired`] will re-enqueue it.
+    pub fn set_lease_ms(&self, ms: u64) {
+        self.lease_ms.store(ms, Ordering::Relaxed);
+        if ms == 0 {
+            // Disabling drops existing entries too: the removal paths in
+            // complete()/ack_async are gated on lease_ms for hot-path
+            // cheapness, so entries inserted while leasing was on would
+            // otherwise linger and resurface as phantom expired leases
+            // if leasing is ever re-enabled.
+            self.leases.lock().unwrap().clear();
+        }
+    }
+
+    /// Re-enqueue every leased job whose lease expired and whose record
+    /// is still PENDING (worker death without a crash: nothing else would
+    /// ever redeliver it). Returns the number of jobs requeued.
+    /// Processing stays at-least-once — if the original worker is merely
+    /// slow, both it and the new assignee race [`Broker::complete`]'s CAS
+    /// and exactly one wins.
+    pub fn reap_expired(&self, tid: usize) -> usize {
+        let ms = self.lease_ms.load(Ordering::Relaxed);
+        if ms == 0 {
+            return 0;
+        }
+        let now = Instant::now();
+        let expired: Vec<u64> = {
+            let leases = self.leases.lock().unwrap();
+            leases
+                .iter()
+                .filter(|(_, taken)| now.duration_since(**taken) >= Duration::from_millis(ms))
+                .map(|(&h, _)| h)
+                .collect()
+        };
+        let mut requeued = 0;
+        for h in expired {
+            // Drop the lease first: if the job is re-taken it gets a
+            // fresh lease; if it completed meanwhile the entry is stale.
+            self.leases.lock().unwrap().remove(&h);
+            let rec = GAddr::from_u64(h);
+            if self.topo.load(tid, rec.add(0)) == ST_PENDING {
+                match self.queue.enqueue(tid, h) {
+                    Ok(()) => requeued += 1,
+                    Err(_) => {
+                        // Queue rejected the re-enqueue (e.g. capacity):
+                        // restore the lease so a later reap retries —
+                        // dropping it here would strand the job until a
+                        // crash recovery.
+                        self.leases.lock().unwrap().insert(h, Instant::now());
+                    }
+                }
+            }
+        }
+        if requeued > 0 {
+            // Flush the re-enqueues if the work queue batches (detach is
+            // the worker-safe flush entry point).
+            self.queue.detach(tid);
+        }
+        requeued
+    }
+
+    /// Outstanding (unexpired or expired, not yet reaped) leases.
+    pub fn leases_outstanding(&self) -> usize {
+        self.leases.lock().unwrap().len()
     }
 
     /// Read a job's durable state.
@@ -292,6 +502,10 @@ impl Broker {
     /// and re-insert every logged PENDING job whose handle was missing —
     /// walking each thread's submission log on its home pool.
     pub fn recover(&self) {
+        // Leases are volatile crash-free-failure state: after a real
+        // crash every in-flight job is redelivered by the reconciliation
+        // below, so stale leases must not additionally re-enqueue them.
+        self.leases.lock().unwrap().clear();
         self.queue.recover(self.topo.primary());
         let tid = 0;
         let mut queued: Vec<u64> = Vec::new();
@@ -625,6 +839,92 @@ mod tests {
         let rep = b.reconcile_report(0);
         assert_eq!(rep.mismatches(), 0);
         assert_eq!(rep.audit.done, 12);
+    }
+
+    #[test]
+    fn lease_expiry_requeues_abandoned_job() {
+        let (_p, b) = mk();
+        b.set_lease_ms(1);
+        let id = b.submit(0, b"leased").unwrap();
+        let (jid, _) = b.take(1).unwrap().unwrap();
+        assert_eq!(jid, id);
+        assert_eq!(b.leases_outstanding(), 1);
+        // Worker 1 "dies" silently (no crash, no complete): the queue is
+        // empty and nothing but the lease can ever redeliver the job.
+        assert!(b.take(2).unwrap().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(b.reap_expired(3), 1, "expired lease must requeue the job");
+        let (jid2, payload) = b.take(2).unwrap().unwrap();
+        assert_eq!(jid2, id);
+        assert_eq!(&payload, b"leased");
+        assert!(b.complete(2, jid2).unwrap());
+        assert_eq!(b.reap_expired(3), 0, "completed job must not be reaped");
+        assert_eq!(b.leases_outstanding(), 0);
+    }
+
+    #[test]
+    fn unexpired_lease_is_left_alone() {
+        let (_p, b) = mk();
+        b.set_lease_ms(60_000);
+        b.submit(0, b"slow").unwrap();
+        let (jid, _) = b.take(1).unwrap().unwrap();
+        assert_eq!(b.reap_expired(2), 0, "live lease must not redeliver");
+        assert!(b.take(2).unwrap().is_none());
+        assert!(b.complete(1, jid).unwrap());
+    }
+
+    #[test]
+    fn async_submit_take_ack_roundtrip() {
+        use crate::queues::asyncq::AsyncCfg;
+        let topo = Topology::new(pmem_cfg(), 2);
+        let b = Broker::new_sharded(
+            &topo,
+            6,
+            4096,
+            QueueConfig { shards: 2, batch: 4, batch_deq: 2, ring_size: 256, ..Default::default() },
+        )
+        .unwrap();
+        let aq = b
+            .async_layer(AsyncCfg { flush_us: 500, depth: 8, flushers: 1 })
+            .unwrap();
+        let fl = aq.spawn_flusher(4); // producers/workers use tids 0..4
+        let mut futs = Vec::new();
+        for i in 0..6u8 {
+            let (id, f) = b.submit_async(0, &[i], &aq).unwrap();
+            futs.push((id, f));
+        }
+        for (_, f) in futs {
+            f.wait().unwrap();
+        }
+        let mut acks = Vec::new();
+        while acks.len() < 6 {
+            match b.take_async(&aq).wait().unwrap() {
+                Some(h) => {
+                    let (jid, payload) =
+                        b.resolve_take(1, h).expect("no stale handles in this run");
+                    assert_eq!(payload.len(), 1);
+                    acks.push(b.ack_async(jid, &aq));
+                }
+                None => std::thread::yield_now(),
+            }
+        }
+        for a in acks {
+            assert_eq!(a.wait(), Ok(1), "ack must win its CAS exactly once");
+        }
+        fl.stop();
+        assert_eq!(b.audit(0).done, 6);
+        assert!(b.take(1).unwrap().is_none());
+        assert_eq!(b.reconcile_report(0).mismatches(), 0);
+    }
+
+    #[test]
+    fn async_layer_requires_sharded_queue() {
+        use crate::queues::asyncq::AsyncCfg;
+        let (_p, b) = mk(); // plain PerLCRQ broker
+        assert!(matches!(
+            b.async_layer(AsyncCfg::default()),
+            Err(QueueError::BadConfig(_))
+        ));
     }
 
     #[test]

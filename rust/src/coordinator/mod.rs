@@ -9,13 +9,18 @@
 //! transitions are CAS-guarded and persisted.
 //!
 //! * [`broker`] — the data plane: job records, submit/take/complete,
-//!   recovery, audit.
+//!   recovery, audit; the async variants (`submit_async` / `take_async` /
+//!   `ack_async`) ride the [`crate::queues::asyncq`] completion layer, so
+//!   handle enqueues, consumptions and DONE marks group-commit on the
+//!   flusher's psync; per-job leases + [`broker::Broker::reap_expired`]
+//!   redeliver jobs whose worker died *without* a crash.
 //! * [`service`] — the orchestration loop: producer/worker thread pools,
 //!   crash cycles, end-to-end statistics (the `examples/task_broker`
-//!   driver and `persiq serve` both run this).
+//!   driver and `persiq serve` both run this); `ServiceConfig::use_async`
+//!   switches it onto the async paths end to end.
 
 pub mod broker;
 pub mod service;
 
-pub use broker::{Broker, BrokerAudit, JobId, JobState};
+pub use broker::{Broker, BrokerAudit, JobId, JobState, ReconcileReport};
 pub use service::{run_service, ServiceConfig, ServiceReport};

@@ -1,12 +1,14 @@
 //! Broker service orchestration: producer/worker pools, crash cycles, and
 //! the end-to-end report (`examples/task_broker` and `persiq serve`).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::pmem::{run_guarded, Topology};
+use crate::queues::asyncq::{AsyncCfg, ExecFuture};
 use crate::util::rng::Xoshiro256;
 use crate::util::time::Stopwatch;
 
@@ -24,6 +26,18 @@ pub struct ServiceConfig {
     /// pmem-primitive steps before each crash.
     pub crash_steps: u64,
     pub seed: u64,
+    /// Serve through the async completion layer: producers hold windows
+    /// of `submit_async` futures, workers `take_async`/`ack_async`, and
+    /// all queue persistence rides the flusher's group commit. Requires
+    /// a sharded broker.
+    pub use_async: bool,
+    /// Async-layer knobs (`--flush-us` / `--async-depth` / `--flushers`);
+    /// only read when `use_async`.
+    pub acfg: AsyncCfg,
+    /// Per-job lease in ms (0 = off): jobs taken by a worker that dies
+    /// silently are re-enqueued by a reap pass (see
+    /// [`Broker::reap_expired`]).
+    pub lease_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -35,6 +49,9 @@ impl Default for ServiceConfig {
             crash_cycles: 0,
             crash_steps: 50_000,
             seed: 0xB40C,
+            use_async: false,
+            acfg: AsyncCfg::default(),
+            lease_ms: 0,
         }
     }
 }
@@ -62,6 +79,12 @@ pub fn run_service(
     broker: &Arc<Broker>,
     cfg: &ServiceConfig,
 ) -> Result<ServiceReport> {
+    if cfg.lease_ms > 0 {
+        broker.set_lease_ms(cfg.lease_ms);
+    }
+    if cfg.use_async {
+        return run_service_async(topo, broker, cfg);
+    }
     let sw = Stopwatch::start();
     let mut rng = Xoshiro256::seed_from(cfg.seed);
     let processed = Arc::new(AtomicU64::new(0));
@@ -93,8 +116,11 @@ pub fn run_service(
                 });
             }));
         }
-        // Workers: tids [producers, producers+workers).
-        let total_target = cfg.producers * cfg.jobs_per_producer;
+        // Workers: tids [producers, producers+workers). The exit target
+        // is cumulative across cycles (`processed` never resets), so
+        // later cycles keep their workers draining instead of exiting on
+        // the first empty poll.
+        let total_target = cfg.producers * cfg.jobs_per_producer * (cycle + 1);
         for w in 0..cfg.workers {
             let broker = Arc::clone(broker);
             let topo = topo.clone();
@@ -149,18 +175,30 @@ pub fn run_service(
         }
     }
 
-    // Final drain: finish whatever survived the last crash. Flush any
-    // thread-buffered handle enqueues first (batched work queues) so no
-    // submitted job stays invisible.
+    let latency_samples = std::mem::take(&mut *samples.lock().unwrap());
+    finish_service(broker, &processed, crashes, &sw, latency_samples)
+}
+
+/// The shared tail of both serve paths: reap expired leases (no-op when
+/// leasing is off) so jobs abandoned by a silently-dead worker are
+/// requeued, flush any thread-buffered handle enqueues (batched work
+/// queues), drain + complete whatever survived, and assemble the report
+/// from the final audit.
+fn finish_service(
+    broker: &Arc<Broker>,
+    processed: &AtomicU64,
+    crashes: usize,
+    sw: &Stopwatch,
+    latency_samples: Vec<f64>,
+) -> Result<ServiceReport> {
+    broker.reap_expired(0);
     broker.quiesce();
     while let Some((jid, _)) = broker.take(0)? {
         if broker.complete(0, jid)? {
             processed.fetch_add(1, Ordering::Relaxed);
         }
     }
-
     let audit = broker.audit(0);
-    let latency_samples = std::mem::take(&mut *samples.lock().unwrap());
     Ok(ServiceReport {
         submitted: audit.submitted,
         processed: processed.load(Ordering::Relaxed),
@@ -170,6 +208,141 @@ pub fn run_service(
         wall_secs: sw.elapsed_secs(),
         latency_samples,
     })
+}
+
+/// The async serve path: producers hold a window of `submit_async`
+/// futures (job records are still written durably on their own tids),
+/// workers pipeline `take_async` deliveries into `ack_async` windows, and
+/// every queue/ack psync is group-committed by the flusher workers on
+/// thread slots `producers + workers ..`. Durability-gated completion
+/// means a resolved submit future is a crash-proof job and a resolved
+/// ack is a crash-proof completion — the exactly-once audit at the end
+/// is identical to the sync path's.
+fn run_service_async(
+    topo: &Topology,
+    broker: &Arc<Broker>,
+    cfg: &ServiceConfig,
+) -> Result<ServiceReport> {
+    let sw = Stopwatch::start();
+    let mut rng = Xoshiro256::seed_from(cfg.seed);
+    let processed = Arc::new(AtomicU64::new(0));
+    let cycles = cfg.crash_cycles.max(1);
+    let mut crashes = 0;
+    // Window per producer/worker: deep enough to overlap a few group
+    // commits, small enough to bound in-flight state.
+    let window = cfg.acfg.depth.clamp(4, 256);
+
+    for cycle in 0..cycles {
+        let crashing = cfg.crash_cycles > 0;
+        if crashing {
+            topo.arm_crash_after(cfg.crash_steps);
+        }
+        // A fresh async layer per cycle: a crash seals the previous one.
+        let aq = broker.async_layer(cfg.acfg.clone()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let flusher = aq.spawn_flusher(cfg.producers + cfg.workers);
+        let mut handles = Vec::new();
+        // Producers: tids [0, producers).
+        for ptid in 0..cfg.producers {
+            let broker = Arc::clone(broker);
+            let aq = aq.clone();
+            let jobs = cfg.jobs_per_producer;
+            handles.push(std::thread::spawn(move || {
+                let _ = run_guarded(|| {
+                    let mut pending = VecDeque::with_capacity(window + 1);
+                    for i in 0..jobs {
+                        if aq.is_closed() {
+                            break;
+                        }
+                        let payload = format!("job:c{cycle}:p{ptid}:{i}").into_bytes();
+                        let (_id, fut) = broker
+                            .submit_async(ptid, &payload[..payload.len().min(48)], &aq)
+                            .unwrap();
+                        pending.push_back(fut);
+                        if pending.len() >= window {
+                            // Await the oldest; a crash error ends the
+                            // epoch (recovery re-enqueues from the logs).
+                            if pending.pop_front().unwrap().wait().is_err() {
+                                break;
+                            }
+                        }
+                    }
+                    while let Some(f) = pending.pop_front() {
+                        let _ = f.wait();
+                    }
+                });
+            }));
+        }
+        // Workers: tids [producers, producers+workers). Cumulative target
+        // (see the sync path): later cycles must keep draining the
+        // recovered backlog through the async take/ack path.
+        let total_target = cfg.producers * cfg.jobs_per_producer * (cycle + 1);
+        for w in 0..cfg.workers {
+            let broker = Arc::clone(broker);
+            let aq = aq.clone();
+            let processed = Arc::clone(&processed);
+            let wtid = cfg.producers + w;
+            handles.push(std::thread::spawn(move || {
+                let _ = run_guarded(|| {
+                    let mut acks: VecDeque<ExecFuture> = VecDeque::with_capacity(window + 1);
+                    // Pop resolved acks from the front (and, when the
+                    // window is full, block on the oldest) — pipelined
+                    // completion instead of a per-job psync wait.
+                    let settle = |acks: &mut VecDeque<ExecFuture>, blocking: usize| {
+                        while acks.len() > blocking
+                            || acks.front().is_some_and(|a| a.is_resolved())
+                        {
+                            match acks.pop_front() {
+                                Some(a) => {
+                                    if let Ok(1) = a.wait() {
+                                        processed.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                None => break,
+                            }
+                        }
+                    };
+                    let mut idle = 0u32;
+                    while idle < 2_000 {
+                        match broker.take_async(&aq).wait() {
+                            Ok(Some(h)) => {
+                                idle = 0;
+                                if let Some((jid, _payload)) = broker.resolve_take(wtid, h) {
+                                    acks.push_back(broker.ack_async(jid, &aq));
+                                    settle(&mut acks, window - 1);
+                                }
+                                // else: stale DONE handle — take again.
+                            }
+                            Ok(None) => {
+                                idle += 1;
+                                settle(&mut acks, usize::MAX);
+                                if processed.load(Ordering::Relaxed) >= total_target as u64 {
+                                    break;
+                                }
+                                std::thread::yield_now();
+                            }
+                            Err(_) => break, // crash/closed
+                        }
+                    }
+                    settle(&mut acks, 0);
+                });
+            }));
+        }
+        for h in handles {
+            h.join().expect("service thread panicked");
+        }
+        // Stop (and on crash: observe) the flusher before cutting the
+        // topology — crash() requires all pmem-touching threads unwound.
+        flusher.stop();
+        if crashing {
+            topo.crash(&mut rng);
+            broker.recover();
+            crashes += 1;
+        }
+    }
+
+    // Per-job latency sampling is a sync-path feature: async job time is
+    // dominated by the completion window, not per-op cost — no samples.
+    finish_service(broker, &processed, crashes, &sw, Vec::new())
 }
 
 #[cfg(test)]
@@ -207,6 +380,76 @@ mod tests {
         assert!(rep.latency_samples.len() > 0);
     }
 
+    fn mk_sharded(cap: usize, nthreads: usize) -> (Topology, Arc<Broker>) {
+        let topo = Topology::single(PmemConfig {
+            capacity_words: cap,
+            cost: CostModel::zero(),
+            evict_prob: 0.25,
+            pending_flush_prob: 0.5,
+            seed: 11,
+        });
+        let broker = Arc::new(
+            Broker::new_sharded(
+                &topo,
+                nthreads,
+                1 << 16,
+                crate::queues::QueueConfig {
+                    shards: 4,
+                    batch: 4,
+                    batch_deq: 4,
+                    ring_size: 1 << 10,
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
+        (topo, broker)
+    }
+
+    #[test]
+    fn async_serve_clean_run_completes_everything() {
+        let (topo, broker) = mk_sharded(1 << 22, 2 + 2 + 1);
+        let cfg = ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 200,
+            crash_cycles: 0,
+            use_async: true,
+            acfg: AsyncCfg { flush_us: 200, depth: 8, flushers: 1 },
+            ..Default::default()
+        };
+        let rep = run_service(&topo, &broker, &cfg).unwrap();
+        assert_eq!(rep.submitted, 400);
+        assert_eq!(rep.done, 400, "async serve must complete every job");
+        assert_eq!(rep.pending_after, 0);
+    }
+
+    #[test]
+    fn async_serve_crash_cycles_lose_nothing() {
+        install_quiet_crash_hook();
+        let (topo, broker) = mk_sharded(1 << 23, 2 + 2 + 2);
+        let cfg = ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 250,
+            crash_cycles: 3,
+            crash_steps: 30_000,
+            seed: 2,
+            use_async: true,
+            acfg: AsyncCfg { flush_us: 100, depth: 8, flushers: 2 },
+            lease_ms: 0,
+        };
+        let rep = run_service(&topo, &broker, &cfg).unwrap();
+        assert_eq!(rep.crashes, 3);
+        assert_eq!(
+            rep.done, rep.submitted,
+            "async crash cycles must still complete every durably submitted job \
+             exactly once (submitted={}, done={}, pending={})",
+            rep.submitted, rep.done, rep.pending_after
+        );
+        assert_eq!(rep.pending_after, 0);
+    }
+
     #[test]
     fn crash_cycles_lose_nothing_complete_once() {
         install_quiet_crash_hook();
@@ -218,6 +461,7 @@ mod tests {
             crash_cycles: 3,
             crash_steps: 30_000,
             seed: 1,
+            ..Default::default()
         };
         let rep = run_service(&topo, &broker, &cfg).unwrap();
         assert_eq!(rep.crashes, 3);

@@ -1,0 +1,339 @@
+//! Async workload runner: producers submit operations through the
+//! [`crate::queues::asyncq`] completion layer and overlap persistence
+//! latency by holding a *window* of outstanding futures, awaiting the
+//! oldest only when the window fills — the service pattern the async
+//! API exists for.
+//!
+//! Producers touch no persistent memory themselves (their virtual clocks
+//! stay at zero); all queue work runs on the flusher workers' thread
+//! slots, so `sim_ns = max_vtime` measures the persistence pipeline and
+//! `sim_mops` compares directly against [`super::runner::run_workload`]
+//! numbers for the sync API (same meter, same workloads).
+//!
+//! With `record = true` the producers log checker events at the **async
+//! boundaries**: `EnqInvoke`/`DeqInvoke` at submission, `EnqOk`/`DeqOk`
+//! at future resolution. Because resolution is durability-gated, a
+//! history recorded this way needs *zero* trailing-loss/redelivery
+//! allowance from the checker — `tests/prop_async_durability.rs` gates
+//! on exactly that.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::pmem::Topology;
+use crate::queues::asyncq::{AsyncCfg, AsyncQueue, AsyncStats, DeqFuture, EnqFuture};
+use crate::queues::sharded::{Shardable, ShardedQueue};
+use crate::util::rng::Xoshiro256;
+use crate::util::time::Stopwatch;
+use crate::verify::{Event, EventKind, Recorder};
+
+use super::workload::{value_for, Workload};
+
+/// Configuration for one async workload run.
+#[derive(Clone, Debug)]
+pub struct AsyncRunConfig {
+    /// Producer (submitting) threads — tids `0..producers`; the flusher
+    /// workers take tids `producers..producers + acfg.flushers`.
+    pub producers: usize,
+    /// Total operations across all producers.
+    pub total_ops: u64,
+    pub workload: Workload,
+    pub seed: u64,
+    /// Value salt (vary across crash cycles for global uniqueness).
+    pub salt: u64,
+    /// Record checker events at the async boundaries.
+    pub record: bool,
+    /// Outstanding futures a producer holds before awaiting the oldest.
+    pub window: usize,
+    pub acfg: AsyncCfg,
+}
+
+impl Default for AsyncRunConfig {
+    fn default() -> Self {
+        Self {
+            producers: 4,
+            total_ops: 100_000,
+            workload: Workload::Pairs,
+            seed: 42,
+            salt: 0,
+            record: false,
+            window: 32,
+            acfg: AsyncCfg::default(),
+        }
+    }
+}
+
+/// Result of one async workload run.
+#[derive(Clone, Debug, Default)]
+pub struct AsyncRunResult {
+    /// Successfully resolved operations (enq ok + deq ok + empties).
+    pub ops_done: u64,
+    pub enq_ok: u64,
+    pub deq_ok: u64,
+    pub empties: u64,
+    /// Futures that resolved with an error (crash/close/queue).
+    pub failed: u64,
+    /// Error-resolved enqueue futures (their items may or may not have
+    /// landed — the crash-unknown window).
+    pub failed_enq: u64,
+    /// Error-resolved dequeue futures. Each may have durably consumed at
+    /// most one value without returning it (the in-flight-dequeue budget
+    /// the checker's `pending_deqs` models).
+    pub failed_deq: u64,
+    /// A flusher observed a simulated crash mid-run.
+    pub crashed: bool,
+    pub wall_secs: f64,
+    /// Simulated makespan (max thread virtual time — the flusher tids).
+    pub sim_ns: u64,
+    pub sim_mops: f64,
+    pub wall_mops: f64,
+    /// Per-producer event logs (when `record`).
+    pub logs: Vec<Vec<Event>>,
+    /// Values whose `EnqFuture` resolved `Ok` — durably enqueued.
+    pub enq_resolved: Vec<u64>,
+    /// Values returned by `DeqFuture`s that resolved — durably consumed.
+    pub deq_resolved: Vec<u64>,
+    /// Async-layer counters at the end of the run.
+    pub stats: AsyncStats,
+}
+
+enum Pending {
+    E(u64, EnqFuture),
+    D(DeqFuture),
+}
+
+/// Run an async workload over `queue`. Resets the topology meter first.
+/// If a crash is armed the flusher workers unwind, every unflushed future
+/// fails with `Crashed`, and the run ends early with `crashed = true`
+/// (the caller then drives crash/recovery, as with the sync runner).
+pub fn run_async_workload<Q: Shardable + 'static>(
+    topo: &Topology,
+    queue: &Arc<ShardedQueue<Q>>,
+    cfg: &AsyncRunConfig,
+) -> AsyncRunResult {
+    topo.reset_meter();
+    topo.set_active_threads(cfg.producers + cfg.acfg.flushers);
+    let aq = AsyncQueue::new(Arc::clone(queue), cfg.acfg.clone())
+        .expect("invalid async config (call AsyncCfg::validate first)");
+    let flusher = aq.spawn_flusher(cfg.producers);
+    let recorder = Recorder::new();
+    let ops_per_thread = (cfg.total_ops / cfg.producers.max(1) as u64).max(1);
+
+    let sw = Stopwatch::start();
+    let mut handles = Vec::new();
+    for tid in 0..cfg.producers {
+        let aq = aq.clone();
+        let topo = topo.clone();
+        let recorder = Arc::clone(&recorder);
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::split(cfg.seed, tid as u64);
+            let mut log: Vec<Event> = Vec::new();
+            let mut window: VecDeque<Pending> = VecDeque::with_capacity(cfg.window + 1);
+            let mut out = ProducerOut::default();
+            let mut counter = 0u64;
+            let epoch = topo.epoch();
+            for k in 0..ops_per_thread {
+                if aq.is_closed() {
+                    break;
+                }
+                if cfg.workload.is_enqueue(k, &mut rng) {
+                    let v = value_for(cfg.salt, tid, counter);
+                    counter += 1;
+                    if cfg.record {
+                        recorder.record(&mut log, tid, epoch, EventKind::EnqInvoke { value: v });
+                    }
+                    window.push_back(Pending::E(v, aq.enqueue_async(v)));
+                } else {
+                    if cfg.record {
+                        recorder.record(&mut log, tid, epoch, EventKind::DeqInvoke);
+                    }
+                    window.push_back(Pending::D(aq.dequeue_async()));
+                }
+                if window.len() >= cfg.window.max(1) {
+                    let p = window.pop_front().expect("window nonempty");
+                    resolve(p, &recorder, &mut log, tid, epoch, cfg.record, &mut out);
+                }
+            }
+            while let Some(p) = window.pop_front() {
+                resolve(p, &recorder, &mut log, tid, epoch, cfg.record, &mut out);
+            }
+            (log, out)
+        }));
+    }
+
+    let mut res = AsyncRunResult::default();
+    for h in handles {
+        let (log, out) = h.join().expect("producer panicked");
+        res.logs.push(log);
+        res.enq_ok += out.enq_ok;
+        res.deq_ok += out.deq_ok;
+        res.empties += out.empties;
+        res.failed += out.failed_enq + out.failed_deq;
+        res.failed_enq += out.failed_enq;
+        res.failed_deq += out.failed_deq;
+        res.enq_resolved.extend(out.enq_resolved);
+        res.deq_resolved.extend(out.deq_resolved);
+    }
+    res.crashed = flusher.stop() || aq.crashed();
+    res.stats = aq.stats();
+    res.ops_done = res.enq_ok + res.deq_ok + res.empties;
+    res.wall_secs = sw.elapsed_secs();
+    res.sim_ns = topo.max_vtime();
+    res.sim_mops = if res.sim_ns > 0 {
+        res.ops_done as f64 / (res.sim_ns as f64 / 1e9) / 1e6
+    } else {
+        0.0
+    };
+    res.wall_mops = if res.wall_secs > 0.0 {
+        res.ops_done as f64 / res.wall_secs / 1e6
+    } else {
+        0.0
+    };
+    res
+}
+
+#[derive(Default)]
+struct ProducerOut {
+    enq_ok: u64,
+    deq_ok: u64,
+    empties: u64,
+    failed_enq: u64,
+    failed_deq: u64,
+    enq_resolved: Vec<u64>,
+    deq_resolved: Vec<u64>,
+}
+
+fn resolve(
+    p: Pending,
+    recorder: &Recorder,
+    log: &mut Vec<Event>,
+    tid: usize,
+    epoch: u64,
+    record: bool,
+    out: &mut ProducerOut,
+) {
+    match p {
+        Pending::E(v, f) => match f.wait() {
+            Ok(()) => {
+                out.enq_ok += 1;
+                out.enq_resolved.push(v);
+                if record {
+                    recorder.record(log, tid, epoch, EventKind::EnqOk { value: v });
+                }
+            }
+            Err(_) => out.failed_enq += 1,
+        },
+        Pending::D(f) => match f.wait() {
+            Ok(Some(v)) => {
+                out.deq_ok += 1;
+                out.deq_resolved.push(v);
+                if record {
+                    recorder.record(log, tid, epoch, EventKind::DeqOk { value: v });
+                }
+            }
+            Ok(None) => {
+                out.empties += 1;
+                if record {
+                    recorder.record(log, tid, epoch, EventKind::DeqEmpty);
+                }
+            }
+            Err(_) => out.failed_deq += 1,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+    use crate::queues::{ConcurrentQueue, QueueConfig};
+
+    fn mk(
+        shards: usize,
+        batch: usize,
+        batch_deq: usize,
+        flushers: usize,
+    ) -> (Topology, Arc<ShardedQueue>) {
+        let topo = Topology::single(PmemConfig {
+            capacity_words: 1 << 22,
+            cost: CostModel::zero(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 3,
+        });
+        let cfg = QueueConfig { shards, batch, batch_deq, ring_size: 256, ..Default::default() };
+        let q = Arc::new(ShardedQueue::new_perlcrq(&topo, 4 + flushers, cfg).unwrap());
+        (topo, q)
+    }
+
+    #[test]
+    fn clean_async_run_resolves_everything() {
+        let (topo, q) = mk(4, 4, 4, 2);
+        let cfg = AsyncRunConfig {
+            producers: 4,
+            total_ops: 8_000,
+            window: 16,
+            acfg: AsyncCfg { flushers: 2, depth: 16, flush_us: 200, ..Default::default() },
+            ..Default::default()
+        };
+        let r = run_async_workload(&topo, &q, &cfg);
+        assert!(!r.crashed);
+        assert_eq!(r.failed, 0, "clean run must fail nothing");
+        assert_eq!(r.ops_done, 8_000);
+        assert_eq!(r.enq_ok, r.enq_resolved.len() as u64);
+        // Conservation: every resolved dequeue's value was a resolved (or
+        // at least submitted) enqueue; with pairs + drain they balance.
+        let drained = {
+            let mut d = Vec::new();
+            while let Some(v) = q.dequeue(0).unwrap() {
+                d.push(v);
+            }
+            d
+        };
+        let mut all = r.deq_resolved.clone();
+        all.extend(drained);
+        all.sort_unstable();
+        all.dedup();
+        let mut enq = r.enq_resolved.clone();
+        enq.sort_unstable();
+        assert_eq!(all, enq, "resolved enqueues = resolved dequeues + drained, no dups");
+    }
+
+    #[test]
+    fn async_run_records_checkable_history() {
+        use crate::verify::{check_with, CheckOptions, History};
+        let (topo, q) = mk(4, 4, 4, 1);
+        let cfg = AsyncRunConfig {
+            producers: 4,
+            total_ops: 4_000,
+            record: true,
+            window: 8,
+            acfg: AsyncCfg { flushers: 1, depth: 8, flush_us: 200, ..Default::default() },
+            ..Default::default()
+        };
+        let r = run_async_workload(&topo, &q, &cfg);
+        let drained = {
+            let mut d = Vec::new();
+            while let Some(v) = q.dequeue(0).unwrap() {
+                d.push(v);
+            }
+            d
+        };
+        let h = History::from_logs(r.logs, drained);
+        let rep = check_with(
+            &h,
+            &CheckOptions {
+                relaxation: crate::verify::relaxation_for(
+                    "sharded-perlcrq",
+                    5,
+                    &QueueConfig { shards: 4, batch: 4, batch_deq: 4, ..Default::default() },
+                ),
+                check_empty: false,
+                ..Default::default()
+            },
+        );
+        assert!(rep.ok(), "async history must verify: {:?}", rep.violations);
+        assert!(rep.enq_completed > 0);
+    }
+}

@@ -10,14 +10,19 @@
 //! * [`failure`] — the §5 failure framework: `recovery_steps` countdown, a
 //!   *cycle* = normal run → crash when steps hit 0 → recovery; recovery
 //!   cost is measured over 10 cycles by default.
+//! * [`async_run`] — the async-API twin of [`runner`]: producers submit
+//!   through [`crate::queues::asyncq`] and hold windows of futures,
+//!   overlapping persistence latency instead of blocking per batch.
 //! * [`mod@bench`] — a small criterion-style measurement core (warmup +
 //!   repeated timed runs + mean/σ) used by all `cargo bench` targets.
 
+pub mod async_run;
 pub mod bench;
 pub mod failure;
 pub mod runner;
 pub mod workload;
 
+pub use async_run::{run_async_workload, AsyncRunConfig, AsyncRunResult};
 pub use failure::{run_cycles, CycleConfig, CycleResult};
 pub use runner::{run_workload, RunConfig, RunResult};
 pub use workload::Workload;

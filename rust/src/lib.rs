@@ -29,7 +29,14 @@
 //!   (`QueueConfig::batch_deq`, `PersistCfg::defer_dequeue_sync`)
 //!   amortize the `Head_i` drain to 1/K per dequeue, each side with
 //!   batch-log-based crash reconciliation (psyncs/op: per-op 1+1,
-//!   enq-batched 1/B+1, both-batched 1/B+1/K).
+//!   enq-batched 1/B+1, both-batched 1/B+1/K). [`queues::asyncq`] adds
+//!   the **async completion layer** on top: `enqueue_async`/`dequeue_async`
+//!   futures executed by flat-combining flusher workers and resolved only
+//!   when the group-commit `psync` covering the operation retires —
+//!   **durability-gated completion** (a resolved future is proof of
+//!   durability; a crash fails unflushed futures with `Crashed`), so the
+//!   async API keeps the 1/B + 1/K psync cost while restoring strict
+//!   durable linearizability at the resolution boundary.
 //! * [`verify`] — history recording and a durable-linearizability checker,
 //!   including the k-relaxed FIFO mode ([`verify::check_relaxed`]) that
 //!   machine-verifies sharded histories up to bounded shard skew, plus
@@ -41,7 +48,9 @@
 //! * [`runtime`] — a PJRT wrapper that loads the AOT-compiled JAX/Pallas
 //!   metrics pipeline (`artifacts/metrics.hlo.txt`) and runs it from Rust.
 //! * [`coordinator`] — a persistent task-broker service built on PerLCRQ:
-//!   the end-to-end example application.
+//!   the end-to-end example application; `submit_async`/`take_async`/
+//!   `ack_async` ride the async completion layer, and per-job leases +
+//!   `reap_expired` redeliver jobs whose worker died without a crash.
 //! * [`util`] — self-contained infrastructure (PRNG, CLI, config, reporters)
 //!   since this build environment is offline.
 //!

@@ -12,6 +12,8 @@
 //! persiq bench     --algo sharded-perlcrq --pools 2 --placement colocate --shards 4
 //! persiq verify    --algo sharded-perlcrq --pools 2 --relax auto --cycles 5
 //! persiq audit     --pools 2 --placement colocate --batch 4 --batch-deq 4
+//! persiq bench     --async --batch 8 --batch-deq 8 --flush-us 50 --threads 4
+//! persiq serve     --async --shards 4 --batch 4 --flushers 2 --lease-ms 200
 //! persiq micro                      # pmem primitive costs
 //! ```
 //!
@@ -133,34 +135,62 @@ fn resolve_algos(spec: &str, persistent_only: bool) -> Result<Vec<String>> {
     Ok(out)
 }
 
-/// Apply the shared `--shards` / `--batch` / `--batch-deq` / `--pools` /
-/// `--placement` overrides to the config and validate it (surfacing
-/// `BadConfig` as a CLI error instead of a construction panic).
-fn apply_queue_overrides(cfg: &mut Config, a: &Args) -> Result<()> {
-    cfg.queue.shards = a.get_parse("shards", cfg.queue.shards)?;
-    cfg.queue.batch = a.get_parse("batch", cfg.queue.batch)?;
-    cfg.queue.batch_deq = a.get_parse("batch-deq", cfg.queue.batch_deq)?;
-    cfg.pools = a.get_parse("pools", cfg.pools)?;
-    anyhow::ensure!(
-        cfg.pools >= 1 && cfg.pools <= MAX_POOLS,
-        "pool count must be in 1..={MAX_POOLS} (--pools / [topology] pools)"
-    );
-    if let Some(p) = a.get("placement") {
-        cfg.queue.placement = PlacementPolicy::parse(p).map_err(|e| anyhow::anyhow!(e))?;
-    }
-    if let PlacementPolicy::Pinned(list) = &cfg.queue.placement {
-        if let Some(&bad) = list.iter().find(|&&p| p >= cfg.pools) {
-            anyhow::bail!("pinned placement names pool {bad} but --pools is {}", cfg.pools);
-        }
-    }
-    cfg.queue.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
-    Ok(())
-}
+/// The queue / topology / async flag set shared by every workload
+/// subcommand — registered and parsed in exactly one place, so a new
+/// shared knob lands once instead of once per subcommand.
+struct QueueArgs;
 
-/// The shared topology options, appended to every workload subcommand.
-fn with_topology_opts(cmd: Command) -> Command {
-    cmd.opt("pools", "NVM pools (sockets), each with its own bandwidth chain (default 1)")
-        .opt("placement", "shard placement: interleave | colocate | pinned:<p0,p1,...>")
+impl QueueArgs {
+    /// Register the shared queue/topology options on a subcommand.
+    fn register(cmd: Command) -> Command {
+        cmd.opt("shards", "shard count for sharded algorithms")
+            .opt("batch", "enqueue batch size for sharded algorithms (1 = per-op persistence)")
+            .opt(
+                "batch-deq",
+                "dequeue batch size for sharded algorithms (1 = per-op persistence)",
+            )
+            .opt("pools", "NVM pools (sockets), each with its own bandwidth chain (default 1)")
+            .opt("placement", "shard placement: interleave | colocate | pinned:<p0,p1,...>")
+    }
+
+    /// Additionally register the async completion-layer knobs — only on
+    /// subcommands that actually have an `--async` path (bench, serve),
+    /// so the other commands don't advertise silent no-op flags.
+    /// [`QueueArgs::apply`] reads them via `Args::get`, which returns the
+    /// config default when the option was never registered.
+    fn register_async(cmd: Command) -> Command {
+        cmd.opt("flush-us", "async completion layer: deadline flush in microseconds")
+            .opt("async-depth", "async completion layer: per-flusher in-flight window")
+            .opt("flushers", "async completion layer: combiner worker threads")
+    }
+
+    /// Apply the shared overrides to the config and validate them
+    /// (surfacing `BadConfig` as a CLI error instead of a construction
+    /// panic).
+    fn apply(cfg: &mut Config, a: &Args) -> Result<()> {
+        cfg.queue.shards = a.get_parse("shards", cfg.queue.shards)?;
+        cfg.queue.batch = a.get_parse("batch", cfg.queue.batch)?;
+        cfg.queue.batch_deq = a.get_parse("batch-deq", cfg.queue.batch_deq)?;
+        cfg.pools = a.get_parse("pools", cfg.pools)?;
+        anyhow::ensure!(
+            cfg.pools >= 1 && cfg.pools <= MAX_POOLS,
+            "pool count must be in 1..={MAX_POOLS} (--pools / [topology] pools)"
+        );
+        if let Some(p) = a.get("placement") {
+            cfg.queue.placement = PlacementPolicy::parse(p).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if let PlacementPolicy::Pinned(list) = &cfg.queue.placement {
+            if let Some(&bad) = list.iter().find(|&&p| p >= cfg.pools) {
+                anyhow::bail!("pinned placement names pool {bad} but --pools is {}", cfg.pools);
+            }
+        }
+        cfg.queue.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        cfg.asyncq.flush_us = a.get_parse("flush-us", cfg.asyncq.flush_us)?;
+        cfg.asyncq.depth = a.get_parse("async-depth", cfg.asyncq.depth)?;
+        cfg.asyncq.flushers = a.get_parse("flushers", cfg.asyncq.flushers)?;
+        cfg.asyncq.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(())
+    }
 }
 
 fn cmd_bench(args: &[String]) -> Result<()> {
@@ -174,14 +204,16 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         .opt("ops", "total operations per point")
         .opt_default("workload", "pairs|random5050|enq-heavy|deq-heavy", "pairs")
         .opt("seed", "RNG seed (default: entropy)")
-        .opt("shards", "shard count for sharded algorithms")
-        .opt("batch", "enqueue batch size for sharded algorithms (1 = per-op persistence)")
-        .opt("batch-deq", "dequeue batch size for sharded algorithms (1 = per-op persistence)")
+        .flag(
+            "async",
+            "drive the sharded queue through the async completion layer \
+             (producers overlap persistence; durability-gated futures)",
+        )
         .flag("latency", "also report latency percentiles via the metrics engine");
-    let cmd = with_topology_opts(cmd);
+    let cmd = QueueArgs::register_async(QueueArgs::register(cmd));
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
-    apply_queue_overrides(&mut cfg, &a)?;
+    QueueArgs::apply(&mut cfg, &a)?;
     let algos = resolve_algos(a.get("algo").unwrap_or("perlcrq"), false)?;
     let threads = a.get_list::<usize>("threads", &[1, 2, 4, 8])?;
     let ops = a.get_parse::<u64>("ops", cfg.bench_ops)?;
@@ -190,6 +222,19 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     let seed = a.get_parse::<u64>("seed", entropy_seed())?;
     let want_latency = a.flag("latency");
     log_info!("bench seed = {seed}");
+
+    if a.flag("async") {
+        // The async layer rides the sharded queue's batch logs: --algo is
+        // fixed. Surface ignored flags instead of misattributing numbers.
+        let algo_spec = a.get("algo").unwrap_or("perlcrq");
+        if algo_spec != "perlcrq" && algo_spec != "sharded-perlcrq" {
+            anyhow::bail!("--async benches sharded-perlcrq only (got --algo {algo_spec})");
+        }
+        if want_latency {
+            log_warn!("--latency is ignored with --async (no per-op sampling on the async path)");
+        }
+        return bench_async(&cfg, &threads, ops, workload, seed);
+    }
 
     let engine = if want_latency { Some(MetricsEngine::auto()) } else { None };
     let mut csv = Csv::new(vec![
@@ -238,6 +283,70 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `bench --async`: producers submit through the completion layer and
+/// hold windows of durability-gated futures; the flusher workers own the
+/// queue tids (`threads` counts producers; flushers come on top from
+/// `--flushers`). Only the sharded queue has the batch logs the layer
+/// rides, so `--algo` is fixed to `sharded-perlcrq` here.
+fn bench_async(
+    cfg: &Config,
+    threads: &[usize],
+    ops: u64,
+    workload: Workload,
+    seed: u64,
+) -> Result<()> {
+    use persiq::harness::{run_async_workload, AsyncRunConfig};
+    use persiq::queues::sharded::ShardedQueue;
+    log_info!(
+        "async bench: sharded-perlcrq, flush-us={} depth={} flushers={}",
+        cfg.asyncq.flush_us,
+        cfg.asyncq.depth,
+        cfg.asyncq.flushers
+    );
+    let mut csv = Csv::new(vec![
+        "threads", "flushers", "sim_mops", "wall_mops", "pwbs_per_op", "psyncs_per_op",
+        "resolved", "failed", "depth_flushes", "deadline_flushes", "backpressure",
+    ]);
+    for &n in threads {
+        let nthreads = n + cfg.asyncq.flushers;
+        let topo = cfg.build_topology();
+        let q = Arc::new(
+            ShardedQueue::new_perlcrq(&topo, nthreads, cfg.queue.clone())
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
+        let rc = AsyncRunConfig {
+            producers: n,
+            total_ops: ops,
+            workload,
+            seed,
+            window: cfg.asyncq.depth.max(1),
+            acfg: cfg.asyncq.clone(),
+            ..Default::default()
+        };
+        let r = run_async_workload(&topo, &q, &rc);
+        anyhow::ensure!(!r.crashed, "async bench crashed unexpectedly");
+        let stats = topo.stats_total();
+        let per = |x: u64| format!("{:.2}", x as f64 / r.ops_done.max(1) as f64);
+        csv.row(vec![
+            n.to_string(),
+            cfg.asyncq.flushers.to_string(),
+            fnum(r.sim_mops),
+            fnum(r.wall_mops),
+            per(stats.pwbs),
+            per(stats.psyncs),
+            r.ops_done.to_string(),
+            r.failed.to_string(),
+            r.stats.depth_flushes.to_string(),
+            r.stats.deadline_flushes.to_string(),
+            r.stats.backpressure.to_string(),
+        ]);
+    }
+    print!("{}", csv.to_table());
+    csv.save(std::path::Path::new("results/cli_bench_async.csv"))?;
+    println!("[saved results/cli_bench_async.csv]");
+    Ok(())
+}
+
 fn cmd_recover(args: &[String]) -> Result<()> {
     let cmd = Command::new("recover", "crash/recovery cycles (paper §5 framework)")
         .opt_default("algo", "persistent algorithm (see `persiq list`)", "periq")
@@ -245,14 +354,11 @@ fn cmd_recover(args: &[String]) -> Result<()> {
         .opt_default("steps", "pmem steps before each crash", "50000")
         .opt_default("threads", "worker threads", "4")
         .opt("ops", "max ops per cycle")
-        .opt("shards", "shard count for sharded algorithms")
-        .opt("batch", "enqueue batch size for sharded algorithms")
-        .opt("batch-deq", "dequeue batch size for sharded algorithms")
         .opt("seed", "RNG seed");
-    let cmd = with_topology_opts(cmd);
+    let cmd = QueueArgs::register(cmd);
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
-    apply_queue_overrides(&mut cfg, &a)?;
+    QueueArgs::apply(&mut cfg, &a)?;
     let algos = resolve_algos(a.get("algo").unwrap_or("periq"), true)?;
     let nthreads = a.get_parse::<usize>("threads", 4)?;
     for algo in &algos {
@@ -302,9 +408,6 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         .opt_default("threads", "worker threads", "4")
         .opt_default("ops", "ops per cycle attempt", "40000")
         .opt_default("steps", "pmem steps before crash", "30000")
-        .opt("shards", "shard count for sharded algorithms")
-        .opt("batch", "enqueue batch size for sharded algorithms")
-        .opt("batch-deq", "dequeue batch size for sharded algorithms")
         .opt(
             "relax",
             "allowed FIFO overtakes per dequeue: a number, or 'auto' to calibrate the \
@@ -312,10 +415,10 @@ fn cmd_verify(args: &[String]) -> Result<()> {
              algorithm)",
         )
         .opt("seed", "RNG seed");
-    let cmd = with_topology_opts(cmd);
+    let cmd = QueueArgs::register(cmd);
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
-    apply_queue_overrides(&mut cfg, &a)?;
+    QueueArgs::apply(&mut cfg, &a)?;
     let seed = a.get_parse::<u64>("seed", entropy_seed())?;
     log_info!("verify seed = {seed}");
     let algos = resolve_algos(a.get("algo").unwrap_or("all"), true)?;
@@ -445,21 +548,26 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt_default("crash-cycles", "crash/recovery cycles (0 = none)", "0")
         .opt_default("steps", "pmem steps before each crash", "50000")
         .opt_default("queue", "work queue kind: perlcrq|sharded", "perlcrq")
-        .opt("shards", "shard count for the sharded work queue (implies --queue sharded)")
-        .opt("batch", "enqueue batch size for the sharded work queue (implies --queue sharded)")
-        .opt("batch-deq", "dequeue batch size for the sharded work queue (implies --queue sharded)")
+        .flag(
+            "async",
+            "serve through the async completion layer (submit_async / take_async / \
+             ack_async riding the group commit; implies --queue sharded)",
+        )
+        .opt("lease-ms", "per-job lease on in-flight jobs in ms (0 = off)")
         .opt("seed", "RNG seed");
-    let cmd = with_topology_opts(cmd);
+    let cmd = QueueArgs::register_async(QueueArgs::register(cmd));
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
+    let use_async = a.flag("async");
     // The broker's queue kind is an explicit choice (config-file [queue]
     // shards/batch only parameterize it); --shards/--batch/--pools/
-    // --placement imply sharded (only the sharded queue spreads over a
-    // topology's pools).
+    // --placement/--async imply sharded (only the sharded queue spreads
+    // over a topology's pools and carries the async layer's batch logs).
     let sharded_broker = match a.get("queue").unwrap_or("perlcrq") {
         "sharded" => true,
         "perlcrq" => {
-            a.get("shards").is_some()
+            use_async
+                || a.get("shards").is_some()
                 || a.get("batch").is_some()
                 || a.get("batch-deq").is_some()
                 || a.get("pools").is_some()
@@ -467,7 +575,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
         other => anyhow::bail!("unknown --queue {other:?} (perlcrq|sharded)"),
     };
-    apply_queue_overrides(&mut cfg, &a)?;
+    QueueArgs::apply(&mut cfg, &a)?;
     let producers = a.get_parse::<usize>("producers", 2)?;
     let workers = a.get_parse::<usize>("workers", 2)?;
     let scfg = ServiceConfig {
@@ -477,24 +585,38 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         crash_cycles: a.get_parse("crash-cycles", 0)?,
         crash_steps: a.get_parse("steps", 50_000)?,
         seed: a.get_parse("seed", entropy_seed())?,
+        use_async,
+        acfg: cfg.asyncq.clone(),
+        lease_ms: a.get_parse("lease-ms", cfg.lease_ms)?,
     };
+    // Async mode adds the flusher workers' thread slots on top of the
+    // producer/worker tids.
+    let nthreads = producers + workers + if use_async { cfg.asyncq.flushers } else { 0 };
     let topo = cfg.build_topology();
     let broker = if sharded_broker {
         log_info!(
             "broker work queue: sharded-perlcrq (shards={}, batch={}, batch-deq={}, \
-             pools={}, placement={})",
+             pools={}, placement={}{})",
             cfg.queue.shards,
             cfg.queue.batch,
             cfg.queue.batch_deq,
             topo.len(),
-            cfg.queue.placement
+            cfg.queue.placement,
+            if use_async {
+                format!(
+                    ", async: flush-us={} depth={} flushers={}",
+                    cfg.asyncq.flush_us, cfg.asyncq.depth, cfg.asyncq.flushers
+                )
+            } else {
+                String::new()
+            }
         );
         Arc::new(
-            Broker::new_sharded(&topo, producers + workers, 1 << 16, cfg.queue.clone())
+            Broker::new_sharded(&topo, nthreads, 1 << 16, cfg.queue.clone())
                 .map_err(|e| anyhow::anyhow!("{e}"))?,
         )
     } else {
-        Arc::new(Broker::new_on(&topo, producers + workers, 1 << 16, cfg.queue.ring_size))
+        Arc::new(Broker::new_on(&topo, nthreads, 1 << 16, cfg.queue.ring_size))
     };
     let rep = run_service(&topo, &broker, &scfg)?;
     println!(
@@ -527,14 +649,11 @@ fn cmd_audit(args: &[String]) -> Result<()> {
     .opt_default("consume", "fraction of submitted jobs to take+complete first", "0.5")
     .opt_default("crash", "crash + recover before auditing (0 = audit the live state)", "1")
     .opt_default("queue", "work queue kind: perlcrq|sharded", "sharded")
-    .opt("shards", "shard count for the sharded work queue")
-    .opt("batch", "enqueue batch size for the sharded work queue")
-    .opt("batch-deq", "dequeue batch size for the sharded work queue")
     .opt("seed", "RNG seed");
-    let cmd = with_topology_opts(cmd);
+    let cmd = QueueArgs::register(cmd);
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
-    apply_queue_overrides(&mut cfg, &a)?;
+    QueueArgs::apply(&mut cfg, &a)?;
     let producers = a.get_parse::<usize>("producers", 2)?;
     let jobs = a.get_parse::<usize>("jobs", 200)?;
     let consume = a.get_parse::<f64>("consume", 0.5)?.clamp(0.0, 1.0);

@@ -143,6 +143,11 @@ impl SharedState {
 
     pub(crate) fn crash_now(&self) {
         self.crash_flag.store(true, Ordering::SeqCst);
+        // The primitive-entry check only consults the flag while
+        // `stepping` is on (the armed-countdown fast path skips all crash
+        // bookkeeping otherwise) — enable it so an unarmed `crash_now`
+        // actually unwinds threads at their next primitive, as documented.
+        self.stepping.store(true, Ordering::SeqCst);
     }
 
     pub(crate) fn epoch(&self) -> u64 {

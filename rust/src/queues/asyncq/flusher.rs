@@ -1,0 +1,566 @@
+//! The background flush driver: a bounded MPMC submission ring plus the
+//! combiner workers that execute queued operations and gate their
+//! completion on the group-commit `psync`.
+//!
+//! ## Why a combiner
+//!
+//! The pmem model (like real hardware) drains a `psync` against the
+//! *calling thread's* queued `pwb`s, and the sharded queue's batch logs
+//! are single-writer per thread slot. A background thread therefore
+//! cannot flush another thread's filling batch — the only sound way to
+//! both batch and complete asynchronously is for the operations
+//! themselves to execute on the thread that will issue the `psync`.
+//! That is flat combining (Rusanovsky et al.): callers publish requests,
+//! a combiner executes them against its own thread slot, and a whole
+//! group of operations becomes durable — and is completed — at one
+//! persist. Each [`Flusher`] worker owns one sharded-queue thread slot
+//! and is simultaneously the combiner and the group-commit driver for
+//! every operation it admits.
+//!
+//! ## Triggers
+//!
+//! A worker flushes its in-flight window when any of these fires:
+//!
+//! * **depth** — the window reached `AsyncCfg::depth` admitted,
+//!   not-yet-durable operations (backpressure bound);
+//! * **deadline** — the oldest admitted operation has waited
+//!   `AsyncCfg::flush_us` microseconds (bounds completion latency when
+//!   traffic trickles);
+//! * **stop** — graceful shutdown drains the ring and flushes the rest.
+//!
+//! The inner queue may also auto-flush on its own batch boundary
+//! (`batch`/`batch_deq`); the worker detects that via
+//! [`crate::queues::sharded::ShardedQueue::pending_ops`] returning to
+//! zero and completes the covered futures without issuing another
+//! `psync` — the wake rule is "the op's durability point retired",
+//! however it retired.
+//!
+//! ## Crash behavior
+//!
+//! Every pmem primitive can unwind with a [`crate::pmem::CrashSignal`].
+//! The worker runs its loop under [`run_guarded`]; on a crash it seals
+//! the layer (no new submissions), fails every parked and every queued
+//! operation with [`AsyncError::Crashed`], and exits. An operation whose
+//! flush never retired is thus *failed*, never *resolved* — the
+//! resolved-implies-durable invariant cannot be violated by a crash at
+//! any point, because the READY transition is reachable only from the
+//! straight-line path `flush-returned-normally → wake`.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crossbeam_utils::CachePadded;
+
+use crate::pmem::{run_guarded, Topology};
+use crate::queues::sharded::Shardable;
+use crate::queues::{ConcurrentQueue, PersistentQueue};
+
+use super::future::{AsyncError, CompletionSlot};
+use super::Shared;
+
+/// An operation published to the combiner.
+pub(crate) enum AsyncOp {
+    /// Enqueue `value`; complete after the batch flush retires.
+    Enq { value: u64, slot: Arc<CompletionSlot> },
+    /// Dequeue; stage the value and complete after the dequeue-log flush
+    /// retires (EMPTY completes immediately — no persistent effect).
+    Deq { slot: Arc<CompletionSlot> },
+    /// Combiner-executed closure (flat-combining escape hatch, e.g. the
+    /// broker's ack path): runs on the worker's tid against the queue's
+    /// topology, returns `(result, pool_mask)`; completion waits until
+    /// every pool in `pool_mask` has been `psync`ed by the worker.
+    Exec {
+        f: Box<dyn FnOnce(&Topology, usize) -> (u64, u64) + Send>,
+        slot: Arc<CompletionSlot>,
+    },
+}
+
+impl AsyncOp {
+    pub(crate) fn fail(self, err: AsyncError) {
+        match self {
+            AsyncOp::Enq { slot, .. } | AsyncOp::Deq { slot } | AsyncOp::Exec { slot, .. } => {
+                slot.fail(err)
+            }
+        }
+    }
+}
+
+/// Bounded MPMC ring (Vyukov sequence-number scheme): producers are the
+/// caller threads, consumers the flusher workers. `push` fails (returning
+/// the op) when full — the submission path turns that into backpressure.
+pub(crate) struct OpRing {
+    cells: Box<[RingCell]>,
+    mask: usize,
+    head: CachePadded<AtomicUsize>,
+    tail: CachePadded<AtomicUsize>,
+}
+
+struct RingCell {
+    seq: AtomicUsize,
+    op: UnsafeCell<Option<AsyncOp>>,
+}
+
+// SAFETY: the sequence protocol gives each cell exactly one writer (the
+// pusher that won the tail CAS) and one reader (the popper that won the
+// head CAS) per lap, with Release/Acquire ordering on `seq` publishing
+// the payload between them.
+unsafe impl Send for OpRing {}
+unsafe impl Sync for OpRing {}
+
+impl OpRing {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two().max(2);
+        Self {
+            cells: (0..cap)
+                .map(|i| RingCell { seq: AtomicUsize::new(i), op: UnsafeCell::new(None) })
+                .collect(),
+            mask: cap - 1,
+            head: CachePadded::new(AtomicUsize::new(0)),
+            tail: CachePadded::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn push(&self, op: AsyncOp) -> Result<(), AsyncOp> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let cell = &self.cells[pos & self.mask];
+            let seq = cell.seq.load(Ordering::Acquire);
+            if seq == pos {
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: tail CAS win = exclusive claim on this
+                        // cell for this lap.
+                        unsafe { *cell.op.get() = Some(op) };
+                        cell.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if (seq as isize) < (pos as isize) {
+                return Err(op); // full (cell still un-popped from last lap)
+            } else {
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn pop(&self) -> Option<AsyncOp> {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let cell = &self.cells[pos & self.mask];
+            let seq = cell.seq.load(Ordering::Acquire);
+            if seq == pos + 1 {
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: head CAS win = exclusive claim.
+                        let op = unsafe { (*cell.op.get()).take() };
+                        cell.seq.store(pos + self.mask + 1, Ordering::Release);
+                        return op;
+                    }
+                    Err(cur) => pos = cur,
+                }
+            } else if (seq as isize) <= (pos as isize) {
+                return None; // empty
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Handle over the spawned flusher workers. Stopping is graceful: workers
+/// drain the ring, flush what remains, complete every future, and detach
+/// their queue slots. After a simulated crash the workers have already
+/// failed everything and exited; `stop` then just joins.
+pub struct Flusher {
+    workers: Vec<std::thread::JoinHandle<()>>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    crashed: Arc<std::sync::atomic::AtomicBool>,
+    /// Type-erased `seal + drain_fail(Closed)` on the shared state, run
+    /// after the workers exit: an op pushed after the last worker's final
+    /// ring check would otherwise be stranded with its future forever
+    /// pending — sealing keeps the "racing submissions fail Closed,
+    /// never hang" promise.
+    finisher: Box<dyn Fn() + Send>,
+}
+
+impl Flusher {
+    pub(crate) fn spawn<Q: Shardable + 'static>(
+        shared: &Arc<Shared<Q>>,
+        first_tid: usize,
+    ) -> Flusher {
+        let workers = (0..shared.cfg.flushers)
+            .map(|i| {
+                let shared = Arc::clone(shared);
+                let tid = first_tid + i;
+                std::thread::spawn(move || worker_loop(shared, tid))
+            })
+            .collect();
+        let fin = Arc::clone(shared);
+        Flusher {
+            workers,
+            stop: Arc::clone(&shared.stop),
+            crashed: Arc::clone(&shared.crashed),
+            finisher: Box::new(move || {
+                fin.seal();
+                fin.drain_fail(AsyncError::Closed);
+            }),
+        }
+    }
+
+    /// Signal shutdown and join the workers. Callers must have stopped
+    /// submitting first (a submission racing `stop` is failed with
+    /// [`AsyncError::Closed`] — by the workers' final drain or by the
+    /// post-join seal — never silently dropped). Returns `true` if any
+    /// worker observed a simulated crash (in which case pending futures
+    /// were failed with [`AsyncError::Crashed`], not completed).
+    pub fn stop(mut self) -> bool {
+        self.join()
+    }
+
+    fn join(&mut self) -> bool {
+        self.stop.store(true, Ordering::Release);
+        for h in self.workers.drain(..) {
+            // A CrashSignal unwind is caught inside the worker; a real
+            // panic propagates here.
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+        }
+        // No consumers remain: seal and fail anything that raced in.
+        // Idempotent after the crash path's own seal + drain.
+        (self.finisher)();
+        self.crashed.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for Flusher {
+    fn drop(&mut self) {
+        // stop() drains self.workers; a bare drop signals + joins so the
+        // threads never leak past the Flusher's lifetime.
+        let _ = self.join();
+    }
+}
+
+/// One combiner worker. See module docs for the protocol; the correctness
+/// core is that `complete()` is only ever reached on the straight-line
+/// path after a flush (or auto-flush) returned normally.
+fn worker_loop<Q: Shardable + 'static>(shared: Arc<Shared<Q>>, tid: usize) {
+    let q = &shared.queue;
+    let mut parked_enq: Vec<Arc<CompletionSlot>> = Vec::new();
+    let mut parked_deq: Vec<Arc<CompletionSlot>> = Vec::new();
+    let mut parked_exec: Vec<Arc<CompletionSlot>> = Vec::new();
+    // Pools the parked Exec ops' pwbs landed on but which no queue flush
+    // is known to have psynced yet.
+    let mut exec_pools: u64 = 0;
+    // When the oldest parked op was admitted (deadline trigger).
+    let mut oldest: Option<Instant> = None;
+
+    let outcome = run_guarded(|| {
+        PersistentQueue::attach(q.as_ref(), tid);
+        loop {
+            let stopping = shared.stop.load(Ordering::Acquire);
+            let mut progressed = false;
+
+            // Admit work while the in-flight window has room.
+            while parked_enq.len() + parked_deq.len() + parked_exec.len() < shared.cfg.depth {
+                let Some(op) = shared.ring.pop() else { break };
+                progressed = true;
+                if oldest.is_none() {
+                    oldest = Some(Instant::now());
+                }
+                match op {
+                    AsyncOp::Enq { value, slot } => {
+                        // Park BEFORE executing: a crash unwinding out of
+                        // enqueue() must find the slot in the parked list
+                        // so the fail path below resolves it.
+                        parked_enq.push(slot);
+                        if let Err(e) = q.enqueue(tid, value) {
+                            let slot = parked_enq.pop().expect("just pushed");
+                            shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                            slot.fail(AsyncError::Queue(e));
+                        }
+                    }
+                    AsyncOp::Deq { slot } => {
+                        parked_deq.push(slot);
+                        match q.dequeue(tid) {
+                            Ok(Some(v)) => {
+                                parked_deq.last().expect("just pushed").stage(v + 1);
+                            }
+                            Ok(None) => {
+                                // EMPTY has no persistent effect: resolve
+                                // immediately (stage() default 0 = None).
+                                let slot = parked_deq.pop().expect("just pushed");
+                                slot.complete();
+                                shared.stats.empties.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => {
+                                let slot = parked_deq.pop().expect("just pushed");
+                                shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                                slot.fail(AsyncError::Queue(e));
+                            }
+                        }
+                    }
+                    AsyncOp::Exec { f, slot } => {
+                        parked_exec.push(slot);
+                        let (v, pools) = f(q.topology(), tid);
+                        parked_exec.last().expect("just pushed").stage(v);
+                        exec_pools |= pools;
+                    }
+                }
+                // The inner queue may have auto-flushed on its batch
+                // boundary: harvest what that made durable.
+                harvest(
+                    &shared,
+                    tid,
+                    &mut parked_enq,
+                    &mut parked_deq,
+                    &mut parked_exec,
+                    &mut exec_pools,
+                    &mut oldest,
+                    0,
+                );
+            }
+
+            let inflight = parked_enq.len() + parked_deq.len() + parked_exec.len();
+            if inflight > 0 {
+                let deadline_hit = oldest
+                    .is_some_and(|t| t.elapsed() >= Duration::from_micros(shared.cfg.flush_us));
+                if inflight >= shared.cfg.depth || deadline_hit || stopping {
+                    if inflight >= shared.cfg.depth {
+                        shared.stats.depth_flushes.fetch_add(1, Ordering::Relaxed);
+                    } else if deadline_hit {
+                        shared.stats.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // The queue flush psyncs the pools its batches
+                    // touched; Exec pwbs on OTHER pools need their own
+                    // drain before their futures may resolve.
+                    let psynced = q.flush(tid);
+                    let remaining = exec_pools & !psynced;
+                    for p in 0..q.topology().len() {
+                        if remaining & (1 << p) != 0 {
+                            q.topology().pool(p).psync(tid);
+                        }
+                    }
+                    exec_pools = 0;
+                    // flush() returned normally: everything parked is
+                    // durable. (A crash inside flush/psync unwinds past
+                    // this point — the fail path owns the slots then.)
+                    harvest(
+                        &shared,
+                        tid,
+                        &mut parked_enq,
+                        &mut parked_deq,
+                        &mut parked_exec,
+                        &mut exec_pools,
+                        &mut oldest,
+                        u64::MAX,
+                    );
+                    progressed = true;
+                }
+            }
+
+            if stopping
+                && parked_enq.is_empty()
+                && parked_deq.is_empty()
+                && parked_exec.is_empty()
+            {
+                // Ring drained by the admission loop above (it broke on
+                // empty, or we'd still have in-flight ops). One more pop
+                // closes the race with a final submission: callers are
+                // documented to stop submitting before stop(), so an op
+                // that slips in here is failed Closed, never dropped.
+                match shared.ring.pop() {
+                    None => break,
+                    Some(op) => {
+                        shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                        op.fail(AsyncError::Closed);
+                        continue;
+                    }
+                }
+            }
+            if !progressed {
+                // Idle, or waiting out the deadline: sleep a small slice.
+                let us = if oldest.is_some() {
+                    (shared.cfg.flush_us / 8).clamp(1, 50)
+                } else {
+                    20
+                };
+                std::thread::sleep(Duration::from_micros(us));
+            }
+        }
+        PersistentQueue::detach(q.as_ref(), tid);
+    });
+
+    if outcome.crashed() {
+        shared.crashed.store(true, Ordering::Release);
+        // Seal the layer, fail everything in flight, drain the ring.
+        shared.seal();
+        let n = parked_enq.len() + parked_deq.len() + parked_exec.len();
+        shared.stats.failed.fetch_add(n as u64, Ordering::Relaxed);
+        // Only these dequeues can have consumed an item without returning
+        // it (ring-drained ops below never executed) — the tight loss
+        // budget the durability property test checks against.
+        shared
+            .stats
+            .crash_inflight_deqs
+            .fetch_add(parked_deq.len() as u64, Ordering::Relaxed);
+        for slot in parked_enq.drain(..) {
+            slot.fail(AsyncError::Crashed);
+        }
+        for slot in parked_deq.drain(..) {
+            slot.fail(AsyncError::Crashed);
+        }
+        for slot in parked_exec.drain(..) {
+            slot.fail(AsyncError::Crashed);
+        }
+        shared.drain_fail(AsyncError::Crashed);
+    }
+}
+
+/// Complete every parked future whose durability point has retired.
+/// `exec_ready_mask == u64::MAX` means "an explicit flush just returned"
+/// (exec futures resolve too); `0` means "only harvest what the queue's
+/// own auto-flush realized" (exec pwbs may still be pending on pools the
+/// auto-flush did not drain, so exec slots stay parked).
+#[allow(clippy::too_many_arguments)]
+fn harvest<Q: Shardable>(
+    shared: &Shared<Q>,
+    tid: usize,
+    parked_enq: &mut Vec<Arc<CompletionSlot>>,
+    parked_deq: &mut Vec<Arc<CompletionSlot>>,
+    parked_exec: &mut Vec<Arc<CompletionSlot>>,
+    exec_pools: &mut u64,
+    oldest: &mut Option<Instant>,
+    exec_ready_mask: u64,
+) {
+    let (pe, pd) = shared.queue.pending_ops(tid);
+    if pe == 0 && !parked_enq.is_empty() {
+        for slot in parked_enq.drain(..) {
+            slot.complete();
+            shared.stats.enq_done.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    if pd == 0 && !parked_deq.is_empty() {
+        for slot in parked_deq.drain(..) {
+            slot.complete();
+            shared.stats.deq_done.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    if exec_ready_mask == u64::MAX && !parked_exec.is_empty() {
+        debug_assert_eq!(*exec_pools, 0, "explicit flush must have drained exec pools");
+        for slot in parked_exec.drain(..) {
+            slot.complete();
+            shared.stats.exec_done.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    if parked_enq.is_empty() && parked_deq.is_empty() && parked_exec.is_empty() {
+        *oldest = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot_op(v: u64) -> (AsyncOp, Arc<CompletionSlot>) {
+        let slot = CompletionSlot::new();
+        (AsyncOp::Enq { value: v, slot: Arc::clone(&slot) }, slot)
+    }
+
+    #[test]
+    fn ring_push_pop_fifo() {
+        let r = OpRing::new(8);
+        for v in 0..5u64 {
+            assert!(r.push(slot_op(v).0).is_ok());
+        }
+        for v in 0..5u64 {
+            match r.pop() {
+                Some(AsyncOp::Enq { value, .. }) => assert_eq!(value, v),
+                other => panic!("expected Enq({v}), got {:?}", other.is_some()),
+            }
+        }
+        assert!(r.pop().is_none());
+    }
+
+    #[test]
+    fn ring_full_returns_op() {
+        let r = OpRing::new(2);
+        assert!(r.push(slot_op(0).0).is_ok());
+        assert!(r.push(slot_op(1).0).is_ok());
+        match r.push(slot_op(2).0) {
+            Err(AsyncOp::Enq { value, .. }) => assert_eq!(value, 2, "full ring hands the op back"),
+            _ => panic!("push into a full ring must fail"),
+        }
+        // Popping frees a cell; the next push succeeds.
+        assert!(r.pop().is_some());
+        assert!(r.push(slot_op(3).0).is_ok());
+    }
+
+    #[test]
+    fn ring_mpmc_no_loss_no_dup() {
+        let r = Arc::new(OpRing::new(64));
+        let total = 4 * 2000usize;
+        let mut producers = Vec::new();
+        for p in 0..4u64 {
+            let r = Arc::clone(&r);
+            producers.push(std::thread::spawn(move || {
+                for i in 0..2000u64 {
+                    let mut op = slot_op(p * 2000 + i).0;
+                    loop {
+                        match r.push(op) {
+                            Ok(()) => break,
+                            Err(o) => {
+                                op = o;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        // Shared popped counter so both consumers agree on termination.
+        let popped = Arc::new(AtomicUsize::new(0));
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let r = Arc::clone(&r);
+            let popped = Arc::clone(&popped);
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while popped.load(Ordering::Relaxed) < total {
+                    if let Some(AsyncOp::Enq { value, .. }) = r.pop() {
+                        popped.fetch_add(1, Ordering::Relaxed);
+                        got.push(value);
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                got
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<u64> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate op popped");
+        assert_eq!(all.len(), total, "op lost in the ring");
+    }
+}

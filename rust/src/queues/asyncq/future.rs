@@ -1,0 +1,324 @@
+//! Completion slots and futures for the async layer — hand-rolled wakers,
+//! no executor dependency.
+//!
+//! A [`CompletionSlot`] is the single shared cell between a caller-held
+//! future and the [`super::flusher`] worker that executes + durably
+//! realizes the operation. Its lifecycle is a one-way state machine:
+//!
+//! ```text
+//! PENDING ──(stage value)──▶ PENDING ──(flush psync retired)──▶ READY
+//!     └──────────────(crash / close / queue error)────────────▶ FAILED
+//! ```
+//!
+//! The staged value is written while the slot is still PENDING (only the
+//! flusher writes it, before publishing); the `Release` store of the state
+//! publishes it, the future's `Acquire` load receives it. **The READY
+//! transition is the durability gate**: the flusher performs it only after
+//! the `psync` covering the operation's batch has retired, so a resolved
+//! future is proof of durability — never a promise of it.
+//!
+//! Waker handling is the standard two-phase registration: `poll` re-checks
+//! the state *after* parking its waker so a completion racing the
+//! registration can never be lost. [`block_on`] drives any future from a
+//! plain thread with a park/unpark waker, which is what the harness, the
+//! broker service and the tests use — the layer is executor-agnostic by
+//! construction, not by feature flag.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
+
+use crate::queues::QueueError;
+
+/// Why an async operation did not complete.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AsyncError {
+    /// A simulated crash interrupted the flusher before this operation's
+    /// flush `psync` retired: the op's durability is *unknown* (an
+    /// unflushed enqueue may be lost; an unflushed dequeue's item will be
+    /// redelivered after recovery). Resubmit after recovery.
+    Crashed,
+    /// The async layer was shut down before the operation was executed.
+    Closed,
+    /// The underlying queue rejected the operation.
+    Queue(QueueError),
+}
+
+impl std::fmt::Display for AsyncError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AsyncError::Crashed => write!(f, "crash before the operation's flush retired"),
+            AsyncError::Closed => write!(f, "async layer closed"),
+            AsyncError::Queue(e) => write!(f, "queue error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AsyncError {}
+
+const PENDING: u8 = 0;
+const READY: u8 = 1;
+const FAILED: u8 = 2;
+
+/// Shared completion cell — see module docs for the protocol.
+pub(crate) struct CompletionSlot {
+    state: AtomicU8,
+    /// Staged payload; meaning depends on the future type (deq: `value+1`
+    /// or 0 for EMPTY; exec: the closure's result; enq: unused).
+    value: AtomicU64,
+    waiting: Mutex<WaitState>,
+}
+
+#[derive(Default)]
+struct WaitState {
+    waker: Option<Waker>,
+    err: Option<AsyncError>,
+}
+
+impl CompletionSlot {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: AtomicU8::new(PENDING),
+            value: AtomicU64::new(0),
+            waiting: Mutex::new(WaitState::default()),
+        })
+    }
+
+    /// Write the payload while still PENDING (flusher-only; published by
+    /// the later READY store).
+    pub fn stage(&self, v: u64) {
+        debug_assert_eq!(self.state.load(Ordering::Relaxed), PENDING);
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Durability gate passed: publish READY and wake the waiter. Must
+    /// only be called after the `psync` covering this op has retired.
+    pub fn complete(&self) {
+        self.state.store(READY, Ordering::Release);
+        self.wake();
+    }
+
+    /// Resolve with an error (crash, close, queue rejection).
+    pub fn fail(&self, err: AsyncError) {
+        {
+            let mut w = self.waiting.lock().unwrap();
+            w.err = Some(err);
+        }
+        self.state.store(FAILED, Ordering::Release);
+        self.wake();
+    }
+
+    fn wake(&self) {
+        let waker = self.waiting.lock().unwrap().waker.take();
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+
+    /// Has the op resolved (either way)? Non-blocking observability hook.
+    pub fn is_resolved(&self) -> bool {
+        self.state.load(Ordering::Acquire) != PENDING
+    }
+
+    fn take_err(&self) -> AsyncError {
+        self.waiting.lock().unwrap().err.clone().unwrap_or(AsyncError::Closed)
+    }
+
+    /// Core poll: two-phase waker registration so completion cannot race
+    /// past a parking poller.
+    fn poll_slot(&self, cx: &mut Context<'_>) -> Poll<Result<u64, AsyncError>> {
+        match self.state.load(Ordering::Acquire) {
+            READY => return Poll::Ready(Ok(self.value.load(Ordering::Relaxed))),
+            FAILED => return Poll::Ready(Err(self.take_err())),
+            _ => {}
+        }
+        {
+            let mut w = self.waiting.lock().unwrap();
+            w.waker = Some(cx.waker().clone());
+        }
+        // Re-check: a complete()/fail() between the first load and the
+        // registration took the lock after us and saw our waker — or it
+        // beat the lock, in which case this load observes the new state.
+        match self.state.load(Ordering::Acquire) {
+            READY => Poll::Ready(Ok(self.value.load(Ordering::Relaxed))),
+            FAILED => Poll::Ready(Err(self.take_err())),
+            _ => Poll::Pending,
+        }
+    }
+}
+
+/// Future of an [`super::AsyncQueue::enqueue_async`]: resolves `Ok(())`
+/// only after the enqueue's batch flush `psync` retired (the item is
+/// durably in the queue), or with the [`AsyncError`] that prevented it.
+pub struct EnqFuture {
+    pub(crate) slot: Arc<CompletionSlot>,
+}
+
+/// Future of an [`super::AsyncQueue::dequeue_async`]: resolves
+/// `Ok(Some(v))` only after the consumption's dequeue-log flush retired
+/// (the take is durable — recovery will never redeliver `v`), `Ok(None)`
+/// for EMPTY (no persistent effect, resolves immediately).
+pub struct DeqFuture {
+    pub(crate) slot: Arc<CompletionSlot>,
+}
+
+/// Future of an [`super::AsyncQueue::exec_async`] combiner closure:
+/// resolves with the closure's result after the group `psync` covering
+/// the pools it touched retired.
+pub struct ExecFuture {
+    pub(crate) slot: Arc<CompletionSlot>,
+}
+
+impl EnqFuture {
+    /// Resolved yet (either way)? Does not consume the future.
+    pub fn is_resolved(&self) -> bool {
+        self.slot.is_resolved()
+    }
+
+    /// Block the current thread until resolution (park/unpark waker).
+    pub fn wait(self) -> Result<(), AsyncError> {
+        block_on(self)
+    }
+}
+
+impl DeqFuture {
+    pub fn is_resolved(&self) -> bool {
+        self.slot.is_resolved()
+    }
+
+    pub fn wait(self) -> Result<Option<u64>, AsyncError> {
+        block_on(self)
+    }
+}
+
+impl ExecFuture {
+    pub fn is_resolved(&self) -> bool {
+        self.slot.is_resolved()
+    }
+
+    pub fn wait(self) -> Result<u64, AsyncError> {
+        block_on(self)
+    }
+}
+
+impl Future for EnqFuture {
+    type Output = Result<(), AsyncError>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        self.slot.poll_slot(cx).map(|r| r.map(|_| ()))
+    }
+}
+
+impl Future for DeqFuture {
+    type Output = Result<Option<u64>, AsyncError>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        // Deq payload encoding: 0 = EMPTY, v+1 = value (the same
+        // "occupied cells hold item + 1" convention as the rings).
+        self.slot
+            .poll_slot(cx)
+            .map(|r| r.map(|enc| if enc == 0 { None } else { Some(enc - 1) }))
+    }
+}
+
+impl Future for ExecFuture {
+    type Output = Result<u64, AsyncError>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        self.slot.poll_slot(cx)
+    }
+}
+
+/// Minimal single-future executor: poll, park until woken, repeat. This is
+/// all the harness and broker service need — any real executor's waker
+/// works just as well, the layer only ever touches [`std::task::Waker`].
+pub fn block_on<F: Future>(fut: F) -> F::Output {
+    struct ThreadWaker(std::thread::Thread);
+    impl std::task::Wake for ThreadWaker {
+        fn wake(self: Arc<Self>) {
+            self.0.unpark();
+        }
+        fn wake_by_ref(self: &Arc<Self>) {
+            self.0.unpark();
+        }
+    }
+    let mut fut = std::pin::pin!(fut);
+    let waker = Waker::from(Arc::new(ThreadWaker(std::thread::current())));
+    let mut cx = Context::from_waker(&waker);
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(out) => return out,
+            // park() may wake spuriously; the loop re-polls, which is
+            // always sound for a correctly implemented future.
+            Poll::Pending => std::thread::park(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_publishes_staged_value() {
+        let slot = CompletionSlot::new();
+        slot.stage(41 + 1);
+        assert!(!slot.is_resolved());
+        slot.complete();
+        let f = DeqFuture { slot };
+        assert!(f.is_resolved());
+        assert_eq!(f.wait(), Ok(Some(41)));
+    }
+
+    #[test]
+    fn empty_deq_decodes_none() {
+        let slot = CompletionSlot::new();
+        slot.stage(0);
+        slot.complete();
+        assert_eq!(DeqFuture { slot }.wait(), Ok(None));
+    }
+
+    #[test]
+    fn failure_carries_error() {
+        let slot = CompletionSlot::new();
+        slot.fail(AsyncError::Crashed);
+        assert_eq!(EnqFuture { slot }.wait(), Err(AsyncError::Crashed));
+        let slot = CompletionSlot::new();
+        slot.fail(AsyncError::Queue(QueueError::CapacityExhausted));
+        assert_eq!(
+            ExecFuture { slot }.wait(),
+            Err(AsyncError::Queue(QueueError::CapacityExhausted))
+        );
+    }
+
+    #[test]
+    fn block_on_wakes_across_threads() {
+        let slot = CompletionSlot::new();
+        let s2 = Arc::clone(&slot);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            s2.stage(7 + 1);
+            s2.complete();
+        });
+        assert_eq!(DeqFuture { slot }.wait(), Ok(Some(7)));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn completion_racing_registration_is_not_lost() {
+        // Hammer the poll-vs-complete race: many iterations of a waiter
+        // blocking while another thread completes "immediately".
+        for i in 0..200u64 {
+            let slot = CompletionSlot::new();
+            let s2 = Arc::clone(&slot);
+            let h = std::thread::spawn(move || {
+                s2.stage(i + 1);
+                s2.complete();
+            });
+            assert_eq!(DeqFuture { slot }.wait(), Ok(Some(i)));
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,592 @@
+//! `asyncq` — an executor-agnostic **async completion layer** over the
+//! sharded/batched queue: `enqueue_async` / `dequeue_async` return
+//! futures that resolve at the operation's *durability point* instead of
+//! blocking the caller through the batch window.
+//!
+//! ## The durability-gated completion contract
+//!
+//! The sharded layer's group commit (PRs 1–2) amortizes persistence to
+//! `1/B` psyncs per enqueue and `1/K` per dequeue, but under the **sync**
+//! API an operation *returns before it is durable* — buffered durable
+//! linearizability, with the crash-time trailing-loss / trailing-
+//! redelivery windows the checker must explicitly excuse. This layer
+//! inverts the tradeoff:
+//!
+//! > **A future never resolves successfully before the `psync` covering
+//! > its operation has retired.**
+//!
+//! * [`AsyncQueue::enqueue_async`] resolves `Ok(())` only once the
+//!   enqueue's batch flush retired — the item is durably in the queue and
+//!   cannot be lost by any later crash.
+//! * [`AsyncQueue::dequeue_async`] resolves `Ok(Some(v))` only once the
+//!   consumption's dequeue-log flush retired — recovery will never
+//!   redeliver `v`. (`Ok(None)` — EMPTY — has no persistent effect and
+//!   resolves immediately.)
+//! * A crash before the flush fails the future with
+//!   [`AsyncError::Crashed`]: the caller learns the op's durability is
+//!   unknown, exactly like a database client whose commit ACK never
+//!   arrived.
+//!
+//! The resolved-implies-durable direction is **by construction**: the
+//! only code path that marks a future READY runs strictly after the
+//! flush call returned normally, and a simulated crash *unwinds* out of
+//! the flush (see [`crate::pmem::CrashSignal`]), so a crashed flush can
+//! never reach the wake. Consequently the relaxed-FIFO checker needs
+//! **zero** trailing-loss / trailing-redelivery allowance for histories
+//! recorded at async-resolution boundaries — the async API restores
+//! strict durable linearizability (up to relaxed-FIFO order) *at the
+//! same 1/B + 1/K psync cost* (`tests/prop_async_durability.rs` enforces
+//! both claims).
+//!
+//! ## Architecture: flat combining, not per-caller batches
+//!
+//! Callers do not touch the queue. They publish operations into a
+//! bounded lock-free ring ([`flusher::OpRing`]) and immediately receive
+//! a future; [`flusher::Flusher`] worker threads — each owning one
+//! sharded-queue thread slot — pop operations, execute them against
+//! their own batch logs, and complete the whole in-flight window when
+//! the group `psync` retires (flat combining à la Rusanovsky et al.;
+//! see [`flusher`] for why the persistency model forces this shape).
+//! Flushes are **depth-triggered** ([`AsyncCfg::depth`] in-flight ops),
+//! **deadline-triggered** ([`AsyncCfg::flush_us`] µs latency bound), or
+//! implicit when the inner queue's own batch boundary auto-flushes.
+//! When the ring is full the submission path spins — bounded in-flight
+//! work is the backpressure story, surfaced in
+//! [`AsyncStats::backpressure`].
+//!
+//! ## Knobs
+//!
+//! | knob | CLI | meaning |
+//! |---|---|---|
+//! | [`AsyncCfg::flush_us`] | `--flush-us` | deadline: max µs an admitted op waits for its flush |
+//! | [`AsyncCfg::depth`] | `--async-depth` | per-flusher in-flight window (depth flush trigger + backpressure bound) |
+//! | [`AsyncCfg::flushers`] | `--flushers` | combiner worker threads (each needs its own queue tid) |
+
+pub mod flusher;
+pub mod future;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::pmem::Topology;
+use crate::queues::perlcrq::PerLcrq;
+use crate::queues::sharded::{Shardable, ShardedQueue};
+use crate::queues::{QueueError, MAX_ITEM};
+
+pub use flusher::Flusher;
+pub use future::{block_on, AsyncError, DeqFuture, EnqFuture, ExecFuture};
+
+use self::flusher::{AsyncOp, OpRing};
+use self::future::CompletionSlot;
+
+/// Upper bound on [`AsyncCfg::depth`].
+pub const MAX_ASYNC_DEPTH: usize = 4096;
+
+/// Async-layer configuration (see module docs for the knob semantics).
+#[derive(Clone, Debug)]
+pub struct AsyncCfg {
+    /// Deadline flush trigger: maximum microseconds an admitted operation
+    /// waits before its window is flushed.
+    pub flush_us: u64,
+    /// Per-flusher in-flight window: admitted-but-not-yet-durable ops
+    /// before a depth flush fires; also bounds total outstanding work
+    /// (backpressure).
+    pub depth: usize,
+    /// Number of combiner worker threads. Each occupies one queue thread
+    /// slot starting at the `first_tid` passed to
+    /// [`AsyncQueue::spawn_flusher`].
+    pub flushers: usize,
+}
+
+impl Default for AsyncCfg {
+    fn default() -> Self {
+        Self { flush_us: 50, depth: 32, flushers: 1 }
+    }
+}
+
+impl AsyncCfg {
+    /// Validate the configuration (CLI and constructors surface the
+    /// error; see [`QueueError::BadConfig`]).
+    pub fn validate(&self) -> Result<(), QueueError> {
+        if self.depth == 0 || self.depth > MAX_ASYNC_DEPTH {
+            return Err(QueueError::BadConfig("async depth must be in 1..=4096"));
+        }
+        if self.flushers == 0 || self.flushers > crate::pmem::MAX_THREADS {
+            return Err(QueueError::BadConfig("flushers must be in 1..=MAX_THREADS"));
+        }
+        if self.flush_us == 0 {
+            return Err(QueueError::BadConfig("flush-us must be nonzero"));
+        }
+        Ok(())
+    }
+}
+
+/// Counters exported by [`AsyncQueue::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AsyncStats {
+    /// Operations accepted into the submission ring.
+    pub submitted: u64,
+    /// Enqueue futures resolved Ok (durably enqueued).
+    pub enq_done: u64,
+    /// Dequeue futures resolved with a value (durably consumed).
+    pub deq_done: u64,
+    /// Exec futures resolved.
+    pub exec_done: u64,
+    /// Dequeue futures resolved EMPTY.
+    pub empties: u64,
+    /// Futures resolved with an error (crash, close, queue rejection).
+    pub failed: u64,
+    /// Flushes fired by the depth trigger.
+    pub depth_flushes: u64,
+    /// Flushes fired by the deadline trigger.
+    pub deadline_flushes: u64,
+    /// Submission spins against a full ring (backpressure events).
+    pub backpressure: u64,
+    /// Dequeues that had EXECUTED (were admitted and ran against the
+    /// queue, possibly consuming an item) but whose flush never retired
+    /// when a crash failed them. This — not the total failed-dequeue
+    /// count, which includes ring-drained ops that never touched the
+    /// queue — bounds how many values an async crash can consume without
+    /// returning them (`tests/prop_async_durability.rs` uses it as its
+    /// loss budget).
+    pub crash_inflight_deqs: u64,
+}
+
+#[derive(Default)]
+pub(crate) struct StatCells {
+    pub submitted: AtomicU64,
+    pub enq_done: AtomicU64,
+    pub deq_done: AtomicU64,
+    pub exec_done: AtomicU64,
+    pub empties: AtomicU64,
+    pub failed: AtomicU64,
+    pub depth_flushes: AtomicU64,
+    pub deadline_flushes: AtomicU64,
+    pub backpressure: AtomicU64,
+    pub crash_inflight_deqs: AtomicU64,
+}
+
+/// State shared between caller handles and flusher workers.
+pub(crate) struct Shared<Q: Shardable> {
+    pub queue: Arc<ShardedQueue<Q>>,
+    pub ring: OpRing,
+    pub cfg: AsyncCfg,
+    /// No new submissions accepted (set by crash or shutdown).
+    pub closed: AtomicBool,
+    /// Graceful-shutdown request for the workers.
+    pub stop: Arc<AtomicBool>,
+    /// A worker observed a simulated crash.
+    pub crashed: Arc<AtomicBool>,
+    /// Callers currently inside the submission critical section; `seal`
+    /// waits them out so no op can slip in behind the closing drain.
+    pub pushers: AtomicUsize,
+    pub stats: StatCells,
+}
+
+impl<Q: Shardable> Shared<Q> {
+    /// Stop accepting submissions and wait out in-flight pushers. After
+    /// this returns, draining the ring observes every op that will ever
+    /// be in it. SeqCst on both the flag store and the counter loads:
+    /// this is a Dekker-style handshake with [`AsyncQueue::submit`]'s
+    /// increment-then-check — either the sealer sees the pusher's
+    /// increment (and waits it out) or the pusher sees `closed` (and
+    /// backs off); weaker orderings would allow both to miss.
+    pub fn seal(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        while self.pushers.load(Ordering::SeqCst) != 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Fail every op still queued in the ring. Call after [`Shared::seal`].
+    pub fn drain_fail(&self, err: AsyncError) {
+        while let Some(op) = self.ring.pop() {
+            self.stats.failed.fetch_add(1, Ordering::Relaxed);
+            op.fail(err.clone());
+        }
+    }
+}
+
+/// The async completion layer. Cheap to clone (an `Arc` handle); hand a
+/// clone to every submitting thread. See module docs for the contract.
+pub struct AsyncQueue<Q: Shardable = PerLcrq> {
+    shared: Arc<Shared<Q>>,
+}
+
+impl<Q: Shardable> Clone for AsyncQueue<Q> {
+    fn clone(&self) -> Self {
+        Self { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl<Q: Shardable + 'static> AsyncQueue<Q> {
+    /// Wrap a sharded queue. The queue's own `batch`/`batch_deq` sizes
+    /// stay in force (auto-flush on batch boundaries); the async layer
+    /// adds the depth/deadline triggers on top.
+    pub fn new(queue: Arc<ShardedQueue<Q>>, cfg: AsyncCfg) -> Result<Self, QueueError> {
+        cfg.validate()?;
+        let ring = OpRing::new((cfg.depth * cfg.flushers * 2).max(64));
+        Ok(Self {
+            shared: Arc::new(Shared {
+                queue,
+                ring,
+                cfg,
+                closed: AtomicBool::new(false),
+                stop: Arc::new(AtomicBool::new(false)),
+                crashed: Arc::new(AtomicBool::new(false)),
+                pushers: AtomicUsize::new(0),
+                stats: StatCells::default(),
+            }),
+        })
+    }
+
+    /// Spawn the configured number of flusher workers on queue thread
+    /// slots `first_tid .. first_tid + cfg.flushers`. The usual tid
+    /// exclusivity contract applies: those slots must not be used by any
+    /// other live thread. Returns the handle that stops/joins them.
+    pub fn spawn_flusher(&self, first_tid: usize) -> Flusher {
+        Flusher::spawn(&self.shared, first_tid)
+    }
+
+    /// Submit an asynchronous enqueue. The future resolves `Ok(())` only
+    /// after the item is durably in the queue (see module docs). Spins
+    /// (backpressure) while the in-flight window is full.
+    pub fn enqueue_async(&self, value: u64) -> EnqFuture {
+        let slot = CompletionSlot::new();
+        if value >= MAX_ITEM {
+            self.shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+            slot.fail(AsyncError::Queue(QueueError::ItemOutOfRange(value)));
+            return EnqFuture { slot };
+        }
+        self.submit(AsyncOp::Enq { value, slot: Arc::clone(&slot) });
+        EnqFuture { slot }
+    }
+
+    /// Submit an asynchronous dequeue. Resolves `Ok(Some(v))` once the
+    /// consumption is durable, `Ok(None)` immediately on EMPTY.
+    pub fn dequeue_async(&self) -> DeqFuture {
+        let slot = CompletionSlot::new();
+        self.submit(AsyncOp::Deq { slot: Arc::clone(&slot) });
+        DeqFuture { slot }
+    }
+
+    /// Flat-combining escape hatch: run `f` on a flusher's thread slot
+    /// against the queue's topology. `f` returns `(result, pool_mask)`;
+    /// the future resolves with `result` only after every pool in
+    /// `pool_mask` has been `psync`ed by that worker — i.e. after any
+    /// `pwb`s `f` issued there have retired. The broker's `ack_async`
+    /// rides this to group-commit DONE-marking psyncs with the queue's
+    /// flush.
+    pub fn exec_async(
+        &self,
+        f: impl FnOnce(&Topology, usize) -> (u64, u64) + Send + 'static,
+    ) -> ExecFuture {
+        let slot = CompletionSlot::new();
+        self.submit(AsyncOp::Exec { f: Box::new(f), slot: Arc::clone(&slot) });
+        ExecFuture { slot }
+    }
+
+    fn submit(&self, op: AsyncOp) {
+        let sh = &*self.shared;
+        // Increment-then-check pairs with Shared::seal's set-then-wait
+        // (SeqCst on both sides — see seal's comment).
+        sh.pushers.fetch_add(1, Ordering::SeqCst);
+        let bail = |op: AsyncOp| {
+            sh.pushers.fetch_sub(1, Ordering::SeqCst);
+            sh.stats.failed.fetch_add(1, Ordering::Relaxed);
+            op.fail(if sh.crashed.load(Ordering::Acquire) {
+                AsyncError::Crashed
+            } else {
+                AsyncError::Closed
+            });
+        };
+        if sh.closed.load(Ordering::SeqCst) {
+            bail(op);
+            return;
+        }
+        let mut op = op;
+        loop {
+            match sh.ring.push(op) {
+                Ok(()) => break,
+                Err(returned) => {
+                    op = returned;
+                    sh.stats.backpressure.fetch_add(1, Ordering::Relaxed);
+                    // Backpressure spin: keep checking closed so a dead
+                    // flusher (full ring forever) cannot wedge callers.
+                    if sh.closed.load(Ordering::SeqCst) {
+                        bail(op);
+                        return;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+        sh.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        sh.pushers.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Refuse new submissions and fail everything still queued (the
+    /// flusher keeps running until stopped; already-admitted ops still
+    /// complete normally). The crash path does this automatically.
+    pub fn close(&self) {
+        self.shared.seal();
+        self.shared.drain_fail(AsyncError::Closed);
+    }
+
+    /// Has the layer been sealed (crash or [`AsyncQueue::close`])?
+    pub fn is_closed(&self) -> bool {
+        self.shared.closed.load(Ordering::Acquire)
+    }
+
+    /// Did a flusher worker observe a simulated crash?
+    pub fn crashed(&self) -> bool {
+        self.shared.crashed.load(Ordering::Acquire)
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> AsyncStats {
+        let s = &self.shared.stats;
+        AsyncStats {
+            submitted: s.submitted.load(Ordering::Relaxed),
+            enq_done: s.enq_done.load(Ordering::Relaxed),
+            deq_done: s.deq_done.load(Ordering::Relaxed),
+            exec_done: s.exec_done.load(Ordering::Relaxed),
+            empties: s.empties.load(Ordering::Relaxed),
+            failed: s.failed.load(Ordering::Relaxed),
+            depth_flushes: s.depth_flushes.load(Ordering::Relaxed),
+            deadline_flushes: s.deadline_flushes.load(Ordering::Relaxed),
+            backpressure: s.backpressure.load(Ordering::Relaxed),
+            crash_inflight_deqs: s.crash_inflight_deqs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The wrapped sharded queue.
+    pub fn queue(&self) -> &Arc<ShardedQueue<Q>> {
+        &self.shared.queue
+    }
+
+    /// The configuration in force.
+    pub fn cfg(&self) -> &AsyncCfg {
+        &self.shared.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig, PmemPool};
+    use crate::queues::{ConcurrentQueue, PersistentQueue, QueueConfig};
+    use crate::util::rng::Xoshiro256;
+
+    /// Huge deadline/depth: only explicit boundaries (inner batch, crash)
+    /// can resolve futures — what the gating tests need.
+    fn lazy_cfg() -> AsyncCfg {
+        AsyncCfg { flush_us: 10_000_000, depth: MAX_ASYNC_DEPTH, flushers: 1 }
+    }
+
+    fn mk(
+        shards: usize,
+        batch: usize,
+        batch_deq: usize,
+        acfg: AsyncCfg,
+    ) -> (Arc<PmemPool>, Arc<ShardedQueue>, AsyncQueue, Flusher) {
+        let topo = crate::pmem::Topology::single(PmemConfig {
+            capacity_words: 1 << 22,
+            cost: CostModel::zero(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 5,
+        });
+        let cfg = QueueConfig { shards, batch, batch_deq, ring_size: 64, ..Default::default() };
+        // tids: 0..4 for test callers, 4.. for the flusher workers.
+        let q = Arc::new(ShardedQueue::new_perlcrq(&topo, 4 + acfg.flushers, cfg).unwrap());
+        let aq = AsyncQueue::new(Arc::clone(&q), acfg).unwrap();
+        let fl = aq.spawn_flusher(4);
+        (Arc::clone(topo.primary()), q, aq, fl)
+    }
+
+    fn settle() {
+        std::thread::sleep(std::time::Duration::from_millis(40));
+    }
+
+    #[test]
+    fn enq_futures_gate_on_batch_flush() {
+        let (_p, _q, aq, fl) = mk(2, 4, 1, lazy_cfg());
+        let early: Vec<EnqFuture> = (0..3).map(|v| aq.enqueue_async(v)).collect();
+        settle();
+        for (i, f) in early.iter().enumerate() {
+            assert!(
+                !f.is_resolved(),
+                "future {i} resolved before its batch's psync (3 < batch of 4)"
+            );
+        }
+        // 4th enqueue fills the batch: the inner auto-flush retires the
+        // psync and every parked future resolves.
+        let last = aq.enqueue_async(3);
+        assert_eq!(last.wait(), Ok(()));
+        for f in early {
+            assert_eq!(f.wait(), Ok(()));
+        }
+        assert!(aq.stats().enq_done >= 4);
+        fl.stop();
+    }
+
+    #[test]
+    fn depth_trigger_flushes_before_batch_boundary() {
+        let acfg = AsyncCfg { depth: 2, ..lazy_cfg() };
+        let (_p, _q, aq, fl) = mk(2, 8, 1, acfg);
+        // batch = 8 would hold these volatile; depth = 2 must flush.
+        let a = aq.enqueue_async(1);
+        let b = aq.enqueue_async(2);
+        assert_eq!(a.wait(), Ok(()));
+        assert_eq!(b.wait(), Ok(()));
+        assert!(aq.stats().depth_flushes >= 1);
+        fl.stop();
+    }
+
+    #[test]
+    fn deadline_trigger_flushes_trickle_traffic() {
+        let acfg = AsyncCfg { flush_us: 500, depth: MAX_ASYNC_DEPTH, flushers: 1 };
+        let (_p, _q, aq, fl) = mk(2, 8, 1, acfg);
+        let f = aq.enqueue_async(7);
+        assert_eq!(f.wait(), Ok(()), "deadline flush must resolve a lone op");
+        assert!(aq.stats().deadline_flushes >= 1);
+        fl.stop();
+    }
+
+    #[test]
+    fn deq_futures_gate_on_dequeue_log_flush() {
+        let (_p, q, aq, fl) = mk(1, 1, 2, lazy_cfg());
+        // Per-op durable enqueues (batch = 1) so only the dequeue side
+        // gates.
+        for v in 0..4u64 {
+            aq.enqueue_async(v).wait().unwrap();
+        }
+        let d1 = aq.dequeue_async();
+        settle();
+        assert!(!d1.is_resolved(), "first dequeue resolved before its log flush (K = 2)");
+        let d2 = aq.dequeue_async(); // 2nd seals the dequeue batch
+        assert_eq!(d2.wait(), Ok(Some(1)));
+        assert_eq!(d1.wait(), Ok(Some(0)));
+        fl.stop();
+        // Remaining items still in the queue (sync drain for the check).
+        assert_eq!(q.dequeue(0).unwrap(), Some(2));
+        assert_eq!(q.dequeue(0).unwrap(), Some(3));
+    }
+
+    #[test]
+    fn empty_dequeue_resolves_immediately() {
+        let (_p, _q, aq, fl) = mk(2, 4, 4, lazy_cfg());
+        assert_eq!(aq.dequeue_async().wait(), Ok(None));
+        fl.stop();
+    }
+
+    #[test]
+    fn crash_fails_unflushed_futures_and_seals_the_layer() {
+        crate::pmem::crash::install_quiet_crash_hook();
+        let (p, q, aq, fl) = mk(2, 4, 1, lazy_cfg());
+        let a = aq.enqueue_async(10);
+        let b = aq.enqueue_async(11);
+        settle();
+        assert!(!a.is_resolved() && !b.is_resolved());
+        // Arm the crash; the flusher hits it on its next pmem op.
+        p.crash_now();
+        let c = aq.enqueue_async(12);
+        assert_eq!(a.wait(), Err(AsyncError::Crashed));
+        assert_eq!(b.wait(), Err(AsyncError::Crashed));
+        assert_eq!(c.wait(), Err(AsyncError::Crashed));
+        assert!(fl.stop(), "flusher must report the crash");
+        assert!(aq.is_closed() && aq.crashed());
+        // Post-seal submissions fail fast.
+        assert_eq!(aq.enqueue_async(13).wait(), Err(AsyncError::Crashed));
+        // Nothing unflushed survives (evict/pending = 0): the failed
+        // futures' items are gone — exactly what Crashed promises.
+        let mut rng = Xoshiro256::seed_from(9);
+        p.crash(&mut rng);
+        q.recover(&p);
+        assert_eq!(q.dequeue(0).unwrap(), None);
+    }
+
+    #[test]
+    fn resolved_before_crash_means_durable() {
+        crate::pmem::crash::install_quiet_crash_hook();
+        let (p, q, aq, fl) = mk(2, 4, 1, lazy_cfg());
+        for v in 0..8u64 {
+            // Two full batches: every future resolves via auto-flush.
+            aq.enqueue_async(v).wait().unwrap();
+        }
+        p.crash_now();
+        let dead = aq.enqueue_async(99);
+        assert_eq!(dead.wait(), Err(AsyncError::Crashed));
+        fl.stop();
+        let mut rng = Xoshiro256::seed_from(10);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let mut got = Vec::new();
+        while let Some(v) = q.dequeue(0).unwrap() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<u64>>(), "resolved enqueues must survive");
+    }
+
+    #[test]
+    fn exec_rides_the_group_psync() {
+        let (p, q, aq, fl) = mk(2, 4, 1, AsyncCfg { depth: 2, ..lazy_cfg() });
+        let addr = p.alloc_lines(1);
+        let f = aq.exec_async(move |topo, tid| {
+            let pool = topo.pool(0);
+            pool.store(tid, addr, 77);
+            pool.pwb(tid, addr);
+            (1, 1 << 0)
+        });
+        assert!(aq.enqueue_async(5).wait().is_ok()); // depth 2: exec + enq flush
+        assert_eq!(f.wait(), Ok(1));
+        fl.stop();
+        // The exec's store must be durable now.
+        let mut rng = Xoshiro256::seed_from(11);
+        p.crash(&mut rng);
+        q.recover(&p);
+        assert_eq!(p.load(0, addr), 77, "exec pwb must have ridden the group psync");
+    }
+
+    #[test]
+    fn out_of_range_item_fails_fast() {
+        let (_p, _q, aq, fl) = mk(2, 4, 1, lazy_cfg());
+        assert_eq!(
+            aq.enqueue_async(MAX_ITEM).wait(),
+            Err(AsyncError::Queue(QueueError::ItemOutOfRange(MAX_ITEM)))
+        );
+        fl.stop();
+    }
+
+    #[test]
+    fn graceful_stop_completes_everything() {
+        let (_p, q, aq, fl) = mk(4, 8, 8, lazy_cfg());
+        let futs: Vec<EnqFuture> = (0..13).map(|v| aq.enqueue_async(v)).collect();
+        // stop() drains the ring and flushes the partial window.
+        assert!(!fl.stop(), "clean stop must not report a crash");
+        for f in futs {
+            assert_eq!(f.wait(), Ok(()));
+        }
+        let mut got = Vec::new();
+        while let Some(v) = q.dequeue(0).unwrap() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..13).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn bad_async_cfg_rejected() {
+        for acfg in [
+            AsyncCfg { depth: 0, ..Default::default() },
+            AsyncCfg { depth: MAX_ASYNC_DEPTH + 1, ..Default::default() },
+            AsyncCfg { flushers: 0, ..Default::default() },
+            AsyncCfg { flush_us: 0, ..Default::default() },
+        ] {
+            assert!(matches!(acfg.validate(), Err(QueueError::BadConfig(_))));
+        }
+        assert!(AsyncCfg::default().validate().is_ok());
+    }
+}

@@ -15,6 +15,7 @@
 //! | [`durable_msq`] | persist-everything durable MS queue | \[11\]-style baseline |
 //! | [`combining`] | CC-Synch combining; PBQueue, PWFQueue | \[6\], \[9\] |
 //! | [`sharded`] | **ShardedQueue** — K-way striped PerLCRQs + batched persistence | beyond the paper (BlockFIFO / Second-Amendment directions) |
+//! | [`asyncq`] | **AsyncQueue** — futures over the sharded queue, completion gated on the group-commit psync | beyond the paper (flat-combining / durability-point completion) |
 //!
 //! ## Value encoding
 //!
@@ -25,6 +26,7 @@
 //! bijective re-encoding of the paper's `(s, idx, val)` triplets (see
 //! [`crq`] docs for the exact layout).
 
+pub mod asyncq;
 pub mod combining;
 pub mod crq;
 pub mod durable_msq;

@@ -541,7 +541,13 @@ impl<Q: Shardable> ShardedQueue<Q> {
     /// deferred cell / `Head_i` `pwb`. Colocated placement keeps a batch
     /// on one pool (exactly one `psync`); interleaved batches may span
     /// pools. No-op when nothing is pending or batching is off.
-    pub fn flush(&self, tid: usize) {
+    ///
+    /// Returns the bitmask of pools actually `psync`ed (0 when nothing was
+    /// pending). The async completion layer uses this to know which pools'
+    /// pending `pwb`s of `tid` were drained alongside the batch — a
+    /// `psync` realizes **all** of the calling thread's queued flushes in
+    /// that pool, not just the queue's own lines.
+    pub fn flush(&self, tid: usize) -> u64 {
         let slot = self.slot(tid);
         let lp = self.log_pool[tid];
         let mut pools_mask = 0u64;
@@ -564,6 +570,25 @@ impl<Q: Shardable> ShardedQueue<Q> {
                 self.topo.pool(p).psync(tid);
             }
         }
+        pools_mask
+    }
+
+    /// Thread `tid`'s unflushed op counts: `(enqueues, dequeues)` recorded
+    /// in the filling batches since the last flush. Both zero means every
+    /// operation `tid` has executed on this queue is durably realized
+    /// (each recorded op either sits pending or was sealed + `psync`ed by
+    /// a completed flush). The async completion layer's wake rule is built
+    /// on exactly this: a flush that unwinds mid-`psync` (simulated crash)
+    /// never returns to the caller, so "`flush`/`enqueue`/`dequeue`
+    /// returned normally and the counts read zero" certifies durability.
+    pub fn pending_ops(&self, tid: usize) -> (usize, usize) {
+        let slot = self.slot(tid);
+        (slot.pending, slot.deq_pending)
+    }
+
+    /// The topology this queue places its shards and logs on.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
     }
 
     /// Flush every thread's pending batch. **Quiescent contexts only**

@@ -38,7 +38,7 @@
 //! strictly later epoch. Everything else is still a duplication
 //! violation.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use super::history::{EventKind, History};
 
@@ -286,9 +286,29 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
     let mut enq: HashMap<u64, OpSpan> = HashMap::new();
     // value -> (tid, epoch) of its completed enqueue (trailing-loss groups).
     let mut enq_meta: HashMap<u64, (usize, u64)> = HashMap::new();
-    // Pending (per-thread) open spans to match responses to invokes.
-    let mut open_enq: HashMap<usize, (u64, u64)> = HashMap::new(); // tid -> (value, seq)
-    let mut open_deq: HashMap<usize, u64> = HashMap::new(); // tid -> invoke seq
+    // tid -> FIFO of open dequeue invokes `(seq, epoch)`. A thread may
+    // hold SEVERAL open dequeues at once (the async API's future window);
+    // responses on a thread arrive in submission order (futures are
+    // awaited oldest-first), so pairing pops the front. Sync histories
+    // (one open op per thread) behave exactly as before.
+    let mut open_deq: HashMap<usize, VecDeque<(u64, u64)>> = HashMap::new();
+    // Pop the pairing invoke for a response on `tid` at `epoch`: invokes
+    // left open by an earlier (crashed) epoch can never respond — count
+    // them as pending and skip past.
+    fn pair_deq(
+        open: &mut HashMap<usize, VecDeque<(u64, u64)>>,
+        pending: &mut usize,
+        tid: usize,
+        epoch: u64,
+        fallback: u64,
+    ) -> u64 {
+        let q = open.entry(tid).or_default();
+        while q.front().is_some_and(|&(_, ep)| ep < epoch) {
+            q.pop_front();
+            *pending += 1;
+        }
+        q.pop_front().map(|(s, _)| s).unwrap_or(fallback)
+    }
     let mut deq: HashMap<u64, OpSpan> = HashMap::new(); // value -> span
     // value -> (tid, epoch, response seq) of its FIRST dequeue
     // (trailing-redelivery groups).
@@ -307,7 +327,6 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
                     push(&mut report.violations, Violation::ValueReused { value });
                 }
                 enq.insert(value, OpSpan { invoke: e.seq, response: None });
-                open_enq.insert(e.tid, (value, e.seq));
                 report.enq_invoked += 1;
             }
             EventKind::EnqOk { value } => {
@@ -315,21 +334,17 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
                     span.response = Some(e.seq);
                 }
                 enq_meta.insert(value, (e.tid, e.epoch));
-                open_enq.remove(&e.tid);
                 report.enq_completed += 1;
             }
             EventKind::DeqInvoke => {
-                // A dequeue left open (crashed) stays in `open_deq` and is
-                // counted below; a thread's new invoke replaces its old
-                // one only if that one responded, so count leftovers per
-                // (tid, invoke): track crashed dequeues explicitly.
-                if let Some(prev) = open_deq.insert(e.tid, e.seq) {
-                    let _ = prev;
-                    report.pending_deqs += 1; // previous invoke never responded
-                }
+                // Dequeues left open at a crash (or forever) are counted
+                // as pending when a later-epoch response skips past them
+                // (`pair_deq`) or at end of history below.
+                open_deq.entry(e.tid).or_default().push_back((e.seq, e.epoch));
             }
             EventKind::DeqOk { value } => {
-                let invoke = open_deq.remove(&e.tid).unwrap_or(e.seq);
+                let invoke =
+                    pair_deq(&mut open_deq, &mut report.pending_deqs, e.tid, e.epoch, e.seq);
                 if opts.trailing_redelivery_per_thread > 0 {
                     // Only the redelivery allowance reads these groups;
                     // strict checks skip the bookkeeping.
@@ -349,7 +364,8 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
                 report.deq_values += 1;
             }
             EventKind::DeqEmpty => {
-                let invoke = open_deq.remove(&e.tid).unwrap_or(e.seq);
+                let invoke =
+                    pair_deq(&mut open_deq, &mut report.pending_deqs, e.tid, e.epoch, e.seq);
                 empties.push(OpSpan { invoke, response: Some(e.seq) });
                 report.deq_empties += 1;
             }
@@ -357,7 +373,7 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
     }
     report.drained = h.final_drain.len();
     // Dequeues still open at the end of the history also count as pending.
-    report.pending_deqs += open_deq.len();
+    report.pending_deqs += open_deq.values().map(|q| q.len()).sum::<usize>();
 
     // --- V1/V5 for the final drain ---
     let mut drained: HashMap<u64, ()> = HashMap::new();
@@ -612,6 +628,61 @@ mod tests {
         assert_eq!(r.enq_completed, 2);
         assert_eq!(r.deq_values, 2);
         assert_eq!(r.deq_empties, 1);
+    }
+
+    #[test]
+    fn windowed_async_ops_pair_fifo_per_thread() {
+        // The async API holds several open ops per thread (a future
+        // window); responses come back in submission order. The pairing
+        // must match response i to invoke i — not to the latest invoke —
+        // and must not count the overlap as pending dequeues.
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 1 }),
+                ev(1, 0, K::EnqInvoke { value: 2 }),
+                ev(2, 0, K::EnqOk { value: 1 }),
+                ev(3, 0, K::EnqOk { value: 2 }),
+                ev(4, 1, K::DeqInvoke),
+                ev(5, 1, K::DeqInvoke),
+                ev(6, 1, K::DeqInvoke),
+                ev(7, 1, K::DeqOk { value: 1 }),
+                ev(8, 1, K::DeqOk { value: 2 }),
+                ev(9, 1, K::DeqEmpty),
+            ],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.pending_deqs, 0, "overlapping open deqs are not 'pending'");
+        assert_eq!(r.deq_values, 2);
+        assert_eq!(r.deq_empties, 1);
+    }
+
+    #[test]
+    fn crossepoch_dangling_deq_counts_pending_once() {
+        // A dequeue left open by a crashed epoch is skipped by the next
+        // epoch's pairing and lands in the pending budget exactly once
+        // (it may have consumed value 5 at the crash).
+        let mut e4 = ev(3, 1, K::DeqInvoke);
+        e4.epoch = 0;
+        let mut e5 = ev(4, 1, K::DeqInvoke);
+        e5.epoch = 1;
+        let mut e6 = ev(5, 1, K::DeqEmpty);
+        e6.epoch = 1;
+        let h = hist(
+            vec![
+                ev(0, 0, K::EnqInvoke { value: 5 }),
+                ev(1, 0, K::EnqOk { value: 5 }),
+                e4,
+                e5,
+                e6,
+            ],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.pending_deqs, 1);
+        assert_eq!(r.absorbed_losses, 1, "value 5 absorbed by the crashed dequeue");
     }
 
     #[test]

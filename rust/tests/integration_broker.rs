@@ -1,11 +1,14 @@
 //! End-to-end broker integration: the coordinator service across crash
-//! cycles with full audits.
+//! cycles with full audits, worker-death leases, and the async serve
+//! path.
 
 use std::sync::Arc;
 
 use persiq::coordinator::{run_service, Broker, JobState, ServiceConfig};
 use persiq::pmem::crash::install_quiet_crash_hook;
 use persiq::pmem::{PmemConfig, Topology};
+use persiq::queues::asyncq::AsyncCfg;
+use persiq::queues::QueueConfig;
 
 fn mk(cap_words: usize) -> (Topology, Arc<Broker>) {
     mk_topo(cap_words, 1)
@@ -60,12 +63,112 @@ fn service_with_crashes_exactly_once() {
             crash_cycles: 3,
             crash_steps: 40_000,
             seed: 3,
+            ..Default::default()
         },
     )
     .unwrap();
     assert_eq!(rep.crashes, 3);
     assert_eq!(rep.done, rep.submitted, "{rep:?}");
     assert_eq!(rep.pending_after, 0);
+}
+
+#[test]
+fn lease_redelivers_after_worker_death_without_crash() {
+    // The lease satellite end to end: a worker takes jobs and dies
+    // silently (its thread just stops — no crash, no recovery). The
+    // expired leases must redeliver exactly those jobs; everything
+    // completes exactly once across the worker generations.
+    let (_topo, broker) = mk(1 << 22);
+    broker.set_lease_ms(5);
+    let total = 30usize;
+    for i in 0..total {
+        broker.submit(0, format!("job-{i}").as_bytes()).unwrap();
+    }
+    // Worker generation 1 (tid 1): takes 10 jobs, completes 4, then dies
+    // holding 6 in flight.
+    let b2 = Arc::clone(&broker);
+    std::thread::spawn(move || {
+        let mut taken = Vec::new();
+        for _ in 0..10 {
+            taken.push(b2.take(1).unwrap().expect("jobs available").0);
+        }
+        for jid in taken.into_iter().take(4) {
+            assert!(b2.complete(1, jid).unwrap());
+        }
+        // ...and the worker vanishes with 6 unacked jobs.
+    })
+    .join()
+    .unwrap();
+    assert_eq!(broker.leases_outstanding(), 6);
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    assert_eq!(broker.reap_expired(2), 6, "all abandoned jobs must requeue");
+    // Worker generation 2 (tid 2) finishes everything.
+    let mut done = 4usize;
+    while let Some((jid, _)) = broker.take(2).unwrap() {
+        if broker.complete(2, jid).unwrap() {
+            done += 1;
+        }
+    }
+    assert_eq!(done, total, "every job completed exactly once across generations");
+    let audit = broker.audit(0);
+    assert_eq!(audit.done, total);
+    assert_eq!(audit.pending, 0);
+    assert_eq!(broker.leases_outstanding(), 0);
+}
+
+#[test]
+fn async_service_with_crashes_and_leases_exactly_once() {
+    // The async serve path under crash cycles, with leasing on: the
+    // combined stack (submit_async / take_async / ack_async + lease
+    // reaping + recovery reconciliation) must still complete every
+    // durably submitted job exactly once.
+    install_quiet_crash_hook();
+    let topo = Topology::new(
+        PmemConfig {
+            capacity_words: 1 << 23,
+            evict_prob: 0.25,
+            pending_flush_prob: 0.5,
+            seed: 78,
+            ..Default::default()
+        },
+        2,
+    );
+    let acfg = AsyncCfg { flush_us: 100, depth: 8, flushers: 2 };
+    let broker = Arc::new(
+        Broker::new_sharded(
+            &topo,
+            2 + 2 + acfg.flushers,
+            1 << 16,
+            QueueConfig {
+                shards: 4,
+                batch: 4,
+                batch_deq: 4,
+                ring_size: 1 << 10,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let rep = run_service(
+        &topo,
+        &broker,
+        &ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 250,
+            crash_cycles: 3,
+            crash_steps: 35_000,
+            seed: 9,
+            use_async: true,
+            acfg,
+            lease_ms: 50,
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.crashes, 3);
+    assert_eq!(rep.done, rep.submitted, "{rep:?}");
+    assert_eq!(rep.pending_after, 0);
+    assert_eq!(broker.reconcile_report(0).mismatches(), 0);
 }
 
 #[test]

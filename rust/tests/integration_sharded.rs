@@ -261,6 +261,7 @@ fn broker_on_batched_dequeue_work_queue_exactly_once_across_crashes() {
             crash_cycles: 3,
             crash_steps: 30_000,
             seed: 6,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -294,6 +295,7 @@ fn broker_on_sharded_queue_exactly_once_across_crashes() {
             crash_cycles: 3,
             crash_steps: 30_000,
             seed: 5,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -368,6 +370,7 @@ fn broker_on_two_pool_colocated_queue_exactly_once_across_crashes() {
             crash_cycles: 3,
             crash_steps: 30_000,
             seed: 7,
+            ..Default::default()
         },
     )
     .unwrap();

@@ -1,0 +1,254 @@
+//! Crash-during-async-flush property tests: the durability-gated
+//! completion invariant of `queues::asyncq` under randomized crash
+//! cycles, across several shard/batch/pool configurations.
+//!
+//! The contract under test (see `queues/asyncq` docs):
+//!
+//! > a future never resolves successfully before the `psync` covering its
+//! > operation retired.
+//!
+//! Observable consequences, asserted here:
+//!
+//! 1. **Resolved enqueues survive** — every value whose `EnqFuture`
+//!    resolved `Ok` is found again (as a resolved dequeue or in the final
+//!    drain), except for at most `failed_deq` values that an in-flight
+//!    (error-resolved) dequeue may have durably consumed without
+//!    returning.
+//! 2. **Resolved dequeues never redeliver** — no value appears twice
+//!    across resolved dequeues + the final drain.
+//! 3. **Checker-clean with ZERO allowances** — a history recorded at the
+//!    async boundaries passes the durable-linearizability checker with
+//!    `trailing_loss_per_thread = trailing_redelivery_per_thread = 0`:
+//!    the allowances the *sync* batched API needs (PRs 1–2) exist
+//!    precisely because returns race durability, and the async API closes
+//!    that race.
+
+use std::sync::Arc;
+
+use persiq::harness::{run_async_workload, AsyncRunConfig, Workload};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::pmem::{CostModel, PlacementPolicy, PmemConfig, Topology};
+use persiq::queues::asyncq::AsyncCfg;
+use persiq::queues::sharded::ShardedQueue;
+use persiq::queues::{ConcurrentQueue, PersistentQueue, QueueConfig};
+use persiq::util::rng::Xoshiro256;
+use persiq::verify::{check_with, relaxation_for, CheckOptions, History};
+
+const PRODUCERS: usize = 4;
+
+struct Scenario {
+    pools: usize,
+    shards: usize,
+    batch: usize,
+    batch_deq: usize,
+    placement: PlacementPolicy,
+    flushers: usize,
+    depth: usize,
+}
+
+fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            pools: 1,
+            shards: 4,
+            batch: 4,
+            batch_deq: 4,
+            placement: PlacementPolicy::Interleave,
+            flushers: 1,
+            depth: 8,
+        },
+        Scenario {
+            pools: 2,
+            shards: 2,
+            batch: 8,
+            batch_deq: 2,
+            placement: PlacementPolicy::Colocate,
+            flushers: 2,
+            depth: 16,
+        },
+        Scenario {
+            pools: 2,
+            shards: 8,
+            batch: 2,
+            batch_deq: 8,
+            placement: PlacementPolicy::Interleave,
+            flushers: 2,
+            depth: 4,
+        },
+    ]
+}
+
+fn mk(s: &Scenario, evict: f64, pending: f64, seed: u64) -> (Topology, Arc<ShardedQueue>) {
+    let topo = Topology::new(
+        PmemConfig {
+            capacity_words: 1 << 23,
+            cost: CostModel::zero(),
+            evict_prob: evict,
+            pending_flush_prob: pending,
+            seed,
+        },
+        s.pools,
+    );
+    let cfg = QueueConfig {
+        shards: s.shards,
+        batch: s.batch,
+        batch_deq: s.batch_deq,
+        ring_size: 256,
+        placement: s.placement.clone(),
+        ..Default::default()
+    };
+    let q = Arc::new(
+        ShardedQueue::new_perlcrq(&topo, PRODUCERS + s.flushers, cfg).unwrap(),
+    );
+    (topo, q)
+}
+
+fn drain(q: &Arc<ShardedQueue>) -> Vec<u64> {
+    let mut out = Vec::new();
+    while let Some(v) = q.dequeue(0).unwrap() {
+        out.push(v);
+    }
+    out
+}
+
+/// Invariants 1 + 2, deterministic-loss configuration (`evict = pending
+/// = 0`): nothing unflushed ever survives a crash, so "durable" and
+/// "flushed" coincide and the set arithmetic is exact.
+#[test]
+fn resolved_futures_are_durable_across_crash_cycles() {
+    install_quiet_crash_hook();
+    for (si, s) in scenarios().iter().enumerate() {
+        let (topo, q) = mk(s, 0.0, 0.0, 100 + si as u64);
+        let mut rng = Xoshiro256::seed_from(7 + si as u64);
+        let mut enq_resolved: Vec<u64> = Vec::new();
+        let mut deq_resolved: Vec<u64> = Vec::new();
+        let mut inflight_deqs = 0u64;
+        for cycle in 0..4u64 {
+            topo.arm_crash_after(2_000 + rng.next_below(4_000));
+            let rc = AsyncRunConfig {
+                producers: PRODUCERS,
+                total_ops: 60_000,
+                workload: Workload::Pairs,
+                seed: 1_000 * (si as u64 + 1) + cycle,
+                salt: cycle + 1,
+                record: false,
+                window: s.depth,
+                acfg: AsyncCfg { flush_us: 200, depth: s.depth, flushers: s.flushers },
+            };
+            let r = run_async_workload(&topo, &q, &rc);
+            assert!(r.crashed, "crash must trip mid-run (scenario {si}, cycle {cycle})");
+            enq_resolved.extend(r.enq_resolved);
+            deq_resolved.extend(r.deq_resolved);
+            // The TIGHT loss budget: dequeues that executed against the
+            // queue but whose flush never retired. (r.failed_deq would
+            // also count ring-drained ops that never touched the queue —
+            // a budget that scales with the window and could hide real
+            // losses.)
+            inflight_deqs += r.stats.crash_inflight_deqs;
+            topo.crash(&mut rng);
+            q.recover(topo.primary());
+        }
+        let drained = drain(&q);
+
+        // 2: resolved dequeues never redeliver (and the single-threaded
+        // drain itself cannot duplicate).
+        let mut delivered: Vec<u64> = deq_resolved.iter().copied().chain(drained.clone()).collect();
+        let n = delivered.len();
+        delivered.sort_unstable();
+        delivered.dedup();
+        assert_eq!(
+            delivered.len(),
+            n,
+            "scenario {si}: a durably-consumed (resolved) value was redelivered"
+        );
+
+        // 1: resolved enqueues survive, modulo the in-flight-dequeue
+        // budget (an error-resolved dequeue may have durably consumed a
+        // value without returning it — §4 Scenario 2, async edition).
+        let delivered_set: std::collections::HashSet<u64> = delivered.into_iter().collect();
+        let missing: Vec<u64> = enq_resolved
+            .iter()
+            .copied()
+            .filter(|v| !delivered_set.contains(v))
+            .collect();
+        assert!(
+            missing.len() as u64 <= inflight_deqs,
+            "scenario {si}: {} resolved enqueues vanished but only {} executed \
+             in-flight dequeues could have consumed them (missing sample: {:?})",
+            missing.len(),
+            inflight_deqs,
+            &missing[..missing.len().min(5)]
+        );
+    }
+}
+
+/// Invariant 3: recorded async histories pass the checker with zero
+/// trailing allowances under randomized crash nondeterminism (evict and
+/// pending-flush probabilities on), riding the V4/trailing-redelivery
+/// gating machinery of PRs 1–2 — which the async path must never need.
+#[test]
+fn async_histories_check_clean_with_zero_allowances() {
+    install_quiet_crash_hook();
+    for (si, s) in scenarios().iter().enumerate() {
+        let (topo, q) = mk(s, 0.3, 0.5, 200 + si as u64);
+        let mut rng = Xoshiro256::seed_from(17 + si as u64);
+        let mut logs = Vec::new();
+        let cycles = 3u64;
+        for cycle in 0..cycles {
+            topo.arm_crash_after(2_500 + rng.next_below(4_000));
+            let rc = AsyncRunConfig {
+                producers: PRODUCERS,
+                total_ops: 50_000,
+                workload: Workload::Pairs,
+                seed: 2_000 * (si as u64 + 1) + cycle,
+                salt: cycle + 1,
+                record: true,
+                window: s.depth,
+                acfg: AsyncCfg { flush_us: 200, depth: s.depth, flushers: s.flushers },
+            };
+            let r = run_async_workload(&topo, &q, &rc);
+            logs.extend(r.logs);
+            topo.crash(&mut rng);
+            q.recover(topo.primary());
+        }
+        let history = History::from_logs(logs, drain(&q));
+        let qcfg = QueueConfig {
+            shards: s.shards,
+            batch: s.batch,
+            batch_deq: s.batch_deq,
+            ..Default::default()
+        };
+        let rep = check_with(
+            &history,
+            &CheckOptions {
+                max_report: 5,
+                relaxation: relaxation_for(
+                    "sharded-perlcrq",
+                    PRODUCERS + s.flushers,
+                    &qcfg,
+                ),
+                // THE point: no trailing-loss, no trailing-redelivery.
+                // Resolution is gated on durability, so the buffered-
+                // durability excuses must never be needed.
+                trailing_loss_per_thread: 0,
+                trailing_redelivery_per_thread: 0,
+                crashed_epochs: cycles,
+                check_empty: false,
+                collect_overtakes: false,
+            },
+        );
+        assert!(
+            rep.ok(),
+            "scenario {si}: async history failed with zero allowances: {:?} \
+             (enq={} deq={} drained={} pending={})",
+            rep.violations,
+            rep.enq_completed,
+            rep.deq_values,
+            rep.drained,
+            rep.pending_deqs,
+        );
+        assert!(rep.enq_completed > 0, "scenario {si}: degenerate history");
+        assert_eq!(rep.absorbed_trailing, 0);
+        assert_eq!(rep.absorbed_redelivered, 0);
+    }
+}

@@ -67,6 +67,7 @@ fn service_crash_cycles_reconcile_for_both_queue_kinds() {
             crash_cycles: 1 + rng.next_below(3) as usize,
             crash_steps: 10_000 + rng.next_below(30_000),
             seed: rng.next_u64(),
+            ..Default::default()
         };
         let rep = run_service(&topo, &broker, &cfg).map_err(|e| e.to_string())?;
         if rep.done != rep.submitted {
