@@ -1,4 +1,8 @@
 //! Shared bench scaffolding (each bench target includes this by `#[path]`).
+//!
+//! Each bench target compiles this module independently and uses a
+//! different helper subset — silence per-target dead-code noise once.
+#![allow(dead_code)]
 
 use persiq::config::Config;
 use persiq::harness::runner::{run_workload, RunConfig};

@@ -32,6 +32,9 @@
 //! [broker]
 //! lease_ms = 0       # per-job lease on in-flight jobs (0 = off)
 //!
+//! [resharding]
+//! schedule = "4:8@50"   # start at 4 shards, resize online to 8 at 50% of ops
+//!
 //! [bench]
 //! ops = 200000
 //! seed = 42
@@ -41,8 +44,59 @@ use std::path::Path;
 
 use crate::pmem::{CostModel, PlacementPolicy, PmemConfig, Topology, MAX_POOLS};
 use crate::queues::asyncq::AsyncCfg;
-use crate::queues::QueueConfig;
+use crate::queues::{QueueConfig, MAX_SHARDS};
 use crate::util::toml::Doc;
+
+/// An online re-sharding schedule (`--resharding-schedule` /
+/// `[resharding] schedule`): start at `from_k` stripes and resize to
+/// `to_k` once `at_percent`% of the workload's ops have run on thread 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReshardSchedule {
+    pub from_k: usize,
+    pub to_k: usize,
+    /// Percent of the run at which the resize triggers (1..=99).
+    pub at_percent: u64,
+}
+
+impl ReshardSchedule {
+    /// Parse `"<from>:<to>@<pct>"` (a trailing `%` is accepted), e.g.
+    /// `4:8@50` or `8:4@25%`.
+    pub fn parse(s: &str) -> Result<ReshardSchedule, String> {
+        let t = s.trim().trim_end_matches('%');
+        let (ks, pct) = t
+            .split_once('@')
+            .ok_or_else(|| format!("bad resharding schedule {s:?} (expected from:to@pct)"))?;
+        let (from, to) = ks
+            .split_once(':')
+            .ok_or_else(|| format!("bad resharding schedule {s:?} (expected from:to@pct)"))?;
+        let from_k: usize =
+            from.trim().parse().map_err(|_| format!("bad shard count {from:?}"))?;
+        let to_k: usize = to.trim().parse().map_err(|_| format!("bad shard count {to:?}"))?;
+        let at_percent: u64 =
+            pct.trim().parse().map_err(|_| format!("bad percentage {pct:?}"))?;
+        if from_k == 0 || from_k > MAX_SHARDS || to_k == 0 || to_k > MAX_SHARDS {
+            return Err(format!("shard counts must be in 1..={MAX_SHARDS}"));
+        }
+        if !(1..=99).contains(&at_percent) {
+            return Err("resize percentage must be in 1..=99".to_string());
+        }
+        Ok(ReshardSchedule { from_k, to_k, at_percent })
+    }
+}
+
+impl std::str::FromStr for ReshardSchedule {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ReshardSchedule::parse(s)
+    }
+}
+
+impl std::fmt::Display for ReshardSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}@{}", self.from_k, self.to_k, self.at_percent)
+    }
+}
 
 /// Fully resolved configuration.
 #[derive(Clone, Debug)]
@@ -56,6 +110,9 @@ pub struct Config {
     pub asyncq: AsyncCfg,
     /// Broker per-job lease in ms (0 = disabled).
     pub lease_ms: u64,
+    /// Online re-sharding schedule for bench/verify workloads (`None` =
+    /// fixed shard count).
+    pub resharding: Option<ReshardSchedule>,
     pub bench_ops: u64,
     pub seed: u64,
 }
@@ -68,6 +125,7 @@ impl Default for Config {
             pools: 1,
             asyncq: AsyncCfg::default(),
             lease_ms: 0,
+            resharding: None,
             bench_ops: 200_000,
             seed: 42,
         }
@@ -152,6 +210,14 @@ impl Config {
         }
         c.lease_ms = doc.get_u64("broker", "lease_ms", c.lease_ms);
 
+        let schedule = doc.get_str("resharding", "schedule", "");
+        if !schedule.is_empty() {
+            match ReshardSchedule::parse(schedule) {
+                Ok(s) => c.resharding = Some(s),
+                Err(e) => crate::log_warn!("ignoring [resharding] schedule: {e}"),
+            }
+        }
+
         c.bench_ops = doc.get_u64("bench", "ops", c.bench_ops);
         c.seed = doc.get_u64("bench", "seed", c.seed);
         c
@@ -230,6 +296,25 @@ mod tests {
         let c = Config::from_doc(&doc);
         assert_eq!(c.pools, 1, "out-of-range [topology] pools must fall back");
         assert_eq!(c.build_topology().len(), 1);
+    }
+
+    #[test]
+    fn resharding_schedule_parses() {
+        let s = ReshardSchedule::parse("4:8@50").unwrap();
+        assert_eq!(s, ReshardSchedule { from_k: 4, to_k: 8, at_percent: 50 });
+        assert_eq!(ReshardSchedule::parse(" 8:4@25% ").unwrap().to_string(), "8:4@25");
+        assert!(ReshardSchedule::parse("4:8").is_err());
+        assert!(ReshardSchedule::parse("0:8@50").is_err());
+        assert!(ReshardSchedule::parse("4:65@50").is_err());
+        assert!(ReshardSchedule::parse("4:8@0").is_err());
+        assert!(ReshardSchedule::parse("4:8@100").is_err());
+        // Config-file plumbing (lenient on bad values, like the rest).
+        let doc =
+            crate::util::toml::parse("[resharding]\nschedule = \"4:8@50\"\n").unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.resharding, Some(ReshardSchedule { from_k: 4, to_k: 8, at_percent: 50 }));
+        let doc = crate::util::toml::parse("[resharding]\nschedule = \"nope\"\n").unwrap();
+        assert_eq!(Config::from_doc(&doc).resharding, None);
     }
 
     #[test]

@@ -68,7 +68,9 @@ pub struct Broker {
     /// milliseconds; 0 disables leasing. Volatile by design: leases guard
     /// against *worker death without a crash* — a full crash already
     /// redelivers via recovery, so nothing here needs to persist.
-    lease_ms: AtomicU64,
+    /// `Arc`-shared so the async layer's resolution hook (which starts
+    /// leases inside the combiner) can read it without borrowing `self`.
+    lease_ms: Arc<AtomicU64>,
     /// Outstanding leases: handle → when the job was taken. Behind an
     /// `Arc` so the async ack closure (which may outlive the borrow) can
     /// clear the lease at execution time.
@@ -159,6 +161,16 @@ pub struct ReconcileReport {
     pub stranded_pending: usize,
     /// Submitted-job counts per pool (socket) of the record's home.
     pub per_pool_submitted: Vec<usize>,
+    /// Shard-plan state of a sharded work queue: `(active epoch, active
+    /// shard count)`; `(0, 0)` for non-sharded queues.
+    pub plan: (u64, usize),
+    /// Mid-transition: `(frozen epoch, frozen shard count, residue)` of
+    /// a plan still draining after a `resize`; `None` when the queue has
+    /// exactly one plan (always the case post-recovery).
+    pub draining_plan: Option<(u64, usize, u64)>,
+    /// Cumulative resize counters of the work queue (zeroes when
+    /// non-sharded).
+    pub resize: crate::queues::sharded::ResizeStats,
 }
 
 impl ReconcileReport {
@@ -191,7 +203,7 @@ impl Broker {
             submit_log: SubmitLog::alloc(topo, nthreads, max_jobs),
             topo: topo.clone(),
             nthreads,
-            lease_ms: AtomicU64::new(0),
+            lease_ms: Arc::new(AtomicU64::new(0)),
             leases: Arc::new(Mutex::new(HashMap::new())),
         }
     }
@@ -222,7 +234,7 @@ impl Broker {
             submit_log: SubmitLog::alloc(topo, nthreads, max_jobs),
             topo: topo.clone(),
             nthreads,
-            lease_ms: AtomicU64::new(0),
+            lease_ms: Arc::new(AtomicU64::new(0)),
             leases: Arc::new(Mutex::new(HashMap::new())),
         })
     }
@@ -319,13 +331,13 @@ impl Broker {
     /// the payload — a `None` from `resolve_take` means "redelivered
     /// already-done job, take again".
     ///
-    /// **Lease caveat:** the lease starts inside `resolve_take`, not at
-    /// future resolution, so a worker that dies *between* awaiting this
-    /// future and calling `resolve_take` leaves the job durably consumed,
-    /// unleased, and PENDING — only a crash-recovery pass will requeue
-    /// it. Call `resolve_take` immediately after the await (as
-    /// `run_service_async` does); closing the window for real means
-    /// leasing at completion inside the combiner (ROADMAP follow-on).
+    /// **Lease-at-resolution:** on a layer built by
+    /// [`Broker::async_layer`] the combiner starts the job's lease at
+    /// the durability point, strictly before this future resolves — a
+    /// worker dying between the await and `resolve_take` therefore
+    /// leaves a *leased* PENDING job that [`Broker::reap_expired`]
+    /// redelivers, not a stranded one. (`resolve_take` merely refreshes
+    /// that lease on the async path.)
     pub fn take_async(&self, aq: &AsyncQueue<PerLcrq>) -> DeqFuture {
         aq.dequeue_async()
     }
@@ -382,7 +394,7 @@ impl Broker {
         } else {
             None
         };
-        aq.exec_async(move |topo, tid| {
+        aq.exec_async(move |topo, tid, _plan_epoch| {
             let won = topo.cas(tid, rec.add(0), ST_PENDING, ST_DONE);
             if let Some(leases) = &leases {
                 // Executed (won or lost the CAS): the job is no longer
@@ -402,13 +414,41 @@ impl Broker {
     /// Requires a sharded broker ([`Broker::new_sharded`]); spawn the
     /// flusher with [`AsyncQueue::spawn_flusher`] on thread slots disjoint
     /// from the producers'/workers'.
+    ///
+    /// The layer is wired for **lease-at-resolution**: when a
+    /// `take_async` future's consumption becomes durable, the combiner
+    /// starts the job's lease *before* the future resolves — a worker
+    /// dying between the await and [`Broker::resolve_take`] leaves a
+    /// leased, [`Broker::reap_expired`]-recoverable PENDING job instead
+    /// of a stranded one (the window the sync-lease design left open).
     pub fn async_layer(&self, cfg: AsyncCfg) -> Result<AsyncQueue<PerLcrq>, QueueError> {
         let Some(sharded) = &self.sharded else {
             return Err(QueueError::BadConfig(
                 "async broker paths need the sharded work queue (--queue sharded)",
             ));
         };
-        AsyncQueue::new(Arc::clone(sharded), cfg)
+        let aq = AsyncQueue::new(Arc::clone(sharded), cfg)?;
+        let lease_ms = Arc::clone(&self.lease_ms);
+        let leases = Arc::clone(&self.leases);
+        aq.set_deq_resolved_hook(Arc::new(move |handle: u64| {
+            if lease_ms.load(Ordering::Relaxed) > 0 {
+                leases.lock().unwrap().insert(handle, Instant::now());
+            }
+        }));
+        Ok(aq)
+    }
+
+    /// Re-shard the work queue **online** to `new_k` stripes (see
+    /// [`ShardedQueue::resize`]): an admin operation safe under live
+    /// producers, workers and flushers. `tid` must be the caller's
+    /// exclusive thread slot. Requires a sharded broker.
+    pub fn resize(&self, tid: usize, new_k: usize) -> Result<u64, QueueError> {
+        let Some(sharded) = &self.sharded else {
+            return Err(QueueError::BadConfig(
+                "resize needs the sharded work queue (--queue sharded)",
+            ));
+        };
+        sharded.resize(tid, new_k)
     }
 
     /// Enable (or disable, with 0) per-job leases: a job taken but
@@ -599,6 +639,11 @@ impl Broker {
             per_pool_submitted: vec![0; self.topo.len()],
             ..Default::default()
         };
+        if let Some(sharded) = &self.sharded {
+            rep.plan = (sharded.plan_epoch(), sharded.shard_count());
+            rep.draining_plan = sharded.draining_info(tid);
+            rep.resize = sharded.resize_stats();
+        }
         let mut queued: Vec<u64> = Vec::new();
         while let Ok(Some(h)) = self.queue.dequeue(tid) {
             queued.push(h);

@@ -38,6 +38,16 @@ pub struct ServiceConfig {
     /// silently are re-enqueued by a reap pass (see
     /// [`Broker::reap_expired`]).
     pub lease_ms: u64,
+    /// Online re-shard target (0 = off): during the FIRST cycle an admin
+    /// thread resizes the work queue to this stripe count while
+    /// producers/workers (and flushers, in async mode) are live —
+    /// `persiq serve --resize` / `persiq resize`. Requires a sharded
+    /// broker and one extra thread slot ([`ServiceConfig::admin_tid`]).
+    pub resize_to: usize,
+    /// The admin thread's exclusive queue tid (used only when
+    /// `resize_to > 0`); callers must size the broker's `nthreads` past
+    /// it.
+    pub admin_tid: usize,
 }
 
 impl Default for ServiceConfig {
@@ -52,8 +62,48 @@ impl Default for ServiceConfig {
             use_async: false,
             acfg: AsyncCfg::default(),
             lease_ms: 0,
+            resize_to: 0,
+            admin_tid: 0,
         }
     }
+}
+
+/// Spawn the one-shot resize admin thread (first cycle only): waits a
+/// beat so real traffic is in flight, then re-shards online on its own
+/// exclusive tid. Best-effort — a crash unwinds it (recovery converges
+/// the plan), and a still-draining transition is retried briefly.
+fn spawn_resizer(
+    broker: &Arc<Broker>,
+    cfg: &ServiceConfig,
+) -> Option<std::thread::JoinHandle<()>> {
+    if cfg.resize_to == 0 {
+        return None;
+    }
+    let broker = Arc::clone(broker);
+    let (tid, new_k) = (cfg.admin_tid, cfg.resize_to);
+    Some(std::thread::spawn(move || {
+        let _ = run_guarded(|| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            for attempt in 0..50 {
+                match broker.resize(tid, new_k) {
+                    Ok(_) => break,
+                    // Only a still-draining previous transition is worth
+                    // retrying; anything else (bad k, non-sharded queue)
+                    // is permanent and must be surfaced, not swallowed.
+                    Err(e) => {
+                        let retryable = e.to_string().contains("draining");
+                        if !retryable || attempt == 49 {
+                            crate::log_warn!("serve: online resize to {new_k} failed: {e}");
+                            if !retryable {
+                                break;
+                            }
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+            }
+        });
+    }))
 }
 
 /// End-to-end service report.
@@ -164,6 +214,11 @@ pub fn run_service(
                 });
                 samples.lock().unwrap().extend(my_samples);
             }));
+        }
+        if cycle == 0 {
+            if let Some(h) = spawn_resizer(broker, cfg) {
+                handles.push(h);
+            }
         }
         for h in handles {
             h.join().expect("service thread panicked");
@@ -327,6 +382,11 @@ fn run_service_async(
                 });
             }));
         }
+        if cycle == 0 {
+            if let Some(h) = spawn_resizer(broker, cfg) {
+                handles.push(h);
+            }
+        }
         for h in handles {
             h.join().expect("service thread panicked");
         }
@@ -438,6 +498,7 @@ mod tests {
             use_async: true,
             acfg: AsyncCfg { flush_us: 100, depth: 8, flushers: 2 },
             lease_ms: 0,
+            ..Default::default()
         };
         let rep = run_service(&topo, &broker, &cfg).unwrap();
         assert_eq!(rep.crashes, 3);
@@ -448,6 +509,63 @@ mod tests {
             rep.submitted, rep.done, rep.pending_after
         );
         assert_eq!(rep.pending_after, 0);
+    }
+
+    #[test]
+    fn serve_with_online_resize_completes_everything() {
+        // Sync path: an admin thread grows the work queue 4 -> 8 stripes
+        // while producers/workers are live; every job still completes
+        // exactly once and the broker converges to one plan.
+        let (topo, broker) = mk_sharded(1 << 22, 2 + 2 + 1);
+        let cfg = ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 300,
+            crash_cycles: 0,
+            resize_to: 8,
+            admin_tid: 4,
+            ..Default::default()
+        };
+        let rep = run_service(&topo, &broker, &cfg).unwrap();
+        assert_eq!(rep.submitted, 600);
+        assert_eq!(rep.done, 600, "online resize must not lose or duplicate jobs");
+        assert_eq!(rep.pending_after, 0);
+        let rec = broker.reconcile_report(0);
+        assert_eq!(rec.mismatches(), 0);
+        assert_eq!(rec.plan, (2, 8), "the grown plan must be active");
+        assert!(rec.draining_plan.is_none(), "the old plan must have retired");
+    }
+
+    #[test]
+    fn async_serve_with_resize_and_crashes_loses_nothing() {
+        install_quiet_crash_hook();
+        let (topo, broker) = mk_sharded(1 << 23, 2 + 2 + 2 + 1);
+        let cfg = ServiceConfig {
+            producers: 2,
+            workers: 2,
+            jobs_per_producer: 250,
+            crash_cycles: 3,
+            crash_steps: 30_000,
+            seed: 7,
+            use_async: true,
+            acfg: AsyncCfg { flush_us: 100, depth: 8, flushers: 2 },
+            resize_to: 8,
+            admin_tid: 6,
+            ..Default::default()
+        };
+        let rep = run_service(&topo, &broker, &cfg).unwrap();
+        assert_eq!(rep.crashes, 3);
+        assert_eq!(
+            rep.done, rep.submitted,
+            "resize + async + crash cycles must keep exactly-once completion \
+             (submitted={}, done={}, pending={})",
+            rep.submitted, rep.done, rep.pending_after
+        );
+        assert_eq!(rep.pending_after, 0);
+        assert!(
+            broker.reconcile_report(0).draining_plan.is_none(),
+            "recovery must have converged the plan"
+        );
     }
 
     #[test]

@@ -115,8 +115,23 @@ pub fn run_async_workload<Q: Shardable + 'static>(
     topo.set_active_threads(cfg.producers + cfg.acfg.flushers);
     let aq = AsyncQueue::new(Arc::clone(queue), cfg.acfg.clone())
         .expect("invalid async config (call AsyncCfg::validate first)");
-    let flusher = aq.spawn_flusher(cfg.producers);
     let recorder = Recorder::new();
+    // Recording runs attach the executed-hook BEFORE spawning flushers:
+    // the combiner stamps a `DeqExecuted` marker (attributed to the
+    // submitting tid via the op tag) the moment a dequeue runs against
+    // the queue, so the checker's V2 loss budget counts exactly the
+    // crash-in-flight dequeues instead of the whole future window.
+    let exec_log: Arc<std::sync::Mutex<Vec<Event>>> = Arc::new(std::sync::Mutex::new(Vec::new()));
+    if cfg.record {
+        let rec = Arc::clone(&recorder);
+        let topo2 = topo.clone();
+        let el = Arc::clone(&exec_log);
+        aq.set_deq_executed_hook(Arc::new(move |tag: u64, _value: u64| {
+            let mut log = el.lock().unwrap();
+            rec.record(&mut log, tag as usize, topo2.epoch(), EventKind::DeqExecuted);
+        }));
+    }
+    let flusher = aq.spawn_flusher(cfg.producers);
     let ops_per_thread = (cfg.total_ops / cfg.producers.max(1) as u64).max(1);
 
     let sw = Stopwatch::start();
@@ -148,7 +163,7 @@ pub fn run_async_workload<Q: Shardable + 'static>(
                     if cfg.record {
                         recorder.record(&mut log, tid, epoch, EventKind::DeqInvoke);
                     }
-                    window.push_back(Pending::D(aq.dequeue_async()));
+                    window.push_back(Pending::D(aq.dequeue_async_tagged(tid as u64)));
                 }
                 if window.len() >= cfg.window.max(1) {
                     let p = window.pop_front().expect("window nonempty");
@@ -176,6 +191,9 @@ pub fn run_async_workload<Q: Shardable + 'static>(
         res.deq_resolved.extend(out.deq_resolved);
     }
     res.crashed = flusher.stop() || aq.crashed();
+    // Harvest the combiner-recorded executed markers only after the
+    // flusher workers joined (no more writers).
+    res.logs.push(std::mem::take(&mut *exec_log.lock().unwrap()));
     res.stats = aq.stats();
     res.ops_done = res.enq_ok + res.deq_ok + res.empties;
     res.wall_secs = sw.elapsed_secs();

@@ -24,5 +24,5 @@ pub mod workload;
 
 pub use async_run::{run_async_workload, AsyncRunConfig, AsyncRunResult};
 pub use failure::{run_cycles, CycleConfig, CycleResult};
-pub use runner::{run_workload, RunConfig, RunResult};
+pub use runner::{run_workload, MidHook, RunConfig, RunResult};
 pub use workload::Workload;

@@ -18,6 +18,19 @@ use crate::verify::{Event, EventKind, Recorder};
 
 use super::workload::{value_for, Workload};
 
+/// A one-shot callback thread 0 runs mid-workload, between two of its
+/// operations, on its own tid — the online re-sharding trigger
+/// (`--resharding-schedule`). Runs inside the crash guard: a simulated
+/// crash can land anywhere inside it.
+#[derive(Clone)]
+pub struct MidHook(pub Arc<dyn Fn(usize) + Send + Sync>);
+
+impl std::fmt::Debug for MidHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("MidHook(..)")
+    }
+}
+
 /// Runner configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -34,6 +47,12 @@ pub struct RunConfig {
     pub sample_every: u64,
     /// Inject random yields to diversify interleavings on few cores.
     pub yield_prob: f64,
+    /// Run [`RunConfig::mid_hook`] once thread 0 has completed this many
+    /// of its own ops (0 = never) — while every other thread keeps
+    /// operating, so the hook runs genuinely online.
+    pub hook_after: u64,
+    /// The one-shot mid-run hook (receives thread 0's tid).
+    pub mid_hook: Option<MidHook>,
 }
 
 impl Default for RunConfig {
@@ -47,6 +66,8 @@ impl Default for RunConfig {
             record: false,
             sample_every: 0,
             yield_prob: 0.0,
+            hook_after: 0,
+            mid_hook: None,
         }
     }
 }
@@ -134,6 +155,11 @@ pub fn run_workload(
             let mut my_empty = 0u64;
             let out = run_guarded(|| {
                 for k in 0..ops_per_thread {
+                    if tid == 0 && cfg.hook_after > 0 && k == cfg.hook_after {
+                        if let Some(hook) = &cfg.mid_hook {
+                            hook.0(tid);
+                        }
+                    }
                     if cfg.yield_prob > 0.0 && rng.chance(cfg.yield_prob) {
                         std::thread::yield_now();
                     }

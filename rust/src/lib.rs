@@ -36,13 +36,22 @@
 //!   **durability-gated completion** (a resolved future is proof of
 //!   durability; a crash fails unflushed futures with `Crashed`), so the
 //!   async API keeps the 1/B + 1/K psync cost while restoring strict
-//!   durable linearizability at the resolution boundary.
+//!   durable linearizability at the resolution boundary. The stripe set
+//!   itself is elastic ([`queues::sharded::plan`]): epoch-versioned
+//!   ShardPlans over a persistent plan log let `resize(new_k)` grow or
+//!   shrink K **online** — freeze commit in one psync, drain-priority
+//!   dequeue scans empty the frozen stripes, retirement is one psync,
+//!   and crash recovery rolls a mid-transition crash forward to exactly
+//!   one plan.
 //! * [`verify`] — history recording and a durable-linearizability checker,
 //!   including the k-relaxed FIFO mode ([`verify::check_relaxed`]) that
 //!   machine-verifies sharded histories up to bounded shard skew, plus
 //!   crash-gated allowances for buffered durability: trailing losses
 //!   (unflushed enqueue batches) and trailing redeliveries (unflushed
-//!   dequeue batches), each bounded per `(thread, epoch)`.
+//!   dequeue batches), each bounded per `(thread, epoch)`, a
+//!   cross-plan overtake allowance for re-sharding boundaries
+//!   ([`verify::resharding_relaxation`]), and executed-marker-tightened
+//!   loss budgets on async histories.
 //! * [`harness`] — workload generators, the multi-thread runner with
 //!   virtual-time metering, and the crash/recovery ("cycle") framework of §5.
 //! * [`runtime`] — a PJRT wrapper that loads the AOT-compiled JAX/Pallas

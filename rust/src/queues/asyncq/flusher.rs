@@ -66,13 +66,17 @@ pub(crate) enum AsyncOp {
     Enq { value: u64, slot: Arc<CompletionSlot> },
     /// Dequeue; stage the value and complete after the dequeue-log flush
     /// retires (EMPTY completes immediately — no persistent effect).
-    Deq { slot: Arc<CompletionSlot> },
+    /// `tag` is an opaque caller correlation id handed to the
+    /// executed-hook (the async harness passes the submitting tid so the
+    /// checker's `DeqExecuted` markers attribute correctly).
+    Deq { tag: u64, slot: Arc<CompletionSlot> },
     /// Combiner-executed closure (flat-combining escape hatch, e.g. the
     /// broker's ack path): runs on the worker's tid against the queue's
-    /// topology, returns `(result, pool_mask)`; completion waits until
-    /// every pool in `pool_mask` has been `psync`ed by the worker.
+    /// topology (receiving the shard-plan epoch in force at execution),
+    /// returns `(result, pool_mask)`; completion waits until every pool
+    /// in `pool_mask` has been `psync`ed by the worker.
     Exec {
-        f: Box<dyn FnOnce(&Topology, usize) -> (u64, u64) + Send>,
+        f: Box<dyn FnOnce(&Topology, usize, u64) -> (u64, u64) + Send>,
         slot: Arc<CompletionSlot>,
     },
 }
@@ -80,9 +84,9 @@ pub(crate) enum AsyncOp {
 impl AsyncOp {
     pub(crate) fn fail(self, err: AsyncError) {
         match self {
-            AsyncOp::Enq { slot, .. } | AsyncOp::Deq { slot } | AsyncOp::Exec { slot, .. } => {
-                slot.fail(err)
-            }
+            AsyncOp::Enq { slot, .. }
+            | AsyncOp::Deq { slot, .. }
+            | AsyncOp::Exec { slot, .. } => slot.fail(err),
         }
     }
 }
@@ -267,12 +271,23 @@ fn worker_loop<Q: Shardable + 'static>(shared: Arc<Shared<Q>>, tid: usize) {
     let mut exec_pools: u64 = 0;
     // When the oldest parked op was admitted (deadline trigger).
     let mut oldest: Option<Instant> = None;
+    let exec_hook = shared.deq_executed_hook.lock().unwrap().clone();
+    // The shard-plan epoch this combiner last operated under: re-sharding
+    // flips are observed between batches (the queue's own dispatch reads
+    // the live plan per op; this is the combiner-side observation point
+    // for stats and exec closures).
+    let mut plan_epoch = q.plan_epoch();
 
     let outcome = run_guarded(|| {
         PersistentQueue::attach(q.as_ref(), tid);
         loop {
             let stopping = shared.stop.load(Ordering::Acquire);
             let mut progressed = false;
+            let ep = q.plan_epoch();
+            if ep != plan_epoch {
+                plan_epoch = ep;
+                shared.stats.plan_flips.fetch_add(1, Ordering::Relaxed);
+            }
 
             // Admit work while the in-flight window has room.
             while parked_enq.len() + parked_deq.len() + parked_exec.len() < shared.cfg.depth {
@@ -293,13 +308,30 @@ fn worker_loop<Q: Shardable + 'static>(shared: Arc<Shared<Q>>, tid: usize) {
                             slot.fail(AsyncError::Queue(e));
                         }
                     }
-                    AsyncOp::Deq { slot } => {
+                    AsyncOp::Deq { tag, slot } => {
                         parked_deq.push(slot);
                         match q.dequeue(tid) {
                             Ok(Some(v)) => {
                                 parked_deq.last().expect("just pushed").stage(v + 1);
+                                // Executed (consumption staged, durability
+                                // pending): the harness's checker marker.
+                                if let Some(h) = &exec_hook {
+                                    h(tag, v);
+                                }
                             }
                             Ok(None) => {
+                                // EMPTY executions fire the marker too:
+                                // the checker matches markers to open
+                                // invokes positionally (oldest first), so
+                                // an unmarked EMPTY would silently absorb
+                                // a later value-carrying op's mark and
+                                // fabricate a loss. EMPTYs resolve
+                                // immediately, so their marked invoke
+                                // always gets its response and never
+                                // enters the pending budget.
+                                if let Some(h) = &exec_hook {
+                                    h(tag, 0);
+                                }
                                 // EMPTY has no persistent effect: resolve
                                 // immediately (stage() default 0 = None).
                                 let slot = parked_deq.pop().expect("just pushed");
@@ -315,7 +347,7 @@ fn worker_loop<Q: Shardable + 'static>(shared: Arc<Shared<Q>>, tid: usize) {
                     }
                     AsyncOp::Exec { f, slot } => {
                         parked_exec.push(slot);
-                        let (v, pools) = f(q.topology(), tid);
+                        let (v, pools) = f(q.topology(), tid, q.plan_epoch());
                         parked_exec.last().expect("just pushed").stage(v);
                         exec_pools |= pools;
                     }
@@ -454,7 +486,17 @@ fn harvest<Q: Shardable>(
         }
     }
     if pd == 0 && !parked_deq.is_empty() {
+        let hook = shared.deq_resolved_hook.lock().unwrap().clone();
         for slot in parked_deq.drain(..) {
+            // Durability point reached: let the observer act BEFORE the
+            // caller can see the resolution (the broker starts the job
+            // lease here, closing the die-between-await-and-resolve
+            // window).
+            if let (Some(h), enc) = (&hook, slot.staged()) {
+                if enc != 0 {
+                    h(enc - 1);
+                }
+            }
             slot.complete();
             shared.stats.deq_done.fetch_add(1, Ordering::Relaxed);
         }

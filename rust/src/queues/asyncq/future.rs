@@ -122,6 +122,13 @@ impl CompletionSlot {
         self.state.load(Ordering::Acquire) != PENDING
     }
 
+    /// The staged payload (flusher-side read, pre-publication): the
+    /// completion hooks use this to observe a dequeue's value at its
+    /// durability point, before the READY store hands it to the caller.
+    pub fn staged(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
     fn take_err(&self) -> AsyncError {
         self.waiting.lock().unwrap().err.clone().unwrap_or(AsyncError::Closed)
     }

@@ -66,7 +66,7 @@ pub mod flusher;
 pub mod future;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::pmem::Topology;
 use crate::queues::perlcrq::PerLcrq;
@@ -148,8 +148,14 @@ pub struct AsyncStats {
     /// count, which includes ring-drained ops that never touched the
     /// queue — bounds how many values an async crash can consume without
     /// returning them (`tests/prop_async_durability.rs` uses it as its
-    /// loss budget).
+    /// loss budget; the checker derives the same bound itself from the
+    /// `DeqExecuted` markers the harness records via
+    /// [`AsyncQueue::set_deq_executed_hook`]).
     pub crash_inflight_deqs: u64,
+    /// Shard-plan flips (`ShardedQueue::resize`) the combiners observed
+    /// between batches — each one means subsequent ops stripe over a new
+    /// plan generation.
+    pub plan_flips: u64,
 }
 
 #[derive(Default)]
@@ -164,7 +170,17 @@ pub(crate) struct StatCells {
     pub deadline_flushes: AtomicU64,
     pub backpressure: AtomicU64,
     pub crash_inflight_deqs: AtomicU64,
+    pub plan_flips: AtomicU64,
 }
+
+/// Observer invoked with a payload value at an async-layer event (e.g.
+/// the broker's lease start at resolution). Kept type-erased so the
+/// broker/harness can hook in without the queue layer depending on them.
+pub type ValueHook = Arc<dyn Fn(u64) + Send + Sync>;
+/// Observer invoked with `(tag, value)` when a tagged dequeue executes
+/// (the harness records the checker's `DeqExecuted` marker, attributing
+/// it to the submitting thread via the tag).
+pub type TaggedHook = Arc<dyn Fn(u64, u64) + Send + Sync>;
 
 /// State shared between caller handles and flusher workers.
 pub(crate) struct Shared<Q: Shardable> {
@@ -181,6 +197,16 @@ pub(crate) struct Shared<Q: Shardable> {
     /// waits them out so no op can slip in behind the closing drain.
     pub pushers: AtomicUsize,
     pub stats: StatCells,
+    /// Invoked with each dequeued value at its **durability point**,
+    /// strictly before the future resolves: the broker starts the job
+    /// lease here (lease-at-resolution — a worker dying between the
+    /// await and `resolve_take` leaves a leased, reapable job instead of
+    /// a stranded one). Set before spawning flushers.
+    pub deq_resolved_hook: Mutex<Option<ValueHook>>,
+    /// Invoked with `(tag, value)` when a dequeue EXECUTES against the
+    /// queue (consumption staged, durability pending): the async harness
+    /// records the checker's `DeqExecuted` marker here.
+    pub deq_executed_hook: Mutex<Option<TaggedHook>>,
 }
 
 impl<Q: Shardable> Shared<Q> {
@@ -236,8 +262,22 @@ impl<Q: Shardable + 'static> AsyncQueue<Q> {
                 crashed: Arc::new(AtomicBool::new(false)),
                 pushers: AtomicUsize::new(0),
                 stats: StatCells::default(),
+                deq_resolved_hook: Mutex::new(None),
+                deq_executed_hook: Mutex::new(None),
             }),
         })
+    }
+
+    /// Install the dequeue-resolution observer (see
+    /// [`Shared::deq_resolved_hook`]). Call before spawning flushers.
+    pub fn set_deq_resolved_hook(&self, hook: ValueHook) {
+        *self.shared.deq_resolved_hook.lock().unwrap() = Some(hook);
+    }
+
+    /// Install the dequeue-executed observer (see
+    /// [`Shared::deq_executed_hook`]). Call before spawning flushers.
+    pub fn set_deq_executed_hook(&self, hook: TaggedHook) {
+        *self.shared.deq_executed_hook.lock().unwrap() = Some(hook);
     }
 
     /// Spawn the configured number of flusher workers on queue thread
@@ -265,21 +305,31 @@ impl<Q: Shardable + 'static> AsyncQueue<Q> {
     /// Submit an asynchronous dequeue. Resolves `Ok(Some(v))` once the
     /// consumption is durable, `Ok(None)` immediately on EMPTY.
     pub fn dequeue_async(&self) -> DeqFuture {
+        self.dequeue_async_tagged(0)
+    }
+
+    /// [`AsyncQueue::dequeue_async`] with a caller correlation `tag`
+    /// handed to the executed-hook (see [`TaggedHook`]); the async
+    /// harness passes the submitting tid so checker markers attribute to
+    /// the right thread's open invokes.
+    pub fn dequeue_async_tagged(&self, tag: u64) -> DeqFuture {
         let slot = CompletionSlot::new();
-        self.submit(AsyncOp::Deq { slot: Arc::clone(&slot) });
+        self.submit(AsyncOp::Deq { tag, slot: Arc::clone(&slot) });
         DeqFuture { slot }
     }
 
     /// Flat-combining escape hatch: run `f` on a flusher's thread slot
-    /// against the queue's topology. `f` returns `(result, pool_mask)`;
-    /// the future resolves with `result` only after every pool in
-    /// `pool_mask` has been `psync`ed by that worker — i.e. after any
-    /// `pwb`s `f` issued there have retired. The broker's `ack_async`
-    /// rides this to group-commit DONE-marking psyncs with the queue's
-    /// flush.
+    /// against the queue's topology. `f` receives `(topology, tid,
+    /// plan_epoch)` — the shard-plan epoch in force when the closure
+    /// executes, so combiner-side logic can observe re-sharding
+    /// transitions — and returns `(result, pool_mask)`; the future
+    /// resolves with `result` only after every pool in `pool_mask` has
+    /// been `psync`ed by that worker — i.e. after any `pwb`s `f` issued
+    /// there have retired. The broker's `ack_async` rides this to
+    /// group-commit DONE-marking psyncs with the queue's flush.
     pub fn exec_async(
         &self,
-        f: impl FnOnce(&Topology, usize) -> (u64, u64) + Send + 'static,
+        f: impl FnOnce(&Topology, usize, u64) -> (u64, u64) + Send + 'static,
     ) -> ExecFuture {
         let slot = CompletionSlot::new();
         self.submit(AsyncOp::Exec { f: Box::new(f), slot: Arc::clone(&slot) });
@@ -357,7 +407,13 @@ impl<Q: Shardable + 'static> AsyncQueue<Q> {
             deadline_flushes: s.deadline_flushes.load(Ordering::Relaxed),
             backpressure: s.backpressure.load(Ordering::Relaxed),
             crash_inflight_deqs: s.crash_inflight_deqs.load(Ordering::Relaxed),
+            plan_flips: s.plan_flips.load(Ordering::Relaxed),
         }
+    }
+
+    /// The active shard-plan epoch of the wrapped queue.
+    pub fn plan_epoch(&self) -> u64 {
+        self.shared.queue.plan_epoch()
     }
 
     /// The wrapped sharded queue.
@@ -534,7 +590,8 @@ mod tests {
     fn exec_rides_the_group_psync() {
         let (p, q, aq, fl) = mk(2, 4, 1, AsyncCfg { depth: 2, ..lazy_cfg() });
         let addr = p.alloc_lines(1);
-        let f = aq.exec_async(move |topo, tid| {
+        let f = aq.exec_async(move |topo, tid, plan_epoch| {
+            assert_eq!(plan_epoch, 1, "exec closures observe the live plan epoch");
             let pool = topo.pool(0);
             pool.store(tid, addr, 77);
             pool.pwb(tid, addr);

@@ -63,6 +63,21 @@ impl LcrqCore {
         cfg: &QueueConfig,
         persist: Option<PersistCfg>,
     ) -> Self {
+        Self::new_at(pool, nthreads, cfg, persist, 0)
+    }
+
+    /// Construct charging the construction-time pmem operations to `tid`
+    /// instead of thread 0 — required when a queue is built *mid-run* on
+    /// a live worker thread (the sharded layer's online re-sharding
+    /// allocates fresh stripes on the resizing thread's slot; charging
+    /// them to tid 0 would race that thread's clocks and flush queues).
+    pub fn new_at(
+        pool: &Arc<PmemPool>,
+        nthreads: usize,
+        cfg: &QueueConfig,
+        persist: Option<PersistCfg>,
+        tid: usize,
+    ) -> Self {
         cfg.validate().expect("invalid QueueConfig");
         let first = pool.alloc_lines(1);
         let last = pool.alloc_lines(1);
@@ -82,12 +97,12 @@ impl LcrqCore {
         let node = pool.alloc(core.node_words(), WORDS_PER_LINE);
         pool.set_hot(node, 1, crate::pmem::Hotness::Global);
         core.ring_of(node).declare_hotness(pool);
-        pool.store(0, first, node.to_u64());
-        pool.store(0, last, node.to_u64());
+        pool.store(tid, first, node.to_u64());
+        pool.store(tid, last, node.to_u64());
         if core.persist.is_some() {
-            pool.pwb(0, first);
-            pool.pwb(0, last);
-            pool.psync(0);
+            pool.pwb(tid, first);
+            pool.pwb(tid, last);
+            pool.psync(tid);
         }
         core
     }

@@ -33,6 +33,14 @@ pub struct PerLcrq {
 
 impl PerLcrq {
     pub fn new(pool: &Arc<PmemPool>, nthreads: usize, cfg: QueueConfig) -> Self {
+        Self::new_at(pool, nthreads, cfg, 0)
+    }
+
+    /// Construct on a live worker thread's slot: construction-time pmem
+    /// operations are charged to `tid` (see [`LcrqCore::new_at`]). Used
+    /// by the sharded layer's online re-sharding to allocate fresh
+    /// stripes mid-run.
+    pub fn new_at(pool: &Arc<PmemPool>, nthreads: usize, cfg: QueueConfig, tid: usize) -> Self {
         let variant = match (cfg.head_mode, cfg.skip_tail_persist) {
             (HeadPersistMode::Local, false) => "perlcrq",
             (HeadPersistMode::Shared, _) => "perlcrq-phead",
@@ -40,7 +48,7 @@ impl PerLcrq {
             (HeadPersistMode::Local, true) => "perlcrq-notail",
         };
         let persist = core_persist_cfg(&cfg);
-        Self { core: LcrqCore::new(pool, nthreads, &cfg, Some(persist)), variant }
+        Self { core: LcrqCore::new_at(pool, nthreads, &cfg, Some(persist), tid), variant }
     }
 
     /// Node count (test observability).

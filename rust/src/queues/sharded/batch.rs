@@ -9,7 +9,7 @@
 //! ```text
 //! line 0, word 0     : header = (seq << 8) | count      (0 = empty/retired)
 //! line 1 + i/2,
-//!   words 4·(i%2)..  : entry i = [item+1][shard<<32|node][ring idx][seq]
+//!   words 4·(i%2)..  : entry i = [item+1][plan<<40|shard<<32|node][ring idx][seq]
 //! ```
 //!
 //! Entries are 4 words so an entry never straddles a cache line (lines are
@@ -18,6 +18,13 @@
 //! realized independently at a crash — is detected per entry instead of
 //! misread: an entry whose `seq` disagrees with the header's is stale and
 //! skipped during reconciliation.
+//!
+//! Entries are **plan-epoch-qualified** (the `plan` bits of word 1): a
+//! shard index alone is ambiguous once the queue can re-shard online —
+//! shard 3 of plan 2 and shard 3 of plan 3 are different rings on
+//! possibly different pools. Reconciliation resolves each entry against
+//! the plan generation it was recorded under (see
+//! [`super::plan`]).
 //!
 //! ## Protocol (see [`super`] for the full correctness argument)
 //!
@@ -43,6 +50,8 @@ const ENTRIES_PER_LINE: usize = WORDS_PER_LINE / ENTRY_WORDS;
 pub(crate) struct LogEntry {
     /// `item + 1` (0 = slot never written).
     pub enc_item: u64,
+    /// Plan epoch the shard index is relative to.
+    pub plan_epoch: u64,
     pub shard: usize,
     pub node: PAddr,
     pub idx: u64,
@@ -77,19 +86,29 @@ impl BatchLog {
     }
 
     /// Record entry `i` of the filling batch (plain stores, no flush).
+    /// `plan_epoch` qualifies the shard index (word-1 packing: plan in
+    /// bits 40.., shard in 32..40, node below — `MAX_SHARDS` < 256 and
+    /// node addresses are 32-bit arena offsets).
+    #[allow(clippy::too_many_arguments)]
     pub fn record(
         &self,
         pool: &PmemPool,
         tid: usize,
         i: usize,
         item: u64,
+        plan_epoch: u64,
         shard: usize,
         pos: &EnqPos,
         seq: u64,
     ) {
+        debug_assert!(plan_epoch <= super::plan::MAX_PLAN_EPOCH && shard < 256);
         let a = self.entry_addr(i);
         pool.store(tid, a, item + 1);
-        pool.store(tid, a.add(1), ((shard as u64) << 32) | pos.node.to_u64());
+        pool.store(
+            tid,
+            a.add(1),
+            (plan_epoch << 40) | ((shard as u64) << 32) | pos.node.to_u64(),
+        );
         pool.store(tid, a.add(2), pos.idx);
         pool.store(tid, a.add(3), seq);
     }
@@ -118,7 +137,8 @@ impl BatchLog {
         let w1 = pool.load(tid, a.add(1));
         LogEntry {
             enc_item: pool.load(tid, a),
-            shard: (w1 >> 32) as usize,
+            plan_epoch: w1 >> 40,
+            shard: ((w1 >> 32) & 0xFF) as usize,
             node: PAddr::from_u64(w1 & 0xFFFF_FFFF),
             idx: pool.load(tid, a.add(2)),
             seq: pool.load(tid, a.add(3)),
@@ -168,7 +188,7 @@ mod tests {
         let log = BatchLog::alloc(&p, 8);
         for i in 0..5usize {
             let pos = EnqPos { node: PAddr(64), idx: 10 + i as u64 };
-            log.record(&p, 0, i, 100 + i as u64, i % 3, &pos, 7);
+            log.record(&p, 0, i, 100 + i as u64, 3 + i as u64, i % 3, &pos, 7);
         }
         log.seal(&p, 0, 5, 7);
         p.psync(0);
@@ -179,6 +199,7 @@ mod tests {
         for i in 0..5usize {
             let e = log.entry(&p, 0, i);
             assert_eq!(e.enc_item, 101 + i as u64);
+            assert_eq!(e.plan_epoch, 3 + i as u64, "plan epoch must round-trip");
             assert_eq!(e.shard, i % 3);
             assert_eq!(e.node, PAddr(64));
             assert_eq!(e.idx, 10 + i as u64);
@@ -191,13 +212,13 @@ mod tests {
         let p = pool();
         let log = BatchLog::alloc(&p, 4);
         let pos = EnqPos { node: PAddr(8), idx: 0 };
-        log.record(&p, 0, 0, 42, 0, &pos, 1);
+        log.record(&p, 0, 0, 42, 1, 0, &pos, 1);
         // No seal/psync: the header must read empty after a crash.
         let mut rng = crate::util::rng::Xoshiro256::seed_from(3);
         p.crash(&mut rng);
         assert_eq!(log.header(&p, 0).0, 0);
         // Seal + psync, then durable clear.
-        log.record(&p, 0, 0, 42, 0, &pos, 2);
+        log.record(&p, 0, 0, 42, 1, 0, &pos, 2);
         log.seal(&p, 0, 1, 2);
         p.psync(0);
         log.clear(&p, 0);

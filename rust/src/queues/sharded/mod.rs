@@ -136,19 +136,69 @@
 //! [`crate::queues::PersistentQueue::attach`] /
 //! [`crate::queues::PersistentQueue::detach`] hooks — the broker service
 //! calls them around every producer/worker thread's lifetime.
+//!
+//! ## Elastic re-sharding (versioned shard plans)
+//!
+//! The stripe set itself is a first-class, crash-recoverable object: the
+//! queue dispatches over an epoch-versioned **ShardPlan** (see [`plan`])
+//! and [`ShardedQueue::resize`] can grow or shrink `K` **online**, under
+//! concurrent enqueuers/dequeuers and async flushers:
+//!
+//! 1. **Stage** — allocate the new stripes (placed per
+//!    [`QueueConfig::placement`], construction charged to the resizing
+//!    thread's slot), write the new plan record into the plan log's
+//!    spare slot, `psync`.
+//! 2. **Freeze** — commit `Freezing(old, new)` with a one-word state
+//!    write + `psync`, then flip the volatile plan set: enqueue tickets
+//!    stripe over the **new** plan immediately; the old plan is frozen
+//!    (no enqueue can ever target it again).
+//! 3. **Drain** — dequeues scan the frozen stripes *first* (drain
+//!    priority), so normal consumer traffic drains the residue; each
+//!    item leaves through an ordinary dequeue with all its existing
+//!    durability machinery. Because the frozen side is enqueue-free,
+//!    one linearizable EMPTY observation per shard is a permanent
+//!    "drained" witness.
+//! 4. **Retire** — once every frozen shard is witnessed empty, a single
+//!    state-word write + **one `psync`** lands `Active(new)` and the old
+//!    plan drops out of the dispatch path.
+//!
+//! Steady-state cost is untouched outside the transition: the same
+//! 1/B + 1/K psyncs per op before, during (plus the drain-priority
+//! scans) and after; a resize itself costs `new_K + 3` psyncs (one per
+//! fresh stripe, record + freeze + retire).
+//!
+//! **Crash recovery.** Batch-log entries are plan-epoch-qualified, so
+//! reconciliation resolves every logged position against the plan
+//! generation it was recorded under (a volatile plan history keyed by
+//! epoch; re-insertions always land in the *current* active plan). A
+//! crash mid-transition recovers from the logged plan pair: durably
+//! `Freezing` means the new record is durable by construction, so
+//! recovery adopts the new plan, recovers and reconciles both
+//! generations, drains the frozen residue single-threadedly into the
+//! active stripes, and retires the old plan itself — recovery always
+//! converges to exactly one plan. Relaxed-FIFO order across the
+//! boundary is checked with a cross-plan overtake allowance derived
+//! from the frozen-shard residue
+//! ([`crate::verify::resharding_relaxation`], fed by
+//! [`ShardedQueue::resize_stats`]).
 
 pub mod batch;
+pub mod plan;
 
 use std::cell::UnsafeCell;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crossbeam_utils::CachePadded;
 
 use super::perlcrq::PerLcrq;
-use super::{ConcurrentQueue, PersistentQueue, QueueConfig, QueueError};
+use super::{ConcurrentQueue, PersistentQueue, QueueConfig, QueueError, MAX_SHARDS};
 use crate::pmem::{PAddr, PlacementPolicy, PmemPool, Topology};
 
 use self::batch::BatchLog;
+use self::plan::{Plan, PlanLog, PlanSet, PlanState};
+pub use self::plan::ResizeStats;
 
 /// Where a traced enqueue landed: the LCRQ node and the ring index within
 /// it. Stable across crashes (node addresses are arena offsets).
@@ -200,6 +250,21 @@ pub trait Shardable: PersistentQueue {
     /// "always probe".
     fn maybe_nonempty(&self, _tid: usize) -> bool {
         true
+    }
+
+    /// Occupancy estimate with the same one-sided soundness contract as
+    /// [`Shardable::maybe_nonempty`]: must never report `0` while an item
+    /// whose enqueue completed before the call started is still in the
+    /// queue. Overcounting is allowed (it only delays plan retirement).
+    /// Used to verify a frozen stripe is empty before the old plan is
+    /// durably retired, and to size the checker's cross-plan overtake
+    /// allowance. Defaults to the binary hint.
+    fn len_hint(&self, tid: usize) -> u64 {
+        if self.maybe_nonempty(tid) {
+            1
+        } else {
+            0
+        }
     }
 }
 
@@ -271,6 +336,27 @@ impl Shardable for PerLcrq {
         // Items in the first ring, or a successor node (next ptr at node+0).
         tail > head || pool.load(tid, first) != 0
     }
+
+    fn len_hint(&self, tid: usize) -> u64 {
+        // Walk the node chain summing ring occupancy (tail is read with
+        // the closed bit masked). Sound for the retire gate: an enqueue's
+        // cell write precedes its Tail FAI becoming visible... the FAI
+        // itself publishes the slot, and any completed enqueue has
+        // executed it, so a completed item is always inside some ring's
+        // [Head, Tail) window. Bounded walk for defensiveness.
+        let core = self.core();
+        let pool = &core.pool;
+        let mut node = PAddr::from_u64(pool.load(tid, core.first));
+        let mut sum = 0u64;
+        let mut hops = 0u32;
+        while !node.is_null() && hops < 1 << 20 {
+            let (head, tail) = core.ring_of(node).endpoints(pool, tid);
+            sum += tail.saturating_sub(head);
+            node = PAddr::from_u64(pool.load(tid, node));
+            hops += 1;
+        }
+        sum
+    }
 }
 
 /// Per-thread volatile dispatch state. Slot `tid` is touched only by the
@@ -305,22 +391,47 @@ struct Slot(UnsafeCell<SlotState>);
 
 unsafe impl Sync for Slot {}
 
+/// Volatile resize counters (see [`ResizeStats`]).
+#[derive(Default)]
+struct ResizeCells {
+    flips: AtomicU64,
+    retires: AtomicU64,
+    residue_total: AtomicU64,
+    last_residue: AtomicU64,
+    drained_from_frozen: AtomicU64,
+}
+
 /// The sharded (and optionally batched) persistent queue. See module docs.
 pub struct ShardedQueue<Q: Shardable = PerLcrq> {
     topo: Topology,
-    shards: Vec<Q>,
-    nshards: usize,
-    /// Pool (socket) each shard lives on; `shard_pool[s] < topo.len()`.
-    shard_pool: Vec<usize>,
-    /// Per-home-pool enqueue dispatch order: the shards a thread homed on
-    /// pool `h` round-robins its enqueues over. All shards under
-    /// `interleave`; the home pool's shards under `colocate`/`pinned`
-    /// (all shards when the home pool holds none).
-    enq_orders: Vec<Vec<usize>>,
-    /// Per-home-pool dequeue scan order: home shards first, then the
-    /// rest, so colocated consumers stay socket-local but still steal
-    /// (work conservation — an item in any shard is always reachable).
-    deq_orders: Vec<Vec<usize>>,
+    /// The epoch-versioned plan pair the hot paths dispatch over: the
+    /// active plan (enqueue target) plus, mid-transition, the frozen old
+    /// plan still being drained. Readers hold the lock across a whole
+    /// operation, so a plan flip (write lock) linearizes against every
+    /// in-flight op — no enqueue can land in a frozen stripe.
+    plans: RwLock<PlanSet<Q>>,
+    /// Every plan generation created since the last recovery, by epoch:
+    /// batch-log reconciliation resolves epoch-qualified entries against
+    /// retired generations too (their sealed logs outlive retirement).
+    history: Mutex<HashMap<u64, Arc<Plan<Q>>>>,
+    /// The persistent plan log (primary pool) — the re-sharding state
+    /// machine's durable root.
+    plan_log: PlanLog,
+    /// Serializes resize/retire transitions (single logical writer of the
+    /// plan log).
+    resize_lock: Mutex<()>,
+    /// Cheap lock-free copy of the active plan's epoch.
+    epoch_hint: AtomicU64,
+    /// Which plan-log record slot holds the active (or, mid-freeze, the
+    /// incoming) plan.
+    cur_slot: AtomicUsize,
+    /// Factory for fresh stripes: `(topo, pool, tid) -> shard`. `None`
+    /// for queues built from caller-provided shards — those cannot
+    /// re-shard.
+    #[allow(clippy::type_complexity)]
+    shard_ctor: Option<Box<dyn Fn(&Topology, usize, usize) -> Q + Send + Sync>>,
+    /// Placement policy new plans are laid out with.
+    placement: PlacementPolicy,
     batch: usize,
     batch_deq: usize,
     nthreads: usize,
@@ -335,36 +446,9 @@ pub struct ShardedQueue<Q: Shardable = PerLcrq> {
     log_pool: Vec<usize>,
     /// Monotone seed for [`ShardedQueue::attach_worker`] ticket reseeding,
     /// so reused thread slots keep spreading across shards.
-    ticket_seed: std::sync::atomic::AtomicU64,
+    ticket_seed: AtomicU64,
+    rstats: ResizeCells,
     name: &'static str,
-}
-
-/// Compute the per-home dispatch orders for a shard→pool map (see the
-/// `enq_orders`/`deq_orders` fields).
-fn dispatch_orders(
-    shard_pool: &[usize],
-    npools: usize,
-    prefer_home: bool,
-) -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
-    let all: Vec<usize> = (0..shard_pool.len()).collect();
-    let mut enq = Vec::with_capacity(npools);
-    let mut deq = Vec::with_capacity(npools);
-    for home in 0..npools {
-        let local: Vec<usize> =
-            all.iter().copied().filter(|&s| shard_pool[s] == home).collect();
-        let remote: Vec<usize> =
-            all.iter().copied().filter(|&s| shard_pool[s] != home).collect();
-        if prefer_home && !local.is_empty() {
-            enq.push(local.clone());
-            let mut order = local;
-            order.extend(remote);
-            deq.push(order);
-        } else {
-            enq.push(all.clone());
-            deq.push(all.clone());
-        }
-    }
-    (enq, deq)
 }
 
 impl ShardedQueue<PerLcrq> {
@@ -398,7 +482,12 @@ impl ShardedQueue<PerLcrq> {
             .iter()
             .map(|&p| PerLcrq::new(topo.pool(p), nthreads, shard_cfg.clone()))
             .collect();
-        Self::from_shards(topo, nthreads, &cfg, shards, shard_pool, "sharded-perlcrq")
+        // The stripe factory resize uses to grow fresh plans: identical
+        // configuration, constructed on the resizing thread's slot.
+        let ctor = Box::new(move |t: &Topology, pool: usize, tid: usize| {
+            PerLcrq::new_at(t.pool(pool), nthreads, shard_cfg.clone(), tid)
+        });
+        Self::build(topo, nthreads, &cfg, shards, shard_pool, Some(ctor), "sharded-perlcrq")
     }
 }
 
@@ -416,6 +505,23 @@ impl<Q: Shardable> ShardedQueue<Q> {
         shard_pool: Vec<usize>,
         name: &'static str,
     ) -> Result<Self, QueueError> {
+        Self::build(topo, nthreads, cfg, shards, shard_pool, None, name)
+    }
+
+    /// Shared construction tail: installs plan epoch 1 over the given
+    /// shards, durably initializes the plan log (record + `Active` state,
+    /// two psyncs — construction is a quiescent, thread-0 context) and
+    /// wires the optional stripe factory [`ShardedQueue::resize`] needs.
+    #[allow(clippy::type_complexity)]
+    fn build(
+        topo: &Topology,
+        nthreads: usize,
+        cfg: &QueueConfig,
+        shards: Vec<Q>,
+        shard_pool: Vec<usize>,
+        shard_ctor: Option<Box<dyn Fn(&Topology, usize, usize) -> Q + Send + Sync>>,
+        name: &'static str,
+    ) -> Result<Self, QueueError> {
         cfg.validate()?;
         if shards.is_empty() {
             return Err(QueueError::BadConfig("at least one shard is required"));
@@ -428,9 +534,6 @@ impl<Q: Shardable> ShardedQueue<Q> {
                 "placement names a pool outside the topology (check pinned ids vs --pools)",
             ));
         }
-        let nshards = shards.len();
-        let (enq_orders, deq_orders) =
-            dispatch_orders(&shard_pool, topo.len(), cfg.placement.prefers_home());
         let log_pool: Vec<usize> = (0..nthreads).map(|t| topo.home_pool(t)).collect();
         let logs = if cfg.batch > 1 {
             (0..nthreads).map(|t| BatchLog::alloc(topo.pool(log_pool[t]), cfg.batch)).collect()
@@ -444,13 +547,32 @@ impl<Q: Shardable> ShardedQueue<Q> {
         } else {
             Vec::new()
         };
+        let initial = Arc::new(Plan::new(
+            1,
+            shards,
+            shard_pool,
+            topo.len(),
+            cfg.placement.prefers_home(),
+        ));
+        // Durably root the initial plan before any operation can run:
+        // recovery always finds a decodable Active state.
+        let plan_log = PlanLog::alloc(topo.primary());
+        plan_log.write_record(topo.primary(), 0, 0, 1, &initial.shard_pool);
+        topo.primary().psync(0);
+        plan_log.set_active(topo.primary(), 0, 0, 1);
+        topo.primary().psync(0);
+        let mut history = HashMap::new();
+        history.insert(1, Arc::clone(&initial));
         Ok(Self {
             topo: topo.clone(),
-            shards,
-            nshards,
-            shard_pool,
-            enq_orders,
-            deq_orders,
+            plans: RwLock::new(PlanSet { active: initial, draining: None }),
+            history: Mutex::new(history),
+            plan_log,
+            resize_lock: Mutex::new(()),
+            epoch_hint: AtomicU64::new(1),
+            cur_slot: AtomicUsize::new(0),
+            shard_ctor,
+            placement: cfg.placement.clone(),
             batch: cfg.batch,
             batch_deq: cfg.batch_deq,
             nthreads,
@@ -466,19 +588,54 @@ impl<Q: Shardable> ShardedQueue<Q> {
             logs,
             deq_logs,
             log_pool,
-            ticket_seed: std::sync::atomic::AtomicU64::new(nthreads as u64),
+            ticket_seed: AtomicU64::new(nthreads as u64),
+            rstats: ResizeCells::default(),
             name,
         })
     }
 
-    /// Number of shards.
-    pub fn shard_count(&self) -> usize {
-        self.nshards
+    /// The active plan (test/reconciliation observability).
+    pub(crate) fn active_plan(&self) -> Arc<Plan<Q>> {
+        Arc::clone(&self.plans.read().unwrap().active)
     }
 
-    /// The pool (socket) shard `s` lives on.
+    /// Number of shards in the **active** plan.
+    pub fn shard_count(&self) -> usize {
+        self.active_plan().shards.len()
+    }
+
+    /// The pool (socket) the active plan's shard `s` lives on.
     pub fn shard_pool_of(&self, s: usize) -> usize {
-        self.shard_pool[s]
+        self.active_plan().shard_pool[s]
+    }
+
+    /// The active plan's epoch (1 = the construction-time plan; each
+    /// committed [`ShardedQueue::resize`] increments it).
+    pub fn plan_epoch(&self) -> u64 {
+        self.epoch_hint.load(Ordering::Acquire)
+    }
+
+    /// Mid-transition observability: `(epoch, shard_count, residue)` of
+    /// the frozen plan still draining, or `None` when the queue has
+    /// exactly one plan. `residue` is a [`Shardable::len_hint`] sum —
+    /// an overestimate at worst, never an undercount.
+    pub fn draining_info(&self, tid: usize) -> Option<(u64, usize, u64)> {
+        let set = self.plans.read().unwrap();
+        set.draining.as_ref().map(|d| {
+            (d.epoch, d.shards.len(), d.shards.iter().map(|s| s.len_hint(tid)).sum())
+        })
+    }
+
+    /// Resize counters (flips, retirements, frozen residue) — the input
+    /// to [`crate::verify::resharding_relaxation`].
+    pub fn resize_stats(&self) -> ResizeStats {
+        ResizeStats {
+            flips: self.rstats.flips.load(Ordering::Relaxed),
+            retires: self.rstats.retires.load(Ordering::Relaxed),
+            residue_total: self.rstats.residue_total.load(Ordering::Relaxed),
+            last_residue: self.rstats.last_residue.load(Ordering::Relaxed),
+            drained_from_frozen: self.rstats.drained_from_frozen.load(Ordering::Relaxed),
+        }
     }
 
     /// Configured enqueue batch size (1 = per-op persistence).
@@ -516,18 +673,24 @@ impl<Q: Shardable> ShardedQueue<Q> {
     }
 
     fn enqueue_impl(&self, tid: usize, item: u64) -> Result<(), QueueError> {
+        // The read lock is held across the whole operation: a plan flip
+        // (write lock) therefore linearizes against it — no enqueue can
+        // land in a stripe after it froze.
+        let set = self.plans.read().unwrap();
+        let plan = &set.active;
         let slot = self.slot(tid);
-        let order = &self.enq_orders[self.home(tid)];
+        let order = &plan.enq_orders[self.home(tid)];
         let shard = order[(slot.ticket % order.len() as u64) as usize];
         slot.ticket += 1;
         if self.batch <= 1 {
-            return self.shards[shard].enqueue(tid, item);
+            return plan.shards[shard].enqueue(tid, item);
         }
-        let pos = self.shards[shard].enqueue_traced(tid, item)?;
-        slot.enq_pools |= 1 << self.shard_pool[shard];
+        let pos = plan.shards[shard].enqueue_traced(tid, item)?;
+        slot.enq_pools |= 1 << plan.shard_pool[shard];
         let i = slot.pending;
         let lp = self.log_pool[tid];
-        self.logs[tid].record(self.topo.pool(lp), tid, i, item, shard, &pos, slot.seq);
+        self.logs[tid]
+            .record(self.topo.pool(lp), tid, i, item, plan.epoch, shard, &pos, slot.seq);
         slot.pending = i + 1;
         if slot.pending >= self.batch {
             self.flush(tid);
@@ -601,35 +764,237 @@ impl<Q: Shardable> ShardedQueue<Q> {
     }
 
     fn dequeue_impl(&self, tid: usize) -> Result<Option<u64>, QueueError> {
+        let (result, retire_candidate) = {
+            let set = self.plans.read().unwrap();
+            let mut retire = false;
+            let mut res = None;
+            // Drain priority: frozen stripes are scanned first, so
+            // consumer traffic empties the old plan before touching new
+            // items — the transition's residue leaves through ordinary
+            // dequeues with all their durability machinery.
+            if let Some(dr) = &set.draining {
+                res = self.dequeue_scan(tid, dr, true)?;
+                if res.is_some() {
+                    self.rstats.drained_from_frozen.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    retire = dr.all_drained();
+                }
+            }
+            if res.is_none() {
+                res = self.dequeue_scan(tid, &set.active, false)?;
+            }
+            (res, retire)
+        };
+        if retire_candidate {
+            // Every frozen stripe has an emptiness witness: attempt the
+            // one-psync retirement (idempotent, serialized, re-verified).
+            self.try_retire(tid);
+        }
+        Ok(result)
+    }
+
+    /// One scan over `plan`'s stripes. `frozen` scans skip stripes that
+    /// already have an emptiness witness and record new witnesses (sound
+    /// post-freeze: no enqueue can target the plan, so emptiness is
+    /// monotone); live scans use the thread's rotating cursor.
+    fn dequeue_scan(
+        &self,
+        tid: usize,
+        plan: &Arc<Plan<Q>>,
+        frozen: bool,
+    ) -> Result<Option<u64>, QueueError> {
         let slot = self.slot(tid);
-        let order = &self.deq_orders[self.home(tid)];
+        let order = &plan.deq_orders[self.home(tid)];
         let n = order.len();
-        let start = slot.cursor;
+        let start = if frozen { 0 } else { slot.cursor % n };
         for i in 0..n {
             let pos_in_order = (start + i) % n;
             let s = order[pos_in_order];
-            if !self.shards[s].maybe_nonempty(tid) {
+            if frozen && plan.drained[s].load(Ordering::Relaxed) {
                 continue;
             }
-            if self.batch_deq <= 1 {
-                if let Some(v) = self.shards[s].dequeue(tid)? {
-                    slot.cursor = (pos_in_order + 1) % n;
-                    return Ok(Some(v));
+            if !plan.shards[s].maybe_nonempty(tid) {
+                if frozen {
+                    plan.drained[s].store(true, Ordering::Relaxed);
                 }
-            } else if let Some((v, pos)) = self.shards[s].dequeue_traced(tid)? {
-                slot.cursor = (pos_in_order + 1) % n;
-                slot.deq_pools |= 1 << self.shard_pool[s];
+                continue;
+            }
+            let got = if self.batch_deq <= 1 {
+                plan.shards[s].dequeue(tid)?
+            } else if let Some((v, pos)) = plan.shards[s].dequeue_traced(tid)? {
+                slot.deq_pools |= 1 << plan.shard_pool[s];
                 let i = slot.deq_pending;
                 let lp = self.log_pool[tid];
-                self.deq_logs[tid].record(self.topo.pool(lp), tid, i, v, s, &pos, slot.deq_seq);
+                self.deq_logs[tid]
+                    .record(self.topo.pool(lp), tid, i, v, plan.epoch, s, &pos, slot.deq_seq);
                 slot.deq_pending = i + 1;
                 if slot.deq_pending >= self.batch_deq {
                     self.flush(tid);
                 }
-                return Ok(Some(v));
+                Some(v)
+            } else {
+                None
+            };
+            match got {
+                Some(v) => {
+                    if !frozen {
+                        slot.cursor = (pos_in_order + 1) % n;
+                    }
+                    return Ok(Some(v));
+                }
+                None if frozen => plan.drained[s].store(true, Ordering::Relaxed),
+                None => {}
             }
         }
         Ok(None)
+    }
+
+    /// Re-shard **online** to `new_k` stripes: stage + durably record the
+    /// new plan, commit `Freezing` with one psync, and flip the volatile
+    /// plan set so enqueue tickets stripe over the new stripes
+    /// immediately. Returns the new plan epoch. The frozen old plan
+    /// drains through drain-priority dequeue scans and is retired (one
+    /// psync) by whichever dequeuer witnesses it empty —
+    /// [`ShardedQueue::try_retire`] — or by crash recovery. Safe under
+    /// concurrent enqueuers/dequeuers/flushers; `tid` is the calling
+    /// thread's exclusive slot (construction of the new stripes and the
+    /// transition psyncs are charged to it).
+    ///
+    /// Cost: `new_k + 3` psyncs for the whole transition (one per fresh
+    /// stripe, record + freeze + retire); steady-state psyncs/op are
+    /// untouched outside it.
+    ///
+    /// Errors: `BadConfig` for an out-of-range `new_k`, a queue built
+    /// from caller-provided shards (no stripe factory), or when a
+    /// previous transition is still draining (retry after consumers make
+    /// progress).
+    pub fn resize(&self, tid: usize, new_k: usize) -> Result<u64, QueueError> {
+        if new_k == 0 || new_k > MAX_SHARDS {
+            return Err(QueueError::BadConfig("shards must be in 1..=64"));
+        }
+        let Some(ctor) = &self.shard_ctor else {
+            return Err(QueueError::BadConfig(
+                "this queue was built from caller-provided shards and cannot re-shard",
+            ));
+        };
+        let guard = self.resize_guard();
+        // At most one transition in flight: the plan log holds exactly
+        // one spare record slot. Try to finish a lingering drain first.
+        // (The read guard must drop before try_retire_locked re-locks —
+        // same-thread read re-entry can deadlock against a queued
+        // writer.)
+        let has_draining = { self.plans.read().unwrap().draining.is_some() };
+        if has_draining && !self.try_retire_locked(tid) {
+            return Err(QueueError::BadConfig(
+                "a re-shard transition is still draining; retry once consumers drain it",
+            ));
+        }
+        let old = Arc::clone(&self.plans.read().unwrap().active);
+        if new_k == old.shards.len() {
+            return Ok(old.epoch); // no-op
+        }
+        let epoch = old.epoch + 1;
+        if epoch > plan::MAX_PLAN_EPOCH {
+            return Err(QueueError::BadConfig("plan epoch space exhausted"));
+        }
+        // Stage: fresh stripes on the placement's pools, constructed on
+        // the resizing thread's slot (each stripe psyncs its root once).
+        let shard_pool: Vec<usize> =
+            (0..new_k).map(|s| self.placement.pool_of(s, self.topo.len())).collect();
+        if shard_pool.iter().any(|&p| p >= self.topo.len()) {
+            return Err(QueueError::BadConfig(
+                "placement names a pool outside the topology (check pinned ids vs --pools)",
+            ));
+        }
+        let shards: Vec<Q> = shard_pool.iter().map(|&p| ctor(&self.topo, p, tid)).collect();
+        let plan = Arc::new(Plan::new(
+            epoch,
+            shards,
+            shard_pool,
+            self.topo.len(),
+            self.placement.prefers_home(),
+        ));
+        // Register BEFORE the durable commit: if the freeze psync lands
+        // but this thread crashes unwinding out of it, recovery must be
+        // able to resolve the committed epoch to these structs.
+        self.history.lock().unwrap().insert(epoch, Arc::clone(&plan));
+        let primary = self.topo.primary();
+        let old_slot = self.cur_slot.load(Ordering::Relaxed);
+        let new_slot = 1 - old_slot;
+        self.plan_log.write_record(primary, tid, new_slot, epoch, &plan.shard_pool);
+        primary.psync(tid);
+        // The commit point: durably Freezing(old, new).
+        self.plan_log.set_freezing(primary, tid, old_slot, epoch);
+        primary.psync(tid);
+        // Volatile flip — runs only if the commit psync retired, so the
+        // durable and volatile views can never cross.
+        {
+            let mut set = self.plans.write().unwrap();
+            set.draining = Some(Arc::clone(&old));
+            set.active = Arc::clone(&plan);
+        }
+        self.cur_slot.store(new_slot, Ordering::Relaxed);
+        self.epoch_hint.store(epoch, Ordering::Release);
+        let residue: u64 = old.shards.iter().map(|s| s.len_hint(tid)).sum();
+        self.rstats.flips.fetch_add(1, Ordering::Relaxed);
+        self.rstats.last_residue.store(residue, Ordering::Relaxed);
+        self.rstats.residue_total.fetch_add(residue, Ordering::Relaxed);
+        // An already-empty old plan retires immediately (one psync).
+        self.try_retire_locked(tid);
+        drop(guard);
+        Ok(epoch)
+    }
+
+    /// Attempt the one-psync retirement of a fully-drained frozen plan.
+    /// Returns `true` when the queue has exactly one plan afterwards
+    /// (retired now, or nothing was draining). Cheap when there is no
+    /// transition; serialized with [`ShardedQueue::resize`].
+    pub fn try_retire(&self, tid: usize) -> bool {
+        let _guard = self.resize_guard();
+        self.try_retire_locked(tid)
+    }
+
+    /// Take the resize lock, tolerating poison: the guard is held across
+    /// `psync`s, which can unwind with a simulated-crash signal; the plan
+    /// log is the durable source of truth and recovery re-derives every
+    /// volatile bit, so a poisoned transition lock carries no bad state.
+    fn resize_guard(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.resize_lock.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn try_retire_locked(&self, tid: usize) -> bool {
+        let old = {
+            let set = self.plans.read().unwrap();
+            match &set.draining {
+                None => return true,
+                Some(o) => Arc::clone(o),
+            }
+        };
+        // Verify emptiness stripe by stripe. `len_hint` never reports 0
+        // while a completed item is present, and the plan is enqueue-
+        // frozen, so a zero here is a permanent witness. The dequeue
+        // scans' drained flags are only a fast path — retirement always
+        // re-verifies against the rings themselves.
+        for (i, s) in old.shards.iter().enumerate() {
+            if s.len_hint(tid) == 0 {
+                old.drained[i].store(true, Ordering::Relaxed);
+            } else {
+                old.drained[i].store(false, Ordering::Relaxed);
+                return false;
+            }
+        }
+        // Retire the old plan with exactly one psync.
+        let primary = self.topo.primary();
+        self.plan_log.set_active(
+            primary,
+            tid,
+            self.cur_slot.load(Ordering::Relaxed),
+            self.epoch_hint.load(Ordering::Acquire),
+        );
+        primary.psync(tid);
+        self.plans.write().unwrap().draining = None;
+        self.rstats.retires.fetch_add(1, Ordering::Relaxed);
+        true
     }
 
     /// Post-recovery batch reconciliation (single-threaded). See module
@@ -639,13 +1004,21 @@ impl<Q: Shardable> ShardedQueue<Q> {
     /// on its home pool, the probed/retired cells on the shards' pools.
     /// The final drain psyncs every pool, closing the window where a
     /// crash mid-flush realized one pool's psync but not another's.
+    /// Entries are **plan-epoch-qualified**: each resolves against the
+    /// plan generation it was recorded under (retired generations stay in
+    /// the volatile history until the logs that may reference them are
+    /// cleared right here). Re-insertions always land in the *current*
+    /// active plan — a frozen stripe must never regain items.
     fn reconcile(&self) {
         let tid = 0;
+        let history: HashMap<u64, Arc<Plan<Q>>> = self.history.lock().unwrap().clone();
+        let active = self.active_plan();
 
         // --- Dequeue logs: suppress redelivery of logged consumptions ---
-        // Key: (shard, node, ring idx, item) — a ring position is consumed
-        // by exactly one dequeue, so the tuple is unique per epoch.
-        let mut consumed: std::collections::HashSet<(usize, u64, u64, u64)> =
+        // Key: (plan, shard, node, ring idx, item) — a ring position is
+        // consumed by exactly one dequeue, so the tuple is unique per
+        // crash epoch.
+        let mut consumed: std::collections::HashSet<(u64, usize, u64, u64, u64)> =
             std::collections::HashSet::new();
         if self.batch_deq > 1 {
             for t in 0..self.nthreads {
@@ -656,15 +1029,21 @@ impl<Q: Shardable> ShardedQueue<Q> {
                 }
                 for i in 0..count.min(self.batch_deq) {
                     let e = self.deq_logs[t].entry(lpool, tid, i);
-                    if e.seq != seq || e.enc_item == 0 || e.shard >= self.nshards {
-                        continue; // torn or garbage entry — stale seq, skip
+                    let Some(plan) = (e.seq == seq && e.enc_item != 0)
+                        .then(|| history.get(&e.plan_epoch))
+                        .flatten()
+                    else {
+                        continue; // torn/garbage entry or unknown plan — skip
+                    };
+                    if e.shard >= plan.shards.len() {
+                        continue;
                     }
                     let item = e.enc_item - 1;
                     let pos = EnqPos { node: e.node, idx: e.idx };
-                    consumed.insert((e.shard, e.node.to_u64(), e.idx, item));
+                    consumed.insert((e.plan_epoch, e.shard, e.node.to_u64(), e.idx, item));
                     // Returned pre-crash but still durably present: clear
                     // the cell so the recovered queue cannot redeliver it.
-                    let _ = self.shards[e.shard].retire(tid, &pos, item);
+                    let _ = plan.shards[e.shard].retire(tid, &pos, item);
                 }
                 self.deq_logs[t].clear(lpool, tid);
             }
@@ -679,20 +1058,28 @@ impl<Q: Shardable> ShardedQueue<Q> {
             }
             for i in 0..count.min(self.batch) {
                 let e = self.logs[t].entry(lpool, tid, i);
-                if e.seq != seq || e.enc_item == 0 || e.shard >= self.nshards {
-                    continue; // torn or garbage entry — stale seq, skip
+                let Some(plan) = (e.seq == seq && e.enc_item != 0)
+                    .then(|| history.get(&e.plan_epoch))
+                    .flatten()
+                else {
+                    continue; // torn/garbage entry or unknown plan — skip
+                };
+                if e.shard >= plan.shards.len() {
+                    continue;
                 }
                 let item = e.enc_item - 1;
-                if consumed.contains(&(e.shard, e.node.to_u64(), e.idx, item)) {
+                if consumed.contains(&(e.plan_epoch, e.shard, e.node.to_u64(), e.idx, item)) {
                     continue; // durably recorded as returned — never re-insert
                 }
                 let pos = EnqPos { node: e.node, idx: e.idx };
-                if self.shards[e.shard].probe(tid, &pos, item) == Probe::Missing {
+                if plan.shards[e.shard].probe(tid, &pos, item) == Probe::Missing {
                     // Never returned to any caller (Head ≤ idx, no dequeue
-                    // log entry) and not in NVM: re-insert. Lands at the
-                    // tail; the relaxed-FIFO checker absorbs the
-                    // displacement.
-                    let _ = self.shards[e.shard].enqueue(tid, item);
+                    // log entry) and not in NVM: re-insert — into the
+                    // ACTIVE plan (the recorded stripe may be frozen or
+                    // retired). Lands at a tail; the relaxed-FIFO checker
+                    // absorbs the displacement.
+                    let target = e.shard % active.shards.len();
+                    let _ = active.shards[target].enqueue(tid, item);
                 }
             }
             self.logs[t].clear(lpool, tid);
@@ -729,10 +1116,8 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
         // shard pressure.
         self.flush(tid);
         let slot = self.slot(tid);
-        slot.ticket = self
-            .ticket_seed
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let scan = self.deq_orders[self.home(tid)].len();
+        slot.ticket = self.ticket_seed.fetch_add(1, Ordering::Relaxed);
+        let scan = self.plans.read().unwrap().active.deq_orders[self.home(tid)].len();
         slot.cursor = (slot.ticket % scan as u64) as usize;
     }
 
@@ -743,15 +1128,64 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
     /// Post-crash recovery. The `pool` argument (the trait's single-pool
     /// contract) is ignored: each shard recovers on its own pool and the
     /// batch reconciliation walks every pool of the topology.
+    ///
+    /// Re-sharding makes recovery **plan-directed**: the durable plan log
+    /// names the committed state, and recovery always converges to
+    /// exactly one plan — a crash mid-`Freezing` is rolled *forward* (the
+    /// new record is durable by construction): adopt the new plan,
+    /// recover + reconcile every generation the batch logs may reference,
+    /// drain the frozen residue into the active stripes (single-threaded;
+    /// recovery is crash-free, so the move is atomic with respect to the
+    /// next crash), and retire the old plan durably.
     fn recover(&self, _pool: &PmemPool) {
-        for (i, s) in self.shards.iter().enumerate() {
-            s.recover(self.topo.pool(self.shard_pool[i]));
+        let tid = 0;
+        let primary = self.topo.primary();
+        // 1. Adopt the durably committed plan state. The volatile history
+        //    covers every epoch the log can name: plans are registered
+        //    before their freeze commit, and an uncommitted staged plan
+        //    (crash between record write and freeze psync) is simply
+        //    pruned below — no operation ever targeted it.
+        let state = self.plan_log.read_state(primary, tid);
+        let (active_epoch, draining_epoch) = match state {
+            PlanState::Active { slot, epoch } => {
+                self.cur_slot.store(slot, Ordering::Relaxed);
+                (epoch, None)
+            }
+            PlanState::Freezing { old_slot, epoch } => {
+                let (old_epoch, _) = self.plan_log.read_record(primary, tid, old_slot);
+                self.cur_slot.store(1 - old_slot, Ordering::Relaxed);
+                (epoch, Some(old_epoch))
+            }
+        };
+        let history: HashMap<u64, Arc<Plan<Q>>> = self.history.lock().unwrap().clone();
+        let active = Arc::clone(
+            history
+                .get(&active_epoch)
+                .expect("plan history must cover every durably committed epoch"),
+        );
+        let draining = draining_epoch.map(|e| {
+            Arc::clone(history.get(&e).expect("frozen plan must be in the volatile history"))
+        });
+        {
+            let mut set = self.plans.write().unwrap();
+            set.active = Arc::clone(&active);
+            set.draining = draining.clone();
         }
+        self.epoch_hint.store(active_epoch, Ordering::Release);
+        // 2. Recover every generation's stripes — retired plans too:
+        //    sealed batch logs may still reference their positions, and
+        //    probe/retire verdicts need recovered endpoints.
+        for plan in history.values() {
+            for (i, s) in plan.shards.iter().enumerate() {
+                s.recover(self.topo.pool(plan.shard_pool[i]));
+            }
+        }
+        // 3. Reconcile the plan-epoch-qualified batch logs.
         if self.batch > 1 || self.batch_deq > 1 {
             self.reconcile();
         }
-        // Reset volatile dispatch state; bump seqs so fresh batches can
-        // never collide with stale (already reconciled) log entries.
+        // 4. Reset volatile dispatch state; bump seqs so fresh batches can
+        //    never collide with stale (already reconciled) log entries.
         for t in 0..self.nthreads {
             let slot = self.slot(t);
             slot.ticket = 0;
@@ -763,6 +1197,40 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
             slot.deq_seq += 1;
             slot.deq_pools = 0;
         }
+        // 5. Converge a mid-transition crash: forward-drain the frozen
+        //    residue into the active plan and retire with one psync.
+        if let Some(old) = draining {
+            let mut moved = 0u64;
+            for s in &old.shards {
+                while let Ok(Some(v)) = s.dequeue(tid) {
+                    self.enqueue_impl(tid, v)
+                        .expect("re-shard recovery re-enqueue failed: size the pool");
+                    moved += 1;
+                }
+            }
+            self.rstats.drained_from_frozen.fetch_add(moved, Ordering::Relaxed);
+            self.rstats.residue_total.fetch_add(moved, Ordering::Relaxed);
+            // Seal + psync the migration batch, then drain every pool so
+            // the frozen-side Head advances (and any stray deferred pwbs)
+            // are durable BEFORE the retirement commit.
+            self.flush(tid);
+            self.topo.psync_all(tid);
+            self.plan_log.set_active(
+                primary,
+                tid,
+                self.cur_slot.load(Ordering::Relaxed),
+                active_epoch,
+            );
+            primary.psync(tid);
+            self.plans.write().unwrap().draining = None;
+            self.rstats.retires.fetch_add(1, Ordering::Relaxed);
+        }
+        // 6. Prune the plan history: the logs were cleared and every
+        //    slot's seq bumped, so no entry can reference an older
+        //    generation anymore. (Arena memory of dropped generations is
+        //    bump-allocated and intentionally not reclaimed.)
+        let mut hist = self.history.lock().unwrap();
+        hist.retain(|&e, _| e == active_epoch);
     }
 }
 
@@ -1000,7 +1468,8 @@ mod tests {
         for v in 10..14u64 {
             q.enqueue(0, v).unwrap(); // fills + flushes one batch
         }
-        let core = q.shards[0].core();
+        let plan = q.active_plan();
+        let core = plan.shards[0].core();
         let first = PAddr::from_u64(p.peek(core.first));
         let ring = core.ring_of(first);
         for u in 0..4u64 {
@@ -1125,12 +1594,13 @@ mod tests {
         for v in 0..3u64 {
             q.enqueue(0, v).unwrap();
         }
-        let core = q.shards[0].core();
+        let plan = q.active_plan();
+        let core = plan.shards[0].core();
         let first = PAddr::from_u64(p.peek(core.first));
         let pos = EnqPos { node: first, idx: 0 };
-        assert!(q.shards[0].retire(0, &pos, 0), "occupied position must clear");
+        assert!(plan.shards[0].retire(0, &pos, 0), "occupied position must clear");
         p.psync(0);
-        assert!(!q.shards[0].retire(0, &pos, 0), "second retire is a no-op");
+        assert!(!plan.shards[0].retire(0, &pos, 0), "second retire is a no-op");
         assert_eq!(drain(&q, 0), vec![1, 2], "retired item must not be delivered");
     }
 
@@ -1470,5 +1940,224 @@ mod tests {
         returned.sort_unstable();
         returned.dedup();
         assert_eq!(returned.len(), n, "duplicate item observed across crash cycles");
+    }
+
+    // ------------------------------------------------------------------
+    // Elastic re-sharding
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn resize_grow_and_shrink_lose_nothing() {
+        let (_p, q) = mk(2, 1);
+        assert_eq!(q.plan_epoch(), 1);
+        for v in 0..20u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert_eq!(q.resize(0, 8), Ok(2), "grow commits epoch 2");
+        assert_eq!(q.shard_count(), 8);
+        for v in 20..40u64 {
+            q.enqueue(0, v).unwrap(); // stripe over the NEW plan
+        }
+        // Old residue drains first (drain priority), then new items.
+        let got = drain(&q, 1);
+        assert_eq!(got.len(), 40);
+        let (old_part, _new_part) = got.split_at(20);
+        let mut old_sorted = old_part.to_vec();
+        old_sorted.sort_unstable();
+        assert_eq!(old_sorted, (0..20).collect::<Vec<u64>>(), "frozen residue delivered first");
+        let mut all = got.clone();
+        all.sort_unstable();
+        assert_eq!(all, (0..40).collect::<Vec<u64>>(), "no loss/dup across the grow");
+        // Drain retired the old plan; shrink works the same way.
+        assert!(q.draining_info(0).is_none(), "drained transition must retire");
+        assert_eq!(q.resize(0, 3), Ok(3));
+        for v in 100..120u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        let mut got = drain(&q, 0);
+        got.sort_unstable();
+        assert_eq!(got, (100..120).collect::<Vec<u64>>());
+        assert!(q.resize_stats().retires >= 2);
+    }
+
+    #[test]
+    fn resize_on_empty_queue_retires_immediately_with_bounded_psyncs() {
+        let (p, q) = mk(2, 1);
+        p.stats.reset();
+        assert_eq!(q.resize(0, 4), Ok(2));
+        assert!(q.draining_info(0).is_none(), "empty old plan retires inside resize");
+        // new_k stripe-root psyncs + record + freeze + retire.
+        assert_eq!(
+            p.stats.total().psyncs,
+            4 + 3,
+            "a resize costs new_k + 3 psyncs (stripes, record, freeze, retire)"
+        );
+        let st = q.resize_stats();
+        assert_eq!((st.flips, st.retires, st.last_residue), (1, 1, 0));
+    }
+
+    #[test]
+    fn resize_rejects_bad_requests() {
+        let (_p, q) = mk(2, 1);
+        assert!(matches!(q.resize(0, 0), Err(QueueError::BadConfig(_))));
+        assert!(matches!(
+            q.resize(0, crate::queues::MAX_SHARDS + 1),
+            Err(QueueError::BadConfig(_))
+        ));
+        assert_eq!(q.resize(0, 2), Ok(1), "same-k resize is a no-op at the current epoch");
+        // A transition with residue blocks the next resize until drained.
+        q.enqueue(0, 7).unwrap();
+        assert_eq!(q.resize(0, 4), Ok(2));
+        assert!(matches!(q.resize(0, 6), Err(QueueError::BadConfig(_))));
+        assert_eq!(q.dequeue(1).unwrap(), Some(7));
+        assert!(q.try_retire(1));
+        assert_eq!(q.resize(0, 6), Ok(3), "drained transition unblocks the next resize");
+    }
+
+    #[test]
+    fn resize_crash_mid_drain_converges_to_one_plan() {
+        // Freeze with residue, crash before any consumer drains it:
+        // recovery must adopt the new plan, move the residue over, retire
+        // the old plan, and deliver everything exactly once.
+        let (p, q) = mk_full(2, 4, 4, 0.0, 0.0);
+        for v in 0..10u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        q.flush_all();
+        assert_eq!(q.resize(0, 6), Ok(2));
+        assert!(q.draining_info(0).is_some(), "residue keeps the transition open");
+        let mut rng = Xoshiro256::seed_from(61);
+        p.crash(&mut rng);
+        q.recover(&p);
+        assert!(q.draining_info(0).is_none(), "recovery must converge to one plan");
+        assert_eq!(q.plan_epoch(), 2, "durably frozen transitions roll FORWARD");
+        let mut got = drain(&q, 0);
+        let n = got.len();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), n, "recovery drain duplicated items");
+        assert_eq!(got, (0..10).collect::<Vec<u64>>(), "recovery drain lost items");
+        // Stability: another crash after convergence changes nothing.
+        p.crash(&mut rng);
+        q.recover(&p);
+        assert_eq!(q.plan_epoch(), 2);
+        assert_eq!(drain(&q, 0), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn resize_crash_before_commit_keeps_old_plan() {
+        // The staged record is written but the freeze never psyncs: the
+        // crash lands on Active(old); recovery prunes the staged plan.
+        let (p, q) = mk(2, 1);
+        for v in 0..6u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        // Replay resize's staging by hand, stopping before the commit.
+        {
+            let _g = q.resize_guard();
+            q.plan_log.write_record(&p, 0, 1, 2, &[0, 0, 0]);
+            p.psync(0);
+            q.plan_log.set_freezing(&p, 0, 0, 2); // pwb queued, psync never runs
+        }
+        let mut rng = Xoshiro256::seed_from(62);
+        p.crash(&mut rng);
+        q.recover(&p);
+        // Either outcome of the torn commit is a single coherent plan;
+        // with no registered epoch-2 structs the state must be Active(1)
+        // (pending_flush_prob = 0 drops the unsynced state line).
+        assert_eq!(q.plan_epoch(), 1, "uncommitted freeze must roll back");
+        assert_eq!(q.shard_count(), 2);
+        let mut got = drain(&q, 0);
+        got.sort_unstable();
+        assert_eq!(got, (0..6).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn mixed_epoch_batch_log_reconciles_across_resize() {
+        // A sealed enqueue batch spanning two plan generations: entries
+        // must reconcile against the generation they were recorded under.
+        let (p, q) = mk(2, 4);
+        q.enqueue(0, 0).unwrap();
+        q.enqueue(0, 1).unwrap(); // two epoch-1 entries in the filling batch
+        assert_eq!(q.resize(0, 4), Ok(2));
+        q.enqueue(0, 2).unwrap();
+        q.enqueue(0, 3).unwrap(); // batch of 4 full -> sealed + psynced (mixed epochs)
+        let mut rng = Xoshiro256::seed_from(63);
+        p.crash(&mut rng);
+        q.recover(&p);
+        let mut got = drain(&q, 0);
+        let n = got.len();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), n, "mixed-epoch reconciliation duplicated items");
+        assert_eq!(got, vec![0, 1, 2, 3], "mixed-epoch reconciliation lost items");
+    }
+
+    #[test]
+    fn resize_under_concurrent_traffic_and_crashes() {
+        use crate::pmem::crash::{install_quiet_crash_hook, run_guarded};
+        install_quiet_crash_hook();
+        let topo = Topology::new(
+            PmemConfig {
+                capacity_words: 1 << 22,
+                cost: CostModel::zero(),
+                evict_prob: 0.3,
+                pending_flush_prob: 0.5,
+                seed: 24,
+            },
+            2,
+        );
+        let cfg = QueueConfig {
+            shards: 4,
+            batch: 4,
+            batch_deq: 4,
+            ring_size: 64,
+            ..Default::default()
+        };
+        let q = Arc::new(ShardedQueue::new_perlcrq(&topo, 4, cfg).unwrap());
+        let mut rng = Xoshiro256::seed_from(25);
+        let mut returned: Vec<u64> = Vec::new();
+        for cycle in 0..4u64 {
+            topo.arm_crash_after(2_000 + rng.next_below(2_000));
+            let resize_at = 300 + rng.next_below(20_000);
+            let target_k = [2usize, 6, 8, 3][cycle as usize];
+            let mut hs = Vec::new();
+            for tid in 0..4usize {
+                let q = Arc::clone(&q);
+                let base = cycle * 4_000_000 + tid as u64 * 1_000_000;
+                hs.push(std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    let _ = run_guarded(|| {
+                        for i in 0..30_000u64 {
+                            // Thread 0 triggers an online resize mid-run.
+                            if tid == 0 && i == resize_at {
+                                let _ = q.resize(tid, target_k);
+                            }
+                            q.enqueue(tid, base + i).unwrap();
+                            if let Some(v) = q.dequeue(tid).unwrap() {
+                                mine.push(v);
+                            }
+                        }
+                    });
+                    mine
+                }));
+            }
+            for h in hs {
+                returned.extend(h.join().unwrap());
+            }
+            topo.crash(&mut rng);
+            q.recover(topo.primary());
+            assert!(
+                q.draining_info(0).is_none(),
+                "every recovery must converge to exactly one plan"
+            );
+        }
+        while let Some(v) = q.dequeue(0).unwrap() {
+            returned.push(v);
+        }
+        let n = returned.len();
+        returned.sort_unstable();
+        returned.dedup();
+        assert_eq!(returned.len(), n, "duplicate across resize + crash cycles");
     }
 }

@@ -1,0 +1,335 @@
+//! Versioned shard plans and the persistent plan log — the state behind
+//! elastic re-sharding.
+//!
+//! A **ShardPlan** is one immutable generation of the sharded queue's
+//! stripe set: `K` shards, their pool placement, and the dispatch orders
+//! derived from it, stamped with a monotone **plan epoch**. The queue's
+//! hot paths dispatch over a [`PlanSet`] — the active plan plus, during a
+//! transition, the frozen old plan still being drained.
+//!
+//! ## The persistent state machine
+//!
+//! Re-sharding is committed through a tiny persistent log on the primary
+//! pool (three cache lines):
+//!
+//! ```text
+//! line 0, word 0 : state = (tag << 60) | (slot << 56) | epoch
+//! line 1         : plan record slot 0
+//! line 2         : plan record slot 1
+//! ```
+//!
+//! with `tag ∈ {ACTIVE, FREEZING}`. A record (one line) stores
+//! `(epoch << 8) | K` in word 0 and the per-shard pool placement packed
+//! four bits per shard in words 1..=4 (covers [`MAX_SHARDS`] shards ×
+//! [`MAX_POOLS`] pools). `resize` writes the NEW plan's record into the
+//! spare slot and psyncs it, then commits the transition with a
+//! single-word state write + psync:
+//!
+//! ```text
+//! Active(old) ──record new──▶ Active(old)   [new record durable, uncommitted]
+//!             ──state word──▶ Freezing(old, new)   [psync = commit point]
+//!             ──drain, then state word──▶ Active(new)   [one psync retires]
+//! ```
+//!
+//! Each arrow is one line-atomic durable step, so a crash at any point
+//! lands on exactly one of the three named states and
+//! [`super::ShardedQueue::recover`] can always roll the transition
+//! *forward*: durably `Freezing` means the new record is durable by
+//! construction, so recovery adopts the new plan, drains the frozen
+//! residue single-threadedly, and retires the old plan itself.
+//!
+//! [`MAX_SHARDS`]: crate::queues::MAX_SHARDS
+//! [`MAX_POOLS`]: crate::pmem::MAX_POOLS
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::pmem::{Hotness, PAddr, PmemPool, WORDS_PER_LINE};
+
+/// One generation of the stripe set. Immutable once built; the queue
+/// swaps `Arc<Plan>`s to transition.
+pub(crate) struct Plan<Q> {
+    /// Monotone plan epoch (1 = the construction-time plan).
+    pub epoch: u64,
+    /// The stripe set of this generation.
+    pub shards: Vec<Q>,
+    /// Pool (socket) each shard lives on.
+    pub shard_pool: Vec<usize>,
+    /// Per-home-pool enqueue dispatch order (see `ShardedQueue` docs).
+    pub enq_orders: Vec<Vec<usize>>,
+    /// Per-home-pool dequeue scan order.
+    pub deq_orders: Vec<Vec<usize>>,
+    /// Per-shard "observed linearizably empty" flags — meaningful only
+    /// while this plan is the frozen (draining) side of a transition:
+    /// post-freeze no enqueue can target these shards, so emptiness is
+    /// monotone and a single observation is a permanent witness.
+    pub drained: Vec<AtomicBool>,
+}
+
+impl<Q> Plan<Q> {
+    pub fn new(
+        epoch: u64,
+        shards: Vec<Q>,
+        shard_pool: Vec<usize>,
+        npools: usize,
+        prefer_home: bool,
+    ) -> Plan<Q> {
+        let (enq_orders, deq_orders) = dispatch_orders(&shard_pool, npools, prefer_home);
+        let drained = (0..shards.len()).map(|_| AtomicBool::new(false)).collect();
+        Plan { epoch, shards, shard_pool, enq_orders, deq_orders, drained }
+    }
+
+    /// Have all shards been witnessed empty (drain complete)?
+    pub fn all_drained(&self) -> bool {
+        self.drained.iter().all(|d| d.load(Ordering::Relaxed))
+    }
+}
+
+/// The volatile plan pair the hot paths dispatch over.
+pub(crate) struct PlanSet<Q> {
+    /// Where enqueues stripe (and dequeues fall back to).
+    pub active: Arc<Plan<Q>>,
+    /// The frozen old plan still holding residue — dequeues scan it
+    /// first (drain priority). `None` outside a transition.
+    pub draining: Option<Arc<Plan<Q>>>,
+}
+
+/// Decoded durable plan state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum PlanState {
+    /// One committed plan; its record sits in `slot`.
+    Active { slot: usize, epoch: u64 },
+    /// Mid-transition: the old plan's record in `old_slot`, the new
+    /// plan's (epoch `epoch`) in the other slot.
+    Freezing { old_slot: usize, epoch: u64 },
+}
+
+const TAG_ACTIVE: u64 = 1;
+const TAG_FREEZING: u64 = 2;
+/// Plan epochs must fit the state word (56 bits) and the batch-log entry
+/// packing (24 bits) — the tighter bound wins.
+pub(crate) const MAX_PLAN_EPOCH: u64 = (1 << 24) - 1;
+
+/// The persistent plan log (three lines on the primary pool). All writes
+/// are serialized by the queue's resize lock (single logical writer).
+pub(crate) struct PlanLog {
+    base: PAddr,
+}
+
+impl PlanLog {
+    pub fn alloc(pool: &PmemPool) -> PlanLog {
+        let base = pool.alloc_lines(3);
+        pool.set_hot(base, 3 * WORDS_PER_LINE, Hotness::Private);
+        PlanLog { base }
+    }
+
+    fn slot_addr(&self, slot: usize) -> PAddr {
+        debug_assert!(slot < 2);
+        self.base.add(WORDS_PER_LINE * (1 + slot))
+    }
+
+    /// Write (and request write-back of) a plan record; the caller issues
+    /// the psync that makes it durable before committing any state that
+    /// names it.
+    pub fn write_record(
+        &self,
+        pool: &PmemPool,
+        tid: usize,
+        slot: usize,
+        epoch: u64,
+        shard_pool: &[usize],
+    ) {
+        debug_assert!(epoch <= MAX_PLAN_EPOCH, "plan epoch overflows the log packing");
+        debug_assert!(!shard_pool.is_empty() && shard_pool.len() <= 64);
+        let a = self.slot_addr(slot);
+        pool.store(tid, a, (epoch << 8) | shard_pool.len() as u64);
+        for w in 0..4usize {
+            let mut packed = 0u64;
+            for nib in 0..16usize {
+                let s = w * 16 + nib;
+                if s < shard_pool.len() {
+                    debug_assert!(shard_pool[s] < 16);
+                    packed |= (shard_pool[s] as u64 & 0xF) << (4 * nib);
+                }
+            }
+            pool.store(tid, a.add(1 + w), packed);
+        }
+        pool.pwb(tid, a);
+    }
+
+    /// Decode a record slot: `(epoch, shard_pool)`.
+    pub fn read_record(&self, pool: &PmemPool, tid: usize, slot: usize) -> (u64, Vec<usize>) {
+        let a = self.slot_addr(slot);
+        let h = pool.load(tid, a);
+        let k = (h & 0xFF) as usize;
+        let epoch = h >> 8;
+        let mut shard_pool = Vec::with_capacity(k);
+        for s in 0..k.min(64) {
+            let packed = pool.load(tid, a.add(1 + s / 16));
+            shard_pool.push(((packed >> (4 * (s % 16))) & 0xF) as usize);
+        }
+        (epoch, shard_pool)
+    }
+
+    fn set_state(&self, pool: &PmemPool, tid: usize, tag: u64, slot: usize, epoch: u64) {
+        debug_assert!(epoch <= MAX_PLAN_EPOCH);
+        pool.store(tid, self.base, (tag << 60) | ((slot as u64) << 56) | epoch);
+        pool.pwb(tid, self.base);
+    }
+
+    /// Commit `Active(slot, epoch)` (write-back requested; caller
+    /// psyncs — retirement is exactly one psync).
+    pub fn set_active(&self, pool: &PmemPool, tid: usize, slot: usize, epoch: u64) {
+        self.set_state(pool, tid, TAG_ACTIVE, slot, epoch);
+    }
+
+    /// Commit `Freezing(old_slot, new_epoch)` (caller psyncs — the
+    /// transition's commit point).
+    pub fn set_freezing(&self, pool: &PmemPool, tid: usize, old_slot: usize, new_epoch: u64) {
+        self.set_state(pool, tid, TAG_FREEZING, old_slot, new_epoch);
+    }
+
+    /// Decode the durable state. Panics on an uninitialized/corrupt tag —
+    /// construction durably initializes the log before any operation, so
+    /// a bad tag is a framework bug, not a crash artifact.
+    pub fn read_state(&self, pool: &PmemPool, tid: usize) -> PlanState {
+        let w = pool.load(tid, self.base);
+        let slot = ((w >> 56) & 0xF) as usize;
+        let epoch = w & ((1 << 56) - 1);
+        match w >> 60 {
+            TAG_ACTIVE => PlanState::Active { slot, epoch },
+            TAG_FREEZING => PlanState::Freezing { old_slot: slot, epoch },
+            tag => panic!("plan log uninitialized or corrupt (tag {tag}, word {w:#x})"),
+        }
+    }
+}
+
+/// Counters exported by `ShardedQueue::resize_stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResizeStats {
+    /// Plan flips installed (resize commits observed by the hot paths).
+    pub flips: u64,
+    /// Transitions fully retired (frozen plan drained + one-psync
+    /// retirement), live or by crash recovery.
+    pub retires: u64,
+    /// Items observed in the frozen stripes at flip time, summed over
+    /// flips — the checker's cross-plan overtake allowance derives from
+    /// this (see `verify::resharding_relaxation`).
+    pub residue_total: u64,
+    /// Items in the frozen stripes at the most recent flip.
+    pub last_residue: u64,
+    /// Items actually dequeued out of frozen stripes (drain-priority
+    /// scans plus recovery's forward drain).
+    pub drained_from_frozen: u64,
+}
+
+/// Compute the per-home dispatch orders for a shard→pool map (see the
+/// `Plan::enq_orders`/`Plan::deq_orders` fields).
+pub(crate) fn dispatch_orders(
+    shard_pool: &[usize],
+    npools: usize,
+    prefer_home: bool,
+) -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
+    let all: Vec<usize> = (0..shard_pool.len()).collect();
+    let mut enq = Vec::with_capacity(npools);
+    let mut deq = Vec::with_capacity(npools);
+    for home in 0..npools {
+        let local: Vec<usize> =
+            all.iter().copied().filter(|&s| shard_pool[s] == home).collect();
+        let remote: Vec<usize> =
+            all.iter().copied().filter(|&s| shard_pool[s] != home).collect();
+        if prefer_home && !local.is_empty() {
+            enq.push(local.clone());
+            let mut order = local;
+            order.extend(remote);
+            deq.push(order);
+        } else {
+            enq.push(all.clone());
+            deq.push(all.clone());
+        }
+    }
+    (enq, deq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::{CostModel, PmemConfig};
+
+    fn pool() -> PmemPool {
+        PmemPool::new(PmemConfig {
+            capacity_words: 1 << 14,
+            cost: CostModel::zero(),
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 2,
+        })
+    }
+
+    #[test]
+    fn record_roundtrip_survives_crash() {
+        let p = pool();
+        let log = PlanLog::alloc(&p);
+        let placement: Vec<usize> = (0..23).map(|s| s % 3).collect();
+        log.write_record(&p, 0, 1, 7, &placement);
+        p.psync(0);
+        log.set_active(&p, 0, 1, 7);
+        p.psync(0);
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(3);
+        p.crash(&mut rng);
+        assert_eq!(log.read_state(&p, 0), PlanState::Active { slot: 1, epoch: 7 });
+        let (epoch, sp) = log.read_record(&p, 0, 1);
+        assert_eq!(epoch, 7);
+        assert_eq!(sp, placement);
+    }
+
+    #[test]
+    fn freezing_state_roundtrip() {
+        let p = pool();
+        let log = PlanLog::alloc(&p);
+        log.write_record(&p, 0, 0, 1, &[0, 0]);
+        log.set_active(&p, 0, 0, 1);
+        p.psync(0);
+        log.write_record(&p, 0, 1, 2, &[0, 0, 0, 0]);
+        p.psync(0);
+        log.set_freezing(&p, 0, 0, 2);
+        p.psync(0);
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(4);
+        p.crash(&mut rng);
+        assert_eq!(log.read_state(&p, 0), PlanState::Freezing { old_slot: 0, epoch: 2 });
+        assert_eq!(log.read_record(&p, 0, 0).0, 1, "old record intact");
+        assert_eq!(log.read_record(&p, 0, 1).0, 2, "new record durable before the commit");
+    }
+
+    #[test]
+    fn uncommitted_state_rolls_back() {
+        // The freeze's state word is written but never psynced: the crash
+        // may keep the old state — whatever survives must decode to one
+        // of the two named states, never garbage.
+        let p = pool();
+        let log = PlanLog::alloc(&p);
+        log.write_record(&p, 0, 0, 1, &[0]);
+        log.set_active(&p, 0, 0, 1);
+        p.psync(0);
+        log.write_record(&p, 0, 1, 2, &[0, 0]);
+        log.set_freezing(&p, 0, 0, 2); // pwb queued, no psync
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(5);
+        p.crash(&mut rng);
+        match log.read_state(&p, 0) {
+            PlanState::Active { slot: 0, epoch: 1 } => {}
+            PlanState::Freezing { old_slot: 0, epoch: 2 } => {}
+            other => panic!("decoded impossible state {other:?}"),
+        }
+    }
+
+    #[test]
+    fn max_shards_pack_into_record() {
+        let p = pool();
+        let log = PlanLog::alloc(&p);
+        let placement: Vec<usize> = (0..64).map(|s| s % 16).collect();
+        log.write_record(&p, 0, 0, MAX_PLAN_EPOCH, &placement);
+        let (epoch, sp) = log.read_record(&p, 0, 0);
+        assert_eq!(epoch, MAX_PLAN_EPOCH);
+        assert_eq!(sp, placement);
+    }
+}

@@ -120,6 +120,25 @@ pub fn shard_relaxation(nthreads: usize, shards: usize, batch: usize) -> usize {
     nthreads * shards.max(1) * batch.max(1) * 4 + 64
 }
 
+/// Overtake bound for a history that crossed one or more **re-sharding
+/// boundaries** (`ShardedQueue::resize`): the steady-state bound at the
+/// largest shard count any live plan had, plus a cross-plan allowance of
+/// the frozen-shard residue. During a transition the old plan's residue
+/// is strictly older than every new-plan item, and although drain
+/// priority delivers it first, batching windows and crash reconciliation
+/// (which re-inserts frozen-epoch positions at active-plan tails) can
+/// displace a dequeue past at most `residue` such items per flip —
+/// `residue` summed over flips (`ResizeStats::residue_total`) bounds the
+/// whole run.
+pub fn resharding_relaxation(
+    nthreads: usize,
+    max_shards: usize,
+    batch: usize,
+    residue_total: u64,
+) -> usize {
+    shard_relaxation(nthreads, max_shards, batch) + residue_total as usize
+}
+
 /// The relaxation policy for a registry algorithm: sharded algorithms are
 /// k-relaxed FIFO (bounded shard skew), everything else is checked
 /// strictly (`k = 0` is the exact check). The single definition the CLI,
@@ -286,28 +305,41 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
     let mut enq: HashMap<u64, OpSpan> = HashMap::new();
     // value -> (tid, epoch) of its completed enqueue (trailing-loss groups).
     let mut enq_meta: HashMap<u64, (usize, u64)> = HashMap::new();
-    // tid -> FIFO of open dequeue invokes `(seq, epoch)`. A thread may
-    // hold SEVERAL open dequeues at once (the async API's future window);
-    // responses on a thread arrive in submission order (futures are
-    // awaited oldest-first), so pairing pops the front. Sync histories
-    // (one open op per thread) behave exactly as before.
-    let mut open_deq: HashMap<usize, VecDeque<(u64, u64)>> = HashMap::new();
+    // tid -> FIFO of open dequeue invokes `(seq, epoch, executed)`. A
+    // thread may hold SEVERAL open dequeues at once (the async API's
+    // future window); responses on a thread arrive in submission order
+    // (futures are awaited oldest-first), so pairing pops the front. Sync
+    // histories (one open op per thread) behave exactly as before.
+    //
+    // When the history carries `DeqExecuted` markers (async harnesses
+    // record one when the combiner actually runs a dequeue against the
+    // queue), only EXECUTED open invokes can have consumed a value — the
+    // V2 pending budget counts those alone, i.e. exactly the combiner's
+    // crash-in-flight dequeues instead of the whole future window.
+    // Marker-free histories keep the conservative every-open-invoke
+    // budget.
+    let exec_markers =
+        h.events.iter().any(|e| matches!(e.kind, EventKind::DeqExecuted));
+    let mut open_deq: HashMap<usize, VecDeque<(u64, u64, bool)>> = HashMap::new();
     // Pop the pairing invoke for a response on `tid` at `epoch`: invokes
     // left open by an earlier (crashed) epoch can never respond — count
-    // them as pending and skip past.
+    // them as pending (budget-eligible ones only) and skip past.
     fn pair_deq(
-        open: &mut HashMap<usize, VecDeque<(u64, u64)>>,
+        open: &mut HashMap<usize, VecDeque<(u64, u64, bool)>>,
         pending: &mut usize,
+        exec_markers: bool,
         tid: usize,
         epoch: u64,
         fallback: u64,
     ) -> u64 {
         let q = open.entry(tid).or_default();
-        while q.front().is_some_and(|&(_, ep)| ep < epoch) {
-            q.pop_front();
-            *pending += 1;
+        while q.front().is_some_and(|&(_, ep, _)| ep < epoch) {
+            let (_, _, executed) = q.pop_front().expect("front checked");
+            if executed || !exec_markers {
+                *pending += 1;
+            }
         }
-        q.pop_front().map(|(s, _)| s).unwrap_or(fallback)
+        q.pop_front().map(|(s, _, _)| s).unwrap_or(fallback)
     }
     let mut deq: HashMap<u64, OpSpan> = HashMap::new(); // value -> span
     // value -> (tid, epoch, response seq) of its FIRST dequeue
@@ -340,11 +372,36 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
                 // Dequeues left open at a crash (or forever) are counted
                 // as pending when a later-epoch response skips past them
                 // (`pair_deq`) or at end of history below.
-                open_deq.entry(e.tid).or_default().push_back((e.seq, e.epoch));
+                open_deq.entry(e.tid).or_default().push_back((e.seq, e.epoch, false));
+            }
+            EventKind::DeqExecuted => {
+                // Mark the oldest unexecuted open invoke of this thread
+                // IN THE MARKER'S EPOCH: it has touched the queue and may
+                // have consumed a value. The epoch filter matters: a
+                // crashed epoch can leave never-executed invokes open
+                // (ring-drained, failed futures), and a later epoch's
+                // marker must not land on one of those — that would both
+                // inflate the pending budget with provably-never-executed
+                // ops and starve the mark the actually-executing invoke
+                // needs.
+                if let Some(entry) = open_deq
+                    .entry(e.tid)
+                    .or_default()
+                    .iter_mut()
+                    .find(|en| !en.2 && en.1 == e.epoch)
+                {
+                    entry.2 = true;
+                }
             }
             EventKind::DeqOk { value } => {
-                let invoke =
-                    pair_deq(&mut open_deq, &mut report.pending_deqs, e.tid, e.epoch, e.seq);
+                let invoke = pair_deq(
+                    &mut open_deq,
+                    &mut report.pending_deqs,
+                    exec_markers,
+                    e.tid,
+                    e.epoch,
+                    e.seq,
+                );
                 if opts.trailing_redelivery_per_thread > 0 {
                     // Only the redelivery allowance reads these groups;
                     // strict checks skip the bookkeeping.
@@ -364,16 +421,28 @@ pub fn check_with(h: &History, opts: &CheckOptions) -> CheckReport {
                 report.deq_values += 1;
             }
             EventKind::DeqEmpty => {
-                let invoke =
-                    pair_deq(&mut open_deq, &mut report.pending_deqs, e.tid, e.epoch, e.seq);
+                let invoke = pair_deq(
+                    &mut open_deq,
+                    &mut report.pending_deqs,
+                    exec_markers,
+                    e.tid,
+                    e.epoch,
+                    e.seq,
+                );
                 empties.push(OpSpan { invoke, response: Some(e.seq) });
                 report.deq_empties += 1;
             }
         }
     }
     report.drained = h.final_drain.len();
-    // Dequeues still open at the end of the history also count as pending.
-    report.pending_deqs += open_deq.values().map(|q| q.len()).sum::<usize>();
+    // Dequeues still open at the end of the history also count as pending
+    // (with markers present: only the executed ones — the rest provably
+    // never touched the queue).
+    report.pending_deqs += open_deq
+        .values()
+        .flatten()
+        .filter(|&&(_, _, executed)| executed || !exec_markers)
+        .count();
 
     // --- V1/V5 for the final drain ---
     let mut drained: HashMap<u64, ()> = HashMap::new();
@@ -683,6 +752,72 @@ mod tests {
         assert!(r.ok(), "{:?}", r.violations);
         assert_eq!(r.pending_deqs, 1);
         assert_eq!(r.absorbed_losses, 1, "value 5 absorbed by the crashed dequeue");
+    }
+
+    #[test]
+    fn executed_markers_tighten_the_pending_budget() {
+        // Two completed enqueues vanish; three dequeues were open at the
+        // crash but only ONE ever executed against the queue. A
+        // marker-free history must absorb both losses (every open invoke
+        // may have consumed); a marker-carrying history may absorb only
+        // one — the second loss is real.
+        let base = vec![
+            ev(0, 0, K::EnqInvoke { value: 1 }),
+            ev(1, 0, K::EnqOk { value: 1 }),
+            ev(2, 0, K::EnqInvoke { value: 2 }),
+            ev(3, 0, K::EnqOk { value: 2 }),
+            ev(4, 1, K::DeqInvoke),
+            ev(5, 1, K::DeqInvoke),
+            ev(6, 1, K::DeqInvoke),
+        ];
+        let r = check(&hist(base.clone(), vec![]), 10);
+        assert!(r.ok(), "{:?}", r.violations);
+        assert_eq!(r.pending_deqs, 3, "marker-free: every open invoke is budget");
+        let mut marked = base;
+        marked.push(ev(7, 1, K::DeqExecuted));
+        let r = check(&hist(marked, vec![]), 10);
+        assert_eq!(r.pending_deqs, 1, "markers: only executed invokes are budget");
+        assert_eq!(r.absorbed_losses, 1);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert!(matches!(r.violations[0], Violation::Lost { .. }));
+    }
+
+    #[test]
+    fn executed_markers_bind_to_their_own_epoch() {
+        // Epoch 0 crashed with two never-executed open invokes (ring-
+        // drained futures record no response). Epoch 1's marker must mark
+        // the epoch-1 invoke — not a stale epoch-0 one — so the pending
+        // budget stays exactly the executed-unresponded count (1), not 2.
+        fn eve(seq: u64, tid: usize, epoch: u64, kind: K) -> Event {
+            Event { seq, tid, epoch, kind }
+        }
+        let h = hist(
+            vec![
+                eve(0, 0, 0, K::EnqInvoke { value: 1 }),
+                eve(1, 0, 0, K::EnqOk { value: 1 }),
+                eve(2, 1, 0, K::DeqInvoke), // never executed (crashed in ring)
+                eve(3, 1, 0, K::DeqInvoke), // never executed
+                eve(4, 1, 1, K::DeqInvoke),
+                eve(5, 1, 1, K::DeqExecuted), // must mark seq-4, not seq-2
+            ],
+            vec![],
+        );
+        let r = check(&h, 10);
+        assert_eq!(
+            r.pending_deqs, 1,
+            "only the epoch-1 executed invoke may enter the budget"
+        );
+        assert_eq!(r.absorbed_losses, 1, "value 1 absorbed by the executed in-flight deq");
+        assert!(r.ok(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn resharding_relaxation_adds_residue() {
+        assert_eq!(
+            resharding_relaxation(4, 8, 2, 100),
+            shard_relaxation(4, 8, 2) + 100
+        );
+        assert_eq!(resharding_relaxation(4, 8, 2, 0), shard_relaxation(4, 8, 2));
     }
 
     #[test]

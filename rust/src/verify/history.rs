@@ -9,6 +9,14 @@ pub enum EventKind {
     EnqInvoke { value: u64 },
     EnqOk { value: u64 },
     DeqInvoke,
+    /// Async-boundary marker: the oldest open dequeue of this thread has
+    /// EXECUTED against the queue (it may have consumed an item) but has
+    /// not yet reached its durability point. Histories carrying these
+    /// markers let the checker's V2 loss budget count only
+    /// executed-but-unresponded dequeues instead of every open invoke —
+    /// on async histories the latter scales with the future window while
+    /// the former is exactly the combiner's crash-in-flight count.
+    DeqExecuted,
     DeqOk { value: u64 },
     DeqEmpty,
 }

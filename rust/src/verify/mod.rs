@@ -42,6 +42,7 @@ pub mod proptest;
 
 pub use checker::{
     calibrate_relaxation, check, check_relaxed, check_with, overtake_stats, relaxation_for,
-    shard_relaxation, CheckOptions, CheckReport, OvertakeStats, Violation,
+    resharding_relaxation, shard_relaxation, CheckOptions, CheckReport, OvertakeStats,
+    Violation,
 };
 pub use history::{Event, EventKind, History, Recorder};

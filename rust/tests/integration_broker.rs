@@ -162,6 +162,7 @@ fn async_service_with_crashes_and_leases_exactly_once() {
             use_async: true,
             acfg,
             lease_ms: 50,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -169,6 +170,56 @@ fn async_service_with_crashes_and_leases_exactly_once() {
     assert_eq!(rep.done, rep.submitted, "{rep:?}");
     assert_eq!(rep.pending_after, 0);
     assert_eq!(broker.reconcile_report(0).mismatches(), 0);
+}
+
+#[test]
+fn lease_starts_at_async_resolution_not_resolve_take() {
+    // The lease-at-resolution satellite: a worker awaits `take_async` to
+    // RESOLUTION (consumption durable) and dies before `resolve_take`.
+    // Pre-fix this stranded the job (durably consumed, unleased,
+    // PENDING) until a crash recovery; now the combiner starts the lease
+    // at the durability point, so `reap_expired` redelivers it.
+    let topo = Topology::new(
+        PmemConfig {
+            capacity_words: 1 << 21,
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            seed: 5,
+            ..Default::default()
+        },
+        1,
+    );
+    let broker = Arc::new(
+        Broker::new_sharded(
+            &topo,
+            4 + 1,
+            1 << 12,
+            QueueConfig { shards: 2, batch: 2, batch_deq: 2, ring_size: 256, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    broker.set_lease_ms(1);
+    let aq = broker.async_layer(AsyncCfg { flush_us: 100, depth: 4, flushers: 1 }).unwrap();
+    let fl = aq.spawn_flusher(4);
+    let (_id, f) = broker.submit_async(0, b"orphan", &aq).unwrap();
+    f.wait().unwrap();
+    // "Worker": awaits the take future, then dies silently — NO
+    // resolve_take, no ack.
+    let handle = broker.take_async(&aq).wait().unwrap().expect("durably taken");
+    assert_eq!(
+        broker.leases_outstanding(),
+        1,
+        "the lease must exist the moment the take future resolves"
+    );
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    assert_eq!(broker.reap_expired(1), 1, "expired at-resolution lease must redeliver");
+    let (jid, payload) = broker.take(1).unwrap().expect("redelivered job");
+    assert_eq!(&payload, b"orphan");
+    assert!(broker.complete(1, jid).unwrap());
+    fl.stop();
+    assert_eq!(broker.audit(0).done, 1);
+    assert_eq!(broker.reap_expired(1), 0, "completed job must not be reaped again");
+    let _ = handle; // the original taker never resolved it — by design
 }
 
 #[test]

@@ -193,6 +193,7 @@ fn async_histories_check_clean_with_zero_allowances() {
         let (topo, q) = mk(s, 0.3, 0.5, 200 + si as u64);
         let mut rng = Xoshiro256::seed_from(17 + si as u64);
         let mut logs = Vec::new();
+        let mut inflight_budget = 0u64;
         let cycles = 3u64;
         for cycle in 0..cycles {
             topo.arm_crash_after(2_500 + rng.next_below(4_000));
@@ -208,6 +209,7 @@ fn async_histories_check_clean_with_zero_allowances() {
             };
             let r = run_async_workload(&topo, &q, &rc);
             logs.extend(r.logs);
+            inflight_budget += r.stats.crash_inflight_deqs;
             topo.crash(&mut rng);
             q.recover(topo.primary());
         }
@@ -250,5 +252,16 @@ fn async_histories_check_clean_with_zero_allowances() {
         assert!(rep.enq_completed > 0, "scenario {si}: degenerate history");
         assert_eq!(rep.absorbed_trailing, 0);
         assert_eq!(rep.absorbed_redelivered, 0);
+        // The executed-vs-submitted tightening: recorded async histories
+        // carry `DeqExecuted` markers, so the checker's V2 loss budget is
+        // exactly the combiner's crash-in-flight dequeues — it must not
+        // scale with the (much larger) open future window.
+        assert!(
+            rep.pending_deqs as u64 <= inflight_budget,
+            "scenario {si}: checker pending budget {} exceeds the combiner's \
+             crash-in-flight count {} — the DeqExecuted markers are not tightening it",
+            rep.pending_deqs,
+            inflight_budget
+        );
     }
 }

@@ -1,0 +1,241 @@
+//! Property tests for elastic re-sharding crash recovery: crashes are
+//! driven into every phase of the `Active → Freezing → Active` state
+//! machine (staging psync / freeze commit / partial residue drain /
+//! retirement) by sweeping the armed step countdown across the whole
+//! transition, plus randomized multi-cycle runs. After every crash,
+//! recovery must land on **exactly one plan** with zero lost or
+//! duplicated items beyond the documented allowances (trailing windows
+//! for batched modes; none at all for per-op modes).
+
+use std::sync::Arc;
+
+use persiq::pmem::crash::{install_quiet_crash_hook, run_guarded};
+use persiq::pmem::{CostModel, PmemConfig, Topology};
+use persiq::queues::sharded::ShardedQueue;
+use persiq::queues::{ConcurrentQueue, PersistentQueue, QueueConfig};
+use persiq::util::rng::Xoshiro256;
+
+fn mk(
+    pools: usize,
+    shards: usize,
+    batch: usize,
+    batch_deq: usize,
+    pending: f64,
+    evict: f64,
+    seed: u64,
+) -> (Topology, Arc<ShardedQueue>) {
+    mk_cap(pools, shards, batch, batch_deq, pending, evict, seed, 1 << 22)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn mk_cap(
+    pools: usize,
+    shards: usize,
+    batch: usize,
+    batch_deq: usize,
+    pending: f64,
+    evict: f64,
+    seed: u64,
+    capacity_words: usize,
+) -> (Topology, Arc<ShardedQueue>) {
+    let topo = Topology::new(
+        PmemConfig {
+            capacity_words,
+            cost: CostModel::zero(),
+            evict_prob: evict,
+            pending_flush_prob: pending,
+            seed,
+        },
+        pools,
+    );
+    let cfg = QueueConfig { shards, batch, batch_deq, ring_size: 64, ..Default::default() };
+    let q = Arc::new(ShardedQueue::new_perlcrq(&topo, 4, cfg).unwrap());
+    (topo, q)
+}
+
+fn drain(q: &ShardedQueue, tid: usize) -> Vec<u64> {
+    let mut out = Vec::new();
+    while let Ok(Some(v)) = q.dequeue(tid) {
+        out.push(v);
+    }
+    out
+}
+
+/// Sweep the armed crash countdown across the whole resize transition:
+/// every `j` lands the crash at a different internal point (new-stripe
+/// construction, record psync, freeze commit psync, immediate-retire
+/// psync, or none — resize completes and the crash hits afterwards).
+/// Pre-resize items are durably flushed, so recovery must deliver
+/// exactly them — no loss, no duplication, single plan — at every `j`.
+#[test]
+fn crash_swept_through_every_resize_phase() {
+    install_quiet_crash_hook();
+    for (pools, batch, batch_deq) in [(1, 1, 1), (1, 4, 4), (2, 4, 1), (2, 4, 4)] {
+        // Stride 1 over a window comfortably past a full resize's pmem
+        // op count (new_k stripe constructions + 3 log psyncs + hints).
+        // Small arenas: this builds a fresh topology per step.
+        for j in 1..=160u64 {
+            let (topo, q) =
+                mk_cap(pools, 4, batch, batch_deq, 0.5, 0.3, 1000 + j, 1 << 18);
+            for v in 0..24u64 {
+                q.enqueue(0, v).unwrap();
+            }
+            q.flush_all(); // everything durable before the transition
+            topo.arm_crash_after(j);
+            let out = run_guarded(|| {
+                let _ = q.resize(0, 7);
+            });
+            let mut rng = Xoshiro256::seed_from(2000 + j);
+            topo.crash(&mut rng);
+            q.recover(topo.primary());
+            assert!(
+                q.draining_info(0).is_none(),
+                "j={j} b={batch}/{batch_deq} p={pools}: recovery left two plans"
+            );
+            let epoch = q.plan_epoch();
+            assert!(
+                epoch == 1 || epoch == 2,
+                "j={j}: impossible plan epoch {epoch} (crashed={})",
+                out.crashed()
+            );
+            let mut got = drain(&q, 0);
+            let n = got.len();
+            got.sort_unstable();
+            got.dedup();
+            assert_eq!(got.len(), n, "j={j} b={batch}/{batch_deq} p={pools}: duplicates");
+            assert_eq!(
+                got,
+                (0..24).collect::<Vec<u64>>(),
+                "j={j} b={batch}/{batch_deq} p={pools}: durably flushed items lost \
+                 (epoch {epoch})"
+            );
+            // The queue is fully functional on the surviving plan.
+            q.enqueue(1, 999).unwrap();
+            q.flush_all();
+            assert_eq!(q.dequeue(2).unwrap(), Some(999));
+        }
+    }
+}
+
+/// Crash mid-drain: freeze with residue, consume part of it (per-op
+/// durable consumption), crash, recover. Strict mode (`batch_deq = 1`)
+/// allows no redelivery at all: returned + recovered-drain must be
+/// exactly the original multiset.
+#[test]
+fn crash_mid_drain_partial_residue_strict() {
+    install_quiet_crash_hook();
+    for take in [0usize, 3, 9, 15] {
+        let (topo, q) = mk(2, 4, 1, 1, 0.5, 0.3, 77 + take as u64);
+        for v in 0..16u64 {
+            q.enqueue(0, v).unwrap(); // per-op durable (batch = 1)
+        }
+        assert_eq!(q.resize(0, 2), Ok(2));
+        let mut returned = Vec::new();
+        for _ in 0..take {
+            returned.push(q.dequeue(1).unwrap().expect("residue present"));
+        }
+        let mut rng = Xoshiro256::seed_from(3 + take as u64);
+        topo.crash(&mut rng);
+        q.recover(topo.primary());
+        assert!(q.draining_info(0).is_none());
+        assert_eq!(q.plan_epoch(), 2);
+        returned.extend(drain(&q, 0));
+        let n = returned.len();
+        returned.sort_unstable();
+        returned.dedup();
+        assert_eq!(returned.len(), n, "take={take}: strict mode must never redeliver");
+        assert_eq!(returned, (0..16).collect::<Vec<u64>>(), "take={take}: items lost");
+    }
+}
+
+/// Randomized end-to-end: concurrent producers/consumers, a resize per
+/// cycle at a random point (grow and shrink), crashes landing anywhere —
+/// including inside the resize call itself — batched both sides. Across
+/// all cycles nothing may ever be delivered twice (the trailing
+/// redelivery allowance is crash-gated and per-value-chained; the
+/// harness's unique values make any duplicate a hard failure here
+/// because each cycle re-verifies convergence before continuing).
+#[test]
+fn randomized_resize_crash_cycles_never_duplicate() {
+    install_quiet_crash_hook();
+    for seed in [5u64, 6, 7] {
+        let (topo, q) = mk(2, 4, 4, 4, 0.5, 0.3, seed);
+        let mut rng = Xoshiro256::seed_from(seed * 31);
+        let mut returned: Vec<u64> = Vec::new();
+        for cycle in 0..3u64 {
+            topo.arm_crash_after(1_500 + rng.next_below(2_500));
+            let resize_at = rng.next_below(20_000);
+            let target_k = [7usize, 2, 5][cycle as usize];
+            let mut hs = Vec::new();
+            for tid in 0..4usize {
+                let q = Arc::clone(&q);
+                let base = (seed * 10 + cycle) * 4_000_000 + tid as u64 * 1_000_000;
+                hs.push(std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    let _ = run_guarded(|| {
+                        for i in 0..25_000u64 {
+                            if tid == 0 && i == resize_at {
+                                let _ = q.resize(tid, target_k);
+                            }
+                            q.enqueue(tid, base + i).unwrap();
+                            if let Some(v) = q.dequeue(tid).unwrap() {
+                                mine.push(v);
+                            }
+                        }
+                    });
+                    mine
+                }));
+            }
+            for h in hs {
+                returned.extend(h.join().unwrap());
+            }
+            topo.crash(&mut rng);
+            q.recover(topo.primary());
+            assert!(
+                q.draining_info(0).is_none(),
+                "seed {seed} cycle {cycle}: recovery left two plans"
+            );
+        }
+        returned.extend(drain(&q, 0));
+        let n = returned.len();
+        returned.sort_unstable();
+        returned.dedup();
+        assert_eq!(
+            returned.len(),
+            n,
+            "seed {seed}: duplicate delivery across resize crash cycles"
+        );
+    }
+}
+
+/// Back-to-back resizes with a crash between them: the plan log's two
+/// record slots alternate; epochs stay monotone and coherent.
+#[test]
+fn consecutive_resizes_across_crashes_keep_log_coherent() {
+    install_quiet_crash_hook();
+    let (topo, q) = mk(1, 2, 1, 1, 0.5, 0.3, 9);
+    let mut rng = Xoshiro256::seed_from(10);
+    let mut expect_epoch = 1;
+    for (i, k) in [4usize, 3, 8, 2].iter().enumerate() {
+        for v in 0..8u64 {
+            q.enqueue(0, 100 * i as u64 + v).unwrap();
+        }
+        assert_eq!(q.resize(0, *k), Ok(expect_epoch + 1));
+        expect_epoch += 1;
+        topo.crash(&mut rng);
+        q.recover(topo.primary());
+        assert_eq!(q.plan_epoch(), expect_epoch, "epochs must stay monotone");
+        assert_eq!(q.shard_count(), *k);
+        assert!(q.draining_info(0).is_none());
+        let mut got = drain(&q, 1);
+        let n = got.len();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), n, "resize {i}: duplicates");
+        assert_eq!(
+            got,
+            (0..8).map(|v| 100 * i as u64 + v).collect::<Vec<u64>>(),
+            "resize {i}: per-op durable items lost"
+        );
+    }
+}
