@@ -1,0 +1,108 @@
+//! Observability overhead — the `persiq::obs` acceptance gate: with the
+//! metrics registry enabled (counters on, tracing off) the fig7
+//! steady-state configuration must stay within 5% of the throughput it
+//! reaches with the registry disabled.
+//!
+//! Samples are interleaved (off, on, off, on, ...) after a warmup round
+//! so drift in the host affects both series equally, and the gate
+//! compares medians. `PERSIQ_OBS_MAX_OVERHEAD` overrides the 5% bound;
+//! `PERSIQ_BENCH_REPEATS` the sample count per series.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use persiq::harness::bench::{bench_ops, Suite};
+use persiq::harness::runner::{run_workload, RunConfig};
+use persiq::harness::Workload;
+use persiq::obs;
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::queues::{by_name, QueueConfig};
+
+/// Fig7 steady-state point (sharded-perlcrq, S = B = K = 8), wall-clock
+/// Mops/s. `common::tput_point` reports simulated throughput, which is
+/// blind to registry cost by construction — overhead only shows on the
+/// wall clock.
+fn wall_point(nthreads: usize, ops: u64, seed: u64) -> f64 {
+    let qcfg = QueueConfig { shards: 8, batch: 8, batch_deq: 8, ..Default::default() };
+    let c = common::ctx_with(nthreads, qcfg);
+    let q = by_name("sharded-perlcrq").unwrap()(&c);
+    let r = run_workload(
+        &c.topo,
+        &q,
+        &RunConfig { nthreads, total_ops: ops, workload: Workload::Pairs, seed, ..Default::default() },
+    );
+    r.wall_mops
+}
+
+fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    install_quiet_crash_hook();
+    let mut suite = Suite::new(
+        "obs_overhead",
+        "obs registry overhead: fig7 steady state, enabled vs disabled",
+    );
+    let ops = bench_ops();
+    let nthreads: usize = std::env::var("PERSIQ_THREADS")
+        .ok()
+        .and_then(|s| s.split(',').next().and_then(|p| p.trim().parse().ok()))
+        .unwrap_or(4);
+    let rounds = suite.repeats.max(3);
+
+    // Warmup (both modes touch their code paths once, uncounted).
+    obs::set_enabled(false);
+    wall_point(nthreads, ops, 7);
+    obs::set_enabled(true);
+    wall_point(nthreads, ops, 7);
+
+    // The enabled series also consumes the registry as a reporter would:
+    // a windowed snapshot delta across its rounds.
+    let snap0 = obs::registry().snapshot();
+
+    let (mut off, mut on) = (Vec::new(), Vec::new());
+    for round in 0..rounds {
+        let seed = 100 + round as u64;
+        obs::set_enabled(false);
+        off.push(wall_point(nthreads, ops, seed));
+        obs::set_enabled(true);
+        on.push(wall_point(nthreads, ops, seed));
+    }
+
+    let delta = obs::registry().snapshot().delta(&snap0);
+    let samples: usize = delta.families.iter().map(|f| f.samples.len() + f.hists.len()).sum();
+    println!(
+        "[registry window: {} families, {} samples across the enabled rounds]",
+        delta.families.len(),
+        samples
+    );
+
+    suite.repeats = rounds;
+    let mut it = off.iter();
+    suite.measure("obs-off", nthreads as f64, || *it.next().unwrap());
+    let mut it = on.iter();
+    suite.measure("obs-on", nthreads as f64, || *it.next().unwrap());
+    suite.finish()?;
+
+    let (m_off, m_on) = (median(&off), median(&on));
+    let overhead = 1.0 - m_on / m_off;
+    let max_overhead: f64 = std::env::var("PERSIQ_OBS_MAX_OVERHEAD")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05);
+    println!(
+        "median wall Mops: off={m_off:.3} on={m_on:.3} -> overhead {:.2}% (bound {:.0}%)",
+        overhead * 100.0,
+        max_overhead * 100.0
+    );
+    anyhow::ensure!(
+        overhead <= max_overhead,
+        "obs registry overhead {:.2}% exceeds the {:.0}% bound",
+        overhead * 100.0,
+        max_overhead * 100.0
+    );
+    Ok(())
+}

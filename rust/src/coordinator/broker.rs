@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::obs::{self, ObsSite};
 use crate::pmem::{GAddr, PmemPool, Topology, WORDS_PER_LINE};
 use crate::queues::asyncq::{AsyncCfg, AsyncQueue, DeqFuture, EnqFuture, ExecFuture};
 use crate::queues::perlcrq::PerLcrq;
@@ -364,6 +365,8 @@ impl Broker {
         let t = &self.topo;
         let won = t.cas(tid, job.0.add(0), ST_PENDING, ST_DONE);
         if won {
+            // The DONE flush is acknowledgement traffic, not op cost.
+            let _site = obs::enter_site(ObsSite::BrokerAck);
             t.pwb(tid, job.0);
             t.psync_pool(tid, job.0.pool as usize);
         }
@@ -510,6 +513,18 @@ impl Broker {
             // Flush the re-enqueues if the work queue batches (detach is
             // the worker-safe flush entry point).
             self.queue.detach(tid);
+            obs::registry()
+                .counter(
+                    "persiq_broker_leases_reaped_total",
+                    "Expired leases whose PENDING job was re-enqueued",
+                )
+                .add(tid, requeued as u64);
+            obs::trace::event(
+                tid,
+                self.topo.vtime(tid),
+                "lease_reap",
+                format_args!("\"requeued\":{requeued}"),
+            );
         }
         requeued
     }
@@ -542,6 +557,11 @@ impl Broker {
     /// and re-insert every logged PENDING job whose handle was missing —
     /// walking each thread's submission log on its home pool.
     pub fn recover(&self) {
+        // Every psync below — queue recovery, the drain, the re-enqueue
+        // backlog and its flushes — is Recovery traffic in the site
+        // ledger (batched flushes defer to this ambient scope).
+        let _site = obs::enter_site(ObsSite::Recovery);
+        let t0 = self.topo.vtime(0);
         // Leases are volatile crash-free-failure state: after a real
         // crash every in-flight job is redelivered by the reconciliation
         // below, so stale leases must not additionally re-enqueue them.
@@ -588,6 +608,13 @@ impl Broker {
         // Flush batched re-enqueues on every slot used (no-op for per-op
         // queues).
         self.queue.quiesce();
+        obs::trace::span(
+            0,
+            t0,
+            self.topo.vtime(0),
+            "broker_recover",
+            format_args!("\"drained\":{}", queued.len()),
+        );
     }
 
     /// Flush any thread-buffered queue state (batched handle enqueues).
@@ -689,6 +716,51 @@ impl Broker {
             }
         }
         rep
+    }
+
+    /// Registry-style metric families: per-state job counts from the
+    /// durable submission logs, lease occupancy, and — on a sharded work
+    /// queue — a queue-depth estimate plus the queue's own resize/plan
+    /// families. Collector-priced (walks the submission logs); call from
+    /// exposition paths, not per-op.
+    pub fn metric_families(&self, tid: usize) -> Vec<obs::Family> {
+        use obs::{Family, Kind, Sample};
+        let a = self.audit(tid);
+        let state_sample = |s: &str, v: usize| Sample::labelled("state", s, v as f64);
+        let mut out = vec![
+            Family::scalar(
+                "persiq_broker_jobs",
+                "Durably submitted jobs by record state",
+                Kind::Gauge,
+                vec![
+                    state_sample("done", a.done),
+                    state_sample("pending", a.pending),
+                    state_sample("unwritten", a.unwritten),
+                ],
+            ),
+            Family::scalar(
+                "persiq_broker_submitted_total",
+                "Jobs appended to the submission logs",
+                Kind::Counter,
+                vec![Sample::plain(a.submitted as f64)],
+            ),
+            Family::scalar(
+                "persiq_broker_leases_outstanding",
+                "Taken-but-unresolved jobs currently under lease",
+                Kind::Gauge,
+                vec![Sample::plain(self.leases_outstanding() as f64)],
+            ),
+        ];
+        if let Some(sharded) = &self.sharded {
+            out.push(Family::scalar(
+                "persiq_broker_queue_depth",
+                "Handles on the work queue (len-hint estimate, incl. draining residue)",
+                Kind::Gauge,
+                vec![Sample::plain(sharded.depth_hint(tid) as f64)],
+            ));
+            out.extend(sharded.metric_families(tid));
+        }
+        out
     }
 
     /// The underlying queue (observability).

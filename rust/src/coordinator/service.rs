@@ -7,8 +7,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::obs;
 use crate::pmem::{run_guarded, Topology};
-use crate::queues::asyncq::{AsyncCfg, ExecFuture};
+use crate::queues::asyncq::{AsyncCfg, AsyncQueue, ExecFuture};
 use crate::util::rng::Xoshiro256;
 use crate::util::time::Stopwatch;
 
@@ -48,6 +49,11 @@ pub struct ServiceConfig {
     /// `resize_to > 0`); callers must size the broker's `nthreads` past
     /// it.
     pub admin_tid: usize,
+    /// Print a Prometheus-text metrics dump every N cycles (0 = off):
+    /// `persiq serve --metrics-every N`. Emission happens at cycle
+    /// boundaries, after every worker joined, so the durable-record
+    /// reads race nothing.
+    pub metrics_every: usize,
 }
 
 impl Default for ServiceConfig {
@@ -64,8 +70,24 @@ impl Default for ServiceConfig {
             lease_ms: 0,
             resize_to: 0,
             admin_tid: 0,
+            metrics_every: 0,
         }
     }
+}
+
+/// One Prometheus-text dump of every metrics surface the service stack
+/// exposes — global registry, pmem topology, broker (+ its sharded
+/// queue), the async layer when live, and the psync-by-site ledger.
+fn emit_metrics(topo: &Topology, broker: &Broker, aq: Option<&AsyncQueue>, cycle: usize) {
+    let mut fams = obs::registry().families();
+    fams.extend(topo.metric_families());
+    fams.extend(broker.metric_families(0));
+    if let Some(aq) = aq {
+        fams.extend(aq.metric_families());
+    }
+    fams.extend(obs::ledger_families(&topo.site_ledger()));
+    println!("# persiq serve metrics, cycle {cycle}");
+    print!("{}", obs::render(&fams));
 }
 
 /// Spawn the one-shot resize admin thread (first cycle only): waits a
@@ -222,6 +244,9 @@ pub fn run_service(
         }
         for h in handles {
             h.join().expect("service thread panicked");
+        }
+        if cfg.metrics_every > 0 && (cycle + 1) % cfg.metrics_every == 0 {
+            emit_metrics(topo, broker, None, cycle);
         }
         if crashing {
             topo.crash(&mut rng);
@@ -393,6 +418,9 @@ fn run_service_async(
         // Stop (and on crash: observe) the flusher before cutting the
         // topology — crash() requires all pmem-touching threads unwound.
         flusher.stop();
+        if cfg.metrics_every > 0 && (cycle + 1) % cfg.metrics_every == 0 {
+            emit_metrics(topo, broker, Some(&aq), cycle);
+        }
         if crashing {
             topo.crash(&mut rng);
             broker.recover();

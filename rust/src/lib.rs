@@ -60,6 +60,14 @@
 //!   the end-to-end example application; `submit_async`/`take_async`/
 //!   `ack_async` ride the async completion layer, and per-job leases +
 //!   `reap_expired` redeliver jobs whose worker died without a crash.
+//! * [`obs`] — crate-wide observability: every `pwb`/`psync` is
+//!   attributed to the [`obs::ObsSite`] that issued it (batch seal,
+//!   dequeue flush, resize, plan commit, recovery, broker ack), turning
+//!   the paper's `1/B + 1/K` cost accounting into an asserted
+//!   per-site persistence ledger; plus a per-thread padded metrics
+//!   registry, bounded JSONL event tracing (`--trace`), and
+//!   Prometheus-style exposition (`persiq obs`, `serve
+//!   --metrics-every N`).
 //! * [`util`] — self-contained infrastructure (PRNG, CLI, config, reporters)
 //!   since this build environment is offline.
 //!
@@ -81,6 +89,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod harness;
+pub mod obs;
 pub mod pmem;
 pub mod queues;
 pub mod runtime;

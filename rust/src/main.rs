@@ -19,6 +19,10 @@
 //! persiq serve     --queue sharded --resize 8 --jobs 500
 //! persiq resize    --shards-to 8 --jobs 500  # online grow demo + audit
 //! persiq micro                      # pmem primitive costs
+//! persiq obs                        # metrics dump + psync-by-site ledger
+//! persiq obs       --trace obs.jsonl --batch 8 --shards 4
+//! persiq bench     --algo sharded-perlcrq --trace out.jsonl
+//! persiq serve     --metrics-every 1 --crash-cycles 2
 //! ```
 //!
 //! The algorithm lists, validation and `--algo all` expansion all derive
@@ -35,6 +39,7 @@ use persiq::harness::bench::Suite;
 use persiq::harness::failure::{mean_recovery_secs, mean_recovery_sim_ns};
 use persiq::harness::runner::{drain_all, run_workload};
 use persiq::harness::{run_cycles, CycleConfig, MidHook, RunConfig, Workload};
+use persiq::obs;
 use persiq::pmem::crash::install_quiet_crash_hook;
 use persiq::pmem::{CostModel, MeterMode, PlacementPolicy, PmemPool, MAX_POOLS};
 use persiq::queues::{
@@ -78,6 +83,7 @@ fn run(args: &[String]) -> Result<()> {
         "resize" => cmd_resize(rest),
         "audit" => cmd_audit(rest),
         "micro" => cmd_micro(rest),
+        "obs" => cmd_obs(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -97,7 +103,8 @@ fn usage_text() -> String {
          \x20 serve     persistent task-broker service demo\n\
          \x20 resize    online elastic re-sharding demo (grow/shrink under load)\n\
          \x20 audit     broker SubmitLog <-> queue reconciliation dump\n\
-         \x20 micro     pmem primitive cost microbenchmark\n\n\
+         \x20 micro     pmem primitive cost microbenchmark\n\
+         \x20 obs       observability dump: Prometheus metrics + psync-by-site ledger\n\n\
          Run `persiq <cmd> --help` for options.",
         persiq::VERSION
     )
@@ -218,6 +225,30 @@ impl QueueArgs {
     }
 }
 
+/// Arm the JSONL event trace around `body` when `--trace <path>` was
+/// given (subcommands registering the option); flush the merged,
+/// ts-sorted file afterwards even when `body` errs.
+fn with_trace(a: &Args, body: impl FnOnce() -> Result<()>) -> Result<()> {
+    let armed = a.get("trace").is_some();
+    if let Some(p) = a.get("trace") {
+        obs::trace::start(p);
+    }
+    let res = body();
+    if armed {
+        match obs::trace::stop() {
+            Ok(Some(rep)) => println!(
+                "[trace: {} events -> {} ({} dropped)]",
+                rep.written,
+                rep.path.display(),
+                rep.dropped
+            ),
+            Ok(None) => {}
+            Err(e) => log_warn!("trace flush failed: {e}"),
+        }
+    }
+    res
+}
+
 fn cmd_bench(args: &[String]) -> Result<()> {
     let cmd = Command::new("bench", "throughput benchmark over simulated threads")
         .opt_default(
@@ -234,7 +265,12 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             "drive the sharded queue through the async completion layer \
              (producers overlap persistence; durability-gated futures)",
         )
-        .flag("latency", "also report latency percentiles via the metrics engine");
+        .flag("latency", "also report latency percentiles via the metrics engine")
+        .opt(
+            "trace",
+            "write a JSONL event trace (psyncs by site, batch seals, resize spans, \
+             future lifecycles) to this path",
+        );
     let cmd = QueueArgs::register_resharding(QueueArgs::register_async(QueueArgs::register(cmd)));
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
@@ -248,80 +284,85 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     let want_latency = a.flag("latency");
     log_info!("bench seed = {seed}");
 
-    if a.flag("async") {
-        // The async layer rides the sharded queue's batch logs: --algo is
-        // fixed. Surface ignored flags instead of misattributing numbers.
-        let algo_spec = a.get("algo").unwrap_or("perlcrq");
-        if algo_spec != "perlcrq" && algo_spec != "sharded-perlcrq" {
-            anyhow::bail!("--async benches sharded-perlcrq only (got --algo {algo_spec})");
+    with_trace(&a, || {
+        if a.flag("async") {
+            // The async layer rides the sharded queue's batch logs: --algo
+            // is fixed. Surface ignored flags instead of misattributing
+            // numbers.
+            let algo_spec = a.get("algo").unwrap_or("perlcrq");
+            if algo_spec != "perlcrq" && algo_spec != "sharded-perlcrq" {
+                anyhow::bail!("--async benches sharded-perlcrq only (got --algo {algo_spec})");
+            }
+            if want_latency {
+                log_warn!(
+                    "--latency is ignored with --async (no per-op sampling on the async path)"
+                );
+            }
+            if cfg.resharding.is_some() {
+                anyhow::bail!(
+                    "--resharding-schedule is a sync-bench knob; resize the async path with \
+                     `persiq serve --async --resize <k>`"
+                );
+            }
+            return bench_async(&cfg, &threads, ops, workload, seed);
         }
-        if want_latency {
-            log_warn!("--latency is ignored with --async (no per-op sampling on the async path)");
-        }
-        if cfg.resharding.is_some() {
-            anyhow::bail!(
-                "--resharding-schedule is a sync-bench knob; resize the async path with \
-                 `persiq serve --async --resize <k>`"
-            );
-        }
-        return bench_async(&cfg, &threads, ops, workload, seed);
-    }
 
-    if let Some(sched) = cfg.resharding {
-        let algo_spec = a.get("algo").unwrap_or("perlcrq");
-        if algo_spec != "perlcrq" && algo_spec != "sharded-perlcrq" {
-            anyhow::bail!(
-                "--resharding-schedule resizes sharded-perlcrq only (got --algo {algo_spec})"
-            );
+        if let Some(sched) = cfg.resharding {
+            let algo_spec = a.get("algo").unwrap_or("perlcrq");
+            if algo_spec != "perlcrq" && algo_spec != "sharded-perlcrq" {
+                anyhow::bail!(
+                    "--resharding-schedule resizes sharded-perlcrq only (got --algo {algo_spec})"
+                );
+            }
+            return bench_resharding(&cfg, sched, &threads, ops, workload, seed);
         }
-        return bench_resharding(&cfg, sched, &threads, ops, workload, seed);
-    }
 
-    let engine = if want_latency { Some(MetricsEngine::auto()) } else { None };
-    let mut csv = Csv::new(vec![
-        "algo", "threads", "sim_mops", "wall_mops", "pwbs_per_op", "psyncs_per_op",
-        "remote_per_op", "p50_ns", "p99_ns",
-    ]);
-    for algo in &algos {
-        let ctor = by_name(algo).ok_or_else(|| anyhow::anyhow!("unknown algo {algo}"))?;
-        for &n in &threads {
-            let ctx = queue_ctx(&cfg, n);
-            let q = ctor(&ctx);
-            let rc = RunConfig {
-                nthreads: n,
-                total_ops: ops,
-                workload,
-                seed,
-                sample_every: if want_latency { 16 } else { 0 },
-                ..Default::default()
-            };
-            let r = run_workload(&ctx.topo, &q, &rc);
-            let stats = ctx.topo.stats_total();
-            let (p50, p99) = if let Some(engine) = &engine {
-                let samples: Vec<f64> =
-                    r.latency_samples.iter().flatten().cloned().collect();
-                let m = engine.metrics(&samples)?;
-                (m.p50, m.p99)
-            } else {
-                (0.0, 0.0)
-            };
-            csv.row(vec![
-                algo.clone(),
-                n.to_string(),
-                fnum(r.sim_mops),
-                fnum(r.wall_mops),
-                format!("{:.2}", stats.pwbs as f64 / r.ops_done.max(1) as f64),
-                format!("{:.2}", stats.psyncs as f64 / r.ops_done.max(1) as f64),
-                format!("{:.2}", stats.remote_ops as f64 / r.ops_done.max(1) as f64),
-                fnum(p50),
-                fnum(p99),
-            ]);
+        let engine = if want_latency { Some(MetricsEngine::auto()) } else { None };
+        let mut csv = Csv::new(vec![
+            "algo", "threads", "sim_mops", "wall_mops", "pwbs_per_op", "psyncs_per_op",
+            "remote_per_op", "p50_ns", "p99_ns",
+        ]);
+        for algo in &algos {
+            let ctor = by_name(algo).ok_or_else(|| anyhow::anyhow!("unknown algo {algo}"))?;
+            for &n in &threads {
+                let ctx = queue_ctx(&cfg, n);
+                let q = ctor(&ctx);
+                let rc = RunConfig {
+                    nthreads: n,
+                    total_ops: ops,
+                    workload,
+                    seed,
+                    sample_every: if want_latency { 16 } else { 0 },
+                    ..Default::default()
+                };
+                let r = run_workload(&ctx.topo, &q, &rc);
+                let stats = ctx.topo.stats_total();
+                let (p50, p99) = if let Some(engine) = &engine {
+                    let samples: Vec<f64> =
+                        r.latency_samples.iter().flatten().cloned().collect();
+                    let m = engine.metrics(&samples)?;
+                    (m.p50, m.p99)
+                } else {
+                    (0.0, 0.0)
+                };
+                csv.row(vec![
+                    algo.clone(),
+                    n.to_string(),
+                    fnum(r.sim_mops),
+                    fnum(r.wall_mops),
+                    format!("{:.2}", stats.pwbs as f64 / r.ops_done.max(1) as f64),
+                    format!("{:.2}", stats.psyncs as f64 / r.ops_done.max(1) as f64),
+                    format!("{:.2}", stats.remote_ops as f64 / r.ops_done.max(1) as f64),
+                    fnum(p50),
+                    fnum(p99),
+                ]);
+            }
         }
-    }
-    print!("{}", csv.to_table());
-    csv.save(std::path::Path::new("results/cli_bench.csv"))?;
-    println!("[saved results/cli_bench.csv]");
-    Ok(())
+        print!("{}", csv.to_table());
+        csv.save(std::path::Path::new("results/cli_bench.csv"))?;
+        println!("[saved results/cli_bench.csv]");
+        Ok(())
+    })
 }
 
 /// `bench --async`: producers submit through the completion layer and
@@ -734,6 +775,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "online re-shard the work queue to this stripe count during the first \
              cycle, under live producers/workers (implies --queue sharded)",
         )
+        .opt(
+            "metrics-every",
+            "print a Prometheus-text metrics dump (all families + psync site ledger) \
+             every N cycles (0 = off)",
+        )
         .opt("seed", "RNG seed");
     let cmd = QueueArgs::register_async(QueueArgs::register(cmd));
     let a = cmd.parse(args)?;
@@ -781,6 +827,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         lease_ms: a.get_parse("lease-ms", cfg.lease_ms)?,
         resize_to,
         admin_tid: base_threads,
+        metrics_every: a.get_parse("metrics-every", 0)?,
     };
     let nthreads = base_threads + if resize_to > 0 { 1 } else { 0 };
     let topo = cfg.build_topology();
@@ -1023,6 +1070,10 @@ fn cmd_audit(args: &[String]) -> Result<()> {
         rep.queued_unwritten,
         rep.queued_duplicates
     );
+    println!("  psync/pwb by attribution site:");
+    for line in obs::render_site_ledger(&topo.site_ledger(), 0).lines() {
+        println!("    {line}");
+    }
     anyhow::ensure!(
         rep.mismatches() == 0,
         "SubmitLog <-> queue reconciliation mismatch detected"
@@ -1079,4 +1130,120 @@ fn cmd_micro(args: &[String]) -> Result<()> {
     );
     let _ = CostModel::default();
     Ok(())
+}
+
+/// `persiq obs`: the observability zero-to-aha — drive a short,
+/// deterministic workload across the whole stack (sharded work queue
+/// under a broker, then an async completion-layer burst over the same
+/// queue), and dump every metrics surface: the psync-by-site ledger
+/// table (the paper's `1/B + 1/K` accounting, live) and the combined
+/// Prometheus text of the registry, pmem, sharded, async and broker
+/// families.
+fn cmd_obs(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "obs",
+        "observability dump: run a short workload, print Prometheus metrics + psync site ledger",
+    )
+    .opt_default("producers", "producer (submit) thread slots", "2")
+    .opt_default("jobs", "jobs per producer", "200")
+    .opt_default("consume", "fraction of submitted jobs to take+complete synchronously", "0.75")
+    .opt_default("async-jobs", "jobs to push through the async completion layer", "64")
+    .opt("trace", "also write a JSONL event trace of the run to this path");
+    let cmd = QueueArgs::register_async(QueueArgs::register(cmd));
+    let a = cmd.parse(args)?;
+    let mut cfg = Config::load_default();
+    QueueArgs::apply(&mut cfg, &a)?;
+    let producers = a.get_parse::<usize>("producers", 2)?;
+    let jobs = a.get_parse::<usize>("jobs", 200)?;
+    let consume = a.get_parse::<f64>("consume", 0.75)?.clamp(0.0, 1.0);
+    let async_jobs = a.get_parse::<usize>("async-jobs", 64)?;
+    // Everything below runs on the caller thread except the flusher
+    // workers: tids [0, producers) submit, `consumer` takes/completes,
+    // the flushers own [producers + 1, producers + 1 + flushers).
+    let consumer = producers;
+    let nthreads = producers + 1 + cfg.asyncq.flushers;
+
+    with_trace(&a, || {
+        let topo = cfg.build_topology();
+        let broker = Arc::new(
+            Broker::new_sharded(&topo, nthreads, 1 << 16, cfg.queue.clone())
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
+
+        // Sync phase: submit everything, consume a fraction — populates
+        // the BatchFlush/DeqFlush/BrokerAck ledger rows and the broker's
+        // job-state families.
+        for p in 0..producers {
+            broker.attach_worker(p);
+            for i in 0..jobs {
+                let payload = format!("obs:p{p}:{i}").into_bytes();
+                broker.submit(p, &payload[..payload.len().min(48)])?;
+            }
+            broker.detach_worker(p);
+        }
+        broker.attach_worker(consumer);
+        let target = ((producers * jobs) as f64 * consume) as usize;
+        let mut completed = 0usize;
+        while completed < target {
+            let Some((jid, _)) = broker.take(consumer)? else { break };
+            if broker.complete(consumer, jid)? {
+                completed += 1;
+            }
+        }
+
+        // Async burst: the same queue through the completion layer, so
+        // the async families (ring occupancy, flush latency, resolved
+        // counts) and future-lifecycle trace events are live too.
+        let mut async_fams = Vec::new();
+        if async_jobs > 0 {
+            let aq =
+                broker.async_layer(cfg.asyncq.clone()).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let flusher = aq.spawn_flusher(consumer + 1);
+            let mut submits = Vec::with_capacity(async_jobs);
+            for i in 0..async_jobs {
+                let payload = format!("obs:async:{i}").into_bytes();
+                let (_id, fut) = broker
+                    .submit_async(consumer, &payload[..payload.len().min(48)], &aq)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                submits.push(fut);
+            }
+            for fut in submits {
+                fut.wait().map_err(|e| anyhow::anyhow!("submit future: {e}"))?;
+            }
+            let mut acks = Vec::new();
+            for _ in 0..async_jobs {
+                match broker.take_async(&aq).wait() {
+                    Ok(Some(h)) => {
+                        if let Some((jid, _)) = broker.resolve_take(consumer, h) {
+                            acks.push(broker.ack_async(jid, &aq));
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(e) => anyhow::bail!("take future: {e}"),
+                }
+            }
+            completed += acks.len();
+            for ack in acks {
+                let _ = ack.wait();
+            }
+            async_fams = aq.metric_families();
+            flusher.stop();
+        }
+        broker.quiesce();
+
+        // Exposition: the human ledger table first, then one combined
+        // Prometheus dump (family names are disjoint across layers).
+        let ledger = topo.site_ledger();
+        println!("== psync/pwb by attribution site ==");
+        print!("{}", obs::render_site_ledger(&ledger, completed as u64));
+        println!();
+        println!("== Prometheus metrics ==");
+        let mut fams = obs::registry().families();
+        fams.extend(topo.metric_families());
+        fams.extend(broker.metric_families(consumer));
+        fams.extend(async_fams);
+        fams.extend(obs::ledger_families(&ledger));
+        print!("{}", obs::render(&fams));
+        Ok(())
+    })
 }

@@ -1,0 +1,243 @@
+//! Prometheus-style text exposition and the psync-by-site ledger table.
+//!
+//! [`render`] produces the classic text format (`# HELP` / `# TYPE` /
+//! `name{labels} value`, histograms as `_bucket`/`_sum`/`_count`) from
+//! [`Family`]s — whether they come from the global registry or from a
+//! structure's `metric_families()` collector. [`render_site_ledger`]
+//! prints the per-site persistence ledger as a human table: the view
+//! that makes the paper's `1/B + 1/K` accounting visible at a glance.
+
+use super::metrics::{Family, Kind, Sample};
+use super::site::{SiteLedger, ALL_SITES};
+
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{v:.0}")
+    } else {
+        format!("{v}")
+    }
+}
+
+fn fmt_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+fn fmt_le(bound: f64) -> String {
+    if bound == u64::MAX as f64 || bound.is_infinite() {
+        "+Inf".to_string()
+    } else {
+        fmt_value(bound)
+    }
+}
+
+/// Render families as Prometheus text exposition format.
+pub fn render(families: &[Family]) -> String {
+    let mut out = String::new();
+    for f in families {
+        out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+        out.push_str(&format!("# TYPE {} {}\n", f.name, f.kind.as_str()));
+        match f.kind {
+            Kind::Counter | Kind::Gauge => {
+                for s in &f.samples {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        f.name,
+                        fmt_labels(&s.labels),
+                        fmt_value(s.value)
+                    ));
+                }
+            }
+            Kind::Histogram => {
+                for h in &f.hists {
+                    for (le, cum) in &h.buckets {
+                        let mut labels = h.labels.clone();
+                        labels.push(("le".to_string(), fmt_le(*le)));
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            f.name,
+                            fmt_labels(&labels),
+                            cum
+                        ));
+                    }
+                    let mut inf = h.labels.clone();
+                    inf.push(("le".to_string(), "+Inf".to_string()));
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        f.name,
+                        fmt_labels(&inf),
+                        h.count
+                    ));
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        f.name,
+                        fmt_labels(&h.labels),
+                        h.sum
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        f.name,
+                        fmt_labels(&h.labels),
+                        h.count
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The per-site persistence ledger as Prometheus families
+/// (`persiq_pmem_psyncs_by_site_total` / `persiq_pmem_pwbs_by_site_total`).
+pub fn ledger_families(ledger: &SiteLedger) -> Vec<Family> {
+    let psyncs = ALL_SITES
+        .iter()
+        .map(|s| Sample::labelled("site", s.name(), ledger.psyncs_at(*s) as f64))
+        .collect();
+    let pwbs = ALL_SITES
+        .iter()
+        .map(|s| Sample::labelled("site", s.name(), ledger.pwbs_at(*s) as f64))
+        .collect();
+    vec![
+        Family::scalar(
+            "persiq_pmem_psyncs_by_site_total",
+            "psync instructions by attribution site",
+            Kind::Counter,
+            psyncs,
+        ),
+        Family::scalar(
+            "persiq_pmem_pwbs_by_site_total",
+            "pwb instructions by attribution site",
+            Kind::Counter,
+            pwbs,
+        ),
+    ]
+}
+
+/// Human-readable site-ledger table. `op_pairs` (completed
+/// enqueue+dequeue pairs) adds a psyncs-per-op-pair column when
+/// non-zero — the direct check against the paper's `1/B + 1/K` claim.
+pub fn render_site_ledger(ledger: &SiteLedger, op_pairs: u64) -> String {
+    let mut out = String::new();
+    out.push_str("site         psyncs       pwbs");
+    if op_pairs > 0 {
+        out.push_str("   psyncs/op-pair");
+    }
+    out.push('\n');
+    for s in ALL_SITES {
+        let p = ledger.psyncs_at(s);
+        let w = ledger.pwbs_at(s);
+        if op_pairs > 0 {
+            out.push_str(&format!(
+                "{:<11} {:>7} {:>10}   {:>14.6}\n",
+                s.name(),
+                p,
+                w,
+                p as f64 / op_pairs as f64
+            ));
+        } else {
+            out.push_str(&format!("{:<11} {:>7} {:>10}\n", s.name(), p, w));
+        }
+    }
+    let (tp, tw) = (ledger.total_psyncs(), ledger.total_pwbs());
+    if op_pairs > 0 {
+        out.push_str(&format!(
+            "{:<11} {:>7} {:>10}   {:>14.6}\n",
+            "TOTAL",
+            tp,
+            tw,
+            tp as f64 / op_pairs as f64
+        ));
+    } else {
+        out.push_str(&format!("{:<11} {:>7} {:>10}\n", "TOTAL", tp, tw));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::{HistSnapshot, HistogramData};
+    use crate::obs::site::ObsSite;
+
+    #[test]
+    fn renders_scalar_families() {
+        let fams = vec![
+            Family::scalar(
+                "persiq_ops_total",
+                "total ops",
+                Kind::Counter,
+                vec![Sample::labelled("pool", 0, 42.0), Sample::labelled("pool", 1, 7.0)],
+            ),
+            Family::scalar(
+                "persiq_depth",
+                "queue depth",
+                Kind::Gauge,
+                vec![Sample::plain(3.0)],
+            ),
+        ];
+        let text = render(&fams);
+        assert!(text.contains("# HELP persiq_ops_total total ops"));
+        assert!(text.contains("# TYPE persiq_ops_total counter"));
+        assert!(text.contains("persiq_ops_total{pool=\"0\"} 42"));
+        assert!(text.contains("persiq_ops_total{pool=\"1\"} 7"));
+        assert!(text.contains("# TYPE persiq_depth gauge"));
+        assert!(text.contains("persiq_depth 3"));
+    }
+
+    #[test]
+    fn renders_histograms_with_inf_bucket() {
+        let mut buckets = [0u64; crate::obs::metrics::HIST_BUCKETS];
+        buckets[1] = 2;
+        buckets[3] = 1;
+        let s = HistSnapshot { count: 3, sum: 12, buckets };
+        let fams = vec![Family::histogram(
+            "persiq_lat_ns",
+            "latency",
+            vec![HistogramData::from_snapshot(Vec::new(), &s)],
+        )];
+        let text = render(&fams);
+        assert!(text.contains("# TYPE persiq_lat_ns histogram"));
+        assert!(text.contains("persiq_lat_ns_bucket{le=\"1\"} 2"));
+        assert!(text.contains("persiq_lat_ns_bucket{le=\"7\"} 3"));
+        assert!(text.contains("persiq_lat_ns_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("persiq_lat_ns_sum 12"));
+        assert!(text.contains("persiq_lat_ns_count 3"));
+    }
+
+    #[test]
+    fn ledger_table_and_families() {
+        let mut l = SiteLedger::default();
+        l.psyncs[ObsSite::BatchFlush.index()] = 10;
+        l.psyncs[ObsSite::Op.index()] = 2;
+        l.pwbs[ObsSite::Op.index()] = 100;
+        let table = render_site_ledger(&l, 100);
+        assert!(table.contains("BatchFlush"));
+        assert!(table.contains("psyncs/op-pair"));
+        assert!(table.contains("TOTAL"));
+        let plain = render_site_ledger(&l, 0);
+        assert!(!plain.contains("psyncs/op-pair"));
+        let fams = ledger_families(&l);
+        let text = render(&fams);
+        assert!(text.contains("persiq_pmem_psyncs_by_site_total{site=\"BatchFlush\"} 10"));
+        assert!(text.contains("persiq_pmem_pwbs_by_site_total{site=\"Op\"} 100"));
+    }
+
+    #[test]
+    fn label_escaping() {
+        let fams = vec![Family::scalar(
+            "persiq_esc",
+            "h",
+            Kind::Gauge,
+            vec![Sample::labelled("k", "a\"b\\c", 1.0)],
+        )];
+        let text = render(&fams);
+        assert!(text.contains("persiq_esc{k=\"a\\\"b\\\\c\"} 1"));
+    }
+}

@@ -1,0 +1,604 @@
+//! Process-wide metrics registry: per-thread, cache-line-padded
+//! counter/gauge/histogram cells.
+//!
+//! Hot-path cost is one padded relaxed load+store (the same single-writer
+//! idiom as [`crate::pmem::stats::OpCounters`]) — no lock-prefixed RMW,
+//! no false sharing. Instruments are registered **once** by name
+//! ([`Registry::counter`] et al. return the existing instrument on
+//! re-registration) and read by summing the per-thread cells at snapshot
+//! time. A global kill switch ([`set_enabled`]) turns every instrument
+//! into a no-op so the observability overhead bench can compare
+//! enabled/disabled in one binary.
+//!
+//! Aggregated reads come out as Prometheus-shaped [`Family`]s; a
+//! [`Snapshot`] supports windowed deltas ([`Snapshot::delta`]) so
+//! periodic reporters can print per-interval rates.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crossbeam_utils::CachePadded;
+
+use crate::pmem::MAX_THREADS;
+
+/// Exponential (base-2) histogram bucket count: bucket 0 holds value 0,
+/// bucket `i` holds `[2^(i-1), 2^i)` — 64 buckets cover all of `u64`.
+pub const HIST_BUCKETS: usize = 64;
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Globally enable/disable all registry instruments (counters, gauges,
+/// histograms). Disabled instruments cost one relaxed load + branch.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Are registry instruments currently recording?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// Single-writer bump (one thread per cell): plain load+store avoids the
+// lock-prefixed RMW on the hot path.
+macro_rules! cell_add {
+    ($cell:expr, $n:expr) => {{
+        let c = $cell;
+        let v = c.load(Ordering::Relaxed);
+        c.store(v.wrapping_add($n), Ordering::Relaxed);
+    }};
+}
+
+/// Monotonic counter with one padded cell per thread id.
+pub struct Counter {
+    cells: Box<[CachePadded<AtomicU64>]>,
+}
+
+impl Counter {
+    fn new() -> Self {
+        Self {
+            cells: (0..MAX_THREADS).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+        }
+    }
+
+    /// Add `n` on thread `tid`'s cell.
+    #[inline]
+    pub fn add(&self, tid: usize, n: u64) {
+        if !enabled() {
+            return;
+        }
+        cell_add!(&*self.cells[tid % MAX_THREADS], n);
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn inc(&self, tid: usize) {
+        self.add(tid, 1);
+    }
+
+    /// Sum across all threads.
+    pub fn total(&self) -> u64 {
+        self.cells.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Gauge: either delta-style (multi-writer [`Gauge::add`]/[`Gauge::sub`],
+/// read as the sum of per-thread deltas) or level-style (single logical
+/// writer using [`Gauge::set`] on its own cell).
+pub struct Gauge {
+    cells: Box<[CachePadded<AtomicI64>]>,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Self {
+            cells: (0..MAX_THREADS).map(|_| CachePadded::new(AtomicI64::new(0))).collect(),
+        }
+    }
+
+    /// Add `n` to thread `tid`'s delta cell.
+    #[inline]
+    pub fn add(&self, tid: usize, n: i64) {
+        if !enabled() {
+            return;
+        }
+        cell_add!(&*self.cells[tid % MAX_THREADS], n);
+    }
+
+    /// Subtract `n` from thread `tid`'s delta cell.
+    #[inline]
+    pub fn sub(&self, tid: usize, n: i64) {
+        self.add(tid, -n);
+    }
+
+    /// Overwrite thread `tid`'s cell (level-style gauges: the instrument
+    /// must then have a single logical writer for `value` to be a level).
+    #[inline]
+    pub fn set(&self, tid: usize, v: i64) {
+        if !enabled() {
+            return;
+        }
+        self.cells[tid % MAX_THREADS].store(v, Ordering::Relaxed);
+    }
+
+    /// Sum across all threads.
+    pub fn value(&self) -> i64 {
+        self.cells.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+struct HistCell {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl HistCell {
+    fn new() -> Self {
+        Self {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Bucket index for value `v` (exponential base-2).
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the last bucket).
+pub fn bucket_bound(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= HIST_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Exponential histogram with one padded cell set per thread id.
+pub struct Histogram {
+    cells: Box<[CachePadded<HistCell>]>,
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Self {
+            cells: (0..MAX_THREADS).map(|_| CachePadded::new(HistCell::new())).collect(),
+        }
+    }
+
+    /// Record one observation on thread `tid`'s cell.
+    #[inline]
+    pub fn record(&self, tid: usize, v: u64) {
+        if !enabled() {
+            return;
+        }
+        let c = &self.cells[tid % MAX_THREADS];
+        cell_add!(&c.count, 1);
+        cell_add!(&c.sum, v);
+        cell_add!(&c.buckets[bucket_of(v)], 1);
+    }
+
+    /// Aggregate across all threads.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot::default();
+        for c in self.cells.iter() {
+            s.count += c.count.load(Ordering::Relaxed);
+            s.sum += c.sum.load(Ordering::Relaxed);
+            for (b, cell) in s.buckets.iter_mut().zip(c.buckets.iter()) {
+                *b += cell.load(Ordering::Relaxed);
+            }
+        }
+        s
+    }
+}
+
+/// Plain-value aggregate of a [`Histogram`].
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self { count: 0, sum: 0, buckets: [0; HIST_BUCKETS] }
+    }
+}
+
+impl HistSnapshot {
+    /// Mean observation (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile `q` in `[0, 1]` via the bucket CDF; returns the upper
+    /// bound of the bucket containing the target rank (bucket
+    /// resolution: one power of two).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return bucket_bound(i);
+            }
+        }
+        u64::MAX
+    }
+
+    /// Windowed delta `self - earlier` (saturating).
+    pub fn since(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut out = HistSnapshot {
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+            ..HistSnapshot::default()
+        };
+        for (i, o) in out.buckets.iter_mut().enumerate() {
+            *o = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        out
+    }
+}
+
+/// Metric family kind (the Prometheus `# TYPE`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One labelled scalar sample within a family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// Unlabelled sample.
+    pub fn plain(value: f64) -> Sample {
+        Sample { labels: Vec::new(), value }
+    }
+
+    /// Single-label sample.
+    pub fn labelled(key: &str, val: impl std::fmt::Display, value: f64) -> Sample {
+        Sample { labels: vec![(key.to_string(), val.to_string())], value }
+    }
+}
+
+/// One labelled histogram series within a histogram family.
+#[derive(Clone, Debug)]
+pub struct HistogramData {
+    pub labels: Vec<(String, String)>,
+    pub count: u64,
+    pub sum: u64,
+    /// `(upper_bound, cumulative_count)` pairs in increasing bound order.
+    pub buckets: Vec<(f64, u64)>,
+}
+
+impl HistogramData {
+    /// Convert an aggregate snapshot, collapsing empty tail buckets
+    /// (cumulative counts, Prometheus `le` convention).
+    pub fn from_snapshot(labels: Vec<(String, String)>, s: &HistSnapshot) -> HistogramData {
+        let mut buckets = Vec::new();
+        let mut cum = 0u64;
+        let last = s.buckets.iter().rposition(|&b| b > 0).unwrap_or(0);
+        for (i, b) in s.buckets.iter().enumerate().take(last + 1) {
+            cum += b;
+            buckets.push((bucket_bound(i) as f64, cum));
+        }
+        HistogramData { labels, count: s.count, sum: s.sum, buckets }
+    }
+}
+
+/// A named metric family: samples for counters/gauges, series for
+/// histograms.
+#[derive(Clone, Debug)]
+pub struct Family {
+    pub name: String,
+    pub help: String,
+    pub kind: Kind,
+    pub samples: Vec<Sample>,
+    pub hists: Vec<HistogramData>,
+}
+
+impl Family {
+    /// Scalar (counter or gauge) family.
+    pub fn scalar(
+        name: impl Into<String>,
+        help: impl Into<String>,
+        kind: Kind,
+        samples: Vec<Sample>,
+    ) -> Family {
+        Family { name: name.into(), help: help.into(), kind, samples, hists: Vec::new() }
+    }
+
+    /// Histogram family.
+    pub fn histogram(
+        name: impl Into<String>,
+        help: impl Into<String>,
+        hists: Vec<HistogramData>,
+    ) -> Family {
+        Family {
+            name: name.into(),
+            help: help.into(),
+            kind: Kind::Histogram,
+            samples: Vec::new(),
+            hists,
+        }
+    }
+}
+
+/// A point-in-time capture of a set of families, supporting windowed
+/// deltas for periodic reporters.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub families: Vec<Family>,
+}
+
+impl Snapshot {
+    /// Windowed delta: counters and histogram counts subtract (matched
+    /// by family name + sample labels; samples absent earlier pass
+    /// through), gauges keep their current level.
+    pub fn delta(&self, earlier: &Snapshot) -> Snapshot {
+        let find = |name: &str| earlier.families.iter().find(|f| f.name == name);
+        let families = self
+            .families
+            .iter()
+            .map(|f| {
+                let mut out = f.clone();
+                if f.kind == Kind::Counter {
+                    if let Some(e) = find(&f.name) {
+                        for s in &mut out.samples {
+                            if let Some(es) = e.samples.iter().find(|x| x.labels == s.labels) {
+                                s.value -= es.value;
+                            }
+                        }
+                    }
+                } else if f.kind == Kind::Histogram {
+                    if let Some(e) = find(&f.name) {
+                        for h in &mut out.hists {
+                            if let Some(eh) = e.hists.iter().find(|x| x.labels == h.labels) {
+                                h.count = h.count.saturating_sub(eh.count);
+                                h.sum = h.sum.saturating_sub(eh.sum);
+                                for (i, (_, c)) in h.buckets.iter_mut().enumerate() {
+                                    if let Some((_, ec)) = eh.buckets.get(i) {
+                                        *c = c.saturating_sub(*ec);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                out
+            })
+            .collect();
+        Snapshot { families }
+    }
+}
+
+struct Entry<T> {
+    name: &'static str,
+    help: &'static str,
+    inner: Arc<T>,
+}
+
+/// The process-wide registry (register-once by name).
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<Vec<Entry<Counter>>>,
+    gauges: Mutex<Vec<Entry<Gauge>>>,
+    histograms: Mutex<Vec<Entry<Histogram>>>,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::default)
+}
+
+impl Registry {
+    /// Register (or fetch) the counter `name`.
+    pub fn counter(&self, name: &'static str, help: &'static str) -> Arc<Counter> {
+        let mut v = self.counters.lock().unwrap();
+        if let Some(e) = v.iter().find(|e| e.name == name) {
+            return Arc::clone(&e.inner);
+        }
+        let inner = Arc::new(Counter::new());
+        v.push(Entry { name, help, inner: Arc::clone(&inner) });
+        inner
+    }
+
+    /// Register (or fetch) the gauge `name`.
+    pub fn gauge(&self, name: &'static str, help: &'static str) -> Arc<Gauge> {
+        let mut v = self.gauges.lock().unwrap();
+        if let Some(e) = v.iter().find(|e| e.name == name) {
+            return Arc::clone(&e.inner);
+        }
+        let inner = Arc::new(Gauge::new());
+        v.push(Entry { name, help, inner: Arc::clone(&inner) });
+        inner
+    }
+
+    /// Register (or fetch) the histogram `name`.
+    pub fn histogram(&self, name: &'static str, help: &'static str) -> Arc<Histogram> {
+        let mut v = self.histograms.lock().unwrap();
+        if let Some(e) = v.iter().find(|e| e.name == name) {
+            return Arc::clone(&e.inner);
+        }
+        let inner = Arc::new(Histogram::new());
+        v.push(Entry { name, help, inner: Arc::clone(&inner) });
+        inner
+    }
+
+    /// Aggregate every registered instrument into families (sorted by
+    /// name for deterministic output).
+    pub fn families(&self) -> Vec<Family> {
+        let mut out = Vec::new();
+        for e in self.counters.lock().unwrap().iter() {
+            out.push(Family::scalar(
+                e.name,
+                e.help,
+                Kind::Counter,
+                vec![Sample::plain(e.inner.total() as f64)],
+            ));
+        }
+        for e in self.gauges.lock().unwrap().iter() {
+            out.push(Family::scalar(
+                e.name,
+                e.help,
+                Kind::Gauge,
+                vec![Sample::plain(e.inner.value() as f64)],
+            ));
+        }
+        for e in self.histograms.lock().unwrap().iter() {
+            let s = e.inner.snapshot();
+            out.push(Family::histogram(
+                e.name,
+                e.help,
+                vec![HistogramData::from_snapshot(Vec::new(), &s)],
+            ));
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Families wrapped as a delta-capable [`Snapshot`].
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot { families: self.families() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let c = Counter::new();
+        c.inc(0);
+        c.add(1, 4);
+        c.inc(0);
+        assert_eq!(c.total(), 6);
+    }
+
+    #[test]
+    fn gauge_delta_and_level() {
+        let g = Gauge::new();
+        g.add(0, 10);
+        g.sub(1, 3);
+        assert_eq!(g.value(), 7);
+        let lvl = Gauge::new();
+        lvl.set(2, 42);
+        lvl.set(2, 17);
+        assert_eq!(lvl.value(), 17);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 3, 100, 1000] {
+            h.record(0, v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 1105);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 6);
+        assert_eq!(s.buckets[0], 1); // the 0
+        assert_eq!(s.buckets[1], 2); // the 1s
+        // p50 lands in the bucket holding the 3rd ranked value (1).
+        assert_eq!(s.quantile(0.5), 1);
+        assert!(s.quantile(1.0) >= 1000);
+        assert!((s.mean() - 1105.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_bounds_monotone() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        for v in [0u64, 1, 2, 3, 4, 100, 1 << 40] {
+            assert!(v <= bucket_bound(bucket_of(v)));
+        }
+    }
+
+    #[test]
+    fn registry_registers_once() {
+        let r = Registry::default();
+        let a = r.counter("persiq_test_total", "help");
+        let b = r.counter("persiq_test_total", "help");
+        a.inc(0);
+        b.inc(0);
+        assert_eq!(a.total(), 2, "same instrument behind both handles");
+        let fams = r.families();
+        assert_eq!(fams.len(), 1);
+        assert_eq!(fams[0].samples[0].value, 2.0);
+    }
+
+    #[test]
+    fn disabled_instruments_are_noops() {
+        let r = Registry::default();
+        let c = r.counter("persiq_gate_total", "help");
+        set_enabled(false);
+        c.inc(0);
+        set_enabled(true);
+        c.inc(0);
+        assert_eq!(c.total(), 1);
+    }
+
+    #[test]
+    fn snapshot_delta_subtracts_counters() {
+        let r = Registry::default();
+        let c = r.counter("persiq_delta_total", "help");
+        c.add(0, 5);
+        let s1 = r.snapshot();
+        c.add(0, 3);
+        let s2 = r.snapshot();
+        let d = s2.delta(&s1);
+        assert_eq!(d.families[0].samples[0].value, 3.0);
+    }
+
+    #[test]
+    fn histogram_delta_windows() {
+        let h = Histogram::new();
+        h.record(0, 10);
+        let s1 = h.snapshot();
+        h.record(0, 20);
+        h.record(1, 30);
+        let s2 = h.snapshot();
+        let d = s2.since(&s1);
+        assert_eq!(d.count, 2);
+        assert_eq!(d.sum, 50);
+    }
+}

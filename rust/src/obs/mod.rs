@@ -1,0 +1,49 @@
+//! `persiq::obs` — crate-wide observability: psync attribution, a
+//! per-thread metrics registry, bounded JSONL event tracing, and
+//! Prometheus-style exposition.
+//!
+//! The paper's headline result is a persistence-cost accounting (`1/B +
+//! 1/K` psyncs per operation pair in steady state; `new_k + 3` per
+//! re-shard transition). This module turns that accounting from a proof
+//! you re-read into telemetry you can assert:
+//!
+//! * [`site`] — the [`ObsSite`] attribution scope: every `pwb`/`psync`
+//!   the pmem layer executes is charged to the ambient site
+//!   (batch-seal, dequeue-flush, resize, plan commit, recovery, broker
+//!   ack, or plain per-op), forming the [`SiteLedger`] that
+//!   `tests/obs_ledger.rs` checks against the paper's numbers.
+//! * [`metrics`] — a register-once registry of per-thread,
+//!   cache-line-padded counters/gauges/histograms (relaxed single-writer
+//!   increments; snapshot-with-delta aggregation) for signals the pmem
+//!   counters don't carry: combiner ring occupancy, flush latency,
+//!   broker queue depth, lease reaps, re-shard drain residue.
+//! * [`summary`] — the one sample summarizer (exact moments +
+//!   nearest-rank percentiles, and the L2 pipeline's histogram-CDF
+//!   aggregation) that `util::time` and `runtime::fallback` delegate to.
+//! * [`trace`] — bounded per-thread JSONL event rings (`--trace
+//!   out.jsonl`): psyncs with sites, batch seals, resize phases, the
+//!   recovery timeline, async future lifecycles. Free when disarmed.
+//! * [`expo`] — Prometheus text rendering plus the human site-ledger
+//!   table (`persiq obs`, `serve --metrics-every N`).
+//!
+//! Overhead discipline: with tracing disarmed, the hot-path cost is one
+//! padded relaxed load+store per counted event and one relaxed
+//! load+branch per trace gate — the observability overhead bench
+//! (`benches/obs_overhead.rs`) holds the registry under 5% throughput
+//! cost on the fig7 steady-state configuration.
+
+pub mod expo;
+pub mod metrics;
+pub mod site;
+pub mod summary;
+pub mod trace;
+
+pub use expo::{ledger_families, render, render_site_ledger};
+pub use metrics::{
+    registry, set_enabled, Counter, Family, Gauge, HistSnapshot, Histogram, HistogramData, Kind,
+    Registry, Sample, Snapshot,
+};
+pub use site::{
+    current_site, enter_site, with_site, ObsSite, SiteGuard, SiteLedger, ALL_SITES, SITE_COUNT,
+};
+pub use summary::{summarize, summarize_exact, Summary};

@@ -1,0 +1,256 @@
+//! Persistence-instruction attribution sites.
+//!
+//! The paper's headline claim is a *cost accounting*: a batched sharded
+//! queue spends `1/B + 1/K` psyncs per enqueue/dequeue pair, and a
+//! re-shard transition spends exactly `new_k + 3`. Totals alone cannot
+//! check that — a stray flush hidden in a resize path would vanish into
+//! the per-op noise. Every `pwb`/`psync` is therefore attributed to the
+//! [`ObsSite`] that issued it, forming a per-site **persistence ledger**
+//! ([`SiteLedger`]) that `tests/obs_ledger.rs` asserts against the
+//! paper's numbers.
+//!
+//! Attribution uses an ambient thread-local scope rather than a site
+//! parameter on every pmem primitive: high-level code wraps a region in
+//! [`with_site`] (or holds an [`enter_site`] guard) and every
+//! persistence instruction issued from the current thread inside that
+//! region is charged to the site. Base queue algorithms (LCRQ, PerLCRQ,
+//! the durable MS queue, …) stay untouched; the sharding, async and
+//! broker layers — where the paper's accounting lives — set the scope.
+//! Outside any scope the site is [`ObsSite::Op`]: ordinary per-operation
+//! persistence.
+
+use std::cell::Cell;
+
+/// Which logical code path issued a persistence instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum ObsSite {
+    /// Ordinary per-operation persistence (the default scope): shared
+    /// queue-variable pwbs, unbatched per-op psyncs, submit-log appends.
+    Op = 0,
+    /// Structure construction: initial stripe roots, plan-log init,
+    /// broker/job-record layout.
+    Setup = 1,
+    /// Group-commit seal of an **enqueue** batch log (the `1/B` term).
+    BatchFlush = 2,
+    /// Group-commit seal of a dequeue-only batch log (the `1/K` term).
+    DeqFlush = 3,
+    /// Re-shard transition work outside the plan log: fresh stripe
+    /// construction (one psync per new stripe).
+    Resize = 4,
+    /// Plan-log commit points: record + freeze + retire (the `+3`).
+    PlanCommit = 5,
+    /// Post-crash recovery and reconciliation (must be 0 in steady
+    /// state).
+    Recovery = 6,
+    /// Broker job-completion acks (CAS to DONE + flush), including the
+    /// async flusher's exec-batch drains that realize them.
+    BrokerAck = 7,
+}
+
+/// Number of [`ObsSite`] variants (ledger array length).
+pub const SITE_COUNT: usize = 8;
+
+/// Every site, in discriminant order (ledger index order).
+pub const ALL_SITES: [ObsSite; SITE_COUNT] = [
+    ObsSite::Op,
+    ObsSite::Setup,
+    ObsSite::BatchFlush,
+    ObsSite::DeqFlush,
+    ObsSite::Resize,
+    ObsSite::PlanCommit,
+    ObsSite::Recovery,
+    ObsSite::BrokerAck,
+];
+
+impl ObsSite {
+    /// Ledger array index (the discriminant).
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable display/label name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ObsSite::Op => "Op",
+            ObsSite::Setup => "Setup",
+            ObsSite::BatchFlush => "BatchFlush",
+            ObsSite::DeqFlush => "DeqFlush",
+            ObsSite::Resize => "Resize",
+            ObsSite::PlanCommit => "PlanCommit",
+            ObsSite::Recovery => "Recovery",
+            ObsSite::BrokerAck => "BrokerAck",
+        }
+    }
+}
+
+impl std::fmt::Display for ObsSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+thread_local! {
+    static CURRENT_SITE: Cell<u8> = const { Cell::new(0) };
+}
+
+/// The calling thread's ambient attribution site ([`ObsSite::Op`] when
+/// no scope is active).
+#[inline]
+pub fn current_site() -> ObsSite {
+    CURRENT_SITE.with(|c| ALL_SITES[c.get() as usize])
+}
+
+/// RAII scope guard: restores the previous site on drop — including
+/// unwinds, which matters because a `psync` can unwind with a simulated
+/// crash signal mid-scope.
+pub struct SiteGuard {
+    prev: u8,
+}
+
+impl Drop for SiteGuard {
+    fn drop(&mut self) {
+        CURRENT_SITE.with(|c| c.set(self.prev));
+    }
+}
+
+/// Enter `site` for the calling thread until the returned guard drops.
+#[must_use = "the site scope ends when the guard drops"]
+pub fn enter_site(site: ObsSite) -> SiteGuard {
+    let prev = CURRENT_SITE.with(|c| {
+        let p = c.get();
+        c.set(site as u8);
+        p
+    });
+    SiteGuard { prev }
+}
+
+/// Run `f` with the calling thread's attribution scope set to `site`.
+pub fn with_site<R>(site: ObsSite, f: impl FnOnce() -> R) -> R {
+    let _g = enter_site(site);
+    f()
+}
+
+/// Aggregated per-site persistence-instruction counts (indices follow
+/// [`ALL_SITES`]). Filled from pmem pool stats; asserted by the site
+/// ledger test; rendered by [`crate::obs::expo`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SiteLedger {
+    pub psyncs: [u64; SITE_COUNT],
+    pub pwbs: [u64; SITE_COUNT],
+}
+
+impl SiteLedger {
+    /// Elementwise accumulate.
+    pub fn add(&mut self, o: &SiteLedger) {
+        for (a, b) in self.psyncs.iter_mut().zip(o.psyncs.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.pwbs.iter_mut().zip(o.pwbs.iter()) {
+            *a += b;
+        }
+    }
+
+    /// psyncs attributed to `site`.
+    #[inline]
+    pub fn psyncs_at(&self, site: ObsSite) -> u64 {
+        self.psyncs[site.index()]
+    }
+
+    /// pwbs attributed to `site`.
+    #[inline]
+    pub fn pwbs_at(&self, site: ObsSite) -> u64 {
+        self.pwbs[site.index()]
+    }
+
+    /// Total psyncs across all sites (equals the untyped psync counter).
+    pub fn total_psyncs(&self) -> u64 {
+        self.psyncs.iter().sum()
+    }
+
+    /// Total pwbs across all sites.
+    pub fn total_pwbs(&self) -> u64 {
+        self.pwbs.iter().sum()
+    }
+
+    /// Ledger delta `self - earlier` (saturating; for phase windows).
+    pub fn since(&self, earlier: &SiteLedger) -> SiteLedger {
+        let mut out = SiteLedger::default();
+        for (i, o) in out.psyncs.iter_mut().enumerate() {
+            *o = self.psyncs[i].saturating_sub(earlier.psyncs[i]);
+        }
+        for (i, o) in out.pwbs.iter_mut().enumerate() {
+            *o = self.pwbs[i].saturating_sub(earlier.pwbs[i]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scope_is_op() {
+        assert_eq!(current_site(), ObsSite::Op);
+    }
+
+    #[test]
+    fn scope_nests_and_restores() {
+        assert_eq!(current_site(), ObsSite::Op);
+        with_site(ObsSite::Resize, || {
+            assert_eq!(current_site(), ObsSite::Resize);
+            with_site(ObsSite::PlanCommit, || {
+                assert_eq!(current_site(), ObsSite::PlanCommit);
+            });
+            assert_eq!(current_site(), ObsSite::Resize);
+        });
+        assert_eq!(current_site(), ObsSite::Op);
+    }
+
+    #[test]
+    fn scope_restores_on_unwind() {
+        let r = std::panic::catch_unwind(|| {
+            let _g = enter_site(ObsSite::Recovery);
+            panic!("boom");
+        });
+        assert!(r.is_err());
+        assert_eq!(current_site(), ObsSite::Op);
+    }
+
+    #[test]
+    fn scope_is_thread_local() {
+        let _g = enter_site(ObsSite::BrokerAck);
+        std::thread::spawn(|| {
+            assert_eq!(current_site(), ObsSite::Op);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(current_site(), ObsSite::BrokerAck);
+    }
+
+    #[test]
+    fn indices_match_all_sites() {
+        for (i, s) in ALL_SITES.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+        assert_eq!(ALL_SITES.len(), SITE_COUNT);
+    }
+
+    #[test]
+    fn ledger_arithmetic() {
+        let mut a = SiteLedger::default();
+        a.psyncs[ObsSite::BatchFlush.index()] = 5;
+        a.pwbs[ObsSite::Op.index()] = 7;
+        let mut b = SiteLedger::default();
+        b.psyncs[ObsSite::BatchFlush.index()] = 2;
+        b.add(&a);
+        assert_eq!(b.psyncs_at(ObsSite::BatchFlush), 7);
+        assert_eq!(b.total_psyncs(), 7);
+        assert_eq!(b.total_pwbs(), 7);
+        let d = b.since(&a);
+        assert_eq!(d.psyncs_at(ObsSite::BatchFlush), 2);
+        assert_eq!(d.pwbs_at(ObsSite::Op), 0);
+    }
+}

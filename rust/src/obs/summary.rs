@@ -1,0 +1,213 @@
+//! The one sample summarizer: every latency/duration aggregation in the
+//! repo routes through here so bench tables, service reports and the
+//! metrics engine agree on percentile math.
+//!
+//! Two aggregation families coexist on purpose:
+//!
+//! * [`moments`] / [`percentile_sorted`] — exact population moments and
+//!   nearest-rank percentiles (what `util::time` has always reported;
+//!   `util::time::stats` now delegates here).
+//! * [`cdf_metrics`] — the L2 pipeline's histogram-CDF aggregation,
+//!   relocated **verbatim** from `runtime::fallback` (which now
+//!   delegates here). Its quantiles are bucket-resolution approximations
+//!   by design: the PJRT artifact computes the same histogram CDF, and
+//!   integration tests cross-check the two bit-for-bit-ish. Do not
+//!   "fix" its math — change the artifact pipeline first.
+//!
+//! [`Summary`] packages either path into one shape for reports.
+
+/// Exact population moments over a sample set.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Moments {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute [`Moments`] (population std) over `xs`.
+pub fn moments(xs: &[f64]) -> Moments {
+    if xs.is_empty() {
+        return Moments::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Moments { n, mean, std: var.sqrt(), min, max }
+}
+
+/// Percentile (nearest-rank) over a *sorted* slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Compute `(stats[8], hist[nbins])` exactly like the L2 pipeline's
+/// `model.metrics` does: filter negatives (padding), normalize to
+/// `[min, max)`, `nbins`-bucket histogram, moments from normalized
+/// sum/sumsq, quantiles from the histogram CDF. The stats layout is
+/// `[count, mean, std, min, max, p50, p95, p99]`.
+pub fn cdf_metrics(samples: &[f64], nbins: usize) -> ([f64; 8], Vec<f64>) {
+    let valid: Vec<f64> = samples.iter().cloned().filter(|&x| x >= 0.0).collect();
+    let count = valid.len() as f64;
+    if valid.is_empty() {
+        return ([0.0; 8], vec![0.0; nbins]);
+    }
+    let mn = valid.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mx = valid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let width = (mx - mn).max(1e-6);
+    let mut hist = vec![0.0f64; nbins];
+    let mut sum = 0.0;
+    let mut sumsq = 0.0;
+    for &x in &valid {
+        let n = (x - mn) / (width * (1.0 + 1e-6));
+        let b = ((n * nbins as f64) as usize).min(nbins - 1);
+        hist[b] += 1.0;
+        sum += n;
+        sumsq += n * n;
+    }
+    let mean_n = sum / count;
+    let var_n = (sumsq / count - mean_n * mean_n).max(0.0);
+    let mean = mn + mean_n * width;
+    let std = var_n.sqrt() * width;
+    // Quantiles from the histogram CDF, matching model.metrics.
+    let quantile = |p: f64| -> f64 {
+        let target = p * count;
+        let mut cum = 0.0;
+        for (i, h) in hist.iter().enumerate() {
+            cum += h;
+            if cum >= target {
+                return mn + (i as f64 + 1.0) / nbins as f64 * width;
+            }
+        }
+        mx
+    };
+    (
+        [count, mean, std, mn, mx, quantile(0.50), quantile(0.95), quantile(0.99)],
+        hist,
+    )
+}
+
+/// One latency-sample aggregate: the shape shared by bench tables, the
+/// service report and the metrics engine's `MetricsOut`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub count: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// From the `cdf_metrics` stats layout.
+    pub fn from_stats(s: [f64; 8]) -> Summary {
+        Summary {
+            count: s[0],
+            mean: s[1],
+            std: s[2],
+            min: s[3],
+            max: s[4],
+            p50: s[5],
+            p95: s[6],
+            p99: s[7],
+        }
+    }
+}
+
+/// Summarize `samples` via the histogram-CDF pipeline (negative entries
+/// are padding).
+pub fn summarize(samples: &[f64], nbins: usize) -> Summary {
+    Summary::from_stats(cdf_metrics(samples, nbins).0)
+}
+
+/// Summarize with exact moments and nearest-rank percentiles instead of
+/// the CDF approximation (for small sample sets where bucket resolution
+/// matters; sorts a copy).
+pub fn summarize_exact(samples: &[f64]) -> Summary {
+    let mut valid: Vec<f64> = samples.iter().cloned().filter(|&x| x >= 0.0).collect();
+    valid.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let m = moments(&valid);
+    Summary {
+        count: m.n as f64,
+        mean: m.mean,
+        std: m.std,
+        min: if m.n == 0 { 0.0 } else { m.min },
+        max: if m.n == 0 { 0.0 } else { m.max },
+        p50: percentile_sorted(&valid, 50.0),
+        p95: percentile_sorted(&valid, 95.0),
+        p99: percentile_sorted(&valid, 99.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_basic() {
+        let m = moments(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.n, 4);
+        assert!((m.mean - 2.5).abs() < 1e-12);
+        assert!((m.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert!((m.min - 1.0).abs() < 1e-12);
+        assert!((m.max - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moments_empty() {
+        assert_eq!(moments(&[]), Moments::default());
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&v, 50.0), 50.0);
+        assert_eq!(percentile_sorted(&v, 95.0), 95.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 100.0);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn cdf_metrics_matches_legacy_fallback_semantics() {
+        // Mirrors runtime::fallback's original unit expectations: the
+        // relocation must not change a single bit of this math.
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let (s, hist) = cdf_metrics(&samples, 64);
+        assert_eq!(s[0], 1000.0);
+        assert!((s[1] - 500.5).abs() < 0.5);
+        assert!((s[3] - 1.0).abs() < 1e-9);
+        assert!((s[4] - 1000.0).abs() < 1e-9);
+        assert!((s[5] - 500.0).abs() < 20.0, "p50={}", s[5]);
+        assert!((s[6] - 950.0).abs() < 20.0, "p95={}", s[6]);
+        assert_eq!(hist.iter().sum::<f64>(), 1000.0);
+        // Negative entries are padding.
+        let (s, hist) = cdf_metrics(&[-1.0, -1.0], 64);
+        assert_eq!(s[0], 0.0);
+        assert_eq!(hist.iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn summaries_agree_on_moments() {
+        let samples: Vec<f64> = (0..500).map(|i| (i % 97) as f64).collect();
+        let a = summarize(&samples, 64);
+        let b = summarize_exact(&samples);
+        assert_eq!(a.count, b.count);
+        assert!((a.mean - b.mean).abs() < 1e-9);
+        assert!((a.std - b.std).abs() < 1e-9);
+        assert_eq!(a.min, b.min);
+        assert_eq!(a.max, b.max);
+        // Percentiles agree to one CDF bucket width.
+        let bucket = (a.max - a.min) / 64.0 + 1e-9;
+        assert!((a.p50 - b.p50).abs() <= bucket + 1.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Bounded per-thread JSONL event tracing.
+//!
+//! When armed (`persiq bench --trace out.jsonl`, or [`start`]), typed
+//! events are formatted into per-thread bounded rings (drop-oldest under
+//! pressure, with a dropped count) and written out — merged and sorted
+//! by timestamp — at [`stop`]. When disarmed, every emit call is one
+//! relaxed load + branch, so tracing costs nothing on benchmark runs
+//! that don't ask for it.
+//!
+//! Timestamps are **virtual nanoseconds** (the pmem layer's Lamport
+//! clocks): a trace lines up with the simulated timeline the benches
+//! report, not with wall clock.
+//!
+//! ## Schema
+//!
+//! Every line is one JSON object with at least:
+//!
+//! | key    | type   | meaning                                    |
+//! |--------|--------|--------------------------------------------|
+//! | `ts`   | u64    | virtual time (ns)                          |
+//! | `tid`  | u64    | issuing thread id                          |
+//! | `type` | string | event type (below)                         |
+//!
+//! Per-type required keys:
+//!
+//! * `"psync"` — `site` (an [`ObsSite`] name), `pool`, `drained`
+//! * `"batch_seal"` — `kind` (`"enq"`/`"deq"`), `n`, `pools` (bitmask)
+//! * `"span"` — `name`, `start`, `dur` (virtual ns; `ts` is the end)
+//! * `"event"` — `name` (plus event-specific fields)
+//! * `"future"` — `stage` (`submit|execute|durable|resolve`), `idx`
+//!
+//! The schema is enforced by `tests/obs_ledger.rs`'s golden-schema
+//! check; extend it there when adding event types.
+
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crossbeam_utils::CachePadded;
+
+use super::site::ObsSite;
+use crate::pmem::MAX_THREADS;
+
+/// Default per-thread ring capacity (lines); override with
+/// `PERSIQ_TRACE_CAP`.
+pub const DEFAULT_RING_CAP: usize = 8192;
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+
+#[derive(Default)]
+struct Ring {
+    lines: VecDeque<String>,
+    dropped: u64,
+}
+
+struct TraceState {
+    rings: Vec<CachePadded<Mutex<Ring>>>,
+    path: Mutex<Option<PathBuf>>,
+    cap: AtomicUsize,
+}
+
+static STATE: OnceLock<TraceState> = OnceLock::new();
+
+fn state() -> &'static TraceState {
+    STATE.get_or_init(|| TraceState {
+        rings: (0..MAX_THREADS).map(|_| CachePadded::new(Mutex::new(Ring::default()))).collect(),
+        path: Mutex::new(None),
+        cap: AtomicUsize::new(DEFAULT_RING_CAP),
+    })
+}
+
+/// Is tracing armed? One relaxed load — the gate every emit helper
+/// checks first.
+#[inline]
+pub fn enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Arm tracing, directing the eventual flush to `path`. Clears any
+/// previous rings. Ring capacity comes from `PERSIQ_TRACE_CAP` (lines
+/// per thread) when set.
+pub fn start(path: impl Into<PathBuf>) {
+    let st = state();
+    if let Ok(v) = std::env::var("PERSIQ_TRACE_CAP") {
+        if let Ok(cap) = v.parse::<usize>() {
+            st.cap.store(cap.max(16), Ordering::Relaxed);
+        }
+    }
+    for r in &st.rings {
+        let mut g = r.lock().unwrap_or_else(|e| e.into_inner());
+        g.lines.clear();
+        g.dropped = 0;
+    }
+    *st.path.lock().unwrap() = Some(path.into());
+    TRACE_ON.store(true, Ordering::Relaxed);
+}
+
+/// Flush summary returned by [`stop`].
+#[derive(Clone, Debug)]
+pub struct FlushReport {
+    pub path: PathBuf,
+    pub written: usize,
+    pub dropped: u64,
+}
+
+/// Disarm tracing and write all buffered events (merged across threads,
+/// sorted by `ts`) to the path given at [`start`]. Returns `None` when
+/// tracing was never started.
+pub fn stop() -> std::io::Result<Option<FlushReport>> {
+    TRACE_ON.store(false, Ordering::Relaxed);
+    let st = state();
+    let Some(path) = st.path.lock().unwrap().take() else {
+        return Ok(None);
+    };
+    let mut all: Vec<String> = Vec::new();
+    let mut dropped = 0u64;
+    for r in &st.rings {
+        let mut g = r.lock().unwrap_or_else(|e| e.into_inner());
+        dropped += g.dropped;
+        g.dropped = 0;
+        all.extend(g.lines.drain(..));
+    }
+    // Lines start `{"ts":N,...` — sort on the numeric ts prefix so the
+    // merged file reads as one timeline.
+    all.sort_by_key(|l| parse_ts(l));
+    let written = all.len();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    for l in &all {
+        writeln!(f, "{l}")?;
+    }
+    f.flush()?;
+    Ok(Some(FlushReport { path, written, dropped }))
+}
+
+fn parse_ts(line: &str) -> u64 {
+    line.strip_prefix("{\"ts\":")
+        .map(|rest| {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            digits.parse().unwrap_or(0)
+        })
+        .unwrap_or(0)
+}
+
+fn push(tid: usize, line: String) {
+    let st = state();
+    let cap = st.cap.load(Ordering::Relaxed);
+    let mut g = st.rings[tid % MAX_THREADS].lock().unwrap_or_else(|e| e.into_inner());
+    if g.lines.len() >= cap {
+        g.lines.pop_front();
+        g.dropped += 1;
+    }
+    g.lines.push_back(line);
+}
+
+/// Emit a raw event: `fields` is the tail of the JSON object (no
+/// braces, no leading comma; empty for none). Prefer the typed helpers.
+pub fn emit(tid: usize, ts: u64, typ: &str, fields: std::fmt::Arguments) {
+    if !enabled() {
+        return;
+    }
+    let f = fields.to_string();
+    let line = if f.is_empty() {
+        format!("{{\"ts\":{ts},\"tid\":{tid},\"type\":\"{typ}\"}}")
+    } else {
+        format!("{{\"ts\":{ts},\"tid\":{tid},\"type\":\"{typ}\",{f}}}")
+    };
+    push(tid, line);
+}
+
+/// A `psync` landed: attribution site, target pool, lines drained.
+#[inline]
+pub fn psync(tid: usize, ts: u64, site: ObsSite, pool: usize, drained: usize) {
+    if !enabled() {
+        return;
+    }
+    emit(
+        tid,
+        ts,
+        "psync",
+        format_args!("\"site\":\"{}\",\"pool\":{pool},\"drained\":{drained}", site.name()),
+    );
+}
+
+/// A batch log sealed: `kind` is `"enq"` or `"deq"`, `n` entries,
+/// `pools` the touched-pool bitmask.
+#[inline]
+pub fn batch_seal(tid: usize, ts: u64, kind: &str, n: usize, pools: u64) {
+    if !enabled() {
+        return;
+    }
+    emit(tid, ts, "batch_seal", format_args!("\"kind\":\"{kind}\",\"n\":{n},\"pools\":{pools}"));
+}
+
+/// A completed span (resize phases, recovery timeline): `ts` is the end
+/// time, `start`/`dur` in virtual ns.
+#[inline]
+pub fn span(tid: usize, start: u64, end: u64, name: &str, fields: std::fmt::Arguments) {
+    if !enabled() {
+        return;
+    }
+    let f = fields.to_string();
+    let dur = end.saturating_sub(start);
+    if f.is_empty() {
+        emit(tid, end, "span", format_args!("\"name\":\"{name}\",\"start\":{start},\"dur\":{dur}"));
+    } else {
+        emit(
+            tid,
+            end,
+            "span",
+            format_args!("\"name\":\"{name}\",\"start\":{start},\"dur\":{dur},{f}"),
+        );
+    }
+}
+
+/// A point event with a name and event-specific fields.
+#[inline]
+pub fn event(tid: usize, ts: u64, name: &str, fields: std::fmt::Arguments) {
+    if !enabled() {
+        return;
+    }
+    let f = fields.to_string();
+    if f.is_empty() {
+        emit(tid, ts, "event", format_args!("\"name\":\"{name}\""));
+    } else {
+        emit(tid, ts, "event", format_args!("\"name\":\"{name}\",{f}"));
+    }
+}
+
+/// An async future lifecycle transition: `stage` ∈
+/// `submit|execute|durable|resolve`, `idx` the completion-slot index.
+#[inline]
+pub fn future_stage(tid: usize, ts: u64, stage: &str, idx: u64) {
+    if !enabled() {
+        return;
+    }
+    emit(tid, ts, "future", format_args!("\"stage\":\"{stage}\",\"idx\":{idx}"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is process-global; tests that arm it must not run
+    // concurrently with each other. One combined test keeps it simple.
+    #[test]
+    fn trace_lifecycle_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("persiq_trace_test_{}.jsonl", std::process::id()));
+
+        // Disarmed: emits are dropped for free.
+        assert!(!enabled());
+        psync(0, 5, ObsSite::Op, 0, 1);
+
+        start(&path);
+        assert!(enabled());
+        psync(1, 30, ObsSite::BatchFlush, 0, 3);
+        batch_seal(1, 20, "enq", 8, 0b1);
+        span(0, 10, 50, "resize.stage", format_args!("\"epoch\":2"));
+        event(0, 40, "recovery.begin", format_args!(""));
+        future_stage(2, 60, "submit", 7);
+        let rep = stop().unwrap().expect("was started");
+        assert_eq!(rep.written, 5);
+        assert_eq!(rep.dropped, 0);
+        assert!(!enabled());
+
+        let text = std::fs::read_to_string(&rep.path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // Sorted by ts across threads.
+        let ts: Vec<u64> = lines.iter().map(|l| parse_ts(l)).collect();
+        assert_eq!(ts, vec![20, 30, 40, 50, 60], "merged timeline must sort by ts");
+        // The disarmed emit did not leak in.
+        assert!(!text.contains("\"ts\":5,"));
+        // Typed fields present.
+        assert!(text.contains("\"type\":\"psync\""));
+        assert!(text.contains("\"site\":\"BatchFlush\""));
+        assert!(text.contains("\"kind\":\"enq\""));
+        assert!(text.contains("\"name\":\"resize.stage\",\"start\":10,\"dur\":40,\"epoch\":2"));
+        assert!(text.contains("\"stage\":\"submit\",\"idx\":7"));
+
+        // Restart clears state; ring cap drops oldest.
+        start(&path);
+        let cap = state().cap.load(Ordering::Relaxed);
+        for i in 0..(cap + 10) as u64 {
+            event(3, i, "spam", format_args!(""));
+        }
+        let rep = stop().unwrap().unwrap();
+        assert_eq!(rep.written, cap);
+        assert_eq!(rep.dropped, 10);
+        let _ = std::fs::remove_file(&rep.path);
+    }
+}

@@ -739,7 +739,7 @@ impl PmemPool {
     /// nondeterministically, by crash-time eviction).
     pub fn pwb(&self, tid: usize, a: PAddr) {
         self.step(tid);
-        self.stats.of(tid).pwb();
+        self.stats.of(tid).pwb_at(crate::obs::current_site());
         let line = a.line();
         let k = self.k_of(line);
         let mut cost = self.cfg.cost.pwb_cost(k);
@@ -789,10 +789,12 @@ impl PmemPool {
     }
 
     /// `psync` — block until all of this thread's queued `pwb`s are
-    /// realized (live → shadow).
+    /// realized (live → shadow). Counted against the calling thread's
+    /// ambient [`crate::obs::ObsSite`] and traced when tracing is armed.
     pub fn psync(&self, tid: usize) {
         self.step(tid);
-        self.stats.of(tid).psync();
+        let site = crate::obs::current_site();
+        self.stats.of(tid).psync_at(site);
         let drained = unsafe {
             let q = &mut *self.pending[tid].lines.get();
             for &line in q.iter() {
@@ -803,10 +805,11 @@ impl PmemPool {
             n
         };
         let cost = self.cfg.cost.psync_cost(drained);
-        self.charge(tid, cost);
+        let now = self.charge(tid, cost);
         if self.cfg.cost.meter == MeterMode::WallclockSpin {
             spin_ns(cost);
         }
+        crate::obs::trace::psync(tid, now, site, self.socket, drained);
     }
 
     /// Copy one line live → shadow (the flush taking effect).

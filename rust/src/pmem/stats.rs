@@ -1,9 +1,16 @@
 //! Per-thread operation counters (relaxed increments on cache-padded slots;
 //! aggregated by the bench harness — e.g. the persistence-principles
 //! ablation reports `pwb`/`psync` counts per operation).
+//!
+//! `pwb`/`psync` counts are additionally attributed to the issuing
+//! [`ObsSite`] (per-site ledger arrays), so the paper's persistence
+//! accounting can be checked per code path, not just in aggregate; see
+//! [`crate::obs::site`].
 
 use crossbeam_utils::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::site::{ObsSite, SiteLedger, SITE_COUNT};
 
 /// Counters for one thread.
 #[derive(Default)]
@@ -20,6 +27,11 @@ pub struct OpCounters {
     /// socket differs from the target pool's socket (multi-pool
     /// topologies only — always 0 on a single pool).
     pub remote_ops: AtomicU64,
+    /// `psyncs` split by attribution site (indexed by
+    /// [`ObsSite::index`]; sums to `psyncs`).
+    pub psync_site: [AtomicU64; SITE_COUNT],
+    /// `pwbs` split by attribution site (sums to `pwbs`).
+    pub pwb_site: [AtomicU64; SITE_COUNT],
 }
 
 // Counters are single-writer (one thread per slot): plain load+store
@@ -50,7 +62,16 @@ impl OpCounters {
     }
     #[inline]
     pub fn pwb(&self) {
+        self.pwb_at(ObsSite::Op);
+    }
+    /// Count a `pwb` attributed to `site` (the pmem pool passes the
+    /// calling thread's ambient [`crate::obs::current_site`]).
+    #[inline]
+    pub fn pwb_at(&self, site: ObsSite) {
         bump!(self.pwbs);
+        let c = &self.pwb_site[site.index()];
+        let v = c.load(Ordering::Relaxed);
+        c.store(v + 1, Ordering::Relaxed);
     }
     #[inline]
     pub fn pfence(&self) {
@@ -58,7 +79,15 @@ impl OpCounters {
     }
     #[inline]
     pub fn psync(&self) {
+        self.psync_at(ObsSite::Op);
+    }
+    /// Count a `psync` attributed to `site`.
+    #[inline]
+    pub fn psync_at(&self, site: ObsSite) {
         bump!(self.psyncs);
+        let c = &self.psync_site[site.index()];
+        let v = c.load(Ordering::Relaxed);
+        c.store(v + 1, Ordering::Relaxed);
     }
     #[inline]
     pub fn conflict(&self, n: u64) {
@@ -81,6 +110,8 @@ impl OpCounters {
             psyncs: self.psyncs.load(Ordering::Relaxed),
             conflicts: self.conflicts.load(Ordering::Relaxed),
             remote_ops: self.remote_ops.load(Ordering::Relaxed),
+            psync_site: std::array::from_fn(|i| self.psync_site[i].load(Ordering::Relaxed)),
+            pwb_site: std::array::from_fn(|i| self.pwb_site[i].load(Ordering::Relaxed)),
         }
     }
 
@@ -98,6 +129,9 @@ impl OpCounters {
         ] {
             c.store(0, Ordering::Relaxed);
         }
+        for c in self.psync_site.iter().chain(self.pwb_site.iter()) {
+            c.store(0, Ordering::Relaxed);
+        }
     }
 }
 
@@ -113,6 +147,8 @@ pub struct CounterSnapshot {
     pub psyncs: u64,
     pub conflicts: u64,
     pub remote_ops: u64,
+    pub psync_site: [u64; SITE_COUNT],
+    pub pwb_site: [u64; SITE_COUNT],
 }
 
 impl CounterSnapshot {
@@ -126,11 +162,22 @@ impl CounterSnapshot {
         self.psyncs += o.psyncs;
         self.conflicts += o.conflicts;
         self.remote_ops += o.remote_ops;
+        for (a, b) in self.psync_site.iter_mut().zip(o.psync_site.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.pwb_site.iter_mut().zip(o.pwb_site.iter()) {
+            *a += b;
+        }
     }
 
     /// Total persistence instructions (pwb + pfence + psync).
     pub fn persistence_instructions(&self) -> u64 {
         self.pwbs + self.pfences + self.psyncs
+    }
+
+    /// The per-site ledger view of this snapshot.
+    pub fn site_ledger(&self) -> SiteLedger {
+        SiteLedger { psyncs: self.psync_site, pwbs: self.pwb_site }
     }
 }
 
@@ -165,6 +212,11 @@ impl PoolStats {
     /// Per-thread snapshots.
     pub fn snapshots(&self) -> Vec<CounterSnapshot> {
         self.per_thread.iter().map(|c| c.snapshot()).collect()
+    }
+
+    /// The per-site persistence ledger, summed across threads.
+    pub fn site_ledger(&self) -> SiteLedger {
+        self.total().site_ledger()
     }
 
     /// Zero all counters (between bench phases).
@@ -211,5 +263,29 @@ mod tests {
         let snaps = s.snapshots();
         assert_eq!(snaps[0].cas_failures, 0);
         assert_eq!(snaps[1].cas_failures, 1);
+    }
+
+    #[test]
+    fn site_attribution_sums_to_totals() {
+        let s = PoolStats::new(2);
+        s.of(0).psync_at(ObsSite::BatchFlush);
+        s.of(0).psync_at(ObsSite::BatchFlush);
+        s.of(1).psync_at(ObsSite::PlanCommit);
+        s.of(0).psync(); // untyped → Op
+        s.of(1).pwb_at(ObsSite::Recovery);
+        s.of(1).pwb(); // untyped → Op
+        let t = s.total();
+        assert_eq!(t.psyncs, 4);
+        assert_eq!(t.pwbs, 2);
+        let l = s.site_ledger();
+        assert_eq!(l.psyncs_at(ObsSite::BatchFlush), 2);
+        assert_eq!(l.psyncs_at(ObsSite::PlanCommit), 1);
+        assert_eq!(l.psyncs_at(ObsSite::Op), 1);
+        assert_eq!(l.pwbs_at(ObsSite::Recovery), 1);
+        assert_eq!(l.pwbs_at(ObsSite::Op), 1);
+        assert_eq!(l.total_psyncs(), t.psyncs, "ledger must cover every psync");
+        assert_eq!(l.total_pwbs(), t.pwbs, "ledger must cover every pwb");
+        s.reset();
+        assert_eq!(s.site_ledger(), SiteLedger::default());
     }
 }

@@ -351,6 +351,59 @@ impl Topology {
         self.pools.iter().map(|p| p.stats.total()).collect()
     }
 
+    /// The per-site persistence ledger, merged across all pools (see
+    /// [`crate::obs::site`]).
+    pub fn site_ledger(&self) -> crate::obs::SiteLedger {
+        let mut l = crate::obs::SiteLedger::default();
+        for p in &self.pools {
+            l.add(&p.stats.site_ledger());
+        }
+        l
+    }
+
+    /// Prometheus-shaped metric families for the pmem substrate:
+    /// per-pool operation counters, the per-site persistence ledger,
+    /// and the simulated makespan.
+    pub fn metric_families(&self) -> Vec<crate::obs::Family> {
+        use crate::obs::{Family, Kind, Sample};
+        let per_pool = self.stats_per_pool();
+        let scalar = |name: &str, help: &str, get: &dyn Fn(&CounterSnapshot) -> u64| {
+            Family::scalar(
+                name,
+                help,
+                Kind::Counter,
+                per_pool
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| Sample::labelled("pool", i, get(s) as f64))
+                    .collect(),
+            )
+        };
+        let mut fams = vec![
+            scalar("persiq_pmem_loads_total", "atomic loads", &|s| s.loads),
+            scalar("persiq_pmem_stores_total", "atomic stores", &|s| s.stores),
+            scalar("persiq_pmem_rmws_total", "atomic RMWs", &|s| s.rmws),
+            scalar("persiq_pmem_cas_failures_total", "failed CAS attempts", &|s| {
+                s.cas_failures
+            }),
+            scalar("persiq_pmem_pwbs_total", "pwb instructions", &|s| s.pwbs),
+            scalar("persiq_pmem_pfences_total", "pfence instructions", &|s| s.pfences),
+            scalar("persiq_pmem_psyncs_total", "psync instructions", &|s| s.psyncs),
+            scalar("persiq_pmem_conflicts_total", "line conflicts", &|s| s.conflicts),
+            scalar("persiq_pmem_remote_ops_total", "cross-socket pwbs/RMWs", &|s| {
+                s.remote_ops
+            }),
+        ];
+        fams.extend(crate::obs::ledger_families(&self.site_ledger()));
+        fams.push(Family::scalar(
+            "persiq_pmem_max_vtime_ns",
+            "simulated makespan (max thread virtual clock)",
+            Kind::Gauge,
+            vec![Sample::plain(self.max_vtime() as f64)],
+        ));
+        fams
+    }
+
     /// Drain the calling thread's pending `pwb`s on **every** pool (one
     /// `psync` per pool that quiesce/recovery paths use when buffered
     /// work may span sockets).
@@ -581,6 +634,31 @@ mod tests {
         let per = t.stats_per_pool();
         assert_eq!(per.len(), 3);
         assert!(per.iter().all(|s| s.pwbs == 1));
+    }
+
+    #[test]
+    fn site_ledger_merges_pools_and_renders() {
+        use crate::obs::{self, ObsSite};
+        let t = Topology::new(cfg(), 2);
+        let a0 = t.alloc_lines_on(0, 1);
+        let a1 = t.alloc_lines_on(1, 1);
+        t.store(0, a0, 1);
+        t.pwb(0, a0);
+        t.psync_pool(0, 0);
+        obs::with_site(ObsSite::BatchFlush, || {
+            t.store(0, a1, 2);
+            t.pwb(0, a1);
+            t.psync_pool(0, 1);
+        });
+        let l = t.site_ledger();
+        assert_eq!(l.psyncs_at(ObsSite::Op), 1);
+        assert_eq!(l.psyncs_at(ObsSite::BatchFlush), 1);
+        assert_eq!(l.pwbs_at(ObsSite::BatchFlush), 1);
+        assert_eq!(l.total_psyncs(), t.stats_total().psyncs);
+        let text = obs::render(&t.metric_families());
+        assert!(text.contains("persiq_pmem_psyncs_total{pool=\"0\"} 1"));
+        assert!(text.contains("persiq_pmem_psyncs_by_site_total{site=\"BatchFlush\"} 1"));
+        assert!(text.contains("# TYPE persiq_pmem_max_vtime_ns gauge"));
     }
 
     #[test]

@@ -53,6 +53,7 @@ use std::time::{Duration, Instant};
 
 use crossbeam_utils::CachePadded;
 
+use crate::obs::{self, ObsSite};
 use crate::pmem::{run_guarded, Topology};
 use crate::queues::sharded::Shardable;
 use crate::queues::{ConcurrentQueue, PersistentQueue};
@@ -87,6 +88,15 @@ impl AsyncOp {
             AsyncOp::Enq { slot, .. }
             | AsyncOp::Deq { slot, .. }
             | AsyncOp::Exec { slot, .. } => slot.fail(err),
+        }
+    }
+
+    /// Trace-correlation id of the op's completion slot.
+    pub(crate) fn trace_id(&self) -> u64 {
+        match self {
+            AsyncOp::Enq { slot, .. }
+            | AsyncOp::Deq { slot, .. }
+            | AsyncOp::Exec { slot, .. } => slot.id,
         }
     }
 }
@@ -153,6 +163,15 @@ impl OpRing {
                 pos = self.tail.load(Ordering::Relaxed);
             }
         }
+    }
+
+    /// Approximate occupancy (ops pushed but not yet popped) — the
+    /// combiner ring-occupancy gauge. Racy by nature; monotone counters
+    /// make it non-negative.
+    pub fn occupancy(&self) -> usize {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Relaxed);
+        tail.saturating_sub(head)
     }
 
     pub fn pop(&self) -> Option<AsyncOp> {
@@ -272,6 +291,16 @@ fn worker_loop<Q: Shardable + 'static>(shared: Arc<Shared<Q>>, tid: usize) {
     // When the oldest parked op was admitted (deadline trigger).
     let mut oldest: Option<Instant> = None;
     let exec_hook = shared.deq_executed_hook.lock().unwrap().clone();
+    // Registry instruments (no-ops while the registry is disabled): the
+    // ring-occupancy gauge cell is this worker's own — single-writer.
+    let m_ring = obs::registry().gauge(
+        "persiq_async_ring_occupancy",
+        "Operations waiting in the combiner submission ring",
+    );
+    let m_flush_us = obs::registry().histogram(
+        "persiq_async_flush_latency_us",
+        "Microseconds from an explicit flush's oldest admitted op to its group psync",
+    );
     // The shard-plan epoch this combiner last operated under: re-sharding
     // flips are observed between batches (the queue's own dispatch reads
     // the live plan per op; this is the combiner-side observation point
@@ -289,6 +318,8 @@ fn worker_loop<Q: Shardable + 'static>(shared: Arc<Shared<Q>>, tid: usize) {
                 shared.stats.plan_flips.fetch_add(1, Ordering::Relaxed);
             }
 
+            m_ring.set(tid, shared.ring.occupancy() as i64);
+
             // Admit work while the in-flight window has room.
             while parked_enq.len() + parked_deq.len() + parked_exec.len() < shared.cfg.depth {
                 let Some(op) = shared.ring.pop() else { break };
@@ -296,6 +327,7 @@ fn worker_loop<Q: Shardable + 'static>(shared: Arc<Shared<Q>>, tid: usize) {
                 if oldest.is_none() {
                     oldest = Some(Instant::now());
                 }
+                obs::trace::future_stage(tid, q.topology().vtime(tid), "execute", op.trace_id());
                 match op {
                     AsyncOp::Enq { value, slot } => {
                         // Park BEFORE executing: a crash unwinding out of
@@ -376,14 +408,23 @@ fn worker_loop<Q: Shardable + 'static>(shared: Arc<Shared<Q>>, tid: usize) {
                     } else if deadline_hit {
                         shared.stats.deadline_flushes.fetch_add(1, Ordering::Relaxed);
                     }
+                    if let Some(t) = oldest {
+                        m_flush_us.record(tid, t.elapsed().as_micros() as u64);
+                    }
                     // The queue flush psyncs the pools its batches
                     // touched; Exec pwbs on OTHER pools need their own
                     // drain before their futures may resolve.
                     let psynced = q.flush(tid);
                     let remaining = exec_pools & !psynced;
-                    for p in 0..q.topology().len() {
-                        if remaining & (1 << p) != 0 {
-                            q.topology().pool(p).psync(tid);
+                    if remaining != 0 {
+                        // Exec closures are acknowledgement work (the
+                        // broker's DONE marks): their stray-pool drains
+                        // attribute to BrokerAck, not Op.
+                        let _site = obs::enter_site(ObsSite::BrokerAck);
+                        for p in 0..q.topology().len() {
+                            if remaining & (1 << p) != 0 {
+                                q.topology().pool(p).psync(tid);
+                            }
                         }
                     }
                     exec_pools = 0;
@@ -478,10 +519,18 @@ fn harvest<Q: Shardable>(
     oldest: &mut Option<Instant>,
     exec_ready_mask: u64,
 ) {
+    let trace_on = obs::trace::enabled();
+    let now = || shared.queue.topology().vtime(tid);
     let (pe, pd) = shared.queue.pending_ops(tid);
     if pe == 0 && !parked_enq.is_empty() {
         for slot in parked_enq.drain(..) {
+            if trace_on {
+                obs::trace::future_stage(tid, now(), "durable", slot.id);
+            }
             slot.complete();
+            if trace_on {
+                obs::trace::future_stage(tid, now(), "resolve", slot.id);
+            }
             shared.stats.enq_done.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -497,14 +546,26 @@ fn harvest<Q: Shardable>(
                     h(enc - 1);
                 }
             }
+            if trace_on {
+                obs::trace::future_stage(tid, now(), "durable", slot.id);
+            }
             slot.complete();
+            if trace_on {
+                obs::trace::future_stage(tid, now(), "resolve", slot.id);
+            }
             shared.stats.deq_done.fetch_add(1, Ordering::Relaxed);
         }
     }
     if exec_ready_mask == u64::MAX && !parked_exec.is_empty() {
         debug_assert_eq!(*exec_pools, 0, "explicit flush must have drained exec pools");
         for slot in parked_exec.drain(..) {
+            if trace_on {
+                obs::trace::future_stage(tid, now(), "durable", slot.id);
+            }
             slot.complete();
+            if trace_on {
+                obs::trace::future_stage(tid, now(), "resolve", slot.id);
+            }
             shared.stats.exec_done.fetch_add(1, Ordering::Relaxed);
         }
     }

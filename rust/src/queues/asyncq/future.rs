@@ -68,8 +68,15 @@ pub(crate) struct CompletionSlot {
     /// Staged payload; meaning depends on the future type (deq: `value+1`
     /// or 0 for EMPTY; exec: the closure's result; enq: unused).
     value: AtomicU64,
+    /// Monotone op id correlating this future's trace events
+    /// (submit → execute → durable → resolve) across threads.
+    pub(crate) id: u64,
     waiting: Mutex<WaitState>,
 }
+
+/// Source of [`CompletionSlot::id`] — process-wide so trace correlation
+/// ids never collide across layers.
+static NEXT_OP_ID: AtomicU64 = AtomicU64::new(0);
 
 #[derive(Default)]
 struct WaitState {
@@ -82,6 +89,7 @@ impl CompletionSlot {
         Arc::new(Self {
             state: AtomicU8::new(PENDING),
             value: AtomicU64::new(0),
+            id: NEXT_OP_ID.fetch_add(1, Ordering::Relaxed),
             waiting: Mutex::new(WaitState::default()),
         })
     }

@@ -338,6 +338,7 @@ impl<Q: Shardable + 'static> AsyncQueue<Q> {
 
     fn submit(&self, op: AsyncOp) {
         let sh = &*self.shared;
+        let id = op.trace_id();
         // Increment-then-check pairs with Shared::seal's set-then-wait
         // (SeqCst on both sides — see seal's comment).
         sh.pushers.fetch_add(1, Ordering::SeqCst);
@@ -373,6 +374,11 @@ impl<Q: Shardable + 'static> AsyncQueue<Q> {
         }
         sh.stats.submitted.fetch_add(1, Ordering::Relaxed);
         sh.pushers.fetch_sub(1, Ordering::SeqCst);
+        if crate::obs::trace::enabled() {
+            // Submitters have no queue tid; ring 0 collects their events
+            // (rings are mutexed, so cross-thread emission is safe).
+            crate::obs::trace::future_stage(0, sh.queue.topology().max_vtime(), "submit", id);
+        }
     }
 
     /// Refuse new submissions and fail everything still queued (the
@@ -409,6 +415,59 @@ impl<Q: Shardable + 'static> AsyncQueue<Q> {
             crash_inflight_deqs: s.crash_inflight_deqs.load(Ordering::Relaxed),
             plan_flips: s.plan_flips.load(Ordering::Relaxed),
         }
+    }
+
+    /// Registry-style metric families from [`AsyncQueue::stats`]. (The
+    /// live ring-occupancy gauge and flush-latency histogram live in the
+    /// global [`crate::obs::registry`], updated by the combiner workers.)
+    pub fn metric_families(&self) -> Vec<crate::obs::Family> {
+        use crate::obs::{Family, Kind, Sample};
+        let s = self.stats();
+        let c = |name: &str, help: &str, v: u64| {
+            Family::scalar(name, help, Kind::Counter, vec![Sample::plain(v as f64)])
+        };
+        vec![
+            c(
+                "persiq_async_submitted_total",
+                "Operations accepted into the submission ring",
+                s.submitted,
+            ),
+            Family::scalar(
+                "persiq_async_resolved_total",
+                "Futures resolved successfully, by kind",
+                Kind::Counter,
+                vec![
+                    Sample::labelled("kind", "enq", s.enq_done as f64),
+                    Sample::labelled("kind", "deq", s.deq_done as f64),
+                    Sample::labelled("kind", "exec", s.exec_done as f64),
+                    Sample::labelled("kind", "empty", s.empties as f64),
+                ],
+            ),
+            c(
+                "persiq_async_failed_total",
+                "Futures resolved with an error (crash, close, queue rejection)",
+                s.failed,
+            ),
+            Family::scalar(
+                "persiq_async_flushes_total",
+                "Explicit group flushes by trigger",
+                Kind::Counter,
+                vec![
+                    Sample::labelled("trigger", "depth", s.depth_flushes as f64),
+                    Sample::labelled("trigger", "deadline", s.deadline_flushes as f64),
+                ],
+            ),
+            c(
+                "persiq_async_backpressure_total",
+                "Submission spins against a full ring",
+                s.backpressure,
+            ),
+            c(
+                "persiq_async_plan_flips_total",
+                "Shard-plan flips observed by the combiners",
+                s.plan_flips,
+            ),
+        ]
     }
 
     /// The active shard-plan epoch of the wrapped queue.

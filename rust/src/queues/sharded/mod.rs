@@ -194,6 +194,7 @@ use crossbeam_utils::CachePadded;
 
 use super::perlcrq::PerLcrq;
 use super::{ConcurrentQueue, PersistentQueue, QueueConfig, QueueError, MAX_SHARDS};
+use crate::obs::{self, ObsSite};
 use crate::pmem::{PAddr, PlacementPolicy, PmemPool, Topology};
 
 use self::batch::BatchLog;
@@ -478,10 +479,15 @@ impl ShardedQueue<PerLcrq> {
                 "placement names a pool outside the topology (check pinned ids vs --pools)",
             ));
         }
-        let shards: Vec<PerLcrq> = shard_pool
-            .iter()
-            .map(|&p| PerLcrq::new(topo.pool(p), nthreads, shard_cfg.clone()))
-            .collect();
+        let shards: Vec<PerLcrq> = {
+            // Stripe-root psyncs during construction are Setup traffic,
+            // not steady-state per-op cost.
+            let _site = obs::enter_site(ObsSite::Setup);
+            shard_pool
+                .iter()
+                .map(|&p| PerLcrq::new(topo.pool(p), nthreads, shard_cfg.clone()))
+                .collect()
+        };
         // The stripe factory resize uses to grow fresh plans: identical
         // configuration, constructed on the resizing thread's slot.
         let ctor = Box::new(move |t: &Topology, pool: usize, tid: usize| {
@@ -534,6 +540,10 @@ impl<Q: Shardable> ShardedQueue<Q> {
                 "placement names a pool outside the topology (check pinned ids vs --pools)",
             ));
         }
+        // Everything below (log allocation, plan-log record + Active
+        // commit) is construction-time persistence: attribute it to the
+        // Setup site so the steady-state ledger starts clean.
+        let _site = obs::enter_site(ObsSite::Setup);
         let log_pool: Vec<usize> = (0..nthreads).map(|t| topo.home_pool(t)).collect();
         let logs = if cfg.batch > 1 {
             (0..nthreads).map(|t| BatchLog::alloc(topo.pool(log_pool[t]), cfg.batch)).collect()
@@ -626,6 +636,20 @@ impl<Q: Shardable> ShardedQueue<Q> {
         })
     }
 
+    /// Occupancy estimate across the active plan's stripes plus any
+    /// draining residue (a [`Shardable::len_hint`] sum — an overestimate
+    /// at worst). Metrics-collector use; walks every stripe.
+    pub fn depth_hint(&self, tid: usize) -> u64 {
+        let set = self.plans.read().unwrap();
+        let live: u64 = set.active.shards.iter().map(|s| s.len_hint(tid)).sum();
+        let frozen: u64 = set
+            .draining
+            .as_ref()
+            .map(|d| d.shards.iter().map(|s| s.len_hint(tid)).sum())
+            .unwrap_or(0);
+        live + frozen
+    }
+
     /// Resize counters (flips, retirements, frozen residue) — the input
     /// to [`crate::verify::resharding_relaxation`].
     pub fn resize_stats(&self) -> ResizeStats {
@@ -636,6 +660,67 @@ impl<Q: Shardable> ShardedQueue<Q> {
             last_residue: self.rstats.last_residue.load(Ordering::Relaxed),
             drained_from_frozen: self.rstats.drained_from_frozen.load(Ordering::Relaxed),
         }
+    }
+
+    /// Registry-style metric families for this queue: resize counters,
+    /// plan-state gauges, and — mid-transition — the per-plan-epoch drain
+    /// residue still held by the frozen plan. `tid` is the calling
+    /// thread's slot (residue probing reads shard state).
+    pub fn metric_families(&self, tid: usize) -> Vec<obs::Family> {
+        use obs::{Family, Kind, Sample};
+        let rs = self.resize_stats();
+        let counter = |name: &str, help: &str, v: u64| {
+            Family::scalar(name, help, Kind::Counter, vec![Sample::plain(v as f64)])
+        };
+        let gauge = |name: &str, help: &str, v: f64| {
+            Family::scalar(name, help, Kind::Gauge, vec![Sample::plain(v)])
+        };
+        let mut out = vec![
+            counter(
+                "persiq_sharded_resize_flips_total",
+                "Committed re-shard plan flips",
+                rs.flips,
+            ),
+            counter(
+                "persiq_sharded_resize_retires_total",
+                "Frozen plans durably retired",
+                rs.retires,
+            ),
+            counter(
+                "persiq_sharded_resize_residue_total",
+                "Items left in frozen plans at flip time (cumulative)",
+                rs.residue_total,
+            ),
+            counter(
+                "persiq_sharded_resize_drained_total",
+                "Items drained out of frozen plans (dequeues + recovery moves)",
+                rs.drained_from_frozen,
+            ),
+            gauge(
+                "persiq_sharded_resize_last_residue",
+                "Items the most recent flip left in its frozen plan",
+                rs.last_residue as f64,
+            ),
+            gauge(
+                "persiq_sharded_plan_epoch",
+                "Active plan epoch (1 = construction-time plan)",
+                self.plan_epoch() as f64,
+            ),
+            gauge("persiq_sharded_shards", "Stripes in the active plan", self.shard_count() as f64),
+        ];
+        // Per-plan-epoch drain residue: a labelled sample only while a
+        // frozen plan is draining (empty family otherwise).
+        let residue = match self.draining_info(tid) {
+            Some((epoch, _, residue)) => vec![Sample::labelled("epoch", epoch, residue as f64)],
+            None => Vec::new(),
+        };
+        out.push(Family::scalar(
+            "persiq_sharded_draining_residue",
+            "Items still held by the frozen (draining) plan, by its epoch",
+            Kind::Gauge,
+            residue,
+        ));
+        out
     }
 
     /// Configured enqueue batch size (1 = per-op persistence).
@@ -714,8 +799,11 @@ impl<Q: Shardable> ShardedQueue<Q> {
         let slot = self.slot(tid);
         let lp = self.log_pool[tid];
         let mut pools_mask = 0u64;
+        let mut enq_sealed = 0usize;
+        let mut deq_sealed = 0usize;
         if self.batch > 1 && slot.pending > 0 {
             self.logs[tid].seal(self.topo.pool(lp), tid, slot.pending, slot.seq);
+            enq_sealed = slot.pending;
             slot.pending = 0;
             slot.seq += 1;
             pools_mask |= slot.enq_pools | (1 << lp);
@@ -723,14 +811,43 @@ impl<Q: Shardable> ShardedQueue<Q> {
         }
         if self.batch_deq > 1 && slot.deq_pending > 0 {
             self.deq_logs[tid].seal(self.topo.pool(lp), tid, slot.deq_pending, slot.deq_seq);
+            deq_sealed = slot.deq_pending;
             slot.deq_pending = 0;
             slot.deq_seq += 1;
             pools_mask |= slot.deq_pools | (1 << lp);
             slot.deq_pools = 0;
         }
-        for p in 0..self.topo.len() {
-            if pools_mask & (1 << p) != 0 {
-                self.topo.pool(p).psync(tid);
+        if pools_mask != 0 {
+            // Attribute the group-commit psyncs: a flush realizing an
+            // enqueue batch is the 1/B stream (BatchFlush) even when a
+            // dequeue log rides along; a pure dequeue-log seal is the
+            // 1/K stream (DeqFlush). The site ledger separates the two
+            // so `tests/obs_ledger` can assert each bound independently.
+            // An explicit ambient scope (recovery's forward-drain runs
+            // flushes under Recovery) wins — those psyncs are transition
+            // cost, not steady-state amortization.
+            let ambient = obs::current_site();
+            let site = if ambient != ObsSite::Op {
+                ambient
+            } else if enq_sealed > 0 {
+                ObsSite::BatchFlush
+            } else {
+                ObsSite::DeqFlush
+            };
+            let _site = obs::enter_site(site);
+            for p in 0..self.topo.len() {
+                if pools_mask & (1 << p) != 0 {
+                    self.topo.pool(p).psync(tid);
+                }
+            }
+            if obs::trace::enabled() {
+                let now = self.topo.vtime(tid);
+                if enq_sealed > 0 {
+                    obs::trace::batch_seal(tid, now, "enq", enq_sealed, pools_mask);
+                }
+                if deq_sealed > 0 {
+                    obs::trace::batch_seal(tid, now, "deq", deq_sealed, pools_mask);
+                }
             }
         }
         pools_mask
@@ -906,7 +1023,13 @@ impl<Q: Shardable> ShardedQueue<Q> {
                 "placement names a pool outside the topology (check pinned ids vs --pools)",
             ));
         }
-        let shards: Vec<Q> = shard_pool.iter().map(|&p| ctor(&self.topo, p, tid)).collect();
+        let stage_start = self.topo.vtime(tid);
+        let shards: Vec<Q> = {
+            // Fresh-stripe root psyncs (one per stripe) are the Resize
+            // half of the transition's `new_k + 3` bound.
+            let _site = obs::enter_site(ObsSite::Resize);
+            shard_pool.iter().map(|&p| ctor(&self.topo, p, tid)).collect()
+        };
         let plan = Arc::new(Plan::new(
             epoch,
             shards,
@@ -921,11 +1044,16 @@ impl<Q: Shardable> ShardedQueue<Q> {
         let primary = self.topo.primary();
         let old_slot = self.cur_slot.load(Ordering::Relaxed);
         let new_slot = 1 - old_slot;
-        self.plan_log.write_record(primary, tid, new_slot, epoch, &plan.shard_pool);
-        primary.psync(tid);
-        // The commit point: durably Freezing(old, new).
-        self.plan_log.set_freezing(primary, tid, old_slot, epoch);
-        primary.psync(tid);
+        {
+            // Record + freeze commit: two of the three PlanCommit psyncs
+            // (the retire in `try_retire_locked` is the third).
+            let _site = obs::enter_site(ObsSite::PlanCommit);
+            self.plan_log.write_record(primary, tid, new_slot, epoch, &plan.shard_pool);
+            primary.psync(tid);
+            // The commit point: durably Freezing(old, new).
+            self.plan_log.set_freezing(primary, tid, old_slot, epoch);
+            primary.psync(tid);
+        }
         // Volatile flip — runs only if the commit psync retired, so the
         // durable and volatile views can never cross.
         {
@@ -939,6 +1067,13 @@ impl<Q: Shardable> ShardedQueue<Q> {
         self.rstats.flips.fetch_add(1, Ordering::Relaxed);
         self.rstats.last_residue.store(residue, Ordering::Relaxed);
         self.rstats.residue_total.fetch_add(residue, Ordering::Relaxed);
+        obs::trace::span(
+            tid,
+            stage_start,
+            self.topo.vtime(tid),
+            "resize_flip",
+            format_args!("\"epoch\":{epoch},\"new_k\":{new_k},\"residue\":{residue}"),
+        );
         // An already-empty old plan retires immediately (one psync).
         self.try_retire_locked(tid);
         drop(guard);
@@ -983,17 +1118,23 @@ impl<Q: Shardable> ShardedQueue<Q> {
                 return false;
             }
         }
-        // Retire the old plan with exactly one psync.
+        // Retire the old plan with exactly one psync (the third
+        // PlanCommit psync of the transition).
         let primary = self.topo.primary();
-        self.plan_log.set_active(
-            primary,
-            tid,
-            self.cur_slot.load(Ordering::Relaxed),
-            self.epoch_hint.load(Ordering::Acquire),
-        );
-        primary.psync(tid);
+        let epoch = self.epoch_hint.load(Ordering::Acquire);
+        {
+            let _site = obs::enter_site(ObsSite::PlanCommit);
+            self.plan_log.set_active(primary, tid, self.cur_slot.load(Ordering::Relaxed), epoch);
+            primary.psync(tid);
+        }
         self.plans.write().unwrap().draining = None;
         self.rstats.retires.fetch_add(1, Ordering::Relaxed);
+        obs::trace::event(
+            tid,
+            self.topo.vtime(tid),
+            "plan_retire",
+            format_args!("\"epoch\":{epoch}"),
+        );
         true
     }
 
@@ -1140,6 +1281,11 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
     fn recover(&self, _pool: &PmemPool) {
         let tid = 0;
         let primary = self.topo.primary();
+        // Every psync below — shard recovery, reconciliation, the forward
+        // drain (whose flushes defer to this ambient scope), retirement —
+        // is Recovery traffic in the site ledger.
+        let _site = obs::enter_site(ObsSite::Recovery);
+        let t0 = self.topo.vtime(tid);
         // 1. Adopt the durably committed plan state. The volatile history
         //    covers every epoch the log can name: plans are registered
         //    before their freeze commit, and an uncommitted staged plan
@@ -1180,9 +1326,24 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
                 s.recover(self.topo.pool(plan.shard_pool[i]));
             }
         }
+        let t_shards = self.topo.vtime(tid);
+        obs::trace::span(
+            tid,
+            t0,
+            t_shards,
+            "recover_shards",
+            format_args!("\"plans\":{},\"epoch\":{active_epoch}", history.len()),
+        );
         // 3. Reconcile the plan-epoch-qualified batch logs.
         if self.batch > 1 || self.batch_deq > 1 {
             self.reconcile();
+            obs::trace::span(
+                tid,
+                t_shards,
+                self.topo.vtime(tid),
+                "recover_reconcile",
+                format_args!(""),
+            );
         }
         // 4. Reset volatile dispatch state; bump seqs so fresh batches can
         //    never collide with stale (already reconciled) log entries.
@@ -1200,6 +1361,7 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
         // 5. Converge a mid-transition crash: forward-drain the frozen
         //    residue into the active plan and retire with one psync.
         if let Some(old) = draining {
+            let t_drain = self.topo.vtime(tid);
             let mut moved = 0u64;
             for s in &old.shards {
                 while let Ok(Some(v)) = s.dequeue(tid) {
@@ -1224,6 +1386,13 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
             primary.psync(tid);
             self.plans.write().unwrap().draining = None;
             self.rstats.retires.fetch_add(1, Ordering::Relaxed);
+            obs::trace::span(
+                tid,
+                t_drain,
+                self.topo.vtime(tid),
+                "recover_drain",
+                format_args!("\"moved\":{moved}"),
+            );
         }
         // 6. Prune the plan history: the logs were cleared and every
         //    slot's seq bumped, so no entry can reference an older

@@ -7,45 +7,11 @@ use super::engine::NBINS;
 
 /// Compute `(stats\[8\], hist[NBINS])` exactly like `model.metrics` does:
 /// normalize to `[min, max)`, 64-bucket histogram, moments, CDF quantiles.
+/// The math lives in [`crate::obs::summary::cdf_metrics`] (relocated
+/// verbatim, still cross-checked bit-for-bit-ish against the PJRT
+/// artifact by the integration tests).
 pub fn metrics(samples: &[f64]) -> ([f64; 8], Vec<f64>) {
-    let valid: Vec<f64> = samples.iter().cloned().filter(|&x| x >= 0.0).collect();
-    let count = valid.len() as f64;
-    if valid.is_empty() {
-        return ([0.0; 8], vec![0.0; NBINS]);
-    }
-    let mn = valid.iter().cloned().fold(f64::INFINITY, f64::min);
-    let mx = valid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    let width = (mx - mn).max(1e-6);
-    let mut hist = vec![0.0f64; NBINS];
-    let mut sum = 0.0;
-    let mut sumsq = 0.0;
-    for &x in &valid {
-        let n = (x - mn) / (width * (1.0 + 1e-6));
-        let b = ((n * NBINS as f64) as usize).min(NBINS - 1);
-        hist[b] += 1.0;
-        sum += n;
-        sumsq += n * n;
-    }
-    let mean_n = sum / count;
-    let var_n = (sumsq / count - mean_n * mean_n).max(0.0);
-    let mean = mn + mean_n * width;
-    let std = var_n.sqrt() * width;
-    // Quantiles from the histogram CDF, matching model.metrics.
-    let quantile = |p: f64| -> f64 {
-        let target = p * count;
-        let mut cum = 0.0;
-        for (i, h) in hist.iter().enumerate() {
-            cum += h;
-            if cum >= target {
-                return mn + (i as f64 + 1.0) / NBINS as f64 * width;
-            }
-        }
-        mx
-    };
-    (
-        [count, mean, std, mn, mx, quantile(0.50), quantile(0.95), quantile(0.99)],
-        hist,
-    )
+    crate::obs::summary::cdf_metrics(samples, NBINS)
 }
 
 /// Closed-form least-squares of `t(n) = n/(a + b·n)` (linearized), exactly

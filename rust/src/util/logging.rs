@@ -1,7 +1,25 @@
-//! Tiny leveled logger writing to stderr. Controlled by `PERSIQ_LOG`
-//! (error|warn|info|debug|trace) or programmatically via [`set_level`].
+//! Tiny leveled logger writing to stderr. Controlled by `PERSIQ_LOG` or
+//! programmatically via [`set_level`].
+//!
+//! `PERSIQ_LOG` accepts a comma-separated directive list: a bare level
+//! (`error|warn|info|debug|trace`) sets the global threshold, and
+//! `<module>=<level>` overrides it for one module subtree (matched by
+//! module-path prefix, with or without the leading `persiq::`), e.g.:
+//!
+//! ```text
+//! PERSIQ_LOG=warn,coordinator=debug,persiq::queues::sharded=trace
+//! ```
+//!
+//! Records carry a timestamp (seconds since the first log call) and the
+//! issuing module path:
+//!
+//! ```text
+//! [persiq INFO     0.142s persiq::coordinator::broker] lease reaped job=7
+//! ```
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Log severity level.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -13,40 +31,95 @@ pub enum Level {
     Trace = 4,
 }
 
+fn parse_level(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(2); // Info default
+static DIRECTIVES: OnceLock<Vec<(String, u8)>> = OnceLock::new();
+static START: OnceLock<Instant> = OnceLock::new();
 static INIT: std::sync::Once = std::sync::Once::new();
 
 fn init_from_env() {
     INIT.call_once(|| {
+        START.get_or_init(Instant::now);
+        let mut dirs: Vec<(String, u8)> = Vec::new();
         if let Ok(v) = std::env::var("PERSIQ_LOG") {
-            let lvl = match v.to_ascii_lowercase().as_str() {
-                "error" => Level::Error,
-                "warn" => Level::Warn,
-                "info" => Level::Info,
-                "debug" => Level::Debug,
-                "trace" => Level::Trace,
-                _ => Level::Info,
-            };
-            LEVEL.store(lvl as u8, Ordering::Relaxed);
+            for part in v.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                if let Some((target, lvl)) = part.split_once('=') {
+                    if let Some(l) = parse_level(lvl.trim()) {
+                        dirs.push((target.trim().to_string(), l as u8));
+                    }
+                } else if let Some(l) = parse_level(part) {
+                    LEVEL.store(l as u8, Ordering::Relaxed);
+                }
+            }
         }
+        let _ = DIRECTIVES.set(dirs);
     });
 }
 
-/// Set the global log level.
+/// Does `dir` name `target`'s module or an ancestor of it? Accepts
+/// directives with or without the `persiq::` crate prefix.
+fn dir_matches(dir: &str, target: &str) -> bool {
+    let stripped = target.strip_prefix("persiq::").unwrap_or(target);
+    for cand in [target, stripped] {
+        if cand == dir || (cand.starts_with(dir) && cand[dir.len()..].starts_with("::")) {
+            return true;
+        }
+    }
+    false
+}
+
+/// The most specific (longest-prefix) directive for `target`, falling
+/// back to the global level.
+fn effective_level(dirs: &[(String, u8)], target: &str) -> u8 {
+    let mut best = LEVEL.load(Ordering::Relaxed);
+    let mut best_len = 0usize;
+    for (dir, lvl) in dirs {
+        if dir.len() >= best_len && dir_matches(dir, target) {
+            best = *lvl;
+            best_len = dir.len();
+        }
+    }
+    best
+}
+
+/// Set the global log level (module directives from `PERSIQ_LOG` still
+/// take precedence for their subtrees).
 pub fn set_level(lvl: Level) {
     init_from_env();
     LEVEL.store(lvl as u8, Ordering::Relaxed);
 }
 
-/// Is `lvl` currently enabled?
+/// Is `lvl` enabled at the global threshold?
 pub fn enabled(lvl: Level) -> bool {
     init_from_env();
     (lvl as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
-/// Emit a log record (used by the macros).
-pub fn log(lvl: Level, args: std::fmt::Arguments) {
-    if enabled(lvl) {
+/// Is `lvl` enabled for module `target` (honoring `PERSIQ_LOG`
+/// per-module directives)?
+pub fn enabled_for(lvl: Level, target: &str) -> bool {
+    init_from_env();
+    let dirs = DIRECTIVES.get().map(|v| v.as_slice()).unwrap_or(&[]);
+    (lvl as u8) <= effective_level(dirs, target)
+}
+
+/// Emit a log record (used by the macros, which pass `module_path!()`).
+pub fn log(lvl: Level, target: &str, args: std::fmt::Arguments) {
+    if enabled_for(lvl, target) {
         let tag = match lvl {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -54,18 +127,19 @@ pub fn log(lvl: Level, args: std::fmt::Arguments) {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[persiq {tag}] {args}");
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+        eprintln!("[persiq {tag} {t:>9.3}s {target}] {args}");
     }
 }
 
 #[macro_export]
-macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) } }
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($t)*)) } }
 #[macro_export]
-macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) } }
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($t)*)) } }
 #[macro_export]
-macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) } }
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($t)*)) } }
 #[macro_export]
-macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($t)*)) } }
 
 #[cfg(test)]
 mod tests {
@@ -80,5 +154,30 @@ mod tests {
         set_level(Level::Trace);
         assert!(enabled(Level::Debug));
         set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn directive_matching() {
+        assert!(dir_matches("persiq::coordinator", "persiq::coordinator::broker"));
+        assert!(dir_matches("coordinator", "persiq::coordinator::broker"));
+        assert!(dir_matches("persiq::coordinator::broker", "persiq::coordinator::broker"));
+        assert!(!dir_matches("persiq::coord", "persiq::coordinator::broker"));
+        assert!(!dir_matches("persiq::queues", "persiq::coordinator::broker"));
+    }
+
+    #[test]
+    fn most_specific_directive_wins() {
+        set_level(Level::Info);
+        let dirs = vec![
+            ("persiq::queues".to_string(), Level::Error as u8),
+            ("persiq::queues::sharded".to_string(), Level::Trace as u8),
+        ];
+        assert_eq!(
+            effective_level(&dirs, "persiq::queues::sharded::plan"),
+            Level::Trace as u8
+        );
+        assert_eq!(effective_level(&dirs, "persiq::queues::lcrq"), Level::Error as u8);
+        assert_eq!(effective_level(&dirs, "persiq::pmem::pool"), Level::Info as u8);
+        set_level(Level::Info);
     }
 }

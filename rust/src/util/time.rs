@@ -34,26 +34,18 @@ pub struct Stats {
     pub max: f64,
 }
 
-/// Compute [`Stats`] (population std) over `xs`.
+/// Compute [`Stats`] (population std) over `xs`. Delegates to the
+/// crate's one summarizer ([`crate::obs::summary`]) so every report
+/// agrees on the math.
 pub fn stats(xs: &[f64]) -> Stats {
-    if xs.is_empty() {
-        return Stats::default();
-    }
-    let n = xs.len();
-    let mean = xs.iter().sum::<f64>() / n as f64;
-    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
-    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    Stats { n, mean, std: var.sqrt(), min, max }
+    let m = crate::obs::summary::moments(xs);
+    Stats { n: m.n, mean: m.mean, std: m.std, min: m.min, max: m.max }
 }
 
-/// Percentile (nearest-rank) over a *sorted* slice.
+/// Percentile (nearest-rank) over a *sorted* slice. Delegates to
+/// [`crate::obs::summary::percentile_sorted`].
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
-    sorted[rank.min(sorted.len()) - 1]
+    crate::obs::summary::percentile_sorted(sorted, p)
 }
 
 /// Busy-wait for approximately `ns` nanoseconds (no syscall, no yield).

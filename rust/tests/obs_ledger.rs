@@ -1,0 +1,254 @@
+//! The psync-by-site ledger checks: the paper's persistence-cost
+//! accounting (`1/B + 1/K` psyncs per op pair in steady state, `new_k +
+//! 3` per re-shard transition) asserted against `persiq::obs`'s site
+//! attribution — plus the golden-schema check for the JSONL event trace.
+//!
+//! These tests pin the *attribution*, not just the totals the older
+//! integration tests bound: a steady-state run must charge every psync
+//! to `BatchFlush`/`DeqFlush` (zero to `Resize`/`Recovery`), a resize
+//! must cost exactly `new_k` `Resize` + 3 `PlanCommit` psyncs, and
+//! recovery must capture all of its traffic — including the flushes of
+//! its forward drain — under `Recovery`.
+
+use persiq::obs::{self, ObsSite, SiteLedger};
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::pmem::{CostModel, PmemConfig, Topology};
+use persiq::queues::sharded::ShardedQueue;
+use persiq::queues::{ConcurrentQueue, PersistentQueue, QueueConfig};
+use persiq::util::rng::Xoshiro256;
+
+fn mk(nthreads: usize, shards: usize, batch: usize, batch_deq: usize) -> (Topology, ShardedQueue) {
+    let topo = Topology::single(PmemConfig {
+        capacity_words: 1 << 22,
+        cost: CostModel::zero(),
+        evict_prob: 0.25,
+        pending_flush_prob: 0.5,
+        seed: 71,
+    });
+    let q = ShardedQueue::new_perlcrq(
+        &topo,
+        nthreads,
+        QueueConfig { shards, batch, batch_deq, ring_size: 1 << 10, ..Default::default() },
+    )
+    .unwrap();
+    (topo, q)
+}
+
+fn delta(after: &SiteLedger, before: &SiteLedger, site: ObsSite) -> u64 {
+    after.psyncs_at(site) - before.psyncs_at(site)
+}
+
+/// Steady state, single pool, B = K = 8: every psync is a batch-seal
+/// group commit — `n/B` to `BatchFlush`, `n/K` to `DeqFlush`, exactly 0
+/// anywhere else (construction aside, which is all `Setup`).
+#[test]
+fn steady_state_psyncs_attribute_to_flush_sites_only() {
+    let (b, k, n) = (8u64, 8u64, 512u64);
+    let (topo, q) = mk(1, 4, b as usize, k as usize);
+    let setup = topo.site_ledger();
+    assert!(setup.psyncs_at(ObsSite::Setup) > 0, "construction commits are Setup traffic");
+    assert_eq!(setup.psyncs_at(ObsSite::BatchFlush), 0);
+
+    for v in 0..n {
+        q.enqueue(0, v).unwrap();
+    }
+    for _ in 0..n {
+        assert!(q.dequeue(0).unwrap().is_some());
+    }
+
+    let l = topo.site_ledger();
+    assert_eq!(l.psyncs_at(ObsSite::BatchFlush), n / b, "one group commit per sealed batch");
+    assert_eq!(l.psyncs_at(ObsSite::DeqFlush), n / k, "one group commit per sealed deq log");
+    assert_eq!(l.psyncs_at(ObsSite::Op), 0, "batched mode defers every per-op psync");
+    assert_eq!(l.psyncs_at(ObsSite::Resize), 0, "steady state must not pay resize psyncs");
+    assert_eq!(l.psyncs_at(ObsSite::PlanCommit), 0);
+    assert_eq!(l.psyncs_at(ObsSite::Recovery), 0);
+    assert_eq!(l.psyncs_at(ObsSite::BrokerAck), 0);
+
+    // The paper's headline bound, per completed enqueue+dequeue pair.
+    let steady = l.psyncs_at(ObsSite::BatchFlush) + l.psyncs_at(ObsSite::DeqFlush);
+    let per_pair = steady as f64 / n as f64;
+    assert!(
+        per_pair <= 1.0 / b as f64 + 1.0 / k as f64 + 1e-9,
+        "steady-state psyncs/op-pair {per_pair} exceeds 1/B + 1/K"
+    );
+
+    // The ledger is a partition of the aggregate counter: no psync may
+    // escape attribution.
+    assert_eq!(l.total_psyncs(), topo.stats_total().psyncs);
+    assert_eq!(l.total_pwbs(), topo.stats_total().pwbs);
+}
+
+/// A quiescent resize costs exactly `new_k` fresh-stripe psyncs
+/// (`Resize`) plus 3 plan-log commits (`PlanCommit`: record, freeze,
+/// retire) — and nothing on the steady-state sites.
+#[test]
+fn resize_costs_new_k_resize_plus_three_plan_commit_psyncs() {
+    let new_k = 8usize;
+    let (topo, q) = mk(1, 4, 8, 8);
+    let before = topo.site_ledger();
+    q.resize(0, new_k).unwrap();
+    let after = topo.site_ledger();
+
+    assert_eq!(
+        delta(&after, &before, ObsSite::Resize),
+        new_k as u64,
+        "one root psync per fresh stripe"
+    );
+    assert_eq!(
+        delta(&after, &before, ObsSite::PlanCommit),
+        3,
+        "record + freeze + retire are the transition's plan commits"
+    );
+    assert_eq!(delta(&after, &before, ObsSite::BatchFlush), 0);
+    assert_eq!(delta(&after, &before, ObsSite::DeqFlush), 0);
+    assert_eq!(delta(&after, &before, ObsSite::Op), 0);
+    assert_eq!(q.plan_epoch(), 2, "the grown plan must be active");
+
+    // Steady state after the transition: back to flush-site-only psyncs.
+    let resumed = topo.site_ledger();
+    for v in 0..64u64 {
+        q.enqueue(0, v).unwrap();
+    }
+    for _ in 0..64 {
+        assert!(q.dequeue(0).unwrap().is_some());
+    }
+    let l = topo.site_ledger();
+    assert_eq!(delta(&l, &resumed, ObsSite::Resize), 0);
+    assert_eq!(delta(&l, &resumed, ObsSite::PlanCommit), 0);
+    assert!(delta(&l, &resumed, ObsSite::BatchFlush) > 0);
+}
+
+/// Recovery charges every psync — shard recovery, reconciliation, and
+/// the forward drain's internal flushes (ambient-scope precedence) — to
+/// `Recovery`, never to the steady-state sites.
+#[test]
+fn recovery_psyncs_attribute_to_recovery_not_flush_sites() {
+    install_quiet_crash_hook();
+    let (topo, q) = mk(1, 4, 8, 8);
+    for v in 0..64u64 {
+        q.enqueue(0, v).unwrap();
+    }
+    q.flush(0);
+    let mut rng = Xoshiro256::seed_from(5);
+    topo.crash(&mut rng);
+
+    let before = topo.site_ledger();
+    q.recover(topo.primary());
+    let after = topo.site_ledger();
+
+    assert!(
+        delta(&after, &before, ObsSite::Recovery) > 0,
+        "recovery's reconciliation psyncs must be attributed"
+    );
+    assert_eq!(
+        delta(&after, &before, ObsSite::BatchFlush),
+        0,
+        "recovery-internal flushes must not masquerade as steady-state batch seals"
+    );
+    assert_eq!(delta(&after, &before, ObsSite::DeqFlush), 0);
+    assert_eq!(delta(&after, &before, ObsSite::Op), 0);
+
+    // The recovered queue still serves its contents.
+    let mut got = Vec::new();
+    while let Ok(Some(v)) = q.dequeue(0) {
+        got.push(v);
+    }
+    got.sort_unstable();
+    assert_eq!(got, (0..64).collect::<Vec<u64>>());
+}
+
+/// The exposition layer renders every family of the stack into
+/// parseable Prometheus text with the ledger as labelled counters.
+#[test]
+fn exposition_renders_sharded_and_ledger_families() {
+    let (topo, q) = mk(1, 4, 8, 8);
+    for v in 0..32u64 {
+        q.enqueue(0, v).unwrap();
+    }
+    q.flush(0);
+    let mut fams = topo.metric_families();
+    fams.extend(q.metric_families(0));
+    fams.extend(obs::ledger_families(&topo.site_ledger()));
+    let text = obs::render(&fams);
+    for needle in [
+        "# TYPE persiq_pmem_psyncs_total counter",
+        "# TYPE persiq_sharded_plan_epoch gauge",
+        "# TYPE persiq_pmem_psyncs_by_site_total counter",
+        "persiq_pmem_psyncs_by_site_total{site=\"BatchFlush\"}",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    // Prometheus text invariants: every non-comment line is
+    // `name{labels} value` with a parseable float value.
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let (_, value) = line.rsplit_once(' ').expect("sample lines are name value");
+        assert!(value.parse::<f64>().is_ok(), "unparseable sample value in {line:?}");
+    }
+}
+
+/// Golden-schema check for the JSONL trace: every line carries
+/// `ts`/`tid`/`type`, and each event type carries its required keys.
+/// Tracing state is process-global, so this single test owns the whole
+/// arm → workload → flush lifecycle.
+#[test]
+fn trace_jsonl_golden_schema() {
+    let path =
+        std::env::temp_dir().join(format!("persiq_obs_ledger_trace_{}.jsonl", std::process::id()));
+    obs::trace::start(&path);
+
+    let (topo, q) = mk(1, 4, 8, 8);
+    for v in 0..64u64 {
+        q.enqueue(0, v).unwrap();
+    }
+    for _ in 0..32 {
+        assert!(q.dequeue(0).unwrap().is_some());
+    }
+    q.resize(0, 8).unwrap();
+    q.flush(0);
+    let _ = topo;
+
+    let rep = obs::trace::stop().unwrap().expect("trace was armed");
+    let text = std::fs::read_to_string(&rep.path).unwrap();
+    let _ = std::fs::remove_file(&rep.path);
+    assert!(rep.written > 0, "the workload must have emitted events");
+
+    let required: &[(&str, &[&str])] = &[
+        ("psync", &["\"site\":", "\"pool\":", "\"drained\":"]),
+        ("batch_seal", &["\"kind\":", "\"n\":", "\"pools\":"]),
+        ("span", &["\"name\":", "\"start\":", "\"dur\":"]),
+        ("event", &["\"name\":"]),
+        ("future", &["\"stage\":", "\"idx\":"]),
+    ];
+    let mut last_ts = 0u64;
+    let mut seen_psync = false;
+    let mut seen_seal = false;
+    for line in text.lines() {
+        assert!(
+            line.starts_with("{\"ts\":") && line.ends_with('}'),
+            "line must be a ts-led JSON object: {line:?}"
+        );
+        let ts: u64 = line["{\"ts\":".len()..]
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect::<String>()
+            .parse()
+            .unwrap();
+        assert!(ts >= last_ts, "merged trace must be ts-sorted");
+        last_ts = ts;
+        assert!(line.contains("\"tid\":"), "missing tid: {line:?}");
+        let typ = required
+            .iter()
+            .find(|(t, _)| line.contains(&format!("\"type\":\"{t}\"")))
+            .unwrap_or_else(|| panic!("unknown event type in {line:?}"));
+        for key in typ.1 {
+            assert!(line.contains(key), "{} event missing {key}: {line:?}", typ.0);
+        }
+        seen_psync |= typ.0 == "psync";
+        seen_seal |= typ.0 == "batch_seal";
+    }
+    assert!(seen_psync && seen_seal, "workload must emit psync and batch_seal events");
+}
