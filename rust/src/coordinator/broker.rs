@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::obs::{self, ObsSite};
-use crate::pmem::{GAddr, PmemPool, Topology, WORDS_PER_LINE};
+use crate::pmem::{GAddr, PAddr, PmemPool, Topology, WORDS_PER_LINE};
 use crate::queues::asyncq::{AsyncCfg, AsyncQueue, DeqFuture, EnqFuture, ExecFuture};
 use crate::queues::perlcrq::PerLcrq;
 use crate::queues::sharded::ShardedQueue;
@@ -81,46 +81,61 @@ pub struct Broker {
 /// Persistent per-thread submission logs: each thread `t` owns a
 /// line-aligned region `[count][handles...]` on its home pool; `count` is
 /// persisted after each appended handle (handles are packed [`GAddr`]s).
+///
+/// The owning pool and bare in-pool address are resolved **once** at
+/// allocation: the append hot path issues pool-direct primitives instead
+/// of re-unpacking `pools[g.pool]` behind every [`Topology`] accessor
+/// (previously ~7 qualified round-trips per submit: one load, two
+/// stores, two pwbs, the psync dispatch — each indexing the pool table
+/// anew).
 struct SubmitLog {
-    base: Vec<GAddr>,
+    slots: Vec<LogSlot>,
     cap: usize,
+}
+
+/// One thread's log: its home pool and the log's base word within it.
+struct LogSlot {
+    pool: Arc<PmemPool>,
+    base: PAddr,
 }
 
 impl SubmitLog {
     fn alloc(topo: &Topology, nthreads: usize, cap: usize) -> Self {
-        let base: Vec<GAddr> = (0..nthreads)
+        let slots: Vec<LogSlot> = (0..nthreads)
             .map(|t| {
-                topo.alloc_on(
-                    topo.home_pool(t),
+                let pool = topo.home_pool(t);
+                let b = topo.alloc_on(
+                    pool,
                     (cap + WORDS_PER_LINE).next_multiple_of(WORDS_PER_LINE),
                     WORDS_PER_LINE,
-                )
+                );
+                // Each log is written by exactly one thread (SWSR).
+                topo.set_hot(b, cap + WORDS_PER_LINE, crate::pmem::Hotness::Private);
+                LogSlot { pool: Arc::clone(topo.pool(pool)), base: b.addr }
             })
             .collect();
-        // Each log is written by exactly one thread (SWSR).
-        for &b in &base {
-            topo.set_hot(b, cap + WORDS_PER_LINE, crate::pmem::Hotness::Private);
-        }
-        Self { base, cap }
+        Self { slots, cap }
     }
 
-    fn append(&self, topo: &Topology, tid: usize, job: JobId) {
-        let b = self.base[tid];
-        let n = topo.load(tid, b);
+    fn append(&self, tid: usize, job: JobId) {
+        let LogSlot { pool, base: b } = &self.slots[tid];
+        let b = *b;
+        let n = pool.load(tid, b);
         assert!((n as usize) < self.cap, "submission log full; raise capacity");
-        topo.store(tid, b.add(1 + n as usize), job.0.to_u64());
-        topo.store(tid, b, n + 1);
+        pool.store(tid, b.add(1 + n as usize), job.0.to_u64());
+        pool.store(tid, b, n + 1);
         // One line flush covers count+early entries; entry line may differ.
-        topo.pwb(tid, b.add(1 + n as usize));
-        topo.pwb(tid, b);
-        topo.psync_pool(tid, b.pool as usize);
+        pool.pwb(tid, b.add(1 + n as usize));
+        pool.pwb(tid, b);
+        pool.psync(tid);
     }
 
-    fn entries(&self, topo: &Topology, tid: usize) -> Vec<JobId> {
-        let b = self.base[tid];
-        let n = topo.load(tid, b) as usize;
+    fn entries(&self, tid: usize) -> Vec<JobId> {
+        let LogSlot { pool, base: b } = &self.slots[tid];
+        let b = *b;
+        let n = pool.load(tid, b) as usize;
         (0..n)
-            .map(|i| JobId(GAddr::from_u64(topo.load(tid, b.add(1 + i)))))
+            .map(|i| JobId(GAddr::from_u64(pool.load(tid, b.add(1 + i)))))
             .collect()
     }
 }
@@ -258,7 +273,7 @@ impl Broker {
         // Record durable before it becomes reachable.
         t.pwb(tid, rec);
         t.psync_pool(tid, rec.pool as usize);
-        self.submit_log.append(t, tid, JobId(rec));
+        self.submit_log.append(tid, JobId(rec));
         Ok(JobId(rec))
     }
 
@@ -445,6 +460,12 @@ impl Broker {
     /// [`ShardedQueue::resize`]): an admin operation safe under live
     /// producers, workers and flushers. `tid` must be the caller's
     /// exclusive thread slot. Requires a sharded broker.
+    ///
+    /// Progress: with epoch-pinned plan access the transition never
+    /// blocks an in-flight operation — submits, takes and combiner
+    /// flushes keep running through the flip; only this call waits (for
+    /// the flip's bounded grace period). The CLI surfaces it as
+    /// `persiq resize` and `persiq serve --resize K`, both unchanged.
     pub fn resize(&self, tid: usize, new_k: usize) -> Result<u64, QueueError> {
         let Some(sharded) = &self.sharded else {
             return Err(QueueError::BadConfig(
@@ -596,7 +617,7 @@ impl Broker {
             }
         }
         for t in 0..self.nthreads {
-            for job in self.submit_log.entries(&self.topo, t) {
+            for job in self.submit_log.entries(t) {
                 if self.state(tid, job) == JobState::Pending
                     && !present.contains(&job.0.to_u64())
                 {
@@ -643,7 +664,7 @@ impl Broker {
     pub fn audit(&self, tid: usize) -> BrokerAudit {
         let mut a = BrokerAudit::default();
         for t in 0..self.nthreads {
-            for job in self.submit_log.entries(&self.topo, t) {
+            for job in self.submit_log.entries(t) {
                 a.submitted += 1;
                 match self.state(tid, job) {
                     JobState::Done => a.done += 1,
@@ -700,7 +721,7 @@ impl Broker {
         // single persistent words, so a torn log yields 0 (pool 0,
         // unwritten), never an out-of-range pool.
         for t in 0..self.nthreads {
-            for job in self.submit_log.entries(&self.topo, t) {
+            for job in self.submit_log.entries(t) {
                 rep.audit.submitted += 1;
                 rep.per_pool_submitted[job.0.pool as usize] += 1;
                 match self.state(tid, job) {

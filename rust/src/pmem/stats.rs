@@ -6,6 +6,21 @@
 //! [`ObsSite`] (per-site ledger arrays), so the paper's persistence
 //! accounting can be checked per code path, not just in aggregate; see
 //! [`crate::obs::site`].
+//!
+//! ## False-sharing audit (epoch-pinning PR)
+//!
+//! Every hot counter in this module is already cache-line isolated:
+//! [`PoolStats`] wraps each thread's whole [`OpCounters`] block —
+//! including both per-site arrays — in a `CachePadded` slot, and a
+//! thread only ever touches its own slot, so the ~200-byte struct spans
+//! lines no other thread writes. The pools' shared per-thread vclocks
+//! are likewise `CachePadded` (see `pool.rs::SharedState`; its `homes`
+//! array is unpadded but write-once at construction and read-only
+//! after). The counters that *did* false-share — multi-writer atomics
+//! packed into one line — lived above this layer and were padded in the
+//! same PR: `ShardedQueue`'s `ResizeCells` (every dequeuer bumps
+//! `drained_from_frozen` during a drain) and the async layer's
+//! `AsyncStats`.
 
 use crossbeam_utils::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -302,9 +302,11 @@ fn worker_loop<Q: Shardable + 'static>(shared: Arc<Shared<Q>>, tid: usize) {
         "Microseconds from an explicit flush's oldest admitted op to its group psync",
     );
     // The shard-plan epoch this combiner last operated under: re-sharding
-    // flips are observed between batches (the queue's own dispatch reads
+    // flips are observed between batches (the queue's own dispatch pins
     // the live plan per op; this is the combiner-side observation point
-    // for stats and exec closures).
+    // for stats and exec closures). `plan_epoch()` is a plain atomic
+    // hint — with epoch-pinned plan access there is no lock anywhere on
+    // this loop, so a concurrent `resize` never stalls a combiner.
     let mut plan_epoch = q.plan_epoch();
 
     let outcome = run_guarded(|| {

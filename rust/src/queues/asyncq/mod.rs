@@ -68,6 +68,8 @@ pub mod future;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crossbeam_utils::CachePadded;
+
 use crate::pmem::Topology;
 use crate::queues::perlcrq::PerLcrq;
 use crate::queues::sharded::{Shardable, ShardedQueue};
@@ -158,19 +160,25 @@ pub struct AsyncStats {
     pub plan_flips: u64,
 }
 
+/// Volatile async-layer counters. Padded per counter: `submitted` /
+/// `backpressure` are bumped by every submitting thread while
+/// `enq_done` / `deq_done` / `exec_done` are bumped by the combiners —
+/// packed into one struct these RMWs would all contend on one or two
+/// cache lines (the same false-sharing audit that padded the sharded
+/// layer's `ResizeCells`; see `pmem/stats.rs` module docs).
 #[derive(Default)]
 pub(crate) struct StatCells {
-    pub submitted: AtomicU64,
-    pub enq_done: AtomicU64,
-    pub deq_done: AtomicU64,
-    pub exec_done: AtomicU64,
-    pub empties: AtomicU64,
-    pub failed: AtomicU64,
-    pub depth_flushes: AtomicU64,
-    pub deadline_flushes: AtomicU64,
-    pub backpressure: AtomicU64,
-    pub crash_inflight_deqs: AtomicU64,
-    pub plan_flips: AtomicU64,
+    pub submitted: CachePadded<AtomicU64>,
+    pub enq_done: CachePadded<AtomicU64>,
+    pub deq_done: CachePadded<AtomicU64>,
+    pub exec_done: CachePadded<AtomicU64>,
+    pub empties: CachePadded<AtomicU64>,
+    pub failed: CachePadded<AtomicU64>,
+    pub depth_flushes: CachePadded<AtomicU64>,
+    pub deadline_flushes: CachePadded<AtomicU64>,
+    pub backpressure: CachePadded<AtomicU64>,
+    pub crash_inflight_deqs: CachePadded<AtomicU64>,
+    pub plan_flips: CachePadded<AtomicU64>,
 }
 
 /// Observer invoked with a payload value at an async-layer event (e.g.

@@ -167,6 +167,23 @@
 //! scans) and after; a resize itself costs `new_K + 3` psyncs (one per
 //! fresh stripe, record + freeze + retire).
 //!
+//! **Plan-access concurrency (epoch pinning).** Hot paths reach the
+//! plan pair through an epoch-pinned pointer, not a lock (see
+//! [`epoch`]): every enqueue/dequeue pins its own cache-padded slot,
+//! reads the published [`plan::PlanSet`] snapshot, and unpins on
+//! return — wait-free, no shared lock word, no refcount traffic. A
+//! plan flip (freeze, retire, recovery adoption) swaps the pointer and
+//! then waits out a **grace period** — volatile-only, zero psyncs —
+//! until every pinned reader has passed through a quiescent point. An
+//! op pinned across the freeze flip may therefore still enqueue into
+//! the now-frozen plan *within the grace window*; `resize` reads the
+//! frozen residue and runs retirement verification only after the
+//! window closes, which restores the old lock's invariant ("no
+//! enqueue lands in a frozen stripe") at the point it is actually
+//! consumed. Durability points are unmoved: record/freeze/retire
+//! psyncs happen exactly where they did under the lock, so the
+//! `new_K + 3` budget and the crash-sweep behavior are unchanged.
+//!
 //! **Crash recovery.** Batch-log entries are plan-epoch-qualified, so
 //! reconciliation resolves every logged position against the plan
 //! generation it was recorded under (a volatile plan history keyed by
@@ -183,12 +200,13 @@
 //! [`ShardedQueue::resize_stats`]).
 
 pub mod batch;
+pub mod epoch;
 pub mod plan;
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 
 use crossbeam_utils::CachePadded;
 
@@ -198,6 +216,7 @@ use crate::obs::{self, ObsSite};
 use crate::pmem::{PAddr, PlacementPolicy, PmemPool, Topology};
 
 use self::batch::BatchLog;
+use self::epoch::{EpochRegistry, PlanCell};
 use self::plan::{Plan, PlanLog, PlanSet, PlanState};
 pub use self::plan::ResizeStats;
 
@@ -392,14 +411,19 @@ struct Slot(UnsafeCell<SlotState>);
 
 unsafe impl Sync for Slot {}
 
-/// Volatile resize counters (see [`ResizeStats`]).
+/// Volatile resize counters (see [`ResizeStats`]). Each counter sits on
+/// its own cache line: `drained_from_frozen` is `fetch_add`ed by **every
+/// dequeuer** while a frozen plan drains, and an unpadded block would
+/// put that RMW traffic on the same line as the read-mostly gauges (the
+/// same false-sharing audit that padded `AsyncStats` — the per-thread
+/// pmem `OpCounters` were already isolated, see `pmem/stats.rs`).
 #[derive(Default)]
 struct ResizeCells {
-    flips: AtomicU64,
-    retires: AtomicU64,
-    residue_total: AtomicU64,
-    last_residue: AtomicU64,
-    drained_from_frozen: AtomicU64,
+    flips: CachePadded<AtomicU64>,
+    retires: CachePadded<AtomicU64>,
+    residue_total: CachePadded<AtomicU64>,
+    last_residue: CachePadded<AtomicU64>,
+    drained_from_frozen: CachePadded<AtomicU64>,
 }
 
 /// The sharded (and optionally batched) persistent queue. See module docs.
@@ -407,10 +431,18 @@ pub struct ShardedQueue<Q: Shardable = PerLcrq> {
     topo: Topology,
     /// The epoch-versioned plan pair the hot paths dispatch over: the
     /// active plan (enqueue target) plus, mid-transition, the frozen old
-    /// plan still being drained. Readers hold the lock across a whole
-    /// operation, so a plan flip (write lock) linearizes against every
-    /// in-flight op — no enqueue can land in a frozen stripe.
-    plans: RwLock<PlanSet<Q>>,
+    /// plan still being drained. Published as an immutable snapshot
+    /// behind an epoch-pinned pointer (see [`epoch`]): readers pin their
+    /// own cache-padded slot for the duration of an operation — no
+    /// shared lock word, no refcount traffic — and a plan flip swaps the
+    /// pointer, then waits out a grace period before the displaced
+    /// snapshot is freed or its frozen side trusted drained. The old
+    /// "no enqueue lands in a frozen stripe after the flip" lock
+    /// invariant is relaxed to "…after the flip's grace period":
+    /// `resize` reads residue and verifies retirement only post-grace.
+    plans: PlanCell<PlanSet<Q>>,
+    /// Per-thread pin slots guarding [`ShardedQueue::plans`].
+    epochs: EpochRegistry,
     /// Every plan generation created since the last recovery, by epoch:
     /// batch-log reconciliation resolves epoch-qualified entries against
     /// retired generations too (their sealed logs outlive retirement).
@@ -575,7 +607,8 @@ impl<Q: Shardable> ShardedQueue<Q> {
         history.insert(1, Arc::clone(&initial));
         Ok(Self {
             topo: topo.clone(),
-            plans: RwLock::new(PlanSet { active: initial, draining: None }),
+            plans: PlanCell::new(Arc::new(PlanSet { active: initial, draining: None })),
+            epochs: EpochRegistry::new(nthreads),
             history: Mutex::new(history),
             plan_log,
             resize_lock: Mutex::new(()),
@@ -604,9 +637,13 @@ impl<Q: Shardable> ShardedQueue<Q> {
         })
     }
 
-    /// The active plan (test/reconciliation observability).
+    /// The active plan (test/reconciliation observability). Cold path,
+    /// no `tid`: serializes against plan flips via the resize lock
+    /// instead of pinning (a flip is impossible while the guard is
+    /// held, so the owner-side snapshot clone is safe).
     pub(crate) fn active_plan(&self) -> Arc<Plan<Q>> {
-        Arc::clone(&self.plans.read().unwrap().active)
+        let _g = self.resize_guard();
+        Arc::clone(&self.plans.load_owner().active)
     }
 
     /// Number of shards in the **active** plan.
@@ -630,7 +667,7 @@ impl<Q: Shardable> ShardedQueue<Q> {
     /// exactly one plan. `residue` is a [`Shardable::len_hint`] sum —
     /// an overestimate at worst, never an undercount.
     pub fn draining_info(&self, tid: usize) -> Option<(u64, usize, u64)> {
-        let set = self.plans.read().unwrap();
+        let set = self.epochs.pin(&self.plans, tid);
         set.draining.as_ref().map(|d| {
             (d.epoch, d.shards.len(), d.shards.iter().map(|s| s.len_hint(tid)).sum())
         })
@@ -640,7 +677,7 @@ impl<Q: Shardable> ShardedQueue<Q> {
     /// draining residue (a [`Shardable::len_hint`] sum — an overestimate
     /// at worst). Metrics-collector use; walks every stripe.
     pub fn depth_hint(&self, tid: usize) -> u64 {
-        let set = self.plans.read().unwrap();
+        let set = self.epochs.pin(&self.plans, tid);
         let live: u64 = set.active.shards.iter().map(|s| s.len_hint(tid)).sum();
         let frozen: u64 = set
             .draining
@@ -707,6 +744,30 @@ impl<Q: Shardable> ShardedQueue<Q> {
                 self.plan_epoch() as f64,
             ),
             gauge("persiq_sharded_shards", "Stripes in the active plan", self.shard_count() as f64),
+            // Epoch-pinned plan access (see [`epoch`]): hot-path pin
+            // traffic plus the cold writer-side flip/grace counters (the
+            // per-wait distribution is the registry histogram
+            // `persiq_epoch_grace_wait_rounds`).
+            counter(
+                "persiq_epoch_pins_total",
+                "Outermost plan pins taken (one per queue operation)",
+                self.epochs.pins_total(),
+            ),
+            counter(
+                "persiq_epoch_unpins_total",
+                "Completed plan unpins (pins minus currently-live pins)",
+                self.epochs.unpins_total(),
+            ),
+            counter(
+                "persiq_epoch_plan_flips_total",
+                "Plan-pointer flips published through the epoch cell",
+                self.epochs.flips_total(),
+            ),
+            counter(
+                "persiq_epoch_grace_spins_total",
+                "Cumulative spin rounds plan writers burned waiting out grace periods",
+                self.epochs.grace_spins_total(),
+            ),
         ];
         // Per-plan-epoch drain residue: a labelled sample only while a
         // frozen plan is draining (empty family otherwise).
@@ -758,10 +819,12 @@ impl<Q: Shardable> ShardedQueue<Q> {
     }
 
     fn enqueue_impl(&self, tid: usize, item: u64) -> Result<(), QueueError> {
-        // The read lock is held across the whole operation: a plan flip
-        // (write lock) therefore linearizes against it — no enqueue can
-        // land in a stripe after it froze.
-        let set = self.plans.read().unwrap();
+        // Pin (own cache line, no shared RMW) for the whole operation: a
+        // plan flip swaps the pointer immediately but waits out this pin
+        // before trusting the frozen side — an enqueue through a stale
+        // pin lands in the frozen plan *within the flip's grace period*,
+        // and `resize` reads residue / verifies retirement only after it.
+        let set = self.epochs.pin(&self.plans, tid);
         let plan = &set.active;
         let slot = self.slot(tid);
         let order = &plan.enq_orders[self.home(tid)];
@@ -882,7 +945,11 @@ impl<Q: Shardable> ShardedQueue<Q> {
 
     fn dequeue_impl(&self, tid: usize) -> Result<Option<u64>, QueueError> {
         let (result, retire_candidate) = {
-            let set = self.plans.read().unwrap();
+            // Pin scoped to the scans only: it MUST drop before
+            // `try_retire` below, whose retirement flip waits out a
+            // grace period — waiting on this thread's own pin would
+            // self-deadlock.
+            let set = self.epochs.pin(&self.plans, tid);
             let mut retire = false;
             let mut res = None;
             // Drain priority: frozen stripes are scanned first, so
@@ -977,6 +1044,14 @@ impl<Q: Shardable> ShardedQueue<Q> {
     /// thread's exclusive slot (construction of the new stripes and the
     /// transition psyncs are charged to it).
     ///
+    /// Progress: concurrent ops are never blocked by a resize — they
+    /// pin, dispatch, and unpin wait-free throughout. The resize itself
+    /// waits out a bounded-spin grace period after the flip (until
+    /// every op that pinned the pre-flip plan set returns), so it
+    /// completes as soon as in-flight ops do; only a reader stalled
+    /// *inside* an operation can delay it, and it delays only the
+    /// resize, never other traffic.
+    ///
     /// Cost: `new_k + 3` psyncs for the whole transition (one per fresh
     /// stripe, record + freeze + retire); steady-state psyncs/op are
     /// untouched outside it.
@@ -997,16 +1072,15 @@ impl<Q: Shardable> ShardedQueue<Q> {
         let guard = self.resize_guard();
         // At most one transition in flight: the plan log holds exactly
         // one spare record slot. Try to finish a lingering drain first.
-        // (The read guard must drop before try_retire_locked re-locks —
-        // same-thread read re-entry can deadlock against a queued
-        // writer.)
-        let has_draining = { self.plans.read().unwrap().draining.is_some() };
+        // (Owner-side snapshot reads are safe here: flips are serialized
+        // under the resize lock this thread holds.)
+        let has_draining = self.plans.load_owner().draining.is_some();
         if has_draining && !self.try_retire_locked(tid) {
             return Err(QueueError::BadConfig(
                 "a re-shard transition is still draining; retry once consumers drain it",
             ));
         }
-        let old = Arc::clone(&self.plans.read().unwrap().active);
+        let old = Arc::clone(&self.plans.load_owner().active);
         if new_k == old.shards.len() {
             return Ok(old.epoch); // no-op
         }
@@ -1055,14 +1129,27 @@ impl<Q: Shardable> ShardedQueue<Q> {
             primary.psync(tid);
         }
         // Volatile flip — runs only if the commit psync retired, so the
-        // durable and volatile views can never cross.
-        {
-            let mut set = self.plans.write().unwrap();
-            set.draining = Some(Arc::clone(&old));
-            set.active = Arc::clone(&plan);
-        }
+        // durable and volatile views can never cross. Pointer swap, not
+        // lock: ops pinned before this instant may keep using the
+        // displaced snapshot (enqueues land in the now-frozen plan)
+        // until the grace period below ends.
+        let displaced = self
+            .plans
+            .swap(&self.epochs, Arc::new(PlanSet {
+                active: Arc::clone(&plan),
+                draining: Some(Arc::clone(&old)),
+            }));
         self.cur_slot.store(new_slot, Ordering::Relaxed);
         self.epoch_hint.store(epoch, Ordering::Release);
+        // Grace period (volatile-only — zero pmem traffic, so the
+        // `new_k + 3` psync budget is untouched): after this, no reader
+        // holds the displaced snapshot — in particular no stale enqueue
+        // can land in the frozen plan anymore, which is what makes the
+        // residue read and every later retirement verification sound.
+        // (An unwind before this free leaks the snapshot — deliberate:
+        // a stalled reader may still hold it, and recovery re-derives
+        // all volatile plan state.)
+        displaced.free_after_grace(&self.epochs, tid);
         let residue: u64 = old.shards.iter().map(|s| s.len_hint(tid)).sum();
         self.rstats.flips.fetch_add(1, Ordering::Relaxed);
         self.rstats.last_residue.store(residue, Ordering::Relaxed);
@@ -1098,18 +1185,20 @@ impl<Q: Shardable> ShardedQueue<Q> {
     }
 
     fn try_retire_locked(&self, tid: usize) -> bool {
-        let old = {
-            let set = self.plans.read().unwrap();
-            match &set.draining {
-                None => return true,
-                Some(o) => Arc::clone(o),
-            }
+        let set = self.plans.load_owner();
+        let old = match &set.draining {
+            None => return true,
+            Some(o) => Arc::clone(o),
         };
         // Verify emptiness stripe by stripe. `len_hint` never reports 0
         // while a completed item is present, and the plan is enqueue-
-        // frozen, so a zero here is a permanent witness. The dequeue
-        // scans' drained flags are only a fast path — retirement always
-        // re-verifies against the rings themselves.
+        // frozen (the freezing flip's grace period elapsed before its
+        // `resize` returned, so no stale pin can enqueue into it), so a
+        // zero here is a permanent witness. The dequeue scans' drained
+        // flags are only a fast path — retirement always re-verifies
+        // against the rings themselves, and resetting a flag to `false`
+        // on residue also self-corrects any witness a stale grace-window
+        // enqueue invalidated (consumers resume scanning that stripe).
         for (i, s) in old.shards.iter().enumerate() {
             if s.len_hint(tid) == 0 {
                 old.drained[i].store(true, Ordering::Relaxed);
@@ -1127,7 +1216,14 @@ impl<Q: Shardable> ShardedQueue<Q> {
             self.plan_log.set_active(primary, tid, self.cur_slot.load(Ordering::Relaxed), epoch);
             primary.psync(tid);
         }
-        self.plans.write().unwrap().draining = None;
+        // Drop the frozen plan out of the dispatch path: swap in a
+        // draining-free snapshot, then grace-wait before freeing the
+        // displaced one (readers still scanning the frozen stripes see
+        // only empty rings — retirement was just verified).
+        let displaced = self
+            .plans
+            .swap(&self.epochs, Arc::new(PlanSet { active: Arc::clone(&set.active), draining: None }));
+        displaced.free_after_grace(&self.epochs, tid);
         self.rstats.retires.fetch_add(1, Ordering::Relaxed);
         obs::trace::event(
             tid,
@@ -1258,7 +1354,10 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
         self.flush(tid);
         let slot = self.slot(tid);
         slot.ticket = self.ticket_seed.fetch_add(1, Ordering::Relaxed);
-        let scan = self.plans.read().unwrap().active.deq_orders[self.home(tid)].len();
+        // A pinned read of one length — the first call site converted
+        // off the old plan lock (a full lock acquisition to read a
+        // `Vec::len` was the poster child for the per-op tax).
+        let scan = self.epochs.pin(&self.plans, tid).active.deq_orders[self.home(tid)].len();
         slot.cursor = (slot.ticket % scan as u64) as usize;
     }
 
@@ -1312,11 +1411,15 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
         let draining = draining_epoch.map(|e| {
             Arc::clone(history.get(&e).expect("frozen plan must be in the volatile history"))
         });
-        {
-            let mut set = self.plans.write().unwrap();
-            set.active = Arc::clone(&active);
-            set.draining = draining.clone();
-        }
+        // Quiescent flip: recovery runs with every worker stopped (a
+        // simulated crash unwinds through the RAII pin guards, so no
+        // slot can be left pinned) — the grace sweep returns instantly.
+        self.plans
+            .swap(&self.epochs, Arc::new(PlanSet {
+                active: Arc::clone(&active),
+                draining: draining.clone(),
+            }))
+            .free_after_grace(&self.epochs, tid);
         self.epoch_hint.store(active_epoch, Ordering::Release);
         // 2. Recover every generation's stripes — retired plans too:
         //    sealed batch logs may still reference their positions, and
@@ -1384,7 +1487,9 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
                 active_epoch,
             );
             primary.psync(tid);
-            self.plans.write().unwrap().draining = None;
+            self.plans
+                .swap(&self.epochs, Arc::new(PlanSet { active: Arc::clone(&active), draining: None }))
+                .free_after_grace(&self.epochs, tid);
             self.rstats.retires.fetch_add(1, Ordering::Relaxed);
             obs::trace::span(
                 tid,
@@ -2163,6 +2268,51 @@ mod tests {
         );
         let st = q.resize_stats();
         assert_eq!((st.flips, st.retires, st.last_residue), (1, 1, 0));
+    }
+
+    #[test]
+    fn resize_waits_for_a_stalled_pinned_reader() {
+        // The stalled-reader property at the queue level: a resize's
+        // flip must not complete its grace period — and so must not
+        // read residue, verify retirement, or free the displaced plan
+        // set — while an operation is still pinned to the old snapshot.
+        use std::sync::atomic::AtomicBool;
+        use std::sync::mpsc;
+        let (_p, q) = mk(2, 1);
+        let q = Arc::new(q);
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let (unpin_tx, unpin_rx) = mpsc::channel::<()>();
+        let reader = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                // A mid-operation reader, stalled while pinned.
+                let set = q.epochs.pin(&q.plans, 1);
+                ready_tx.send(set.active.epoch).unwrap();
+                unpin_rx.recv().unwrap();
+                assert_eq!(set.active.epoch, 1, "the pinned snapshot must stay intact");
+                assert!(set.draining.is_none());
+            })
+        };
+        assert_eq!(ready_rx.recv().unwrap(), 1);
+        let done = Arc::new(AtomicBool::new(false));
+        let resizer = {
+            let (q, done) = (Arc::clone(&q), Arc::clone(&done));
+            std::thread::spawn(move || {
+                assert_eq!(q.resize(0, 4), Ok(2));
+                done.store(true, Ordering::SeqCst);
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(
+            !done.load(Ordering::SeqCst),
+            "resize must stay in its grace period while a reader is pinned"
+        );
+        unpin_tx.send(()).unwrap();
+        reader.join().unwrap();
+        resizer.join().unwrap();
+        assert!(done.load(Ordering::SeqCst));
+        assert_eq!(q.plan_epoch(), 2);
+        assert!(q.draining_info(0).is_none(), "empty old plan still retires inside resize");
     }
 
     #[test]

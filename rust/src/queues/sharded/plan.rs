@@ -85,7 +85,14 @@ impl<Q> Plan<Q> {
     }
 }
 
-/// The volatile plan pair the hot paths dispatch over.
+/// The volatile plan pair the hot paths dispatch over. Since the
+/// epoch-pinning refactor this is an **immutable snapshot**: every
+/// transition (freeze, retire, recovery adoption) builds a fresh
+/// `PlanSet` and publishes it through the queue's
+/// [`super::epoch::PlanCell`] pointer swap — in-place mutation would
+/// race with pinned readers. The `Arc<Plan>` members are shared across
+/// snapshots (and with the recovery history), so a snapshot is two
+/// refcounted pointers, not a copy of the stripes.
 pub(crate) struct PlanSet<Q> {
     /// Where enqueues stripe (and dequeues fall back to).
     pub active: Arc<Plan<Q>>,

@@ -119,6 +119,60 @@ fn resize_costs_new_k_resize_plus_three_plan_commit_psyncs() {
     assert!(delta(&l, &resumed, ObsSite::BatchFlush) > 0);
 }
 
+/// Epoch pinning is volatile-only: a burst of hot-path plan accesses —
+/// pure pinned reads plus full enqueue/dequeue pin cycles — adds
+/// **zero** psyncs and pwbs beyond the group-commit budget the
+/// lock-based hot path paid. The pin counters prove the traffic really
+/// ran through the epoch protocol rather than around it.
+#[test]
+fn epoch_pin_unpin_adds_zero_psyncs() {
+    let (b, k, n) = (8u64, 8u64, 256u64);
+    let (topo, q) = mk(1, 4, b as usize, k as usize);
+    let before = topo.site_ledger();
+    let pwbs_before = topo.stats_total().pwbs;
+
+    // Pure plan reads: pin, deref, unpin — no persistence traffic.
+    for _ in 0..1_000 {
+        assert!(q.draining_info(0).is_none());
+        assert_eq!(q.plan_epoch(), 1);
+    }
+    let mid = topo.site_ledger();
+    assert_eq!(mid.total_psyncs(), before.total_psyncs(), "pinned reads must not psync");
+    assert_eq!(topo.stats_total().pwbs, pwbs_before, "pinned reads must not pwb");
+
+    // Operations pin too; their psyncs stay exactly the group-commit
+    // budget — the pin protocol contributes nothing.
+    for v in 0..n {
+        q.enqueue(0, v).unwrap();
+    }
+    for _ in 0..n {
+        assert!(q.dequeue(0).unwrap().is_some());
+    }
+    let l = topo.site_ledger();
+    assert_eq!(delta(&l, &before, ObsSite::BatchFlush), n / b);
+    assert_eq!(delta(&l, &before, ObsSite::DeqFlush), n / k);
+    assert_eq!(
+        l.total_psyncs() - before.total_psyncs(),
+        n / b + n / k,
+        "pin/unpin cycles added psyncs"
+    );
+
+    // The traffic above really was epoch-pinned.
+    let fams = q.metric_families(0);
+    let count = |name: &str| {
+        fams.iter()
+            .find(|f| f.name == name)
+            .unwrap_or_else(|| panic!("missing family {name}"))
+            .samples[0]
+            .value
+    };
+    let pins = count("persiq_epoch_pins_total");
+    let unpins = count("persiq_epoch_unpins_total");
+    assert!(pins >= (1_000 + 2 * n) as f64, "expected a pin per access, saw {pins}");
+    assert_eq!(pins, unpins, "every pin must have been released");
+    assert_eq!(count("persiq_epoch_plan_flips_total"), 0.0, "no flip without a resize");
+}
+
 /// Recovery charges every psync — shard recovery, reconciliation, and
 /// the forward drain's internal flushes (ambient-scope precedence) — to
 /// `Recovery`, never to the steady-state sites.

@@ -117,6 +117,62 @@ fn crash_swept_through_every_resize_phase() {
     }
 }
 
+/// Crash landing around the flip's grace window while a worker hammers
+/// the epoch-pinned hot path. The armed countdown (decremented by pmem
+/// primitives on *both* threads) fires at an arbitrary point in the
+/// transition — including while the resize thread is spinning out its
+/// grace period with the worker pinned. The worker's `CrashSignal`
+/// unwinds through its RAII pin guard, so recovery starts quiescent;
+/// the decisive check is the **follow-up resize**: a pin leaked across
+/// the crash would park that resize's grace wait forever (this test
+/// hangs instead of failing an assertion).
+#[test]
+fn crash_during_grace_window_releases_pins() {
+    install_quiet_crash_hook();
+    for j in [4u64, 9, 17, 33, 57, 96] {
+        let (topo, q) = mk_cap(1, 4, 4, 4, 0.5, 0.3, 500 + j, 1 << 18);
+        for v in 0..24u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        q.flush_all();
+        topo.arm_crash_after(j);
+        let wq = Arc::clone(&q);
+        let worker = std::thread::spawn(move || {
+            let _ = run_guarded(|| {
+                for i in 0..100_000u64 {
+                    wq.enqueue(1, 1_000 + i).unwrap();
+                    let _ = wq.dequeue(1).unwrap();
+                }
+            });
+        });
+        let _ = run_guarded(|| {
+            let _ = q.resize(0, 6);
+        });
+        worker.join().unwrap();
+        let mut rng = Xoshiro256::seed_from(700 + j);
+        topo.crash(&mut rng);
+        q.recover(topo.primary());
+        assert!(q.draining_info(0).is_none(), "j={j}: recovery left two plans");
+        let got = drain(&q, 0);
+        let n = got.len();
+        let mut sorted = got;
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), n, "j={j}: duplicate delivery");
+        // Completes only if every pin taken before the crash was
+        // released by the unwind.
+        let e = q.resize(2, 3).expect("post-recovery resize must commit");
+        assert_eq!(q.plan_epoch(), e, "j={j}: epoch hint out of step");
+        assert!(
+            q.draining_info(0).is_none(),
+            "j={j}: empty-queue resize must retire immediately"
+        );
+        q.enqueue(3, 7).unwrap();
+        q.flush_all();
+        assert_eq!(q.dequeue(0).unwrap(), Some(7));
+    }
+}
+
 /// Crash mid-drain: freeze with residue, consume part of it (per-op
 /// durable consumption), crash, recover. Strict mode (`batch_deq = 1`)
 /// allows no redelivery at all: returned + recovered-drain must be
