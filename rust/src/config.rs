@@ -178,6 +178,8 @@ impl Config {
         c.queue.batch = doc.get_u64("queue", "batch", c.queue.batch as u64) as usize;
         c.queue.batch_deq =
             doc.get_u64("queue", "batch_deq", c.queue.batch_deq as u64) as usize;
+        c.queue.block = doc.get_u64("queue", "block", c.queue.block as u64) as usize;
+        c.queue.dchoice = doc.get_u64("queue", "dchoice", c.queue.dchoice as u64) as usize;
 
         let pools = doc.get_u64("topology", "pools", c.pools as u64) as usize;
         if pools < 1 || pools > MAX_POOLS {
@@ -248,13 +250,15 @@ mod tests {
     fn doc_overrides() {
         let doc = crate::util::toml::parse(
             "[pmem]\ncapacity_words = 1024\n[pmem.cost]\npwb_ns = 999\n\
-             [queue]\nring_size = 64\n[bench]\nops = 7\nseed = 8\n",
+             [queue]\nring_size = 64\nblock = 32\ndchoice = 3\n[bench]\nops = 7\nseed = 8\n",
         )
         .unwrap();
         let c = Config::from_doc(&doc);
         assert_eq!(c.pmem.capacity_words, 1024);
         assert_eq!(c.pmem.cost.pwb_ns, 999);
         assert_eq!(c.queue.ring_size, 64);
+        assert_eq!(c.queue.block, 32);
+        assert_eq!(c.queue.dchoice, 3);
         assert_eq!(c.bench_ops, 7);
         assert_eq!(c.seed, 8);
         // Untouched keys keep defaults.

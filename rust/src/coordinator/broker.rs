@@ -182,7 +182,11 @@ pub struct ReconcileReport {
     pub plan: (u64, usize),
     /// Mid-transition: `(frozen epoch, frozen shard count, residue)` of
     /// a plan still draining after a `resize`; `None` when the queue has
-    /// exactly one plan (always the case post-recovery).
+    /// exactly one plan (always the case post-recovery). The residue is
+    /// a `len_hint` sum over the frozen stripes — an **upper bound** on
+    /// the undrained items (it may overcount in-flight consumption, and
+    /// never undercounts to 0 while an item remains), so reports must
+    /// label it `residue <= N`, not an exact occupancy.
     pub draining_plan: Option<(u64, usize, u64)>,
     /// Cumulative resize counters of the work queue (zeroes when
     /// non-sharded).
@@ -775,7 +779,8 @@ impl Broker {
         if let Some(sharded) = &self.sharded {
             out.push(Family::scalar(
                 "persiq_broker_queue_depth",
-                "Handles on the work queue (len-hint estimate, incl. draining residue)",
+                "Handles on the work queue (len-hint upper bound, incl. draining residue; \
+                 may overcount, never undercounts to 0 while occupied)",
                 Kind::Gauge,
                 vec![Sample::plain(sharded.depth_hint(tid) as f64)],
             ));

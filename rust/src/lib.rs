@@ -42,7 +42,11 @@
 //!   shrink K **online** — freeze commit in one psync, drain-priority
 //!   dequeue scans empty the frozen stripes, retirement is one psync,
 //!   and crash recovery rolls a mid-transition crash forward to exactly
-//!   one plan.
+//!   one plan. One step further out on the amortization curve,
+//!   [`queues::blockfifo`] claims **whole blocks** per FAI and seals
+//!   them per psync (BlockFIFO/MultiFIFO-style, durably): `~1/block`
+//!   FAIs and psyncs per operation on *both* endpoints, in exchange for
+//!   bounded FIFO relaxation and block-sized crash windows.
 //! * [`verify`] — history recording and a durable-linearizability checker,
 //!   including the k-relaxed FIFO mode ([`verify::check_relaxed`]) that
 //!   machine-verifies sharded histories up to bounded shard skew, plus

@@ -50,8 +50,8 @@ use persiq::util::cli::{Args, Command};
 use persiq::util::report::{fnum, Csv};
 use persiq::util::rng::entropy_seed;
 use persiq::verify::{
-    calibrate_relaxation, check_with, overtake_stats, relaxation_for, resharding_relaxation,
-    CheckOptions, History,
+    calibrate_relaxation, check_with, options_for, overtake_stats, relaxation_for,
+    resharding_relaxation, CheckOptions, History,
 };
 use persiq::{log_info, log_warn};
 
@@ -157,12 +157,14 @@ struct QueueArgs;
 impl QueueArgs {
     /// Register the shared queue/topology options on a subcommand.
     fn register(cmd: Command) -> Command {
-        cmd.opt("shards", "shard count for sharded algorithms")
+        cmd.opt("shards", "shard count for sharded algorithms (lane count for blockfifo)")
             .opt("batch", "enqueue batch size for sharded algorithms (1 = per-op persistence)")
             .opt(
                 "batch-deq",
                 "dequeue batch size for sharded algorithms (1 = per-op persistence)",
             )
+            .opt("block", "blockfifo block size: entries claimed per FAI / sealed per psync")
+            .opt("dchoice", "blockfifo-multi: lanes each dequeue samples before stealing")
             .opt("pools", "NVM pools (sockets), each with its own bandwidth chain (default 1)")
             .opt("placement", "shard placement: interleave | colocate | pinned:<p0,p1,...>")
     }
@@ -195,6 +197,8 @@ impl QueueArgs {
         cfg.queue.shards = a.get_parse("shards", cfg.queue.shards)?;
         cfg.queue.batch = a.get_parse("batch", cfg.queue.batch)?;
         cfg.queue.batch_deq = a.get_parse("batch-deq", cfg.queue.batch_deq)?;
+        cfg.queue.block = a.get_parse("block", cfg.queue.block)?;
+        cfg.queue.dchoice = a.get_parse("dchoice", cfg.queue.dchoice)?;
         cfg.pools = a.get_parse("pools", cfg.pools)?;
         anyhow::ensure!(
             cfg.pools >= 1 && cfg.pools <= MAX_POOLS,
@@ -564,14 +568,32 @@ fn cmd_verify(args: &[String]) -> Result<()> {
              bound from the observed overtake distribution (default: static formula per \
              algorithm)",
         )
+        .flag(
+            "async",
+            "verify through the async completion layer: histories recorded at the \
+             future boundaries get the same checker gate as sync runs (implies --algo \
+             sharded-perlcrq; durability-gated resolution means zero trailing \
+             allowances)",
+        )
         .opt("seed", "RNG seed");
-    let cmd = QueueArgs::register_resharding(QueueArgs::register(cmd));
+    let cmd =
+        QueueArgs::register_resharding(QueueArgs::register_async(QueueArgs::register(cmd)));
     let a = cmd.parse(args)?;
     let mut cfg = Config::load_default();
     QueueArgs::apply(&mut cfg, &a)?;
     let seed = a.get_parse::<u64>("seed", entropy_seed())?;
     log_info!("verify seed = {seed}");
     let sched = cfg.resharding;
+    if a.flag("async") {
+        let spec = a.get("algo").unwrap_or("all");
+        if spec != "all" && spec != "sharded-perlcrq" {
+            anyhow::bail!("--async verifies sharded-perlcrq only (got --algo {spec})");
+        }
+        if sched.is_some() {
+            anyhow::bail!("--resharding-schedule is a sync-verify knob (no --async)");
+        }
+        return verify_async(&cfg, &a, seed);
+    }
     let algos = if sched.is_some() {
         // The schedule resizes the concrete sharded queue: pin the algo.
         let spec = a.get("algo").unwrap_or("all");
@@ -648,11 +670,15 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         }
         let drained = drain_all(&as_conc, 0);
         let history = History::from_logs(logs, drained);
-        // Sharded algorithms are k-relaxed FIFO (bounded shard skew plus
-        // batch-reconciliation displacement); everything else is strict.
-        let sharded = algo.starts_with("sharded");
-        let batch = if sharded { cfg.queue.batch } else { 1 };
-        let batch_deq = if sharded { cfg.queue.batch_deq } else { 1 };
+        // The per-algorithm checker policy — relaxation bound, crash-gated
+        // trailing windows, EMPTY-check applicability — comes from one
+        // place (`verify::options_for`), shared with the registry-driven
+        // tests. Sharded algorithms are k-relaxed (bounded shard skew),
+        // blockfifo is k-relaxed with the block as the skew unit;
+        // everything else is strict. Every cycle above ended in a
+        // topology-wide crash, hence `cycles` crashed epochs.
+        let relaxed = algo.starts_with("sharded") || algo.starts_with("blockfifo");
+        let mut opts = options_for(algo, nthreads, &cfg.queue, cycles as u64);
         let static_relax = match (&resharder, &sched) {
             // Across a re-sharding boundary: the steady-state bound at
             // the larger stripe count, plus the observed frozen-shard
@@ -662,7 +688,7 @@ fn cmd_verify(args: &[String]) -> Result<()> {
                 let k = resharding_relaxation(
                     nthreads,
                     s.from_k.max(s.to_k),
-                    batch.max(batch_deq),
+                    cfg.queue.batch.max(cfg.queue.batch_deq),
                     rs.residue_total,
                 );
                 log_info!(
@@ -672,34 +698,21 @@ fn cmd_verify(args: &[String]) -> Result<()> {
                 );
                 k
             }
-            _ => relaxation_for(algo, nthreads, &cfg.queue),
+            _ => opts.relaxation,
         };
-        // Auto-calibration only applies to relaxed (sharded) algorithms:
-        // strict queues are checked at k = 0, and raising their bound to
-        // an observed-plus-headroom value would weaken the check.
-        let relax_auto = a.get("relax") == Some("auto") && sharded;
-        if a.get("relax") == Some("auto") && !sharded {
+        // Auto-calibration only applies to relaxed algorithms: strict
+        // queues are checked at k = 0, and raising their bound to an
+        // observed-plus-headroom value would weaken the check.
+        let relax_auto = a.get("relax") == Some("auto") && relaxed;
+        if a.get("relax") == Some("auto") && !relaxed {
             log_info!("{algo}: strict FIFO algorithm — --relax auto keeps k = 0");
         }
-        let mut opts = CheckOptions {
-            max_report: 10,
-            // "auto" keeps the static bound here (strict algorithms stay
-            // at k = 0; sharded ones are recalibrated below).
-            relaxation: if a.get("relax") == Some("auto") {
-                static_relax
-            } else {
-                a.get_parse("relax", static_relax)?
-            },
-            trailing_loss_per_thread: batch.saturating_sub(1),
-            // Consumer-side group commit: the last K−1 unflushed dequeues
-            // of a crashed epoch may legitimately redeliver.
-            trailing_redelivery_per_thread: batch_deq.saturating_sub(1),
-            // Every cycle above ended in a topology-wide crash.
-            crashed_epochs: cycles as u64,
-            // Buffered durability: an EMPTY may race another thread's
-            // unflushed batch — the interval check is unsound there.
-            check_empty: batch <= 1,
-            collect_overtakes: false,
+        // "auto" keeps the static bound here (strict algorithms stay at
+        // k = 0; relaxed ones are recalibrated below).
+        opts.relaxation = if a.get("relax") == Some("auto") {
+            static_relax
+        } else {
+            a.get_parse("relax", static_relax)?
         };
         let mut auto_note = String::new();
         if relax_auto {
@@ -753,6 +766,110 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         }
     }
     anyhow::ensure!(!failed, "durable-linearizability violations detected");
+    Ok(())
+}
+
+/// `verify --async`: crash cycles through the async completion layer,
+/// with producer histories recorded at the **future boundaries**
+/// (`EnqOk`/`DeqOk` stamp at resolution, which is durability-gated).
+/// Because nothing resolves before its psync, the checker runs with
+/// *zero* trailing-loss/redelivery allowance — stricter than the sync
+/// path's batched windows; only the sharded queue's bounded skew is
+/// allowed (plus `--relax auto` calibration, as in sync mode).
+fn verify_async(cfg: &Config, a: &Args, seed: u64) -> Result<()> {
+    use persiq::harness::{run_async_workload, AsyncRunConfig};
+    use persiq::queues::sharded::ShardedQueue;
+    let producers = a.get_parse::<usize>("threads", 4)?;
+    let cycles = a.get_parse::<usize>("cycles", 4)?;
+    let ops = a.get_parse::<u64>("ops", 40_000)?;
+    let steps = a.get_parse::<u64>("steps", 30_000)?;
+    let nthreads = producers + cfg.asyncq.flushers;
+    log_info!(
+        "async verify: sharded-perlcrq, {producers} producers + {} flushers, \
+         flush-us={} depth={}",
+        cfg.asyncq.flushers,
+        cfg.asyncq.flush_us,
+        cfg.asyncq.depth
+    );
+    let topo = cfg.build_topology();
+    let q = Arc::new(
+        ShardedQueue::new_perlcrq(&topo, nthreads, cfg.queue.clone())
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+    );
+    let mut rng = persiq::util::rng::Xoshiro256::seed_from(seed);
+    let mut logs: Vec<Vec<persiq::verify::Event>> = Vec::new();
+    for cycle in 0..cycles {
+        topo.arm_crash_after(steps);
+        let rc = AsyncRunConfig {
+            producers,
+            total_ops: ops,
+            record: true,
+            salt: cycle as u64 + 1,
+            seed: seed ^ (cycle as u64) << 16,
+            window: cfg.asyncq.depth.max(1),
+            acfg: cfg.asyncq.clone(),
+            ..Default::default()
+        };
+        let r = run_async_workload(&topo, &q, &rc);
+        logs.extend(r.logs);
+        topo.crash(&mut rng);
+        q.recover(topo.primary());
+    }
+    let as_conc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
+    let drained = drain_all(&as_conc, 0);
+    let history = History::from_logs(logs, drained);
+    let static_relax = relaxation_for("sharded-perlcrq", nthreads, &cfg.queue);
+    // Durability-gated resolution: no trailing windows, no EMPTY check
+    // (an async EMPTY may overlap another producer's in-flight batch).
+    let mut opts = CheckOptions {
+        relaxation: if a.get("relax") == Some("auto") {
+            static_relax
+        } else {
+            a.get_parse("relax", static_relax)?
+        },
+        crashed_epochs: cycles as u64,
+        check_empty: false,
+        ..Default::default()
+    };
+    let mut auto_note = String::new();
+    if a.get("relax") == Some("auto") {
+        let probe = check_with(
+            &history,
+            &CheckOptions {
+                relaxation: usize::MAX,
+                collect_overtakes: true,
+                max_report: 0,
+                ..opts
+            },
+        );
+        let stats = overtake_stats(&probe.overtake_counts);
+        let k = calibrate_relaxation(&probe.overtake_counts);
+        auto_note = format!(
+            " [auto: k={k} from {} dequeues (p50={} p99={} max={}); static bound={}]",
+            stats.checked, stats.p50, stats.p99, stats.max, static_relax
+        );
+        opts.relaxation = k;
+    }
+    let rep = check_with(&history, &opts);
+    let status = if rep.ok() { "OK " } else { "FAIL" };
+    println!(
+        "{status} {:<16} enq={} deq={} empties={} drained={} violations={} \
+         max_overtakes={} (relax={}) absorbed: crash={}{}",
+        "async-sharded",
+        rep.enq_completed,
+        rep.deq_values,
+        rep.deq_empties,
+        rep.drained,
+        rep.violations.len(),
+        rep.max_overtakes,
+        opts.relaxation,
+        rep.absorbed_losses,
+        auto_note,
+    );
+    for v in &rep.violations {
+        log_warn!("  async-sharded: {v:?}");
+    }
+    anyhow::ensure!(rep.ok(), "durable-linearizability violations detected (async)");
     Ok(())
 }
 
@@ -1050,7 +1167,9 @@ fn cmd_audit(args: &[String]) -> Result<()> {
             rep.plan.0,
             rep.plan.1,
             rep.draining_plan
-                .map(|(e, k, r)| format!("epoch {e} ({k} stripes, residue {r})"))
+                // The residue is a len_hint sum: an upper bound on the
+                // frozen stripes' undrained items, not an exact count.
+                .map(|(e, k, r)| format!("epoch {e} ({k} stripes, residue <= {r})"))
                 .unwrap_or_else(|| "none".to_string()),
             rep.resize.flips,
             rep.resize.retires

@@ -16,6 +16,7 @@
 //! | [`combining`] | CC-Synch combining; PBQueue, PWFQueue | \[6\], \[9\] |
 //! | [`sharded`] | **ShardedQueue** — K-way striped PerLCRQs + batched persistence | beyond the paper (BlockFIFO / Second-Amendment directions) |
 //! | [`asyncq`] | **AsyncQueue** — futures over the sharded queue, completion gated on the group-commit psync | beyond the paper (flat-combining / durability-point completion) |
+//! | [`blockfifo`] | **BlockFIFO / MultiFIFO** — block-granular claiming (one FAI + one psync per block of `B` ops), d-choice consumer stealing | beyond the paper (arXiv 2507.22764, made persistent) |
 //!
 //! ## Value encoding
 //!
@@ -27,6 +28,7 @@
 //! [`crq`] docs for the exact layout).
 
 pub mod asyncq;
+pub mod blockfifo;
 pub mod combining;
 pub mod crq;
 pub mod durable_msq;
@@ -169,6 +171,19 @@ pub struct QueueConfig {
     /// issue the dequeue-side `Head_i` `pwb` but defer its `psync` to the
     /// outer group-commit layer. Never enable directly.
     pub defer_dequeue_sync: bool,
+    /// Entries per block for [`blockfifo::BlockFifo`]: producers claim
+    /// `block` slots with one FAI and seal them with one psync, so the
+    /// persistence budget is `~1/block` psyncs per enqueue — and the
+    /// relaxation (overtake) bound grows with it. Must be in
+    /// `1..=MAX_BLOCK`; ignored by other algorithms. For blockfifo,
+    /// `ring_size` is reused as the per-lane *block* count and
+    /// `shards` as the lane count.
+    pub block: usize,
+    /// MultiFIFO d-choice width for [`blockfifo::BlockFifo`]'s `-multi`
+    /// mode: each dequeue samples `dchoice` lanes by backlog hint and
+    /// steals from the longest (clamped to the lane count). Must be in
+    /// `1..=MAX_SHARDS`; ignored elsewhere.
+    pub dchoice: usize,
     /// How a [`sharded::ShardedQueue`] maps shards (and their batch
     /// logs) onto the topology's pools, and whether threads prefer their
     /// home socket's shards (see [`crate::pmem::PlacementPolicy`]).
@@ -182,6 +197,10 @@ pub const MAX_SHARDS: usize = 64;
 /// Upper bound on [`QueueConfig::batch`] (keeps the per-thread batch log a
 /// handful of cache lines).
 pub const MAX_BATCH: usize = 32;
+/// Upper bound on [`QueueConfig::block`] (keeps a blockfifo block — header
+/// word plus entries — within a few cache lines and the 16-bit header
+/// count field comfortably in range).
+pub const MAX_BLOCK: usize = 64;
 
 impl Default for QueueConfig {
     fn default() -> Self {
@@ -198,6 +217,8 @@ impl Default for QueueConfig {
             batch_deq: 1,
             defer_enqueue_sync: false,
             defer_dequeue_sync: false,
+            block: 16,
+            dchoice: 2,
             placement: PlacementPolicy::Interleave,
         }
     }
@@ -223,6 +244,12 @@ impl QueueConfig {
         }
         if self.batch_deq == 0 || self.batch_deq > MAX_BATCH {
             return Err(QueueError::BadConfig("batch-deq must be in 1..=32"));
+        }
+        if self.block == 0 || self.block > MAX_BLOCK {
+            return Err(QueueError::BadConfig("block must be in 1..=64"));
+        }
+        if self.dchoice == 0 || self.dchoice > MAX_SHARDS {
+            return Err(QueueError::BadConfig("dchoice must be in 1..=64"));
         }
         if let PlacementPolicy::Pinned(list) = &self.placement {
             if list.is_empty() {
@@ -306,6 +333,18 @@ pub fn registry() -> Vec<(&'static str, fn(&QueueCtx) -> Arc<dyn ConcurrentQueue
                     .expect("invalid sharded config (call QueueConfig::validate first)"),
             )
         }),
+        ("blockfifo", |c| {
+            Arc::new(
+                blockfifo::BlockFifo::new(&c.topo, c.nthreads, c.cfg.clone(), false)
+                    .expect("invalid blockfifo config (call QueueConfig::validate first)"),
+            )
+        }),
+        ("blockfifo-multi", |c| {
+            Arc::new(
+                blockfifo::BlockFifo::new(&c.topo, c.nthreads, c.cfg.clone(), true)
+                    .expect("invalid blockfifo config (call QueueConfig::validate first)"),
+            )
+        }),
     ]
 }
 
@@ -338,6 +377,18 @@ pub fn persistent_registry() -> Vec<(&'static str, fn(&QueueCtx) -> Arc<dyn Pers
             Arc::new(
                 sharded::ShardedQueue::new_perlcrq(&c.topo, c.nthreads, c.cfg.clone())
                     .expect("invalid sharded config (call QueueConfig::validate first)"),
+            )
+        }),
+        ("blockfifo", |c| {
+            Arc::new(
+                blockfifo::BlockFifo::new(&c.topo, c.nthreads, c.cfg.clone(), false)
+                    .expect("invalid blockfifo config (call QueueConfig::validate first)"),
+            )
+        }),
+        ("blockfifo-multi", |c| {
+            Arc::new(
+                blockfifo::BlockFifo::new(&c.topo, c.nthreads, c.cfg.clone(), true)
+                    .expect("invalid blockfifo config (call QueueConfig::validate first)"),
             )
         }),
     ]
@@ -387,6 +438,9 @@ mod tests {
         assert!(persistent_by_name("msq").is_none(), "msq is not persistent");
         assert!(by_name("sharded-perlcrq").is_some());
         assert!(persistent_by_name("sharded-perlcrq").is_some());
+        assert!(by_name("blockfifo").is_some());
+        assert!(persistent_by_name("blockfifo").is_some());
+        assert!(persistent_by_name("blockfifo-multi").is_some());
     }
 
     #[test]
@@ -408,6 +462,14 @@ mod tests {
         let bad = QueueConfig { batch_deq: 0, ..Default::default() };
         assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
         let bad = QueueConfig { batch_deq: MAX_BATCH + 1, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { block: 0, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { block: MAX_BLOCK + 1, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { dchoice: 0, ..Default::default() };
+        assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
+        let bad = QueueConfig { dchoice: MAX_SHARDS + 1, ..Default::default() };
         assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));
         let bad = QueueConfig { ring_size: 100, ..Default::default() };
         assert!(matches!(bad.validate(), Err(QueueError::BadConfig(_))));

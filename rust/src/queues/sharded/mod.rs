@@ -275,7 +275,11 @@ pub trait Shardable: PersistentQueue {
     /// Occupancy estimate with the same one-sided soundness contract as
     /// [`Shardable::maybe_nonempty`]: must never report `0` while an item
     /// whose enqueue completed before the call started is still in the
-    /// queue. Overcounting is allowed (it only delays plan retirement).
+    /// queue. Overcounting is allowed (it only delays plan retirement) —
+    /// the value is strictly an **upper bound** on occupancy, never an
+    /// exact count, and every surface that reports it (the `audit`
+    /// draining residue, `resize` residue columns, the broker's
+    /// `persiq_broker_queue_depth` gauge) must label it as such.
     /// Used to verify a frozen stripe is empty before the old plan is
     /// durably retired, and to size the checker's cross-plan overtake
     /// allowance. Defaults to the binary hint.
@@ -1604,6 +1608,27 @@ mod tests {
             out.push(v);
         }
         out
+    }
+
+    #[test]
+    fn len_hint_is_an_upper_bound_on_occupancy() {
+        // The contract every residue/depth report relies on: the hint may
+        // overcount (draining windows, unflushed batches) but must never
+        // report 0 while a completed item remains — and it settles to 0
+        // once the queue is truly empty.
+        let (_p, q) = mk(2, 4);
+        assert_eq!(q.depth_hint(0), 0, "fresh queue reports empty");
+        for v in 0..20u64 {
+            q.enqueue(0, v).unwrap();
+        }
+        assert!(q.depth_hint(0) >= 20, "hint undercounted live items");
+        for _ in 0..10 {
+            q.dequeue(0).unwrap();
+        }
+        assert!(q.depth_hint(0) >= 10, "hint undercounted after partial drain");
+        let rest = drain(&q, 0);
+        assert_eq!(rest.len(), 10);
+        assert_eq!(q.depth_hint(0), 0, "hint must settle once drained");
     }
 
     #[test]

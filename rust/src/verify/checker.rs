@@ -139,10 +139,20 @@ pub fn resharding_relaxation(
     shard_relaxation(nthreads, max_shards, batch) + residue_total as usize
 }
 
+/// Conservative overtake bound for a blockfifo history: consumers skip
+/// blocks still being filled, so an item can be overtaken by everything
+/// committed in younger blocks across the lanes while its own block was
+/// open — the same shape as shard skew with the block size in the batch
+/// slot (plus the same 4× + 64 reconciliation headroom).
+pub fn block_relaxation(nthreads: usize, lanes: usize, block: usize) -> usize {
+    shard_relaxation(nthreads, lanes, block)
+}
+
 /// The relaxation policy for a registry algorithm: sharded algorithms are
-/// k-relaxed FIFO (bounded shard skew), everything else is checked
-/// strictly (`k = 0` is the exact check). The single definition the CLI,
-/// tests and examples all share.
+/// k-relaxed FIFO (bounded shard skew), blockfifo is k-relaxed with the
+/// block size as the skew unit, everything else is checked strictly
+/// (`k = 0` is the exact check). The single definition the CLI, tests and
+/// examples all share.
 pub fn relaxation_for(
     algo_name: &str,
     nthreads: usize,
@@ -150,8 +160,55 @@ pub fn relaxation_for(
 ) -> usize {
     if algo_name.starts_with("sharded") {
         shard_relaxation(nthreads, cfg.shards, cfg.batch.max(cfg.batch_deq))
+    } else if algo_name.starts_with("blockfifo") {
+        block_relaxation(nthreads, cfg.shards, cfg.block)
     } else {
         0
+    }
+}
+
+/// The full checker configuration for a registry algorithm's history:
+/// relaxation bound (via [`relaxation_for`]) plus the crash-gated
+/// trailing-loss/redelivery windows and EMPTY-soundness applicability its
+/// durability mode implies. The single definition registry-driven tests
+/// and the CLI share, so adding an algorithm cannot silently get the
+/// wrong allowances:
+///
+/// * `sharded-*` with batching: producers may lose `batch − 1` returned
+///   enqueues and consumers redeliver `batch_deq − 1` returned dequeues
+///   per crash; EMPTY soundness only holds unbatched.
+/// * `blockfifo*`: an open (unsealed) block may lose `block − 1` returned
+///   enqueues (the `block`-th seals synchronously); a DRAINING block
+///   rolls back to its durable start and redelivers up to `block`
+///   returned dequeues. Open blocks are invisible to other consumers, so
+///   EMPTY soundness never applies.
+/// * everything else: per-operation durability — zero windows, strict
+///   EMPTY check.
+pub fn options_for(
+    algo_name: &str,
+    nthreads: usize,
+    cfg: &crate::queues::QueueConfig,
+    crashed_epochs: u64,
+) -> CheckOptions {
+    let relaxation = relaxation_for(algo_name, nthreads, cfg);
+    let (loss, redelivery, check_empty) = if algo_name.starts_with("sharded") {
+        (
+            cfg.batch.saturating_sub(1),
+            cfg.batch_deq.saturating_sub(1),
+            cfg.batch <= 1,
+        )
+    } else if algo_name.starts_with("blockfifo") {
+        (cfg.block.saturating_sub(1), cfg.block, false)
+    } else {
+        (0, 0, true)
+    };
+    CheckOptions {
+        relaxation,
+        trailing_loss_per_thread: loss,
+        trailing_redelivery_per_thread: redelivery,
+        crashed_epochs,
+        check_empty,
+        ..Default::default()
     }
 }
 
@@ -1345,5 +1402,46 @@ mod tests {
         );
         let r = check(&h, 10);
         assert!(r.violations.contains(&Violation::ValueReused { value: 3 }));
+    }
+
+    #[test]
+    fn options_for_encodes_each_durability_mode() {
+        let cfg = crate::queues::QueueConfig {
+            shards: 4,
+            batch: 8,
+            batch_deq: 4,
+            block: 16,
+            ..Default::default()
+        };
+        let strict = options_for("perlcrq", 8, &cfg, 3);
+        assert_eq!(strict.relaxation, 0);
+        assert_eq!(strict.trailing_loss_per_thread, 0);
+        assert_eq!(strict.trailing_redelivery_per_thread, 0);
+        assert!(strict.check_empty);
+        assert_eq!(strict.crashed_epochs, 3);
+
+        let sharded = options_for("sharded-perlcrq", 8, &cfg, 3);
+        assert_eq!(sharded.relaxation, shard_relaxation(8, 4, 8));
+        assert_eq!(sharded.trailing_loss_per_thread, 7);
+        assert_eq!(sharded.trailing_redelivery_per_thread, 3);
+        assert!(!sharded.check_empty, "batched EMPTY is unsound");
+
+        let bf = options_for("blockfifo", 8, &cfg, 3);
+        assert_eq!(bf.relaxation, block_relaxation(8, 4, 16));
+        assert_eq!(bf.trailing_loss_per_thread, 15, "open block holds block - 1");
+        assert_eq!(bf.trailing_redelivery_per_thread, 16, "DRAINING rollback is whole-block");
+        assert!(!bf.check_empty, "open blocks are invisible to other consumers");
+        let bfm = options_for("blockfifo-multi", 8, &cfg, 3);
+        assert_eq!(bfm.relaxation, bf.relaxation);
+    }
+
+    #[test]
+    fn blockfifo_relaxation_scales_with_block() {
+        let mut cfg = crate::queues::QueueConfig { shards: 2, block: 8, ..Default::default() };
+        let small = relaxation_for("blockfifo", 4, &cfg);
+        cfg.block = 32;
+        let large = relaxation_for("blockfifo-multi", 4, &cfg);
+        assert!(large > small);
+        assert_eq!(relaxation_for("iq", 4, &cfg), 0);
     }
 }

@@ -19,12 +19,16 @@
 //!
 //! V1–V3, V5 are exact; V4 is a sound interval check (no false positives).
 //!
-//! ## Relaxed mode (sharded queues)
+//! ## Relaxed mode (sharded + blockfifo queues)
 //!
 //! [`check_relaxed`]`(h, k)` replaces V3's strict real-time FIFO with a
 //! k-relaxed variant: a dequeue may overtake up to `k` strictly-older
-//! values (the bounded skew a `queues::sharded::ShardedQueue` introduces)
-//! before it counts as an inversion. All other axioms stay exact.
+//! values (the bounded skew a `queues::sharded::ShardedQueue` or
+//! `queues::blockfifo::BlockFifo` introduces) before it counts as an
+//! inversion. All other axioms stay exact.
+//! [`options_for`] bundles the per-algorithm policy — relaxation bound,
+//! crash-gated trailing windows, EMPTY-check applicability — into one
+//! [`checker::CheckOptions`] shared by the CLI and registry-driven tests.
 //! [`check_with`] additionally exposes the batched-durability knobs, all
 //! gated on epochs that actually crashed: the trailing-loss allowance
 //! (V2, unflushed enqueue batches), the trailing-redelivery allowance
@@ -41,8 +45,8 @@ pub mod history;
 pub mod proptest;
 
 pub use checker::{
-    calibrate_relaxation, check, check_relaxed, check_with, overtake_stats, relaxation_for,
-    resharding_relaxation, shard_relaxation, CheckOptions, CheckReport, OvertakeStats,
-    Violation,
+    block_relaxation, calibrate_relaxation, check, check_relaxed, check_with, options_for,
+    overtake_stats, relaxation_for, resharding_relaxation, shard_relaxation, CheckOptions,
+    CheckReport, OvertakeStats, Violation,
 };
 pub use history::{Event, EventKind, History, Recorder};

@@ -9,7 +9,7 @@ use persiq::pmem::crash::install_quiet_crash_hook;
 use persiq::pmem::PmemConfig;
 use persiq::queues::{persistent_registry, QueueConfig, QueueCtx};
 use persiq::util::rng::Xoshiro256;
-use persiq::verify::{check_relaxed, relaxation_for, History};
+use persiq::verify::{check_with, options_for, History};
 
 fn ctx() -> QueueCtx {
     QueueCtx::single(
@@ -45,8 +45,12 @@ fn all_persistent_queues_survive_cycles() {
         for r in &res {
             assert!(r.run.crashed, "{name}: run must be interrupted");
         }
-        // Queue alive after final recovery.
+        // Queue alive after final recovery. The quiesce publishes any
+        // thread-buffered state (a no-op for per-op queues; blockfifo
+        // seals tid 0's open block, without which the item would be
+        // invisible to tid 1).
         q.enqueue(0, 4242).unwrap();
+        q.quiesce();
         assert!(q.dequeue(1).unwrap().is_some(), "{name}");
     }
 }
@@ -80,7 +84,10 @@ fn verified_crash_cycles_for_all_persistent_queues() {
         }
         let drained = drain_all(&qc, 0);
         let h = History::from_logs(logs, drained);
-        let rep = check_relaxed(&h, relaxation_for(name, 4, &c.cfg));
+        // Each of the 3 cycles ended in a crash: the algorithm's policy
+        // (relaxation + crash-gated trailing windows + EMPTY soundness)
+        // comes from the same options_for the CLI uses.
+        let rep = check_with(&h, &options_for(name, 4, &c.cfg, 3));
         assert!(rep.ok(), "{name}: {:?}", rep.violations);
     }
 }
@@ -94,6 +101,10 @@ fn double_crash_without_ops_is_stable() {
         for v in 0..50u64 {
             q.enqueue(0, v).unwrap();
         }
+        // Publish thread-buffered state durably before crashing: without
+        // it blockfifo's open tail block (49 mod 16 items) is legitimate
+        // crash loss, and this test asserts exact survival.
+        q.quiesce();
         let mut rng = Xoshiro256::seed_from(23);
         c.topo.crash(&mut rng);
         q.recover(c.pool());
@@ -102,6 +113,10 @@ fn double_crash_without_ops_is_stable() {
         let mut out = Vec::new();
         while let Some(v) = q.dequeue(1).unwrap() {
             out.push(v);
+        }
+        if name.starts_with("blockfifo") {
+            // Relaxed tier: lanes interleave, so only the set is exact.
+            out.sort_unstable();
         }
         assert_eq!(out, (0..50).collect::<Vec<u64>>(), "{name}: loss after double crash");
     }

@@ -244,6 +244,115 @@ fn exposition_renders_sharded_and_ledger_families() {
     }
 }
 
+fn mk_blockfifo(
+    nthreads: usize,
+    shards: usize,
+    block: usize,
+) -> (Topology, persiq::queues::blockfifo::BlockFifo) {
+    let topo = Topology::single(PmemConfig {
+        capacity_words: 1 << 22,
+        cost: CostModel::zero(),
+        evict_prob: 0.25,
+        pending_flush_prob: 0.5,
+        seed: 71,
+    });
+    let q = persiq::queues::blockfifo::BlockFifo::new(
+        &topo,
+        nthreads,
+        QueueConfig { shards, block, ring_size: 1 << 10, ..Default::default() },
+        false,
+    )
+    .unwrap();
+    (topo, q)
+}
+
+/// Blockfifo's whole persistence budget is block-granular: exactly one
+/// `BatchFlush` psync per sealed block of `B` enqueues and one `DeqFlush`
+/// psync per claimed block of `B` dequeues (the retire pwb rides the next
+/// claim's psync), with zero leakage to `Op`/`Resize`/`Recovery` in
+/// steady state — and zero `Setup` psyncs at construction (fresh
+/// all-zeroes lines are already valid `FREE` headers).
+#[test]
+fn blockfifo_psyncs_amortize_to_one_per_block_per_side() {
+    let (b, m) = (8u64, 16u64);
+    let n = b * m;
+    let (topo, q) = mk_blockfifo(1, 1, b as usize);
+    assert_eq!(topo.site_ledger().total_psyncs(), 0, "zero-initialization construction");
+
+    for v in 0..n {
+        q.enqueue(0, v).unwrap();
+    }
+    let l = topo.site_ledger();
+    assert_eq!(l.psyncs_at(ObsSite::BatchFlush), m, "one seal psync per claimed block");
+    assert_eq!(l.psyncs_at(ObsSite::DeqFlush), 0);
+
+    for _ in 0..n {
+        assert!(q.dequeue(0).unwrap().is_some());
+    }
+    let l = topo.site_ledger();
+    assert_eq!(l.psyncs_at(ObsSite::DeqFlush), m, "one claim psync per drained block");
+    assert_eq!(l.psyncs_at(ObsSite::Op), 0, "no per-op psyncs anywhere on the hot path");
+    assert_eq!(l.psyncs_at(ObsSite::Resize), 0);
+    assert_eq!(l.psyncs_at(ObsSite::Recovery), 0);
+    assert_eq!(l.psyncs_at(ObsSite::PlanCommit), 0);
+    assert_eq!(l.psyncs_at(ObsSite::BrokerAck), 0);
+
+    // The headline amortization, per completed enqueue+dequeue pair.
+    let per_pair = l.total_psyncs() as f64 / n as f64;
+    assert!(
+        per_pair <= 2.0 / b as f64 + 1e-9,
+        "blockfifo psyncs/op-pair {per_pair} exceeds 2/B"
+    );
+
+    // Partition: every psync and pwb is attributed to some site.
+    assert_eq!(l.total_psyncs(), topo.stats_total().psyncs);
+    assert_eq!(l.total_pwbs(), topo.stats_total().pwbs);
+}
+
+/// Blockfifo recovery traffic lands on `Recovery` only, and the
+/// steady-state sites come back clean afterwards.
+#[test]
+fn blockfifo_recovery_psyncs_attribute_to_recovery_only() {
+    install_quiet_crash_hook();
+    let (topo, q) = mk_blockfifo(1, 2, 8);
+    for v in 0..48u64 {
+        q.enqueue(0, v).unwrap();
+    }
+    q.quiesce();
+    let mut rng = Xoshiro256::seed_from(5);
+    topo.crash(&mut rng);
+
+    let before = topo.site_ledger();
+    q.recover(topo.primary());
+    let after = topo.site_ledger();
+    assert!(
+        delta(&after, &before, ObsSite::Recovery) > 0,
+        "the per-lane recovery commits must be attributed"
+    );
+    assert_eq!(delta(&after, &before, ObsSite::BatchFlush), 0);
+    assert_eq!(delta(&after, &before, ObsSite::DeqFlush), 0);
+    assert_eq!(delta(&after, &before, ObsSite::Op), 0);
+
+    // Post-recovery steady state: block-granular flush sites only.
+    let resumed = topo.site_ledger();
+    for v in 0..16u64 {
+        q.enqueue(0, v).unwrap();
+    }
+    let l = topo.site_ledger();
+    assert_eq!(delta(&l, &resumed, ObsSite::BatchFlush), 2, "16 enqueues = 2 sealed blocks");
+    assert_eq!(delta(&l, &resumed, ObsSite::Recovery), 0);
+
+    // The recovered queue still serves everything quiesce published.
+    let mut got = Vec::new();
+    while let Ok(Some(v)) = q.dequeue(0) {
+        got.push(v);
+    }
+    got.sort_unstable();
+    let mut expect: Vec<u64> = (0..48).chain(0..16).collect();
+    expect.sort_unstable();
+    assert_eq!(got, expect);
+}
+
 /// Golden-schema check for the JSONL trace: every line carries
 /// `ts`/`tid`/`type`, and each event type carries its required keys.
 /// Tracing state is process-global, so this single test owns the whole

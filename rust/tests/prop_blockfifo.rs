@@ -1,0 +1,175 @@
+//! Crash-swept property tests for the block-granular tier (blockfifo):
+//! randomized lane/block/fault-rate configurations with crashes landing at
+//! arbitrary pmem primitives must never lose a durably-claimed block and
+//! never redeliver outside the checker-gated allowances, and a
+//! single-primitive crash sweep across the enqueue path (between the
+//! block-claim FAI, the entry stores, the seal's header store, and inside
+//! its pwb/psync train) must never invent, duplicate, or over-lose.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use persiq::harness::runner::{drain_all, run_workload, RunConfig};
+use persiq::harness::Workload;
+use persiq::pmem::crash::install_quiet_crash_hook;
+use persiq::pmem::{run_guarded, PmemConfig};
+use persiq::queues::{persistent_by_name, QueueConfig, QueueCtx};
+use persiq::util::rng::Xoshiro256;
+use persiq::verify::proptest::{forall, PropConfig};
+use persiq::verify::{check_with, options_for, History};
+
+#[test]
+fn prop_blockfifo_durable_blocks_survive_random_crashes() {
+    install_quiet_crash_hook();
+    forall(PropConfig { cases: 8, seed: 0xB10C }, |rng, _case| {
+        let nthreads = 2 + rng.next_below(3) as usize; // 2..4
+        let shards = *rng.choose(&[1usize, 2, 4]);
+        let block = *rng.choose(&[1usize, 4, 16, 64]);
+        let cycles = 1 + rng.next_below(3); // 1..3
+        let name = *rng.choose(&["blockfifo", "blockfifo-multi"]);
+        // Blocks are never recycled: size the lanes (power of two, per
+        // validate()) so shards * nblocks * block covers the whole
+        // multi-cycle workload with headroom.
+        let nblocks = (1usize << 17) / block / shards;
+        let ctx = QueueCtx::single(
+            PmemConfig {
+                capacity_words: 1 << 23,
+                evict_prob: rng.next_f64() * 0.5,
+                pending_flush_prob: rng.next_f64(),
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+            nthreads,
+            QueueConfig {
+                shards,
+                block,
+                ring_size: nblocks,
+                dchoice: 1 + rng.next_below(4) as usize,
+                ..Default::default()
+            },
+        );
+        let q = persistent_by_name(name).unwrap()(&ctx);
+        let qc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
+        let mut crash_rng = Xoshiro256::seed_from(rng.next_u64());
+        let mut logs = Vec::new();
+        for cycle in 0..cycles {
+            ctx.topo.arm_crash_after(3_000 + rng.next_below(25_000));
+            let r = run_workload(
+                &ctx.topo,
+                &qc,
+                &RunConfig {
+                    nthreads,
+                    total_ops: 30_000,
+                    workload: *rng.choose(&[Workload::Pairs, Workload::Random5050]),
+                    record: true,
+                    salt: cycle + 1,
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                },
+            );
+            logs.extend(r.logs);
+            ctx.topo.crash(&mut crash_rng);
+            q.recover(ctx.pool());
+        }
+        let drained = drain_all(&qc, 0);
+        let h = History::from_logs(logs, drained);
+        // The same policy the CLI applies: loss gated to unsealed tails
+        // (block - 1 per producer per crashed epoch), redelivery gated to
+        // rolled-back draining blocks (block per consumer per crashed
+        // epoch), EMPTY checking off (open blocks are invisible).
+        let opts = options_for(name, nthreads, &ctx.cfg, cycles);
+        let rep = check_with(&h, &opts);
+        if !rep.ok() {
+            return Err(format!(
+                "{name} shards={shards} block={block}: {:?} (max_overtakes={})",
+                rep.violations, rep.max_overtakes
+            ));
+        }
+        // The allowance is a hard bound, not a soft hint: a DRAINING
+        // rollback redelivers at most one block per consumer per crash.
+        let cap = block * nthreads * cycles as usize;
+        if rep.absorbed_redelivered > cap {
+            return Err(format!(
+                "{name}: absorbed {} redeliveries, contract caps at {cap}",
+                rep.absorbed_redelivered
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blockfifo_crash_sweep_over_enqueue_path_is_exact() {
+    // Land the crash at every successive primitive of a single-producer
+    // enqueue stream. Whatever the cut point — mid-fill, between the seal's
+    // header store and its pwbs, inside the psync train — recovery must
+    // deliver a distinct subset of the returned values, losing at most
+    // block - 1 of them, all from the final (unsealed or torn) block.
+    install_quiet_crash_hook();
+    forall(PropConfig { cases: 48, seed: 0x5EA1 }, |rng, case| {
+        let block = *rng.choose(&[1usize, 2, 8, 64]);
+        let ctx = QueueCtx::single(
+            PmemConfig {
+                capacity_words: 1 << 18,
+                evict_prob: rng.next_f64() * 0.5,
+                pending_flush_prob: rng.next_f64(),
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+            1,
+            QueueConfig { shards: 2, block, ring_size: 256, ..Default::default() },
+        );
+        let q = persistent_by_name("blockfifo").unwrap()(&ctx);
+        // Sweep: case index picks the primitive; jitter widens coverage.
+        ctx.topo.arm_crash_after(1 + case as u64 * 3 + rng.next_below(3));
+        let done = AtomicU64::new(0);
+        // Crashed or completed — both cut points are valid cases.
+        let _ = run_guarded(|| {
+            for v in 0..1_000u64 {
+                q.enqueue(0, v).unwrap();
+                done.store(v + 1, Ordering::Relaxed);
+            }
+        });
+        let done = done.load(Ordering::Relaxed);
+        let mut crash_rng = Xoshiro256::seed_from(rng.next_u64());
+        ctx.topo.crash(&mut crash_rng);
+        q.recover(ctx.pool());
+        let mut out = Vec::new();
+        while let Some(v) = q.dequeue(0).unwrap() {
+            out.push(v);
+        }
+        // No duplication, no invention: a distinct subset of the values
+        // whose enqueue at least started (`done` returned; `done + 1`-th
+        // may have been cut mid-flight after its store).
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != out.len() {
+            return Err(format!("block={block}: duplicate delivery in {out:?}"));
+        }
+        if sorted.iter().any(|&v| v > done) {
+            return Err(format!("block={block}: invented value beyond {done}"));
+        }
+        // Bounded loss, confined to the last block: an enqueue that
+        // triggers a seal only returns after the psync completes, so every
+        // earlier block is fully durable and at most the final block's
+        // block - 1 returned entries can go missing (its B-th filler is
+        // the in-flight op, not a returned one).
+        let missing: Vec<u64> = (0..done).filter(|v| !sorted.contains(v)).collect();
+        if missing.len() >= block {
+            return Err(format!(
+                "block={block}: lost {} returned values (cap {})",
+                missing.len(),
+                block - 1
+            ));
+        }
+        if let Some(&m) = missing.first() {
+            if m + (block as u64) <= done {
+                return Err(format!(
+                    "block={block}: lost value {m} outside the final block (done={done})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}

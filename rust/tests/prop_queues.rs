@@ -13,7 +13,7 @@ use persiq::queues::{persistent_registry, QueueConfig, QueueCtx};
 use persiq::util::rng::Xoshiro256;
 use persiq::verify::proptest::{forall, PropConfig};
 use persiq::verify::{
-    check, check_relaxed, check_with, relaxation_for, CheckOptions, History,
+    check, check_with, options_for, relaxation_for, CheckOptions, History,
 };
 
 #[test]
@@ -25,6 +25,14 @@ fn prop_durable_linearizability_under_random_crashes() {
         let workload = *rng.choose(&[Workload::Pairs, Workload::Random5050]);
         let cycles = 1 + rng.next_below(3); // 1..3
         for (name, ctor) in persistent_registry() {
+            let mut qcfg = QueueConfig { ring_size: ring, ..Default::default() };
+            if name.starts_with("blockfifo") {
+                // Blockfifo reuses ring_size as the per-lane block count,
+                // and block claims are never recycled (infinite-array
+                // tier): the random small ring would exhaust mid-run, so
+                // size the lanes to the whole multi-cycle workload.
+                qcfg.ring_size = 1 << 12;
+            }
             let ctx = QueueCtx::single(
                 PmemConfig {
                     capacity_words: 1 << 23,
@@ -34,7 +42,7 @@ fn prop_durable_linearizability_under_random_crashes() {
                     ..Default::default()
                 },
                 nthreads,
-                QueueConfig { ring_size: ring, ..Default::default() },
+                qcfg,
             );
             let q = ctor(&ctx);
             let qc: Arc<dyn persiq::queues::ConcurrentQueue> = Arc::clone(&q) as _;
@@ -61,7 +69,10 @@ fn prop_durable_linearizability_under_random_crashes() {
             }
             let drained = drain_all(&qc, 0);
             let h = History::from_logs(logs, drained);
-            let rep = check_relaxed(&h, relaxation_for(name, nthreads, &ctx.cfg));
+            // Every cycle ended in a crash: options_for opens exactly the
+            // algorithm's crash-gated windows (batched/blocked tails) on
+            // those epochs and nothing else.
+            let rep = check_with(&h, &options_for(name, nthreads, &ctx.cfg, cycles));
             if !rep.ok() {
                 return Err(format!("{name}: {:?}", rep.violations));
             }
@@ -266,6 +277,10 @@ fn prop_recovery_is_idempotent() {
             for v in 0..items {
                 q.enqueue(0, v).unwrap();
             }
+            // Publish thread-buffered state durably (blockfifo's open
+            // tail block) — this test asserts exact survival, not the
+            // crash-windowed contract.
+            q.quiesce();
             let mut crash_rng = Xoshiro256::seed_from(rng.next_u64());
             // Crash + recover twice, interleaved with nothing: state stable.
             ctx.topo.crash(&mut crash_rng);
@@ -275,6 +290,10 @@ fn prop_recovery_is_idempotent() {
             let mut out = Vec::new();
             while let Some(v) = q.dequeue(1).unwrap() {
                 out.push(v);
+            }
+            if name.starts_with("blockfifo") {
+                // Relaxed tier: exact set, lane-interleaved order.
+                out.sort_unstable();
             }
             if out != (0..items).collect::<Vec<u64>>() {
                 return Err(format!("{name}: expected 0..{items}, got {} items", out.len()));
