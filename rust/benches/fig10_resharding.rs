@@ -99,8 +99,11 @@ fn main() -> anyhow::Result<()> {
     );
     let ops_per_window = bench_ops().max(WINDOWS as u64 * 1_000) / WINDOWS as u64;
 
+    suite.config("threads", THREADS);
+    suite.config("batch", BATCH);
+    suite.config("windows", WINDOWS);
+    suite.config("ops_per_window", ops_per_window);
     let series = [("grow-4to8", 4usize, 8usize), ("shrink-8to4", 8, 4)];
-    let mut all_ok = true;
     for (name, from_k, to_k) in series {
         let points = windowed_series(from_k, to_k, ops_per_window);
         for (w, p) in points.iter().enumerate() {
@@ -111,39 +114,34 @@ fn main() -> anyhow::Result<()> {
                 (p.sim_mops, vec![("psyncs/op".to_string(), p.psyncs_per_op)])
             });
         }
-        // --- Claims -------------------------------------------------
+        // --- Claims (registered into BENCH_fig10_resharding.json) ----
         let steady_tput =
             (points[0].sim_mops + points[1].sim_mops) / 2.0;
         let steady_psync =
             (points[0].psyncs_per_op + points[1].psyncs_per_op) / 2.0;
         let post = &points[RESIZE_WINDOW + 1];
         let ratio = post.sim_mops / steady_tput;
-        let ok = ratio >= 0.9;
-        all_ok &= ok;
-        println!(
-            "{name}: post-resize window tput = {ratio:.2}x steady (expect >= 0.9): {ok}"
+        suite.claim(
+            &format!("fig10-recovery-{name}"),
+            "the first post-transition window recovers >= 0.9x steady throughput",
+            ratio >= 0.9,
+            format!("post-resize window tput = {ratio:.2}x steady"),
         );
-        for (w, p) in points.iter().enumerate() {
-            if w == RESIZE_WINDOW {
-                continue; // the transition window carries the resize psyncs
-            }
-            let ok = p.psyncs_per_op <= steady_psync * 1.10 + 0.02;
-            all_ok &= ok;
-            if !ok {
-                println!(
-                    "{name}: window {w} psyncs/op {:.3} vs steady {steady_psync:.3}: {ok}",
-                    p.psyncs_per_op
-                );
-            }
-        }
-        println!(
-            "{name}: psyncs/op unchanged outside the transition window: \
-             steady {steady_psync:.3}"
+        let worst = points
+            .iter()
+            .enumerate()
+            .filter(|(w, _)| *w != RESIZE_WINDOW) // that window carries the resize psyncs
+            .map(|(_, p)| p.psyncs_per_op)
+            .fold(f64::NAN, f64::max);
+        suite.claim(
+            &format!("fig10-cost-isolation-{name}"),
+            "psyncs/op outside the transition window stays at the steady budget",
+            worst <= steady_psync * 1.10 + 0.02,
+            format!("worst non-transition window {worst:.3} vs steady {steady_psync:.3}"),
         );
     }
 
     suite.finish()?;
-    println!("fig10 claims {}", if all_ok { "OK" } else { "FAILED" });
-    anyhow::ensure!(all_ok, "fig10 re-sharding claims failed");
+    anyhow::ensure!(suite.claims_pass(), "fig10 re-sharding claims failed");
     Ok(())
 }

@@ -160,32 +160,32 @@ fn main() -> anyhow::Result<()> {
         epoch_lat.push(p.ns_per_op);
         (p.ns_per_op, vec![("psyncs/op".to_string(), p.psyncs_per_op)])
     });
-    suite.finish()?;
-
     let best = |v: &[f64]| v.iter().cloned().fold(f64::NAN, f64::max);
     let least = |v: &[f64]| v.iter().cloned().fold(f64::NAN, f64::min);
 
-    let mut all_ok = true;
+    suite.config("threads", THREADS);
+    suite.config("shards", SHARDS);
+    suite.config("batch", BATCH);
+    suite.config("ops", ops);
 
     // --- Claim 1: contended steady-state throughput ------------------
     let min_speedup = env_f64("PERSIQ_FIG11_MIN_SPEEDUP", 1.15);
     let speedup = best(&epoch_tput) / best(&base_tput);
-    let ok = speedup >= min_speedup;
-    all_ok &= ok;
-    println!(
-        "fig11: contended ({THREADS} threads) epoch/rwlock wall speedup = \
-         {speedup:.2}x (expect >= {min_speedup:.2}): {ok}"
+    suite.claim(
+        "fig11-contended-speedup",
+        "epoch-pinned plan access beats the per-op RwLock under contention",
+        speedup >= min_speedup,
+        format!("epoch/rwlock wall speedup = {speedup:.2}x @ {THREADS} threads (bound {min_speedup:.2})"),
     );
 
     // --- Claim 2: uncontended single-op latency not worse ------------
     let lat_tol = env_f64("PERSIQ_FIG11_LAT_TOL", 0.15);
     let (b, e) = (least(&base_lat), least(&epoch_lat));
-    let ok = e <= b * (1.0 + lat_tol);
-    all_ok &= ok;
-    println!(
-        "fig11: single-op latency epoch {e:.0}ns vs rwlock {b:.0}ns \
-         (expect epoch <= rwlock x {:.2}): {ok}",
-        1.0 + lat_tol
+    suite.claim(
+        "fig11-single-op-latency",
+        "the pin's store+fence costs no more than an uncontended lock",
+        e <= b * (1.0 + lat_tol),
+        format!("epoch {e:.0}ns vs rwlock {b:.0}ns (tolerance x{:.2})", 1.0 + lat_tol),
     );
 
     // --- Claim 3: fig10 steady-state column no-regress ---------------
@@ -193,20 +193,20 @@ fn main() -> anyhow::Result<()> {
     // the group-commit budget 1/B (enqueue flushes) + 1/K (dequeue
     // order-log flushes).
     let budget = 1.0 / BATCH as f64 + 1.0 / BATCH as f64;
-    let ok = psyncs.1 <= budget * 1.10 + 0.02;
-    all_ok &= ok;
-    println!(
-        "fig11: steady-state psyncs/op {:.3} within group-commit budget {budget:.3}: {ok}",
-        psyncs.1
+    suite.claim(
+        "fig11-psync-budget",
+        "steady-state psyncs/op stays within the group-commit budget",
+        psyncs.1 <= budget * 1.10 + 0.02,
+        format!("psyncs/op {:.3} vs budget {budget:.3}", psyncs.1),
     );
-    let ok = (psyncs.1 - psyncs.0).abs() <= 0.02;
-    all_ok &= ok;
-    println!(
-        "fig11: psyncs/op agree across sync schemes (rwlock {:.3} vs epoch {:.3}): {ok}",
-        psyncs.0, psyncs.1
+    suite.claim(
+        "fig11-psync-agreement",
+        "the synchronization scheme does not move durability points",
+        (psyncs.1 - psyncs.0).abs() <= 0.02,
+        format!("rwlock {:.3} vs epoch {:.3} psyncs/op", psyncs.0, psyncs.1),
     );
 
-    println!("fig11 claims {}", if all_ok { "OK" } else { "FAILED" });
-    anyhow::ensure!(all_ok, "fig11 hot-path claims failed");
+    suite.finish()?;
+    anyhow::ensure!(suite.claims_pass(), "fig11 hot-path claims failed");
     Ok(())
 }

@@ -115,19 +115,21 @@ fn main() -> anyhow::Result<()> {
             (mops, vec![("psyncs/op".to_string(), ps), ("pwbs/op".to_string(), pw)])
         });
     }
-    suite.finish()?;
-
-    let mut all_ok = true;
+    suite.config("threads", threads);
+    suite.config("shards", SHARDS);
+    suite.config("batch", BATCH);
+    suite.config("block", BLOCK);
+    suite.config("ops", ops);
 
     // --- Claim 1: throughput at high parallelism ---------------------
     let min_speedup = env_f64("PERSIQ_FIG12_MIN_SPEEDUP", 2.0);
     for (i, algo) in ["blockfifo", "blockfifo-multi"].iter().enumerate() {
         let speedup = tput[i + 1] / tput[0];
-        let ok = speedup >= min_speedup;
-        all_ok &= ok;
-        println!(
-            "fig12: {algo} vs sharded-perlcrq at {threads} threads = \
-             {speedup:.2}x (expect >= {min_speedup:.2}): {ok}"
+        suite.claim(
+            &format!("fig12-speedup-{algo}"),
+            "block-granular claiming beats the sharded tier at high parallelism",
+            speedup >= min_speedup,
+            format!("{algo}/sharded-perlcrq = {speedup:.2}x @ {threads} threads (bound {min_speedup:.2})"),
         );
     }
 
@@ -135,11 +137,11 @@ fn main() -> anyhow::Result<()> {
     let eps = env_f64("PERSIQ_FIG12_PSYNC_EPS", 0.01);
     let budget = 1.0 / BLOCK as f64 + eps;
     for (i, algo) in ["blockfifo", "blockfifo-multi"].iter().enumerate() {
-        let ok = psyncs[i + 1] <= budget;
-        all_ok &= ok;
-        println!(
-            "fig12: {algo} psyncs/op {:.4} within 1/{BLOCK} + {eps} = {budget:.4}: {ok}",
-            psyncs[i + 1]
+        suite.claim(
+            &format!("fig12-psync-budget-{algo}"),
+            "one psync per sealed block: psyncs/op stays within 1/block + eps",
+            psyncs[i + 1] <= budget,
+            format!("{algo} psyncs/op {:.4} vs budget {budget:.4}", psyncs[i + 1]),
         );
     }
 
@@ -183,19 +185,21 @@ fn main() -> anyhow::Result<()> {
          (calibrated k={auto}, static bound {static_bound})",
         stats.p50, stats.p99, stats.max, stats.checked
     );
-    let ok = auto <= static_bound;
-    all_ok &= ok;
-    println!("fig12: calibrated relaxation {auto} <= static bound {static_bound}: {ok}");
+    suite.claim(
+        "fig12-bounded-relaxation",
+        "the calibrated FIFO relaxation stays within the static block formula",
+        auto <= static_bound,
+        format!("calibrated k={auto} vs static bound {static_bound}"),
+    );
     let rep = check_with(&h, &opts);
-    let ok = rep.ok();
-    all_ok &= ok;
-    println!(
-        "fig12: recorded history verifies under the standard blockfifo policy \
-         (k={}): {ok}",
-        opts.relaxation
+    suite.claim(
+        "fig12-history-verifies",
+        "the recorded history verifies under the standard blockfifo policy",
+        rep.ok(),
+        format!("k={}, violations={}", opts.relaxation, rep.violations.len()),
     );
 
-    println!("fig12 claims {}", if all_ok { "OK" } else { "FAILED" });
-    anyhow::ensure!(all_ok, "fig12 blockfifo claims failed");
+    suite.finish()?;
+    anyhow::ensure!(suite.claims_pass(), "fig12 blockfifo claims failed");
     Ok(())
 }

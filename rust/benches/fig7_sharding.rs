@@ -68,18 +68,33 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    suite.finish()?;
-
-    // Shape assertions (the subsystem's headline claims).
+    // Shape claims (the subsystem's headline claims), registered into
+    // the BENCH_fig7_sharding.json artifact before finish() writes it.
+    suite.config("threads", threads.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","));
+    suite.config("ops", ops);
     let hi = *threads.last().unwrap() as f64;
     let s1 = suite.mean_at("sharded-s1", hi).unwrap();
     let s8 = suite.mean_at("sharded-s8", hi).unwrap();
     let b8 = suite.mean_at("sharded-s8-b8", hi).unwrap();
     let bd8 = suite.mean_at("sharded-s8-b8-d8", hi).unwrap();
-    println!("\nclaims @ {hi} threads:");
-    println!("  8 shards / 1 shard    = {:.2}x (expect > 1)", s8 / s1);
-    println!("  batch 8 / batch 1     = {:.2}x at 8 shards (expect > 1)", b8 / s8);
-    println!("  +deq batch 8 / batch 8 = {:.2}x at 8 shards (expect >= 1)", bd8 / b8);
+    suite.claim(
+        "fig7-shard-scaling",
+        "throughput grows with the shard count at high thread counts",
+        s8 / s1 > 1.0,
+        format!("8 shards / 1 shard = {:.2}x @ {hi} threads", s8 / s1),
+    );
+    suite.claim(
+        "fig7-batch-amortization",
+        "enqueue group commit beats per-op persistence at 8 shards",
+        b8 / s8 > 1.0,
+        format!("batch 8 / batch 1 = {:.2}x @ {hi} threads", b8 / s8),
+    );
+    suite.claim(
+        "fig7-deq-batching",
+        "adding consumer-side batching never loses to enqueue-only batching",
+        bd8 / b8 >= 1.0,
+        format!("+deq batch 8 / batch 8 = {:.2}x @ {hi} threads", bd8 / b8),
+    );
     // Persistence-cost claim: with both endpoints batched at K, the pairs
     // workload must land under 2/K psyncs per operation.
     for k in [2usize, 4, 8] {
@@ -93,10 +108,16 @@ fn main() -> anyhow::Result<()> {
             .map(|&(_, v)| v)
             .fold(f64::NAN, f64::max);
         let bound = 2.0 / k as f64;
-        println!(
-            "  psyncs/op @ K={k} (both endpoints): max {psyncs:.3} (expect < {bound:.3}): {}",
-            psyncs < bound
+        suite.claim(
+            &format!("fig7-psyncs-k{k}"),
+            "both endpoints batched at K keep the pairs workload under 2/K psyncs/op",
+            psyncs < bound,
+            format!("max psyncs/op {psyncs:.3} vs bound {bound:.3} @ K={k}"),
         );
     }
+    // Verdicts are recorded (stdout + artifact), not process-fatal: fig7
+    // ran as a report-only figure before the artifact existed, and quick
+    // low-op CI runs may flatten the scaling shape.
+    suite.finish()?;
     Ok(())
 }

@@ -102,10 +102,11 @@ fn main() -> anyhow::Result<()> {
         suite.measure_extra("async", b as f64, || async_point(b, ops));
     }
 
-    suite.finish()?;
-
-    // --- Claim checks -------------------------------------------------
-    let psyncs_at = |series: &str, x: f64| -> f64 {
+    // --- Claim checks (registered into BENCH_fig9_async.json) ---------
+    suite.config("threads", THREADS);
+    suite.config("shards", SHARDS);
+    suite.config("ops", ops);
+    let psyncs_at = |suite: &Suite, series: &str, x: f64| -> f64 {
         suite
             .measurements
             .iter()
@@ -115,8 +116,6 @@ fn main() -> anyhow::Result<()> {
             .map(|&(_, v)| v)
             .fold(f64::NAN, f64::max)
     };
-    println!("\nclaims:");
-    let mut all_ok = true;
     for &b in &batches {
         if b < 8 {
             continue;
@@ -125,24 +124,25 @@ fn main() -> anyhow::Result<()> {
         let blocking = suite.mean_at("sync-blocking", x).unwrap();
         let asy = suite.mean_at("async", x).unwrap();
         let speedup = asy / blocking;
-        let ok = speedup >= 1.2;
-        all_ok &= ok;
-        println!(
-            "  B={b}: async/sync-blocking = {speedup:.2}x (expect >= 1.2): {ok}"
+        suite.claim(
+            &format!("fig9-overlap-b{b}"),
+            "async completion beats sync-blocking >= 1.2x at B >= 8",
+            speedup >= 1.2,
+            format!("async/sync-blocking = {speedup:.2}x @ B={b}"),
         );
         // Async must not pay more persistence than the sync batched path
         // it rides (1/B enq + 1/K deq); small slack for the attach/
         // detach + final-drain psyncs.
-        let ps_async = psyncs_at("async", x);
-        let ps_batched = psyncs_at("sync-batched", x);
-        let ok = ps_async <= ps_batched * 1.10 + 0.01;
-        all_ok &= ok;
-        println!(
-            "  B={b}: psyncs/op async = {ps_async:.3} vs sync-batched {ps_batched:.3} \
-             (expect async <= batched + slack): {ok}"
+        let ps_async = psyncs_at(&suite, "async", x);
+        let ps_batched = psyncs_at(&suite, "sync-batched", x);
+        suite.claim(
+            &format!("fig9-psync-parity-b{b}"),
+            "async pays no more psyncs/op than the sync batched path it rides",
+            ps_async <= ps_batched * 1.10 + 0.01,
+            format!("async {ps_async:.3} vs sync-batched {ps_batched:.3} @ B={b}"),
         );
     }
-    println!("fig9 claims {}", if all_ok { "OK" } else { "FAILED" });
-    anyhow::ensure!(all_ok, "fig9 async claims failed");
+    suite.finish()?;
+    anyhow::ensure!(suite.claims_pass(), "fig9 async claims failed");
     Ok(())
 }

@@ -1,7 +1,7 @@
 //! Observability overhead — the `persiq::obs` acceptance gate: with the
-//! metrics registry enabled (counters on, tracing off) the fig7
-//! steady-state configuration must stay within 5% of the throughput it
-//! reaches with the registry disabled.
+//! metrics registry enabled *and* the persistent flight recorder armed
+//! (counters on, JSONL tracing off) the fig7 steady-state configuration
+//! must stay within 5% of the throughput it reaches with both disabled.
 //!
 //! Samples are interleaved (off, on, off, on, ...) after a warmup round
 //! so drift in the host affects both series equally, and the gate
@@ -53,10 +53,15 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(4);
     let rounds = suite.repeats.max(3);
 
-    // Warmup (both modes touch their code paths once, uncounted).
+    // Warmup (both modes touch their code paths once, uncounted). The
+    // "off" arm disarms the persistent flight recorder along with the
+    // registry so the gate honestly prices the recorder's pwb/poke
+    // traffic into the 5% bound, not just counter increments.
     obs::set_enabled(false);
+    obs::flight::set_enabled(false);
     wall_point(nthreads, ops, 7);
     obs::set_enabled(true);
+    obs::flight::set_enabled(true);
     wall_point(nthreads, ops, 7);
 
     // The enabled series also consumes the registry as a reporter would:
@@ -67,8 +72,10 @@ fn main() -> anyhow::Result<()> {
     for round in 0..rounds {
         let seed = 100 + round as u64;
         obs::set_enabled(false);
+        obs::flight::set_enabled(false);
         off.push(wall_point(nthreads, ops, seed));
         obs::set_enabled(true);
+        obs::flight::set_enabled(true);
         on.push(wall_point(nthreads, ops, seed));
     }
 
@@ -85,7 +92,6 @@ fn main() -> anyhow::Result<()> {
     suite.measure("obs-off", nthreads as f64, || *it.next().unwrap());
     let mut it = on.iter();
     suite.measure("obs-on", nthreads as f64, || *it.next().unwrap());
-    suite.finish()?;
 
     let (m_off, m_on) = (median(&off), median(&on));
     let overhead = 1.0 - m_on / m_off;
@@ -93,11 +99,20 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.05);
-    println!(
-        "median wall Mops: off={m_off:.3} on={m_on:.3} -> overhead {:.2}% (bound {:.0}%)",
-        overhead * 100.0,
-        max_overhead * 100.0
+    suite.config("threads", nthreads);
+    suite.config("ops", ops);
+    suite.config("rounds", rounds);
+    suite.claim(
+        "obs-overhead-gate",
+        "registry + flight recorder cost under the overhead bound on fig7 steady state",
+        overhead <= max_overhead,
+        format!(
+            "median wall Mops off={m_off:.3} on={m_on:.3} -> overhead {:.2}% (bound {:.0}%)",
+            overhead * 100.0,
+            max_overhead * 100.0
+        ),
     );
+    suite.finish()?;
     anyhow::ensure!(
         overhead <= max_overhead,
         "obs registry overhead {:.2}% exceeds the {:.0}% bound",

@@ -278,6 +278,14 @@ impl Broker {
         t.pwb(tid, rec);
         t.psync_pool(tid, rec.pool as usize);
         self.submit_log.append(tid, JobId(rec));
+        // Record + submit-log entry are durable (append just psynced):
+        // certified flight event, write-after-psync.
+        obs::flight::record_sealed(
+            self.topo.pool(self.topo.home_pool(tid)),
+            tid,
+            obs::flight::FlightKind::BrokerSubmit,
+            rec.to_u64(),
+        );
         Ok(JobId(rec))
     }
 
@@ -388,6 +396,15 @@ impl Broker {
             let _site = obs::enter_site(ObsSite::BrokerAck);
             t.pwb(tid, job.0);
             t.psync_pool(tid, job.0.pool as usize);
+            // DONE is durable: certified flight event on the job's pool.
+            // (`ack_async` records nothing — its DONE pwb rides a later
+            // group flush, so there is no completed psync to seal on.)
+            obs::flight::record_sealed(
+                self.topo.pool(job.0.pool as usize),
+                tid,
+                obs::flight::FlightKind::BrokerAck,
+                job.0.to_u64(),
+            );
         }
         if self.lease_ms.load(Ordering::Relaxed) > 0 {
             self.leases.lock().unwrap().remove(&job.0.to_u64());
@@ -633,6 +650,14 @@ impl Broker {
         // Flush batched re-enqueues on every slot used (no-op for per-op
         // queues).
         self.queue.quiesce();
+        // Broker-level recovery span end (the work queue's own recover
+        // emitted the inner span): the re-enqueue flushes above retired.
+        obs::flight::record_sealed(
+            self.topo.primary(),
+            0,
+            obs::flight::FlightKind::RecoverEnd,
+            self.topo.primary().epoch(),
+        );
         obs::trace::span(
             0,
             t0,

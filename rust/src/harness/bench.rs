@@ -2,11 +2,15 @@
 //!
 //! Each `cargo bench` target builds a [`Suite`], registers measurements,
 //! and gets: warmup, repeated timed runs, mean ± σ, an aligned table on
-//! stdout, and a CSV under `results/`.
+//! stdout, a CSV under `results/`, and a machine-readable
+//! `results/BENCH_<name>.json` artifact (schema `persiq-bench-v1`)
+//! carrying the run configuration, every series' statistics, and each
+//! paper claim's pass/fail verdict — what CI greps instead of scraping
+//! stdout.
 
 use std::path::PathBuf;
 
-use crate::util::report::{fnum, Csv};
+use crate::util::report::{fnum, Csv, Json};
 use crate::util::time::{stats, Stats};
 
 /// One measured series point.
@@ -28,8 +32,22 @@ impl Measurement {
     }
 }
 
+/// One paper-claim verdict carried in the `BENCH_<name>.json` artifact:
+/// the claim as stated (e.g. "sharded throughput scales with K"), whether
+/// this run supports it, and the measured evidence.
+#[derive(Clone, Debug)]
+pub struct Claim {
+    /// Stable id CI can grep, e.g. "fig7-scaling".
+    pub id: String,
+    /// The paper's claim in one sentence.
+    pub statement: String,
+    pub pass: bool,
+    /// Measured evidence, e.g. "K=8: 1.92 Mops vs K=1: 0.61 Mops".
+    pub detail: String,
+}
+
 /// A bench suite: collects measurements, prints the figure's table,
-/// saves CSV.
+/// saves CSV plus the `BENCH_<name>.json` artifact.
 pub struct Suite {
     /// Bench id, e.g. "fig2_throughput".
     pub name: &'static str,
@@ -38,6 +56,11 @@ pub struct Suite {
     pub measurements: Vec<Measurement>,
     /// Repeats per point.
     pub repeats: usize,
+    /// Run configuration echoed into the JSON artifact (threads, ops,
+    /// shards, ... — whatever the figure sweeps or pins).
+    pub config: Vec<(String, String)>,
+    /// Paper-claim verdicts (register before [`Suite::finish`]).
+    pub claims: Vec<Claim>,
 }
 
 impl Suite {
@@ -47,7 +70,30 @@ impl Suite {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(2);
-        Self { name, title, measurements: Vec::new(), repeats }
+        Self { name, title, measurements: Vec::new(), repeats, config: Vec::new(), claims: Vec::new() }
+    }
+
+    /// Record one configuration knob for the JSON artifact.
+    pub fn config<V: std::fmt::Display>(&mut self, key: &str, val: V) {
+        self.config.push((key.to_string(), val.to_string()));
+    }
+
+    /// Register a paper-claim verdict. Call before [`Suite::finish`] so
+    /// the verdict lands in `BENCH_<name>.json`; the caller still decides
+    /// whether a failed claim fails the process (gates `ensure!`, shape
+    /// checks usually just record).
+    pub fn claim(&mut self, id: &str, statement: &str, pass: bool, detail: String) {
+        self.claims.push(Claim {
+            id: id.to_string(),
+            statement: statement.to_string(),
+            pass,
+            detail,
+        });
+    }
+
+    /// True when every registered claim passed (vacuously true with none).
+    pub fn claims_pass(&self) -> bool {
+        self.claims.iter().all(|c| c.pass)
     }
 
     /// Measure `f` (returning one y sample per call) `repeats` times.
@@ -129,11 +175,78 @@ impl Suite {
             csv.save(&self.csv_path())?;
         }
         println!("[saved {}]", self.csv_path().display());
+        for c in &self.claims {
+            println!(
+                "claim {:<24} {}  {} ({})",
+                c.id,
+                if c.pass { "PASS" } else { "FAIL" },
+                c.statement,
+                c.detail
+            );
+        }
+        self.to_json().save(&self.json_path())?;
+        println!("[saved {}]", self.json_path().display());
         Ok(())
+    }
+
+    /// The `persiq-bench-v1` artifact: configuration, per-series stats
+    /// (with raw samples and extra columns), and claim verdicts.
+    pub fn to_json(&self) -> Json {
+        let mut cfg = Json::obj();
+        for (k, v) in &self.config {
+            cfg = cfg.push(k, Json::Str(v.clone()));
+        }
+        let series = Json::Arr(
+            self.measurements
+                .iter()
+                .map(|m| {
+                    let s = m.stats();
+                    let mut extra = Json::obj();
+                    for (k, v) in &m.extra {
+                        extra = extra.push(k, Json::Num(*v));
+                    }
+                    Json::obj()
+                        .push("series", Json::Str(m.series.clone()))
+                        .push("x", Json::Num(m.x))
+                        .push("n", Json::Num(s.n as f64))
+                        .push("mean", Json::Num(s.mean))
+                        .push("std", Json::Num(s.std))
+                        .push("min", Json::Num(s.min))
+                        .push("max", Json::Num(s.max))
+                        .push("samples", Json::Arr(m.ys.iter().map(|y| Json::Num(*y)).collect()))
+                        .push("extra", extra)
+                })
+                .collect(),
+        );
+        let claims = Json::Arr(
+            self.claims
+                .iter()
+                .map(|c| {
+                    Json::obj()
+                        .push("id", Json::Str(c.id.clone()))
+                        .push("statement", Json::Str(c.statement.clone()))
+                        .push("pass", Json::Bool(c.pass))
+                        .push("detail", Json::Str(c.detail.clone()))
+                })
+                .collect(),
+        );
+        Json::obj()
+            .push("schema", Json::Str("persiq-bench-v1".into()))
+            .push("name", Json::Str(self.name.into()))
+            .push("title", Json::Str(self.title.into()))
+            .push("repeats", Json::Num(self.repeats as f64))
+            .push("config", cfg)
+            .push("series", series)
+            .push("claims", claims)
+            .push("pass", Json::Bool(self.claims_pass()))
     }
 
     fn csv_path(&self) -> PathBuf {
         PathBuf::from("results").join(format!("{}.csv", self.name))
+    }
+
+    fn json_path(&self) -> PathBuf {
+        PathBuf::from("results").join(format!("BENCH_{}.json", self.name))
     }
 
     /// Summarize a series: mean y at the given x (for shape assertions in
@@ -191,6 +304,25 @@ mod tests {
         let v = thread_sweep();
         assert!(!v.is_empty());
         assert!(v[0] >= 1);
+    }
+
+    #[test]
+    fn json_artifact_shape() {
+        let mut s = Suite::new("test_json", "t");
+        s.repeats = 2;
+        s.config("threads", 4);
+        s.measure("a", 1.0, || 5.0);
+        s.claim("c1", "five is five", true, "5.0 == 5.0".into());
+        let j = s.to_json().render();
+        assert!(j.contains("\"schema\":\"persiq-bench-v1\""));
+        assert!(j.contains("\"name\":\"test_json\""));
+        assert!(j.contains("\"threads\":\"4\""));
+        assert!(j.contains("\"series\":\"a\""));
+        assert!(j.contains("\"id\":\"c1\""));
+        assert!(j.ends_with("\"pass\":true}"));
+        s.claim("c2", "never holds", false, String::new());
+        assert!(!s.claims_pass());
+        assert!(s.to_json().render().ends_with("\"pass\":false}"));
     }
 
     #[test]

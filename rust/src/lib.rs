@@ -69,9 +69,13 @@
 //!   dequeue flush, resize, plan commit, recovery, broker ack), turning
 //!   the paper's `1/B + 1/K` cost accounting into an asserted
 //!   per-site persistence ledger; plus a per-thread padded metrics
-//!   registry, bounded JSONL event tracing (`--trace`), and
-//!   Prometheus-style exposition (`persiq obs`, `serve
-//!   --metrics-every N`).
+//!   registry, bounded JSONL event tracing (`--trace`), Prometheus-style
+//!   exposition (`persiq obs`, `serve --metrics-every N`), and the
+//!   NVM-resident **flight recorder** ([`obs::flight`]): per-thread
+//!   event rings written with pwbs that piggyback on the psyncs the
+//!   algorithms already issue (zero extra psyncs, asserted in
+//!   `obs_ledger.rs`), scanned post-crash by `persiq forensics` and
+//!   cross-checked against what recovery delivers.
 //! * [`util`] — self-contained infrastructure (PRNG, CLI, config, reporters)
 //!   since this build environment is offline.
 //!

@@ -82,6 +82,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "resize" => cmd_resize(rest),
         "audit" => cmd_audit(rest),
+        "forensics" => cmd_forensics(rest),
         "micro" => cmd_micro(rest),
         "obs" => cmd_obs(rest),
         "help" | "--help" | "-h" => {
@@ -103,6 +104,7 @@ fn usage_text() -> String {
          \x20 serve     persistent task-broker service demo\n\
          \x20 resize    online elastic re-sharding demo (grow/shrink under load)\n\
          \x20 audit     broker SubmitLog <-> queue reconciliation dump\n\
+         \x20 forensics post-crash flight-recorder timeline + recovery cross-check\n\
          \x20 micro     pmem primitive cost microbenchmark\n\
          \x20 obs       observability dump: Prometheus metrics + psync-by-site ledger\n\n\
          Run `persiq <cmd> --help` for options.",
@@ -240,12 +242,21 @@ fn with_trace(a: &Args, body: impl FnOnce() -> Result<()>) -> Result<()> {
     let res = body();
     if armed {
         match obs::trace::stop() {
-            Ok(Some(rep)) => println!(
-                "[trace: {} events -> {} ({} dropped)]",
-                rep.written,
-                rep.path.display(),
-                rep.dropped
-            ),
+            Ok(Some(rep)) => {
+                println!(
+                    "[trace: {} events -> {} ({} dropped)]",
+                    rep.written,
+                    rep.path.display(),
+                    rep.dropped
+                );
+                if rep.dropped > 0 {
+                    log_warn!(
+                        "trace: {} events were evicted from full rings — raise the ring \
+                         capacity or narrow the run to keep the timeline complete",
+                        rep.dropped
+                    );
+                }
+            }
             Ok(None) => {}
             Err(e) => log_warn!("trace flush failed: {e}"),
         }
@@ -575,12 +586,19 @@ fn cmd_verify(args: &[String]) -> Result<()> {
              sharded-perlcrq; durability-gated resolution means zero trailing \
              allowances)",
         )
-        .opt("seed", "RNG seed");
+        .opt("seed", "RNG seed")
+        .opt("trace", "write a JSONL event trace to this path");
     let cmd =
         QueueArgs::register_resharding(QueueArgs::register_async(QueueArgs::register(cmd)));
     let a = cmd.parse(args)?;
+    with_trace(&a, || verify_run(&a))
+}
+
+/// The body of `verify`, run under an (optionally armed) event trace so
+/// crash cycles, resize phases, and recovery spans land in `--trace`.
+fn verify_run(a: &Args) -> Result<()> {
     let mut cfg = Config::load_default();
-    QueueArgs::apply(&mut cfg, &a)?;
+    QueueArgs::apply(&mut cfg, a)?;
     let seed = a.get_parse::<u64>("seed", entropy_seed())?;
     log_info!("verify seed = {seed}");
     let sched = cfg.resharding;
@@ -592,7 +610,7 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         if sched.is_some() {
             anyhow::bail!("--resharding-schedule is a sync-verify knob (no --async)");
         }
-        return verify_async(&cfg, &a, seed);
+        return verify_async(&cfg, a, seed);
     }
     let algos = if sched.is_some() {
         // The schedule resizes the concrete sharded queue: pin the algo.
@@ -897,9 +915,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "print a Prometheus-text metrics dump (all families + psync site ledger) \
              every N cycles (0 = off)",
         )
-        .opt("seed", "RNG seed");
+        .opt("seed", "RNG seed")
+        .opt("trace", "write a JSONL event trace to this path");
     let cmd = QueueArgs::register_async(QueueArgs::register(cmd));
     let a = cmd.parse(args)?;
+    with_trace(&a, || serve_run(&a))
+}
+
+/// The body of `serve`, run under an (optionally armed) event trace so
+/// broker submits/acks, crash cycles, and lease reaps land in `--trace`.
+fn serve_run(a: &Args) -> Result<()> {
     let mut cfg = Config::load_default();
     let use_async = a.flag("async");
     let resize_to = a.get_parse::<usize>("resize", 0)?;
@@ -925,7 +950,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
         other => anyhow::bail!("unknown --queue {other:?} (perlcrq|sharded)"),
     };
-    QueueArgs::apply(&mut cfg, &a)?;
+    QueueArgs::apply(&mut cfg, a)?;
     let producers = a.get_parse::<usize>("producers", 2)?;
     let workers = a.get_parse::<usize>("workers", 2)?;
     // Async mode adds the flusher workers' thread slots on top of the
@@ -978,6 +1003,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "broker: submitted={} done={} pending={} crashes={} wall={:.3}s",
         rep.submitted, rep.done, rep.pending_after, rep.crashes, rep.wall_secs
     );
+    // Observability loss is a finding, not a formatting detail: an
+    // overwritten flight ring means `forensics` would see a truncated
+    // window for this run's tail.
+    let overwritten: u64 = topo.pools().iter().map(|p| p.flight().overwritten()).sum();
+    if overwritten > 0 {
+        log_warn!(
+            "flight recorder: {overwritten} ring entr{} overwritten — post-crash \
+             forensics would see a truncated event window",
+            if overwritten == 1 { "y was" } else { "ies were" }
+        );
+    }
     if resize_to > 0 {
         let rec = broker.reconcile_report(0);
         println!(
@@ -1199,6 +1235,369 @@ fn cmd_audit(args: &[String]) -> Result<()> {
     );
     println!("  reconciliation invariants hold");
     Ok(())
+}
+
+/// `persiq forensics` — run a broker workload into a (simulated) crash,
+/// scan every pool's persistent flight-recorder rings **before** recovery
+/// mutates the image, reconstruct the merged timeline, then recover and
+/// cross-check recovery's decisions against the recorded events:
+///
+/// * every certified-durable submit/enqueue survives (redelivered or DONE),
+/// * no certified-durable ack/dequeue of a DONE job is redelivered,
+/// * the durably committed plan epoch is adopted,
+/// * the `ReconcileReport` itself has zero mismatches.
+///
+/// Exits nonzero on any unexplained discrepancy.
+fn cmd_forensics(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "forensics",
+        "post-crash flight-recorder scan: merged timeline + recovery cross-check",
+    )
+    .opt_default("producers", "producer threads", "2")
+    .opt_default("jobs", "jobs per producer (keep small enough that rings don't wrap)", "15")
+    .opt_default("consume", "fraction of submitted jobs to take+complete before the cut", "0.5")
+    .opt_default("crash-at", "crash after N pmem steps (0 = cut at workload end)", "0")
+    .opt_default("resize", "re-shard the work queue to K stripes mid-run (0 = off)", "0")
+    .opt_default("queue", "work queue kind: perlcrq|sharded", "sharded")
+    .opt_default("events", "merged-timeline rows to print", "20")
+    .opt("out", "write the JSON report to this path")
+    .opt("seed", "RNG seed (default: entropy)")
+    .opt("trace", "also write the volatile JSONL event trace of the run");
+    let cmd = QueueArgs::register(cmd);
+    let a = cmd.parse(args)?;
+    let mut cfg = Config::load_default();
+    QueueArgs::apply(&mut cfg, &a)?;
+    let producers = a.get_parse::<usize>("producers", 2)?;
+    let jobs = a.get_parse::<usize>("jobs", 15)?;
+    let consume = a.get_parse::<f64>("consume", 0.5)?.clamp(0.0, 1.0);
+    let crash_at = a.get_parse::<u64>("crash-at", 0)?;
+    let resize_to = a.get_parse::<usize>("resize", 0)?;
+    let nrows = a.get_parse::<usize>("events", 20)?;
+    let seed = a.get_parse::<u64>("seed", entropy_seed())?;
+    let nthreads = producers + 1; // + one consumer slot
+
+    with_trace(&a, || {
+        let topo = cfg.build_topology();
+        let broker = match a.get("queue").unwrap_or("sharded") {
+            "sharded" => Arc::new(
+                Broker::new_sharded(&topo, nthreads, 1 << 16, cfg.queue.clone())
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+            ),
+            "perlcrq" => Arc::new(Broker::new_on(&topo, nthreads, 1 << 16, cfg.queue.ring_size)),
+            other => anyhow::bail!("unknown --queue {other:?} (perlcrq|sharded)"),
+        };
+
+        // Pre-crash ground truth, appended only *after* each call returns —
+        // a crash unwinds out of the op, so these sets reflect exactly what
+        // the application observed before the cut.
+        let taken: std::cell::RefCell<Vec<u64>> = Default::default();
+        let completed: std::cell::RefCell<Vec<u64>> = Default::default();
+        if crash_at > 0 {
+            topo.arm_crash_after(crash_at);
+        }
+        let consumer = producers;
+        let outcome = persiq::pmem::run_guarded(|| -> Result<()> {
+            for p in 0..producers {
+                broker.attach_worker(p);
+            }
+            broker.attach_worker(consumer);
+            let per_round = ((producers as f64) * consume).round() as usize;
+            for i in 0..jobs {
+                if resize_to > 0 && i == jobs / 2 {
+                    let _ = broker.resize(consumer, resize_to);
+                }
+                for p in 0..producers {
+                    let payload = format!("fx:p{p}:{i}");
+                    broker.submit(p, payload.as_bytes())?;
+                }
+                for _ in 0..per_round {
+                    let Some((jid, _)) = broker.take(consumer)? else { break };
+                    taken.borrow_mut().push(jid.0.to_u64());
+                    if broker.complete(consumer, jid)? {
+                        completed.borrow_mut().push(jid.0.to_u64());
+                    }
+                }
+            }
+            Ok(())
+        });
+        let crashed = outcome.crashed();
+        if let persiq::pmem::RunOutcome::Completed(r) = outcome {
+            r?;
+            if crash_at > 0 {
+                log_warn!(
+                    "workload finished before the armed cut ({crash_at} steps); \
+                     cutting at workload end"
+                );
+            }
+        }
+        // Realize the storage cut (pending-flush/eviction races), then scan
+        // the shadow images BEFORE recovery appends to the rings.
+        let mut rng = persiq::util::rng::Xoshiro256::seed_from(seed);
+        topo.crash(&mut rng);
+        let scans = obs::flight::scan(&topo);
+        let tl = obs::flight::timeline(&scans);
+
+        broker.recover();
+        let rep = broker.reconcile_report(0);
+        // Drain the recovered queue: the post-recovery truth the recorded
+        // events are checked against. (`take` skips DONE jobs by design.)
+        let mut survivors: Vec<u64> = Vec::new();
+        while let Some((jid, _)) = broker.take(consumer)? {
+            survivors.push(jid.0.to_u64());
+        }
+        let survivor_set: std::collections::HashSet<u64> = survivors.iter().copied().collect();
+        let taken_set: std::collections::HashSet<u64> =
+            taken.borrow().iter().copied().collect();
+        let state_of =
+            |h: u64| broker.state(consumer, persiq::coordinator::JobId(GAddr::from_u64(h)));
+
+        // ---- Cross-checks: recorded events vs recovered truth ----
+        let mut violations: Vec<String> = Vec::new();
+        for &h in &tl.broker_submits {
+            match state_of(h) {
+                persiq::coordinator::JobState::Unwritten => violations.push(format!(
+                    "durable BrokerSubmit {h:#x}: job record unreadable after recovery"
+                )),
+                persiq::coordinator::JobState::Pending if !survivor_set.contains(&h) => {
+                    violations.push(format!(
+                        "durable BrokerSubmit {h:#x}: still PENDING but not redelivered"
+                    ))
+                }
+                _ => {}
+            }
+        }
+        for &h in &tl.broker_acks {
+            if state_of(h) != persiq::coordinator::JobState::Done {
+                violations
+                    .push(format!("durable BrokerAck {h:#x}: job not DONE after recovery"));
+            }
+            if survivor_set.contains(&h) {
+                violations.push(format!("durable BrokerAck {h:#x}: DONE job redelivered"));
+            }
+        }
+        let (mut durable_enqs, mut durable_deqs, mut inflight) = (0usize, 0usize, 0usize);
+        for line in &tl.threads {
+            inflight += line.inflight.len();
+            for &h in &line.durable_enqs {
+                durable_enqs += 1;
+                // A durably-queued handle must survive: redelivered, or its
+                // job already DONE, or (at-least-once) already returned to a
+                // pre-crash `take` whose dequeue log sealed.
+                if state_of(h) != persiq::coordinator::JobState::Done
+                    && !survivor_set.contains(&h)
+                    && !taken_set.contains(&h)
+                {
+                    violations.push(format!(
+                        "durable OpEnq {h:#x} (tid {}): handle lost by recovery",
+                        line.tid
+                    ));
+                }
+            }
+            for &h in &line.durable_deqs {
+                durable_deqs += 1;
+                if state_of(h) == persiq::coordinator::JobState::Unwritten {
+                    violations.push(format!(
+                        "durable OpDeq {h:#x} (tid {}): dequeued a job with no record",
+                        line.tid
+                    ));
+                }
+                if state_of(h) == persiq::coordinator::JobState::Done
+                    && survivor_set.contains(&h)
+                {
+                    violations
+                        .push(format!("durable OpDeq {h:#x}: DONE job redelivered anyway"));
+                }
+            }
+        }
+        if let Some(&(e, k, _)) =
+            tl.plan_commits.iter().filter(|(_, _, ph)| *ph >= 1).max_by_key(|(e, _, _)| *e)
+        {
+            if rep.plan.0 < e {
+                violations.push(format!(
+                    "durable plan freeze epoch {e} (k={k}) not adopted (recovered epoch {})",
+                    rep.plan.0
+                ));
+            }
+        }
+        if rep.mismatches() != 0 {
+            violations.push(format!(
+                "ReconcileReport mismatches: {} (stranded-pending={} queued-done={} \
+                 queued-unwritten={} queued-duplicates={})",
+                rep.mismatches(),
+                rep.stranded_pending,
+                rep.queued_done,
+                rep.queued_unwritten,
+                rep.queued_duplicates
+            ));
+        }
+        // Survivors the rings never saw: each sits beyond the open ring tail
+        // (its seal psync never completed — the entry luck-landed or was
+        // never written). Informational, not a violation; meaningless once a
+        // ring wrapped.
+        let recorded: std::collections::HashSet<u64> = tl
+            .events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.kind,
+                    obs::FlightKind::OpEnq | obs::FlightKind::BrokerSubmit
+                )
+            })
+            .map(|e| e.payload)
+            .collect();
+        let unrecorded = survivors.iter().filter(|h| !recorded.contains(h)).count();
+
+        // ---- Human report ----
+        println!(
+            "forensics ({}; pools={}, {}; cut {}):",
+            a.get("queue").unwrap_or("sharded"),
+            topo.len(),
+            if crashed { "crashed mid-op" } else { "cut at workload end" },
+            if crash_at > 0 { format!("--crash-at {crash_at}") } else { "quiescent".into() }
+        );
+        println!(
+            "  rings       : {} events across {} pools ({} certified-durable kinds: \
+             enq={} deq={} submit={} ack={}), {} in-flight at cut, {} torn, {} overwritten",
+            tl.events.len(),
+            scans.iter().filter(|s| s.present).count(),
+            tl.threads.iter().map(|t| t.seals).sum::<usize>(),
+            durable_enqs,
+            durable_deqs,
+            tl.broker_submits.len(),
+            tl.broker_acks.len(),
+            inflight,
+            tl.torn,
+            tl.overwritten
+        );
+        let mut table = Csv::new(vec!["clock", "pool", "tid", "seq", "kind", "payload", "durable"]);
+        let skip = tl.events.len().saturating_sub(nrows);
+        for (ring_durable, e) in tl.events.iter().skip(skip).map(|e| {
+            let durable = scans
+                .iter()
+                .flat_map(|s| &s.rings)
+                .find(|r| r.tid == e.tid && r.events.iter().any(|x| x == e))
+                .map(|r| r.certified(e))
+                .unwrap_or(false);
+            (durable, e)
+        }) {
+            table.row(vec![
+                e.clock.to_string(),
+                e.socket.to_string(),
+                e.tid.to_string(),
+                e.seq.to_string(),
+                e.kind.name().to_string(),
+                format!("{:#x}", e.payload),
+                if ring_durable { "yes".into() } else { "open-tail".to_string() },
+            ]);
+        }
+        for line in table.to_table().lines() {
+            println!("    {line}");
+        }
+        for t in &tl.threads {
+            println!(
+                "  tid {:>3}     : last durable {} | {} durable enq, {} durable deq, \
+                 {} in-flight",
+                t.tid,
+                t.last_durable
+                    .map(|e| format!("{} @clock {}", e.kind.name(), e.clock))
+                    .unwrap_or_else(|| "-".into()),
+                t.durable_enqs.len(),
+                t.durable_deqs.len(),
+                t.inflight.len()
+            );
+        }
+        println!(
+            "  recovery    : submitted={} done={} pending={} | redelivered={} \
+             unrecorded-beyond-tail={} | plan epoch={} k={}",
+            rep.audit.submitted,
+            rep.audit.done,
+            rep.audit.pending,
+            survivors.len(),
+            unrecorded,
+            rep.plan.0,
+            rep.plan.1
+        );
+        println!("  psync/pwb by attribution site:");
+        for line in obs::render_site_ledger(&topo.site_ledger(), 0).lines() {
+            println!("    {line}");
+        }
+        for v in &violations {
+            log_warn!("forensics violation: {v}");
+        }
+
+        // ---- JSON report ----
+        if let Some(path) = a.get("out") {
+            use persiq::util::report::Json;
+            let mut threads = Vec::new();
+            for t in &tl.threads {
+                threads.push(
+                    Json::obj()
+                        .push("tid", Json::Num(t.tid as f64))
+                        .push(
+                            "last_durable",
+                            t.last_durable
+                                .map(|e| Json::Str(e.kind.name().into()))
+                                .unwrap_or(Json::Null),
+                        )
+                        .push("durable_enqs", Json::Num(t.durable_enqs.len() as f64))
+                        .push("durable_deqs", Json::Num(t.durable_deqs.len() as f64))
+                        .push("inflight", Json::Num(t.inflight.len() as f64)),
+                );
+            }
+            let report = Json::obj()
+                .push("schema", Json::Str("persiq-forensics-v1".into()))
+                .push(
+                    "config",
+                    Json::obj()
+                        .push("queue", Json::Str(a.get("queue").unwrap_or("sharded").into()))
+                        .push("producers", Json::Num(producers as f64))
+                        .push("jobs", Json::Num(jobs as f64))
+                        .push("crash_at", Json::Num(crash_at as f64))
+                        .push("resize", Json::Num(resize_to as f64))
+                        .push("seed", Json::Num(seed as f64)),
+                )
+                .push("crashed", Json::Bool(crashed))
+                .push(
+                    "timeline",
+                    Json::obj()
+                        .push("events", Json::Num(tl.events.len() as f64))
+                        .push("durable_enqs", Json::Num(durable_enqs as f64))
+                        .push("durable_deqs", Json::Num(durable_deqs as f64))
+                        .push("broker_submits", Json::Num(tl.broker_submits.len() as f64))
+                        .push("broker_acks", Json::Num(tl.broker_acks.len() as f64))
+                        .push("plan_commits", Json::Num(tl.plan_commits.len() as f64))
+                        .push("inflight", Json::Num(inflight as f64))
+                        .push("torn", Json::Num(tl.torn as f64))
+                        .push("overwritten", Json::Num(tl.overwritten as f64))
+                        .push("threads", Json::Arr(threads)),
+                )
+                .push(
+                    "crosscheck",
+                    Json::obj()
+                        .push("submitted", Json::Num(rep.audit.submitted as f64))
+                        .push("done", Json::Num(rep.audit.done as f64))
+                        .push("pending", Json::Num(rep.audit.pending as f64))
+                        .push("redelivered", Json::Num(survivors.len() as f64))
+                        .push("unrecorded_beyond_tail", Json::Num(unrecorded as f64))
+                        .push("mismatches", Json::Num(rep.mismatches() as f64)),
+                )
+                .push(
+                    "violations",
+                    Json::Arr(violations.iter().map(|v| Json::Str(v.clone())).collect()),
+                )
+                .push("pass", Json::Bool(violations.is_empty()));
+            report.save(std::path::Path::new(path))?;
+            println!("  [report -> {path}]");
+        }
+
+        anyhow::ensure!(
+            violations.is_empty(),
+            "forensics cross-check found {} unexplained discrepancies",
+            violations.len()
+        );
+        println!("  flight-recorder cross-check holds ({} events explained)", tl.events.len());
+        Ok(())
+    })
 }
 
 fn cmd_micro(args: &[String]) -> Result<()> {

@@ -25,6 +25,12 @@
 //!   recovery timeline, async future lifecycles. Free when disarmed.
 //! * [`expo`] — Prometheus text rendering plus the human site-ledger
 //!   table (`persiq obs`, `serve --metrics-every N`).
+//! * [`flight`] — the **persistent** flight recorder: per-(pool, thread)
+//!   NVM-resident event rings that survive the crash, written with
+//!   pwb-only traffic piggybacked on the psyncs the algorithms already
+//!   issue (zero extra psyncs, asserted by site in `obs_ledger.rs`).
+//!   `persiq forensics` scans them post-crash into a merged timeline
+//!   and cross-checks recovery's decisions against it.
 //!
 //! Overhead discipline: with tracing disarmed, the hot-path cost is one
 //! padded relaxed load+store per counted event and one relaxed
@@ -33,12 +39,14 @@
 //! cost on the fig7 steady-state configuration.
 
 pub mod expo;
+pub mod flight;
 pub mod metrics;
 pub mod site;
 pub mod summary;
 pub mod trace;
 
 pub use expo::{ledger_families, render, render_site_ledger};
+pub use flight::{FlightEvent, FlightKind, FlightRec, PoolScan, RingScan, Timeline};
 pub use metrics::{
     registry, set_enabled, Counter, Family, Gauge, HistSnapshot, Histogram, HistogramData, Kind,
     Registry, Sample, Snapshot,

@@ -150,6 +150,12 @@ fn push(tid: usize, line: String) {
     if g.lines.len() >= cap {
         g.lines.pop_front();
         g.dropped += 1;
+        crate::obs::registry()
+            .counter(
+                "persiq_trace_dropped_total",
+                "JSONL trace events evicted from a full per-thread ring",
+            )
+            .inc(tid);
     }
     g.lines.push_back(line);
 }

@@ -203,6 +203,9 @@ pub struct PmemPool {
     shared: Arc<SharedState>,
     /// This pool's socket index within its topology (0 standalone).
     socket: usize,
+    /// Volatile state of this pool's persistent flight recorder (the
+    /// NVM rings live in the arena; see [`crate::obs::flight`]).
+    flight: crate::obs::flight::FlightRec,
     cfg: PmemConfig,
 }
 
@@ -225,7 +228,7 @@ impl PmemPool {
         };
         let mk_atoms =
             |n: usize| -> Box<[AtomicU64]> { (0..n).map(|_| AtomicU64::new(0)).collect() };
-        Self {
+        let pool = Self {
             live: mk(n_lines),
             shadow: mk(n_lines),
             stamps: mk_atoms(n_lines),
@@ -240,8 +243,13 @@ impl PmemPool {
             nvm_chain: AtomicU64::new(0),
             shared,
             socket,
+            flight: crate::obs::flight::FlightRec::new(),
             cfg,
-        }
+        };
+        // The flight-recorder directory is carved first so it lands at
+        // the well-known `flight::DIR_BASE` (no-op on tiny arenas).
+        crate::obs::flight::carve_dir(&pool);
+        pool
     }
 
     /// The pool configuration.
@@ -317,6 +325,39 @@ impl PmemPool {
     /// Words currently allocated.
     pub fn used_words(&self) -> usize {
         self.next_word.load(Ordering::Relaxed)
+    }
+
+    /// Total arena capacity in words.
+    pub fn capacity_words(&self) -> usize {
+        self.live.len() * WORDS_PER_LINE
+    }
+
+    /// Like [`alloc_lines`](Self::alloc_lines), but returns `None` instead
+    /// of panicking on exhaustion — for best-effort consumers (the flight
+    /// recorder) that must never take down an algorithm's pool.
+    pub(crate) fn try_alloc_lines(&self, lines: usize) -> Option<PAddr> {
+        let n = lines * WORDS_PER_LINE;
+        loop {
+            let cur = self.next_word.load(Ordering::Relaxed);
+            let start = (cur + WORDS_PER_LINE - 1) & !(WORDS_PER_LINE - 1);
+            let end = start + n;
+            if end > self.capacity_words() {
+                return None;
+            }
+            if self
+                .next_word
+                .compare_exchange_weak(cur, end, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(PAddr(start as u32));
+            }
+        }
+    }
+
+    /// This pool's flight-recorder state (see [`crate::obs::flight`]).
+    #[inline]
+    pub fn flight(&self) -> &crate::obs::flight::FlightRec {
+        &self.flight
     }
 
     // ------------------------------------------------------------------
@@ -929,6 +970,17 @@ impl PmemPool {
     /// Non-metered raw store — test setup only.
     pub fn poke(&self, a: PAddr, v: u64) {
         self.word(a).store(v, Ordering::Release);
+    }
+
+    /// Non-metered raw store to live **and** shadow — "freshly formatted
+    /// NVM" initialization. Reserved for flight-recorder metadata
+    /// (directory/ring headers), which must be discoverable after a crash
+    /// without charging metered construction traffic that would shift
+    /// step-swept crash cuts. Never use on algorithm state: it bypasses
+    /// the persistency model entirely.
+    pub(crate) fn poke_durable(&self, a: PAddr, v: u64) {
+        self.word(a).store(v, Ordering::Release);
+        self.shadow_word(a).store(v, Ordering::Release);
     }
 }
 

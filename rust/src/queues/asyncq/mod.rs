@@ -38,6 +38,13 @@
 //! same 1/B + 1/K psync cost* (`tests/prop_async_durability.rs` enforces
 //! both claims).
 //!
+//! Flight-recorder note ([`crate::obs::flight`]): this layer records no
+//! events of its own. The flusher workers drive the inner sharded
+//! queue's `enqueue`/`dequeue`/`flush`, so each combined operation's
+//! advisory events and the certifying `BatchSeal`/`DeqSeal` land in the
+//! *flusher thread's* ring via the sharded hooks — post-crash forensics
+//! sees async traffic attributed to the threads that made it durable.
+//!
 //! ## Architecture: flat combining, not per-caller batches
 //!
 //! Callers do not touch the queue. They publish operations into a

@@ -267,6 +267,15 @@ impl BlockFifo {
         lane.pool
             .store(tid, self.header_addr(lane, o.idx), hdr(ST_COMMITTED, 0, o.count));
         lane.pool.persist_range(tid, self.block_base(lane, o.idx), 1 + o.count);
+        // The block's psync retired: record the certified seal (flight
+        // recorder, write-after-psync; its pwb rides this thread's next
+        // block psync).
+        obs::flight::record_sealed(
+            &lane.pool,
+            tid,
+            obs::flight::FlightKind::BlockSeal,
+            obs::flight::block_payload(o.lane, o.idx, o.count as u64),
+        );
     }
 
     /// Hand a consumer's partially-drained block back to the queue,
@@ -344,6 +353,12 @@ impl BlockFifo {
                         let _g = obs::enter_site(ObsSite::DeqFlush);
                         lane.pool.pwb(tid, ha);
                         lane.pool.psync(tid);
+                        obs::flight::record_sealed(
+                            &lane.pool,
+                            tid,
+                            obs::flight::FlightKind::BlockDrain,
+                            obs::flight::block_payload(l, idx, c as u64),
+                        );
                         slot.draining = Some(Drain { lane: l, idx, pos: s, count: c });
                         return true;
                     }
@@ -501,6 +516,12 @@ impl PersistentQueue for BlockFifo {
     ///    retired so the consumer cursor can pass them.
     fn recover(&self, _pool: &PmemPool) {
         let _g = obs::enter_site(ObsSite::Recovery);
+        obs::flight::record_advisory(
+            &self.lanes[0].pool,
+            0,
+            obs::flight::FlightKind::RecoverBegin,
+            self.lanes[0].pool.epoch(),
+        );
         for tid in 0..self.nthreads {
             let slot = self.slot(tid);
             slot.open = None;
@@ -558,6 +579,13 @@ impl PersistentQueue for BlockFifo {
             }
             lane.cursor.store(cur as u64, Ordering::Relaxed);
         }
+        // Certified span end: every lane's recovery psync has retired.
+        obs::flight::record_sealed(
+            &self.lanes[0].pool,
+            0,
+            obs::flight::FlightKind::RecoverEnd,
+            self.lanes[0].pool.epoch(),
+        );
     }
 
     fn quiesce(&self) {

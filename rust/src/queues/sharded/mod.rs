@@ -843,6 +843,9 @@ impl<Q: Shardable> ShardedQueue<Q> {
         let lp = self.log_pool[tid];
         self.logs[tid]
             .record(self.topo.pool(lp), tid, i, item, plan.epoch, shard, &pos, slot.seq);
+        // Advisory flight event (plain stores): becomes durable with the
+        // batch seal's psync, which certifies it.
+        obs::flight::record_advisory(self.topo.pool(lp), tid, obs::flight::FlightKind::OpEnq, item);
         slot.pending = i + 1;
         if slot.pending >= self.batch {
             self.flush(tid);
@@ -902,10 +905,33 @@ impl<Q: Shardable> ShardedQueue<Q> {
                 ObsSite::DeqFlush
             };
             let _site = obs::enter_site(site);
+            // Queue the flight ring's advisory backlog (this batch's
+            // OpEnq/OpDeq events) behind the seal psync below — the
+            // recorder's zero-extra-psync piggyback.
+            obs::flight::presync(self.topo.pool(lp), tid);
             for p in 0..self.topo.len() {
                 if pools_mask & (1 << p) != 0 {
                     self.topo.pool(p).psync(tid);
                 }
+            }
+            // The seal psync has retired: record the certified seal
+            // events (write-after-psync — their durability alone proves
+            // the batch durable, and they certify the advisory prefix).
+            if enq_sealed > 0 {
+                obs::flight::record_sealed(
+                    self.topo.pool(lp),
+                    tid,
+                    obs::flight::FlightKind::BatchSeal,
+                    enq_sealed as u64,
+                );
+            }
+            if deq_sealed > 0 {
+                obs::flight::record_sealed(
+                    self.topo.pool(lp),
+                    tid,
+                    obs::flight::FlightKind::DeqSeal,
+                    deq_sealed as u64,
+                );
             }
             if obs::trace::enabled() {
                 let now = self.topo.vtime(tid);
@@ -1015,6 +1041,13 @@ impl<Q: Shardable> ShardedQueue<Q> {
                 let lp = self.log_pool[tid];
                 self.deq_logs[tid]
                     .record(self.topo.pool(lp), tid, i, v, plan.epoch, s, &pos, slot.deq_seq);
+                // Advisory flight event; certified by the deq seal psync.
+                obs::flight::record_advisory(
+                    self.topo.pool(lp),
+                    tid,
+                    obs::flight::FlightKind::OpDeq,
+                    v,
+                );
                 slot.deq_pending = i + 1;
                 if slot.deq_pending >= self.batch_deq {
                     self.flush(tid);
@@ -1128,9 +1161,21 @@ impl<Q: Shardable> ShardedQueue<Q> {
             let _site = obs::enter_site(ObsSite::PlanCommit);
             self.plan_log.write_record(primary, tid, new_slot, epoch, &plan.shard_pool);
             primary.psync(tid);
+            obs::flight::record_sealed(
+                primary,
+                tid,
+                obs::flight::FlightKind::PlanCommit,
+                obs::flight::plan_payload(epoch, new_k, 0),
+            );
             // The commit point: durably Freezing(old, new).
             self.plan_log.set_freezing(primary, tid, old_slot, epoch);
             primary.psync(tid);
+            obs::flight::record_sealed(
+                primary,
+                tid,
+                obs::flight::FlightKind::PlanCommit,
+                obs::flight::plan_payload(epoch, new_k, 1),
+            );
         }
         // Volatile flip — runs only if the commit psync retired, so the
         // durable and volatile views can never cross. Pointer swap, not
@@ -1219,6 +1264,12 @@ impl<Q: Shardable> ShardedQueue<Q> {
             let _site = obs::enter_site(ObsSite::PlanCommit);
             self.plan_log.set_active(primary, tid, self.cur_slot.load(Ordering::Relaxed), epoch);
             primary.psync(tid);
+            obs::flight::record_sealed(
+                primary,
+                tid,
+                obs::flight::FlightKind::PlanCommit,
+                obs::flight::plan_payload(epoch, set.active.shards.len(), 2),
+            );
         }
         // Drop the frozen plan out of the dispatch path: swap in a
         // draining-free snapshot, then grace-wait before freeing the
@@ -1389,6 +1440,14 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
         // is Recovery traffic in the site ledger.
         let _site = obs::enter_site(ObsSite::Recovery);
         let t0 = self.topo.vtime(tid);
+        // Advisory flight marker: rides whatever psync recovery issues
+        // next (shard recovery below psyncs on every generation).
+        obs::flight::record_advisory(
+            primary,
+            tid,
+            obs::flight::FlightKind::RecoverBegin,
+            primary.epoch(),
+        );
         // 1. Adopt the durably committed plan state. The volatile history
         //    covers every epoch the log can name: plans are registered
         //    before their freeze commit, and an uncommitted staged plan
@@ -1509,6 +1568,14 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
         //    bump-allocated and intentionally not reclaimed.)
         let mut hist = self.history.lock().unwrap();
         hist.retain(|&e, _| e == active_epoch);
+        drop(hist);
+        // Certified span end: every recovery psync above has retired.
+        obs::flight::record_sealed(
+            primary,
+            tid,
+            obs::flight::FlightKind::RecoverEnd,
+            primary.epoch(),
+        );
     }
 }
 

@@ -353,6 +353,81 @@ fn blockfifo_recovery_psyncs_attribute_to_recovery_only() {
     assert_eq!(got, expect);
 }
 
+/// The persistent flight recorder piggybacks on the queue's own group
+/// commits: with the recorder armed (the default) the psync ledger is
+/// **identical, site by site**, to a recorder-disabled run of the same
+/// workload — steady-state flushes, a full resize, and a tail flush —
+/// while the armed run demonstrably captured the history (certified
+/// events in the ring, i.e. its seals became durable without a single
+/// psync of their own). The recorder's only traffic is pwbs folded into
+/// drains the queue already pays for.
+#[test]
+fn flight_recorder_adds_zero_psyncs_at_every_site() {
+    use persiq::obs::flight;
+
+    let n = 256u64;
+    let run = || {
+        let (topo, q) = mk(1, 4, 8, 8);
+        for v in 0..n {
+            q.enqueue(0, v).unwrap();
+        }
+        for _ in 0..n / 2 {
+            assert!(q.dequeue(0).unwrap().is_some());
+        }
+        q.resize(0, 8).unwrap();
+        q.flush(0);
+        topo
+    };
+
+    flight::set_enabled(true);
+    let topo_on = run();
+    let on = topo_on.site_ledger();
+
+    // The armed run really recorded: tid 0's ring holds events, and a
+    // flush seal is already durable — certified by piggybacked drains.
+    let scans = flight::scan(&topo_on);
+    assert!(scans[0].present, "pool must carve a recorder region");
+    let ring = scans[0].rings.iter().find(|r| r.tid == 0).expect("tid 0 recorded");
+    assert!(!ring.events.is_empty(), "armed recorder must capture the workload");
+    assert!(ring.last_certified_seq > 0, "flush seals must ride the existing psyncs");
+
+    flight::set_enabled(false);
+    let topo_off = run();
+    let off = topo_off.site_ledger();
+    flight::set_enabled(true);
+
+    let disarmed_events: usize =
+        flight::scan(&topo_off).iter().flat_map(|p| &p.rings).map(|r| r.events.len()).sum();
+    assert_eq!(disarmed_events, 0, "disarmed recorder must write nothing");
+
+    for site in [
+        ObsSite::Setup,
+        ObsSite::Op,
+        ObsSite::BatchFlush,
+        ObsSite::DeqFlush,
+        ObsSite::Resize,
+        ObsSite::PlanCommit,
+        ObsSite::Recovery,
+        ObsSite::BrokerAck,
+    ] {
+        assert_eq!(
+            on.psyncs_at(site),
+            off.psyncs_at(site),
+            "recorder changed the {site:?} psync budget"
+        );
+    }
+    assert_eq!(on.total_psyncs(), off.total_psyncs(), "recorder added psyncs");
+    assert!(
+        topo_on.stats_total().pwbs >= topo_off.stats_total().pwbs,
+        "the recorder's cost is pwb-only, so the armed run can only add pwbs"
+    );
+    // The known exact budget still holds with the recorder armed.
+    assert_eq!(on.psyncs_at(ObsSite::BatchFlush), n / 8);
+    assert_eq!(on.psyncs_at(ObsSite::DeqFlush), n / 2 / 8);
+    assert_eq!(on.psyncs_at(ObsSite::Resize), 8);
+    assert_eq!(on.psyncs_at(ObsSite::PlanCommit), 3);
+}
+
 /// Golden-schema check for the JSONL trace: every line carries
 /// `ts`/`tid`/`type`, and each event type carries its required keys.
 /// Tracing state is process-global, so this single test owns the whole

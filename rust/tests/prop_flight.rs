@@ -1,0 +1,244 @@
+//! Property tests for the persistent flight recorder: crashes swept
+//! through enqueue / dequeue / flush / resize must leave NVM rings whose
+//! **certified** event set is consistent with the queue state recovery
+//! actually reconstructs:
+//!
+//! * **A** — a certified-durable `OpEnq` item is never lost: it survives
+//!   recovery, was returned to a caller pre-crash, or is certified
+//!   durably consumed.
+//! * **B** — a certified-durable `OpDeq` item is never redelivered.
+//! * **C** — prefix completeness, per epoch: below an epoch's highest
+//!   durable flush seal, every same-epoch sequence number is present as
+//!   a checksum-valid entry (the only tolerated gap is the seal's
+//!   immediate sibling, written after the same psync and lost to the
+//!   same cut). The check is epoch-scoped because a post-recovery seal
+//!   proves nothing about a *previous* life's open tail — those entries
+//!   reverted with the crash even though their seqs sit below it.
+//!
+//! Workloads are sized well under one ring (64 entries) so the window
+//! never wraps — `overwritten == 0` is itself asserted. Scans run after
+//! the crash and **before** recovery, exactly as `persiq forensics`
+//! does.
+
+use std::collections::{BTreeMap, HashSet};
+use std::sync::Arc;
+
+use persiq::obs::flight;
+use persiq::pmem::crash::{install_quiet_crash_hook, run_guarded};
+use persiq::pmem::{CostModel, PmemConfig, Topology};
+use persiq::queues::sharded::ShardedQueue;
+use persiq::queues::{ConcurrentQueue, PersistentQueue, QueueConfig};
+use persiq::util::rng::Xoshiro256;
+
+fn mk(pools: usize, batch: usize, seed: u64) -> (Topology, Arc<ShardedQueue>) {
+    let topo = Topology::new(
+        PmemConfig {
+            // >= flight::MIN_CAPACITY_WORDS so every pool carves a
+            // recorder region.
+            capacity_words: 1 << 18,
+            cost: CostModel::zero(),
+            evict_prob: 0.3,
+            pending_flush_prob: 0.5,
+            seed,
+        },
+        pools,
+    );
+    let cfg =
+        QueueConfig { shards: 4, batch, batch_deq: batch, ring_size: 64, ..Default::default() };
+    let q = Arc::new(ShardedQueue::new_perlcrq(&topo, 4, cfg).unwrap());
+    (topo, q)
+}
+
+fn drain(q: &ShardedQueue, tid: usize) -> Vec<u64> {
+    let mut out = Vec::new();
+    while let Ok(Some(v)) = q.dequeue(tid) {
+        out.push(v);
+    }
+    out
+}
+
+/// Invariant C over a pre-recovery scan, plus the no-wrap guard.
+fn assert_prefix_complete(scans: &[flight::PoolScan], ctxt: &str) {
+    for ps in scans {
+        for ring in &ps.rings {
+            assert_eq!(
+                ring.overwritten, 0,
+                "{ctxt}: ring tid {} wrapped — workload oversized for the window",
+                ring.tid
+            );
+            let present: HashSet<u64> = ring.events.iter().map(|e| e.seq).collect();
+            // First observed seq per epoch: every same-epoch entry below
+            // the epoch's seal is provably durable, so this is a true
+            // lower bound on where the epoch's window starts.
+            let mut first: BTreeMap<u64, u64> = BTreeMap::new();
+            for e in &ring.events {
+                let f = first.entry(e.epoch).or_insert(u64::MAX);
+                *f = (*f).min(e.seq);
+            }
+            for (&epoch, &m) in &ring.seal_max {
+                // The seal itself is an epoch event, so `first` has it.
+                for s in first[&epoch]..=m {
+                    assert!(
+                        present.contains(&s) || s + 1 == m,
+                        "{ctxt}: ring tid {}: seq {s} (epoch {epoch}) missing below \
+                         certified seal {m} (events {:?})",
+                        ring.tid,
+                        ring.events
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn crosscheck(
+    scans: &[flight::PoolScan],
+    survivors: &HashSet<u64>,
+    returned: &HashSet<u64>,
+    ctxt: &str,
+) {
+    let tl = flight::timeline(scans);
+    let cc = flight::crosscheck_queue(&tl, survivors, returned);
+    assert!(
+        cc.pass(),
+        "{ctxt}: {} durable enqs, {} durable deqs, violations: {:#?}",
+        cc.durable_enqs,
+        cc.durable_deqs,
+        cc.violations
+    );
+}
+
+/// Sweep the armed crash countdown through every phase of a mixed
+/// workload — batched enqueues, batched dequeues, both flush paths, and
+/// a full online resize — on 1- and 2-pool topologies. At every cut the
+/// certified flight record must agree with what recovery delivers.
+#[test]
+fn crash_swept_through_enq_deq_flush_and_resize() {
+    install_quiet_crash_hook();
+    for pools in [1usize, 2] {
+        for j in 1..=160u64 {
+            let (topo, q) = mk(pools, 4, 9_000 + j);
+            let base = j * 1_000;
+            let mut returned_v: Vec<u64> = Vec::new();
+            topo.arm_crash_after(j);
+            let _ = run_guarded(|| {
+                for v in 0..10u64 {
+                    q.enqueue(0, base + v).unwrap();
+                }
+                q.flush_all();
+                for _ in 0..5 {
+                    if let Ok(Some(v)) = q.dequeue(0) {
+                        returned_v.push(v);
+                    }
+                }
+                let _ = q.resize(0, 6);
+                for v in 10..16u64 {
+                    q.enqueue(0, base + v).unwrap();
+                }
+                for _ in 0..4 {
+                    if let Ok(Some(v)) = q.dequeue(0) {
+                        returned_v.push(v);
+                    }
+                }
+                q.flush_all();
+            });
+            let mut rng = Xoshiro256::seed_from(31 * j);
+            topo.crash(&mut rng);
+            // Scan the post-crash image BEFORE recovery mutates it.
+            let scans = flight::scan(&topo);
+            let ctxt = format!("pools={pools} j={j}");
+            assert_prefix_complete(&scans, &ctxt);
+            q.recover(topo.primary());
+            let survivors: HashSet<u64> = drain(&q, 0).into_iter().collect();
+            let returned: HashSet<u64> = returned_v.into_iter().collect();
+            crosscheck(&scans, &survivors, &returned, &ctxt);
+        }
+    }
+}
+
+/// Two full crash/recover cycles on one queue: the ring carries both
+/// epochs, and a seal from the post-recovery epoch must not certify
+/// luck-landed advisories from before the crash (epoch-gated
+/// certification). `returned` accumulates across cycles so invariant A
+/// can account for items consumed in an earlier life.
+#[test]
+fn seals_never_certify_across_the_crash_epoch() {
+    install_quiet_crash_hook();
+    for seed in [3u64, 11, 27] {
+        let (topo, q) = mk(1, 4, seed);
+        let mut rng = Xoshiro256::seed_from(seed * 7);
+        let mut returned: HashSet<u64> = HashSet::new();
+        for cycle in 0..2u64 {
+            let base = (seed * 10 + cycle) * 1_000;
+            topo.arm_crash_after(40 + rng.next_below(120));
+            let mut mine: Vec<u64> = Vec::new();
+            let _ = run_guarded(|| {
+                for v in 0..8u64 {
+                    q.enqueue(0, base + v).unwrap();
+                }
+                q.flush_all();
+                for _ in 0..4 {
+                    if let Ok(Some(v)) = q.dequeue(0) {
+                        mine.push(v);
+                    }
+                }
+                q.flush_all();
+            });
+            returned.extend(mine);
+            topo.crash(&mut rng);
+            let scans = flight::scan(&topo);
+            let ctxt = format!("seed={seed} cycle={cycle}");
+            assert_prefix_complete(&scans, &ctxt);
+            q.recover(topo.primary());
+            let survivors: HashSet<u64> = drain(&q, 0).into_iter().collect();
+            crosscheck(&scans, &survivors, &returned, &ctxt);
+            // Drained items count as returned for the next cycle's check.
+            returned.extend(&survivors);
+        }
+    }
+}
+
+/// Concurrent producers/consumers, crash landing anywhere: per-thread
+/// rings scattered across pools must still cross-check. Each thread's
+/// values are disjoint so any certified-durable loss or redelivery is
+/// attributable.
+#[test]
+fn concurrent_workload_crosschecks_after_crash() {
+    install_quiet_crash_hook();
+    for seed in [5u64, 17, 40] {
+        for pools in [1usize, 2] {
+            let (topo, q) = mk(pools, 4, seed * 100 + pools as u64);
+            topo.arm_crash_after(150 + seed * 13);
+            let mut hs = Vec::new();
+            for tid in 0..4usize {
+                let q = Arc::clone(&q);
+                hs.push(std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    let _ = run_guarded(|| {
+                        let base = 1_000_000 * (tid as u64 + 1);
+                        for i in 0..8u64 {
+                            q.enqueue(tid, base + i).unwrap();
+                            if let Ok(Some(v)) = q.dequeue(tid) {
+                                mine.push(v);
+                            }
+                        }
+                        let _ = q.flush(tid);
+                    });
+                    mine
+                }));
+            }
+            let mut returned: HashSet<u64> = HashSet::new();
+            for h in hs {
+                returned.extend(h.join().unwrap());
+            }
+            let mut rng = Xoshiro256::seed_from(seed + 1);
+            topo.crash(&mut rng);
+            let scans = flight::scan(&topo);
+            let ctxt = format!("seed={seed} pools={pools}");
+            assert_prefix_complete(&scans, &ctxt);
+            q.recover(topo.primary());
+            let survivors: HashSet<u64> = drain(&q, 0).into_iter().collect();
+            crosscheck(&scans, &survivors, &returned, &ctxt);
+        }
+    }
+}
