@@ -52,8 +52,11 @@ fn env_usize(name: &str, default: usize) -> usize {
 }
 
 /// Queue config for one series, with blockfifo's lanes sized to the run:
-/// blocks are never recycled, so `shards * ring_size * block` must cover
-/// every enqueue the workload can issue (with 2x headroom).
+/// block recycling (on by default since fig13) would cover any backlog,
+/// but the figure compares steady-state scan costs, so the lanes are
+/// still sized for `shards * ring_size * block` to cover every enqueue
+/// the workload can issue (with 2x headroom) — recycled claims then stay
+/// a rarity and the measured path matches the fig12 model.
 fn qcfg_for(algo: &str, enqueues: u64) -> QueueConfig {
     let mut qcfg = QueueConfig {
         shards: SHARDS,

@@ -1,0 +1,211 @@
+//! Figure 13 (beyond the paper) — what the size-classed persistent
+//! allocator (`pmem::palloc`) costs and buys versus the raw bump arena.
+//!
+//! Two experiments:
+//!
+//! * **Hot-path wall clock** — alloc/free pairs, palloc recycling
+//!   (magazine hit: no shared word) vs the bump ablation (`recycle off`:
+//!   every allocation takes the shared bump-cursor CAS + extent-directory
+//!   append). Claims (env-overridable for small shared CI runners):
+//!   uncontended (1 thread) the recycling path stays within 5% of bump
+//!   (`PERSIQ_FIG13_MIN_UNCONTENDED`, default 0.95×); contended
+//!   (`PERSIQ_FIG13_THREADS`, default 16) it wins by at least
+//!   `PERSIQ_FIG13_MIN_SPEEDUP` (default 1.3×), because magazines remove
+//!   the cursor from the steady-state path entirely.
+//!
+//! * **Persistence budget** — a node-churning sharded-perlcrq workload
+//!   (8-slot ring: every few ops allocates and retires a ring node)
+//!   run recycle-on and recycle-off must produce an **identical
+//!   psync ledger, site by site**, with exactly zero psyncs at the
+//!   `Alloc` site: allocator durability piggybacks on the psyncs the
+//!   queue already issues, so the paper's `1/B + 1/K` budget is
+//!   untouched.
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use persiq::harness::bench::{bench_ops, Suite};
+use persiq::obs::{ObsSite, ALL_SITES};
+use persiq::pmem::{CostModel, PmemConfig, PmemPool, Topology};
+use persiq::queues::sharded::ShardedQueue;
+use persiq::queues::{ConcurrentQueue, QueueConfig};
+
+/// Segment size for the microbench (lines): small enough that the
+/// recycled path's scrub-on-reuse stays comparable to a fresh carve.
+const LINES: usize = 2;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Wall-clock Mpairs/s of `nthreads` threads doing alloc/free pairs.
+/// A fresh pool per call: the bump ablation leaks by design, so the
+/// arena must be sized for the whole run (and the capacity caps the
+/// pair budget below).
+fn pair_rate(nthreads: usize, pairs_per_thread: u64, recycle: bool, seed: u64) -> f64 {
+    let pool = Arc::new(PmemPool::new(PmemConfig {
+        capacity_words: 1 << 23,
+        cost: CostModel::zero(),
+        evict_prob: 0.0,
+        pending_flush_prob: 0.0,
+        seed,
+    }));
+    pool.palloc().set_recycle(recycle);
+    let barrier = Arc::new(Barrier::new(nthreads + 1));
+    let mut hs = Vec::new();
+    for tid in 0..nthreads {
+        let pool = Arc::clone(&pool);
+        let barrier = Arc::clone(&barrier);
+        hs.push(std::thread::spawn(move || {
+            barrier.wait();
+            for i in 0..pairs_per_thread {
+                let a = pool.palloc_alloc(tid, LINES).expect("arena exhausted mid-bench");
+                pool.palloc_free(tid, a);
+                // Callers psync anyway (group commits); keep the pending
+                // flush queues bounded the same way in both modes.
+                if i % 64 == 63 {
+                    pool.psync(tid);
+                }
+            }
+            pool.psync(tid);
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for h in hs {
+        h.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    (nthreads as u64 * pairs_per_thread) as f64 / dt / 1e6
+}
+
+/// One deterministic node-churning queue run; returns the per-site psync
+/// ledger and the recycled-segment count.
+fn ledger_run(recycle: bool) -> (persiq::obs::SiteLedger, u64) {
+    let topo = Topology::single(PmemConfig {
+        capacity_words: 1 << 22,
+        cost: CostModel::zero(),
+        evict_prob: 0.0,
+        pending_flush_prob: 1.0,
+        seed: 9,
+    });
+    let q = ShardedQueue::new_perlcrq(
+        &topo,
+        1,
+        QueueConfig {
+            shards: 4,
+            batch: 8,
+            batch_deq: 8,
+            ring_size: 8,
+            recycle,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let n = 4096u64;
+    for v in 0..n {
+        q.enqueue(0, v).unwrap();
+    }
+    for _ in 0..n {
+        assert!(q.dequeue(0).unwrap().is_some());
+    }
+    q.flush(0);
+    (topo.site_ledger(), topo.primary().palloc().recycled_total())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut suite = Suite::new(
+        "fig13_alloc",
+        "Fig 13: size-classed persistent allocator — magazine hot path vs bump, zero extra psyncs",
+    );
+    let threads = env_usize("PERSIQ_FIG13_THREADS", 16);
+    let ops = bench_ops().max(16_000);
+    // Pair budgets, capped so the leaking bump ablation fits the arena:
+    // (1 + LINES) lines per leaked pair, 2^23 words of arena.
+    let uncontended_pairs = ops.clamp(16_000, 200_000);
+    let pair_cap = (256_000 / threads.max(1) as u64).max(1_000);
+    let contended_pairs = ((ops * 4) / threads.max(1) as u64).max(1_000).min(pair_cap);
+
+    let mut best = [[0.0f64; 2]; 2]; // [uncontended|contended][bump|palloc]
+    for (xi, (nthreads, pairs)) in
+        [(1usize, uncontended_pairs), (threads, contended_pairs)].into_iter().enumerate()
+    {
+        for (si, (series, recycle)) in [("bump", false), ("palloc", true)].into_iter().enumerate() {
+            suite.measure_extra(series, nthreads as f64, || {
+                let rate = pair_rate(nthreads, pairs, recycle, 7 + xi as u64);
+                best[xi][si] = best[xi][si].max(rate);
+                (rate, vec![("pairs/thread".to_string(), pairs as f64)])
+            });
+        }
+    }
+    suite.config("threads", threads);
+    suite.config("seg_lines", LINES);
+    suite.config("ops", ops);
+
+    // --- Claim 1: uncontended hot path within 5% of bump -------------
+    let min_unc = env_f64("PERSIQ_FIG13_MIN_UNCONTENDED", 0.95);
+    let ratio_unc = best[0][1] / best[0][0];
+    suite.claim(
+        "fig13-hot-path-uncontended",
+        "single-thread alloc/free pairs: the magazine path stays within 5% of raw bump",
+        ratio_unc >= min_unc,
+        format!(
+            "palloc {:.2} vs bump {:.2} Mpairs/s = {ratio_unc:.2}x (bound {min_unc:.2})",
+            best[0][1], best[0][0]
+        ),
+    );
+
+    // --- Claim 2: contended speedup ----------------------------------
+    let min_speedup = env_f64("PERSIQ_FIG13_MIN_SPEEDUP", 1.3);
+    let ratio_con = best[1][1] / best[1][0];
+    suite.claim(
+        "fig13-hot-path-contended",
+        "with no shared word on the steady-state path, recycling beats the contended bump cursor",
+        ratio_con >= min_speedup,
+        format!(
+            "palloc {:.2} vs bump {:.2} Mpairs/s @ {threads} threads = {ratio_con:.2}x \
+             (bound {min_speedup:.2})",
+            best[1][1], best[1][0]
+        ),
+    );
+
+    // --- Claim 3+4: psync ledger unchanged, Alloc site psync-free ----
+    let (on, on_recycled) = ledger_run(true);
+    let (off, _) = ledger_run(false);
+    let identical = ALL_SITES.iter().all(|&s| on.psyncs_at(s) == off.psyncs_at(s));
+    let diff: Vec<String> = ALL_SITES
+        .iter()
+        .filter(|&&s| on.psyncs_at(s) != off.psyncs_at(s))
+        .map(|&s| format!("{s}: {} vs {}", on.psyncs_at(s), off.psyncs_at(s)))
+        .collect();
+    suite.claim(
+        "fig13-psync-budget-unchanged",
+        "recycle on/off produce identical per-site psync ledgers on a node-churning workload",
+        identical && on_recycled > 0,
+        if identical {
+            format!("all {} sites identical; {on_recycled} segments recycled", ALL_SITES.len())
+        } else {
+            format!("site mismatch: {}", diff.join(", "))
+        },
+    );
+    suite.claim(
+        "fig13-alloc-site-psync-free",
+        "the Alloc site carries zero psyncs: allocator durability piggybacks on caller psyncs",
+        on.psyncs_at(ObsSite::Alloc) == 0 && off.psyncs_at(ObsSite::Alloc) == 0,
+        format!(
+            "Alloc psyncs: on={} off={} (pwbs on={} off={})",
+            on.psyncs_at(ObsSite::Alloc),
+            off.psyncs_at(ObsSite::Alloc),
+            on.pwbs_at(ObsSite::Alloc),
+            off.pwbs_at(ObsSite::Alloc)
+        ),
+    );
+
+    suite.finish()?;
+    anyhow::ensure!(suite.claims_pass(), "fig13 alloc claims failed");
+    Ok(())
+}

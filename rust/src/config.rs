@@ -29,6 +29,10 @@
 //! depth = 32         # per-flusher in-flight window (depth flush trigger)
 //! flushers = 1       # combiner worker threads
 //!
+//! [alloc]
+//! recycle = true     # palloc segment recycling (false = leak-and-bump ablation)
+//! magazine = 8       # per-thread magazine capacity (segments per size class)
+//!
 //! [broker]
 //! lease_ms = 0       # per-job lease on in-flight jobs (0 = off)
 //!
@@ -181,6 +185,9 @@ impl Config {
         c.queue.block = doc.get_u64("queue", "block", c.queue.block as u64) as usize;
         c.queue.dchoice = doc.get_u64("queue", "dchoice", c.queue.dchoice as u64) as usize;
 
+        c.queue.recycle = doc.get_bool("alloc", "recycle", c.queue.recycle);
+        c.queue.magazine = doc.get_u64("alloc", "magazine", c.queue.magazine as u64) as usize;
+
         let pools = doc.get_u64("topology", "pools", c.pools as u64) as usize;
         if pools < 1 || pools > MAX_POOLS {
             // Config-file parsing is lenient throughout (bad keys fall
@@ -319,6 +326,19 @@ mod tests {
         assert_eq!(c.resharding, Some(ReshardSchedule { from_k: 4, to_k: 8, at_percent: 50 }));
         let doc = crate::util::toml::parse("[resharding]\nschedule = \"nope\"\n").unwrap();
         assert_eq!(Config::from_doc(&doc).resharding, None);
+    }
+
+    #[test]
+    fn alloc_section_overrides() {
+        let doc =
+            crate::util::toml::parse("[alloc]\nrecycle = false\nmagazine = 4\n").unwrap();
+        let c = Config::from_doc(&doc);
+        assert!(!c.queue.recycle);
+        assert_eq!(c.queue.magazine, 4);
+        // Untouched keys keep defaults (recycling on).
+        let c = Config::from_doc(&crate::util::toml::parse("").unwrap());
+        assert!(c.queue.recycle);
+        assert_eq!(c.queue.magazine, crate::pmem::palloc::DEFAULT_MAGAZINE);
     }
 
     #[test]

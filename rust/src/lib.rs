@@ -18,6 +18,17 @@
 //!   cross-socket `pwb`/RMW penalties, and a coordinated machine-wide
 //!   crash cut — with pool-qualified [`pmem::GAddr`] addressing and
 //!   shard-placement policies (`interleave` | `colocate` | `pinned`).
+//!   Every pool fronts its bump arena with [`pmem::palloc`], a
+//!   size-classed persistent allocator: per-thread magazines (the
+//!   steady-state alloc/free pair touches no shared word), per-class
+//!   freelists, durable one-line segment headers whose free/reuse flips
+//!   piggyback on caller psyncs (the `Alloc` obs site shows **zero**
+//!   psyncs, ever), and a conservative one-scan crash rebuild that
+//!   never double-allocates. The queue tiers recycle through it —
+//!   closed LCRQ rings, retired re-sharding stripes and consumed
+//!   blockfifo blocks all return to circulation epoch-safely — so
+//!   long-running churn holds a memory plateau instead of bumping the
+//!   arena forever (`--recycle off` keeps the leak-and-bump ablation).
 //! * [`queues`] — the paper's algorithm family: IQ / PerIQ (Alg. 1, 6),
 //!   CRQ / PerCRQ (Alg. 3), LCRQ / PerLCRQ (Alg. 5), plus the baselines its
 //!   evaluation compares against: Michael–Scott queue, a durable MS queue,

@@ -167,6 +167,11 @@ impl QueueArgs {
             )
             .opt("block", "blockfifo block size: entries claimed per FAI / sealed per psync")
             .opt("dchoice", "blockfifo-multi: lanes each dequeue samples before stealing")
+            .opt("recycle", "palloc segment recycling: on|off (off = leak-and-bump ablation)")
+            .opt(
+                "magazine",
+                "palloc per-thread magazine capacity per size class (0 = shared freelist only)",
+            )
             .opt("pools", "NVM pools (sockets), each with its own bandwidth chain (default 1)")
             .opt("placement", "shard placement: interleave | colocate | pinned:<p0,p1,...>")
     }
@@ -201,6 +206,14 @@ impl QueueArgs {
         cfg.queue.batch_deq = a.get_parse("batch-deq", cfg.queue.batch_deq)?;
         cfg.queue.block = a.get_parse("block", cfg.queue.block)?;
         cfg.queue.dchoice = a.get_parse("dchoice", cfg.queue.dchoice)?;
+        if let Some(r) = a.get("recycle") {
+            cfg.queue.recycle = match r {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" => false,
+                other => anyhow::bail!("--recycle must be on|off, got {other:?}"),
+            };
+        }
+        cfg.queue.magazine = a.get_parse("magazine", cfg.queue.magazine)?;
         cfg.pools = a.get_parse("pools", cfg.pools)?;
         anyhow::ensure!(
             cfg.pools >= 1 && cfg.pools <= MAX_POOLS,

@@ -46,10 +46,15 @@ pub enum ObsSite {
     /// Broker job-completion acks (CAS to DONE + flush), including the
     /// async flusher's exec-batch drains that realize them.
     BrokerAck = 7,
+    /// Allocator metadata persistence: segment-header state flips issued
+    /// by `pmem::palloc` (alloc→LIVE, free→FREE). These are pwb-only —
+    /// durability piggybacks on psyncs the caller already issues, so the
+    /// ledger must show **zero** psyncs at this site in steady state.
+    Alloc = 8,
 }
 
 /// Number of [`ObsSite`] variants (ledger array length).
-pub const SITE_COUNT: usize = 8;
+pub const SITE_COUNT: usize = 9;
 
 /// Every site, in discriminant order (ledger index order).
 pub const ALL_SITES: [ObsSite; SITE_COUNT] = [
@@ -61,6 +66,7 @@ pub const ALL_SITES: [ObsSite; SITE_COUNT] = [
     ObsSite::PlanCommit,
     ObsSite::Recovery,
     ObsSite::BrokerAck,
+    ObsSite::Alloc,
 ];
 
 impl ObsSite {
@@ -81,6 +87,7 @@ impl ObsSite {
             ObsSite::PlanCommit => "PlanCommit",
             ObsSite::Recovery => "Recovery",
             ObsSite::BrokerAck => "BrokerAck",
+            ObsSite::Alloc => "Alloc",
         }
     }
 }

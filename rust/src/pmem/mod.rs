@@ -32,6 +32,17 @@
 //! [`CostModel::remote_pwb_ns`]: latency::CostModel::remote_pwb_ns
 //! [`CostModel::remote_rmw_ns`]: latency::CostModel::remote_rmw_ns
 //!
+//! ## Allocation
+//!
+//! The base allocator is a bump cursor ([`PmemPool::alloc`] /
+//! [`PmemPool::try_alloc`]); the [`palloc`] module layers a size-classed
+//! recycling tier on top of it — per-thread magazines over per-class
+//! shared freelists, one-line crash-consistent segment headers whose
+//! durability piggybacks on caller-issued psyncs, and a conservative
+//! post-crash rebuild scan — so retired queue structures (closed LCRQ
+//! rings, retired shard stripes, drained blockfifo blocks) are recycled
+//! instead of leaked.
+//!
 //! ## Virtual-time metering
 //!
 //! The testbed has one physical core, so wall-clock cannot reproduce the
@@ -51,6 +62,7 @@ pub mod atomic128;
 pub mod crash;
 pub mod latency;
 pub mod layout;
+pub mod palloc;
 pub mod pool;
 pub mod stats;
 pub mod topology;
@@ -58,6 +70,7 @@ pub mod topology;
 pub use crash::{run_guarded, CrashSignal, RunOutcome};
 pub use latency::{CostModel, MeterMode};
 pub use layout::{PAddr, WORDS_PER_LINE};
+pub use palloc::PallocState;
 pub use pool::{Hotness, PmemPool, MAX_THREADS};
 pub use stats::{OpCounters, PoolStats};
 pub use topology::{GAddr, PlacementPolicy, Topology, MAX_POOLS};

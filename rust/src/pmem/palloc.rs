@@ -1,0 +1,685 @@
+//! `palloc` — a size-classed persistent allocator layered on the bump
+//! arena, with per-thread magazines and crash-consistent segment
+//! metadata.
+//!
+//! ## Why
+//!
+//! [`PmemPool::alloc`] is a bump-only cursor: every structure the queues
+//! retire (closed LCRQ rings, retired shard-plan stripes, drained
+//! blockfifo blocks) leaks by design, and the cursor itself is one
+//! contended CAS word on the segment-allocation path. `palloc` adds a
+//! recycling tier **on top of** the bump arena — fresh memory still
+//! comes from the cursor, but freed segments re-enter circulation — with
+//! three properties the queues need:
+//!
+//! 1. **No shared word on the steady-state path.** Each thread owns a
+//!    per-size-class *magazine* (a small cache of free segments). A
+//!    magazine hit touches only thread-local state plus the segment's
+//!    own header line; misses refill from a per-class shared freelist
+//!    under a short volatile mutex.
+//! 2. **Crash-consistent metadata at zero extra psyncs.** Every segment
+//!    is prefixed by a one-line header whose single state word says
+//!    `LIVE` or `FREE`. State flips are a store + `pwb` attributed to
+//!    [`ObsSite::Alloc`](crate::obs::ObsSite) — durability piggybacks on
+//!    the **caller's** next `psync` (exactly like the flight recorder's
+//!    `presync`), so the paper's steady-state psync budgets (1/B + 1/K,
+//!    ~1/block) are untouched and `tests/obs_ledger.rs` can assert zero
+//!    psyncs at the `Alloc` site.
+//! 3. **Conservative recovery.** A persistent *extent directory* (carved
+//!    at pool construction, like the flight-recorder directory) records
+//!    every segment ever carved. Post-crash rebuild is one scan: a
+//!    segment whose header is durably `FREE` re-enters the freelists;
+//!    anything else — including segments whose free `pwb` had not
+//!    reached a psync — is treated as live (leaked-until-audit). The
+//!    scan can lose a *non-durable* free, never a durable one, and can
+//!    never hand out a segment that might still be reachable.
+//!
+//! ## Crash-safety argument
+//!
+//! The invariant is **durably-reachable ⇒ durably-LIVE**. A fresh carve
+//! formats its header `LIVE` with a durable write before the caller ever
+//! sees the address. A recycled segment's `LIVE` flip is a store + `pwb`
+//! queued on the caller's thread *before* the caller can publish a
+//! pointer to it; any psync that makes the pointer durable drains the
+//! header flush first. Conversely a free's `FREE` flip becomes durable
+//! at the freeing thread's next psync; until then recovery sees `LIVE`
+//! and conservatively leaks the segment. Since recovery only reuses
+//! durably-`FREE` segments, and a durably-`FREE` segment cannot be
+//! durably reachable (the header line is flushed by the same psync
+//! discipline that would have flushed the pointer), no crash point can
+//! cause a double allocation.
+//!
+//! **Reuse safety against concurrent readers is the caller's job**: a
+//! queue must not `palloc_free` a segment until no thread can still
+//! dereference it (the LCRQ gates node frees on an epoch grace period
+//! *and* on the durable head pointer having moved past the node; see
+//! `queues/lcrq.rs`). `palloc` itself only guarantees alloc/free/crash
+//! atomicity of its own metadata.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crossbeam_utils::CachePadded;
+
+use super::layout::{PAddr, WORDS_PER_LINE};
+use super::pool::{PmemPool, MAX_THREADS};
+use crate::obs::{self, ObsSite};
+
+/// Distinct segment sizes (size classes) per pool. Classes bind lazily
+/// to the exact line counts requested — the queues allocate a handful of
+/// fixed shapes (ring nodes, endpoint lines, block strides), so exact
+/// binding gives zero internal fragmentation. Requests beyond the table
+/// still allocate (bump fallback) but their frees are counted leaked.
+pub const MAX_CLASSES: usize = 8;
+
+/// Default per-thread magazine capacity (segments per class).
+pub const DEFAULT_MAGAZINE: usize = 8;
+
+/// Extent-directory capacity in entry lines (8 entries per line).
+const DIR_ENTRY_LINES: usize = 256; // 2048 segments
+
+/// Segment-header state values (bits 15..0 of the header word).
+const SEG_LIVE: u64 = 1;
+const SEG_FREE: u64 = 2;
+
+/// Header-word magic (bits 63..48).
+const SEG_MAGIC: u64 = 0x9A5E;
+
+/// Directory-entry magic (bits 63..48); entries pack the segment's line
+/// count (bits 47..32) and header word address (bits 31..0).
+const ENT_MAGIC: u64 = 0xD1CE;
+
+#[inline]
+fn pack_hdr(lines: usize, gen: u64, state: u64) -> u64 {
+    (SEG_MAGIC << 48) | ((lines as u64 & 0xFFFF) << 32) | ((gen & 0xFFFF) << 16) | (state & 0xFFFF)
+}
+
+/// `(lines, gen, state)` if the word carries the segment magic.
+#[inline]
+fn unpack_hdr(w: u64) -> Option<(usize, u64, u64)> {
+    if w >> 48 != SEG_MAGIC {
+        return None;
+    }
+    Some((((w >> 32) & 0xFFFF) as usize, (w >> 16) & 0xFFFF, w & 0xFFFF))
+}
+
+#[inline]
+fn pack_ent(lines: usize, hdr: PAddr) -> u64 {
+    (ENT_MAGIC << 48) | ((lines as u64 & 0xFFFF) << 32) | hdr.to_u64()
+}
+
+#[inline]
+fn unpack_ent(w: u64) -> Option<(usize, PAddr)> {
+    if w >> 48 != ENT_MAGIC {
+        return None;
+    }
+    Some((((w >> 32) & 0xFFFF) as usize, PAddr((w & 0xFFFF_FFFF) as u32)))
+}
+
+/// One size class: the bound segment length and its shared freelist of
+/// user-area addresses (overflow/refill tier behind the magazines).
+struct ClassState {
+    /// Segment length in lines; 0 = unbound.
+    lines: AtomicUsize,
+    free: Mutex<Vec<u32>>,
+    /// Shared-freelist occupancy gauge (lazily registered; name leaked
+    /// once per class index per process).
+    gauge: OnceLock<std::sync::Arc<obs::Gauge>>,
+}
+
+/// Per-thread magazines: one small free-segment cache per class, owned
+/// exclusively by its thread (same owner-only contract as the pool's
+/// pending-pwb slots).
+struct MagazineSlot {
+    per_class: UnsafeCell<[Vec<u32>; MAX_CLASSES]>,
+}
+
+// SAFETY: `per_class` is accessed only by the owning thread on the
+// alloc/free paths; crash rebuild runs strictly after workers unwind.
+unsafe impl Sync for MagazineSlot {}
+
+/// Cached registry handles (the global registry lookup takes a lock —
+/// too slow for the alloc fast path).
+struct Ctrs {
+    alloc: std::sync::Arc<obs::Counter>,
+    free: std::sync::Arc<obs::Counter>,
+    recycled: std::sync::Arc<obs::Counter>,
+    leaked: std::sync::Arc<obs::Counter>,
+    highwater: std::sync::Arc<obs::Gauge>,
+}
+
+fn ctrs() -> &'static Ctrs {
+    static C: OnceLock<Ctrs> = OnceLock::new();
+    C.get_or_init(|| {
+        let r = obs::registry();
+        Ctrs {
+            alloc: r.counter("persiq_palloc_alloc_total", "Segments handed out by palloc"),
+            free: r.counter("persiq_palloc_free_total", "Segments returned to palloc"),
+            recycled: r
+                .counter("persiq_palloc_recycled_total", "Allocations served from a freelist"),
+            leaked: r.counter(
+                "persiq_palloc_leaked_total",
+                "Segments palloc could not place on a freelist (unknown header or class overflow)",
+            ),
+            highwater: r.gauge(
+                "persiq_palloc_arena_highwater_words",
+                "Bump-cursor high-water mark of the pool serving palloc",
+            ),
+        }
+    })
+}
+
+fn class_gauge(idx: usize) -> std::sync::Arc<obs::Gauge> {
+    static NAMES: OnceLock<Mutex<Vec<(usize, &'static str)>>> = OnceLock::new();
+    let names = NAMES.get_or_init(|| Mutex::new(Vec::new()));
+    let mut v = names.lock().unwrap_or_else(|e| e.into_inner());
+    let name = match v.iter().find(|(i, _)| *i == idx) {
+        Some((_, n)) => *n,
+        None => {
+            let n: &'static str =
+                Box::leak(format!("persiq_palloc_class{idx}_free_segments").into_boxed_str());
+            v.push((idx, n));
+            n
+        }
+    };
+    obs::registry().gauge(name, "Free segments on this palloc size class's shared freelist")
+}
+
+/// Volatile allocator state embedded in every [`PmemPool`]. The durable
+/// half (segment headers + extent directory) lives in the arena; this
+/// struct is rebuilt from it after every crash.
+pub struct PallocState {
+    /// Extent-directory base (0 = arena too small; palloc degrades to
+    /// bump-only, nothing recycles).
+    dir: AtomicU32,
+    /// Volatile append cursor over directory entry slots.
+    next_ent: AtomicUsize,
+    classes: [ClassState; MAX_CLASSES],
+    mags: Vec<CachePadded<MagazineSlot>>,
+    magazine_cap: AtomicUsize,
+    recycle: AtomicBool,
+    // Per-pool counters (the registry mirrors are process-global).
+    n_alloc: AtomicU64,
+    n_free: AtomicU64,
+    n_recycled: AtomicU64,
+    n_leaked: AtomicU64,
+    n_recovered_free: AtomicU64,
+}
+
+impl PallocState {
+    pub(crate) fn new() -> Self {
+        Self {
+            dir: AtomicU32::new(0),
+            next_ent: AtomicUsize::new(0),
+            classes: std::array::from_fn(|_| ClassState {
+                lines: AtomicUsize::new(0),
+                free: Mutex::new(Vec::new()),
+                gauge: OnceLock::new(),
+            }),
+            mags: (0..MAX_THREADS)
+                .map(|_| {
+                    CachePadded::new(MagazineSlot {
+                        per_class: UnsafeCell::new(std::array::from_fn(|_| Vec::new())),
+                    })
+                })
+                .collect(),
+            magazine_cap: AtomicUsize::new(DEFAULT_MAGAZINE),
+            recycle: AtomicBool::new(true),
+            n_alloc: AtomicU64::new(0),
+            n_free: AtomicU64::new(0),
+            n_recycled: AtomicU64::new(0),
+            n_leaked: AtomicU64::new(0),
+            n_recovered_free: AtomicU64::new(0),
+        }
+    }
+
+    /// Per-thread magazine capacity per size class (0 disables magazines;
+    /// refills then always go through the shared freelist).
+    pub fn set_magazine_cap(&self, cap: usize) {
+        self.magazine_cap.store(cap, Ordering::Relaxed);
+    }
+
+    /// Enable/disable recycling. Off = every allocation takes the bump
+    /// fallback and frees only flip headers (the ablation baseline:
+    /// behaviourally identical to the pre-palloc arena).
+    pub fn set_recycle(&self, on: bool) {
+        self.recycle.store(on, Ordering::Relaxed);
+    }
+
+    pub fn recycle_enabled(&self) -> bool {
+        self.recycle.load(Ordering::Relaxed)
+    }
+
+    /// Segments handed out (fresh + recycled) by this pool's palloc.
+    pub fn allocs_total(&self) -> u64 {
+        self.n_alloc.load(Ordering::Relaxed)
+    }
+
+    /// Segments returned via [`PmemPool::palloc_free`].
+    pub fn frees_total(&self) -> u64 {
+        self.n_free.load(Ordering::Relaxed)
+    }
+
+    /// Allocations served from a magazine or the shared freelist.
+    pub fn recycled_total(&self) -> u64 {
+        self.n_recycled.load(Ordering::Relaxed)
+    }
+
+    /// Frees that could not be placed (bad header / class overflow).
+    pub fn leaked_total(&self) -> u64 {
+        self.n_leaked.load(Ordering::Relaxed)
+    }
+
+    /// Durably-FREE segments recovered onto freelists by crash rebuilds.
+    pub fn recovered_free_total(&self) -> u64 {
+        self.n_recovered_free.load(Ordering::Relaxed)
+    }
+
+    /// Free segments currently on the shared freelist of the class bound
+    /// to `lines` (magazine contents not included).
+    pub fn free_count(&self, lines: usize) -> usize {
+        for c in &self.classes {
+            if c.lines.load(Ordering::Relaxed) == lines {
+                return c.free.lock().unwrap_or_else(|e| e.into_inner()).len();
+            }
+        }
+        0
+    }
+
+    /// `(lines, free-segment count)` for every bound size class, in
+    /// class-table order — the per-class occupancy surface for metrics.
+    pub fn class_occupancy(&self) -> Vec<(usize, usize)> {
+        self.classes
+            .iter()
+            .filter_map(|c| {
+                let lines = c.lines.load(Ordering::Relaxed);
+                (lines != 0)
+                    .then(|| (lines, c.free.lock().unwrap_or_else(|e| e.into_inner()).len()))
+            })
+            .collect()
+    }
+
+    fn lock_class(&self, idx: usize) -> MutexGuard<'_, Vec<u32>> {
+        self.classes[idx].free.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Find (or lazily bind) the class for `lines`. `None` if the table
+    /// is full of other sizes.
+    fn class_of(&self, lines: usize) -> Option<usize> {
+        for (i, c) in self.classes.iter().enumerate() {
+            let cur = c.lines.load(Ordering::Relaxed);
+            if cur == lines {
+                return Some(i);
+            }
+            if cur == 0
+                && c.lines
+                    .compare_exchange(0, lines, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+            {
+                return Some(i);
+            }
+            // Lost a binding race: re-check what won the slot.
+            if c.lines.load(Ordering::Relaxed) == lines {
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+/// Carve the extent directory right after the flight-recorder directory
+/// (pool construction; formats with durable pokes like freshly-formatted
+/// NVM). Layout: 1 header line (`ENT_MAGIC<<48 | capacity`), then
+/// [`DIR_ENTRY_LINES`] lines of 8 entries each.
+pub(crate) fn carve_dir(pool: &PmemPool) {
+    let Some(base) = pool.try_alloc_lines(1 + DIR_ENTRY_LINES) else {
+        return; // tiny arena: bump-only degradation
+    };
+    pool.poke_durable(base, (ENT_MAGIC << 48) | (DIR_ENTRY_LINES * WORDS_PER_LINE) as u64);
+    pool.palloc().dir.store(base.0, Ordering::Release);
+}
+
+/// Append a carved segment to the extent directory (durable poke: the
+/// directory is discovery metadata, like the flight recorder's). A full
+/// directory is not fatal — the segment just becomes invisible to crash
+/// rebuilds (conservatively leaked there).
+fn dir_append(pool: &PmemPool, hdr: PAddr, lines: usize) {
+    let st = pool.palloc();
+    let dir = st.dir.load(Ordering::Acquire);
+    if dir == 0 {
+        return;
+    }
+    let slot = st.next_ent.fetch_add(1, Ordering::Relaxed);
+    if slot >= DIR_ENTRY_LINES * WORDS_PER_LINE {
+        return;
+    }
+    pool.poke_durable(PAddr(dir).add(WORDS_PER_LINE + slot), pack_ent(lines, hdr));
+}
+
+/// Allocate a `lines`-line segment for thread `tid`. Fast path: magazine
+/// pop + one header store/pwb; slow paths refill from the shared
+/// freelist or carve fresh arena. `None` only when the arena is
+/// exhausted **and** nothing suitable is free.
+pub(crate) fn alloc(pool: &PmemPool, tid: usize, lines: usize) -> Option<PAddr> {
+    debug_assert!(lines > 0 && lines <= 0xFFFF);
+    let st = pool.palloc();
+    if st.recycle.load(Ordering::Relaxed) {
+        if let Some(cls) = st.class_of(lines) {
+            // (1) Magazine hit: no shared word touched.
+            // SAFETY: owner-only access to tid's magazine slot.
+            let mag = unsafe { &mut (*st.mags[tid].per_class.get())[cls] };
+            let mut got = mag.pop();
+            if got.is_none() {
+                // (2) Refill from the shared freelist (short volatile
+                // critical section — no pmem primitives under the lock).
+                let cap = st.magazine_cap.load(Ordering::Relaxed);
+                let mut fl = st.lock_class(cls);
+                got = fl.pop();
+                if got.is_some() {
+                    let take = cap.min(fl.len());
+                    let at = fl.len() - take;
+                    mag.extend(fl.drain(at..));
+                    let g = st.classes[cls]
+                        .gauge
+                        .get_or_init(|| class_gauge(cls))
+                        .clone();
+                    g.set(0, fl.len() as i64);
+                }
+            }
+            if let Some(addr) = got {
+                let user = PAddr(addr);
+                let hdr = PAddr(addr - WORDS_PER_LINE as u32);
+                let (h_lines, gen, state) =
+                    unpack_hdr(pool.peek(hdr)).expect("freelist entry lost its header");
+                debug_assert_eq!(h_lines, lines);
+                debug_assert_eq!(state, SEG_FREE, "freelist entry must be FREE");
+                // Scrub the user area to durable zeros so a recycled
+                // segment is indistinguishable from a fresh carve (queues
+                // rely on "fresh arena is a valid empty durable
+                // structure"). The old contents are durably-consumed
+                // garbage — a durably-FREE segment is by contract
+                // unreachable — so formatting them away creates no
+                // information; zeros only ever read as "absent/torn",
+                // the conservative direction. Unmetered, like the
+                // freshly-formatted-NVM initialization it reproduces.
+                for w in 0..lines * WORDS_PER_LINE {
+                    pool.poke_durable(user.add(w), 0);
+                }
+                // LIVE flip rides the caller's next psync: the pwb is
+                // queued on `tid` before the caller can publish any
+                // pointer to the segment (see module docs).
+                let _g = obs::enter_site(ObsSite::Alloc);
+                pool.store(tid, hdr, pack_hdr(lines, gen, SEG_LIVE));
+                pool.pwb(tid, hdr);
+                drop(_g);
+                st.n_alloc.fetch_add(1, Ordering::Relaxed);
+                st.n_recycled.fetch_add(1, Ordering::Relaxed);
+                let c = ctrs();
+                c.alloc.inc(tid);
+                c.recycled.inc(tid);
+                return Some(user);
+            }
+        }
+    }
+    // (3) Fresh carve: header + user area from the bump arena. The
+    // header is formatted durably (freshly-formatted-NVM idiom) so the
+    // segment is discoverable by crash rebuilds with zero metered
+    // traffic on this path — the bump baseline's cost profile.
+    let base = pool.try_alloc_lines(1 + lines)?;
+    pool.poke_durable(base, pack_hdr(lines, 0, SEG_LIVE));
+    dir_append(pool, base, lines);
+    st.n_alloc.fetch_add(1, Ordering::Relaxed);
+    let c = ctrs();
+    c.alloc.inc(tid);
+    c.highwater.set(0, pool.used_words() as i64);
+    Some(base.add(WORDS_PER_LINE))
+}
+
+/// Return the segment whose user area starts at `addr`. The caller must
+/// guarantee no thread can still dereference it (grace period + any
+/// durable-reachability discipline the structure needs). The `FREE` flip
+/// is durable at the caller's next psync; until then a crash
+/// conservatively leaks the segment (never double-allocates it).
+pub(crate) fn free(pool: &PmemPool, tid: usize, addr: PAddr) {
+    let st = pool.palloc();
+    if addr.word() < WORDS_PER_LINE {
+        st.n_leaked.fetch_add(1, Ordering::Relaxed);
+        ctrs().leaked.inc(tid);
+        return;
+    }
+    let hdr = PAddr(addr.0 - WORDS_PER_LINE as u32);
+    let Some((lines, gen, state)) = unpack_hdr(pool.peek(hdr)) else {
+        // Not a palloc segment (raw bump allocation, or a class-table
+        // overflow carve from a future design): leaked-until-audit.
+        st.n_leaked.fetch_add(1, Ordering::Relaxed);
+        ctrs().leaked.inc(tid);
+        return;
+    };
+    if state != SEG_LIVE {
+        debug_assert!(false, "double free of palloc segment at {addr:?}");
+        st.n_leaked.fetch_add(1, Ordering::Relaxed);
+        ctrs().leaked.inc(tid);
+        return;
+    }
+    {
+        let _g = obs::enter_site(ObsSite::Alloc);
+        pool.store(tid, hdr, pack_hdr(lines, (gen + 1) & 0xFFFF, SEG_FREE));
+        pool.pwb(tid, hdr);
+    }
+    st.n_free.fetch_add(1, Ordering::Relaxed);
+    ctrs().free.inc(tid);
+    if !st.recycle.load(Ordering::Relaxed) {
+        // Ablation baseline: the header flip still happens (metadata
+        // stays honest) but nothing re-enters circulation.
+        return;
+    }
+    match st.class_of(lines) {
+        Some(cls) => {
+            let cap = st.magazine_cap.load(Ordering::Relaxed);
+            // SAFETY: owner-only access to tid's magazine slot.
+            let mag = unsafe { &mut (*st.mags[tid].per_class.get())[cls] };
+            if mag.len() < cap {
+                mag.push(addr.0);
+            } else {
+                let mut fl = st.lock_class(cls);
+                fl.push(addr.0);
+                let g = st.classes[cls].gauge.get_or_init(|| class_gauge(cls)).clone();
+                g.set(0, fl.len() as i64);
+            }
+        }
+        None => {
+            st.n_leaked.fetch_add(1, Ordering::Relaxed);
+            ctrs().leaked.inc(tid);
+        }
+    }
+}
+
+/// Post-crash rebuild: discard all volatile freelists/magazines and
+/// re-derive them from the durable extent directory in one scan. Runs at
+/// the tail of `PmemPool::crash_storage` (live == shadow, workers
+/// unwound). Conservative: only durably-`FREE` headers re-enter
+/// circulation; everything else is live-or-leaked until audited.
+pub(crate) fn rebuild(pool: &PmemPool) {
+    let st = pool.palloc();
+    for slot in st.mags.iter() {
+        // SAFETY: crash time — no workers; same contract as the pool's
+        // pending-queue clearing.
+        let mags = unsafe { &mut *slot.per_class.get() };
+        for m in mags.iter_mut() {
+            m.clear();
+        }
+    }
+    for (i, c) in st.classes.iter().enumerate() {
+        st.lock_class(i).clear();
+        if let Some(g) = c.gauge.get() {
+            g.set(0, 0);
+        }
+    }
+    let dir = st.dir.load(Ordering::Acquire);
+    if dir == 0 {
+        return;
+    }
+    for slot in 0..DIR_ENTRY_LINES * WORDS_PER_LINE {
+        let Some((lines, hdr)) = unpack_ent(pool.peek(PAddr(dir).add(WORDS_PER_LINE + slot)))
+        else {
+            continue; // hole (torn append) — keep scanning
+        };
+        let Some((h_lines, _gen, state)) = unpack_hdr(pool.peek(hdr)) else {
+            continue; // header torn: conservatively leaked
+        };
+        if state == SEG_FREE && h_lines == lines {
+            if let Some(cls) = st.class_of(lines) {
+                let mut fl = st.lock_class(cls);
+                fl.push(hdr.0 + WORDS_PER_LINE as u32);
+                let len = fl.len() as i64;
+                drop(fl);
+                if let Some(g) = st.classes[cls].gauge.get() {
+                    g.set(0, len);
+                }
+                st.n_recovered_free.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pmem::PmemConfig;
+    use crate::util::rng::Xoshiro256;
+
+    fn pool() -> PmemPool {
+        PmemPool::new(PmemConfig {
+            capacity_words: 1 << 18,
+            evict_prob: 0.0,
+            pending_flush_prob: 0.0,
+            ..PmemConfig::default()
+        })
+    }
+
+    #[test]
+    fn alloc_free_recycles_same_segment() {
+        let p = pool();
+        let a = p.palloc_alloc(0, 4).unwrap();
+        assert_eq!(a.word() % WORDS_PER_LINE, 0, "user area is line aligned");
+        p.palloc_free(0, a);
+        let b = p.palloc_alloc(0, 4).unwrap();
+        assert_eq!(a, b, "magazine hit must return the freed segment");
+        assert_eq!(p.palloc().recycled_total(), 1);
+        // A different size class carves fresh memory.
+        let c = p.palloc_alloc(0, 2).unwrap();
+        assert_ne!(c, b);
+    }
+
+    #[test]
+    fn recycling_bounds_the_bump_cursor() {
+        let p = pool();
+        let mut last = p.palloc_alloc(0, 8).unwrap();
+        let cursor_after_first = p.used_words();
+        for _ in 0..1000 {
+            p.palloc_free(0, last);
+            last = p.palloc_alloc(0, 8).unwrap();
+        }
+        assert_eq!(p.used_words(), cursor_after_first, "steady churn must not grow the arena");
+    }
+
+    #[test]
+    fn recycle_off_always_carves() {
+        let p = pool();
+        p.palloc().set_recycle(false);
+        let a = p.palloc_alloc(0, 4).unwrap();
+        p.palloc_free(0, a);
+        let b = p.palloc_alloc(0, 4).unwrap();
+        assert_ne!(a, b, "ablation baseline: bump-only behaviour");
+    }
+
+    #[test]
+    fn cross_thread_free_flows_through_shared_freelist() {
+        let p = pool();
+        p.palloc().set_magazine_cap(0); // force the shared tier
+        let a = p.palloc_alloc(1, 4).unwrap();
+        p.palloc_free(1, a);
+        assert_eq!(p.palloc().free_count(4), 1);
+        let b = p.palloc_alloc(2, 4).unwrap();
+        assert_eq!(a, b, "another thread recycles via the shared freelist");
+        assert_eq!(p.palloc().free_count(4), 0);
+    }
+
+    #[test]
+    fn exhaustion_returns_none_not_panic() {
+        let p = PmemPool::new(PmemConfig {
+            capacity_words: 1 << 12,
+            ..PmemConfig::default()
+        });
+        let mut n = 0;
+        while p.palloc_alloc(0, 8).is_some() {
+            n += 1;
+            assert!(n < 100_000);
+        }
+        assert!(n > 0, "some allocations must fit");
+    }
+
+    #[test]
+    fn durable_free_survives_crash_nondurable_free_is_leaked_not_doubled() {
+        let p = pool();
+        let kept = p.palloc_alloc(0, 4).unwrap();
+        let durable = p.palloc_alloc(0, 4).unwrap();
+        let lost = p.palloc_alloc(0, 4).unwrap();
+        // Free `durable` and psync (the caller-issued sync the flip
+        // piggybacks on); free `lost` with no psync afterwards.
+        p.palloc_free(0, durable);
+        p.psync(0);
+        p.palloc_free(1, lost);
+        let mut rng = Xoshiro256::new(7);
+        p.crash(&mut rng);
+        // Rebuild found exactly the durably-freed segment.
+        assert_eq!(p.palloc().recovered_free_total(), 1);
+        let back = p.palloc_alloc(0, 4).unwrap();
+        assert_eq!(back, durable, "durably-freed segment must be recovered");
+        // Nothing else of this class is free: the next alloc carves
+        // fresh memory — `lost` is leaked, never double-allocated, and
+        // `kept` (still durably LIVE) is untouched.
+        let fresh = p.palloc_alloc(0, 4).unwrap();
+        assert_ne!(fresh, lost);
+        assert_ne!(fresh, kept);
+        assert_ne!(fresh, durable);
+    }
+
+    #[test]
+    fn live_flip_of_recycled_segment_rides_callers_psync() {
+        let p = pool();
+        let a = p.palloc_alloc(0, 4).unwrap();
+        p.palloc_free(0, a);
+        p.psync(0); // durable FREE
+        let b = p.palloc_alloc(0, 4).unwrap();
+        assert_eq!(a, b);
+        let hdr = PAddr(b.0 - WORDS_PER_LINE as u32);
+        let (_, _, st) = unpack_hdr(p.read_shadow(hdr)).unwrap();
+        assert_eq!(st, SEG_FREE, "LIVE flip must not be durable before the caller psyncs");
+        p.psync(0);
+        let (_, _, st) = unpack_hdr(p.read_shadow(hdr)).unwrap();
+        assert_eq!(st, SEG_LIVE, "caller's psync realizes the flip");
+    }
+
+    #[test]
+    fn alloc_site_pwbs_but_never_psyncs() {
+        let p = pool();
+        let a = p.palloc_alloc(0, 4).unwrap();
+        p.palloc_free(0, a);
+        let _ = p.palloc_alloc(0, 4).unwrap();
+        let led = p.stats.site_ledger();
+        assert_eq!(led.psyncs_at(ObsSite::Alloc), 0, "palloc never issues psyncs");
+        assert!(led.pwbs_at(ObsSite::Alloc) >= 2, "state flips are pwb'd at the Alloc site");
+    }
+
+    #[test]
+    fn header_packing_roundtrip() {
+        let w = pack_hdr(37, 5, SEG_FREE);
+        assert_eq!(unpack_hdr(w), Some((37, 5, SEG_FREE)));
+        assert_eq!(unpack_hdr(0), None);
+        let e = pack_ent(9, PAddr(1234));
+        assert_eq!(unpack_ent(e), Some((9, PAddr(1234))));
+        assert_eq!(unpack_ent(0), None);
+    }
+}

@@ -206,6 +206,10 @@ pub struct PmemPool {
     /// Volatile state of this pool's persistent flight recorder (the
     /// NVM rings live in the arena; see [`crate::obs::flight`]).
     flight: crate::obs::flight::FlightRec,
+    /// Volatile state of this pool's size-classed persistent allocator
+    /// (segment headers + extent directory live in the arena; see
+    /// [`crate::pmem::palloc`]).
+    palloc: super::palloc::PallocState,
     cfg: PmemConfig,
 }
 
@@ -244,11 +248,14 @@ impl PmemPool {
             shared,
             socket,
             flight: crate::obs::flight::FlightRec::new(),
+            palloc: super::palloc::PallocState::new(),
             cfg,
         };
         // The flight-recorder directory is carved first so it lands at
-        // the well-known `flight::DIR_BASE` (no-op on tiny arenas).
+        // the well-known `flight::DIR_BASE` (no-op on tiny arenas); the
+        // allocator's extent directory follows it.
         crate::obs::flight::carve_dir(&pool);
+        super::palloc::carve_dir(&pool);
         pool
     }
 
@@ -278,8 +285,26 @@ impl PmemPool {
 
     /// Bump-allocate `n` words aligned to `align` words. Panics (hard error,
     /// not a simulated crash) on exhaustion — size the pool via
-    /// `PmemConfig::capacity_words`.
+    /// `PmemConfig::capacity_words`. Operation-time allocation (anything
+    /// that can run mid-enqueue) must use [`Self::try_alloc`] or the
+    /// palloc tier instead, so exhaustion surfaces as a `QueueError`
+    /// rather than unwinding through a half-applied operation.
     pub fn alloc(&self, n: usize, align: usize) -> PAddr {
+        match self.try_alloc(n, align) {
+            Some(a) => a,
+            None => panic!(
+                "pmem pool exhausted: need {} words past cursor {}, capacity {} — raise \
+                 PmemConfig::capacity_words",
+                n,
+                self.next_word.load(Ordering::Relaxed),
+                self.live.len() * WORDS_PER_LINE
+            ),
+        }
+    }
+
+    /// Bump-allocate `n` words aligned to `align` words, returning `None`
+    /// instead of panicking on exhaustion.
+    pub fn try_alloc(&self, n: usize, align: usize) -> Option<PAddr> {
         assert!(n > 0);
         let align = align.max(1);
         assert!(align.is_power_of_two(), "alignment must be a power of two");
@@ -287,20 +312,15 @@ impl PmemPool {
             let cur = self.next_word.load(Ordering::Relaxed);
             let start = (cur + align - 1) & !(align - 1);
             let end = start + n;
-            assert!(
-                end <= self.live.len() * WORDS_PER_LINE,
-                "pmem pool exhausted: need {} words past cursor {}, capacity {} — raise \
-                 PmemConfig::capacity_words",
-                n,
-                cur,
-                self.live.len() * WORDS_PER_LINE
-            );
+            if end > self.live.len() * WORDS_PER_LINE {
+                return None;
+            }
             if self
                 .next_word
                 .compare_exchange_weak(cur, end, Ordering::Relaxed, Ordering::Relaxed)
                 .is_ok()
             {
-                return PAddr(start as u32);
+                return Some(PAddr(start as u32));
             }
         }
     }
@@ -358,6 +378,27 @@ impl PmemPool {
     #[inline]
     pub fn flight(&self) -> &crate::obs::flight::FlightRec {
         &self.flight
+    }
+
+    /// This pool's size-classed allocator state (knobs + counters; see
+    /// [`crate::pmem::palloc`]).
+    #[inline]
+    pub fn palloc(&self) -> &super::palloc::PallocState {
+        &self.palloc
+    }
+
+    /// Allocate a `lines`-line recyclable segment through the palloc
+    /// tier (magazine → shared freelist → fresh carve). `None` when the
+    /// arena is exhausted and nothing suitable is free.
+    pub fn palloc_alloc(&self, tid: usize, lines: usize) -> Option<PAddr> {
+        super::palloc::alloc(self, tid, lines)
+    }
+
+    /// Return a palloc segment (user-area address) for recycling. The
+    /// caller must guarantee no thread can still dereference it — see
+    /// [`crate::pmem::palloc`]'s module docs for the reuse contract.
+    pub fn palloc_free(&self, tid: usize, addr: PAddr) {
+        super::palloc::free(self, tid, addr)
     }
 
     // ------------------------------------------------------------------
@@ -937,6 +978,9 @@ impl PmemPool {
             m.store(0, Ordering::Relaxed);
         }
         self.nvm_chain.store(0, Ordering::Relaxed);
+        // (5) Rebuild the allocator's volatile freelists from the durable
+        // segment headers (live == shadow here; unmetered one-scan walk).
+        super::palloc::rebuild(self);
     }
 
     /// Is the line containing any of the range dirty (live ≠ shadow)?

@@ -395,6 +395,40 @@ impl Topology {
             }),
         ];
         fams.extend(crate::obs::ledger_families(&self.site_ledger()));
+        // Allocator tier, per-pool views. Lifecycle totals
+        // (`persiq_palloc_{alloc,free,recycled,leaked}_total`) and the
+        // process-global high-water gauge live in the obs registry
+        // (registered by `pmem::palloc` itself); these families add the
+        // per-pool/per-class breakdown under distinct names so a
+        // combined exposition never carries duplicate families.
+        fams.push(Family::scalar(
+            "persiq_palloc_free_segments",
+            "free segments on the shared freelist, per pool and size class",
+            Kind::Gauge,
+            self.pools
+                .iter()
+                .enumerate()
+                .flat_map(|(i, p)| {
+                    p.palloc().class_occupancy().into_iter().map(move |(lines, n)| Sample {
+                        labels: vec![
+                            ("pool".to_string(), i.to_string()),
+                            ("lines".to_string(), lines.to_string()),
+                        ],
+                        value: n as f64,
+                    })
+                })
+                .collect(),
+        ));
+        fams.push(Family::scalar(
+            "persiq_pmem_used_words",
+            "bump-arena high-water mark (words carved, never shrinks)",
+            Kind::Gauge,
+            self.pools
+                .iter()
+                .enumerate()
+                .map(|(i, p)| Sample::labelled("pool", i, p.used_words() as f64))
+                .collect(),
+        ));
         fams.push(Family::scalar(
             "persiq_pmem_max_vtime_ns",
             "simulated makespan (max thread virtual clock)",
@@ -659,6 +693,26 @@ mod tests {
         assert!(text.contains("persiq_pmem_psyncs_total{pool=\"0\"} 1"));
         assert!(text.contains("persiq_pmem_psyncs_by_site_total{site=\"BatchFlush\"} 1"));
         assert!(text.contains("# TYPE persiq_pmem_max_vtime_ns gauge"));
+    }
+
+    #[test]
+    fn palloc_families_render_occupancy_and_high_water() {
+        use crate::obs;
+        let t = Topology::new(cfg(), 2);
+        let a = t.primary().palloc_alloc(0, 2).unwrap();
+        t.primary().palloc_free(0, a);
+        t.primary().psync(0);
+        let text = obs::render(&t.metric_families());
+        // The freed class-2 segment binds the class on pool 0; the
+        // occupancy family must render with both labels (value may be 0
+        // while the segment sits in a magazine rather than the shared
+        // freelist).
+        assert!(text.contains("persiq_palloc_free_segments{pool=\"0\",lines=\"2\"}"));
+        assert!(text.contains("# TYPE persiq_pmem_used_words gauge"));
+        assert!(text.contains("persiq_pmem_used_words{pool=\"0\"}"));
+        // Lifecycle totals live in the process-global registry, not
+        // here — a combined dump must not carry duplicate families.
+        assert!(!text.contains("persiq_palloc_alloc_total"));
     }
 
     #[test]

@@ -48,9 +48,22 @@
 //!   from unclaimed ones and are safely reused; claimed blocks with junk
 //!   entries under a `FREE` header are discarded (never published).
 //!
-//! Block indices are claimed monotonically and never recycled — like the
-//! paper's IQ, this is an "infinite array" tier: size `ring_size` (the
-//! per-lane block count) to the workload.
+//! ## Block recycling
+//!
+//! Fresh block indices are claimed monotonically, but (with
+//! `QueueConfig::recycle` on, the default) fully-drained blocks re-enter
+//! a per-lane volatile pool and are reused by producers, so steady-state
+//! memory is bounded by the in-flight backlog instead of "capacity =
+//! total enqueues ever". A retired index is reusable only once its
+//! `CONSUMED` header is **durable** (checked against the NVM shadow at
+//! claim time — otherwise a crash could roll the header back to a
+//! pre-retirement state while new items sit in the entries), and reuse
+//! starts by durably scrubbing the whole block back to all-zeroes, making
+//! it byte-identical to a claimed-but-untouched fresh block: every crash
+//! rule below applies to recycled blocks verbatim. Recovery rebuilds the
+//! volatile pool from the durable headers. With recycling off, this is
+//! the paper's IQ-style "infinite array" tier: size `ring_size` (the
+//! per-lane block count) to the workload's total volume.
 //!
 //! ## MultiFIFO mode
 //!
@@ -61,8 +74,9 @@
 //! sampling so EMPTY is only reported after every lane was scanned.
 
 use std::cell::UnsafeCell;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crossbeam_utils::CachePadded;
 
@@ -108,8 +122,15 @@ struct Lane {
     /// Words per block slot (line-aligned: `1 + block` rounded up).
     stride: usize,
     /// Volatile consumer low-water mark: the smallest index that might
-    /// not be `CONSUMED` yet. Monotone (fetch_max); rebuilt by recovery.
+    /// not be `CONSUMED` yet. Advanced by consumer scans (fetch_max),
+    /// rolled back (fetch_min) when a recycled block below it is
+    /// reclaimed; rebuilt by recovery.
     cursor: CachePadded<AtomicU64>,
+    /// Retired block indices eligible for producer reuse (recycling on).
+    /// Volatile — rebuilt by recovery from the durable headers. An entry
+    /// may be ahead of its retirement pwb; the claim path re-checks the
+    /// shadow header and rotates unripe entries to the back.
+    recycle: Mutex<VecDeque<usize>>,
 }
 
 /// A producer's open (claimed, still-filling, unpublished) block.
@@ -157,6 +178,9 @@ pub struct BlockFifo {
     dchoice: usize,
     multi: bool,
     nthreads: usize,
+    /// Reuse drained blocks (see module docs). Off = the historical
+    /// never-recycled "infinite array" behaviour, kept for ablation.
+    recycle_on: bool,
     slots: Vec<CachePadded<Slot>>,
 }
 
@@ -190,6 +214,7 @@ impl BlockFifo {
                 nblocks,
                 stride: stride_lines * WORDS_PER_LINE,
                 cursor: CachePadded::new(AtomicU64::new(0)),
+                recycle: Mutex::new(VecDeque::new()),
             });
         }
         let slots = (0..nthreads)
@@ -206,6 +231,7 @@ impl BlockFifo {
             dchoice: cfg.dchoice.clamp(1, nlanes),
             multi,
             nthreads,
+            recycle_on: cfg.recycle,
             slots,
         })
     }
@@ -231,13 +257,66 @@ impl BlockFifo {
         self.block_base(lane, idx).add(1 + j)
     }
 
-    /// Claim a fresh block for the producer — the single FAI that covers
-    /// the next `block` enqueues.
+    /// Record a fully-retired block index for producer reuse. The caller
+    /// has already stored (at least requested write-back of) its
+    /// `CONSUMED` header; the claim path re-checks durability.
+    fn retire_idx(&self, lane: &Lane, idx: usize) {
+        if !self.recycle_on {
+            return;
+        }
+        lane.recycle.lock().unwrap_or_else(|e| e.into_inner()).push_back(idx);
+    }
+
+    /// Pop a reusable retired block from the lane's recycle pool. A block
+    /// is reusable only once its `CONSUMED` header is durable (shadow
+    /// check) — otherwise a crash could roll the header back to a
+    /// pre-retirement `COMMITTED`/`DRAINING` state whose start/count
+    /// describe the *previous* generation while new entries sit in the
+    /// block. Unripe entries rotate to the back until a later psync
+    /// drains their retirement pwb. On success the whole block is
+    /// durably scrubbed to all-zeroes (simulator formatting, like the
+    /// fresh arena — unmetered), making it byte-identical to a
+    /// claimed-but-untouched fresh block so every recovery rule applies
+    /// verbatim; in particular an unsealed crash leaves durable
+    /// FREE + zero entries, which recovery retires back into the pool.
+    fn claim_recycled(&self, lane: &Lane) -> Option<usize> {
+        if !self.recycle_on {
+            return None;
+        }
+        let mut rl = lane.recycle.lock().unwrap_or_else(|e| e.into_inner());
+        for _ in 0..rl.len() {
+            let idx = rl.pop_front().expect("len-bounded loop");
+            if hdr_state(lane.pool.read_shadow(self.header_addr(lane, idx))) == ST_CONSUMED {
+                let base = self.block_base(lane, idx);
+                for w in 0..lane.stride {
+                    lane.pool.poke_durable(base.add(w), 0);
+                }
+                return Some(idx);
+            }
+            rl.push_back(idx);
+        }
+        None
+    }
+
+    /// Claim a fresh block for the producer — a recycled index when one
+    /// is ripe, else the single FAI that covers the next `block`
+    /// enqueues.
     fn claim_open(&self, tid: usize, slot: &mut SlotState) -> Result<(), QueueError> {
         let n = self.lanes.len();
         for k in 0..n {
             let l = (tid + slot.ticket + k) % n;
             let lane = &self.lanes[l];
+            if let Some(idx) = self.claim_recycled(lane) {
+                // Roll the consumer low-water mark back to the reused
+                // index NOW — before the block can become COMMITTED — so
+                // the sealed block is always inside the scan window.
+                // (Scrub already happened, so until the seal the scans
+                // see FREE here and stop advancing the cursor past it.)
+                lane.cursor.fetch_min(idx as u64, Ordering::Relaxed);
+                slot.ticket = slot.ticket.wrapping_add(1);
+                slot.open = Some(Open { lane: l, idx, count: 0 });
+                return Ok(());
+            }
             let b = lane.pool.fai(tid, lane.alloc) as usize;
             if b < lane.nblocks {
                 slot.ticket = slot.ticket.wrapping_add(1);
@@ -262,6 +341,7 @@ impl BlockFifo {
             // from never claiming.
             lane.pool.store(tid, self.header_addr(lane, o.idx), hdr(ST_CONSUMED, 0, 0));
             lane.pool.pwb(tid, self.header_addr(lane, o.idx));
+            self.retire_idx(lane, o.idx);
             return;
         }
         lane.pool
@@ -292,6 +372,9 @@ impl BlockFifo {
         lane.pool.store(tid, self.header_addr(lane, d.idx), nh);
         lane.pool.pwb(tid, self.header_addr(lane, d.idx));
         lane.pool.psync(tid);
+        if d.pos >= d.count {
+            self.retire_idx(lane, d.idx);
+        }
     }
 
     /// Pop the next entry of the block this consumer is draining.
@@ -313,6 +396,7 @@ impl BlockFifo {
                     hdr(ST_CONSUMED, d.count, d.count),
                 );
                 lane.pool.pwb(tid, self.header_addr(lane, d.idx));
+                self.retire_idx(lane, d.idx);
                 slot.draining = None;
             } else {
                 slot.draining = Some(Drain { pos: next, ..d });
@@ -348,7 +432,9 @@ impl BlockFifo {
                     if s >= c {
                         // Empty commit (abandoned claim): retire it
                         // opportunistically and re-read.
-                        let _ = lane.pool.cas(tid, ha, h, hdr(ST_CONSUMED, s, c));
+                        if lane.pool.cas(tid, ha, h, hdr(ST_CONSUMED, s, c)) {
+                            self.retire_idx(lane, idx);
+                        }
                     } else if lane.pool.cas(tid, ha, h, hdr(ST_DRAINING, s, c)) {
                         let _g = obs::enter_site(ObsSite::DeqFlush);
                         lane.pool.pwb(tid, ha);
@@ -488,6 +574,21 @@ impl ConcurrentQueue for BlockFifo {
                 return Ok(self.pop_draining(tid, slot));
             }
         }
+        if self.recycle_on {
+            // Recycling backstop: a cursor advance can race a recycled
+            // block's scrub (the scanner read the pre-scrub CONSUMED
+            // header and its fetch_max landed after the reuser's
+            // fetch_min), stranding a committed block below every
+            // cursor. EMPTY is only safe to report after a rescan from
+            // the bottom; the scan itself re-advances the cursors past
+            // the genuinely-consumed prefix.
+            for lane in &self.lanes {
+                lane.cursor.store(0, Ordering::Relaxed);
+            }
+            if self.claim_drain(tid, slot) {
+                return Ok(self.pop_draining(tid, slot));
+            }
+        }
         Ok(None)
     }
 
@@ -578,6 +679,19 @@ impl PersistentQueue for BlockFifo {
                 }
             }
             lane.cursor.store(cur as u64, Ordering::Relaxed);
+            // Rebuild the volatile recycle pool from the durable headers:
+            // every CONSUMED block below the frontier is reusable (the
+            // lane psync above made the recovery-time retirements
+            // durable, so the claim-time shadow gate passes).
+            let mut rl = lane.recycle.lock().unwrap_or_else(|e| e.into_inner());
+            rl.clear();
+            if self.recycle_on {
+                for idx in 0..frontier {
+                    if hdr_state(p.load(0, self.header_addr(lane, idx))) == ST_CONSUMED {
+                        rl.push_back(idx);
+                    }
+                }
+            }
         }
         // Certified span end: every lane's recovery psync has retired.
         obs::flight::record_sealed(
@@ -904,6 +1018,89 @@ mod tests {
         let mut got = cons.join().unwrap();
         got.sort_unstable();
         assert_eq!(got, (0..400).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn recycling_runs_workload_beyond_raw_capacity() {
+        // 1 lane × 8 blocks × 4 entries = 32 raw slots; push 800 items
+        // through in enqueue/drain rounds. Without recycling the lane
+        // frontier exhausts after 2 rounds (see
+        // `capacity_exhausted_when_all_lanes_full`); with it the rounds
+        // run entirely on reused blocks.
+        let t = topo(0.0, 1.0, 30);
+        let q = mkq(&t, 1, 1, 4, 8);
+        for round in 0..50u64 {
+            let base = round * 16;
+            for v in base..base + 16 {
+                q.enqueue(0, v).unwrap();
+            }
+            let mut out = Vec::new();
+            while let Some(v) = q.dequeue(0).unwrap() {
+                out.push(v);
+            }
+            // Delivery order across reused blocks is relaxed (the tier's
+            // contract); conservation is not.
+            out.sort_unstable();
+            assert_eq!(out, (base..base + 16).collect::<Vec<u64>>(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn recycling_survives_crash_and_recovery_rebuilds_pool() {
+        // 80 items through 32 raw slots with a crash between every round:
+        // recovery must rebuild the volatile recycle pool from the
+        // durable CONSUMED headers, or round 3 exhausts the frontier.
+        let t = topo(0.0, 1.0, 31);
+        let q = mkq(&t, 1, 1, 4, 8);
+        let mut rng = Xoshiro256::seed_from(32);
+        for round in 0..5u64 {
+            let base = round * 16;
+            for v in base..base + 16 {
+                q.enqueue(0, v).unwrap();
+            }
+            let mut out = Vec::new();
+            while let Some(v) = q.dequeue(0).unwrap() {
+                out.push(v);
+            }
+            out.sort_unstable();
+            assert_eq!(out, (base..base + 16).collect::<Vec<u64>>(), "round {round}");
+            q.quiesce();
+            t.crash(&mut rng);
+            q.recover(t.primary());
+            assert_eq!(q.dequeue(0).unwrap(), None, "drained queue must recover empty");
+        }
+    }
+
+    #[test]
+    fn recycle_off_exhausts_at_raw_capacity() {
+        let t = topo(0.0, 1.0, 33);
+        let cfg = QueueConfig {
+            shards: 1,
+            block: 4,
+            ring_size: 8,
+            recycle: false,
+            ..Default::default()
+        };
+        let q = BlockFifo::new(&t, 1, cfg, false).unwrap();
+        let mut accepted = 0u64;
+        let err = loop {
+            for _ in 0..16 {
+                match q.enqueue(0, accepted) {
+                    Ok(()) => accepted += 1,
+                    Err(_) => break,
+                }
+            }
+            while q.dequeue(0).unwrap().is_some() {}
+            if accepted >= 33 {
+                panic!("recycle=off accepted {accepted} > raw capacity");
+            }
+            if let Err(e) = q.enqueue(0, accepted) {
+                break e;
+            }
+            accepted += 1;
+        };
+        assert_eq!(err, QueueError::CapacityExhausted);
+        assert!(accepted <= 32, "raw capacity is the ceiling without recycling");
     }
 
     #[test]

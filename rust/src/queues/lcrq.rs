@@ -17,11 +17,25 @@
 //! node + 8   : ring block (see crq.rs)
 //! ```
 
-use std::sync::Arc;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Mutex};
 
 use super::crq::{DeqAt, EnqAt, PersistCfg, Ring};
+use super::sharded::epoch::{EpochRegistry, GraceSnapshot};
 use super::{ConcurrentQueue, HeadPersistMode, QueueConfig, QueueError, MAX_ITEM};
 use crate::pmem::{PAddr, PmemPool, WORDS_PER_LINE};
+
+/// Retired (bypassed-by-`First`) nodes awaiting recycling. FIFO in
+/// retire order, which equals chain order — the release rule depends on
+/// that (see [`LcrqCore::try_release`]).
+#[derive(Default)]
+struct Limbo {
+    q: VecDeque<(u32, u64, GraceSnapshot)>,
+    /// addr → retire seq for every in-limbo node (the durable-`First`
+    /// horizon lookup).
+    pos: HashMap<u32, u64>,
+    next_seq: u64,
+}
 
 /// The list-of-rings core shared by LCRQ (volatile, `persist = None`) and
 /// PerLCRQ (`persist = Some`).
@@ -35,6 +49,17 @@ pub struct LcrqCore {
     pub ring_size: usize,
     pub starvation_limit: usize,
     pub persist: Option<PersistCfg>,
+    /// Recycle drained nodes through the pool's palloc tier (off = the
+    /// historical leak-by-design behaviour).
+    recycle: bool,
+    /// Grace-period registry for node reuse: every operation holds a
+    /// bare pin, so a retired node is only recycled once all operations
+    /// concurrent with its retirement have finished.
+    reg: EpochRegistry,
+    limbo: Mutex<Limbo>,
+    /// Durable-chain membership as of the last [`LcrqCore::recover`]
+    /// (`None` = never recovered). Feeds [`LcrqCore::node_settled`].
+    chain_nodes: Mutex<Option<HashSet<u32>>>,
 }
 
 impl LcrqCore {
@@ -49,6 +74,11 @@ impl LcrqCore {
 
     fn closed_flag_addr(node: PAddr) -> PAddr {
         node.add(1)
+    }
+
+    /// Lines per node (the palloc size class nodes allocate from).
+    pub fn node_lines(&self) -> usize {
+        self.node_words().div_ceil(WORDS_PER_LINE)
     }
 
     /// The ring embedded in `node` (also used by the sharded layer's batch
@@ -79,8 +109,12 @@ impl LcrqCore {
         tid: usize,
     ) -> Self {
         cfg.validate().expect("invalid QueueConfig");
-        let first = pool.alloc_lines(1);
-        let last = pool.alloc_lines(1);
+        pool.palloc().set_magazine_cap(cfg.magazine);
+        pool.palloc().set_recycle(cfg.recycle);
+        const EXHAUSTED: &str =
+            "pmem pool exhausted during queue construction — raise PmemConfig::capacity_words";
+        let first = pool.palloc_alloc(tid, 1).expect(EXHAUSTED);
+        let last = pool.palloc_alloc(tid, 1).expect(EXHAUSTED);
         pool.set_hot(first, 1, crate::pmem::Hotness::Global);
         pool.set_hot(last, 1, crate::pmem::Hotness::Global);
         let core = Self {
@@ -91,10 +125,15 @@ impl LcrqCore {
             ring_size: cfg.ring_size,
             starvation_limit: cfg.starvation_limit,
             persist,
+            recycle: cfg.recycle,
+            reg: EpochRegistry::new(nthreads),
+            limbo: Mutex::new(Limbo::default()),
+            chain_nodes: Mutex::new(None),
         };
         // Initial node: an empty ring (fresh zeroed allocation is a valid
-        // empty, durable ring — see crq.rs encoding).
-        let node = pool.alloc(core.node_words(), WORDS_PER_LINE);
+        // empty, durable ring — see crq.rs encoding; palloc scrubs recycled
+        // segments back to durable zeros, so reuse is indistinguishable).
+        let node = core.pool.palloc_alloc(tid, core.node_lines()).expect(EXHAUSTED);
         pool.set_hot(node, 1, crate::pmem::Hotness::Global);
         core.ring_of(node).declare_hotness(pool);
         pool.store(tid, first, node.to_u64());
@@ -109,16 +148,25 @@ impl LcrqCore {
 
     /// Create a node seeded with `item` at `Q\[0\]`, `Tail = 1` (Alg. 5
     /// lines 16-18). Returns its address; in persistent mode the node is
-    /// durable before this returns.
-    fn new_node(&self, tid: usize, item: u64) -> PAddr {
+    /// durable before this returns. Errs with
+    /// [`QueueError::CapacityExhausted`] when the arena is out of words
+    /// and no retired node is eligible for reuse.
+    fn new_node(&self, tid: usize, item: u64) -> Result<PAddr, QueueError> {
         let p = &self.pool;
-        let node = p.alloc(self.node_words(), WORDS_PER_LINE);
+        // Flush eligible limbo entries into the allocator first, so churn
+        // workloads reuse retired nodes instead of growing the arena.
+        self.try_release(tid);
+        let node = p
+            .palloc_alloc(tid, self.node_lines())
+            .ok_or(QueueError::CapacityExhausted)?;
         p.set_hot(node, 1, crate::pmem::Hotness::Global); // next ptr + closedFlag
         let ring = self.ring_of(node);
         ring.declare_hotness(p);
-        // next = 0 and the whole fresh ring are already zero (and already
-        // durable: fresh arena lines have live == shadow == 0). Only the
-        // seeded item and Tail=1 need writing + persisting.
+        // next = 0 and the whole ring are already zero (and already
+        // durable): fresh arena lines have live == shadow == 0, and palloc
+        // scrubs recycled segments back to durable zeros before handing
+        // them out. Only the seeded item and Tail=1 need writing +
+        // persisting.
         ring.write_cell(p, tid, 0, false, 0, item + 1);
         p.store(tid, ring.tail_addr(), 1);
         if self.persist.is_some() {
@@ -130,7 +178,7 @@ impl LcrqCore {
             p.pwb(tid, ring.tail_addr());
             p.psync(tid);
         }
-        node
+        Ok(node)
     }
 
     /// Algorithm 5, Enqueue(x) (lines 16-31).
@@ -148,6 +196,9 @@ impl LcrqCore {
             return Err(QueueError::ItemOutOfRange(item));
         }
         let p = &self.pool;
+        // Pin for the whole operation: no node this op can observe is
+        // recycled until the pin drops (see `retire_node`).
+        let _pin = self.reg.pin_bare(tid);
         let mut nd: Option<PAddr> = None; // created lazily on first CLOSED
         loop {
             let l = PAddr::from_u64(p.load(tid, self.last)); // line 20
@@ -171,10 +222,26 @@ impl LcrqCore {
                 .map(|pc| (pc, Self::closed_flag_addr(l)));
             if let EnqAt::Ok(idx) = ring.enqueue_at(p, tid, item, self.starvation_limit, per)
             {
+                if self.recycle {
+                    if let Some(spare) = nd.take() {
+                        // A pre-created node lost its append race and an
+                        // older ring then accepted the item. It was never
+                        // published, so it is still private and can re-enter
+                        // the allocator immediately — no grace needed.
+                        p.palloc_free(tid, spare);
+                    }
+                }
                 return Ok((l, idx)); // line 27
             }
             // CLOSED: append a fresh node containing the item.
-            let node = *nd.get_or_insert_with(|| self.new_node(tid, item));
+            let node = match nd {
+                Some(n) => n,
+                None => {
+                    let n = self.new_node(tid, item)?;
+                    nd = Some(n);
+                    n
+                }
+            };
             if p.cas(tid, Self::next_addr(l), 0, node.to_u64()) {
                 // line 28 succeeded.
                 if self.persist.is_some() {
@@ -203,6 +270,9 @@ impl LcrqCore {
     /// redeliver an already-returned item.
     pub fn dequeue_at(&self, tid: usize) -> Option<(u64, PAddr, u64)> {
         let p = &self.pool;
+        // Pin for the whole operation: no node this op can observe is
+        // recycled until the pin drops (see `retire_node`).
+        let _pin = self.reg.pin_bare(tid);
         loop {
             let f = PAddr::from_u64(p.load(tid, self.first)); // line 8
             let ring = self.ring_of(f); // line 9
@@ -215,11 +285,160 @@ impl LcrqCore {
                     }
                     // line 15: advance First (no persistence — §4.3: First
                     // never changes at recovery; post-crash dequeues
-                    // re-traverse).
-                    let _ = p.cas(tid, self.first, f.to_u64(), next);
+                    // re-traverse). The winning CAS is the node's unique
+                    // retire point: exactly one thread pushes it to limbo.
+                    if p.cas(tid, self.first, f.to_u64(), next) {
+                        self.retire_node(tid, f);
+                    }
                 }
             }
         }
+    }
+
+    /// Retire a node that `First` just advanced past (the caller won the
+    /// first-advance CAS, so it is the node's unique retirer). With
+    /// recycling on, a `pwb` of `First` is queued on the caller's flush
+    /// queue — it rides whatever `psync` the thread issues next (amortised
+    /// 1/R extra flushes per op, zero extra psyncs), moving the durable
+    /// `First` forward so retired nodes eventually clear the durability
+    /// gate in [`LcrqCore::try_release`].
+    fn retire_node(&self, tid: usize, node: PAddr) {
+        if !self.recycle {
+            return; // historical behaviour: bypassed nodes leak in the arena
+        }
+        if self.persist.is_some() {
+            self.pool.pwb(tid, self.first);
+        }
+        // Snapshot AFTER the unlink: any op that could still hold a
+        // pre-unlink reference to `node` is pinned in this snapshot.
+        let snap = self.reg.snapshot();
+        {
+            let mut lb = self.limbo.lock().unwrap_or_else(|e| e.into_inner());
+            let seq = lb.next_seq;
+            lb.next_seq += 1;
+            lb.pos.insert(node.0, seq);
+            lb.q.push_back((node.0, seq, snap));
+        }
+        self.try_release(tid);
+    }
+
+    /// Pop the limbo front if it is safe to reuse, i.e.:
+    ///
+    /// * its grace snapshot elapsed (no op that could hold a reference is
+    ///   still running), and
+    /// * it is durably unreachable: retired strictly before the node the
+    ///   durable (shadow) `First` points at. If the shadow `First` is not
+    ///   in limbo it points at a live node, which every limbo entry
+    ///   precedes in chain order — all are durably bypassed. The shadow
+    ///   `First` only moves forward along the chain, so an entry that
+    ///   clears this gate once can never become durably reachable again
+    ///   (no ABA: an in-limbo address is not reallocated yet, so the map
+    ///   lookup cannot alias a recycled incarnation).
+    fn pop_releasable(&self, durable_first: u32) -> Option<u32> {
+        let mut lb = self.limbo.lock().unwrap_or_else(|e| e.into_inner());
+        let horizon = lb.pos.get(&durable_first).copied();
+        let ok = match lb.q.front() {
+            Some((_, seq, snap)) => {
+                horizon.is_none_or(|h| *seq < h) && self.reg.has_elapsed(snap)
+            }
+            None => false,
+        };
+        if !ok {
+            return None;
+        }
+        let (addr, _, _) = lb.q.pop_front().expect("front checked above");
+        lb.pos.remove(&addr);
+        Some(addr)
+    }
+
+    /// Hand every currently-releasable limbo node back to the allocator.
+    /// Frees happen outside the limbo lock (palloc touches metered pmem,
+    /// which may crash-unwind).
+    fn try_release(&self, tid: usize) {
+        if !self.recycle {
+            return;
+        }
+        let durable_first = if self.persist.is_some() {
+            PAddr::from_u64(self.pool.read_shadow(self.first)).0
+        } else {
+            // Volatile queue: nothing survives a crash, so the durability
+            // gate is vacuous — 0 is never a node address, making the
+            // horizon lookup miss and grace alone decide.
+            0
+        };
+        while let Some(addr) = self.pop_releasable(durable_first) {
+            self.pool.palloc_free(tid, PAddr(addr));
+        }
+    }
+
+    /// Whether node recycling is on for this core.
+    pub fn recycle_enabled(&self) -> bool {
+        self.recycle
+    }
+
+    /// Pin the caller against node recycling for the duration of the
+    /// returned guard. External chain walks (the sharded layer's
+    /// emptiness/occupancy hints) must hold one: any node reachable from
+    /// `First` after the pin cannot be recycled until the guard drops,
+    /// keeping the walk's one-sided soundness contract intact.
+    pub fn pin_walk(&self, tid: usize) -> super::sharded::epoch::BarePin<'_> {
+        self.reg.pin_bare(tid)
+    }
+
+    /// True iff recycling is on and `node` was NOT on the durable chain
+    /// at the last recovery — meaning the durable `First` had already
+    /// advanced past it at crash time, so every item it ever held was
+    /// durably consumed. The sharded layer's probe uses this to answer
+    /// `Settled` instead of misreading a recycled (scrubbed or reused)
+    /// ring. Returns false if this core has never been recovered.
+    pub fn node_settled(&self, node: PAddr) -> bool {
+        if !self.recycle {
+            return false;
+        }
+        match &*self.chain_nodes.lock().unwrap_or_else(|e| e.into_inner()) {
+            Some(set) => !set.contains(&node.0),
+            None => false,
+        }
+    }
+
+    /// Free every pmem segment this core owns back to the palloc tier:
+    /// limbo nodes (unconditionally — see below), the live chain, and the
+    /// endpoint lines.
+    ///
+    /// Caller contract: the queue is durably unreachable (e.g. its shard
+    /// was dropped from a durably-committed plan) and quiescent — no
+    /// thread will operate on it again, and any grace period covering
+    /// historical references has already elapsed. Under that contract the
+    /// per-node durability gate is irrelevant: recovery can never walk
+    /// this chain again.
+    pub fn reclaim_pmem(&self, tid: usize) {
+        if !self.recycle {
+            return;
+        }
+        let p = &self.pool;
+        loop {
+            let addr = {
+                let mut lb = self.limbo.lock().unwrap_or_else(|e| e.into_inner());
+                lb.q.pop_front().map(|(a, _, _)| {
+                    lb.pos.remove(&a);
+                    a
+                })
+            };
+            match addr {
+                Some(a) => p.palloc_free(tid, PAddr(a)),
+                None => break,
+            }
+        }
+        // Walk with unmetered peeks (maintenance path; the frees
+        // themselves are metered by palloc).
+        let mut node = PAddr::from_u64(p.peek(self.first));
+        while !node.is_null() {
+            let next = p.peek(Self::next_addr(node));
+            p.palloc_free(tid, node);
+            node = PAddr::from_u64(next);
+        }
+        p.palloc_free(tid, self.first);
+        p.palloc_free(tid, self.last);
     }
 
     /// Algorithm 5, PerLCRQRecovery (lines 32-40): walk the list from the
@@ -227,9 +446,11 @@ impl LcrqCore {
     /// true end of the list.
     pub fn recover(&self, pool: &PmemPool) {
         let tid = 0;
+        let mut chain = HashSet::new();
         let mut node = PAddr::from_u64(pool.load(tid, self.first));
         debug_assert!(!node.is_null(), "First must survive (persisted at construction)");
         loop {
+            chain.insert(node.0);
             let ring = self.ring_of(node);
             super::percrq::recover_ring(pool, &ring);
             let next = pool.load(tid, Self::next_addr(node));
@@ -243,11 +464,24 @@ impl LcrqCore {
         pool.pwb(tid, self.first);
         pool.pwb(tid, self.last);
         pool.psync(tid);
+        // Reset recycling state. Pre-crash limbo entries are void: their
+        // nodes are either back on the recovered chain (the durable First
+        // lagged their retirement — they must NOT be freed) or durably
+        // unreachable with a non-durably-FREE header (conservatively
+        // leaked; palloc's rebuild already reclaimed the durably-freed
+        // ones). The chain set feeds `node_settled` probes.
+        {
+            let mut lb = self.limbo.lock().unwrap_or_else(|e| e.into_inner());
+            lb.q.clear();
+            lb.pos.clear();
+        }
+        *self.chain_nodes.lock().unwrap_or_else(|e| e.into_inner()) = Some(chain);
     }
 
     /// Number of nodes currently in the list (test observability).
     pub fn node_count(&self, tid: usize) -> usize {
         let p = &self.pool;
+        let _pin = self.reg.pin_bare(tid);
         let mut n = 0;
         let mut node = PAddr::from_u64(p.load(tid, self.first));
         while !node.is_null() {
@@ -315,10 +549,14 @@ mod tests {
     use crate::pmem::{CostModel, PmemConfig};
 
     fn mk(ring: usize) -> (Arc<PmemPool>, Lcrq) {
+        mk_recycle(ring, true)
+    }
+
+    fn mk_recycle(ring: usize, recycle: bool) -> (Arc<PmemPool>, Lcrq) {
         let pool = Arc::new(PmemPool::new(
             PmemConfig::default().with_capacity(1 << 20).with_cost(CostModel::zero()),
         ));
-        let cfg = QueueConfig { ring_size: ring, ..Default::default() };
+        let cfg = QueueConfig { ring_size: ring, recycle, ..Default::default() };
         let q = Lcrq::new(&pool, 8, cfg);
         (pool, q)
     }
@@ -366,6 +604,78 @@ mod tests {
         assert!(q.node_count(0) >= 8);
         for v in 0..64u64 {
             assert_eq!(q.dequeue(0).unwrap(), Some(v));
+        }
+    }
+
+    /// One churn round: push `n` items through the queue (forcing node
+    /// appends and retirements), asserting FIFO order.
+    fn churn_round(q: &Lcrq, n: u64) {
+        for v in 0..n {
+            q.enqueue(0, v).unwrap();
+        }
+        for v in 0..n {
+            assert_eq!(q.dequeue(0).unwrap(), Some(v), "FIFO broken through recycled nodes");
+        }
+        assert_eq!(q.dequeue(0).unwrap(), None);
+    }
+
+    #[test]
+    fn recycling_bounds_node_memory_under_churn() {
+        let (pool, q) = mk_recycle(4, true);
+        // Warm up: populate the freelist/magazines with retired nodes.
+        for _ in 0..5 {
+            churn_round(&q, 40);
+        }
+        let plateau = pool.used_words();
+        for _ in 0..50 {
+            churn_round(&q, 40);
+        }
+        // Every node allocation after warm-up is served by recycling: the
+        // bump cursor must not move at all.
+        assert_eq!(
+            pool.used_words(),
+            plateau,
+            "arena grew under churn despite node recycling"
+        );
+    }
+
+    #[test]
+    fn recycle_off_leaks_nodes_like_before() {
+        let (pool, q) = mk_recycle(4, false);
+        for _ in 0..5 {
+            churn_round(&q, 40);
+        }
+        let mid = pool.used_words();
+        for _ in 0..5 {
+            churn_round(&q, 40);
+        }
+        assert!(
+            pool.used_words() > mid,
+            "with recycling off the arena should keep growing (historical behaviour)"
+        );
+    }
+
+    #[test]
+    fn enqueue_surfaces_capacity_exhausted_instead_of_panicking() {
+        // Arena barely larger than the palloc directory + construction.
+        let pool = Arc::new(PmemPool::new(
+            PmemConfig::default().with_capacity(5000).with_cost(CostModel::zero()),
+        ));
+        let cfg = QueueConfig { ring_size: 4, ..Default::default() };
+        let q = Lcrq::new(&pool, 2, cfg);
+        let mut accepted = 0u64;
+        let err = loop {
+            match q.enqueue(0, accepted) {
+                Ok(()) => accepted += 1,
+                Err(e) => break e,
+            }
+            assert!(accepted < 1_000_000, "expected exhaustion");
+        };
+        assert_eq!(err, QueueError::CapacityExhausted);
+        assert!(accepted > 0, "should accept some items before exhaustion");
+        // Everything accepted before exhaustion is still dequeueable in order.
+        for v in 0..accepted {
+            assert_eq!(q.dequeue(1).unwrap(), Some(v));
         }
     }
 

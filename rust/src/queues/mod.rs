@@ -190,6 +190,15 @@ pub struct QueueConfig {
     /// Ignored by non-sharded algorithms and degenerate on a single-pool
     /// topology (all policies coincide there).
     pub placement: PlacementPolicy,
+    /// Recycle retired structures (closed LCRQ ring nodes, retired shard
+    /// stripes, drained blockfifo blocks) through the pool's `palloc`
+    /// tier. Off = the pre-palloc leak-by-design arena behaviour (the
+    /// ablation baseline for `benches/fig13_alloc`).
+    pub recycle: bool,
+    /// Per-thread palloc magazine capacity per size class (`0` = no
+    /// magazines; every recycled allocation goes through the shared
+    /// per-class freelist).
+    pub magazine: usize,
 }
 
 /// Upper bound on [`QueueConfig::shards`].
@@ -220,6 +229,8 @@ impl Default for QueueConfig {
             block: 16,
             dchoice: 2,
             placement: PlacementPolicy::Interleave,
+            recycle: true,
+            magazine: crate::pmem::palloc::DEFAULT_MAGAZINE,
         }
     }
 }
@@ -250,6 +261,9 @@ impl QueueConfig {
         }
         if self.dchoice == 0 || self.dchoice > MAX_SHARDS {
             return Err(QueueError::BadConfig("dchoice must be in 1..=64"));
+        }
+        if self.magazine > 1024 {
+            return Err(QueueError::BadConfig("magazine must be <= 1024"));
         }
         if let PlacementPolicy::Pinned(list) = &self.placement {
             if list.is_empty() {

@@ -74,7 +74,12 @@ impl BatchLog {
     /// `QueueConfig::validate`).
     pub fn alloc(pool: &PmemPool, capacity: usize) -> Self {
         let lines = Self::lines(capacity);
-        let base = pool.alloc_lines(lines);
+        // Through the palloc tier: the log itself lives for the queue's
+        // lifetime, but its generations are reused in place (seq bumps),
+        // and the segment header keeps it visible to allocator accounting.
+        let base = pool.palloc_alloc(0, lines).expect(
+            "pmem pool exhausted allocating a batch log — raise PmemConfig::capacity_words",
+        );
         pool.set_hot(base, lines * WORDS_PER_LINE, Hotness::Private);
         Self { base, capacity }
     }

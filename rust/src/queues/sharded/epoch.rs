@@ -143,6 +143,58 @@ impl EpochRegistry {
         PlanPin { slot, ptr, _life: PhantomData }
     }
 
+    /// Pin thread `tid`'s slot without loading a [`PlanCell`] — for
+    /// callers (e.g. the base LCRQ's node-recycling path) that protect a
+    /// raw persistent pointer rather than a published `Arc` snapshot. The
+    /// guard participates in the same grace protocol as [`Self::pin`]:
+    /// memory retired while the guard is live is not recycled until the
+    /// slot passes through a quiescent state.
+    #[inline]
+    pub fn pin_bare(&self, tid: usize) -> BarePin<'_> {
+        let slot = &*self.slots[tid];
+        // SAFETY: owner-only access (see ReaderSlot).
+        let depth = unsafe { &mut *slot.depth.get() };
+        if *depth == 0 {
+            let s = slot.seq.load(Ordering::Relaxed);
+            debug_assert_eq!(s & 1, 0, "outermost pin from a quiescent slot");
+            slot.seq.store(s + 1, Ordering::Relaxed);
+            fence(Ordering::SeqCst);
+        }
+        *depth += 1;
+        BarePin { slot, _nosend: PhantomData }
+    }
+
+    /// Capture the current seq word of every slot — the non-blocking half
+    /// of the grace protocol. A retirer that cannot afford to block (or
+    /// that runs *while pinned itself*, where [`Self::wait_grace`] would
+    /// self-deadlock) snapshots at retire time and later polls
+    /// [`Self::has_elapsed`]: once every slot that was pinned at snapshot
+    /// time has changed its seq, no reader can still hold a reference
+    /// taken before the retire point.
+    ///
+    /// The caller must order its retirement (pointer unlink / swap) before
+    /// taking the snapshot, exactly as [`PlanCell::swap`] orders its swap
+    /// before the grace sweep; the `SeqCst` fence here pairs with the pin
+    /// fence the same way.
+    pub fn snapshot(&self) -> GraceSnapshot {
+        fence(Ordering::SeqCst);
+        GraceSnapshot {
+            seqs: self.slots.iter().map(|s| s.seq.load(Ordering::Acquire)).collect(),
+        }
+    }
+
+    /// Has a grace period elapsed since `snap` was taken? Non-blocking:
+    /// a slot is clear if it was quiescent (even seq) at snapshot time or
+    /// has advanced since. Safe to call from any thread, pinned or not.
+    pub fn has_elapsed(&self, snap: &GraceSnapshot) -> bool {
+        if snap.seqs.len() != self.slots.len() {
+            return false; // foreign snapshot — never vouch for it
+        }
+        self.slots.iter().zip(snap.seqs.iter()).all(|(slot, &s)| {
+            s & 1 == 0 || slot.seq.load(Ordering::Acquire) != s
+        })
+    }
+
     /// Writer-side grace period: returns once every slot that was pinned
     /// at some point after the caller's pointer swap has passed through
     /// a quiescent state. Volatile-only (no pmem traffic). Returns the
@@ -208,6 +260,38 @@ impl EpochRegistry {
     /// Cumulative grace-wait spin rounds (0 in steady state).
     pub fn grace_spins_total(&self) -> u64 {
         self.grace_spins.load(Ordering::Relaxed)
+    }
+}
+
+/// A captured per-slot seq vector: the token for non-blocking grace
+/// detection (see [`EpochRegistry::snapshot`] /
+/// [`EpochRegistry::has_elapsed`]).
+#[derive(Clone, Debug)]
+pub struct GraceSnapshot {
+    seqs: Box<[u64]>,
+}
+
+/// RAII pin on one [`EpochRegistry`] slot without an associated
+/// [`PlanCell`] load (see [`EpochRegistry::pin_bare`]). `!Send` by
+/// construction: the unpin must run on the pinning thread.
+pub struct BarePin<'e> {
+    slot: &'e ReaderSlot,
+    /// `&ReaderSlot` alone would be `Send`; the raw-pointer marker pins
+    /// the guard to its thread like `PlanPin`.
+    _nosend: PhantomData<*const ()>,
+}
+
+impl Drop for BarePin<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        // SAFETY: owner-only access (the guard is !Send).
+        let depth = unsafe { &mut *self.slot.depth.get() };
+        *depth -= 1;
+        if *depth == 0 {
+            let s = self.slot.seq.load(Ordering::Relaxed);
+            debug_assert_eq!(s & 1, 1, "outermost unpin from a pinned slot");
+            self.slot.seq.store(s + 1, Ordering::Release);
+        }
     }
 }
 
@@ -428,6 +512,47 @@ mod tests {
         writer.join().unwrap();
         assert!(freed.load(Ordering::SeqCst));
         assert!(reg.grace_spins_total() > 0, "the sweep must have observed the pinned slot");
+    }
+
+    #[test]
+    fn snapshot_elapses_only_after_pinned_slots_move() {
+        let reg = EpochRegistry::new(2);
+        // Quiescent registry: grace is immediate.
+        assert!(reg.has_elapsed(&reg.snapshot()));
+        let pin = reg.pin_bare(0);
+        let snap = reg.snapshot();
+        assert!(!reg.has_elapsed(&snap), "a live pin from before the snapshot blocks grace");
+        // A slot pinned *after* the snapshot does not block it.
+        let _other = reg.pin_bare(1);
+        drop(pin);
+        assert!(reg.has_elapsed(&snap), "the pre-snapshot pin unpinned — grace elapsed");
+        // Re-pinning slot 0 does not resurrect the old snapshot's claim.
+        let _re = reg.pin_bare(0);
+        assert!(reg.has_elapsed(&snap));
+    }
+
+    #[test]
+    fn bare_pins_nest_and_block_wait_grace() {
+        let reg = EpochRegistry::new(1);
+        {
+            let _outer = reg.pin_bare(0);
+            let snap = reg.snapshot();
+            {
+                let _inner = reg.pin_bare(0);
+                assert!(!reg.has_elapsed(&snap));
+            }
+            assert!(!reg.has_elapsed(&snap), "inner drop must not unpin the slot");
+        }
+        assert_eq!(reg.pins_total(), reg.unpins_total());
+        assert_eq!(reg.wait_grace(0), 0, "fully unpinned — sweep is immediate");
+    }
+
+    #[test]
+    fn foreign_snapshot_never_vouches() {
+        let a = EpochRegistry::new(2);
+        let b = EpochRegistry::new(3);
+        let snap = b.snapshot();
+        assert!(!a.has_elapsed(&snap));
     }
 
     #[test]

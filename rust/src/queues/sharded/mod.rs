@@ -290,6 +290,14 @@ pub trait Shardable: PersistentQueue {
             0
         }
     }
+
+    /// Hand every pmem segment this queue owns back to the pool's
+    /// allocator tier. Called exactly once, after the queue is durably
+    /// unreachable (its plan generation was durably retired and pruned
+    /// from the recovery history) and quiescent (the plan-set grace
+    /// period elapsed, so no reader can still hold it). Defaults to the
+    /// historical leak-by-design no-op.
+    fn reclaim_pmem(&self, _tid: usize) {}
 }
 
 impl Shardable for PerLcrq {
@@ -307,6 +315,14 @@ impl Shardable for PerLcrq {
 
     fn retire(&self, tid: usize, pos: &EnqPos, item: u64) -> bool {
         let core = self.core();
+        if core.node_settled(pos.node) {
+            // The durable `First` had advanced past this node at crash
+            // time (it is off the recovered chain), so the recovered
+            // queue can never redeliver from it — and with recycling on
+            // its memory may already be scrubbed or reused. Nothing to
+            // clear; do not read it.
+            return false;
+        }
         let pool = &core.pool;
         let ring = core.ring_of(pos.node);
         let (head, _tail) = ring.endpoints(pool, tid);
@@ -332,6 +348,14 @@ impl Shardable for PerLcrq {
 
     fn probe(&self, tid: usize, pos: &EnqPos, item: u64) -> Probe {
         let core = self.core();
+        if core.node_settled(pos.node) {
+            // Off the durable chain: the durable `First` advanced past
+            // the node, which only happens after every cell in its ring
+            // was consumed — the logged position was returned pre-crash.
+            // With recycling on the node may be scrubbed or reused, so
+            // answer from chain membership instead of reading it.
+            return Probe::Settled;
+        }
         let pool = &core.pool;
         let ring = core.ring_of(pos.node);
         let (head, _tail) = ring.endpoints(pool, tid);
@@ -351,6 +375,8 @@ impl Shardable for PerLcrq {
 
     fn maybe_nonempty(&self, tid: usize) -> bool {
         let core = self.core();
+        // Pin against node recycling: `first` must stay readable.
+        let _pin = core.pin_walk(tid);
         let pool = &core.pool;
         let first = PAddr::from_u64(pool.load(tid, core.first));
         if first.is_null() {
@@ -369,6 +395,10 @@ impl Shardable for PerLcrq {
         // executed it, so a completed item is always inside some ring's
         // [Head, Tail) window. Bounded walk for defensiveness.
         let core = self.core();
+        // Pin against node recycling: without it a concurrently-retired
+        // node could be scrubbed mid-walk, truncating the chain and
+        // undercounting — which the one-sided contract forbids.
+        let _pin = core.pin_walk(tid);
         let pool = &core.pool;
         let mut node = PAddr::from_u64(pool.load(tid, core.first));
         let mut sum = 0u64;
@@ -380,6 +410,10 @@ impl Shardable for PerLcrq {
             hops += 1;
         }
         sum
+    }
+
+    fn reclaim_pmem(&self, tid: usize) {
+        self.core().reclaim_pmem(tid);
     }
 }
 
@@ -1279,6 +1313,17 @@ impl<Q: Shardable> ShardedQueue<Q> {
             .plans
             .swap(&self.epochs, Arc::new(PlanSet { active: Arc::clone(&set.active), draining: None }));
         displaced.free_after_grace(&self.epochs, tid);
+        // Reclaim the retired generation's pmem. The durable retirement
+        // above is a permanent witness that every item this generation
+        // ever held was returned pre-retirement, so (a) batch-log entries
+        // naming its epoch are skippable at reconciliation and (b) its
+        // stripes can go back to the allocator. Prune the history FIRST,
+        // so a crash mid-reclaim can never make recovery walk a
+        // half-freed chain (the pruned epoch is simply skipped).
+        self.history.lock().unwrap().retain(|&e, _| e != old.epoch);
+        for s in &old.shards {
+            s.reclaim_pmem(tid);
+        }
         self.rstats.retires.fetch_add(1, Ordering::Relaxed);
         obs::trace::event(
             tid,
@@ -1564,11 +1609,20 @@ impl<Q: Shardable> PersistentQueue for ShardedQueue<Q> {
         }
         // 6. Prune the plan history: the logs were cleared and every
         //    slot's seq bumped, so no entry can reference an older
-        //    generation anymore. (Arena memory of dropped generations is
-        //    bump-allocated and intentionally not reclaimed.)
+        //    generation anymore — then hand the dropped generations'
+        //    stripes back to the allocator tier (recovery is
+        //    single-threaded and the durable plan state no longer names
+        //    them; prune-before-reclaim mirrors `try_retire_locked`).
         let mut hist = self.history.lock().unwrap();
         hist.retain(|&e, _| e == active_epoch);
         drop(hist);
+        for (&e, plan) in history.iter() {
+            if e != active_epoch {
+                for s in &plan.shards {
+                    s.reclaim_pmem(tid);
+                }
+            }
+        }
         // Certified span end: every recovery psync above has retired.
         obs::flight::record_sealed(
             primary,

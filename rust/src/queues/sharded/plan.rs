@@ -125,7 +125,9 @@ pub(crate) struct PlanLog {
 
 impl PlanLog {
     pub fn alloc(pool: &PmemPool) -> PlanLog {
-        let base = pool.alloc_lines(3);
+        let base = pool.palloc_alloc(0, 3).expect(
+            "pmem pool exhausted allocating the plan log — raise PmemConfig::capacity_words",
+        );
         pool.set_hot(base, 3 * WORDS_PER_LINE, Hotness::Private);
         PlanLog { base }
     }

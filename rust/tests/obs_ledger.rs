@@ -64,6 +64,7 @@ fn steady_state_psyncs_attribute_to_flush_sites_only() {
     assert_eq!(l.psyncs_at(ObsSite::PlanCommit), 0);
     assert_eq!(l.psyncs_at(ObsSite::Recovery), 0);
     assert_eq!(l.psyncs_at(ObsSite::BrokerAck), 0);
+    assert_eq!(l.psyncs_at(ObsSite::Alloc), 0, "allocator durability must piggyback");
 
     // The paper's headline bound, per completed enqueue+dequeue pair.
     let steady = l.psyncs_at(ObsSite::BatchFlush) + l.psyncs_at(ObsSite::DeqFlush);
@@ -171,6 +172,47 @@ fn epoch_pin_unpin_adds_zero_psyncs() {
     assert!(pins >= (1_000 + 2 * n) as f64, "expected a pin per access, saw {pins}");
     assert_eq!(pins, unpins, "every pin must have been released");
     assert_eq!(count("persiq_epoch_plan_flips_total"), 0.0, "no flip without a resize");
+}
+
+/// Allocator accounting under real node churn: a tiny ring forces the
+/// workload through node allocation, retirement and recycling, so the
+/// `Alloc` site carries traffic — and all of it is pwb-only. Segment
+/// state flips become durable by riding psyncs the queue already pays
+/// for (`BatchFlush`/`DeqFlush` group commits); a psync at `Alloc`
+/// would mean the allocator broke the paper's `1/B + 1/K` budget.
+#[test]
+fn allocator_traffic_is_pwb_only_and_attributed_to_alloc() {
+    let topo = Topology::single(PmemConfig {
+        capacity_words: 1 << 22,
+        cost: CostModel::zero(),
+        evict_prob: 0.25,
+        pending_flush_prob: 0.5,
+        seed: 71,
+    });
+    let q = ShardedQueue::new_perlcrq(
+        &topo,
+        1,
+        QueueConfig { shards: 2, batch: 8, batch_deq: 8, ring_size: 4, ..Default::default() },
+    )
+    .unwrap();
+    let before = topo.site_ledger();
+    for round in 0..16u64 {
+        for v in 0..64u64 {
+            q.enqueue(0, round * 64 + v).unwrap();
+        }
+        for _ in 0..64 {
+            assert!(q.dequeue(0).unwrap().is_some());
+        }
+    }
+    let l = topo.site_ledger();
+    assert!(
+        l.pwbs_at(ObsSite::Alloc) > before.pwbs_at(ObsSite::Alloc),
+        "node churn on a 4-slot ring must run through the allocator"
+    );
+    assert_eq!(l.psyncs_at(ObsSite::Alloc), 0, "allocator psyncs must be zero, always");
+    // Attribution stays a partition of the aggregate counters.
+    assert_eq!(l.total_psyncs(), topo.stats_total().psyncs);
+    assert_eq!(l.total_pwbs(), topo.stats_total().pwbs);
 }
 
 /// Recovery charges every psync — shard recovery, reconciliation, and
@@ -296,6 +338,7 @@ fn blockfifo_psyncs_amortize_to_one_per_block_per_side() {
     assert_eq!(l.psyncs_at(ObsSite::Recovery), 0);
     assert_eq!(l.psyncs_at(ObsSite::PlanCommit), 0);
     assert_eq!(l.psyncs_at(ObsSite::BrokerAck), 0);
+    assert_eq!(l.psyncs_at(ObsSite::Alloc), 0, "block recycling must not psync on its own");
 
     // The headline amortization, per completed enqueue+dequeue pair.
     let per_pair = l.total_psyncs() as f64 / n as f64;
@@ -409,6 +452,7 @@ fn flight_recorder_adds_zero_psyncs_at_every_site() {
         ObsSite::PlanCommit,
         ObsSite::Recovery,
         ObsSite::BrokerAck,
+        ObsSite::Alloc,
     ] {
         assert_eq!(
             on.psyncs_at(site),

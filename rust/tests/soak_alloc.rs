@@ -1,0 +1,137 @@
+//! Long-haul allocator soak: resize + churn + crash cycles must reach a
+//! memory plateau. The bump cursor (`used_words`) only ever grows, so
+//! the only way repeated cycles stay bounded is for the palloc tier to
+//! keep feeding retired stripes, recycled ring nodes and reused batch
+//! logs back into circulation — across crashes, whose conservative
+//! rebuilds are allowed to leak a little (non-durable frees) but never
+//! to compound.
+//!
+//! `PERSIQ_SOAK_CYCLES` overrides the cycle count (default 20) so CI can
+//! run a quick smoke pass while the full soak stays the local default.
+
+use persiq::pmem::crash::{install_quiet_crash_hook, run_guarded};
+use persiq::pmem::{CostModel, PmemConfig, Topology};
+use persiq::queues::blockfifo::BlockFifo;
+use persiq::queues::sharded::ShardedQueue;
+use persiq::queues::{ConcurrentQueue, PersistentQueue, QueueConfig};
+use persiq::util::rng::Xoshiro256;
+
+fn cycles() -> usize {
+    std::env::var("PERSIQ_SOAK_CYCLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&c| c >= 1)
+        .unwrap_or(20)
+}
+
+fn topo(seed: u64) -> Topology {
+    Topology::single(PmemConfig {
+        capacity_words: 1 << 22,
+        cost: CostModel::zero(),
+        evict_prob: 0.25,
+        pending_flush_prob: 0.5,
+        seed,
+    })
+}
+
+/// The tentpole soak: ≥ 20 cycles of {online resize, node-churning
+/// workload, crash, recovery, drain}, alternating 4 ↔ 8 stripes on a
+/// tiny ring so every cycle allocates stripes, nodes and log space. The
+/// arena high-water mark after the full run must stay within 2× the
+/// first cycle's peak — i.e. cycles 2..n run (almost) entirely on
+/// recycled memory.
+#[test]
+fn resize_churn_crash_cycles_plateau_within_2x_first_peak() {
+    install_quiet_crash_hook();
+    let t = topo(61);
+    let q = ShardedQueue::new_perlcrq(
+        &t,
+        1,
+        QueueConfig { shards: 4, ring_size: 8, batch: 4, batch_deq: 4, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = Xoshiro256::seed_from(62);
+    let mut first_peak = 0usize;
+    for cycle in 0..cycles() {
+        let new_k = if cycle % 2 == 0 { 8 } else { 4 };
+        q.resize(0, new_k).unwrap();
+        if cycle % 4 == 3 {
+            // Every fourth cycle crashes mid-churn (countdown), landing
+            // inside allocation/retirement machinery.
+            t.arm_crash_after(3_000 + rng.next_below(3_000));
+            let _ = run_guarded(|| {
+                for v in 0..800u64 {
+                    q.enqueue(0, v).unwrap();
+                    if v % 2 == 0 {
+                        let _ = q.dequeue(0).unwrap();
+                    }
+                }
+            });
+        } else {
+            for v in 0..800u64 {
+                q.enqueue(0, v).unwrap();
+                if v % 2 == 0 {
+                    let _ = q.dequeue(0).unwrap();
+                }
+            }
+            q.flush(0);
+        }
+        t.crash(&mut rng);
+        q.recover(t.primary());
+        while q.dequeue(0).unwrap().is_some() {}
+        if cycle == 0 {
+            first_peak = t.primary().used_words();
+            assert!(first_peak > 0);
+        }
+    }
+    let final_water = t.primary().used_words();
+    assert!(
+        final_water <= 2 * first_peak,
+        "arena high-water {final_water} exceeds 2x the first-cycle peak {first_peak}: \
+         the allocator is leaking across cycles"
+    );
+    assert!(
+        t.primary().palloc().recycled_total() > 0,
+        "the soak must actually run on recycled segments"
+    );
+}
+
+/// Blockfifo leg: with recycling on, a workload far beyond the raw
+/// block capacity runs clean across repeated crash/recovery cycles (the
+/// recycle pool is rebuilt from durable CONSUMED headers each time).
+#[test]
+fn blockfifo_soak_runs_past_raw_capacity_across_crashes() {
+    install_quiet_crash_hook();
+    let t = topo(63);
+    // 2 lanes x 8 blocks x 4 entries = 64 raw slots.
+    let q = BlockFifo::new(
+        &t,
+        1,
+        QueueConfig { shards: 2, block: 4, ring_size: 8, ..Default::default() },
+        false,
+    )
+    .unwrap();
+    let mut rng = Xoshiro256::seed_from(64);
+    let rounds = cycles().max(2);
+    let mut delivered = 0u64;
+    for round in 0..rounds as u64 {
+        let base = round * 40;
+        for v in base..base + 40 {
+            q.enqueue(0, v).unwrap();
+        }
+        let mut out = Vec::new();
+        while let Some(v) = q.dequeue(0).unwrap() {
+            out.push(v);
+        }
+        out.sort_unstable();
+        assert_eq!(out, (base..base + 40).collect::<Vec<u64>>(), "round {round}");
+        delivered += out.len() as u64;
+        if round % 5 == 4 {
+            q.quiesce();
+            t.crash(&mut rng);
+            q.recover(t.primary());
+            assert_eq!(q.dequeue(0).unwrap(), None, "drained queue must recover empty");
+        }
+    }
+    assert!(delivered > 64, "soak must push past the 64-slot raw capacity");
+}
